@@ -1,0 +1,102 @@
+//! Quickstart: the smallest useful tour of the stack.
+//!
+//! 1. Materialize a tiny synthetic dataset (shard files on disk).
+//! 2. Load batches through the optimized multi-worker loader.
+//! 3. Run a few training steps through the AOT-compiled JAX/Pallas
+//!    programs via PJRT (single learner, fused `train` step).
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use dlio::cache::{CacheDirectory, Policy, SampleCache};
+use dlio::loader::{BatchRequest, FetchContext, Loader, LoaderConfig};
+use dlio::metrics::LoadCounters;
+use dlio::net::{Fabric, FabricConfig};
+use dlio::runtime::{default_artifacts_dir, Engine, HostTensor};
+use dlio::storage::{generate, StorageSystem, SyntheticSpec};
+use std::sync::{Arc, RwLock};
+
+fn main() -> Result<()> {
+    // --- 1. Dataset -------------------------------------------------------
+    let dir = std::env::temp_dir().join("dlio-quickstart");
+    if !dir.join("dataset.json").exists() {
+        println!("materializing 2048-sample synthetic dataset...");
+        generate(&dir, &SyntheticSpec { n_samples: 2048, ..Default::default() })?;
+    }
+    let storage = Arc::new(StorageSystem::open(&dir, None)?);
+    println!(
+        "dataset: {} samples x {} bytes",
+        storage.n_samples(),
+        storage.meta().record_bytes()
+    );
+
+    // --- 2. Loader --------------------------------------------------------
+    let engine = Arc::new(Engine::load(&default_artifacts_dir())?);
+    println!("engine: PJRT platform = {}", engine.platform());
+    let counters = Arc::new(LoadCounters::new());
+    let ctx = Arc::new(FetchContext {
+        learner: 0,
+        storage: Arc::clone(&storage),
+        caches: vec![Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly))],
+        directory: Arc::new(RwLock::new(CacheDirectory::new(storage.n_samples()))),
+        fabric: Arc::new(Fabric::new(FabricConfig {
+            real_time: false,
+            ..Default::default()
+        })),
+        cache_on_load: true,
+        decode_s_per_kib: 0.0,
+        counters: Arc::clone(&counters),
+    });
+    let b = 64usize;
+    let loader = Loader::spawn(
+        LoaderConfig { workers: 2, threads_per_worker: 4, prefetch_batches: 4 },
+        ctx,
+        storage.meta().record_bytes(),
+        Some(engine.program(&format!("preprocess{b}"))?),
+        42,
+        0.5,
+    );
+    let t0 = std::time::Instant::now();
+    let batches = 16u64;
+    for step in 0..batches {
+        let ids: Vec<u32> =
+            (0..b as u32).map(|i| (step as u32 * b as u32 + i) % 2048).collect();
+        loader.submit(BatchRequest { epoch: 0, step, ids })?;
+    }
+    let mut last = None;
+    for step in 0..batches {
+        last = Some(loader.next(step)?);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "loader: {} samples in {:.2}s = {:.0} samples/s (preprocessed via Pallas kernel)",
+        batches as usize * b,
+        dt,
+        (batches as usize * b) as f64 / dt
+    );
+    loader.shutdown();
+
+    // --- 3. Training steps -------------------------------------------------
+    let train = engine.program(&format!("train{b}"))?;
+    let mut params = engine.initial_params()?;
+    let batch = last.unwrap();
+    println!("training 12 fused steps on the last batch (B={b}):");
+    for step in 0..12 {
+        let mut args = params.clone();
+        args.push(batch.x_f32.clone().unwrap());
+        args.push(HostTensor::i32(vec![b], batch.labels.clone()));
+        args.push(HostTensor::scalar_f32(0.08));
+        let out = train.run(&args)?;
+        let loss = out[out.len() - 1].scalar()?;
+        params = out[..out.len() - 1].to_vec();
+        if step % 3 == 0 || step == 11 {
+            println!("  step {step:2}: loss = {loss:.4}");
+        }
+    }
+    println!(
+        "mean train-step time: {:.1} ms",
+        train.mean_exec_s() * 1e3
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Scale sweep: regenerates the paper's scaling curves (Figs. 1, 8–12)
+//! from the Lassen-calibrated discrete-event simulator, and prints the
+//! paper-vs-measured speedup comparison recorded in EXPERIMENTS.md.
+//!
+//! Run with: `cargo run --release --example scale_sweep`
+
+use dlio::figures;
+use dlio::storage::Catalog;
+
+fn main() {
+    let scales = [2usize, 4, 8, 16, 32, 64, 128, 256];
+    let loading_scales = [8usize, 16, 32, 64, 128, 256];
+
+    figures::print_fig1(&figures::fig1(&scales));
+
+    for (fig, catalog, paper_headline) in [
+        ("Fig. 8", Catalog::imagenet_1k(), "34x @ 256 nodes"),
+        ("Fig. 9", Catalog::ucf101_rgb(), "2.8x–55.5x"),
+        ("Fig. 10", Catalog::ucf101_flow(), "2.2x–60.6x"),
+        ("Fig. 11", Catalog::mummi(), "18/35/70/120x @ 16/32/64/128"),
+    ] {
+        let nodes: Vec<usize> = if fig == "Fig. 11" {
+            loading_scales.iter().copied().filter(|&n| n <= 128).collect()
+        } else {
+            loading_scales.to_vec()
+        };
+        let rows = figures::dataset_scaling(&catalog, &nodes);
+        figures::print_dataset_scaling(
+            &format!("{fig} — {} (paper: {paper_headline})", catalog.name),
+            &rows,
+        );
+        let max_speedup = rows
+            .iter()
+            .map(|r| r.speedup_mt())
+            .fold(f64::NEG_INFINITY, f64::max);
+        let min_speedup = rows
+            .iter()
+            .map(|r| r.speedup_mt())
+            .fold(f64::INFINITY, f64::min);
+        println!(
+            "-> measured Loc-vs-Reg speedup range: {min_speedup:.1}x – {max_speedup:.1}x"
+        );
+    }
+
+    figures::print_fig12(&figures::fig12(&[16, 32, 64], None));
+    println!("\n(paper Fig. 12: comparable at 16 nodes, ~1.9x at 64 nodes)");
+}

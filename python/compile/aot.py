@@ -1,0 +1,208 @@
+"""AOT compile path: lower every L2 program to HLO *text* artifacts.
+
+Run once by ``make artifacts`` (``python -m compile.aot --out-dir ../artifacts``);
+the Rust runtime (rust/src/runtime/) loads the HLO text via
+``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU client.
+Python never runs on the request path.
+
+Interchange format is HLO TEXT, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowering goes through stablehlo ->
+XlaComputation with ``return_tuple=True`` so every program's root is a tuple
+the Rust side can ``decompose_tuple``.
+
+Outputs under --out-dir:
+  <program>.hlo.txt          one per (program, batch) variant
+  params/<name>.bin          raw little-endian f32 initial parameters
+  manifest.json              program signatures + param metadata + geometry
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Batch-size variants compiled ahead of time. The Rust coordinator picks the
+# variant matching its (balanced) local batch size; Algorithm 1 balancing
+# guarantees equal local batches so static shapes suffice.
+BATCH_SIZES = (16, 64, 256)
+DEFAULT_SEED = 42
+LOWERED_WITH = f"jax-{jax.__version__}"
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_specs():
+    return [
+        _spec(model.PARAM_SHAPES[n], jnp.float32) for n in model.PARAM_NAMES
+    ]
+
+
+def _arg_meta(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def program_signatures():
+    """(program name -> (python fn, arg specs, arg metadata, output metadata))."""
+    f32, i32, u8 = "f32", "i32", "u8"
+    h, w, c, feat = model.IMG_H, model.IMG_W, model.IMG_C, model.N_FEATURES
+    n = len(model.PARAM_NAMES)
+    pspecs = _param_specs()
+    pmeta = [
+        _arg_meta(nm, model.PARAM_SHAPES[nm], f32) for nm in model.PARAM_NAMES
+    ]
+    gmeta = [
+        _arg_meta("d" + nm, model.PARAM_SHAPES[nm], f32)
+        for nm in model.PARAM_NAMES
+    ]
+    progs = {}
+
+    # sgd is batch-independent: one variant.
+    progs["sgd"] = (
+        model.sgd_program,
+        pspecs + pspecs + [_spec((), jnp.float32)],
+        pmeta + gmeta + [_arg_meta("lr", (), f32)],
+        pmeta,
+    )
+
+    for b in BATCH_SIZES:
+        xu8 = _spec((b, h, w, c), jnp.uint8)
+        flip = _spec((b,), jnp.float32)
+        x = _spec((b, feat), jnp.float32)
+        y = _spec((b,), jnp.int32)
+        lr = _spec((), jnp.float32)
+        xu8_m = _arg_meta("x_u8", (b, h, w, c), u8)
+        flip_m = _arg_meta("flip", (b,), f32)
+        x_m = _arg_meta("x", (b, feat), f32)
+        y_m = _arg_meta("y", (b,), i32)
+        lr_m = _arg_meta("lr", (), f32)
+        loss_m = _arg_meta("loss", (), f32)
+
+        progs[f"preprocess{b}"] = (
+            model.preprocess_program,
+            [xu8, flip],
+            [xu8_m, flip_m],
+            [x_m],
+        )
+        progs[f"grad{b}"] = (
+            model.grad_program,
+            pspecs + [x, y],
+            pmeta + [x_m, y_m],
+            gmeta + [loss_m],
+        )
+        progs[f"train{b}"] = (
+            model.train_program,
+            pspecs + [x, y, lr],
+            pmeta + [x_m, y_m, lr_m],
+            pmeta + [loss_m],
+        )
+        progs[f"eval{b}"] = (
+            model.eval_program,
+            pspecs + [x, y],
+            pmeta + [x_m, y_m],
+            [loss_m, _arg_meta("ncorrect", (), f32)],
+        )
+
+    # Perf baseline: the all-jnp gradient at one batch size, to quantify
+    # Pallas interpret-mode overhead on the CPU backend (§Perf).
+    b = 64
+    x = _spec((b, feat), jnp.float32)
+    y = _spec((b,), jnp.int32)
+    progs["gradref64"] = (
+        model.gradref_program,
+        pspecs + [x, y],
+        pmeta
+        + [_arg_meta("x", (b, feat), f32), _arg_meta("y", (b,), i32)],
+        gmeta + [_arg_meta("loss", (), f32)],
+    )
+    return progs
+
+
+def write_params(out_dir, seed):
+    """Dump He-initialized params as raw LE f32 .bin files; return metadata."""
+    pdir = os.path.join(out_dir, "params")
+    os.makedirs(pdir, exist_ok=True)
+    params = model.init_params(seed)
+    meta = []
+    for name, arr in zip(model.PARAM_NAMES, params):
+        arr = np.asarray(arr, dtype="<f4")
+        path = os.path.join("params", f"{name}.bin")
+        arr.tofile(os.path.join(out_dir, path))
+        meta.append(
+            {
+                "name": name,
+                "shape": list(arr.shape),
+                "dtype": "f32",
+                "file": path,
+            }
+        )
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat: ignored marker path")
+    ap.add_argument("--seed", type=int, default=DEFAULT_SEED)
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {
+        "lowered_with": LOWERED_WITH,
+        "seed": args.seed,
+        "geometry": {
+            "img": [model.IMG_H, model.IMG_W, model.IMG_C],
+            "n_features": model.N_FEATURES,
+            "hidden": [model.HIDDEN1, model.HIDDEN2],
+            "n_classes": model.N_CLASSES,
+            "batch_sizes": list(BATCH_SIZES),
+            "param_names": model.PARAM_NAMES,
+        },
+        "params": write_params(out_dir, args.seed),
+        "programs": {},
+    }
+
+    for name, (fn, specs, in_meta, out_meta) in program_signatures().items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["programs"][name] = {
+            "file": fname,
+            "inputs": in_meta,
+            "outputs": out_meta,
+        }
+        print(f"aot: {name:14s} -> {fname} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # Marker for `make -q artifacts` freshness checks.
+    with open(os.path.join(out_dir, ".stamp"), "w") as f:
+        f.write(LOWERED_WITH + "\n")
+    print(f"aot: wrote manifest with {len(manifest['programs'])} programs")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: MXU-tiled f32 matmul.
+
+This is the training hot-spot kernel (stands in for the paper's cuDNN conv
+stack — see DESIGN.md §Hardware-Adaptation). The tiling targets the TPU MXU:
+the output is computed in ``(bm, bn)`` systolic-array-shaped tiles, with the
+full contraction dimension resident in VMEM per tile.
+
+VMEM budget per grid step (f32):
+    bm*K + K*bn + bm*bn  floats
+e.g. bm=bn=128, K=3072  ->  (128*3072 + 3072*128 + 128*128) * 4 B  ~=  3.1 MiB
+comfortably inside the ~16 MiB VMEM of a TPUv4 core, leaving room for
+double-buffering the HBM->VMEM streams (the BlockSpec grid expresses the
+schedule the paper expressed with loader worker threads).
+
+The kernel MUST run with ``interpret=True`` here: the CPU PJRT plugin cannot
+execute Mosaic custom-calls. Numerics are validated against ``ref.matmul_ref``
+by ``python/tests/test_kernel.py``.
+
+A ``jax.custom_vjp`` wrapper makes the kernel differentiable so the L2 model
+can call it inside ``jax.grad``: both backward matmuls reuse the same Pallas
+kernel (dx = g @ W^T, dW = x^T @ g).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output tile; full-K panels are resident in VMEM."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(dim, target):
+    """Largest divisor of ``dim`` that is <= target (keeps grids exact)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul_pallas_raw(x, y, *, bm=128, bn=128):
+    """Pallas tiled matmul, f32: ``x[M,K] @ y[K,N] -> [M,N]``."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+@jax.custom_vjp
+def matmul(x, y):
+    """Differentiable Pallas matmul used by the L2 model's dense layers."""
+    return matmul_pallas_raw(x, y)
+
+
+def _matmul_fwd(x, y):
+    return matmul_pallas_raw(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    # Both backward products go through the same Pallas kernel, so the
+    # entire fwd+bwd graph lowers to Pallas tiles.
+    dx = matmul_pallas_raw(g, y.T)
+    dy = matmul_pallas_raw(x.T, g)
+    return dx, dy
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

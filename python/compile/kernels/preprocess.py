@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: fused sample preprocessing.
+
+The paper's data-loading pipeline spends its CPU time in per-sample
+"image transformations" (decode, crop/flip, normalize) executed by loader
+worker threads. Here that stage is a single fused Pallas kernel:
+
+    uint8[B,H,W,C] --(dequantize + normalize + optional h-flip)--> f32[B,H*W*C]
+
+One grid step processes a block of ``bb`` samples; the whole sample tensor
+for the block is staged HBM->VMEM by the BlockSpec (the VMEM tile replaces
+the paper's per-thread working set).
+
+VMEM budget per grid step (bb=8, 32x32x3 samples):
+    in  u8  : 8*3072          =  24 KiB
+    flip f32: 8*1             =  32 B
+    out f32 : 8*3072*4        =  96 KiB
+well under VMEM; on a real TPU the u8->f32 widening runs on the VPU with
+(8,128) lanes over the flattened 3072-wide feature axis.
+
+``interpret=True`` is mandatory on the CPU PJRT plugin (see matmul.py).
+Oracle: ``ref.preprocess_ref``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import PIXEL_MEAN, PIXEL_STD
+
+
+def _preprocess_kernel(x_ref, flip_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32) / 255.0
+    x = (x - PIXEL_MEAN) / PIXEL_STD
+    flipped = x[:, :, ::-1, :]
+    sel = flip_ref[...].reshape(-1, 1, 1, 1)
+    out = sel * flipped + (1.0 - sel) * x
+    o_ref[...] = out
+
+
+def _pick_block(dim, target):
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bb",))
+def preprocess(x_u8, flip, *, bb=8):
+    """Fused preprocess: ``uint8[B,H,W,C] -> float32[B, H*W*C]``.
+
+    Args:
+      x_u8: raw samples exactly as stored in the shard files.
+      flip: ``float32[B]`` in {0,1}; the horizontal-flip augmentation mask
+        (drawn by the Rust loader's deterministic RNG, so augmentation is
+        reproducible across Reg/Loc sampling schemes).
+      bb: samples per grid step.
+    """
+    b, h, w, c = x_u8.shape
+    bb = _pick_block(b, bb)
+    grid = (b // bb,)
+    out = pl.pallas_call(
+        _preprocess_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, h, w, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bb, h, w, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, w, c), jnp.float32),
+        interpret=True,
+    )(x_u8, flip)
+    return out.reshape(b, h * w * c)

@@ -1,0 +1,38 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every L1 kernel in this package must match its oracle here to tight
+tolerances; ``python/tests`` sweeps shapes/dtypes with hypothesis and
+asserts ``assert_allclose`` against these functions.
+"""
+
+import jax.numpy as jnp
+
+# Normalization constants baked into the preprocess kernel. The synthetic
+# datasets are generated around mid-gray, so a fixed mean/std is exact
+# (documented substitution for ImageNet's per-channel statistics).
+PIXEL_MEAN = 0.5
+PIXEL_STD = 0.25
+
+
+def preprocess_ref(x_u8, flip):
+    """Fused dequantize + normalize + optional horizontal flip.
+
+    Args:
+      x_u8: ``uint8[B, H, W, C]`` raw samples as stored on disk.
+      flip: ``float32[B]`` with values in {0.0, 1.0}; 1.0 flips the sample
+        along W (the paper's "image transformations" augmentation stage).
+
+    Returns:
+      ``float32[B, H*W*C]`` normalized, flattened features.
+    """
+    x = x_u8.astype(jnp.float32) / 255.0
+    x = (x - PIXEL_MEAN) / PIXEL_STD
+    flipped = x[:, :, ::-1, :]
+    sel = flip.reshape(-1, 1, 1, 1)
+    out = sel * flipped + (1.0 - sel) * x
+    return out.reshape(out.shape[0], -1)
+
+
+def matmul_ref(a, b):
+    """f32 matmul oracle: ``a @ b`` with f32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)

@@ -1,0 +1,140 @@
+"""L2: JAX compute graphs for the training stack, built on the L1 kernels.
+
+The model is a 3-layer MLP image classifier over the synthetic 32x32x3
+records the Rust pipeline materializes (DESIGN.md: stands in for ResNet50 at
+laptop scale; the data-loading behaviour under study depends on the training
+*rate* V, which the Rust side measures from the compiled step, not on the
+model identity). Hidden sizes are multiples of 128 so every dense layer maps
+exactly onto the Pallas matmul's MXU tiling.
+
+Programs exported by aot.py (one HLO per (program, batch) variant):
+
+  preprocess{B} : (x_u8[B,H,W,C], flip[B])                  -> x[B,F]
+  grad{B}       : (params..., x[B,F], y[B])                 -> (grads..., loss)
+  train{B}      : (params..., x[B,F], y[B], lr)             -> (params..., loss)
+  eval{B}       : (params..., x[B,F], y[B])                 -> (loss, ncorrect)
+  sgd           : (params..., grads..., lr)                 -> params...
+
+The split grad/sgd pair is what the distributed coordinator uses: learners
+compute local grads, the (simulated) interconnect all-reduces them, and every
+learner applies the same global gradient — exactly the synchronous mini-batch
+SGD procedure of paper §II-A. ``train`` is the fused single-learner step used
+by the quickstart. Parameters travel as a flat tuple in the fixed order of
+``PARAM_NAMES``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul
+from .kernels.preprocess import preprocess
+
+# --- Model geometry (fixed; mirrored by rust/src/runtime/manifest.rs) -----
+IMG_H, IMG_W, IMG_C = 32, 32, 3
+N_FEATURES = IMG_H * IMG_W * IMG_C  # 3072
+HIDDEN1 = 512
+HIDDEN2 = 256
+N_CLASSES = 16
+
+PARAM_SHAPES = {
+    "w1": (N_FEATURES, HIDDEN1),
+    "b1": (HIDDEN1,),
+    "w2": (HIDDEN1, HIDDEN2),
+    "b2": (HIDDEN2,),
+    "w3": (HIDDEN2, N_CLASSES),
+    "b3": (N_CLASSES,),
+}
+PARAM_NAMES = list(PARAM_SHAPES)
+
+
+def init_params(seed=42):
+    """He-initialized parameters as the ordered flat tuple."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(PARAM_NAMES))
+    params = []
+    for key, name in zip(keys, PARAM_NAMES):
+        shape = PARAM_SHAPES[name]
+        if len(shape) == 2:
+            scale = jnp.sqrt(2.0 / shape[0])
+            params.append(scale * jax.random.normal(key, shape, jnp.float32))
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return tuple(params)
+
+
+def forward(params, x):
+    """Logits for normalized features ``x[B, N_FEATURES]``."""
+    w1, b1, w2, b2, w3, b3 = params
+    h = jax.nn.relu(matmul(x, w1) + b1)
+    h = jax.nn.relu(matmul(h, w2) + b2)
+    return matmul(h, w3) + b3
+
+
+def loss_fn(params, x, y):
+    """Mean softmax cross-entropy over the local batch."""
+    logits = forward(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+# --- Exported programs -----------------------------------------------------
+
+
+def preprocess_program(x_u8, flip):
+    return tuple([preprocess(x_u8, flip)])
+
+
+def grad_program(*args):
+    """(params..., x, y) -> (grads..., loss)."""
+    params, (x, y) = args[:-2], args[-2:]
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    return tuple(grads) + (loss,)
+
+
+def sgd_program(*args):
+    """(params..., grads..., lr) -> params'... (pure SGD update)."""
+    n = len(PARAM_NAMES)
+    params, grads, lr = args[:n], args[n : 2 * n], args[-1]
+    return tuple(p - lr * g for p, g in zip(params, grads))
+
+
+def train_program(*args):
+    """Fused local step: (params..., x, y, lr) -> (params'..., loss)."""
+    params, (x, y, lr) = args[:-3], args[-3:]
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    new = tuple(p - lr * g for p, g in zip(params, grads))
+    return new + (loss,)
+
+
+def forward_ref(params, x):
+    """All-jnp forward (no Pallas) — the L2 perf baseline that quantifies
+    interpret-mode kernel overhead on CPU (EXPERIMENTS.md §Perf); numerics
+    must match `forward` (see python/tests)."""
+    w1, b1, w2, b2, w3, b3 = params
+    h = jax.nn.relu(jnp.matmul(x, w1) + b1)
+    h = jax.nn.relu(jnp.matmul(h, w2) + b2)
+    return jnp.matmul(h, w3) + b3
+
+
+def loss_ref(params, x, y):
+    logits = forward_ref(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def gradref_program(*args):
+    """(params..., x, y) -> (grads..., loss), all-jnp (perf baseline)."""
+    params, (x, y) = args[:-2], args[-2:]
+    loss, grads = jax.value_and_grad(loss_ref)(params, x, y)
+    return tuple(grads) + (loss,)
+
+
+def eval_program(*args):
+    """(params..., x, y) -> (loss, ncorrect:f32)."""
+    params, (x, y) = args[:-2], args[-2:]
+    logits = forward(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return (jnp.mean(nll), correct)

@@ -1,0 +1,86 @@
+"""AOT pipeline tests: artifact generation, manifest integrity, HLO validity.
+
+Ensures the interchange contract with the Rust runtime holds: HLO text is
+parseable, has a tuple root with the advertised arity, and the manifest's
+shapes match the model geometry.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_batch_variants_cover_manifest():
+    progs = aot.program_signatures()
+    assert "sgd" in progs
+    for b in aot.BATCH_SIZES:
+        for stem in ("preprocess", "grad", "train", "eval"):
+            assert f"{stem}{b}" in progs
+
+
+def test_signatures_are_consistent():
+    for name, (_, specs, in_meta, out_meta) in aot.program_signatures().items():
+        assert len(specs) == len(in_meta), name
+        for spec, meta in zip(specs, in_meta):
+            assert list(spec.shape) == meta["shape"], (name, meta["name"])
+        assert out_meta, name
+
+
+def test_hlo_text_roundtrip_arity():
+    """Lower one variant and check the HLO text declares a tuple root with
+    the same arity the manifest advertises (the Rust decompose contract)."""
+    progs = aot.program_signatures()
+    fn, specs, _, out_meta = progs["grad16"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert "ENTRY" in text
+    # Root tuple arity: the ENTRY computation's ROOT must be a tuple with one
+    # f32 element per advertised output.
+    entry = text[text.index("\nENTRY") :]
+    root_lines = [
+        l for l in entry.splitlines() if "ROOT" in l and " tuple(" in l
+    ]
+    assert root_lines, "expected an explicit ROOT tuple in ENTRY"
+    assert root_lines[0].count("f32[") == len(out_meta)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_artifacts_match_manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    geo = manifest["geometry"]
+    assert geo["n_features"] == model.N_FEATURES
+    assert geo["param_names"] == model.PARAM_NAMES
+    for name, prog in manifest["programs"].items():
+        path = os.path.join(ART, prog["file"])
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, name
+    for pmeta in manifest["params"]:
+        path = os.path.join(ART, pmeta["file"])
+        n = int(np.prod(pmeta["shape"]))
+        assert os.path.getsize(path) == 4 * n, pmeta["name"]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "params")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_param_binaries_reload_exactly():
+    params = model.init_params(aot.DEFAULT_SEED)
+    for name, arr in zip(model.PARAM_NAMES, params):
+        got = np.fromfile(
+            os.path.join(ART, "params", f"{name}.bin"), dtype="<f4"
+        ).reshape(arr.shape)
+        np.testing.assert_array_equal(got, np.asarray(arr))

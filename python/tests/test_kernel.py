@@ -1,0 +1,180 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+The CORE correctness signal for layer 1. hypothesis sweeps shapes (and the
+flip-mask space); every case asserts allclose against ``kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.matmul import matmul, matmul_pallas_raw
+from compile.kernels.preprocess import preprocess
+
+SETTINGS = settings(max_examples=30, deadline=None)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# matmul kernel
+# --------------------------------------------------------------------------
+
+
+@SETTINGS
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 64),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_random_shapes(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    y = _rand(seed + 1, (k, n))
+    got = matmul_pallas_raw(x, y)
+    want = ref.matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (16, 3072, 512),  # layer-1 dense, B=16
+        (64, 512, 256),  # layer-2 dense, B=64
+        (256, 256, 16),  # logits layer, B=256
+        (128, 128, 128),  # exact single MXU tile
+        (1, 1, 1),  # degenerate
+        (257, 129, 3),  # nothing divides the tile targets
+    ],
+)
+def test_matmul_model_shapes(m, k, n):
+    x = _rand(m * 7 + k, (m, k))
+    y = _rand(n * 13 + k, (k, n))
+    # Large-K contractions accumulate in different orders between the tiled
+    # kernel and the oracle; scale the tolerance with sqrt(K).
+    tol = 1e-5 * max(1.0, (k / 64.0) ** 0.5)
+    np.testing.assert_allclose(
+        matmul_pallas_raw(x, y), ref.matmul_ref(x, y), rtol=tol, atol=tol * 40
+    )
+
+
+@SETTINGS
+@given(
+    bm=st.sampled_from([8, 32, 128, 256]),
+    bn=st.sampled_from([8, 32, 128, 256]),
+)
+def test_matmul_block_shape_invariance(bm, bn):
+    """Result must not depend on the tiling chosen."""
+    x = _rand(3, (64, 48))
+    y = _rand(4, (48, 80))
+    base = ref.matmul_ref(x, y)
+    np.testing.assert_allclose(
+        matmul_pallas_raw(x, y, bm=bm, bn=bn), base, rtol=1e-5, atol=1e-5
+    )
+
+
+def test_matmul_grad_matches_ref_grad():
+    x = _rand(11, (32, 96))
+    y = _rand(12, (96, 24))
+
+    def f_pallas(a, b):
+        return jnp.sum(jnp.tanh(matmul(a, b)))
+
+    def f_ref(a, b):
+        return jnp.sum(jnp.tanh(ref.matmul_ref(a, b)))
+
+    gx, gy = jax.grad(f_pallas, argnums=(0, 1))(x, y)
+    rx, ry = jax.grad(f_ref, argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gy, ry, rtol=1e-4, atol=1e-5)
+
+
+def test_matmul_zero_and_identity():
+    x = _rand(21, (32, 32))
+    eye = jnp.eye(32, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        matmul_pallas_raw(x, eye), x, rtol=1e-6, atol=1e-6
+    )
+    z = jnp.zeros((32, 32), jnp.float32)
+    np.testing.assert_allclose(matmul_pallas_raw(x, z), z, atol=0)
+
+
+# --------------------------------------------------------------------------
+# preprocess kernel
+# --------------------------------------------------------------------------
+
+
+def _u8(seed, shape):
+    return jax.random.randint(
+        jax.random.PRNGKey(seed), shape, 0, 256, jnp.int32
+    ).astype(jnp.uint8)
+
+
+@SETTINGS
+@given(
+    b=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+    pflip=st.floats(0.0, 1.0),
+)
+def test_preprocess_matches_ref(b, seed, pflip):
+    x = _u8(seed, (b, 32, 32, 3))
+    flip = (
+        jax.random.bernoulli(jax.random.PRNGKey(seed + 1), pflip, (b,))
+    ).astype(jnp.float32)
+    got = preprocess(x, flip)
+    want = ref.preprocess_ref(x, flip)
+    assert got.shape == (b, 32 * 32 * 3)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@SETTINGS
+@given(
+    h=st.sampled_from([4, 8, 16, 32]),
+    w=st.sampled_from([4, 8, 16, 32]),
+    c=st.sampled_from([1, 3, 4]),
+)
+def test_preprocess_geometry_sweep(h, w, c):
+    x = _u8(h * 100 + w * 10 + c, (8, h, w, c))
+    flip = jnp.array([0, 1] * 4, jnp.float32)
+    np.testing.assert_allclose(
+        preprocess(x, flip), ref.preprocess_ref(x, flip), rtol=1e-6, atol=1e-6
+    )
+
+
+@SETTINGS
+@given(bb=st.sampled_from([1, 2, 4, 8, 16]))
+def test_preprocess_block_invariance(bb):
+    x = _u8(5, (16, 32, 32, 3))
+    flip = jnp.arange(16, dtype=jnp.float32) % 2
+    base = ref.preprocess_ref(x, flip)
+    np.testing.assert_allclose(
+        preprocess(x, flip, bb=bb), base, rtol=1e-6, atol=1e-6
+    )
+
+
+def test_preprocess_extreme_pixels():
+    """0 and 255 must map exactly to the normalized extremes."""
+    lo = jnp.zeros((2, 32, 32, 3), jnp.uint8)
+    hi = jnp.full((2, 32, 32, 3), 255, jnp.uint8)
+    noflip = jnp.zeros((2,), jnp.float32)
+    want_lo = (0.0 - ref.PIXEL_MEAN) / ref.PIXEL_STD
+    want_hi = (1.0 - ref.PIXEL_MEAN) / ref.PIXEL_STD
+    np.testing.assert_allclose(preprocess(lo, noflip), want_lo, rtol=1e-6)
+    np.testing.assert_allclose(preprocess(hi, noflip), want_hi, rtol=1e-6)
+
+
+def test_preprocess_flip_is_involution():
+    """Flipping twice (via ref on the flipped output) returns the original."""
+    x = _u8(9, (4, 32, 32, 3))
+    ones = jnp.ones((4,), jnp.float32)
+    zeros = jnp.zeros((4,), jnp.float32)
+    flipped = preprocess(x, ones).reshape(4, 32, 32, 3)
+    plain = preprocess(x, zeros).reshape(4, 32, 32, 3)
+    np.testing.assert_allclose(
+        flipped[:, :, ::-1, :], plain, rtol=1e-6, atol=1e-6
+    )

@@ -1,0 +1,93 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * **Algorithm 1 on/off** (§V-C): without balancing, stragglers gate
+//!   every synchronous step — quantifies why the paper needs the balancer
+//!   even though imbalance is "small".
+//! * **Cache fraction α** (Eq. 7/8): partial caches interpolate between
+//!   Reg and full Loc.
+//! * **Prefetch depth**: how much pipeline overlap the loader needs before
+//!   the Fig. 2 gaps disappear.
+//! * **Multithreading** (§III-B): preprocess-bound vs storage-bound
+//!   regimes.
+
+use dlio::bench::Bench;
+use dlio::sim::{presets, simulate_epoch, Scheme};
+use dlio::storage::Catalog;
+
+fn main() {
+    let mut b = Bench::new();
+
+    // --- Algorithm 1 ablation ----------------------------------------------
+    println!("### Ablation: Algorithm 1 balancing (training, ImageNet)");
+    println!("| nodes | balanced s | unbalanced s | straggler penalty |");
+    println!("|---|---|---|---|");
+    for nodes in [16usize, 64, 256] {
+        let mut cfg = presets::training(Catalog::imagenet_1k(), nodes, Scheme::Loc);
+        let on = simulate_epoch(&cfg).epoch_time_s;
+        cfg.balance_enabled = false;
+        let off = simulate_epoch(&cfg).epoch_time_s;
+        println!(
+            "| {nodes} | {on:.1} | {off:.1} | {:.1}% |",
+            (off / on - 1.0) * 100.0
+        );
+        b.record(&format!("ablate_balance/{nodes}n/on"), on, "sim-s");
+        b.record(&format!("ablate_balance/{nodes}n/off"), off, "sim-s");
+    }
+
+    // --- Cache fraction α ----------------------------------------------------
+    println!("\n### Ablation: cached fraction α (loading-only, ImageNet, 64 nodes)");
+    println!("| alpha | epoch s |");
+    println!("|---|---|");
+    for alpha in [0.0, 0.25, 0.5, 0.75, 0.9, 1.0] {
+        let mut cfg =
+            presets::loading_only(Catalog::imagenet_1k(), 64, Scheme::Loc, true);
+        cfg.alpha = alpha;
+        let t = simulate_epoch(&cfg).epoch_time_s;
+        println!("| {alpha:.2} | {t:.1} |");
+        b.record(&format!("ablate_alpha/{alpha}"), t, "sim-s");
+    }
+
+    // --- Prefetch depth --------------------------------------------------------
+    println!("\n### Ablation: prefetch depth (training, ImageNet, 24 nodes)");
+    println!("| prefetch | epoch s | wait s |");
+    println!("|---|---|---|");
+    for q in [1usize, 2, 4, 8, 16] {
+        let mut cfg = presets::training(Catalog::imagenet_1k(), 24, Scheme::Reg);
+        cfg.prefetch = q;
+        let r = simulate_epoch(&cfg);
+        println!("| {q} | {:.1} | {:.1} |", r.epoch_time_s, r.wait_time_s);
+        b.record(&format!("ablate_prefetch/q{q}"), r.epoch_time_s, "sim-s");
+    }
+
+    // --- Multithreading regime -----------------------------------------------
+    println!("\n### Ablation: worker threads by dataset (loading-only, 32 nodes)");
+    println!("| dataset | 1 thread s | 4 threads s | gain |");
+    println!("|---|---|---|---|");
+    for catalog in Catalog::paper_datasets() {
+        let st = simulate_epoch(&presets::loading_only(
+            catalog.clone(),
+            32,
+            Scheme::Loc,
+            false,
+        ))
+        .epoch_time_s;
+        let mt = simulate_epoch(&presets::loading_only(
+            catalog.clone(),
+            32,
+            Scheme::Loc,
+            true,
+        ))
+        .epoch_time_s;
+        println!(
+            "| {} | {st:.1} | {mt:.1} | {:.2}x |",
+            catalog.name,
+            st / mt
+        );
+        b.record(&format!("ablate_mt/{}", catalog.name), st / mt, "x");
+    }
+    println!(
+        "\n(paper: multithreading gains 105-113% for Loc on ImageNet, \
+         nothing on MuMMI — no preprocessing)"
+    );
+    b.report("ablations");
+}

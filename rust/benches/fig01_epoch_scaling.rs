@@ -1,0 +1,31 @@
+//! Bench: Fig. 1 — epoch cost vs scale for ResNet50/ImageNet training with
+//! the regular loader. Emits the figure's rows (simulated seconds) and
+//! times the simulator itself.
+//!
+//! Paper target shape: cost scales down to ~16 nodes, then the waiting
+//! time stops it (plateau); waiting dominates at 128+.
+
+use dlio::bench::Bench;
+use dlio::figures;
+
+fn main() {
+    let mut b = Bench::new();
+    let scales = [2usize, 4, 8, 16, 32, 64, 128, 256];
+
+    // Figure rows (simulated seconds — the reproduction output).
+    let rows = figures::fig1(&scales);
+    figures::print_fig1(&rows);
+    for r in &rows {
+        b.record(
+            &format!("fig1/{}nodes/{}", r.nodes, r.series),
+            r.seconds,
+            "sim-s",
+        );
+    }
+
+    // Harness cost: one full Fig. 1 sweep.
+    b.run("fig1/sweep_wallclock", || {
+        dlio::bench::black_box(figures::fig1(&scales));
+    });
+    b.report("Fig. 1 — epoch scaling");
+}

@@ -1,0 +1,37 @@
+//! Bench: Fig. 6 — imbalance traffic volume distribution (balls-in-bins +
+//! Algorithm 1) across (nodes, local batch) configurations.
+//!
+//! Paper target: medians ≈ 6.9% / 4.8% / 3.4% for local batch 32/64/128,
+//! nearly independent of node count.
+
+use dlio::bench::Bench;
+use dlio::figures;
+
+fn main() {
+    let mut b = Bench::new();
+    let rows = figures::fig6(&[4, 16, 64, 256], &[32, 64, 128]);
+    figures::print_fig6(&rows);
+    for r in &rows {
+        b.record(
+            &format!("fig6/p{}/b{}/median", r.nodes, r.local_batch),
+            r.bx.median,
+            "pct",
+        );
+    }
+    // Paper-vs-measured check printed explicitly.
+    for (batch, paper) in [(32usize, 6.9), (64, 4.8), (128, 3.4)] {
+        let meds: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.local_batch == batch)
+            .map(|r| r.bx.median)
+            .collect();
+        let avg = meds.iter().sum::<f64>() / meds.len() as f64;
+        println!(
+            "COMPARE\tfig6/b{batch}\tmeasured={avg:.2}%\tpaper={paper}%"
+        );
+    }
+    b.run("fig6/one_config_sweep", || {
+        dlio::bench::black_box(figures::fig6(&[16], &[64]));
+    });
+    b.report("Fig. 6 — imbalance box plots");
+}

@@ -1,0 +1,43 @@
+//! Bench: Fig. 7 — single-learner sample loading rate across
+//! workers × threads, measured on the LIVE loader (real shard I/O, real
+//! thread pools, token-bucket storage share, simulated decode occupancy).
+//!
+//! Paper target shape: rate grows with workers AND with threads;
+//! multithreading reaches a given rate with fewer workers; the curve
+//! saturates near the node's storage share (~800 samples/s).
+
+use dlio::bench::Bench;
+use dlio::figures::{fig7, print_fig7, Fig7Config};
+use dlio::storage::{generate, SyntheticSpec};
+
+fn main() {
+    let mut b = Bench::new();
+    let dir = std::env::temp_dir().join("dlio-bench-fig7");
+    if !dir.join("dataset.json").exists() {
+        generate(&dir, &SyntheticSpec { n_samples: 2048, ..Default::default() })
+            .unwrap();
+    }
+    let quick = std::env::var("DLIO_BENCH_QUICK").is_ok();
+    let cfg = Fig7Config {
+        data_dir: dir,
+        batches: if quick { 3 } else { 10 },
+        batch_size: 64,
+        ..Default::default()
+    };
+    let workers: &[usize] =
+        if quick { &[1, 4, 10] } else { &[1, 2, 4, 6, 8, 10] };
+    let threads: &[usize] = if quick { &[0, 4] } else { &[0, 1, 2, 4, 8] };
+
+    let rows = fig7(&cfg, workers, threads).unwrap();
+    print_fig7(&rows);
+    for r in &rows {
+        b.record(
+            &format!("fig7/w{}t{}", r.workers, r.threads),
+            r.samples_per_s,
+            "samples/s",
+        );
+    }
+    let max = rows.iter().map(|r| r.samples_per_s).fold(0.0, f64::max);
+    println!("COMPARE\tfig7/max_rate\tmeasured={max:.0}/s\tpaper=~800/s");
+    b.report("Fig. 7 — loader sweep (live)");
+}

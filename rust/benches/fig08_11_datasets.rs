@@ -1,0 +1,50 @@
+//! Bench: Figs. 8–11 — collective loading cost for the four evaluation
+//! datasets (ImageNet-1K, UCF101-RGB, UCF101-FLOW, MuMMI) across scales,
+//! regular vs locality-aware × single vs multi-threaded.
+//!
+//! Paper targets: Reg plateaus (no scaling); Loc keeps scaling; headline
+//! speedups ≈ 34x (ImageNet @256), up to 55.5x (RGB), 60.6x (FLOW),
+//! 18/35/70/120x (MuMMI @16/32/64/128).
+
+use dlio::bench::Bench;
+use dlio::figures::{dataset_scaling, print_dataset_scaling};
+use dlio::storage::Catalog;
+
+fn main() {
+    let mut b = Bench::new();
+    for (fig, catalog, paper) in [
+        ("fig08", Catalog::imagenet_1k(), "34x @256"),
+        ("fig09", Catalog::ucf101_rgb(), "2.8-55.5x"),
+        ("fig10", Catalog::ucf101_flow(), "2.2-60.6x"),
+        ("fig11", Catalog::mummi(), "18/35/70/120x"),
+    ] {
+        let nodes: Vec<usize> = if fig == "fig11" {
+            vec![8, 16, 32, 64, 128]
+        } else {
+            vec![8, 16, 32, 64, 128, 256]
+        };
+        let rows = dataset_scaling(&catalog, &nodes);
+        print_dataset_scaling(&format!("{fig} — {}", catalog.name), &rows);
+        for r in &rows {
+            b.record(
+                &format!("{fig}/{}n/loc_mt", r.nodes),
+                r.loc_mt_s,
+                "sim-s",
+            );
+            b.record(
+                &format!("{fig}/{}n/reg_mt", r.nodes),
+                r.reg_mt_s,
+                "sim-s",
+            );
+        }
+        let max = rows.iter().map(|r| r.speedup_mt()).fold(0.0, f64::max);
+        println!("COMPARE\t{fig}/max_speedup\tmeasured={max:.1}x\tpaper={paper}");
+    }
+    b.run("fig08_11/imagenet_single_point", || {
+        dlio::bench::black_box(dataset_scaling(
+            &Catalog::imagenet_1k(),
+            &[64],
+        ));
+    });
+    b.report("Figs. 8–11 — dataset loading scaling");
+}

@@ -1,0 +1,85 @@
+//! Bench: Fig. 12 — average epoch time of ImageNet/ResNet50 training at
+//! 16/32/64 nodes, Reg vs Loc, with V optionally taken from the real
+//! measured PJRT grad step (bridging the live stack into the simulator).
+//!
+//! Paper targets: comparable at 16 nodes (compute-bound), ~1.9x Loc win at
+//! 64 nodes (256 learners).
+
+use dlio::bench::Bench;
+use dlio::figures::{fig12, print_fig12};
+use dlio::runtime::{default_artifacts_dir, Engine, HostTensor};
+use dlio::util::Rng;
+use std::sync::Arc;
+
+/// Measure the real PJRT grad-step rate (samples/s for one learner) and
+/// scale it to the paper's per-node units for the sim's V.
+fn measured_v_node() -> Option<f64> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    let engine = Arc::new(Engine::load(&dir).ok()?);
+    let b = 64usize;
+    let geo = engine.manifest().geometry.clone();
+    let prog = engine.program(&format!("grad{b}")).ok()?;
+    let params = engine.initial_params().ok()?;
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> =
+        (0..b * geo.n_features).map(|_| rng.next_f32() - 0.5).collect();
+    let y: Vec<i32> =
+        (0..b).map(|_| rng.next_below(geo.n_classes as u64) as i32).collect();
+    let mut args = params;
+    args.push(HostTensor::f32(vec![b, geo.n_features], x));
+    args.push(HostTensor::i32(vec![b], y));
+    for _ in 0..4 {
+        prog.run(&args).ok()?;
+    }
+    let rate = b as f64 / prog.mean_exec_s();
+    println!(
+        "measured PJRT grad rate: {rate:.0} samples/s/learner \
+         (mean step {:.1} ms)",
+        prog.mean_exec_s() * 1e3
+    );
+    Some(rate)
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let nodes = [16usize, 32, 64];
+
+    // Variant A: V100 calibration (paper units).
+    let rows = fig12(&nodes, None);
+    print_fig12(&rows);
+    for r in &rows {
+        b.record(&format!("fig12/{}n/reg", r.nodes), r.reg_s, "sim-s");
+        b.record(&format!("fig12/{}n/loc", r.nodes), r.loc_s, "sim-s");
+        println!(
+            "COMPARE\tfig12/{}n/speedup\tmeasured={:.2}x\tpaper={}",
+            r.nodes,
+            r.reg_s / r.loc_s,
+            match r.nodes {
+                16 => "~1x",
+                64 => "~1.9x",
+                _ => "-",
+            }
+        );
+    }
+
+    // Variant B: V measured from the real PJRT step (4 learners/node).
+    if let Some(v_learner) = measured_v_node() {
+        let v_node = v_learner * 4.0;
+        println!("\nfig12 with measured V (4 x {v_learner:.0} samples/s):");
+        let rows = fig12(&nodes, Some(v_node));
+        print_fig12(&rows);
+        for r in &rows {
+            b.record(
+                &format!("fig12-measuredV/{}n/speedup", r.nodes),
+                r.reg_s / r.loc_s,
+                "x",
+            );
+        }
+    } else {
+        eprintln!("artifacts missing: skipping measured-V variant");
+    }
+    b.report("Fig. 12 — training epoch time");
+}

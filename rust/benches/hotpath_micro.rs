@@ -1,0 +1,126 @@
+//! Microbenchmarks of the L3 hot paths — the §Perf optimization targets:
+//! Algorithm 1 balancing, Loc partitioning, the global shuffler, cache
+//! directory lookups, the prefetch queue, shard reads, and manifest JSON
+//! parsing. Recorded before/after in EXPERIMENTS.md §Perf.
+
+use dlio::balance;
+use dlio::bench::{black_box, Bench};
+use dlio::cache::CacheDirectory;
+use dlio::sampler::{loc_partition, reg_partition, GlobalShuffler};
+use dlio::storage::{generate, ShardReader, SyntheticSpec};
+use dlio::util::{Json, Queue, Rng};
+
+fn main() {
+    let mut b = Bench::new();
+
+    // --- Algorithm 1 -------------------------------------------------------
+    for p in [64usize, 1024, 16384] {
+        let mut rng = Rng::new(1);
+        let loads: Vec<u64> = (0..p).map(|_| rng.next_below(256)).collect();
+        b.run(&format!("balance/p{p}"), || {
+            black_box(balance::balance(black_box(&loads)));
+        });
+    }
+
+    // --- Partitioners ------------------------------------------------------
+    let n_samples = 1_000_000u64;
+    let dir = CacheDirectory::striped(n_samples, 256);
+    let mut rng = Rng::new(2);
+    let batch: Vec<u32> = (0..32_768)
+        .map(|_| rng.next_below(n_samples) as u32)
+        .collect();
+    b.run("loc_partition/b32768_p256", || {
+        black_box(loc_partition(black_box(&batch), &dir, 256));
+    });
+    b.run("reg_partition/b32768_p256", || {
+        black_box(reg_partition(black_box(&batch), 256));
+    });
+
+    // --- Shuffler -----------------------------------------------------------
+    let sh = GlobalShuffler::new(3, n_samples);
+    b.run("shuffler/perm_1M", || {
+        black_box(sh.epoch_permutation(black_box(7)));
+    });
+
+    // --- Directory lookups --------------------------------------------------
+    b.run("directory/1M_lookups", || {
+        let mut acc = 0usize;
+        for s in (0..1_000_000u32).step_by(17) {
+            acc += dir.owner(s).unwrap_or(0);
+        }
+        black_box(acc);
+    });
+
+    // --- Prefetch queue ------------------------------------------------------
+    b.run("queue/push_pop_10k", || {
+        let q: Queue<u64> = Queue::bounded(64);
+        let producer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                for i in 0..10_000u64 {
+                    q.push(i).unwrap();
+                }
+                q.close();
+            })
+        };
+        let mut acc = 0u64;
+        while let Some(v) = q.pop() {
+            acc = acc.wrapping_add(v);
+        }
+        black_box(acc);
+        producer.join().unwrap();
+    });
+
+    // --- Shard reads ----------------------------------------------------------
+    let data = std::env::temp_dir().join("dlio-bench-micro");
+    if !data.join("dataset.json").exists() {
+        generate(&data, &SyntheticSpec { n_samples: 1024, ..Default::default() })
+            .unwrap();
+    }
+    let shard = ShardReader::open(data.join("shard-00000.dlshard")).unwrap();
+    b.run("shard/read_256_records", || {
+        for i in 0..256 {
+            black_box(shard.read(i).unwrap());
+        }
+    });
+    let mut buf = vec![0u8; 3072];
+    b.run("shard/read_into_256_records", || {
+        for i in 0..256 {
+            shard.read_into(i, &mut buf).unwrap();
+            black_box(&buf);
+        }
+    });
+
+    // --- Tensor byte serialization (§Perf iteration 1) -----------------------
+    // Before: per-element to_le_bytes flat_map; after: zero-copy byte_view.
+    let w1 = dlio::runtime::HostTensor::f32(
+        vec![3072, 512],
+        vec![0.5f32; 3072 * 512],
+    );
+    b.run("tensor/bytes_flatmap_legacy_w1", || {
+        let v: Vec<u8> = w1
+            .as_f32()
+            .unwrap()
+            .iter()
+            .flat_map(|x| x.to_le_bytes())
+            .collect();
+        black_box(v);
+    });
+    b.run("tensor/byte_view_w1", || {
+        black_box(w1.byte_view().len());
+    });
+    b.run("tensor/param_clone_w1", || {
+        black_box(w1.clone());
+    });
+
+    // --- Manifest JSON ----------------------------------------------------------
+    let manifest_path =
+        dlio::runtime::default_artifacts_dir().join("manifest.json");
+    if let Ok(text) = std::fs::read_to_string(&manifest_path) {
+        b.run("json/parse_manifest", || {
+            black_box(Json::parse(black_box(&text)).unwrap());
+        });
+    }
+
+    b.report("hot-path microbenchmarks");
+}

@@ -1,0 +1,113 @@
+//! §Perf whole-stack measurements (EXPERIMENTS.md §Perf):
+//!
+//! * **L1/L2** — Pallas-kernel grad (`grad64`) vs all-jnp grad
+//!   (`gradref64`): interpret-mode overhead of routing the dense layers
+//!   through the Pallas kernel on the CPU backend (on real TPU the kernel
+//!   lowers to Mosaic and this gap is the MXU win; on CPU it is the cost
+//!   we pay for the three-layer architecture).
+//! * **L2** — preprocess kernel throughput (samples/s through PJRT).
+//! * **Runtime boundary** — `Program::run` total vs PJRT-execute-only time:
+//!   conversion overhead after the zero-copy `byte_view` optimization.
+//! * **L3** — unthrottled loader throughput (workers×threads matrix) —
+//!   the coordinator-side ceiling.
+
+use dlio::bench::{black_box, Bench};
+use dlio::figures::{fig7, Fig7Config};
+use dlio::runtime::{default_artifacts_dir, Engine, HostTensor};
+use dlio::storage::{generate, SyntheticSpec};
+use dlio::util::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let mut b = Bench::new();
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts`");
+        return;
+    }
+    let engine = Arc::new(Engine::load(&dir).unwrap());
+    let geo = engine.manifest().geometry.clone();
+    let params = engine.initial_params().unwrap();
+    let mut rng = Rng::new(1);
+    let bs = 64usize;
+    let x: Vec<f32> =
+        (0..bs * geo.n_features).map(|_| rng.next_f32() - 0.5).collect();
+    let y: Vec<i32> = (0..bs)
+        .map(|_| rng.next_below(geo.n_classes as u64) as i32)
+        .collect();
+    let mut grad_args = params.clone();
+    grad_args.push(HostTensor::f32(vec![bs, geo.n_features], x));
+    grad_args.push(HostTensor::i32(vec![bs], y));
+
+    // --- L1/L2: pallas vs jnp grad ----------------------------------------
+    let grad = engine.program("grad64").unwrap();
+    let gradref = engine.program("gradref64").unwrap();
+    let m_pallas = b.run("l2/grad64_pallas", || {
+        black_box(grad.run(&grad_args).unwrap());
+    });
+    let m_ref = b.run("l2/grad64_jnp_ref", || {
+        black_box(gradref.run(&grad_args).unwrap());
+    });
+    println!(
+        "COMPARE\tl2/pallas_interpret_overhead\tmeasured={:.2}x\t\
+         (CPU interpret; Mosaic on real TPU)",
+        m_pallas.mean_s / m_ref.mean_s
+    );
+
+    // --- L2: preprocess kernel throughput -----------------------------------
+    let pre = engine.program("preprocess64").unwrap();
+    let raw: Vec<u8> = (0..bs * geo.n_features)
+        .map(|_| rng.next_below(256) as u8)
+        .collect();
+    let pre_args = vec![
+        HostTensor::u8(vec![bs, geo.img.0, geo.img.1, geo.img.2], raw),
+        HostTensor::f32(vec![bs], vec![0.0; bs]),
+    ];
+    let m_pre = b.run("l2/preprocess64", || {
+        black_box(pre.run(&pre_args).unwrap());
+    });
+    b.record("l2/preprocess_rate", bs as f64 / m_pre.mean_s, "samples/s");
+
+    // --- Runtime boundary: run() total vs execute-only ----------------------
+    let execs_before = grad.executions();
+    let t0 = Instant::now();
+    let reps = 10;
+    for _ in 0..reps {
+        black_box(grad.run(&grad_args).unwrap());
+    }
+    let total = t0.elapsed().as_secs_f64() / reps as f64;
+    let _ = execs_before;
+    let exec_only = grad.mean_exec_s();
+    b.record("runtime/grad64_total", total, "s");
+    b.record("runtime/grad64_exec_only", exec_only, "s");
+    b.record(
+        "runtime/conversion_overhead",
+        (total - exec_only) / total * 100.0,
+        "pct",
+    );
+
+    // --- L3: unthrottled loader ceiling --------------------------------------
+    let data = std::env::temp_dir().join("dlio-perf-l3");
+    if !data.join("dataset.json").exists() {
+        generate(&data, &SyntheticSpec { n_samples: 4096, ..Default::default() })
+            .unwrap();
+    }
+    let cfg = Fig7Config {
+        data_dir: data,
+        batches: 32,
+        batch_size: 64,
+        decode_s_per_kib: 0.0, // no simulated costs: raw pipeline ceiling
+        storage_bps: None,
+    };
+    for (w, t) in [(1usize, 0usize), (2, 4), (4, 4)] {
+        let rows = fig7(&cfg, &[w], &[t]).unwrap();
+        b.record(
+            &format!("l3/loader_ceiling_w{w}t{t}"),
+            rows[0].samples_per_s,
+            "samples/s",
+        );
+    }
+
+    b.report("§Perf whole-stack");
+}

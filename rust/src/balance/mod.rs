@@ -1,0 +1,211 @@
+//! Algorithm 1 — the greedy load-balancing schedule (paper §V-C).
+//!
+//! After Loc claims, learners hold unequal shares of the global mini-batch.
+//! Training with unequal shares produces identical gradients (Theorem 1)
+//! but creates stragglers in synchronous SGD, so learners with *surplus*
+//! send samples to learners with *deficit*. Minimizing the **number of
+//! transfers** (message count; total bytes are scheme-invariant) is
+//! NP-complete (minimum common integer partition, [20]); the paper's
+//! Algorithm 1 is a greedy 2-approximation running in `O(p log p)`:
+//!
+//! > build a max-heap of surpluses and a max-heap of deficits; repeatedly
+//! > match the largest surplus with the largest deficit, transfer
+//! > `min(surplus, deficit)`, and reinsert the nonzero remainder.
+//!
+//! [`balance`] reproduces it literally (two `BinaryHeap`s); the invariants
+//! (conservation, ≤ p−1 transfers for the all-nonzero-imbalance case,
+//! final loads equal to targets) are property-tested below and benched in
+//! `hotpath_micro`.
+
+use std::collections::BinaryHeap;
+
+/// One scheduled transfer: `amount` samples move `from` -> `to`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Transfer {
+    pub from: usize,
+    pub to: usize,
+    pub amount: u64,
+}
+
+/// Balanced target loads: `total/p` each, the first `total % p` learners
+/// taking one extra. Deterministic, so every learner computes the same
+/// targets without communication.
+pub fn targets(loads: &[u64]) -> Vec<u64> {
+    let p = loads.len() as u64;
+    assert!(p > 0);
+    let total: u64 = loads.iter().sum();
+    let base = total / p;
+    let rem = total % p;
+    (0..p).map(|j| base + u64::from(j < rem)).collect()
+}
+
+/// Algorithm 1: greedy 2-approximation transfer schedule taking each
+/// learner from `loads[j]` to `targets(loads)[j]`.
+pub fn balance(loads: &[u64]) -> Vec<Transfer> {
+    let tgt = targets(loads);
+    // Max-heaps keyed on imbalance; ties broken on learner id for
+    // determinism across replicas.
+    let mut surplus: BinaryHeap<(u64, std::cmp::Reverse<usize>)> = BinaryHeap::new();
+    let mut deficit: BinaryHeap<(u64, std::cmp::Reverse<usize>)> = BinaryHeap::new();
+    for (j, (&l, &t)) in loads.iter().zip(&tgt).enumerate() {
+        if l > t {
+            surplus.push((l - t, std::cmp::Reverse(j)));
+        } else if t > l {
+            deficit.push((t - l, std::cmp::Reverse(j)));
+        }
+    }
+    let mut schedule = Vec::new();
+    while let Some((s_imb, std::cmp::Reverse(s_id))) = surplus.pop() {
+        let (d_imb, std::cmp::Reverse(d_id)) =
+            deficit.pop().expect("surplus without matching deficit");
+        let m = s_imb.min(d_imb);
+        schedule.push(Transfer { from: s_id, to: d_id, amount: m });
+        if s_imb > m {
+            surplus.push((s_imb - m, std::cmp::Reverse(s_id)));
+        }
+        if d_imb > m {
+            deficit.push((d_imb - m, std::cmp::Reverse(d_id)));
+        }
+    }
+    debug_assert!(deficit.is_empty(), "deficit left unserved");
+    schedule
+}
+
+/// Apply a schedule to a load vector (for verification and simulation).
+pub fn apply(loads: &[u64], schedule: &[Transfer]) -> Vec<u64> {
+    let mut out = loads.to_vec();
+    for t in schedule {
+        assert!(out[t.from] >= t.amount, "transfer exceeds sender load");
+        out[t.from] -= t.amount;
+        out[t.to] += t.amount;
+    }
+    out
+}
+
+/// Total samples moved by a schedule (the numerator of the paper's
+/// "imbalance traffic volume percentage", Fig. 6).
+pub fn moved(schedule: &[Transfer]) -> u64 {
+    schedule.iter().map(|t| t.amount).sum()
+}
+
+/// Sum of deficits for a load vector — the minimum possible traffic, which
+/// Algorithm 1 always achieves in *volume* (it only optimizes message
+/// count). Used by the Fig. 6 harness.
+pub fn total_deficit(loads: &[u64]) -> u64 {
+    let tgt = targets(loads);
+    loads
+        .iter()
+        .zip(&tgt)
+        .map(|(&l, &t)| t.saturating_sub(l))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn textbook_example() {
+        // Paper Fig. 5: Red=2, Green=6, Blue=4 over a 12-sample mini-batch.
+        let loads = [2u64, 6, 4];
+        let schedule = balance(&loads);
+        assert_eq!(apply(&loads, &schedule), targets(&loads));
+        assert_eq!(targets(&loads), vec![4, 4, 4]);
+        // One transfer suffices: Green -> Red of 2. ("A way to balance the
+        // load is to let Red load 2 samples from Green.")
+        assert_eq!(schedule, vec![Transfer { from: 1, to: 0, amount: 2 }]);
+        assert_eq!(moved(&schedule), 2);
+    }
+
+    #[test]
+    fn already_balanced_is_noop() {
+        assert!(balance(&[5, 5, 5, 5]).is_empty());
+        assert!(balance(&[3]).is_empty());
+        assert!(balance(&[0, 0]).is_empty());
+    }
+
+    #[test]
+    fn remainder_targets_are_deterministic() {
+        assert_eq!(targets(&[1, 2, 3, 4]), vec![3, 3, 2, 2]);
+        let loads = [10u64, 0, 0];
+        let schedule = balance(&loads);
+        assert_eq!(apply(&loads, &schedule), vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn prop_conservation_and_targets() {
+        prop::check("balance conserves and hits targets", 300, |rng| {
+            let loads = prop::vec_of(rng, 1, 64, |r| r.next_below(200));
+            let schedule = balance(&loads);
+            let after = apply(&loads, &schedule);
+            assert_eq!(after, targets(&loads));
+            assert_eq!(
+                after.iter().sum::<u64>(),
+                loads.iter().sum::<u64>(),
+                "conservation"
+            );
+        });
+    }
+
+    #[test]
+    fn prop_transfer_count_bound() {
+        // Each transfer retires at least one of (surplus, deficit) learner,
+        // so the schedule length is < #surplus + #deficit <= p, and the
+        // 2-approximation bound of Theorem 2 is schedule.len() <= p - 1.
+        prop::check("balance message bound", 300, |rng| {
+            let loads = prop::vec_of(rng, 2, 64, |r| r.next_below(100));
+            let p = loads.len();
+            let schedule = balance(&loads);
+            assert!(
+                schedule.len() <= p - 1,
+                "{} transfers for p={p}",
+                schedule.len()
+            );
+        });
+    }
+
+    #[test]
+    fn prop_no_self_or_oversend() {
+        prop::check("balance sanity", 200, |rng| {
+            let loads = prop::vec_of(rng, 1, 32, |r| r.next_below(50));
+            let tgt = targets(&loads);
+            let schedule = balance(&loads);
+            let mut sent = vec![0u64; loads.len()];
+            for t in &schedule {
+                assert_ne!(t.from, t.to, "self transfer");
+                assert!(t.amount > 0, "zero transfer");
+                sent[t.from] += t.amount;
+            }
+            for (j, &s) in sent.iter().enumerate() {
+                assert!(
+                    s <= loads[j].saturating_sub(tgt[j]),
+                    "learner {j} oversends"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_volume_is_minimal() {
+        // Algorithm 1 moves exactly the total deficit — no scheme can move
+        // less and still balance.
+        prop::check("balance volume minimal", 200, |rng| {
+            let loads = prop::vec_of(rng, 1, 48, |r| r.next_below(150));
+            let schedule = balance(&loads);
+            assert_eq!(moved(&schedule), total_deficit(&loads));
+        });
+    }
+
+    #[test]
+    fn large_p_runs_fast() {
+        // O(p log p): p = 100k in well under a second even in debug builds.
+        let mut rng = crate::util::Rng::new(4242);
+        let loads: Vec<u64> = (0..100_000).map(|_| rng.next_below(256)).collect();
+        let t0 = std::time::Instant::now();
+        let schedule = balance(&loads);
+        assert!(!schedule.is_empty());
+        assert!(t0.elapsed().as_secs_f64() < 2.0);
+        assert_eq!(apply(&loads, &schedule), targets(&loads));
+    }
+}

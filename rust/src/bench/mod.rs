@@ -1,0 +1,145 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs the `rust/benches/*.rs` binaries (declared with
+//! `harness = false`); each uses this module to time its workloads with
+//! warmup, repeated measurement, and robust statistics, and prints both a
+//! human table and machine-readable `BENCH\t...` lines that EXPERIMENTS.md
+//! records.
+
+use crate::util::stats::{percentile, Summary};
+use std::time::Instant;
+
+/// One timed result.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl Measurement {
+    pub fn per_iter(&self) -> f64 {
+        self.mean_s
+    }
+}
+
+/// Benchmark runner with fixed warmup/sample policy.
+pub struct Bench {
+    /// Samples to collect per benchmark.
+    pub samples: usize,
+    /// Warmup iterations before sampling.
+    pub warmup: usize,
+    /// Minimum total measurement time; iterations are batched to reach it.
+    pub min_time_s: f64,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // Keep benches fast by default; override per-bench for precision.
+        let quick = std::env::var("DLIO_BENCH_QUICK").is_ok();
+        Bench {
+            samples: if quick { 5 } else { 15 },
+            warmup: if quick { 1 } else { 3 },
+            min_time_s: if quick { 0.05 } else { 0.25 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which performs ONE logical iteration per call.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        // Estimate per-iter cost to size batches.
+        let t0 = Instant::now();
+        f();
+        let est = t0.elapsed().as_secs_f64().max(1e-9);
+        let per_sample_time = (self.min_time_s / self.samples as f64).max(est);
+        let batch = (per_sample_time / est).ceil().max(1.0) as u64;
+
+        let mut samples = Vec::with_capacity(self.samples);
+        let mut total_iters = 0u64;
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / batch as f64);
+            total_iters += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = Summary::of(&samples);
+        let m = Measurement {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_s: s.mean,
+            stddev_s: s.stddev,
+            p50_s: percentile(&samples, 50.0),
+            p95_s: percentile(&samples, 95.0),
+        };
+        println!(
+            "BENCH\t{}\t{:.6e}\t{:.6e}\t{:.6e}\t{:.6e}\t{}",
+            m.name, m.mean_s, m.stddev_s, m.p50_s, m.p95_s, m.iters
+        );
+        self.results.push(m.clone());
+        m
+    }
+
+    /// Record an externally measured value (e.g. simulated seconds or a
+    /// rate). Emitted as a machine-readable `VALUE` line; not mixed into
+    /// the wall-clock table (units differ).
+    pub fn record(&mut self, name: &str, value: f64, unit: &str) {
+        println!("VALUE\t{name}\t{value:.6}\t{unit}");
+    }
+
+    /// Human-readable summary table.
+    pub fn report(&self, title: &str) {
+        println!("\n== {title} ==");
+        println!("{:<52} {:>12} {:>12} {:>12}", "benchmark", "mean", "p50", "p95");
+        for m in &self.results {
+            println!(
+                "{:<52} {:>12} {:>12} {:>12}",
+                m.name,
+                crate::util::units::fmt_secs(m.mean_s),
+                crate::util::units::fmt_secs(m.p50_s),
+                crate::util::units::fmt_secs(m.p95_s),
+            );
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        std::env::set_var("DLIO_BENCH_QUICK", "1");
+        let mut b = Bench::new();
+        let m = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(m.mean_s > 0.0);
+        assert!(m.p95_s >= m.p50_s * 0.5);
+    }
+}

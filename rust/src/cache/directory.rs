@@ -1,0 +1,169 @@
+//! The replicated cache directory (paper §V-A).
+//!
+//! Tracks, for every sample id, which learner's cache holds it. The paper
+//! assumes "a cache directory exists for tracking sample locations, and the
+//! directory is duplicated across all learners and stays the same (i.e. no
+//! cache replacement) after populating caches in the first epoch" — so the
+//! directory here is a plain dense vector, cheap to replicate and to
+//! consult once per sample per step.
+
+/// Sentinel for "not cached anywhere".
+const NONE: u32 = u32::MAX;
+
+/// Dense sample-id -> owning-learner map.
+#[derive(Clone, Debug)]
+pub struct CacheDirectory {
+    owner: Vec<u32>,
+    cached: u64,
+}
+
+impl CacheDirectory {
+    pub fn new(n_samples: u64) -> Self {
+        CacheDirectory { owner: vec![NONE; n_samples as usize], cached: 0 }
+    }
+
+    pub fn n_samples(&self) -> u64 {
+        self.owner.len() as u64
+    }
+
+    /// Which learner caches `sample`, if any.
+    #[inline]
+    pub fn owner(&self, sample: u32) -> Option<usize> {
+        match self.owner.get(sample as usize) {
+            Some(&o) if o != NONE => Some(o as usize),
+            _ => None,
+        }
+    }
+
+    /// Record that `learner` caches `sample`. Idempotent; re-assignment is
+    /// a logic error under the paper's no-replacement policy (but tolerated
+    /// as last-writer-wins to keep population code simple).
+    pub fn set_owner(&mut self, sample: u32, learner: usize) {
+        let slot = &mut self.owner[sample as usize];
+        if *slot == NONE {
+            self.cached += 1;
+        }
+        *slot = learner as u32;
+    }
+
+    /// Number of samples cached somewhere.
+    pub fn cached_samples(&self) -> u64 {
+        self.cached
+    }
+
+    /// The paper's α: fraction of the dataset in the aggregated cache.
+    pub fn alpha(&self) -> f64 {
+        self.cached as f64 / self.owner.len().max(1) as f64
+    }
+
+    /// Build a directory where learner `j` owns the contiguous block
+    /// `[j*n/p, (j+1)*n/p)` — the "easily determined sample locations"
+    /// population the paper recommends to avoid extra bookkeeping.
+    pub fn block_populated(n_samples: u64, p: usize) -> Self {
+        let mut dir = CacheDirectory::new(n_samples);
+        let base = n_samples / p as u64;
+        let rem = n_samples % p as u64;
+        let mut cursor = 0u64;
+        for j in 0..p {
+            let take = base + u64::from((j as u64) < rem);
+            for s in cursor..cursor + take {
+                dir.set_owner(s as u32, j);
+            }
+            cursor += take;
+        }
+        dir
+    }
+
+    /// Build a directory where ownership is striped (`sample % p`). Both
+    /// layouts are valid ("how samples are cached is not important, since
+    /// the mini-batch sequences are randomly shuffled"); striping spreads
+    /// shard-local I/O during population.
+    pub fn striped(n_samples: u64, p: usize) -> Self {
+        let mut dir = CacheDirectory::new(n_samples);
+        for s in 0..n_samples {
+            dir.set_owner(s as u32, (s % p as u64) as usize);
+        }
+        dir
+    }
+
+    /// Per-learner cached-sample counts.
+    pub fn counts(&self, p: usize) -> Vec<u64> {
+        let mut counts = vec![0u64; p];
+        for &o in &self.owner {
+            if o != NONE {
+                counts[o as usize] += 1;
+            }
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn empty_directory_has_no_owners() {
+        let dir = CacheDirectory::new(100);
+        assert_eq!(dir.owner(0), None);
+        assert_eq!(dir.owner(99), None);
+        assert_eq!(dir.cached_samples(), 0);
+        assert_eq!(dir.alpha(), 0.0);
+    }
+
+    #[test]
+    fn set_and_lookup() {
+        let mut dir = CacheDirectory::new(10);
+        dir.set_owner(3, 2);
+        dir.set_owner(7, 0);
+        assert_eq!(dir.owner(3), Some(2));
+        assert_eq!(dir.owner(7), Some(0));
+        assert_eq!(dir.owner(4), None);
+        assert_eq!(dir.cached_samples(), 2);
+        // Re-setting doesn't double count.
+        dir.set_owner(3, 1);
+        assert_eq!(dir.cached_samples(), 2);
+        assert_eq!(dir.owner(3), Some(1));
+    }
+
+    #[test]
+    fn block_population_is_disjoint_and_complete() {
+        let dir = CacheDirectory::block_populated(103, 4);
+        assert_eq!(dir.alpha(), 1.0);
+        let counts = dir.counts(4);
+        assert_eq!(counts, vec![26, 26, 26, 25]);
+        // Block property: owners are non-decreasing.
+        let mut last = 0;
+        for s in 0..103u32 {
+            let o = dir.owner(s).unwrap();
+            assert!(o >= last);
+            last = o;
+        }
+    }
+
+    #[test]
+    fn striped_population_counts() {
+        let dir = CacheDirectory::striped(10, 3);
+        assert_eq!(dir.counts(3), vec![4, 3, 3]);
+        assert_eq!(dir.owner(4), Some(1));
+    }
+
+    #[test]
+    fn prop_population_layouts_agree_on_counts() {
+        prop::check("directory layouts", 100, |rng| {
+            let n = 1 + rng.next_below(10_000);
+            let p = 1 + rng.next_below(32) as usize;
+            let block = CacheDirectory::block_populated(n, p);
+            let striped = CacheDirectory::striped(n, p);
+            // Same multiset of per-learner counts: both are even splits.
+            let mut a = block.counts(p);
+            let mut b = striped.counts(p);
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b);
+            assert_eq!(block.cached_samples(), n);
+            assert_eq!(striped.cached_samples(), n);
+        });
+    }
+}

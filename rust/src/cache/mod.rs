@@ -1,0 +1,114 @@
+//! Software caching (paper §III-C): per-learner sample caches, the
+//! replicated cache directory, and the aggregated-cache view used by the
+//! locality-aware sampler.
+
+pub mod directory;
+pub mod sample_cache;
+pub mod tiered;
+
+pub use directory::CacheDirectory;
+pub use sample_cache::{Policy, SampleCache};
+pub use tiered::TieredCache;
+
+use crate::storage::Sample;
+use std::sync::Arc;
+
+/// The aggregated (distributed) cache: every learner's local cache plus the
+/// shared directory. In-process stand-in for the paper's node-spanning
+/// cache — learner `j`'s cache is reachable from any learner, with the
+/// interconnect cost accounted by [`crate::net::Fabric`].
+pub struct AggregatedCache {
+    caches: Vec<Arc<SampleCache>>,
+    directory: CacheDirectory,
+}
+
+impl AggregatedCache {
+    pub fn new(caches: Vec<Arc<SampleCache>>, n_samples: u64) -> Self {
+        let directory = CacheDirectory::new(n_samples);
+        AggregatedCache { caches, directory }
+    }
+
+    pub fn p(&self) -> usize {
+        self.caches.len()
+    }
+
+    pub fn directory(&self) -> &CacheDirectory {
+        &self.directory
+    }
+
+    pub fn cache(&self, learner: usize) -> &Arc<SampleCache> {
+        &self.caches[learner]
+    }
+
+    /// Insert into `learner`'s cache and update the directory. Returns
+    /// whether the cache accepted the sample.
+    pub fn insert(&mut self, learner: usize, sample: Arc<Sample>) -> bool {
+        let id = sample.id;
+        if self.caches[learner].insert(sample) {
+            self.directory.set_owner(id, learner);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Fetch a sample from whichever cache owns it.
+    pub fn fetch(&self, id: u32) -> Option<(usize, Arc<Sample>)> {
+        let owner = self.directory.owner(id)?;
+        self.caches[owner].get(id).map(|s| (owner, s))
+    }
+
+    /// The paper's α.
+    pub fn alpha(&self) -> f64 {
+        self.directory.alpha()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(id: u32) -> Arc<Sample> {
+        Arc::new(Sample { id, bytes: vec![id as u8; 8], label: 0 })
+    }
+
+    fn agg(p: usize, cap: u64, n: u64) -> AggregatedCache {
+        let caches = (0..p)
+            .map(|_| Arc::new(SampleCache::new(cap, Policy::InsertOnly)))
+            .collect();
+        AggregatedCache::new(caches, n)
+    }
+
+    #[test]
+    fn insert_updates_directory_and_fetch_routes() {
+        let mut a = agg(3, 1024, 100);
+        assert!(a.insert(1, sample(42)));
+        assert_eq!(a.directory().owner(42), Some(1));
+        let (owner, s) = a.fetch(42).unwrap();
+        assert_eq!(owner, 1);
+        assert_eq!(s.id, 42);
+        assert!(a.fetch(43).is_none());
+    }
+
+    #[test]
+    fn rejected_insert_leaves_directory_clean() {
+        let mut a = agg(2, 8, 10); // capacity: exactly one 8-byte sample
+        assert!(a.insert(0, sample(1)));
+        assert!(!a.insert(0, sample(2)));
+        assert_eq!(a.directory().owner(2), None);
+        assert!((a.alpha() - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disjoint_population_alpha_reaches_one() {
+        let mut a = agg(4, u64::MAX, 40);
+        for id in 0..40u32 {
+            assert!(a.insert(id as usize % 4, sample(id)));
+        }
+        assert_eq!(a.alpha(), 1.0);
+        for id in 0..40u32 {
+            let (owner, _) = a.fetch(id).unwrap();
+            assert_eq!(owner, id as usize % 4);
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! Per-learner software sample cache (paper §III-C).
+//!
+//! Byte-capacity-bounded, insert-only ("no cache replacement after
+//! populating caches in the first epoch"). Thread-safe: loader workers
+//! populate it concurrently while the training loop reads. Samples are
+//! shared via `Arc` so a cache hit never copies payload bytes.
+//!
+//! An optional LRU eviction mode exists for the *partial-cache* experiments
+//! (paper §III-C discusses caching "a partial subset locally"), but the
+//! locality-aware pipeline always runs insert-only, as the paper assumes.
+
+use crate::storage::Sample;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Eviction policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Insert until full, then reject (the paper's model).
+    InsertOnly,
+    /// Evict least-recently-inserted when full (partial-cache studies).
+    Fifo,
+}
+
+struct Inner {
+    map: HashMap<u32, Arc<Sample>>,
+    fifo: VecDeque<u32>,
+    bytes: u64,
+}
+
+/// A learner's local sample cache.
+pub struct SampleCache {
+    inner: Mutex<Inner>,
+    capacity_bytes: u64,
+    policy: Policy,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SampleCache {
+    pub fn new(capacity_bytes: u64, policy: Policy) -> Self {
+        SampleCache {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                fifo: VecDeque::new(),
+                bytes: 0,
+            }),
+            capacity_bytes,
+            policy,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Insert a sample. Returns `false` if rejected (InsertOnly + full).
+    pub fn insert(&self, sample: Arc<Sample>) -> bool {
+        let sz = sample.size() as u64;
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.contains_key(&sample.id) {
+            return true; // already cached; idempotent
+        }
+        if inner.bytes + sz > self.capacity_bytes {
+            match self.policy {
+                Policy::InsertOnly => return false,
+                Policy::Fifo => {
+                    while inner.bytes + sz > self.capacity_bytes {
+                        match inner.fifo.pop_front() {
+                            Some(old) => {
+                                if let Some(s) = inner.map.remove(&old) {
+                                    inner.bytes -= s.size() as u64;
+                                }
+                            }
+                            None => return false, // sample bigger than cache
+                        }
+                    }
+                }
+            }
+        }
+        inner.bytes += sz;
+        inner.fifo.push_back(sample.id);
+        inner.map.insert(sample.id, sample);
+        true
+    }
+
+    /// Look up a sample; counts hit/miss metrics.
+    pub fn get(&self, id: u32) -> Option<Arc<Sample>> {
+        let inner = self.inner.lock().unwrap();
+        match inner.map.get(&id) {
+            Some(s) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(s))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Peek without touching hit/miss counters.
+    pub fn contains(&self, id: u32) -> bool {
+        self.inner.lock().unwrap().map.contains_key(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.inner.lock().unwrap().bytes
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits() as f64;
+        let m = self.misses() as f64;
+        if h + m == 0.0 { 0.0 } else { h / (h + m) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(id: u32, size: usize) -> Arc<Sample> {
+        Arc::new(Sample { id, bytes: vec![id as u8; size], label: 0 })
+    }
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let c = SampleCache::new(1024, Policy::InsertOnly);
+        assert!(c.insert(sample(1, 100)));
+        assert!(c.insert(sample(2, 100)));
+        assert_eq!(c.get(1).unwrap().bytes, vec![1u8; 100]);
+        assert!(c.get(3).is_none());
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+        assert_eq!(c.bytes(), 200);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn insert_only_rejects_when_full() {
+        let c = SampleCache::new(250, Policy::InsertOnly);
+        assert!(c.insert(sample(1, 100)));
+        assert!(c.insert(sample(2, 100)));
+        assert!(!c.insert(sample(3, 100)), "must reject past capacity");
+        assert_eq!(c.len(), 2);
+        // The earlier entries survive.
+        assert!(c.contains(1));
+        assert!(c.contains(2));
+    }
+
+    #[test]
+    fn duplicate_insert_is_idempotent() {
+        let c = SampleCache::new(1000, Policy::InsertOnly);
+        assert!(c.insert(sample(7, 100)));
+        assert!(c.insert(sample(7, 100)));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), 100);
+    }
+
+    #[test]
+    fn fifo_evicts_oldest() {
+        let c = SampleCache::new(300, Policy::Fifo);
+        assert!(c.insert(sample(1, 100)));
+        assert!(c.insert(sample(2, 100)));
+        assert!(c.insert(sample(3, 100)));
+        assert!(c.insert(sample(4, 100))); // evicts 1
+        assert!(!c.contains(1));
+        assert!(c.contains(2) && c.contains(3) && c.contains(4));
+        assert_eq!(c.bytes(), 300);
+    }
+
+    #[test]
+    fn oversized_sample_rejected_even_with_fifo() {
+        let c = SampleCache::new(100, Policy::Fifo);
+        assert!(!c.insert(sample(1, 200)));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn concurrent_population() {
+        let c = Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly));
+        let mut handles = Vec::new();
+        for t in 0..8u32 {
+            let c = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500u32 {
+                    c.insert(sample(t * 500 + i, 16));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.len(), 4000);
+        assert_eq!(c.bytes(), 4000 * 16);
+        for id in 0..4000u32 {
+            assert!(c.contains(id), "missing {id}");
+        }
+    }
+}

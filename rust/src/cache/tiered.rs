@@ -1,0 +1,288 @@
+//! Hierarchical (memory + SSD) sample cache — the paper's stated future
+//! work (§VIII: "explore using SSD which provides ample space and fast
+//! access, and is ideal for a hierarchical caching design") and the §III-C
+//! observation that "training datasets too large to fit in the local DRAM
+//! can be cached in SSDs".
+//!
+//! Two tiers, both insert-only (no replacement, per the paper's model):
+//!
+//! * **mem** — byte-capacity-bounded in-memory map (fast path);
+//! * **disk** — an append-only spill file with an in-memory index; reads
+//!   go through `read_at` and an optional simulated device latency, so the
+//!   DRAM-vs-SSD hierarchy of the paper is measurable in the live
+//!   pipeline.
+//!
+//! Thread-safe like [`SampleCache`]; the loader can use either tier
+//! transparently via [`TieredCache::get`].
+
+use crate::storage::Sample;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+struct MemTier {
+    map: HashMap<u32, std::sync::Arc<Sample>>,
+    bytes: u64,
+}
+
+#[derive(Clone, Copy)]
+struct DiskSlot {
+    offset: u64,
+    len: u32,
+    label: u16,
+}
+
+struct DiskTier {
+    index: HashMap<u32, DiskSlot>,
+    file: File,
+    cursor: u64,
+}
+
+/// Two-tier DRAM + SSD cache.
+pub struct TieredCache {
+    mem: Mutex<MemTier>,
+    disk: Mutex<DiskTier>,
+    mem_capacity: u64,
+    disk_capacity: u64,
+    /// Simulated device read latency per disk hit (0 for a real SSD).
+    disk_latency: Duration,
+    path: PathBuf,
+    mem_hits: AtomicU64,
+    disk_hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl TieredCache {
+    /// Create a tiered cache spilling to `spill_path` (truncated).
+    pub fn create(
+        spill_path: impl AsRef<Path>,
+        mem_capacity: u64,
+        disk_capacity: u64,
+        disk_latency: Duration,
+    ) -> Result<Self> {
+        let path = spill_path.as_ref().to_path_buf();
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .with_context(|| format!("create spill file {}", path.display()))?;
+        Ok(TieredCache {
+            mem: Mutex::new(MemTier { map: HashMap::new(), bytes: 0 }),
+            disk: Mutex::new(DiskTier {
+                index: HashMap::new(),
+                file,
+                cursor: 0,
+            }),
+            mem_capacity,
+            disk_capacity,
+            disk_latency,
+            path,
+            mem_hits: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        })
+    }
+
+    /// Insert a sample: memory first, spill to disk when memory is full.
+    /// Returns `false` only when *both* tiers are at capacity.
+    pub fn insert(&self, sample: std::sync::Arc<Sample>) -> Result<bool> {
+        let sz = sample.size() as u64;
+        {
+            let mut mem = self.mem.lock().unwrap();
+            if mem.map.contains_key(&sample.id) {
+                return Ok(true);
+            }
+            if mem.bytes + sz <= self.mem_capacity {
+                mem.bytes += sz;
+                mem.map.insert(sample.id, sample);
+                return Ok(true);
+            }
+        }
+        // Spill to the disk tier.
+        let mut disk = self.disk.lock().unwrap();
+        if disk.index.contains_key(&sample.id) {
+            return Ok(true);
+        }
+        if disk.cursor + sz > self.disk_capacity {
+            return Ok(false);
+        }
+        let offset = disk.cursor;
+        disk.file.write_all(&sample.bytes)?;
+        disk.cursor += sz;
+        disk.index.insert(
+            sample.id,
+            DiskSlot { offset, len: sample.bytes.len() as u32, label: sample.label },
+        );
+        Ok(true)
+    }
+
+    /// Look up a sample in either tier.
+    pub fn get(&self, id: u32) -> Result<Option<std::sync::Arc<Sample>>> {
+        if let Some(s) = self.mem.lock().unwrap().map.get(&id) {
+            self.mem_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Some(std::sync::Arc::clone(s)));
+        }
+        let slot = {
+            let disk = self.disk.lock().unwrap();
+            disk.index.get(&id).copied()
+        };
+        match slot {
+            Some(slot) => {
+                if !self.disk_latency.is_zero() {
+                    std::thread::sleep(self.disk_latency);
+                }
+                let mut bytes = vec![0u8; slot.len as usize];
+                // read_at needs no lock: writes only append past `offset`.
+                self.disk
+                    .lock()
+                    .unwrap()
+                    .file
+                    .read_exact_at(&mut bytes, slot.offset)?;
+                self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                Ok(Some(std::sync::Arc::new(Sample {
+                    id,
+                    bytes,
+                    label: slot.label,
+                })))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Ok(None)
+            }
+        }
+    }
+
+    pub fn contains(&self, id: u32) -> bool {
+        self.mem.lock().unwrap().map.contains_key(&id)
+            || self.disk.lock().unwrap().index.contains_key(&id)
+    }
+
+    pub fn mem_len(&self) -> usize {
+        self.mem.lock().unwrap().map.len()
+    }
+
+    pub fn disk_len(&self) -> usize {
+        self.disk.lock().unwrap().index.len()
+    }
+
+    pub fn mem_hits(&self) -> u64 {
+        self.mem_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn disk_hits(&self) -> u64 {
+        self.disk_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn spill_path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn sample(id: u32, size: usize) -> Arc<Sample> {
+        Arc::new(Sample { id, bytes: vec![(id % 251) as u8; size], label: id as u16 })
+    }
+
+    fn cache(mem: u64, disk: u64) -> TieredCache {
+        let p = std::env::temp_dir().join(format!(
+            "dlio-tier-{}-{:?}.spill",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        TieredCache::create(&p, mem, disk, Duration::ZERO).unwrap()
+    }
+
+    #[test]
+    fn memory_first_then_spill() {
+        let c = cache(250, 10_000);
+        assert!(c.insert(sample(1, 100)).unwrap());
+        assert!(c.insert(sample(2, 100)).unwrap());
+        assert!(c.insert(sample(3, 100)).unwrap()); // spills
+        assert_eq!(c.mem_len(), 2);
+        assert_eq!(c.disk_len(), 1);
+        // All three retrievable with correct bytes + labels.
+        for id in 1..=3u32 {
+            let s = c.get(id).unwrap().unwrap();
+            assert_eq!(s.bytes, vec![(id % 251) as u8; 100]);
+            assert_eq!(s.label, id as u16);
+        }
+        assert_eq!(c.mem_hits(), 2);
+        assert_eq!(c.disk_hits(), 1);
+    }
+
+    #[test]
+    fn both_tiers_full_rejects() {
+        let c = cache(100, 150);
+        assert!(c.insert(sample(1, 100)).unwrap()); // mem
+        assert!(c.insert(sample(2, 100)).unwrap()); // disk
+        assert!(!c.insert(sample(3, 100)).unwrap()); // both full
+        assert!(!c.contains(3));
+        assert_eq!(c.get(3).unwrap(), None);
+        assert_eq!(c.misses(), 1);
+    }
+
+    #[test]
+    fn duplicate_inserts_idempotent_across_tiers() {
+        let c = cache(100, 10_000);
+        assert!(c.insert(sample(1, 100)).unwrap());
+        assert!(c.insert(sample(1, 100)).unwrap());
+        assert!(c.insert(sample(2, 100)).unwrap()); // disk
+        assert!(c.insert(sample(2, 100)).unwrap());
+        assert_eq!(c.mem_len(), 1);
+        assert_eq!(c.disk_len(), 1);
+    }
+
+    #[test]
+    fn disk_latency_is_charged() {
+        let p = std::env::temp_dir()
+            .join(format!("dlio-tier-lat-{}.spill", std::process::id()));
+        let c = TieredCache::create(&p, 0, 10_000, Duration::from_millis(5))
+            .unwrap();
+        c.insert(sample(9, 64)).unwrap();
+        let t0 = std::time::Instant::now();
+        for _ in 0..4 {
+            c.get(9).unwrap().unwrap();
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(18));
+    }
+
+    #[test]
+    fn concurrent_mixed_tier_access() {
+        let c = Arc::new(cache(50 * 64, 100_000));
+        for id in 0..100u32 {
+            c.insert(sample(id, 64)).unwrap(); // 50 in mem, 50 on disk
+        }
+        assert_eq!(c.mem_len(), 50);
+        assert_eq!(c.disk_len(), 50);
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let c = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                for id in (t..100).step_by(4) {
+                    let s = c.get(id as u32).unwrap().unwrap();
+                    assert_eq!(s.bytes[0], (id % 251) as u8);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.mem_hits() + c.disk_hits(), 100);
+    }
+}

@@ -1,0 +1,183 @@
+//! Configuration system: a small dependency-free CLI argument parser plus
+//! typed option accessors, used by the `dlio` launcher, the examples and
+//! the bench binaries.
+//!
+//! Grammar: `dlio <subcommand> [--key value]... [--flag]...`
+//! Every option also has an environment fallback `DLIO_<KEY>` (upper-cased,
+//! dashes → underscores) so benches can be tuned without editing code.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token = subcommand unless
+    /// it starts with `--`).
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = items.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                // `--key=value` or `--key value` or boolean flag.
+                if let Some((k, v)) = key.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    args.opts.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> Result<Args> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    fn lookup(&self, key: &str) -> Option<String> {
+        if let Some(v) = self.opts.get(key) {
+            return Some(v.clone());
+        }
+        let env_key =
+            format!("DLIO_{}", key.to_ascii_uppercase().replace('-', "_"));
+        std::env::var(env_key).ok()
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.lookup(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.lookup(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.lookup(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().with_context(|| format!("--{key} {v:?}: not an integer"))
+            }
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.lookup(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().with_context(|| format!("--{key} {v:?}: not an integer"))
+            }
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.lookup(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().with_context(|| format!("--{key} {v:?}: not a number"))
+            }
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+            || std::env::var(format!(
+                "DLIO_{}",
+                key.to_ascii_uppercase().replace('-', "_")
+            ))
+            .map(|v| v == "1" || v == "true")
+            .unwrap_or(false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Comma-separated list of integers ("2,4,8").
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.lookup(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .with_context(|| format!("--{key}: bad item {t:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train --p 4 --epochs=3 --verbose --dir /tmp/x");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize_or("p", 1).unwrap(), 4);
+        assert_eq!(a.usize_or("epochs", 1).unwrap(), 3);
+        assert_eq!(a.str_or("dir", ""), "/tmp/x");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("sim");
+        assert_eq!(a.usize_or("nodes", 16).unwrap(), 16);
+        assert_eq!(a.f64_or("alpha", 1.0).unwrap(), 1.0);
+        assert_eq!(a.str_or("sampler", "loc"), "loc");
+    }
+
+    #[test]
+    fn lists_parse() {
+        let a = parse("sim --nodes 2,8, 32");
+        // note: "2,8," with trailing item "32" positional — keep simple:
+        let b = parse("sim --nodes 2,8,32");
+        assert_eq!(b.usize_list_or("nodes", &[]).unwrap(), vec![2, 8, 32]);
+        assert!(a.usize_list_or("nodes", &[]).is_err() || !a.positional().is_empty());
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("x --p nope");
+        assert!(a.usize_or("p", 1).is_err());
+    }
+
+    #[test]
+    fn no_subcommand_when_leading_flag() {
+        let a = parse("--p 3");
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.usize_or("p", 0).unwrap(), 3);
+    }
+}

@@ -1,0 +1,178 @@
+//! Step-synchronous gradient all-reduce rendezvous.
+//!
+//! In-process realization of paper §II-A steps 5–6: every learner deposits
+//! its local gradient vector; the last arrival reduces them in a *fixed
+//! order* (learner 0 upward — results are bit-identical run to run),
+//! divides by p (equal local batches ⇒ mean-of-means is the global mean),
+//! charges the fabric's ring-all-reduce cost, and publishes the result to
+//! all learners.
+//!
+//! The time a learner spends blocked here is the paper's synchronization /
+//! straggler time.
+
+use crate::net::Fabric;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct State {
+    generation: u64,
+    slots: Vec<Option<Vec<f32>>>,
+    arrived: usize,
+    result: Option<Arc<Vec<f32>>>,
+}
+
+/// Reusable p-way gradient combiner.
+pub struct GradSync {
+    p: usize,
+    fabric: Arc<Fabric>,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl GradSync {
+    pub fn new(p: usize, fabric: Arc<Fabric>) -> Self {
+        GradSync {
+            p,
+            fabric,
+            state: Mutex::new(State {
+                generation: 0,
+                slots: vec![None; p],
+                arrived: 0,
+                result: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Deposit `grad` for `learner`; block until every learner of this
+    /// step has arrived; return the averaged global gradient.
+    pub fn sync(&self, learner: usize, grad: Vec<f32>) -> Arc<Vec<f32>> {
+        let mut st = self.state.lock().unwrap();
+        let my_gen = st.generation;
+        assert!(st.slots[learner].is_none(), "learner {learner} double-sync");
+        st.slots[learner] = Some(grad);
+        st.arrived += 1;
+
+        if st.arrived == self.p {
+            // Last arrival performs the reduction in deterministic order.
+            let n = st.slots[0].as_ref().unwrap().len();
+            let mut acc = vec![0.0f32; n];
+            for slot in st.slots.iter_mut() {
+                let g = slot.take().expect("missing gradient slot");
+                assert_eq!(g.len(), n, "gradient length mismatch");
+                for (a, x) in acc.iter_mut().zip(&g) {
+                    *a += x;
+                }
+            }
+            let inv = 1.0 / self.p as f32;
+            for a in acc.iter_mut() {
+                *a *= inv;
+            }
+            // Charge the modeled collective cost (once per step).
+            let cost = self.fabric.allreduce_cost((n * 4) as u64, self.p);
+            if self.fabric.config().real_time {
+                std::thread::sleep(cost);
+            }
+            st.result = Some(Arc::new(acc));
+            st.generation += 1;
+            st.arrived = 0;
+            self.cv.notify_all();
+            return Arc::clone(st.result.as_ref().unwrap());
+        }
+
+        // Wait for this generation to complete.
+        while st.generation == my_gen {
+            st = self.cv.wait(st).unwrap();
+        }
+        Arc::clone(st.result.as_ref().expect("result published"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::FabricConfig;
+
+    fn sync_of(p: usize) -> Arc<GradSync> {
+        Arc::new(GradSync::new(
+            p,
+            Arc::new(Fabric::new(FabricConfig {
+                real_time: false,
+                ..Default::default()
+            })),
+        ))
+    }
+
+    #[test]
+    fn single_learner_passthrough_mean() {
+        let s = sync_of(1);
+        let out = s.sync(0, vec![2.0, 4.0]);
+        assert_eq!(*out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn averages_across_learners() {
+        let s = sync_of(3);
+        let mut handles = Vec::new();
+        for j in 0..3 {
+            let s = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                let g = vec![j as f32; 4];
+                s.sync(j, g)
+            }));
+        }
+        for h in handles {
+            let out = h.join().unwrap();
+            assert_eq!(*out, vec![1.0; 4]); // mean(0,1,2) = 1
+        }
+    }
+
+    #[test]
+    fn multiple_generations_reuse() {
+        let s = sync_of(2);
+        for step in 0..5 {
+            let a = Arc::clone(&s);
+            let b = Arc::clone(&s);
+            let base = step as f32;
+            let ha =
+                std::thread::spawn(move || a.sync(0, vec![base, base + 2.0]));
+            let hb =
+                std::thread::spawn(move || b.sync(1, vec![base + 1.0, base + 3.0]));
+            let ra = ha.join().unwrap();
+            let rb = hb.join().unwrap();
+            assert_eq!(*ra, *rb);
+            assert_eq!(*ra, vec![base + 0.5, base + 2.5]);
+        }
+    }
+
+    #[test]
+    fn reduction_order_is_deterministic() {
+        // Same inputs in different arrival orders -> identical bits.
+        let run = |order: &[usize]| -> Vec<f32> {
+            let s = sync_of(3);
+            let grads: Vec<Vec<f32>> = vec![
+                vec![0.1, 1e8, -1e8],
+                vec![0.2, -1e8, 1e8],
+                vec![0.3, 1.0, 2.0],
+            ];
+            let mut handles = Vec::new();
+            for &j in order {
+                let s = Arc::clone(&s);
+                let g = grads[j].clone();
+                handles.push(std::thread::spawn(move || s.sync(j, g)));
+                std::thread::sleep(std::time::Duration::from_millis(3));
+            }
+            let mut out = Vec::new();
+            for h in handles {
+                out = (*h.join().unwrap()).clone();
+            }
+            out
+        };
+        let a = run(&[0, 1, 2]);
+        let b = run(&[2, 0, 1]);
+        assert_eq!(a, b, "reduction must not depend on arrival order");
+    }
+}

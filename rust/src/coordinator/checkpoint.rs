@@ -1,0 +1,140 @@
+//! Model checkpointing: persist/restore the parameter set so training
+//! jobs survive restarts — table-stakes for a framework the paper's users
+//! would deploy (the paper trains 90-epoch ImageNet jobs).
+//!
+//! Format (little-endian):
+//! ```text
+//! [0..8)   magic "DLCKPT01"
+//! [8..16)  epoch u64
+//! [16..24) step  u64
+//! [24..28) n_tensors u32
+//! then per tensor: ndims u32 | dims u64... | payload f32...
+//! ```
+
+use crate::runtime::HostTensor;
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"DLCKPT01";
+
+/// A saved training state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub epoch: u64,
+    pub step: u64,
+    pub params: Vec<HostTensor>,
+}
+
+impl Checkpoint {
+    /// Atomically write to `path` (tmp file + rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(
+                std::fs::File::create(&tmp)
+                    .with_context(|| format!("create {}", tmp.display()))?,
+            );
+            f.write_all(MAGIC)?;
+            f.write_all(&self.epoch.to_le_bytes())?;
+            f.write_all(&self.step.to_le_bytes())?;
+            f.write_all(&(self.params.len() as u32).to_le_bytes())?;
+            for t in &self.params {
+                f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+                for &d in &t.shape {
+                    f.write_all(&(d as u64).to_le_bytes())?;
+                }
+                f.write_all(&t.byte_view())?;
+            }
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename to {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: not a dlio checkpoint", path.display());
+        }
+        let mut u64buf = [0u8; 8];
+        f.read_exact(&mut u64buf)?;
+        let epoch = u64::from_le_bytes(u64buf);
+        f.read_exact(&mut u64buf)?;
+        let step = u64::from_le_bytes(u64buf);
+        let mut u32buf = [0u8; 4];
+        f.read_exact(&mut u32buf)?;
+        let n = u32::from_le_bytes(u32buf);
+        ensure!(n <= 4096, "unreasonable tensor count {n}");
+        let mut params = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            f.read_exact(&mut u32buf)?;
+            let ndims = u32::from_le_bytes(u32buf) as usize;
+            ensure!(ndims <= 8, "unreasonable rank {ndims}");
+            let mut shape = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                f.read_exact(&mut u64buf)?;
+                shape.push(u64::from_le_bytes(u64buf) as usize);
+            }
+            let count: usize = shape.iter().product();
+            let mut raw = vec![0u8; count * 4];
+            f.read_exact(&mut raw)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            params.push(HostTensor::f32(shape, data));
+        }
+        Ok(Checkpoint { epoch, step, params })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensors() -> Vec<HostTensor> {
+        vec![
+            HostTensor::f32(vec![3, 4], (0..12).map(|i| i as f32 * 0.5).collect()),
+            HostTensor::f32(vec![5], vec![-1.0, 2.5, 0.0, f32::MIN, f32::MAX]),
+            HostTensor::f32(vec![], vec![42.0]),
+        ]
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let path = std::env::temp_dir()
+            .join(format!("dlio-ckpt-{}.bin", std::process::id()));
+        let ck = Checkpoint { epoch: 7, step: 123, params: tensors() };
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir()
+            .join(format!("dlio-ckpt-bad-{}.bin", std::process::id()));
+        std::fs::write(&path, b"NOTACKPT________").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn save_is_atomic_no_tmp_left() {
+        let path = std::env::temp_dir()
+            .join(format!("dlio-ckpt-atomic-{}.bin", std::process::id()));
+        let ck = Checkpoint { epoch: 0, step: 0, params: tensors() };
+        ck.save(&path).unwrap();
+        assert!(!path.with_extension("tmp").exists());
+        assert!(path.exists());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,600 @@
+//! L3 coordinator: the distributed training driver.
+//!
+//! Runs `p` learners as threads (the in-process stand-in for the paper's
+//! MPI ranks — DESIGN.md §3) executing synchronous mini-batch SGD exactly
+//! as §II-A prescribes:
+//!
+//! 1. every learner derives the same global mini-batch sequence
+//!    ([`sampler::GlobalShuffler`]),
+//! 2. partitions it — **Reg** (even block slices) or **Loc**
+//!    (locality-aware claims + Algorithm 1 balancing),
+//! 3. loads its share through its own multi-worker prefetching [`Loader`],
+//! 4. computes local gradients with the compiled `grad{B}` program,
+//! 5. all-reduces via [`GradSync`] (fabric-cost-charged),
+//! 6. applies the same global gradient with the compiled `sgd` program.
+//!
+//! Epoch 0 in Loc mode populates the caches on-the-fly (the paper's
+//! first-epoch population); the cache directory is frozen afterwards
+//! (no replacement), keeping every learner's partition computation
+//! consistent without communication.
+//!
+//! [`sampler::GlobalShuffler`]: crate::sampler::GlobalShuffler
+//! [`Loader`]: crate::loader::Loader
+
+pub mod allreduce;
+pub mod checkpoint;
+
+pub use allreduce::GradSync;
+pub use checkpoint::Checkpoint;
+
+use crate::cache::{CacheDirectory, Policy, SampleCache};
+use crate::loader::{BatchRequest, FetchContext, Loader, LoaderConfig};
+use crate::metrics::{EpochReport, LoadCounters, LoadSnapshot};
+use crate::net::Fabric;
+use crate::runtime::{Engine, HostTensor};
+use crate::sampler::{loc_partition, reg_partition, EpochPlan, GlobalShuffler};
+use crate::storage::StorageSystem;
+use anyhow::{ensure, Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier, Mutex, RwLock};
+use std::time::Instant;
+
+/// Which loading scheme the learners run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// Conventional even block slices (the paper's baseline, Fig. 4).
+    Reg,
+    /// Distributed caching (§III-C): block slices, but samples are served
+    /// from the aggregated cache — mostly *remote* hits over the fabric
+    /// ((p−1)/p of the slice), storage only for misses.
+    DistCache,
+    /// Locality-aware claims + Algorithm 1 balancing (Fig. 5, §V).
+    Loc,
+}
+
+/// Trainer configuration.
+#[derive(Clone, Debug)]
+pub struct TrainerConfig {
+    pub p: usize,
+    pub epochs: u64,
+    /// Per-learner batch; must be one of the compiled batch sizes.
+    pub local_batch: usize,
+    pub lr: f32,
+    pub sampler: SamplerKind,
+    pub loader: LoaderConfig,
+    pub seed: u64,
+    /// Per-learner cache capacity; 0 disables caching (pure Reg baseline).
+    pub cache_capacity_bytes: u64,
+    pub flip_prob: f64,
+    pub decode_s_per_kib: f64,
+    /// Samples held out for the final validation pass (the LAST
+    /// `eval_samples` of the dataset are excluded from training and used
+    /// as the validation split; rounded down to a multiple of
+    /// `local_batch`; 0 = skip).
+    pub eval_samples: usize,
+    /// If set, the final parameters are checkpointed here (atomic write).
+    pub checkpoint_path: Option<std::path::PathBuf>,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            p: 2,
+            epochs: 2,
+            local_batch: 16,
+            lr: 0.05,
+            sampler: SamplerKind::Loc,
+            loader: LoaderConfig::default(),
+            seed: 42,
+            cache_capacity_bytes: u64::MAX,
+            flip_prob: 0.5,
+            decode_s_per_kib: 0.0,
+            eval_samples: 0,
+            checkpoint_path: None,
+        }
+    }
+}
+
+impl TrainerConfig {
+    pub fn global_batch(&self) -> usize {
+        self.p * self.local_batch
+    }
+}
+
+/// Result of a training run.
+#[derive(Debug)]
+pub struct TrainingReport {
+    pub epochs: Vec<EpochReport>,
+    /// Global mean loss per step (identical on all learners).
+    pub step_losses: Vec<f32>,
+    pub final_accuracy: Option<f64>,
+    /// Learner 0's final parameters.
+    pub params: Vec<HostTensor>,
+    /// Per-learner parameter checksums — equal iff learners stayed in sync.
+    pub param_checksums: Vec<f64>,
+    /// Mean seconds per grad execution (the measured V feed for the DES).
+    pub mean_grad_exec_s: f64,
+}
+
+impl TrainingReport {
+    pub fn total_storage_bytes(&self) -> u64 {
+        self.epochs.iter().map(|e| e.load.storage_bytes).sum()
+    }
+
+    pub fn total_remote_bytes(&self) -> u64 {
+        self.epochs.iter().map(|e| e.load.remote_bytes).sum()
+    }
+
+    pub fn learners_in_sync(&self) -> bool {
+        self.param_checksums
+            .windows(2)
+            .all(|w| (w[0] - w[1]).abs() < 1e-3)
+    }
+}
+
+#[derive(Clone, Default)]
+struct EpochAccum {
+    wait_s: f64,
+    train_s: f64,
+    sync_s: f64,
+    load: LoadSnapshot,
+    balance_moves: u64,
+    loss_sum: f64,
+    loss_n: u64,
+    epoch_time_s: f64,
+    steps: usize,
+}
+
+fn add_snap(a: &mut LoadSnapshot, d: &LoadSnapshot) {
+    a.storage_bytes += d.storage_bytes;
+    a.remote_bytes += d.remote_bytes;
+    a.local_hits += d.local_hits;
+    a.remote_hits += d.remote_hits;
+    a.storage_loads += d.storage_loads;
+    a.decode_s += d.decode_s;
+    a.preprocess_s += d.preprocess_s;
+    a.fetch_s += d.fetch_s;
+}
+
+fn flatten(tensors: &[HostTensor], extra: f32) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    for t in tensors {
+        out.extend_from_slice(t.as_f32()?);
+    }
+    out.push(extra);
+    Ok(out)
+}
+
+/// The training coordinator.
+pub struct Trainer {
+    engine: Arc<Engine>,
+    storage: Arc<StorageSystem>,
+    fabric: Arc<Fabric>,
+    cfg: TrainerConfig,
+}
+
+impl Trainer {
+    pub fn new(
+        engine: Arc<Engine>,
+        storage: Arc<StorageSystem>,
+        fabric: Arc<Fabric>,
+        cfg: TrainerConfig,
+    ) -> Result<Trainer> {
+        ensure!(cfg.p > 0, "p must be positive");
+        ensure!(
+            cfg.epochs > 0,
+            "need at least one epoch (epoch 0 populates caches)"
+        );
+        ensure!(
+            engine
+                .manifest()
+                .geometry
+                .batch_sizes
+                .contains(&cfg.local_batch),
+            "local batch {} is not a compiled variant {:?}",
+            cfg.local_batch,
+            engine.manifest().geometry.batch_sizes
+        );
+        ensure!(
+            storage.n_samples()
+                >= cfg.global_batch() as u64 + cfg.eval_samples as u64 / 2,
+            "dataset ({} samples) smaller than one global batch ({}) plus \
+             the held-out split",
+            storage.n_samples(),
+            cfg.global_batch()
+        );
+        Ok(Trainer { engine, storage, fabric, cfg })
+    }
+
+    /// Run the full training job; blocks until done.
+    pub fn run(&self) -> Result<TrainingReport> {
+        let cfg = &self.cfg;
+        let p = cfg.p;
+        let n = self.storage.n_samples();
+        // Hold out the tail of the dataset as the validation split.
+        let eval_n = (cfg.eval_samples / cfg.local_batch * cfg.local_batch)
+            .min(n as usize / 2) as u64;
+        let train_n = n - eval_n;
+        let shuffler = GlobalShuffler::new(cfg.seed, train_n);
+
+        // Shared distributed state.
+        let caches: Vec<Arc<SampleCache>> = (0..p)
+            .map(|_| {
+                Arc::new(SampleCache::new(
+                    cfg.cache_capacity_bytes,
+                    Policy::InsertOnly,
+                ))
+            })
+            .collect();
+        let directory = Arc::new(RwLock::new(CacheDirectory::new(n)));
+        let populate = Arc::new(AtomicBool::new(
+            cfg.cache_capacity_bytes > 0 && cfg.sampler != SamplerKind::Reg,
+        ));
+        let sync = Arc::new(GradSync::new(p, Arc::clone(&self.fabric)));
+        let barrier = Arc::new(Barrier::new(p));
+        let accums = Arc::new(Mutex::new(vec![
+            EpochAccum::default();
+            cfg.epochs as usize
+        ]));
+        let step_losses: Arc<Mutex<Vec<f32>>> = Arc::new(Mutex::new(Vec::new()));
+
+        // Pre-compile the programs every learner needs (avoids p racing
+        // compilations of the same HLO).
+        let grad_name = format!("grad{}", cfg.local_batch);
+        let pre_name = format!("preprocess{}", cfg.local_batch);
+        let grad_prog = self.engine.program(&grad_name)?;
+        let pre_prog = self.engine.program(&pre_name)?;
+        let sgd_prog = self.engine.program("sgd")?;
+        let init_params = self.engine.initial_params()?;
+
+        let outcomes: Vec<Result<(Vec<HostTensor>, f64)>> =
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for j in 0..p {
+                    let caches = caches.clone();
+                    let directory = Arc::clone(&directory);
+                    let populate = Arc::clone(&populate);
+                    let sync = Arc::clone(&sync);
+                    let barrier = Arc::clone(&barrier);
+                    let accums = Arc::clone(&accums);
+                    let step_losses = Arc::clone(&step_losses);
+                    let storage = Arc::clone(&self.storage);
+                    let fabric = Arc::clone(&self.fabric);
+                    let shuffler = shuffler.clone();
+                    let grad_prog = Arc::clone(&grad_prog);
+                    let pre_prog = Arc::clone(&pre_prog);
+                    let sgd_prog = Arc::clone(&sgd_prog);
+                    let params = init_params.clone();
+                    handles.push(scope.spawn(move || {
+                        learner_loop(LearnerEnv {
+                            j,
+                            cfg: self.cfg.clone(),
+                            storage,
+                            caches,
+                            directory,
+                            populate,
+                            fabric,
+                            sync,
+                            barrier,
+                            accums,
+                            step_losses,
+                            shuffler,
+                            grad_prog,
+                            pre_prog,
+                            sgd_prog,
+                            params,
+                        })
+                    }));
+                }
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+
+        let mut params0 = None;
+        let mut checksums = Vec::with_capacity(p);
+        for (j, o) in outcomes.into_iter().enumerate() {
+            let (params, checksum) =
+                o.with_context(|| format!("learner {j} failed"))?;
+            if j == 0 {
+                params0 = Some(params);
+            }
+            checksums.push(checksum);
+        }
+        let params0 = params0.unwrap();
+
+        if let Some(path) = &cfg.checkpoint_path {
+            Checkpoint {
+                epoch: cfg.epochs,
+                step: cfg.epochs * self.epoch_steps(train_n),
+                params: params0.clone(),
+            }
+            .save(path)?;
+        }
+
+        // Final validation pass over the held-out split (direct storage
+        // reads; never touched during training).
+        let final_accuracy = if eval_n > 0 {
+            Some(self.evaluate(&params0, train_n as u32, eval_n as usize)?)
+        } else {
+            None
+        };
+
+        let accums = Arc::try_unwrap(accums).ok().unwrap().into_inner().unwrap();
+        let epochs = accums
+            .into_iter()
+            .enumerate()
+            .map(|(e, a)| EpochReport {
+                epoch: e as u64,
+                steps: a.steps,
+                epoch_time_s: a.epoch_time_s,
+                wait_time_s: a.wait_s / p as f64,
+                train_time_s: a.train_s / p as f64,
+                sync_time_s: a.sync_s / p as f64,
+                load: a.load,
+                mean_loss: if a.loss_n > 0 {
+                    a.loss_sum / a.loss_n as f64
+                } else {
+                    f64::NAN
+                },
+                accuracy: None,
+                balance_moves: a.balance_moves,
+            })
+            .collect();
+
+        Ok(TrainingReport {
+            epochs,
+            step_losses: Arc::try_unwrap(step_losses)
+                .ok()
+                .unwrap()
+                .into_inner()
+                .unwrap(),
+            final_accuracy,
+            params: params0,
+            param_checksums: checksums,
+            mean_grad_exec_s: grad_prog.mean_exec_s(),
+        })
+    }
+
+    fn epoch_steps(&self, train_n: u64) -> u64 {
+        train_n / self.cfg.global_batch() as u64
+    }
+
+    /// Validation accuracy of `params` over `count` held-out samples
+    /// starting at id `start` (Table I reproduction).
+    pub fn evaluate(&self, params: &[HostTensor], start: u32, count: usize) -> Result<f64> {
+        let b = self.cfg.local_batch;
+        let eval_prog = self.engine.program(&format!("eval{b}"))?;
+        let pre_prog = self.engine.program(&format!("preprocess{b}"))?;
+        let geo = self.engine.manifest().geometry.clone();
+        let rb = geo.img.0 * geo.img.1 * geo.img.2;
+        let n = count / b * b;
+        let mut correct = 0.0f64;
+        let mut seen = 0usize;
+        for lo in (0..n).step_by(b) {
+            let mut x_u8 = vec![0u8; b * rb];
+            let mut labels = vec![0i32; b];
+            for i in 0..b {
+                let s = self.storage.read_sample(start + (lo + i) as u32)?;
+                x_u8[i * rb..(i + 1) * rb].copy_from_slice(&s.bytes);
+                labels[i] = s.label as i32;
+            }
+            let pre = pre_prog.run(&[
+                HostTensor::u8(vec![b, geo.img.0, geo.img.1, geo.img.2], x_u8),
+                HostTensor::f32(vec![b], vec![0.0; b]),
+            ])?;
+            let mut args: Vec<HostTensor> = params.to_vec();
+            args.push(pre.into_iter().next().unwrap());
+            args.push(HostTensor::i32(vec![b], labels));
+            let out = eval_prog.run(&args)?;
+            correct += out[1].scalar()? as f64;
+            seen += b;
+        }
+        Ok(if seen == 0 { 0.0 } else { correct / seen as f64 })
+    }
+}
+
+struct LearnerEnv {
+    j: usize,
+    cfg: TrainerConfig,
+    storage: Arc<StorageSystem>,
+    caches: Vec<Arc<SampleCache>>,
+    directory: Arc<RwLock<CacheDirectory>>,
+    populate: Arc<AtomicBool>,
+    fabric: Arc<Fabric>,
+    sync: Arc<GradSync>,
+    barrier: Arc<Barrier>,
+    accums: Arc<Mutex<Vec<EpochAccum>>>,
+    step_losses: Arc<Mutex<Vec<f32>>>,
+    shuffler: GlobalShuffler,
+    grad_prog: Arc<crate::runtime::Program>,
+    pre_prog: Arc<crate::runtime::Program>,
+    sgd_prog: Arc<crate::runtime::Program>,
+    params: Vec<HostTensor>,
+}
+
+/// One learner's whole-job loop.
+fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
+    let LearnerEnv {
+        j,
+        cfg,
+        storage,
+        caches,
+        directory,
+        populate,
+        fabric,
+        sync,
+        barrier,
+        accums,
+        step_losses,
+        shuffler,
+        grad_prog,
+        pre_prog,
+        sgd_prog,
+        mut params,
+    } = env;
+    let p = cfg.p;
+    let counters = Arc::new(LoadCounters::new());
+    let record_bytes = storage.meta().record_bytes();
+    let n_params = params.len();
+
+    for epoch in 0..cfg.epochs {
+        // A fresh loader per epoch: FetchContext.cache_on_load captures the
+        // population flag, which flips after epoch 0.
+        let ctx = Arc::new(FetchContext {
+            learner: j,
+            storage: Arc::clone(&storage),
+            caches: caches.clone(),
+            directory: Arc::clone(&directory),
+            fabric: Arc::clone(&fabric),
+            cache_on_load: populate.load(Ordering::SeqCst),
+            decode_s_per_kib: cfg.decode_s_per_kib,
+            counters: Arc::clone(&counters),
+        });
+        let loader = Loader::spawn(
+            cfg.loader,
+            Arc::clone(&ctx),
+            record_bytes,
+            Some(Arc::clone(&pre_prog)),
+            cfg.seed,
+            cfg.flip_prob,
+        );
+
+        let plan = EpochPlan::new(&shuffler, epoch, cfg.global_batch());
+        let steps = plan.steps();
+        let use_loc = cfg.sampler == SamplerKind::Loc && epoch > 0;
+        let mut balance_moves = 0u64;
+
+        // Assignment for a given step (deterministic on every learner).
+        let assignment = |step: usize| -> (Vec<u32>, u64) {
+            let mb = plan.batch(step);
+            if use_loc {
+                let dir = directory.read().unwrap();
+                let (parts, stats) = loc_partition(mb.sample_ids, &dir, p);
+                (parts[j].sample_ids.clone(), stats.balance_moves as u64)
+            } else {
+                (reg_partition(mb.sample_ids, p)[j].sample_ids.clone(), 0)
+            }
+        };
+
+        let load_before = counters.snapshot();
+        barrier.wait();
+        let epoch_t0 = Instant::now();
+
+        // Prime the prefetch window.
+        let window = cfg.loader.prefetch_batches.max(1).min(steps);
+        for s in 0..window {
+            let (ids, _) = assignment(s);
+            loader.submit(BatchRequest { epoch, step: s as u64, ids })?;
+        }
+
+        let (mut wait_s, mut train_s, mut sync_s) = (0.0f64, 0.0f64, 0.0f64);
+        for step in 0..steps {
+            let t_wait = Instant::now();
+            let batch = loader.next(step as u64)?;
+            wait_s += t_wait.elapsed().as_secs_f64();
+            // Keep the window full.
+            if step + window < steps {
+                let (ids, _) = assignment(step + window);
+                loader.submit(BatchRequest {
+                    epoch,
+                    step: (step + window) as u64,
+                    ids,
+                })?;
+            }
+            if use_loc {
+                // Count balancing traffic once (all learners compute the
+                // same stats; attribute to learner 0).
+                if j == 0 {
+                    balance_moves += assignment(step).1;
+                }
+            }
+
+            // Local gradient. Borrowed args: no 14-MiB parameter clone
+            // per step (§Perf).
+            let t_train = Instant::now();
+            let x = batch
+                .x_f32
+                .as_ref()
+                .context("loader must preprocess for training")?;
+            let y =
+                HostTensor::i32(vec![cfg.local_batch], batch.labels.clone());
+            let mut args: Vec<&HostTensor> = params.iter().collect();
+            args.push(x);
+            args.push(&y);
+            let gout = grad_prog.run_refs(&args)?;
+            let local_loss = gout[n_params].scalar()?;
+            let flat = flatten(&gout[..n_params], local_loss)?;
+            train_s += t_train.elapsed().as_secs_f64();
+
+            // Global gradient.
+            let t_sync = Instant::now();
+            let global = sync.sync(j, flat);
+            sync_s += t_sync.elapsed().as_secs_f64();
+            let mean_loss = *global.last().unwrap();
+            if j == 0 {
+                step_losses.lock().unwrap().push(mean_loss);
+            }
+
+            // Apply the same update everywhere.
+            let t_apply = Instant::now();
+            let mut cursor = 0usize;
+            let mut grad_tensors = Vec::with_capacity(n_params);
+            for t in &params {
+                let len = t.len();
+                grad_tensors.push(HostTensor::f32(
+                    t.shape.clone(),
+                    global[cursor..cursor + len].to_vec(),
+                ));
+                cursor += len;
+            }
+            let lr = HostTensor::scalar_f32(cfg.lr);
+            let mut sgd_args: Vec<&HostTensor> = params.iter().collect();
+            sgd_args.extend(grad_tensors.iter());
+            sgd_args.push(&lr);
+            let updated = sgd_prog.run_refs(&sgd_args)?;
+            params = updated;
+            train_s += t_apply.elapsed().as_secs_f64();
+        }
+
+        loader.shutdown();
+        let epoch_time = epoch_t0.elapsed().as_secs_f64();
+
+        // Merge this learner's epoch accounting.
+        {
+            let delta = counters.snapshot().delta(&load_before);
+            let mut acc = accums.lock().unwrap();
+            let a = &mut acc[epoch as usize];
+            a.wait_s += wait_s;
+            a.train_s += train_s;
+            a.sync_s += sync_s;
+            add_snap(&mut a.load, &delta);
+            a.balance_moves += balance_moves;
+            if j == 0 {
+                a.steps = steps;
+                a.epoch_time_s = epoch_time;
+                let losses = step_losses.lock().unwrap();
+                let tail = &losses[losses.len() - steps..];
+                a.loss_sum = tail.iter().map(|&l| l as f64).sum();
+                a.loss_n = steps as u64;
+            }
+        }
+
+        barrier.wait();
+        if j == 0 && epoch == 0 {
+            // Freeze the directory: no replacement after the first epoch.
+            populate.store(false, Ordering::SeqCst);
+        }
+        barrier.wait();
+    }
+
+    let checksum: f64 = params
+        .iter()
+        .map(|t| {
+            t.as_f32()
+                .unwrap()
+                .iter()
+                .map(|&x| x.abs() as f64)
+                .sum::<f64>()
+        })
+        .sum();
+    Ok((params, checksum))
+}

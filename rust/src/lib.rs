@@ -1,0 +1,35 @@
+//! # dlio — locality-aware data loading for distributed DNN training
+//!
+//! Production-grade reproduction of Yang & Cong, *Accelerating Data Loading
+//! in Deep Neural Network Training* (HiPC 2019). See `DESIGN.md` for the
+//! system inventory and the per-figure experiment index.
+//!
+//! Architecture (three layers, Python never on the request path):
+//!
+//! * **L3 (this crate)** — the coordination contribution: global shuffler,
+//!   Reg/Loc partitioners, software caches + cache directory, Algorithm 1
+//!   load balancer, multi-worker prefetching loader, learner/epoch training
+//!   driver, bandwidth-limited storage + interconnect substrates, a
+//!   discrete-event cluster simulator, and the analytic model of §IV.
+//! * **L2** — JAX model programs (`python/compile/model.py`), AOT-lowered to
+//!   HLO text under `artifacts/`.
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) called by L2.
+//!
+//! The [`runtime`] module loads the artifacts via the PJRT C API (`xla`
+//! crate) and executes them from the coordinator hot path.
+
+pub mod analytic;
+pub mod balance;
+pub mod bench;
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod loader;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod sampler;
+pub mod sim;
+pub mod storage;
+pub mod util;

@@ -1,0 +1,463 @@
+//! The optimized data loader (paper §III).
+//!
+//! Reproduces the paper's loader architecture in Rust:
+//!
+//! * **Multiprocessing** (§III-A) → a pool of `workers` OS threads, each
+//!   loading *whole batches* concurrently from a shared request queue
+//!   (PyTorch's worker processes; threads suffice here since Rust has no
+//!   GIL).
+//! * **Multithreading** (§III-B) → `threads_per_worker` scoped threads
+//!   parallelize the per-sample fetch+decode *within* a batch
+//!   (`ThreadPoolExecutor.map` in the paper's patched PyTorch loader).
+//!   `0` = the sequential baseline ("the default PyTorch data loader").
+//! * **Prefetching** → the bounded request queue: the consumer keeps up to
+//!   `prefetch_batches` requests outstanding; bounded capacity is the
+//!   backpressure.
+//! * **Preprocessing** → the AOT-compiled Pallas `preprocess{B}` program,
+//!   executed by the worker so it overlaps with training (and with other
+//!   workers' I/O).
+//!
+//! Batches complete out of order across workers and are re-sequenced by a
+//! [`Reorder`] buffer.
+
+pub mod fetch;
+pub mod reorder;
+
+pub use fetch::FetchContext;
+pub use reorder::Reorder;
+
+use crate::runtime::{HostTensor, Program};
+use crate::util::{Queue, Rng};
+use anyhow::{ensure, Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Loader tuning knobs (Fig. 7 sweeps `workers` × `threads_per_worker`).
+#[derive(Clone, Copy, Debug)]
+pub struct LoaderConfig {
+    pub workers: usize,
+    /// Intra-batch fetch/decode threads; 0 = sequential in the worker.
+    pub threads_per_worker: usize,
+    /// Max outstanding batch requests (prefetch depth).
+    pub prefetch_batches: usize,
+}
+
+impl Default for LoaderConfig {
+    fn default() -> Self {
+        LoaderConfig { workers: 2, threads_per_worker: 4, prefetch_batches: 4 }
+    }
+}
+
+/// A batch-loading request: which samples (in order) make up this step's
+/// local batch.
+#[derive(Clone, Debug)]
+pub struct BatchRequest {
+    pub epoch: u64,
+    pub step: u64,
+    pub ids: Vec<u32>,
+}
+
+/// A loaded (and optionally preprocessed) local batch.
+#[derive(Clone, Debug)]
+pub struct LoadedBatch {
+    pub epoch: u64,
+    pub step: u64,
+    pub ids: Vec<u32>,
+    /// Raw records, concatenated in `ids` order (`B * record_bytes`).
+    pub x_u8: Vec<u8>,
+    pub labels: Vec<i32>,
+    /// Augmentation flip mask drawn from the deterministic stream.
+    pub flip: Vec<f32>,
+    /// Preprocessed features if the loader ran the preprocess program.
+    pub x_f32: Option<HostTensor>,
+    /// Wall time the worker spent producing this batch.
+    pub load_time_s: f64,
+}
+
+impl LoadedBatch {
+    pub fn batch_size(&self) -> usize {
+        self.ids.len()
+    }
+}
+
+/// The multi-worker prefetching loader for one learner.
+pub struct Loader {
+    requests: Queue<BatchRequest>,
+    completed: Reorder<Result<LoadedBatch>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    batches_loaded: Arc<AtomicU64>,
+}
+
+/// Everything a worker needs (shared, immutable).
+struct WorkerShared {
+    ctx: Arc<FetchContext>,
+    preprocess: Option<Arc<Program>>,
+    record_bytes: usize,
+    threads: usize,
+    flip_seed: u64,
+    flip_prob: f64,
+}
+
+impl Loader {
+    /// Spawn the worker pool.
+    ///
+    /// * `ctx` — the learner's fetch context.
+    /// * `record_bytes` — fixed record size (checked per sample).
+    /// * `preprocess` — optional compiled `preprocess{B}` program; when
+    ///   given, every request's batch size must match its compiled shape.
+    /// * `flip_seed`/`flip_prob` — deterministic augmentation stream.
+    pub fn spawn(
+        cfg: LoaderConfig,
+        ctx: Arc<FetchContext>,
+        record_bytes: usize,
+        preprocess: Option<Arc<Program>>,
+        flip_seed: u64,
+        flip_prob: f64,
+    ) -> Loader {
+        assert!(cfg.workers > 0, "need at least one loader worker");
+        let requests: Queue<BatchRequest> =
+            Queue::bounded(cfg.prefetch_batches.max(1));
+        let completed: Reorder<Result<LoadedBatch>> = Reorder::new();
+        let batches_loaded = Arc::new(AtomicU64::new(0));
+        let shared = Arc::new(WorkerShared {
+            ctx,
+            preprocess,
+            record_bytes,
+            threads: cfg.threads_per_worker,
+            flip_seed,
+            flip_prob,
+        });
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for _ in 0..cfg.workers {
+            let rq = requests.clone();
+            let done = completed.clone();
+            let shared = Arc::clone(&shared);
+            let counter = Arc::clone(&batches_loaded);
+            workers.push(std::thread::spawn(move || {
+                while let Some(req) = rq.pop() {
+                    let step = req.step;
+                    let out = load_batch(&shared, req);
+                    counter.fetch_add(1, Ordering::Relaxed);
+                    done.put(step, out);
+                }
+            }));
+        }
+        Loader { requests, completed, workers, batches_loaded }
+    }
+
+    /// Submit a batch request (blocks when the prefetch window is full —
+    /// this is the backpressure).
+    pub fn submit(&self, req: BatchRequest) -> Result<()> {
+        self.requests
+            .push(req)
+            .map_err(|_| anyhow::anyhow!("loader is shut down"))
+    }
+
+    /// Block until the batch for `step` is ready.
+    pub fn next(&self, step: u64) -> Result<LoadedBatch> {
+        self.completed
+            .take(step)
+            .context("loader closed before batch completed")?
+    }
+
+    pub fn batches_loaded(&self) -> u64 {
+        self.batches_loaded.load(Ordering::Relaxed)
+    }
+
+    /// Drain and join the worker pool.
+    pub fn shutdown(self) {
+        self.requests.close();
+        for h in self.workers {
+            let _ = h.join();
+        }
+        self.completed.close();
+    }
+}
+
+/// Deterministic flip mask for (epoch, step): identical no matter which
+/// learner/worker draws it, so Reg and Loc see the same augmentations for
+/// the same sample (Theorem 1's "same sequence of random numbers").
+/// Keyed by *sample id* so assignment of samples to learners is irrelevant.
+fn flip_for(seed: u64, epoch: u64, sample: u32, prob: f64) -> f32 {
+    let mut rng =
+        Rng::new(seed).substream(0xF11F).substream(epoch).substream(sample as u64);
+    if rng.next_bool(prob) {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+fn load_batch(shared: &WorkerShared, req: BatchRequest) -> Result<LoadedBatch> {
+    let t0 = Instant::now();
+    let b = req.ids.len();
+    ensure!(b > 0, "empty batch request");
+    let rb = shared.record_bytes;
+    let mut x_u8 = vec![0u8; b * rb];
+    let mut labels = vec![0i32; b];
+
+    // Fetch + decode, optionally parallelized across scoped threads.
+    // Each thread owns disjoint chunks of the output buffers.
+    let nthreads = shared.threads.clamp(0, b);
+    if nthreads <= 1 {
+        for (i, &id) in req.ids.iter().enumerate() {
+            let s = shared.ctx.fetch(id)?;
+            ensure!(
+                s.bytes.len() == rb,
+                "sample {id}: {} bytes, expected {rb}",
+                s.bytes.len()
+            );
+            x_u8[i * rb..(i + 1) * rb].copy_from_slice(&s.bytes);
+            labels[i] = s.label as i32;
+        }
+    } else {
+        let ids = &req.ids;
+        let ctx = &shared.ctx;
+        let chunk = b.div_ceil(nthreads);
+        let x_chunks: Vec<&mut [u8]> = x_u8.chunks_mut(chunk * rb).collect();
+        let l_chunks: Vec<&mut [i32]> = labels.chunks_mut(chunk).collect();
+        let results: Vec<Result<()>> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (t, (xc, lc)) in
+                x_chunks.into_iter().zip(l_chunks).enumerate()
+            {
+                let lo = t * chunk;
+                handles.push(scope.spawn(move || -> Result<()> {
+                    for (i, lslot) in lc.iter_mut().enumerate() {
+                        let id = ids[lo + i];
+                        let s = ctx.fetch(id)?;
+                        ensure!(
+                            s.bytes.len() == rb,
+                            "sample {id}: {} bytes, expected {rb}",
+                            s.bytes.len()
+                        );
+                        xc[i * rb..(i + 1) * rb].copy_from_slice(&s.bytes);
+                        *lslot = s.label as i32;
+                    }
+                    Ok(())
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in results {
+            r?;
+        }
+    }
+
+    let flip: Vec<f32> = req
+        .ids
+        .iter()
+        .map(|&id| flip_for(shared.flip_seed, req.epoch, id, shared.flip_prob))
+        .collect();
+
+    // Preprocess via the compiled Pallas kernel (overlaps with training).
+    let x_f32 = match &shared.preprocess {
+        Some(prog) => {
+            let spec = &prog.spec().inputs[0];
+            ensure!(
+                spec.shape[0] == b,
+                "preprocess program compiled for B={}, request has B={b}",
+                spec.shape[0]
+            );
+            let tp0 = Instant::now();
+            let out = prog.run(&[
+                HostTensor::u8(spec.shape.clone(), x_u8.clone()),
+                HostTensor::f32(vec![b], flip.clone()),
+            ])?;
+            shared.ctx.counters.preprocess_ns.fetch_add(
+                tp0.elapsed().as_nanos() as u64,
+                Ordering::Relaxed,
+            );
+            Some(out.into_iter().next().unwrap())
+        }
+        None => None,
+    };
+
+    Ok(LoadedBatch {
+        epoch: req.epoch,
+        step: req.step,
+        ids: req.ids,
+        x_u8,
+        labels,
+        flip,
+        x_f32,
+        load_time_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{CacheDirectory, Policy, SampleCache};
+    use crate::metrics::LoadCounters;
+    use crate::net::{Fabric, FabricConfig};
+    use crate::storage::{generate, StorageSystem, SyntheticSpec};
+    use std::sync::RwLock;
+
+    fn make_ctx(n: u64, tag: &str) -> Arc<FetchContext> {
+        let dir = std::env::temp_dir()
+            .join(format!("dlio-loader-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        generate(&dir, &SyntheticSpec { n_samples: n, ..Default::default() })
+            .unwrap();
+        Arc::new(FetchContext {
+            learner: 0,
+            storage: Arc::new(StorageSystem::open(&dir, None).unwrap()),
+            caches: vec![Arc::new(SampleCache::new(
+                u64::MAX,
+                Policy::InsertOnly,
+            ))],
+            directory: Arc::new(RwLock::new(CacheDirectory::new(n))),
+            fabric: Arc::new(Fabric::new(FabricConfig {
+                real_time: false,
+                ..Default::default()
+            })),
+            cache_on_load: false,
+            decode_s_per_kib: 0.0,
+            counters: Arc::new(LoadCounters::new()),
+        })
+    }
+
+    fn run_loader(cfg: LoaderConfig, tag: &str) {
+        let ctx = make_ctx(256, tag);
+        let loader = Loader::spawn(cfg, Arc::clone(&ctx), 3072, None, 42, 0.5);
+        // Submit 8 batches of 16, consume in order.
+        for step in 0..8u64 {
+            let ids: Vec<u32> =
+                (0..16).map(|i| (step as u32 * 16 + i) % 256).collect();
+            loader.submit(BatchRequest { epoch: 0, step, ids }).unwrap();
+        }
+        for step in 0..8u64 {
+            let b = loader.next(step).unwrap();
+            assert_eq!(b.step, step);
+            assert_eq!(b.batch_size(), 16);
+            assert_eq!(b.x_u8.len(), 16 * 3072);
+            // Verify content: first sample's bytes match direct read.
+            let direct = ctx.storage.read_sample(b.ids[0]).unwrap();
+            assert_eq!(&b.x_u8[..3072], &direct.bytes[..]);
+            assert_eq!(b.labels[0], direct.label as i32);
+        }
+        assert_eq!(loader.batches_loaded(), 8);
+        loader.shutdown();
+    }
+
+    #[test]
+    fn single_worker_sequential() {
+        run_loader(
+            LoaderConfig { workers: 1, threads_per_worker: 0, prefetch_batches: 2 },
+            "w1t0",
+        );
+    }
+
+    #[test]
+    fn multi_worker_multi_thread() {
+        run_loader(
+            LoaderConfig { workers: 4, threads_per_worker: 4, prefetch_batches: 8 },
+            "w4t4",
+        );
+    }
+
+    #[test]
+    fn threads_exceeding_batch_are_clamped() {
+        run_loader(
+            LoaderConfig { workers: 2, threads_per_worker: 64, prefetch_batches: 4 },
+            "clamp",
+        );
+    }
+
+    #[test]
+    fn flip_mask_is_deterministic_and_mixed() {
+        let a = flip_for(1, 0, 42, 0.5);
+        let b = flip_for(1, 0, 42, 0.5);
+        assert_eq!(a, b);
+        let flips: Vec<f32> =
+            (0..200).map(|s| flip_for(1, 0, s, 0.5)).collect();
+        let ones = flips.iter().filter(|&&f| f == 1.0).count();
+        assert!(ones > 50 && ones < 150, "ones={ones}");
+        // Different epoch -> different draw somewhere.
+        let flips2: Vec<f32> =
+            (0..200).map(|s| flip_for(1, 1, s, 0.5)).collect();
+        assert_ne!(flips, flips2);
+    }
+
+    #[test]
+    fn bad_sample_id_surfaces_error() {
+        let ctx = make_ctx(32, "err");
+        let loader = Loader::spawn(
+            LoaderConfig::default(),
+            ctx,
+            3072,
+            None,
+            0,
+            0.0,
+        );
+        loader
+            .submit(BatchRequest { epoch: 0, step: 0, ids: vec![1000] })
+            .unwrap();
+        assert!(loader.next(0).is_err());
+        loader.shutdown();
+    }
+
+    #[test]
+    fn multithreading_speeds_up_decode_bound_loads() {
+        // With a simulated decode cost, 4 intra-batch threads should beat
+        // sequential by at least 2x on a 16-sample batch.
+        let mk = |threads: usize, tag: &str| -> f64 {
+            let dir = std::env::temp_dir()
+                .join(format!("dlio-mt-{tag}-{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&dir);
+            generate(
+                &dir,
+                &SyntheticSpec { n_samples: 64, ..Default::default() },
+            )
+            .unwrap();
+            let ctx = Arc::new(FetchContext {
+                learner: 0,
+                storage: Arc::new(StorageSystem::open(&dir, None).unwrap()),
+                caches: vec![Arc::new(SampleCache::new(
+                    u64::MAX,
+                    Policy::InsertOnly,
+                ))],
+                directory: Arc::new(RwLock::new(CacheDirectory::new(64))),
+                fabric: Arc::new(Fabric::new(FabricConfig {
+                    real_time: false,
+                    ..Default::default()
+                })),
+                cache_on_load: false,
+                decode_s_per_kib: 0.001, // 3ms per sample
+                counters: Arc::new(LoadCounters::new()),
+            });
+            let loader = Loader::spawn(
+                LoaderConfig {
+                    workers: 1,
+                    threads_per_worker: threads,
+                    prefetch_batches: 1,
+                },
+                ctx,
+                3072,
+                None,
+                0,
+                0.0,
+            );
+            let t0 = Instant::now();
+            loader
+                .submit(BatchRequest {
+                    epoch: 0,
+                    step: 0,
+                    ids: (0..16).collect(),
+                })
+                .unwrap();
+            loader.next(0).unwrap();
+            let dt = t0.elapsed().as_secs_f64();
+            loader.shutdown();
+            dt
+        };
+        let seq = mk(0, "seq");
+        let par = mk(4, "par");
+        assert!(
+            par < seq / 1.8,
+            "multithreading ineffective: seq={seq:.3}s par={par:.3}s"
+        );
+    }
+}

@@ -1,0 +1,116 @@
+//! Reorder buffer: loader workers complete batches out of order; the
+//! training loop consumes them strictly in step order.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Inner<T> {
+    ready: HashMap<u64, T>,
+    closed: bool,
+}
+
+/// Completion buffer keyed by step index.
+pub struct Reorder<T> {
+    inner: Arc<(Mutex<Inner<T>>, Condvar)>,
+}
+
+impl<T> Clone for Reorder<T> {
+    fn clone(&self) -> Self {
+        Reorder { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> Default for Reorder<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Reorder<T> {
+    pub fn new() -> Self {
+        Reorder {
+            inner: Arc::new((
+                Mutex::new(Inner { ready: HashMap::new(), closed: false }),
+                Condvar::new(),
+            )),
+        }
+    }
+
+    /// Deposit a completed item for `step`.
+    pub fn put(&self, step: u64, item: T) {
+        let (m, cv) = &*self.inner;
+        let mut inner = m.lock().unwrap();
+        let prev = inner.ready.insert(step, item);
+        assert!(prev.is_none(), "duplicate completion for step {step}");
+        cv.notify_all();
+    }
+
+    /// Block until `step`'s item is available. `None` if closed without it.
+    pub fn take(&self, step: u64) -> Option<T> {
+        let (m, cv) = &*self.inner;
+        let mut inner = m.lock().unwrap();
+        loop {
+            if let Some(item) = inner.ready.remove(&step) {
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = cv.wait(inner).unwrap();
+        }
+    }
+
+    /// Close: pending/future `take`s for missing steps return `None`.
+    pub fn close(&self) {
+        let (m, cv) = &*self.inner;
+        m.lock().unwrap().closed = true;
+        cv.notify_all();
+    }
+
+    pub fn pending(&self) -> usize {
+        self.inner.0.lock().unwrap().ready.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn out_of_order_completion_in_order_consumption() {
+        let r: Reorder<u64> = Reorder::new();
+        let w = r.clone();
+        let h = thread::spawn(move || {
+            // Complete steps in scrambled order.
+            for s in [3u64, 0, 2, 1] {
+                thread::sleep(Duration::from_millis(5));
+                w.put(s, s * 10);
+            }
+        });
+        for s in 0..4u64 {
+            assert_eq!(r.take(s), Some(s * 10));
+        }
+        h.join().unwrap();
+        assert_eq!(r.pending(), 0);
+    }
+
+    #[test]
+    fn close_unblocks_waiters() {
+        let r: Reorder<()> = Reorder::new();
+        let w = r.clone();
+        let h = thread::spawn(move || w.take(99));
+        thread::sleep(Duration::from_millis(10));
+        r.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate completion")]
+    fn duplicate_put_panics() {
+        let r: Reorder<u32> = Reorder::new();
+        r.put(1, 1);
+        r.put(1, 2);
+    }
+}

@@ -1,0 +1,271 @@
+//! `dlio` — launcher for the locality-aware data-loading stack.
+//!
+//! Subcommands:
+//!   gen-data   materialize a synthetic shard dataset
+//!   loadtest   run the live loader (Fig. 7-style sweep or single config)
+//!   train      distributed training on a materialized dataset (Reg/Loc)
+//!   figures    regenerate a paper figure/table (sim- or live-backed)
+//!   analytic   print the §IV model curves
+//!   balance    demo Algorithm 1 on a load vector
+//!
+//! Run `dlio <cmd> --help` semantics: every option has a default; see the
+//! match arms below for the accepted keys.
+
+use anyhow::{bail, Context, Result};
+use dlio::config::Args;
+use dlio::coordinator::{SamplerKind, Trainer, TrainerConfig};
+use dlio::loader::LoaderConfig;
+use dlio::net::{Fabric, FabricConfig};
+use dlio::runtime::{default_artifacts_dir, Engine};
+use dlio::storage::{generate, Catalog, StorageSystem, SyntheticSpec, TokenBucket};
+use dlio::{analytic, figures};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("gen-data") => gen_data(&args),
+        Some("loadtest") => loadtest(&args),
+        Some("train") => train(&args),
+        Some("figures") => run_figures(&args),
+        Some("analytic") => run_analytic(&args),
+        Some("balance") => balance_demo(&args),
+        Some(other) => bail!("unknown subcommand {other:?}; see src/main.rs"),
+        None => {
+            eprintln!(
+                "usage: dlio <gen-data|loadtest|train|figures|analytic|balance> [--key value]..."
+            );
+            Ok(())
+        }
+    }
+}
+
+fn data_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("dir", "/tmp/dlio-data"))
+}
+
+fn gen_data(args: &Args) -> Result<()> {
+    let dir = data_dir(args);
+    let spec = SyntheticSpec {
+        n_samples: args.u64_or("samples", 4096)?,
+        n_classes: args.usize_or("classes", 16)? as u16,
+        samples_per_shard: args.u64_or("shard", 1024)?,
+        noise: args.usize_or("noise", 24)? as u8,
+        ambiguity: args.f64_or("ambiguity", 0.0)?,
+        seed: args.u64_or("seed", 1234)?,
+        ..Default::default()
+    };
+    let meta = generate(&dir, &spec)?;
+    println!(
+        "generated {} samples ({} shards, {} classes) under {}",
+        meta.n_samples,
+        meta.shards.len(),
+        meta.n_classes,
+        dir.display()
+    );
+    Ok(())
+}
+
+fn loadtest(args: &Args) -> Result<()> {
+    let dir = data_dir(args);
+    if !dir.join("dataset.json").exists() {
+        bail!("no dataset at {} — run `dlio gen-data --dir ...`", dir.display());
+    }
+    let cfg = figures::Fig7Config {
+        data_dir: dir,
+        batches: args.usize_or("batches", 16)?,
+        batch_size: args.usize_or("batch", 64)?,
+        ..Default::default()
+    };
+    let workers = args.usize_list_or("workers", &[1, 2, 4, 8, 10])?;
+    let threads = args.usize_list_or("threads", &[0, 2, 4])?;
+    let rows = figures::fig7(&cfg, &workers, &threads)?;
+    figures::print_fig7(&rows);
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let dir = data_dir(args);
+    if !dir.join("dataset.json").exists() {
+        println!("materializing default dataset under {}", dir.display());
+        generate(&dir, &SyntheticSpec::default())?;
+    }
+    let sampler = match args.str_or("sampler", "loc").as_str() {
+        "reg" => SamplerKind::Reg,
+        "distcache" | "dc" => SamplerKind::DistCache,
+        "loc" => SamplerKind::Loc,
+        other => bail!("--sampler must be reg|distcache|loc, got {other:?}"),
+    };
+    let throttle = match args.f64_or("storage-bps", 0.0)? {
+        bps if bps > 0.0 => Some(Arc::new(TokenBucket::new(bps, 64.0 * 1024.0))),
+        _ => None,
+    };
+    let engine = Arc::new(Engine::load(&default_artifacts_dir())?);
+    let storage = Arc::new(StorageSystem::open(&dir, throttle)?);
+    let fabric = Arc::new(Fabric::new(FabricConfig {
+        real_time: args.flag("real-fabric"),
+        ..Default::default()
+    }));
+    let cfg = TrainerConfig {
+        p: args.usize_or("p", 2)?,
+        epochs: args.u64_or("epochs", 2)?,
+        local_batch: args.usize_or("batch", 16)?,
+        lr: args.f64_or("lr", 0.05)? as f32,
+        sampler,
+        loader: LoaderConfig {
+            workers: args.usize_or("workers", 2)?,
+            threads_per_worker: args.usize_or("threads", 2)?,
+            prefetch_batches: args.usize_or("prefetch", 2)?,
+        },
+        seed: args.u64_or("seed", 42)?,
+        cache_capacity_bytes: args.u64_or("cache-bytes", u64::MAX)?,
+        flip_prob: args.f64_or("flip", 0.5)?,
+        decode_s_per_kib: args.f64_or("decode", 0.0)?,
+        eval_samples: args.usize_or("eval", 0)?,
+        checkpoint_path: args.str_opt("checkpoint").map(PathBuf::from),
+    };
+    println!(
+        "training: p={} epochs={} B_local={} sampler={:?} (engine: {})",
+        cfg.p,
+        cfg.epochs,
+        cfg.local_batch,
+        cfg.sampler,
+        engine.platform()
+    );
+    let report = Trainer::new(engine, storage, fabric, cfg)?.run()?;
+    println!("{}", dlio::metrics::EpochReport::markdown_header());
+    for e in &report.epochs {
+        println!("{}", e.markdown_row());
+    }
+    if let Some(acc) = report.final_accuracy {
+        println!("final accuracy: {:.2}%", acc * 100.0);
+    }
+    println!(
+        "learners in sync: {}; mean grad step: {:.1} ms",
+        report.learners_in_sync(),
+        report.mean_grad_exec_s * 1e3
+    );
+    Ok(())
+}
+
+fn run_figures(args: &Args) -> Result<()> {
+    let which = args.str_or("fig", "all");
+    let quick = args.flag("quick");
+    let scales: Vec<usize> = if quick {
+        vec![2, 8, 16, 64, 256]
+    } else {
+        vec![2, 4, 8, 16, 32, 64, 128, 256]
+    };
+    let loading_scales: Vec<usize> = if quick {
+        vec![8, 64, 256]
+    } else {
+        vec![8, 16, 32, 64, 128, 256]
+    };
+    let run = |f: &str| which == "all" || which == f;
+
+    if run("1") {
+        figures::print_fig1(&figures::fig1(&scales));
+    }
+    if run("6") {
+        let rows = figures::fig6(
+            if quick { &[16, 64] } else { &[4, 16, 64, 256] },
+            &[32, 64, 128],
+        );
+        figures::print_fig6(&rows);
+    }
+    if run("7") {
+        let dir = data_dir(args);
+        let fig7dir = if dir.join("dataset.json").exists() {
+            dir
+        } else {
+            let d = std::env::temp_dir().join("dlio-fig7-data");
+            if !d.join("dataset.json").exists() {
+                generate(
+                    &d,
+                    &SyntheticSpec { n_samples: 2048, ..Default::default() },
+                )?;
+            }
+            d
+        };
+        let cfg = figures::Fig7Config {
+            data_dir: fig7dir,
+            batches: if quick { 4 } else { 12 },
+            ..Default::default()
+        };
+        let rows = figures::fig7(
+            &cfg,
+            if quick { &[1, 4, 10] } else { &[1, 2, 4, 6, 8, 10] },
+            if quick { &[0, 4] } else { &[0, 1, 2, 4, 8] },
+        )?;
+        figures::print_fig7(&rows);
+    }
+    for (fig, catalog) in [
+        ("8", Catalog::imagenet_1k()),
+        ("9", Catalog::ucf101_rgb()),
+        ("10", Catalog::ucf101_flow()),
+        ("11", Catalog::mummi()),
+    ] {
+        if run(fig) {
+            let nodes: Vec<usize> = if fig == "11" {
+                // The paper evaluates MuMMI at 16..128 nodes (512 learners).
+                loading_scales.iter().copied().filter(|&n| n <= 128).collect()
+            } else {
+                loading_scales.clone()
+            };
+            let rows = figures::dataset_scaling(&catalog, &nodes);
+            figures::print_dataset_scaling(
+                &format!("Fig. {fig} — {}", catalog.name),
+                &rows,
+            );
+        }
+    }
+    if run("12") {
+        let v = args.f64_or("v-node", 0.0)?;
+        let rows =
+            figures::fig12(&[16, 32, 64], (v > 0.0).then_some(v));
+        figures::print_fig12(&rows);
+    }
+    Ok(())
+}
+
+fn run_analytic(args: &Args) -> Result<()> {
+    let m = analytic::lassen_imagenet();
+    let nodes = args.usize_list_or("nodes", &[2, 4, 8, 16, 32, 64, 128, 256])?;
+    println!("crossover p* = R/V = {:.1} nodes (Eq. 5)", m.crossover_p());
+    println!("| p | train s | load s (Eq.4) | true cost (Eq.6) | distcache io (Eq.7) | loc io (Eq.8) |");
+    println!("|---|---|---|---|---|---|");
+    for p in nodes {
+        println!(
+            "| {p} | {:.1} | {:.1} | {:.1} | {:.1} | {:.1} |",
+            m.training_time(p),
+            m.loading_time_plain(p),
+            m.true_cost_plain(p),
+            m.io_time_distcache(p),
+            m.io_time_loc(),
+        );
+    }
+    Ok(())
+}
+
+fn balance_demo(args: &Args) -> Result<()> {
+    let loads: Vec<u64> = args
+        .str_or("loads", "2,6,4")
+        .split(',')
+        .map(|t| t.trim().parse().context("bad load"))
+        .collect::<Result<_>>()?;
+    println!("loads:   {loads:?}");
+    println!("targets: {:?}", dlio::balance::targets(&loads));
+    let schedule = dlio::balance::balance(&loads);
+    for t in &schedule {
+        println!("  transfer {} samples: learner {} -> {}", t.amount, t.from, t.to);
+    }
+    println!(
+        "{} transfers, {} samples moved ({:.1}% of batch)",
+        schedule.len(),
+        dlio::balance::moved(&schedule),
+        100.0 * dlio::balance::moved(&schedule) as f64
+            / loads.iter().sum::<u64>().max(1) as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,269 @@
+//! Metrics: step/epoch accounting mirroring the paper's measurements
+//! (training time vs *waiting time* for data, I/O volumes by source,
+//! balance traffic), plus CSV/markdown emitters for EXPERIMENTS.md.
+
+use crate::util::stats::Welford;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Where a sample's bytes came from (accounting mirror of
+/// `sampler::Provenance`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Source {
+    LocalCache,
+    RemoteCache,
+    Storage,
+}
+
+/// Thread-safe loading counters, shared by all loader workers of a learner.
+#[derive(Default)]
+pub struct LoadCounters {
+    pub storage_bytes: AtomicU64,
+    pub remote_bytes: AtomicU64,
+    pub local_hits: AtomicU64,
+    pub remote_hits: AtomicU64,
+    pub storage_loads: AtomicU64,
+    pub decode_ns: AtomicU64,
+    pub preprocess_ns: AtomicU64,
+    pub fetch_ns: AtomicU64,
+}
+
+impl LoadCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, source: Source, bytes: u64) {
+        match source {
+            Source::LocalCache => {
+                self.local_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            Source::RemoteCache => {
+                self.remote_hits.fetch_add(1, Ordering::Relaxed);
+                self.remote_bytes.fetch_add(bytes, Ordering::Relaxed);
+            }
+            Source::Storage => {
+                self.storage_loads.fetch_add(1, Ordering::Relaxed);
+                self.storage_bytes.fetch_add(bytes, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn snapshot(&self) -> LoadSnapshot {
+        LoadSnapshot {
+            storage_bytes: self.storage_bytes.load(Ordering::Relaxed),
+            remote_bytes: self.remote_bytes.load(Ordering::Relaxed),
+            local_hits: self.local_hits.load(Ordering::Relaxed),
+            remote_hits: self.remote_hits.load(Ordering::Relaxed),
+            storage_loads: self.storage_loads.load(Ordering::Relaxed),
+            decode_s: self.decode_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            preprocess_s: self.preprocess_ns.load(Ordering::Relaxed) as f64
+                / 1e9,
+            fetch_s: self.fetch_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+}
+
+/// Immutable snapshot of [`LoadCounters`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LoadSnapshot {
+    pub storage_bytes: u64,
+    pub remote_bytes: u64,
+    pub local_hits: u64,
+    pub remote_hits: u64,
+    pub storage_loads: u64,
+    pub decode_s: f64,
+    pub preprocess_s: f64,
+    pub fetch_s: f64,
+}
+
+impl LoadSnapshot {
+    pub fn total_samples(&self) -> u64 {
+        self.local_hits + self.remote_hits + self.storage_loads
+    }
+
+    pub fn delta(&self, earlier: &LoadSnapshot) -> LoadSnapshot {
+        LoadSnapshot {
+            storage_bytes: self.storage_bytes - earlier.storage_bytes,
+            remote_bytes: self.remote_bytes - earlier.remote_bytes,
+            local_hits: self.local_hits - earlier.local_hits,
+            remote_hits: self.remote_hits - earlier.remote_hits,
+            storage_loads: self.storage_loads - earlier.storage_loads,
+            decode_s: self.decode_s - earlier.decode_s,
+            preprocess_s: self.preprocess_s - earlier.preprocess_s,
+            fetch_s: self.fetch_s - earlier.fetch_s,
+        }
+    }
+}
+
+/// Per-epoch report — one row of Fig. 1/8/12-style output.
+#[derive(Clone, Debug, Default)]
+pub struct EpochReport {
+    pub epoch: u64,
+    pub steps: usize,
+    /// Wall-clock epoch time.
+    pub epoch_time_s: f64,
+    /// Time learners spent blocked waiting for data (paper Fig. 1 blue).
+    pub wait_time_s: f64,
+    /// Time in the compiled training step (paper Fig. 1 orange).
+    pub train_time_s: f64,
+    /// Time in gradient synchronization.
+    pub sync_time_s: f64,
+    pub load: LoadSnapshot,
+    pub mean_loss: f64,
+    pub accuracy: Option<f64>,
+    /// Samples moved for balancing this epoch (Loc only).
+    pub balance_moves: u64,
+}
+
+impl EpochReport {
+    pub fn markdown_header() -> &'static str {
+        "| epoch | steps | epoch s | wait s | train s | sync s | loss | \
+         storage MiB | remote MiB | local hits | acc |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|"
+    }
+
+    pub fn markdown_row(&self) -> String {
+        format!(
+            "| {} | {} | {:.3} | {:.3} | {:.3} | {:.3} | {:.4} | {:.2} | {:.2} | {} | {} |",
+            self.epoch,
+            self.steps,
+            self.epoch_time_s,
+            self.wait_time_s,
+            self.train_time_s,
+            self.sync_time_s,
+            self.mean_loss,
+            self.load.storage_bytes as f64 / (1024.0 * 1024.0),
+            self.load.remote_bytes as f64 / (1024.0 * 1024.0),
+            self.load.local_hits,
+            self.accuracy
+                .map(|a| format!("{:.1}%", a * 100.0))
+                .unwrap_or_else(|| "-".into()),
+        )
+    }
+
+    pub fn csv_header() -> &'static str {
+        "epoch,steps,epoch_s,wait_s,train_s,sync_s,loss,storage_bytes,\
+         remote_bytes,local_hits,remote_hits,storage_loads,accuracy,\
+         balance_moves"
+    }
+
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{},{},{},{},{}",
+            self.epoch,
+            self.steps,
+            self.epoch_time_s,
+            self.wait_time_s,
+            self.train_time_s,
+            self.sync_time_s,
+            self.mean_loss,
+            self.load.storage_bytes,
+            self.load.remote_bytes,
+            self.load.local_hits,
+            self.load.remote_hits,
+            self.load.storage_loads,
+            self.accuracy.map(|a| a.to_string()).unwrap_or_default(),
+            self.balance_moves,
+        )
+    }
+}
+
+/// Shared accumulator of per-step timings across learner threads.
+#[derive(Default)]
+pub struct StepTimes {
+    pub wait: Mutex<Welford>,
+    pub train: Mutex<Welford>,
+    pub sync: Mutex<Welford>,
+}
+
+impl StepTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&self, wait_s: f64, train_s: f64, sync_s: f64) {
+        self.wait.lock().unwrap().push(wait_s);
+        self.train.lock().unwrap().push(train_s);
+        self.sync.lock().unwrap().push(sync_s);
+    }
+
+    /// (total wait, total train, total sync) across recorded steps.
+    pub fn totals(&self) -> (f64, f64, f64) {
+        let w = self.wait.lock().unwrap();
+        let t = self.train.lock().unwrap();
+        let s = self.sync.lock().unwrap();
+        (
+            w.mean() * w.count() as f64,
+            t.mean() * t.count() as f64,
+            s.mean() * s.count() as f64,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_record_by_source() {
+        let c = LoadCounters::new();
+        c.record(Source::LocalCache, 100);
+        c.record(Source::RemoteCache, 200);
+        c.record(Source::Storage, 300);
+        c.record(Source::Storage, 300);
+        let s = c.snapshot();
+        assert_eq!(s.local_hits, 1);
+        assert_eq!(s.remote_hits, 1);
+        assert_eq!(s.storage_loads, 2);
+        assert_eq!(s.remote_bytes, 200);
+        assert_eq!(s.storage_bytes, 600);
+        assert_eq!(s.total_samples(), 4);
+    }
+
+    #[test]
+    fn snapshot_delta() {
+        let c = LoadCounters::new();
+        c.record(Source::Storage, 50);
+        let a = c.snapshot();
+        c.record(Source::Storage, 70);
+        c.record(Source::LocalCache, 0);
+        let b = c.snapshot();
+        let d = b.delta(&a);
+        assert_eq!(d.storage_bytes, 70);
+        assert_eq!(d.storage_loads, 1);
+        assert_eq!(d.local_hits, 1);
+    }
+
+    #[test]
+    fn report_rows_render() {
+        let r = EpochReport {
+            epoch: 2,
+            steps: 10,
+            epoch_time_s: 1.5,
+            mean_loss: 0.42,
+            accuracy: Some(0.875),
+            ..Default::default()
+        };
+        let md = r.markdown_row();
+        assert!(md.contains("| 2 |"));
+        assert!(md.contains("87.5%"));
+        let csv = r.csv_row();
+        assert!(csv.starts_with("2,10,"));
+        assert_eq!(
+            csv.split(',').count(),
+            EpochReport::csv_header().split(',').count()
+        );
+    }
+
+    #[test]
+    fn step_times_accumulate() {
+        let st = StepTimes::new();
+        st.push(0.1, 0.5, 0.05);
+        st.push(0.3, 0.5, 0.05);
+        let (w, t, s) = st.totals();
+        assert!((w - 0.4).abs() < 1e-9);
+        assert!((t - 1.0).abs() < 1e-9);
+        assert!((s - 0.1).abs() < 1e-9);
+    }
+}

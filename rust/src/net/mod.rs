@@ -1,0 +1,220 @@
+//! Simulated interconnect substrate.
+//!
+//! In-process stand-in for the paper's InfiniBand EDR fabric: point-to-point
+//! transfers pay latency + bytes/bandwidth (as real sleep time in the live
+//! pipeline), and the all-reduce helper both *performs* the reduction over
+//! learner gradient buffers and *charges* the ring-all-reduce cost
+//! `2·(p−1)/p · bytes / link_bw`.
+//!
+//! Only relative rates matter for the paper's phenomena (R_c ≫ R; Eq. 7–8),
+//! so the fabric is configured in bytes/sec alongside the storage throttle.
+
+use crate::util::stats::Welford;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Fabric configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct FabricConfig {
+    /// Per-link bandwidth in bytes/sec (both directions, full duplex).
+    pub link_bandwidth_bps: f64,
+    /// Per-message latency in seconds.
+    pub latency_s: f64,
+    /// If false, transfers are accounted but not slept (virtual mode for
+    /// fast tests; the DES charges time instead).
+    pub real_time: bool,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        // EDR-class: ~12 GB/s per link, ~2us latency.
+        FabricConfig {
+            link_bandwidth_bps: 12.0e9,
+            latency_s: 2.0e-6,
+            real_time: true,
+        }
+    }
+}
+
+/// The interconnect. Thread-safe; all learners share one instance.
+pub struct Fabric {
+    cfg: FabricConfig,
+    p2p_bytes: AtomicU64,
+    p2p_messages: AtomicU64,
+    allreduce_bytes: AtomicU64,
+    allreduce_count: AtomicU64,
+    transfer_times: Mutex<Welford>,
+}
+
+impl Fabric {
+    pub fn new(cfg: FabricConfig) -> Self {
+        Fabric {
+            cfg,
+            p2p_bytes: AtomicU64::new(0),
+            p2p_messages: AtomicU64::new(0),
+            allreduce_bytes: AtomicU64::new(0),
+            allreduce_count: AtomicU64::new(0),
+            transfer_times: Mutex::new(Welford::new()),
+        }
+    }
+
+    pub fn config(&self) -> &FabricConfig {
+        &self.cfg
+    }
+
+    /// Time a point-to-point transfer of `bytes` would take.
+    pub fn p2p_cost(&self, bytes: u64) -> Duration {
+        Duration::from_secs_f64(
+            self.cfg.latency_s + bytes as f64 / self.cfg.link_bandwidth_bps,
+        )
+    }
+
+    /// Transfer `bytes` from one learner to another: sleeps the modeled
+    /// cost (when `real_time`) and records traffic. Returns the charged
+    /// duration.
+    pub fn transfer(&self, _from: usize, _to: usize, bytes: u64) -> Duration {
+        let cost = self.p2p_cost(bytes);
+        if self.cfg.real_time {
+            std::thread::sleep(cost);
+        }
+        self.p2p_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.p2p_messages.fetch_add(1, Ordering::Relaxed);
+        self.transfer_times.lock().unwrap().push(cost.as_secs_f64());
+        cost
+    }
+
+    /// Ring all-reduce cost model: each member sends/receives
+    /// `2·(p−1)/p · bytes` over its link.
+    pub fn allreduce_cost(&self, bytes: u64, p: usize) -> Duration {
+        if p <= 1 {
+            return Duration::ZERO;
+        }
+        let steps = 2 * (p - 1);
+        let per_link = 2.0 * (p as f64 - 1.0) / p as f64 * bytes as f64;
+        Duration::from_secs_f64(
+            steps as f64 * self.cfg.latency_s
+                + per_link / self.cfg.link_bandwidth_bps,
+        )
+    }
+
+    /// Sum-all-reduce over learner gradient buffers *in place*: every
+    /// buffer ends up holding the element-wise sum. Charges (sleeps) the
+    /// modeled cost once per call. Reduction order is fixed (learner 0
+    /// upward) so results are bit-identical run to run.
+    pub fn allreduce_sum(&self, buffers: &mut [&mut [f32]]) -> Duration {
+        let p = buffers.len();
+        if p == 0 {
+            return Duration::ZERO;
+        }
+        let n = buffers[0].len();
+        for b in buffers.iter() {
+            assert_eq!(b.len(), n, "allreduce buffer length mismatch");
+        }
+        let mut acc = vec![0.0f32; n];
+        for b in buffers.iter() {
+            for (a, &x) in acc.iter_mut().zip(b.iter()) {
+                *a += x;
+            }
+        }
+        for b in buffers.iter_mut() {
+            b.copy_from_slice(&acc);
+        }
+        let cost = self.allreduce_cost((n * 4) as u64, p);
+        if self.cfg.real_time {
+            std::thread::sleep(cost);
+        }
+        self.allreduce_bytes
+            .fetch_add((n * 4) as u64, Ordering::Relaxed);
+        self.allreduce_count.fetch_add(1, Ordering::Relaxed);
+        cost
+    }
+
+    // -- metrics -----------------------------------------------------------
+
+    pub fn p2p_bytes(&self) -> u64 {
+        self.p2p_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn p2p_messages(&self) -> u64 {
+        self.p2p_messages.load(Ordering::Relaxed)
+    }
+
+    pub fn allreduce_count(&self) -> u64 {
+        self.allreduce_count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_transfer_s(&self) -> f64 {
+        self.transfer_times.lock().unwrap().mean()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn virtual_fabric() -> Fabric {
+        Fabric::new(FabricConfig { real_time: false, ..Default::default() })
+    }
+
+    #[test]
+    fn p2p_cost_scales_with_bytes() {
+        let f = virtual_fabric();
+        let small = f.p2p_cost(1024);
+        let big = f.p2p_cost(1024 * 1024);
+        assert!(big > small);
+        // 12 GB/s: 1 MiB ≈ 87us + 2us latency.
+        let expect = 2.0e-6 + (1024.0 * 1024.0) / 12.0e9;
+        assert!((big.as_secs_f64() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transfer_accounts_traffic() {
+        let f = virtual_fabric();
+        f.transfer(0, 1, 1000);
+        f.transfer(2, 3, 500);
+        assert_eq!(f.p2p_bytes(), 1500);
+        assert_eq!(f.p2p_messages(), 2);
+        assert!(f.mean_transfer_s() > 0.0);
+    }
+
+    #[test]
+    fn allreduce_sums_all_buffers() {
+        let f = virtual_fabric();
+        let mut a = vec![1.0f32, 2.0, 3.0];
+        let mut b = vec![10.0f32, 20.0, 30.0];
+        let mut c = vec![100.0f32, 200.0, 300.0];
+        {
+            let mut bufs: Vec<&mut [f32]> =
+                vec![&mut a[..], &mut b[..], &mut c[..]];
+            f.allreduce_sum(&mut bufs);
+        }
+        let want = [111.0f32, 222.0, 333.0];
+        assert_eq!(a, want);
+        assert_eq!(b, want);
+        assert_eq!(c, want);
+        assert_eq!(f.allreduce_count(), 1);
+    }
+
+    #[test]
+    fn allreduce_cost_grows_sublinearly_in_p() {
+        let f = virtual_fabric();
+        let mb = 4 * 1024 * 1024;
+        let c2 = f.allreduce_cost(mb, 2).as_secs_f64();
+        let c64 = f.allreduce_cost(mb, 64).as_secs_f64();
+        // Ring: per-link volume approaches 2x bytes; the bandwidth term is
+        // bounded by 2x while the latency term grows with 2(p-1) steps.
+        assert!(c64 < c2 * 3.0, "c2={c2} c64={c64}");
+        assert_eq!(f.allreduce_cost(mb, 1), Duration::ZERO);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn allreduce_rejects_mismatched_buffers() {
+        let f = virtual_fabric();
+        let mut a = vec![0.0f32; 3];
+        let mut b = vec![0.0f32; 4];
+        let mut bufs: Vec<&mut [f32]> = vec![&mut a[..], &mut b[..]];
+        f.allreduce_sum(&mut bufs);
+    }
+}

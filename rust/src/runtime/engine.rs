@@ -1,0 +1,234 @@
+//! The PJRT execution engine: loads HLO-text artifacts, compiles them on
+//! the CPU PJRT client, and executes them from the coordinator hot path.
+//!
+//! Pattern follows `/opt/xla-example/load_hlo`: HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. One compiled executable per (program,
+//! batch-size) variant; compilation is lazy and cached, so a process that
+//! only trains at B=64 never compiles the B=256 variants.
+//!
+//! Thread-safety: the PJRT C API guarantees `PjRtLoadedExecutable::Execute`
+//! and client operations are thread-safe; the Rust wrapper types simply
+//! hold raw pointers and are not marked `Send`/`Sync`. [`Engine`] and
+//! [`Program`] assert those bounds (with the PJRT contract as
+//! justification) so loader workers and learner threads can execute
+//! concurrently.
+
+use super::manifest::{DType, Manifest, ProgramSpec};
+use super::tensor::{Data, HostTensor};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// A compiled, executable program with its manifest signature.
+pub struct Program {
+    spec: ProgramSpec,
+    exe: xla::PjRtLoadedExecutable,
+    executions: AtomicU64,
+    exec_ns: AtomicU64,
+}
+
+// SAFETY: PJRT executables are internally synchronized; Execute is
+// documented thread-safe in the PJRT C API. The wrapper only holds an
+// opaque pointer whose lifetime we manage single-ownership via Arc.
+unsafe impl Send for Program {}
+unsafe impl Sync for Program {}
+
+impl Program {
+    /// Execute the program. Inputs are validated against the manifest
+    /// signature; outputs are converted back to [`HostTensor`]s.
+    pub fn run(&self, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = args.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// As [`run`], but with borrowed arguments — the coordinator hot path
+    /// uses this to avoid cloning ~14 MiB of parameters per step
+    /// (§Perf: before/after in EXPERIMENTS.md).
+    ///
+    /// [`run`]: Program::run
+    pub fn run_refs(&self, args: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        ensure!(
+            args.len() == self.spec.inputs.len(),
+            "{}: got {} args, expected {}",
+            self.spec.name,
+            args.len(),
+            self.spec.inputs.len()
+        );
+        for (arg, spec) in args.iter().zip(&self.spec.inputs) {
+            arg.check(spec)
+                .with_context(|| format!("program {}", self.spec.name))?;
+        }
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| to_literal(t))
+            .collect::<Result<_>>()
+            .with_context(|| format!("program {} inputs", self.spec.name))?;
+
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("{}: execute: {e:?}", self.spec.name))?;
+        self.exec_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.executions.fetch_add(1, Ordering::Relaxed);
+
+        ensure!(!result.is_empty() && !result[0].is_empty(), "empty result");
+        // aot.py lowers with return_tuple=True: one tuple buffer.
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let parts = match root.shape() {
+            Ok(xla::Shape::Tuple(_)) => root
+                .to_tuple()
+                .map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?,
+            _ => vec![root],
+        };
+        ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "{}: {} outputs, manifest says {}",
+            self.spec.name,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.iter().zip(&self.spec.outputs) {
+            let t = from_literal(lit)
+                .with_context(|| format!("output {}", spec.name))?;
+            t.check(spec)
+                .with_context(|| format!("program {} output", self.spec.name))?;
+            out.push(t);
+        }
+        Ok(out)
+    }
+
+    pub fn spec(&self) -> &ProgramSpec {
+        &self.spec
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.executions.load(Ordering::Relaxed)
+    }
+
+    /// Mean wall-clock seconds per execution (measures the paper's V).
+    pub fn mean_exec_s(&self) -> f64 {
+        let n = self.executions();
+        if n == 0 {
+            return f64::NAN;
+        }
+        self.exec_ns.load(Ordering::Relaxed) as f64 / 1e9 / n as f64
+    }
+}
+
+fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let ty = match t.dtype() {
+        DType::F32 => xla::ElementType::F32,
+        DType::I32 => xla::ElementType::S32,
+        DType::U8 => xla::ElementType::U8,
+    };
+    let bytes = t.byte_view();
+    xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, &bytes)
+        .map_err(|e| anyhow::anyhow!("literal create: {e:?}"))
+}
+
+fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow::anyhow!("array_shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = match shape.element_type() {
+        xla::ElementType::F32 => Data::F32(
+            lit.to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))?,
+        ),
+        xla::ElementType::S32 => Data::I32(
+            lit.to_vec::<i32>()
+                .map_err(|e| anyhow::anyhow!("to_vec i32: {e:?}"))?,
+        ),
+        xla::ElementType::U8 => Data::U8(
+            lit.to_vec::<u8>()
+                .map_err(|e| anyhow::anyhow!("to_vec u8: {e:?}"))?,
+        ),
+        other => bail!("unsupported output element type {other:?}"),
+    };
+    Ok(HostTensor { shape: dims, data })
+}
+
+/// The runtime engine: PJRT client + lazily compiled program cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    programs: Mutex<HashMap<String, Arc<Program>>>,
+}
+
+// SAFETY: see Program. PjRtClient (CPU) is thread-safe per the PJRT C API.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Open the artifacts directory and initialize the PJRT CPU client.
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Engine { client, manifest, programs: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling on first use) a program by manifest name.
+    pub fn program(&self, name: &str) -> Result<Arc<Program>> {
+        if let Some(p) = self.programs.lock().unwrap().get(name) {
+            return Ok(Arc::clone(p));
+        }
+        // Compile outside the lock: compilation can take seconds and other
+        // programs' executions shouldn't stall behind it. A racing thread
+        // may compile the same program; last insert wins (harmless).
+        let spec = self.manifest.program(name)?.clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&spec.hlo_path)
+            .map_err(|e| {
+                anyhow::anyhow!("parse {}: {e:?}", spec.hlo_path.display())
+            })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        let program = Arc::new(Program {
+            spec,
+            exe,
+            executions: AtomicU64::new(0),
+            exec_ns: AtomicU64::new(0),
+        });
+        let mut cache = self.programs.lock().unwrap();
+        let entry = cache.entry(name.to_string()).or_insert_with(|| {
+            eprintln!(
+                "engine: compiled {name} in {:.2}s",
+                t0.elapsed().as_secs_f64()
+            );
+            Arc::clone(&program)
+        });
+        Ok(Arc::clone(entry))
+    }
+
+    /// Load the initial parameters (He init persisted by aot.py), in the
+    /// canonical `param_names` order.
+    pub fn initial_params(&self) -> Result<Vec<HostTensor>> {
+        self.manifest
+            .params
+            .iter()
+            .map(|p| HostTensor::from_f32_file(&p.path, p.shape.clone()))
+            .collect()
+    }
+}

@@ -1,0 +1,309 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `artifacts/manifest.json` lists every AOT-compiled program (HLO text
+//! file + typed input/output signatures), the initial parameter binaries,
+//! and the model geometry. The runtime validates every execution against
+//! these signatures, so a Python-side change that isn't re-lowered fails
+//! loudly instead of silently miscomputing.
+
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Element type of a tensor crossing the runtime boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U8,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u8" => DType::U8,
+            other => bail!("unknown dtype {other:?} in manifest"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U8 => 1,
+        }
+    }
+}
+
+/// Shape + dtype + name of one program input/output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.elements() * self.dtype.size_bytes()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j
+                .at(&["name"])
+                .as_str()
+                .context("tensor spec missing name")?
+                .to_string(),
+            shape: j
+                .at(&["shape"])
+                .as_arr()
+                .context("tensor spec missing shape")?
+                .iter()
+                .map(|v| v.as_usize().context("non-numeric dim"))
+                .collect::<Result<_>>()?,
+            dtype: DType::parse(
+                j.at(&["dtype"]).as_str().context("tensor spec missing dtype")?,
+            )?,
+        })
+    }
+}
+
+/// One AOT-compiled program.
+#[derive(Clone, Debug)]
+pub struct ProgramSpec {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One persisted initial-parameter tensor.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub path: PathBuf,
+}
+
+/// Model geometry (mirrors `python/compile/model.py`).
+#[derive(Clone, Debug)]
+pub struct Geometry {
+    pub img: (usize, usize, usize),
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub batch_sizes: Vec<usize>,
+    pub param_names: Vec<String>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub lowered_with: String,
+    pub seed: u64,
+    pub geometry: Geometry,
+    pub programs: BTreeMap<String, ProgramSpec>,
+    pub params: Vec<ParamSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "read {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse manifest.json: {e}"))?;
+
+        let geo = j.at(&["geometry"]);
+        let img = geo.at(&["img"]).as_arr().context("geometry.img")?;
+        let geometry = Geometry {
+            img: (
+                img[0].as_usize().context("img.h")?,
+                img[1].as_usize().context("img.w")?,
+                img[2].as_usize().context("img.c")?,
+            ),
+            n_features: geo
+                .at(&["n_features"])
+                .as_usize()
+                .context("n_features")?,
+            n_classes: geo.at(&["n_classes"]).as_usize().context("n_classes")?,
+            batch_sizes: geo
+                .at(&["batch_sizes"])
+                .as_arr()
+                .context("batch_sizes")?
+                .iter()
+                .map(|v| v.as_usize().context("batch size"))
+                .collect::<Result<_>>()?,
+            param_names: geo
+                .at(&["param_names"])
+                .as_arr()
+                .context("param_names")?
+                .iter()
+                .map(|v| {
+                    v.as_str().map(str::to_string).context("param name")
+                })
+                .collect::<Result<_>>()?,
+        };
+
+        let mut programs = BTreeMap::new();
+        for (name, pj) in
+            j.at(&["programs"]).as_obj().context("programs")?.iter()
+        {
+            let inputs = pj
+                .at(&["inputs"])
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("program {name} inputs"))?;
+            let outputs = pj
+                .at(&["outputs"])
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("program {name} outputs"))?;
+            programs.insert(
+                name.clone(),
+                ProgramSpec {
+                    name: name.clone(),
+                    hlo_path: dir
+                        .join(pj.at(&["file"]).as_str().context("file")?),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let params = j
+            .at(&["params"])
+            .as_arr()
+            .context("params")?
+            .iter()
+            .map(|pj| {
+                Ok(ParamSpec {
+                    name: pj
+                        .at(&["name"])
+                        .as_str()
+                        .context("param name")?
+                        .to_string(),
+                    shape: pj
+                        .at(&["shape"])
+                        .as_arr()
+                        .context("param shape")?
+                        .iter()
+                        .map(|v| v.as_usize().context("dim"))
+                        .collect::<Result<_>>()?,
+                    path: dir.join(pj.at(&["file"]).as_str().context("file")?),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            lowered_with: j
+                .at(&["lowered_with"])
+                .as_str()
+                .unwrap_or("unknown")
+                .to_string(),
+            seed: j.at(&["seed"]).as_usize().unwrap_or(0) as u64,
+            geometry,
+            programs,
+            params,
+        })
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramSpec> {
+        self.programs
+            .get(name)
+            .with_context(|| format!("program {name:?} not in manifest"))
+    }
+
+    /// The largest compiled batch size ≤ `want`, or the smallest available.
+    pub fn pick_batch(&self, want: usize) -> usize {
+        let mut sizes = self.geometry.batch_sizes.clone();
+        sizes.sort_unstable();
+        sizes
+            .iter()
+            .rev()
+            .find(|&&b| b <= want)
+            .copied()
+            .unwrap_or_else(|| sizes[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.geometry.img, (32, 32, 3));
+        assert_eq!(m.geometry.n_features, 3072);
+        assert_eq!(m.geometry.param_names.len(), 6);
+        for b in &m.geometry.batch_sizes {
+            for stem in ["preprocess", "grad", "train", "eval"] {
+                let p = m.program(&format!("{stem}{b}")).unwrap();
+                assert!(p.hlo_path.exists(), "{}", p.hlo_path.display());
+                assert!(!p.inputs.is_empty());
+                assert!(!p.outputs.is_empty());
+            }
+        }
+        // grad outputs = 6 grads + loss; inputs = 6 params + x + y.
+        let g = m.program("grad64").unwrap();
+        assert_eq!(g.outputs.len(), 7);
+        assert_eq!(g.inputs.len(), 8);
+        assert_eq!(g.inputs[6].shape, vec![64, 3072]);
+        assert_eq!(g.inputs[7].dtype, DType::I32);
+    }
+
+    #[test]
+    fn pick_batch_rounds_down() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.pick_batch(64), 64);
+        assert_eq!(m.pick_batch(100), 64);
+        assert_eq!(m.pick_batch(4096), 256);
+        assert_eq!(m.pick_batch(1), 16); // smallest available
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load(Path::new("/nonexistent-dlio")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::U8.size_bytes(), 1);
+        assert!(DType::parse("f64").is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! Runtime layer: PJRT client, artifact manifest, host tensors, and the
+//! lazily-compiled program cache that executes the AOT-lowered JAX/Pallas
+//! programs from `artifacts/` (see `python/compile/aot.py`).
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{Engine, Program};
+pub use manifest::{DType, Geometry, Manifest, ProgramSpec, TensorSpec};
+pub use tensor::{Data, HostTensor};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$DLIO_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("DLIO_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

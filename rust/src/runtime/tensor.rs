@@ -1,0 +1,257 @@
+//! Host-side tensors crossing the PJRT boundary.
+//!
+//! [`HostTensor`] is the typed buffer the coordinator manipulates (batches,
+//! parameters, gradients); conversion to/from `xla::Literal` happens at the
+//! [`super::engine`] boundary. Data is stored in natural typed vectors so
+//! the gradient all-reduce can operate on `&mut [f32]` without casts.
+
+use super::manifest::{DType, TensorSpec};
+use anyhow::{bail, ensure, Result};
+
+/// Typed tensor payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+}
+
+/// A host tensor: shape + typed data.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        let t = HostTensor { shape, data: Data::F32(data) };
+        t.assert_consistent();
+        t
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        let t = HostTensor { shape, data: Data::I32(data) };
+        t.assert_consistent();
+        t
+    }
+
+    pub fn u8(shape: Vec<usize>, data: Vec<u8>) -> Self {
+        let t = HostTensor { shape, data: Data::U8(data) };
+        t.assert_consistent();
+        t
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::f32(vec![], vec![v])
+    }
+
+    pub fn zeros(spec: &TensorSpec) -> Self {
+        match spec.dtype {
+            DType::F32 => Self::f32(spec.shape.clone(), vec![0.0; spec.elements()]),
+            DType::I32 => Self::i32(spec.shape.clone(), vec![0; spec.elements()]),
+            DType::U8 => Self::u8(spec.shape.clone(), vec![0; spec.elements()]),
+        }
+    }
+
+    fn assert_consistent(&self) {
+        let n: usize = self.shape.iter().product();
+        assert_eq!(n, self.len(), "shape/data mismatch");
+    }
+
+    pub fn dtype(&self) -> DType {
+        match &self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+            Data::U8(_) => DType::U8,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::U8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.len() * self.dtype().size_bytes()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match &self.data {
+            Data::U8(v) => Ok(v),
+            _ => bail!("tensor is not u8"),
+        }
+    }
+
+    /// Scalar accessor (loss values etc.).
+    pub fn scalar(&self) -> Result<f32> {
+        ensure!(self.len() == 1, "tensor is not a scalar");
+        Ok(self.as_f32()?[0])
+    }
+
+    /// Raw little-endian bytes (for the Literal boundary).
+    pub fn bytes(&self) -> Vec<u8> {
+        self.byte_view().into_owned()
+    }
+
+    /// Zero-copy byte view on little-endian targets (all supported ones);
+    /// this is the runtime-boundary hot path — a grad step moves ~14 MiB
+    /// of parameters per learner per call (§Perf).
+    pub fn byte_view(&self) -> std::borrow::Cow<'_, [u8]> {
+        #[cfg(target_endian = "little")]
+        {
+            fn view<T>(v: &[T]) -> std::borrow::Cow<'_, [u8]> {
+                // SAFETY: u8 has alignment 1; the slice covers exactly the
+                // initialized elements; T is a plain number type.
+                std::borrow::Cow::Borrowed(unsafe {
+                    std::slice::from_raw_parts(
+                        v.as_ptr() as *const u8,
+                        std::mem::size_of_val(v),
+                    )
+                })
+            }
+            match &self.data {
+                Data::F32(v) => view(v),
+                Data::I32(v) => view(v),
+                Data::U8(v) => std::borrow::Cow::Borrowed(v),
+            }
+        }
+        #[cfg(not(target_endian = "little"))]
+        {
+            std::borrow::Cow::Owned(match &self.data {
+                Data::F32(v) => {
+                    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+                }
+                Data::I32(v) => {
+                    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+                }
+                Data::U8(v) => v.clone(),
+            })
+        }
+    }
+
+    /// Validate against a manifest spec.
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        ensure!(
+            self.dtype() == spec.dtype,
+            "arg {:?}: dtype {:?} != spec {:?}",
+            spec.name,
+            self.dtype(),
+            spec.dtype
+        );
+        ensure!(
+            self.shape == spec.shape,
+            "arg {:?}: shape {:?} != spec {:?}",
+            spec.name,
+            self.shape,
+            spec.shape
+        );
+        Ok(())
+    }
+
+    /// Load a raw little-endian f32 binary (initial parameters).
+    pub fn from_f32_file(path: &std::path::Path, shape: Vec<usize>) -> Result<Self> {
+        let raw = std::fs::read(path)?;
+        let n: usize = shape.iter().product();
+        ensure!(
+            raw.len() == n * 4,
+            "{}: {} bytes but shape {:?} needs {}",
+            path.display(),
+            raw.len(),
+            shape,
+            n * 4
+        );
+        let data = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(HostTensor::f32(shape, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_accessors() {
+        let t = HostTensor::f32(vec![2, 3], vec![1.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.byte_len(), 24);
+        assert_eq!(t.dtype(), DType::F32);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        let s = HostTensor::scalar_f32(3.5);
+        assert_eq!(s.scalar().unwrap(), 3.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn bytes_are_little_endian() {
+        let t = HostTensor::i32(vec![2], vec![1, -1]);
+        assert_eq!(t.bytes(), vec![1, 0, 0, 0, 255, 255, 255, 255]);
+        let f = HostTensor::f32(vec![1], vec![1.0]);
+        assert_eq!(f.bytes(), 1.0f32.to_le_bytes().to_vec());
+    }
+
+    #[test]
+    fn check_against_spec() {
+        let spec = TensorSpec {
+            name: "x".into(),
+            shape: vec![4, 2],
+            dtype: DType::F32,
+        };
+        assert!(HostTensor::f32(vec![4, 2], vec![0.0; 8]).check(&spec).is_ok());
+        assert!(HostTensor::f32(vec![2, 4], vec![0.0; 8]).check(&spec).is_err());
+        assert!(HostTensor::i32(vec![4, 2], vec![0; 8]).check(&spec).is_err());
+        let z = HostTensor::zeros(&spec);
+        assert!(z.check(&spec).is_ok());
+    }
+
+    #[test]
+    fn f32_file_roundtrip() {
+        let path = std::env::temp_dir()
+            .join(format!("dlio-tensor-{}.bin", std::process::id()));
+        let vals = [0.5f32, -2.25, 1e-3, 7.0];
+        let bytes: Vec<u8> =
+            vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        let t = HostTensor::from_f32_file(&path, vec![2, 2]).unwrap();
+        assert_eq!(t.as_f32().unwrap(), &vals);
+        assert!(HostTensor::from_f32_file(&path, vec![3]).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

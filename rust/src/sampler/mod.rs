@@ -1,0 +1,350 @@
+//! Mini-batch sampling: the global shuffler and the two partitioning
+//! schemes the paper compares.
+//!
+//! * [`GlobalShuffler`] — every learner derives the *identical* epoch
+//!   permutation from (seed, epoch), with no communication (paper §II-A
+//!   step 1: "each learner acquires the same global mini-batch sequence").
+//! * [`reg_partition`] — **Reg**: the conventional scheme; the global
+//!   mini-batch sequence is split into even, contiguous slices (Fig. 4).
+//! * [`loc_partition`] — **Loc**: the locality-aware scheme; each learner
+//!   claims the samples of the global mini-batch that its local cache
+//!   holds, cache misses are assigned to the least-loaded learners, and
+//!   Algorithm 1 then balances the loads (Fig. 5, §V-A).
+
+pub mod plan;
+
+pub use plan::{EpochPlan, MiniBatch};
+
+use crate::cache::CacheDirectory;
+use crate::util::rng::Rng;
+
+/// Derives identical epoch permutations on every learner from a shared seed.
+#[derive(Clone, Debug)]
+pub struct GlobalShuffler {
+    seed: u64,
+    n_samples: u64,
+}
+
+impl GlobalShuffler {
+    pub fn new(seed: u64, n_samples: u64) -> Self {
+        GlobalShuffler { seed, n_samples }
+    }
+
+    pub fn n_samples(&self) -> u64 {
+        self.n_samples
+    }
+
+    /// The random permutation of all samples for `epoch`. Deterministic:
+    /// every learner calling this gets byte-identical output.
+    pub fn epoch_permutation(&self, epoch: u64) -> Vec<u32> {
+        let mut rng = Rng::new(self.seed).substream(0xE90C).substream(epoch);
+        rng.permutation(self.n_samples as usize)
+    }
+}
+
+/// A learner's share of one global mini-batch: the sample ids it must load
+/// and train with this step.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Assignment {
+    pub sample_ids: Vec<u32>,
+}
+
+/// **Reg**: split the global sequence into contiguous, even slices.
+/// When `batch.len()` is not divisible by `p`, the first `len % p`
+/// learners take one extra sample (deterministic on every learner).
+pub fn reg_partition(batch: &[u32], p: usize) -> Vec<Assignment> {
+    assert!(p > 0);
+    let base = batch.len() / p;
+    let rem = batch.len() % p;
+    let mut out = Vec::with_capacity(p);
+    let mut cursor = 0;
+    for j in 0..p {
+        let take = base + usize::from(j < rem);
+        out.push(Assignment {
+            sample_ids: batch[cursor..cursor + take].to_vec(),
+        });
+        cursor += take;
+    }
+    debug_assert_eq!(cursor, batch.len());
+    out
+}
+
+/// Where a Loc sample comes from, for accounting and for the loader.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Provenance {
+    /// In the learner's own cache.
+    LocalCache,
+    /// Moved from another learner's cache for load balancing.
+    RemoteCache { from: usize },
+    /// Not in the aggregated cache; read from the storage system.
+    Storage,
+}
+
+/// A Loc assignment with provenance per sample.
+#[derive(Clone, Debug, Default)]
+pub struct LocAssignment {
+    pub sample_ids: Vec<u32>,
+    pub provenance: Vec<Provenance>,
+}
+
+impl LocAssignment {
+    pub fn len(&self) -> usize {
+        self.sample_ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sample_ids.is_empty()
+    }
+
+    /// Bytes-free view used by the coordinator.
+    pub fn to_assignment(&self) -> Assignment {
+        Assignment { sample_ids: self.sample_ids.clone() }
+    }
+}
+
+/// Statistics of one Loc partition step (feeds Fig. 6 and EXPERIMENTS.md).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LocStats {
+    pub local_hits: usize,
+    pub balance_moves: usize,
+    pub storage_misses: usize,
+}
+
+impl LocStats {
+    /// The paper's "imbalance traffic volume percentage": moved samples
+    /// over mini-batch size.
+    pub fn imbalance_pct(&self, batch_len: usize) -> f64 {
+        100.0 * self.balance_moves as f64 / batch_len.max(1) as f64
+    }
+}
+
+/// **Loc**: locality-aware partition of one global mini-batch.
+///
+/// 1. Each sample is claimed by the learner whose cache holds it
+///    (everyone consults the same replicated [`CacheDirectory`], so no
+///    communication is needed).
+/// 2. Samples absent from the aggregated cache are assigned to learners
+///    with the smallest claim (they will be read from storage — this also
+///    helps balance).
+/// 3. [`crate::balance::balance`] computes the minimal transfer schedule;
+///    overloaded learners hand their *latest-claimed* samples to
+///    underloaded ones (deterministic, identical on every learner).
+pub fn loc_partition(
+    batch: &[u32],
+    dir: &CacheDirectory,
+    p: usize,
+) -> (Vec<LocAssignment>, LocStats) {
+    assert!(p > 0);
+    let mut claims: Vec<Vec<(u32, Provenance)>> = vec![Vec::new(); p];
+    let mut misses: Vec<u32> = Vec::new();
+    for &s in batch {
+        match dir.owner(s) {
+            Some(owner) => {
+                debug_assert!(owner < p, "directory owner out of range");
+                claims[owner].push((s, Provenance::LocalCache));
+            }
+            None => misses.push(s),
+        }
+    }
+    let mut stats = LocStats {
+        local_hits: batch.len() - misses.len(),
+        ..Default::default()
+    };
+    stats.storage_misses = misses.len();
+
+    // Step 2: give each miss to the currently least-loaded learner.
+    // (Deterministic: ties break on learner index.)
+    for s in misses {
+        let (j, _) = claims
+            .iter()
+            .enumerate()
+            .min_by_key(|(j, c)| (c.len(), *j))
+            .unwrap();
+        claims[j].push((s, Provenance::Storage));
+    }
+
+    // Step 3: balance with Algorithm 1.
+    let loads: Vec<u64> = claims.iter().map(|c| c.len() as u64).collect();
+    let schedule = crate::balance::balance(&loads);
+    for t in &schedule {
+        let from = t.from;
+        let to = t.to;
+        for _ in 0..t.amount {
+            let (s, prov) = claims[from].pop().expect("surplus underflow");
+            // A sample that was going to be read from storage anyway keeps
+            // its Storage provenance (the receiving learner reads it);
+            // cached samples become remote-cache transfers.
+            let new_prov = match prov {
+                Provenance::Storage => Provenance::Storage,
+                _ => {
+                    stats.balance_moves += 1;
+                    Provenance::RemoteCache { from }
+                }
+            };
+            claims[to].push((s, new_prov));
+        }
+    }
+
+    let out = claims
+        .into_iter()
+        .map(|c| {
+            let (sample_ids, provenance) = c.into_iter().unzip();
+            LocAssignment { sample_ids, provenance }
+        })
+        .collect();
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::CacheDirectory;
+    use crate::util::prop;
+
+    #[test]
+    fn shuffler_identical_across_learners() {
+        let a = GlobalShuffler::new(99, 1000);
+        let b = GlobalShuffler::new(99, 1000);
+        assert_eq!(a.epoch_permutation(0), b.epoch_permutation(0));
+        assert_eq!(a.epoch_permutation(7), b.epoch_permutation(7));
+        assert_ne!(a.epoch_permutation(0), a.epoch_permutation(1));
+    }
+
+    #[test]
+    fn shuffler_permutation_is_bijection() {
+        let s = GlobalShuffler::new(5, 500);
+        let p = s.epoch_permutation(3);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        let expect: Vec<u32> = (0..500).collect();
+        assert_eq!(sorted, expect);
+    }
+
+    #[test]
+    fn reg_partition_even_and_covering() {
+        let batch: Vec<u32> = (0..120).collect();
+        let parts = reg_partition(&batch, 8);
+        assert_eq!(parts.len(), 8);
+        let mut all: Vec<u32> = Vec::new();
+        for p in &parts {
+            assert_eq!(p.sample_ids.len(), 15);
+            all.extend(&p.sample_ids);
+        }
+        assert_eq!(all, batch);
+    }
+
+    #[test]
+    fn reg_partition_remainder_spread() {
+        let batch: Vec<u32> = (0..10).collect();
+        let parts = reg_partition(&batch, 4);
+        let sizes: Vec<usize> =
+            parts.iter().map(|a| a.sample_ids.len()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+    }
+
+    fn striped_directory(n: u32, p: usize) -> CacheDirectory {
+        let mut dir = CacheDirectory::new(n as u64);
+        for s in 0..n {
+            dir.set_owner(s, (s as usize) % p);
+        }
+        dir
+    }
+
+    #[test]
+    fn loc_partition_covers_batch_exactly_once() {
+        let dir = striped_directory(1000, 7);
+        let batch: Vec<u32> = (0..350).map(|i| (i * 3) % 1000).collect();
+        let (parts, stats) = loc_partition(&batch, &dir, 7);
+        let mut all: Vec<u32> =
+            parts.iter().flat_map(|a| a.sample_ids.clone()).collect();
+        all.sort_unstable();
+        let mut want = batch.clone();
+        want.sort_unstable();
+        assert_eq!(all, want);
+        assert_eq!(stats.local_hits + stats.storage_misses, batch.len());
+    }
+
+    #[test]
+    fn loc_partition_balances_loads() {
+        let dir = striped_directory(997, 5);
+        let batch: Vec<u32> = (0..100).collect();
+        let (parts, _) = loc_partition(&batch, &dir, 5);
+        for p in &parts {
+            assert_eq!(p.len(), 20);
+        }
+    }
+
+    #[test]
+    fn loc_partition_misses_become_storage_loads() {
+        // Directory covers only even ids.
+        let mut dir = CacheDirectory::new(100);
+        for s in (0..100u32).step_by(2) {
+            dir.set_owner(s, (s as usize / 2) % 4);
+        }
+        let batch: Vec<u32> = (0..40).collect(); // half odd => 20 misses
+        let (parts, stats) = loc_partition(&batch, &dir, 4);
+        assert_eq!(stats.storage_misses, 20);
+        assert_eq!(stats.local_hits, 20);
+        let storage_count: usize = parts
+            .iter()
+            .flat_map(|a| &a.provenance)
+            .filter(|p| matches!(p, Provenance::Storage))
+            .count();
+        assert_eq!(storage_count, 20);
+    }
+
+    #[test]
+    fn prop_loc_partition_invariants() {
+        prop::check("loc partition invariants", 150, |rng| {
+            let p = 1 + rng.next_below(16) as usize;
+            let n = (p as u64 * (1 + rng.next_below(50))) as u32;
+            // Random directory: each sample cached on a random learner, or
+            // missing with prob ~1/8.
+            let mut dir = CacheDirectory::new(n as u64);
+            for s in 0..n {
+                if rng.next_below(8) != 0 {
+                    dir.set_owner(s, rng.next_below(p as u64) as usize);
+                }
+            }
+            let b = (1 + rng.next_below(n.max(2) as u64 / 2)) as usize;
+            let mut ids: Vec<u32> = (0..n).collect();
+            rng.shuffle(&mut ids);
+            let batch = &ids[..b];
+            let (parts, stats) = loc_partition(batch, &dir, p);
+
+            // Exactly-once coverage.
+            let mut all: Vec<u32> =
+                parts.iter().flat_map(|a| a.sample_ids.clone()).collect();
+            all.sort_unstable();
+            let mut want = batch.to_vec();
+            want.sort_unstable();
+            assert_eq!(all, want);
+
+            // Balanced: sizes differ by at most 1.
+            let sizes: Vec<usize> = parts.iter().map(|a| a.len()).collect();
+            let mn = *sizes.iter().min().unwrap();
+            let mx = *sizes.iter().max().unwrap();
+            assert!(mx - mn <= 1, "unbalanced: {sizes:?}");
+
+            // Provenance counts are consistent.
+            assert_eq!(stats.local_hits + stats.storage_misses, b);
+            let remote: usize = parts
+                .iter()
+                .flat_map(|a| &a.provenance)
+                .filter(|p| matches!(p, Provenance::RemoteCache { .. }))
+                .count();
+            assert_eq!(remote, stats.balance_moves);
+        });
+    }
+
+    #[test]
+    fn loc_partition_is_deterministic() {
+        let dir = striped_directory(512, 6);
+        let batch: Vec<u32> = (0..128).map(|i| (i * 5) % 512).collect();
+        let (a, _) = loc_partition(&batch, &dir, 6);
+        let (b, _) = loc_partition(&batch, &dir, 6);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.sample_ids, y.sample_ids);
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Epoch plans: turning a global permutation into a sequence of global
+//! mini-batches (paper §II-A: "a step refers to training a single
+//! mini-batch, an epoch to training the whole dataset in multiple steps").
+
+use super::GlobalShuffler;
+
+/// One global mini-batch: the step index plus the slice of the epoch
+/// permutation that all learners collectively load this step.
+#[derive(Clone, Debug)]
+pub struct MiniBatch<'a> {
+    pub step: usize,
+    pub sample_ids: &'a [u32],
+}
+
+/// The full plan for one epoch. Identical on every learner (it is a pure
+/// function of the shuffler seed, epoch index and global batch size).
+#[derive(Clone, Debug)]
+pub struct EpochPlan {
+    epoch: u64,
+    global_batch: usize,
+    perm: Vec<u32>,
+    /// Whether a trailing partial batch is kept (`true`) or dropped
+    /// (`false`, the common practice and our default — compiled batch
+    /// shapes are static).
+    keep_partial: bool,
+}
+
+impl EpochPlan {
+    pub fn new(shuffler: &GlobalShuffler, epoch: u64, global_batch: usize) -> Self {
+        assert!(global_batch > 0);
+        EpochPlan {
+            epoch,
+            global_batch,
+            perm: shuffler.epoch_permutation(epoch),
+            keep_partial: false,
+        }
+    }
+
+    pub fn with_partial(mut self, keep: bool) -> Self {
+        self.keep_partial = keep;
+        self
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn global_batch(&self) -> usize {
+        self.global_batch
+    }
+
+    /// Number of steps in this epoch.
+    pub fn steps(&self) -> usize {
+        let full = self.perm.len() / self.global_batch;
+        if self.keep_partial && self.perm.len() % self.global_batch != 0 {
+            full + 1
+        } else {
+            full
+        }
+    }
+
+    /// The `step`-th global mini-batch.
+    pub fn batch(&self, step: usize) -> MiniBatch<'_> {
+        assert!(step < self.steps(), "step {step} out of range");
+        let lo = step * self.global_batch;
+        let hi = (lo + self.global_batch).min(self.perm.len());
+        MiniBatch { step, sample_ids: &self.perm[lo..hi] }
+    }
+
+    /// Iterate over all mini-batches of the epoch.
+    pub fn iter(&self) -> impl Iterator<Item = MiniBatch<'_>> {
+        (0..self.steps()).map(move |s| self.batch(s))
+    }
+
+    /// Total samples covered by this plan.
+    pub fn covered(&self) -> usize {
+        self.steps().saturating_mul(self.global_batch).min(self.perm.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_dataset_in_disjoint_batches() {
+        let sh = GlobalShuffler::new(1, 1000);
+        let plan = EpochPlan::new(&sh, 0, 128);
+        assert_eq!(plan.steps(), 7); // 1000/128 = 7 full, partial dropped
+        let mut seen = std::collections::HashSet::new();
+        for mb in plan.iter() {
+            assert_eq!(mb.sample_ids.len(), 128);
+            for &s in mb.sample_ids {
+                assert!(seen.insert(s), "sample {s} appeared twice");
+            }
+        }
+        assert_eq!(seen.len(), 896);
+    }
+
+    #[test]
+    fn keep_partial_includes_tail() {
+        let sh = GlobalShuffler::new(1, 100);
+        let plan = EpochPlan::new(&sh, 0, 32).with_partial(true);
+        assert_eq!(plan.steps(), 4);
+        assert_eq!(plan.batch(3).sample_ids.len(), 4);
+        let total: usize = plan.iter().map(|b| b.sample_ids.len()).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn plans_identical_across_replicas() {
+        let a = EpochPlan::new(&GlobalShuffler::new(9, 256), 5, 64);
+        let b = EpochPlan::new(&GlobalShuffler::new(9, 256), 5, 64);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.sample_ids, y.sample_ids);
+        }
+    }
+
+    #[test]
+    fn different_epochs_reshuffle() {
+        let sh = GlobalShuffler::new(9, 256);
+        let a = EpochPlan::new(&sh, 0, 64);
+        let b = EpochPlan::new(&sh, 1, 64);
+        assert_ne!(a.batch(0).sample_ids, b.batch(0).sample_ids);
+    }
+}

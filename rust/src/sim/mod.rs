@@ -1,0 +1,502 @@
+//! Discrete-event cluster simulator.
+//!
+//! Simulates synchronous mini-batch SGD data loading at paper scale (up to
+//! 256 nodes × 4 learners) in *virtual time*, reproducing the phenomena the
+//! in-process pipeline cannot reach on one machine (DESIGN.md §3):
+//! the Fig. 1 plateau, the Figs. 8–11 scaling curves, and Fig. 12's
+//! end-to-end epoch times.
+//!
+//! Fidelity model (step-granular, fluid within a step):
+//!
+//! * **Storage** — one shared fluid server of rate R bytes/s: a step that
+//!   pulls `b` bytes from storage (all nodes combined) occupies it for
+//!   `b/R` (the token-bucket behaviour of the live substrate, in virtual
+//!   time).
+//! * **Interconnect** — per-link rate R_c; a step's remote traffic costs
+//!   `max_j(bytes received by node j)/R_c` (links run in parallel).
+//! * **Preprocessing** — per-node rate `u_thread × min(workers·threads,
+//!   cores)`; nodes preprocess their own share in parallel.
+//! * **Training** — per-node rate V on its local batch + a per-step
+//!   all-reduce charge.
+//! * **Prefetch pipeline** — supply of step s may run ahead of compute by
+//!   up to `prefetch` steps; epoch time follows the classic two-stage
+//!   pipeline recurrence, so loading overlaps training exactly as the
+//!   paper's Fig. 2 timeline describes.
+//!
+//! Sample-to-cache placement and mini-batch composition use the same
+//! deterministic RNG as the live pipeline, so imbalance statistics
+//! (Fig. 6) come from real balls-in-bins draws, and the Loc balance
+//! traffic is computed by the *actual* Algorithm 1 on those draws.
+
+pub mod presets;
+
+use crate::balance;
+use crate::storage::Catalog;
+use crate::util::Rng;
+
+/// Loading scheme simulated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// Regular loader: every sample comes from storage every epoch.
+    Reg,
+    /// Distributed caching (§III-C): samples come from the aggregated
+    /// cache, (p−1)/p of them over the interconnect.
+    DistCache,
+    /// Locality-aware (§V): local hits + Algorithm 1 balance moves.
+    Loc,
+}
+
+/// Simulation configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub catalog: Catalog,
+    /// Number of compute nodes p.
+    pub nodes: usize,
+    /// Learners (GPUs) per node; the paper uses 4.
+    pub learners_per_node: usize,
+    /// Per-learner batch size (paper: 128 for Fig. 1).
+    pub per_learner_batch: usize,
+    /// Aggregate storage bandwidth R, bytes/s.
+    pub r_storage_bps: f64,
+    /// Per-link interconnect bandwidth R_c, bytes/s.
+    pub rc_link_bps: f64,
+    /// Preprocess rate of one worker thread, samples/s (at preprocess
+    /// weight 1.0; scaled by the catalog's weight).
+    pub u_thread_sps: f64,
+    pub workers: usize,
+    pub threads_per_worker: usize,
+    /// Physical cores per node (caps worker×thread parallelism; 44 on
+    /// Lassen).
+    pub cores_per_node: usize,
+    /// Per-node local-cache fetch + batch assembly bandwidth, bytes/s
+    /// (DRAM-read path of cached samples; the Loc floor for datasets with
+    /// no preprocessing, e.g. MuMMI).
+    pub local_fetch_bps: f64,
+    /// Training rate per node, samples/s; 0 = loading-only experiment.
+    pub v_node_sps: f64,
+    /// Per-step all-reduce cost in seconds (0 for loading-only).
+    pub allreduce_s: f64,
+    /// Prefetch depth (batches a node's loader may run ahead).
+    pub prefetch: usize,
+    pub scheme: Scheme,
+    /// Cached fraction α (Loc/DistCache; 1.0 = fully cached).
+    pub alpha: f64,
+    /// Algorithm 1 load balancing (ablation: §V-C stragglers). When off,
+    /// Loc learners train with their raw claims; the step's compute time
+    /// is gated by the most-loaded node.
+    pub balance_enabled: bool,
+    pub seed: u64,
+}
+
+impl SimConfig {
+    /// Per-node local batch (all learners of a node pooled).
+    pub fn node_batch(&self) -> usize {
+        self.learners_per_node * self.per_learner_batch
+    }
+
+    pub fn global_batch(&self) -> usize {
+        self.node_batch() * self.nodes
+    }
+
+    /// Steps per epoch (partial batch dropped, as in the live pipeline).
+    pub fn steps(&self) -> usize {
+        (self.catalog.n_samples as usize) / self.global_batch()
+    }
+
+    /// Effective preprocess rate of one node, samples/s.
+    pub fn u_node_sps(&self) -> f64 {
+        if self.catalog.preprocess.0 <= 0.0 {
+            return f64::INFINITY;
+        }
+        let parallelism = (self.workers * self.threads_per_worker.max(1))
+            .min(self.cores_per_node) as f64;
+        self.u_thread_sps * parallelism / self.catalog.preprocess.0
+    }
+}
+
+/// Result of one simulated epoch.
+#[derive(Clone, Debug, Default)]
+pub struct SimResult {
+    pub epoch_time_s: f64,
+    /// Time compute sat idle waiting for data (Fig. 1 blue).
+    pub wait_time_s: f64,
+    /// Pure compute time (Fig. 1 orange); 0 for loading-only runs.
+    pub train_time_s: f64,
+    pub storage_bytes: u64,
+    pub remote_bytes: u64,
+    pub local_hits: u64,
+    /// Per-step imbalance traffic percentage (Fig. 6 samples).
+    pub imbalance_pct: Vec<f64>,
+    pub steps: usize,
+}
+
+impl SimResult {
+    pub fn total_loaded_bytes(&self) -> u64 {
+        self.storage_bytes + self.remote_bytes
+    }
+}
+
+/// Draw the per-node cache-claim histogram for one global mini-batch:
+/// `B_global` balls into `p` bins (uniform random placement of cached
+/// samples), plus α-misses.
+/// Returns (claims per node, misses).
+fn draw_claims(rng: &mut Rng, global_batch: usize, p: usize, alpha: f64) -> (Vec<u64>, u64) {
+    let mut claims = vec![0u64; p];
+    let mut misses = 0u64;
+    for _ in 0..global_batch {
+        if alpha < 1.0 && !rng.next_bool(alpha) {
+            misses += 1;
+        } else {
+            claims[rng.next_below(p as u64) as usize] += 1;
+        }
+    }
+    (claims, misses)
+}
+
+/// Per-step supply/traffic numbers.
+struct StepTraffic {
+    storage_bytes: f64,
+    /// Max bytes received over any single node's link.
+    max_link_bytes: f64,
+    remote_bytes_total: f64,
+    local_hits: u64,
+    imbalance_pct: f64,
+    /// Largest per-node batch this step (straggler gate when unbalanced;
+    /// equals the node batch when balanced).
+    max_node_batch: f64,
+}
+
+fn step_traffic(cfg: &SimConfig, rng: &mut Rng) -> StepTraffic {
+    let p = cfg.nodes;
+    let bg = cfg.global_batch();
+    let avg = cfg.catalog.avg_bytes as f64;
+    match cfg.scheme {
+        Scheme::Reg => StepTraffic {
+            storage_bytes: bg as f64 * avg,
+            max_link_bytes: 0.0,
+            remote_bytes_total: 0.0,
+            local_hits: 0,
+            imbalance_pct: 0.0,
+            max_node_batch: (bg / p) as f64,
+        },
+        Scheme::DistCache => {
+            // Samples come from the aggregated cache; each node's slice is
+            // fetched from the owners: (p-1)/p of it crosses the network.
+            let cached = (bg as f64) * cfg.alpha;
+            let missed = bg as f64 - cached;
+            let per_node_remote =
+                cached / p as f64 * ((p - 1) as f64 / p as f64) * avg;
+            StepTraffic {
+                storage_bytes: missed * avg,
+                max_link_bytes: per_node_remote,
+                remote_bytes_total: per_node_remote * p as f64,
+                local_hits: (cached / p as f64) as u64 * p as u64,
+                imbalance_pct: 0.0,
+                max_node_batch: (bg / p) as f64,
+            }
+        }
+        Scheme::Loc => {
+            let (claims, misses) = draw_claims(rng, bg, p, cfg.alpha);
+            // Misses go to the least-loaded nodes (live pipeline policy);
+            // the balance schedule then equalizes the rest. For traffic we
+            // track: deficit-filling transfers of *cached* samples.
+            let mut loads = claims.clone();
+            // Assign misses to smallest loads (they are read from storage
+            // by the receiving node, not transferred).
+            for _ in 0..misses {
+                let j = (0..p).min_by_key(|&j| loads[j]).unwrap();
+                loads[j] += 1;
+            }
+            if !cfg.balance_enabled {
+                // Ablation: train with raw claims; the slowest (largest)
+                // node gates the synchronous step.
+                let max_claim = *loads.iter().max().unwrap() as f64;
+                return StepTraffic {
+                    storage_bytes: misses as f64 * avg,
+                    max_link_bytes: 0.0,
+                    remote_bytes_total: 0.0,
+                    local_hits: claims.iter().sum(),
+                    imbalance_pct: 0.0,
+                    max_node_batch: max_claim,
+                };
+            }
+            let schedule = balance::balance(&loads);
+            let moved = balance::moved(&schedule);
+            let mut received = vec![0u64; p];
+            for t in &schedule {
+                received[t.to] += t.amount;
+            }
+            let max_rx = received.iter().copied().max().unwrap_or(0);
+            let local: u64 = claims.iter().sum::<u64>() - moved.min(claims.iter().sum());
+            StepTraffic {
+                storage_bytes: misses as f64 * avg,
+                max_link_bytes: max_rx as f64 * avg,
+                remote_bytes_total: moved as f64 * avg,
+                local_hits: local,
+                imbalance_pct: 100.0 * moved as f64 / bg as f64,
+                max_node_batch: (bg / p) as f64,
+            }
+        }
+    }
+}
+
+/// Simulate one epoch (steady-state; for Loc this models epochs ≥ 1,
+/// after population).
+pub fn simulate_epoch(cfg: &SimConfig) -> SimResult {
+    let steps = cfg.steps();
+    assert!(steps > 0, "dataset smaller than one global batch");
+    let mut rng = Rng::new(cfg.seed).substream(0xD35);
+    let u_node = cfg.u_node_sps();
+
+    // Balanced steps compute exactly node_batch per node; unbalanced steps
+    // are gated by the most-loaded node (stragglers, §V-C).
+    let compute_time = |max_node_batch: f64| -> f64 {
+        if cfg.v_node_sps > 0.0 {
+            max_node_batch / cfg.v_node_sps + cfg.allreduce_s
+        } else {
+            0.0
+        }
+    };
+
+    // Two-stage pipeline with bounded prefetch.
+    let q = cfg.prefetch.max(1);
+    let mut supply_end = vec![0.0f64; steps];
+    let mut compute_end = vec![0.0f64; steps];
+    let mut result = SimResult { steps, ..Default::default() };
+
+    for s in 0..steps {
+        let tr = step_traffic(cfg, &mut rng);
+        let t_compute = compute_time(tr.max_node_batch);
+        // Supply stages: shared storage (serialized across nodes), then
+        // parallel per-link exchange, then parallel per-node preprocess.
+        let t_storage = tr.storage_bytes / cfg.r_storage_bps;
+        let t_remote = tr.max_link_bytes / cfg.rc_link_bps;
+        let t_pre = if u_node.is_finite() {
+            tr.max_node_batch / u_node
+        } else {
+            0.0
+        };
+        // Per-node batch assembly (local fetch of the node's share).
+        let t_local = tr.max_node_batch * cfg.catalog.avg_bytes as f64
+            / cfg.local_fetch_bps;
+        let t_supply = t_storage + t_remote + t_pre + t_local;
+
+        // Loader may start this step's supply once the previous supply is
+        // done AND the prefetch window allows (compute of step s-q done).
+        let window_gate = if s >= q { compute_end[s - q] } else { 0.0 };
+        let prev_supply = if s > 0 { supply_end[s - 1] } else { 0.0 };
+        let supply_start = prev_supply.max(window_gate);
+        supply_end[s] = supply_start + t_supply;
+
+        // Compute starts when the batch is ready and the previous step's
+        // compute (incl. sync) is done.
+        let prev_compute = if s > 0 { compute_end[s - 1] } else { 0.0 };
+        let compute_start = prev_compute.max(supply_end[s]);
+        result.wait_time_s += compute_start - prev_compute;
+        compute_end[s] = compute_start + t_compute;
+
+        result.storage_bytes += tr.storage_bytes as u64;
+        result.remote_bytes += tr.remote_bytes_total as u64;
+        result.local_hits += tr.local_hits;
+        result.train_time_s += t_compute;
+        if cfg.scheme == Scheme::Loc && cfg.balance_enabled {
+            result.imbalance_pct.push(tr.imbalance_pct);
+        }
+    }
+
+    result.epoch_time_s = if cfg.v_node_sps > 0.0 {
+        compute_end[steps - 1]
+    } else {
+        supply_end[steps - 1]
+    };
+    result
+}
+
+/// Convenience: epoch time averaged over `epochs` simulated epochs with
+/// distinct seeds (steady state).
+pub fn simulate_epochs(cfg: &SimConfig, epochs: u64) -> SimResult {
+    let mut agg = SimResult::default();
+    for e in 0..epochs.max(1) {
+        let mut c = cfg.clone();
+        c.seed = cfg.seed.wrapping_add(e);
+        let r = simulate_epoch(&c);
+        agg.epoch_time_s += r.epoch_time_s;
+        agg.wait_time_s += r.wait_time_s;
+        agg.train_time_s += r.train_time_s;
+        agg.storage_bytes += r.storage_bytes;
+        agg.remote_bytes += r.remote_bytes;
+        agg.local_hits += r.local_hits;
+        agg.imbalance_pct.extend(r.imbalance_pct);
+        agg.steps = r.steps;
+    }
+    let k = epochs.max(1) as f64;
+    agg.epoch_time_s /= k;
+    agg.wait_time_s /= k;
+    agg.train_time_s /= k;
+    agg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::presets;
+    use super::*;
+
+    #[test]
+    fn reg_loading_plateaus_with_scale() {
+        // Fig. 1 / Fig. 8 shape: Reg loading time stops decreasing.
+        let t = |nodes| {
+            let cfg = presets::loading_only(
+                Catalog::imagenet_1k(),
+                nodes,
+                Scheme::Reg,
+                true,
+            );
+            simulate_epoch(&cfg).epoch_time_s
+        };
+        let t4 = t(4);
+        let t16 = t(16);
+        let t64 = t(64);
+        let t256 = t(256);
+        assert!(t4 > t16, "small scale should still improve: {t4} vs {t16}");
+        // Past the crossover the curve is flat (within 25%).
+        assert!(
+            (t64 - t256).abs() / t64 < 0.25,
+            "no plateau: t64={t64} t256={t256}"
+        );
+    }
+
+    #[test]
+    fn loc_keeps_scaling() {
+        let t = |nodes| {
+            let cfg = presets::loading_only(
+                Catalog::imagenet_1k(),
+                nodes,
+                Scheme::Loc,
+                true,
+            );
+            simulate_epoch(&cfg).epoch_time_s
+        };
+        let t16 = t(16);
+        let t256 = t(256);
+        assert!(
+            t16 / t256 > 6.0,
+            "loc must keep scaling: t16={t16} t256={t256}"
+        );
+    }
+
+    #[test]
+    fn loc_beats_reg_at_scale_by_tens() {
+        let run = |scheme| {
+            let cfg = presets::loading_only(
+                Catalog::imagenet_1k(),
+                256,
+                scheme,
+                true,
+            );
+            simulate_epoch(&cfg).epoch_time_s
+        };
+        let ratio = run(Scheme::Reg) / run(Scheme::Loc);
+        assert!(
+            (10.0..120.0).contains(&ratio),
+            "256-node speedup {ratio} out of the paper's regime (~34x)"
+        );
+    }
+
+    #[test]
+    fn loc_storage_traffic_is_miss_only() {
+        let mut cfg = presets::loading_only(
+            Catalog::imagenet_1k(),
+            32,
+            Scheme::Loc,
+            true,
+        );
+        cfg.alpha = 1.0;
+        let r = simulate_epoch(&cfg);
+        assert_eq!(r.storage_bytes, 0);
+        assert!(r.remote_bytes > 0); // balance moves
+        // Balance volume ≈ imbalance% of total ≪ dataset size.
+        let total = cfg.catalog.total_bytes() as f64;
+        assert!(
+            (r.remote_bytes as f64) < total * 0.10,
+            "balance traffic too large: {} of {}",
+            r.remote_bytes,
+            total
+        );
+    }
+
+    #[test]
+    fn imbalance_medians_match_fig6() {
+        // Fig. 6: median imbalance ≈ 6.9% / 4.8% / 3.4% for local batch
+        // 32 / 64 / 128.
+        for (b, expect) in [(32, 6.9), (64, 4.8), (128, 3.4)] {
+            let mut cfg = presets::loading_only(
+                Catalog::imagenet_1k(),
+                32,
+                Scheme::Loc,
+                true,
+            );
+            cfg.learners_per_node = 1;
+            cfg.per_learner_batch = b;
+            let r = simulate_epochs(&cfg, 3);
+            let mut v = r.imbalance_pct.clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let median = crate::util::stats::percentile(&v, 50.0);
+            assert!(
+                (median - expect).abs() < expect * 0.35,
+                "B={b}: median {median:.2}% vs paper {expect}%"
+            );
+        }
+    }
+
+    #[test]
+    fn training_dominates_below_crossover() {
+        // Fig. 12 16-node regime: epoch cost ≈ training cost, wait ≈ 0.
+        let cfg = presets::training(Catalog::imagenet_1k(), 8, Scheme::Reg);
+        let r = simulate_epoch(&cfg);
+        assert!(r.wait_time_s < r.train_time_s * 0.15);
+        assert!((r.epoch_time_s - r.train_time_s) / r.train_time_s < 0.2);
+    }
+
+    #[test]
+    fn waiting_appears_above_crossover_for_reg_only() {
+        let reg = simulate_epoch(&presets::training(
+            Catalog::imagenet_1k(),
+            64,
+            Scheme::Reg,
+        ));
+        let loc = simulate_epoch(&presets::training(
+            Catalog::imagenet_1k(),
+            64,
+            Scheme::Loc,
+        ));
+        assert!(
+            reg.wait_time_s > reg.train_time_s * 0.5,
+            "reg should be starved at 64 nodes: wait={} train={}",
+            reg.wait_time_s,
+            reg.train_time_s
+        );
+        assert!(
+            loc.wait_time_s < loc.train_time_s * 0.25,
+            "loc should hide loading at 64 nodes: wait={} train={}",
+            loc.wait_time_s,
+            loc.train_time_s
+        );
+        assert!(loc.epoch_time_s < reg.epoch_time_s);
+    }
+
+    #[test]
+    fn mummi_has_no_preprocess_cost() {
+        let cfg = presets::loading_only(Catalog::mummi(), 16, Scheme::Reg, false);
+        assert!(cfg.u_node_sps().is_infinite());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg =
+            presets::loading_only(Catalog::ucf101_rgb(), 16, Scheme::Loc, true);
+        let a = simulate_epoch(&cfg);
+        let b = simulate_epoch(&cfg);
+        assert_eq!(a.epoch_time_s, b.epoch_time_s);
+        assert_eq!(a.remote_bytes, b.remote_bytes);
+    }
+}

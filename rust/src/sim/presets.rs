@@ -1,0 +1,100 @@
+//! Lassen-calibrated simulation presets (DESIGN.md §6).
+//!
+//! Calibration anchors from the paper:
+//! * single-learner peak loading rate ≈ 800 samples/s (Fig. 7) — a per-node
+//!   GPFS-share ceiling (~94 MB/s at 117 KiB/sample), reproduced by the
+//!   live Fig. 7 harness's storage throttle;
+//! * Loc's ImageNet loading floor at 256 nodes (34x headline) implies a
+//!   per-node preprocess rate ≈ 5000 samples/s at 40 threads ⇒ one
+//!   worker-thread ≈ 125 samples/s;
+//! * ResNet50 on 4×V100 ≈ 1440 samples/s per node (V);
+//! * Fig. 1 plateau begins just past 16 nodes (Fig. 12: 16-node runs are
+//!   compute-bound) ⇒ R ≈ 30·V·avg_bytes ≈ 5.2 GB/s (also matches Fig. 12: 1.9x at 64 nodes);
+//! * EDR InfiniBand ≈ 12.5 GB/s per link (R_c);
+//! * 44 POWER9 cores per node; 4 learners × 10 workers each.
+
+use super::{Scheme, SimConfig};
+use crate::storage::Catalog;
+
+/// Shared hardware constants.
+pub const R_STORAGE_BPS: f64 = 5.2e9;
+pub const RC_LINK_BPS: f64 = 12.5e9;
+pub const U_THREAD_SPS: f64 = 125.0;
+/// Per-node local-cache fetch + batch-assembly bandwidth (DRAM reads
+/// through the loader; calibrates Fig. 11's MuMMI speedups: 18-120x).
+pub const LOCAL_FETCH_BPS: f64 = 5.0e9;
+pub const V_NODE_SPS: f64 = 1440.0;
+pub const CORES_PER_NODE: usize = 44;
+pub const ALLREDUCE_S: f64 = 0.030; // ResNet50 grads over EDR, per step
+
+/// Loading-only experiment (Figs. 8–11): no training, measure the epoch's
+/// collective loading cost. `multithreaded` toggles the paper's 4-thread
+/// worker variant.
+pub fn loading_only(
+    catalog: Catalog,
+    nodes: usize,
+    scheme: Scheme,
+    multithreaded: bool,
+) -> SimConfig {
+    SimConfig {
+        catalog,
+        nodes,
+        learners_per_node: 4,
+        per_learner_batch: 128,
+        r_storage_bps: R_STORAGE_BPS,
+        rc_link_bps: RC_LINK_BPS,
+        u_thread_sps: U_THREAD_SPS,
+        workers: 10,
+        threads_per_worker: if multithreaded { 4 } else { 1 },
+        cores_per_node: CORES_PER_NODE,
+        local_fetch_bps: LOCAL_FETCH_BPS,
+        v_node_sps: 0.0,
+        allreduce_s: 0.0,
+        prefetch: 8,
+        scheme,
+        alpha: 1.0,
+        balance_enabled: true,
+        seed: 0xF1C5,
+    }
+}
+
+/// Full-training experiment (Fig. 1 / Fig. 12): ResNet50-rate compute with
+/// loading overlapped.
+pub fn training(catalog: Catalog, nodes: usize, scheme: Scheme) -> SimConfig {
+    SimConfig {
+        v_node_sps: V_NODE_SPS,
+        allreduce_s: ALLREDUCE_S,
+        ..loading_only(catalog, nodes, scheme, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_consistent() {
+        let l = loading_only(Catalog::imagenet_1k(), 16, Scheme::Reg, true);
+        assert_eq!(l.node_batch(), 512);
+        assert_eq!(l.global_batch(), 8192);
+        assert!(l.steps() > 100);
+        let t = training(Catalog::imagenet_1k(), 16, Scheme::Reg);
+        assert!(t.v_node_sps > 0.0);
+        // Crossover sanity: R/V in samples ≈ 15-ish nodes.
+        let r_samples = t.r_storage_bps / t.catalog.avg_bytes as f64;
+        let crossover = r_samples / t.v_node_sps;
+        assert!((15.0..35.0).contains(&crossover), "crossover {crossover}");
+    }
+
+    #[test]
+    fn node_preprocess_rate_matches_34x_calibration() {
+        // 10 workers × 4 threads (≤ 44 cores) at 125 samples/s/thread
+        // ≈ 5000 samples/s per node — the rate implied by the paper's 34x
+        // ImageNet headline (see module docs). The Fig. 7 800 samples/s
+        // ceiling is a *storage-share* bound, modeled by the live
+        // harness's token bucket, not by U.
+        let l = loading_only(Catalog::imagenet_1k(), 1, Scheme::Reg, true);
+        let rate = l.u_node_sps();
+        assert!((4500.0..5500.0).contains(&rate), "rate {rate}");
+    }
+}

@@ -1,0 +1,141 @@
+//! Dataset catalogs: the four evaluation datasets of the paper plus
+//! materializable synthetic presets.
+//!
+//! A catalog describes a dataset's *shape* — sample count, size
+//! distribution, preprocessing cost — which is all the loading experiments
+//! depend on (DESIGN.md §3 substitution table). The discrete-event
+//! simulator consumes catalogs directly; the real pipeline materializes a
+//! (smaller) synthetic instance with the same record geometry via
+//! [`crate::storage::generator`].
+
+/// Per-sample preprocessing weight, relative to the ImageNet JPEG pipeline
+/// (decode + crop/flip + normalize == 1.0).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PreprocessCost(pub f64);
+
+/// A dataset's shape.
+#[derive(Clone, Debug)]
+pub struct Catalog {
+    pub name: &'static str,
+    /// Total number of samples (paper's D, measured in samples).
+    pub n_samples: u64,
+    /// Mean record size in bytes.
+    pub avg_bytes: u64,
+    /// Relative spread of record sizes (stddev/mean); 0 for fixed-size.
+    pub size_cv: f64,
+    /// Preprocess weight per sample (0 == none, e.g. MuMMI numpy frames).
+    pub preprocess: PreprocessCost,
+}
+
+impl Catalog {
+    pub const fn total_bytes(&self) -> u64 {
+        self.n_samples * self.avg_bytes
+    }
+
+    /// ImageNet-1K as evaluated in the paper: ~1.28 M JPEGs, ~150 GB total
+    /// (≈117 KiB average), full decode+augment pipeline.
+    pub const fn imagenet_1k() -> Catalog {
+        Catalog {
+            name: "imagenet-1k",
+            n_samples: 1_281_167,
+            avg_bytes: 117 * 1024,
+            size_cv: 0.5,
+            preprocess: PreprocessCost(1.0),
+        }
+    }
+
+    /// UCF101 RGB frames: ~2.5 M images, 24.2 KB average.
+    pub const fn ucf101_rgb() -> Catalog {
+        Catalog {
+            name: "ucf101-rgb",
+            n_samples: 2_500_000,
+            avg_bytes: (24.2 * 1024.0) as u64,
+            size_cv: 0.3,
+            // Smaller images decode faster; video transforms included.
+            preprocess: PreprocessCost(0.25),
+        }
+    }
+
+    /// UCF101 optical-flow frames: ~5 M images, 4.6 KB average.
+    pub const fn ucf101_flow() -> Catalog {
+        Catalog {
+            name: "ucf101-flow",
+            n_samples: 5_000_000,
+            avg_bytes: (4.6 * 1024.0) as u64,
+            size_cv: 0.3,
+            preprocess: PreprocessCost(0.08),
+        }
+    }
+
+    /// MuMMI MD frames: ~7 M numpy files, 131 KB fixed, **no** preprocessing
+    /// ("can be used in ML training directly after data loading").
+    pub const fn mummi() -> Catalog {
+        Catalog {
+            name: "mummi",
+            n_samples: 7_000_000,
+            avg_bytes: 131 * 1024,
+            size_cv: 0.0,
+            preprocess: PreprocessCost(0.0),
+        }
+    }
+
+    /// Synthetic 32×32×3 records (what the real pipeline materializes).
+    pub fn synthetic(n_samples: u64) -> Catalog {
+        Catalog {
+            name: "synthetic",
+            n_samples,
+            avg_bytes: 32 * 32 * 3,
+            size_cv: 0.0,
+            preprocess: PreprocessCost(0.05),
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Catalog> {
+        match name {
+            "imagenet-1k" | "imagenet" => Some(Self::imagenet_1k()),
+            "ucf101-rgb" | "rgb" => Some(Self::ucf101_rgb()),
+            "ucf101-flow" | "flow" => Some(Self::ucf101_flow()),
+            "mummi" => Some(Self::mummi()),
+            _ => None,
+        }
+    }
+
+    pub fn paper_datasets() -> [Catalog; 4] {
+        [
+            Self::imagenet_1k(),
+            Self::ucf101_rgb(),
+            Self::ucf101_flow(),
+            Self::mummi(),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::GIB;
+
+    #[test]
+    fn paper_sizes_match_reported_totals() {
+        // "about 150 GB" for ImageNet-1K
+        let inet = Catalog::imagenet_1k();
+        let total = inet.total_bytes();
+        assert!(
+            (140 * GIB..160 * GIB).contains(&total),
+            "imagenet total {total}"
+        );
+        // "892 GB" for MuMMI
+        let mummi = Catalog::mummi();
+        let total = mummi.total_bytes();
+        assert!((850 * GIB..940 * GIB).contains(&total), "mummi total {total}");
+        assert_eq!(mummi.preprocess.0, 0.0);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        for c in Catalog::paper_datasets() {
+            assert_eq!(Catalog::by_name(c.name).unwrap().n_samples, c.n_samples);
+        }
+        assert!(Catalog::by_name("nope").is_none());
+    }
+}

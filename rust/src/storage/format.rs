@@ -1,0 +1,364 @@
+//! On-disk shard file format for training samples.
+//!
+//! A *shard* packs many samples into one file — the standard remedy for the
+//! "millions of tiny JPEG files on a parallel filesystem" problem the
+//! paper's datasets exhibit. The format supports variable-length records
+//! (the paper's JPEG datasets) and fixed-length records (the MuMMI numpy
+//! frames and our synthetic 32×32×3 images) uniformly through a per-record
+//! index, and stores the class label inline so no side lookup is needed.
+//!
+//! Layout (little-endian):
+//! ```text
+//! [ 0.. 8)  magic  "DLSHARD1"
+//! [ 8..12)  version u32 (=1)
+//! [12..16)  flags   u32 (bit 0: fixed-size records)
+//! [16..24)  count   u64
+//! [24..32)  record_size u64 (fixed-size shards; 0 otherwise)
+//! [32..40)  index_offset u64
+//! [40..48)  data_offset  u64 (=48)
+//! [48..index_offset)        record payloads, back-to-back
+//! [index_offset..EOF)       count × 16-byte entries:
+//!                           offset u64 | len u32 | label u16 | pad u16
+//! ```
+//!
+//! Readers keep the index in memory and serve concurrent `read_at` calls
+//! from any thread (`&self`), which is what the multi-worker loader needs.
+
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::{BufWriter, Seek, SeekFrom, Write};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+
+pub const MAGIC: &[u8; 8] = b"DLSHARD1";
+pub const VERSION: u32 = 1;
+pub const HEADER_LEN: u64 = 48;
+pub const INDEX_ENTRY_LEN: usize = 16;
+const FLAG_FIXED: u32 = 1;
+
+/// Streaming shard writer.
+pub struct ShardWriter {
+    path: PathBuf,
+    file: BufWriter<File>,
+    index: Vec<IndexEntry>,
+    cursor: u64,
+    fixed_size: Option<u64>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IndexEntry {
+    pub offset: u64,
+    pub len: u32,
+    pub label: u16,
+}
+
+impl ShardWriter {
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let file = File::create(&path)
+            .with_context(|| format!("create shard {}", path.display()))?;
+        let mut w = BufWriter::new(file);
+        // Header is rewritten on finish; reserve space now.
+        w.write_all(&[0u8; HEADER_LEN as usize])?;
+        Ok(ShardWriter {
+            path,
+            file: w,
+            index: Vec::new(),
+            cursor: HEADER_LEN,
+            fixed_size: None,
+        })
+    }
+
+    /// Append one record. Returns its index within the shard.
+    pub fn add(&mut self, payload: &[u8], label: u16) -> Result<u32> {
+        if payload.len() > u32::MAX as usize {
+            bail!("record too large: {} bytes", payload.len());
+        }
+        self.file.write_all(payload)?;
+        self.index.push(IndexEntry {
+            offset: self.cursor,
+            len: payload.len() as u32,
+            label,
+        });
+        self.cursor += payload.len() as u64;
+        match self.fixed_size {
+            None => self.fixed_size = Some(payload.len() as u64),
+            Some(sz) if sz != payload.len() as u64 => self.fixed_size = Some(0),
+            _ => {}
+        }
+        Ok((self.index.len() - 1) as u32)
+    }
+
+    /// Write index + header and close the file.
+    pub fn finish(mut self) -> Result<ShardInfo> {
+        let index_offset = self.cursor;
+        for e in &self.index {
+            self.file.write_all(&e.offset.to_le_bytes())?;
+            self.file.write_all(&e.len.to_le_bytes())?;
+            self.file.write_all(&e.label.to_le_bytes())?;
+            self.file.write_all(&0u16.to_le_bytes())?;
+        }
+        self.file.flush()?;
+        let mut f = self.file.into_inner()?;
+        let fixed = self.fixed_size.filter(|&s| s > 0);
+        let mut header = Vec::with_capacity(HEADER_LEN as usize);
+        header.extend_from_slice(MAGIC);
+        header.extend_from_slice(&VERSION.to_le_bytes());
+        header.extend_from_slice(
+            &(if fixed.is_some() { FLAG_FIXED } else { 0u32 }).to_le_bytes(),
+        );
+        header.extend_from_slice(&(self.index.len() as u64).to_le_bytes());
+        header.extend_from_slice(&fixed.unwrap_or(0).to_le_bytes());
+        header.extend_from_slice(&index_offset.to_le_bytes());
+        header.extend_from_slice(&HEADER_LEN.to_le_bytes());
+        f.seek(SeekFrom::Start(0))?;
+        f.write_all(&header)?;
+        f.sync_all()?;
+        Ok(ShardInfo {
+            path: self.path,
+            count: self.index.len() as u64,
+            data_bytes: index_offset - HEADER_LEN,
+        })
+    }
+}
+
+/// Metadata returned by [`ShardWriter::finish`].
+#[derive(Clone, Debug)]
+pub struct ShardInfo {
+    pub path: PathBuf,
+    pub count: u64,
+    pub data_bytes: u64,
+}
+
+/// Random-access, thread-safe shard reader.
+pub struct ShardReader {
+    file: File,
+    index: Vec<IndexEntry>,
+    fixed_size: Option<u64>,
+    path: PathBuf,
+}
+
+impl ShardReader {
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let file = File::open(&path)
+            .with_context(|| format!("open shard {}", path.display()))?;
+        let mut header = [0u8; HEADER_LEN as usize];
+        file.read_exact_at(&mut header, 0)
+            .with_context(|| format!("short shard header {}", path.display()))?;
+        if &header[0..8] != MAGIC {
+            bail!("{}: bad magic", path.display());
+        }
+        let version = u32::from_le_bytes(header[8..12].try_into().unwrap());
+        if version != VERSION {
+            bail!("{}: unsupported version {version}", path.display());
+        }
+        let flags = u32::from_le_bytes(header[12..16].try_into().unwrap());
+        let count = u64::from_le_bytes(header[16..24].try_into().unwrap());
+        let record_size = u64::from_le_bytes(header[24..32].try_into().unwrap());
+        let index_offset = u64::from_le_bytes(header[32..40].try_into().unwrap());
+        let mut raw = vec![0u8; count as usize * INDEX_ENTRY_LEN];
+        file.read_exact_at(&mut raw, index_offset)
+            .with_context(|| format!("short shard index {}", path.display()))?;
+        let mut index = Vec::with_capacity(count as usize);
+        for chunk in raw.chunks_exact(INDEX_ENTRY_LEN) {
+            index.push(IndexEntry {
+                offset: u64::from_le_bytes(chunk[0..8].try_into().unwrap()),
+                len: u32::from_le_bytes(chunk[8..12].try_into().unwrap()),
+                label: u16::from_le_bytes(chunk[12..14].try_into().unwrap()),
+            });
+        }
+        Ok(ShardReader {
+            file,
+            index,
+            fixed_size: (flags & FLAG_FIXED != 0).then_some(record_size),
+            path,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Fixed record size, if the shard is homogeneous.
+    pub fn fixed_size(&self) -> Option<u64> {
+        self.fixed_size
+    }
+
+    pub fn label(&self, i: usize) -> u16 {
+        self.index[i].label
+    }
+
+    pub fn record_len(&self, i: usize) -> usize {
+        self.index[i].len as usize
+    }
+
+    /// Read record `i` into a fresh buffer.
+    pub fn read(&self, i: usize) -> Result<Vec<u8>> {
+        let e = self.index[i];
+        let mut buf = vec![0u8; e.len as usize];
+        self.file.read_exact_at(&mut buf, e.offset)?;
+        Ok(buf)
+    }
+
+    /// Read record `i` into `buf` (must be exactly `record_len(i)` bytes).
+    pub fn read_into(&self, i: usize, buf: &mut [u8]) -> Result<()> {
+        let e = self.index[i];
+        anyhow::ensure!(
+            buf.len() == e.len as usize,
+            "buffer size {} != record size {}",
+            buf.len(),
+            e.len
+        );
+        self.file.read_exact_at(buf, e.offset)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "dlio-fmt-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_fixed_records() {
+        let p = tmpdir().join("fixed.shard");
+        let mut w = ShardWriter::create(&p).unwrap();
+        for i in 0..10u8 {
+            let rec = vec![i; 64];
+            w.add(&rec, i as u16 * 3).unwrap();
+        }
+        let info = w.finish().unwrap();
+        assert_eq!(info.count, 10);
+        assert_eq!(info.data_bytes, 640);
+
+        let r = ShardReader::open(&p).unwrap();
+        assert_eq!(r.len(), 10);
+        assert_eq!(r.fixed_size(), Some(64));
+        for i in 0..10 {
+            assert_eq!(r.read(i).unwrap(), vec![i as u8; 64]);
+            assert_eq!(r.label(i), i as u16 * 3);
+        }
+    }
+
+    #[test]
+    fn roundtrip_variable_records() {
+        let p = tmpdir().join("var.shard");
+        let mut w = ShardWriter::create(&p).unwrap();
+        let recs: Vec<Vec<u8>> =
+            (0..7).map(|i| vec![i as u8 + 1; (i + 1) * 13]).collect();
+        for (i, rec) in recs.iter().enumerate() {
+            w.add(rec, i as u16).unwrap();
+        }
+        w.finish().unwrap();
+        let r = ShardReader::open(&p).unwrap();
+        assert_eq!(r.fixed_size(), None);
+        for (i, rec) in recs.iter().enumerate() {
+            assert_eq!(&r.read(i).unwrap(), rec);
+            assert_eq!(r.record_len(i), rec.len());
+        }
+    }
+
+    #[test]
+    fn read_into_checks_size() {
+        let p = tmpdir().join("sz.shard");
+        let mut w = ShardWriter::create(&p).unwrap();
+        w.add(&[1, 2, 3], 0).unwrap();
+        w.finish().unwrap();
+        let r = ShardReader::open(&p).unwrap();
+        let mut small = [0u8; 2];
+        assert!(r.read_into(0, &mut small).is_err());
+        let mut ok = [0u8; 3];
+        r.read_into(0, &mut ok).unwrap();
+        assert_eq!(ok, [1, 2, 3]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmpdir().join("bad.shard");
+        std::fs::write(&p, b"NOTASHARDFILE___________________________________")
+            .unwrap();
+        assert!(ShardReader::open(&p).is_err());
+    }
+
+    #[test]
+    fn empty_shard_roundtrips() {
+        let p = tmpdir().join("empty.shard");
+        let w = ShardWriter::create(&p).unwrap();
+        let info = w.finish().unwrap();
+        assert_eq!(info.count, 0);
+        let r = ShardReader::open(&p).unwrap();
+        assert_eq!(r.len(), 0);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn prop_roundtrip_random_payloads() {
+        let dir = tmpdir();
+        prop::check("shard roundtrip", 25, move |rng| {
+            let p = dir.join(format!("prop-{}.shard", rng.next_u64()));
+            let recs = prop::vec_of(rng, 1, 40, |r| {
+                let len = 1 + r.next_below(200) as usize;
+                let mut v = vec![0u8; len];
+                for b in v.iter_mut() {
+                    *b = r.next_below(256) as u8;
+                }
+                (v, r.next_below(u16::MAX as u64) as u16)
+            });
+            let mut w = ShardWriter::create(&p).unwrap();
+            for (payload, label) in &recs {
+                w.add(payload, *label).unwrap();
+            }
+            w.finish().unwrap();
+            let rd = ShardReader::open(&p).unwrap();
+            assert_eq!(rd.len(), recs.len());
+            for (i, (payload, label)) in recs.iter().enumerate() {
+                assert_eq!(&rd.read(i).unwrap(), payload);
+                assert_eq!(rd.label(i), *label);
+            }
+            std::fs::remove_file(&p).unwrap();
+        });
+    }
+
+    #[test]
+    fn concurrent_reads_from_shared_reader() {
+        let p = tmpdir().join("conc.shard");
+        let mut w = ShardWriter::create(&p).unwrap();
+        for i in 0..100u32 {
+            w.add(&i.to_le_bytes(), (i % 7) as u16).unwrap();
+        }
+        w.finish().unwrap();
+        let r = std::sync::Arc::new(ShardReader::open(&p).unwrap());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in (t..100).step_by(4) {
+                    let got = r.read(i).unwrap();
+                    assert_eq!(got, (i as u32).to_le_bytes());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Storage substrate: shard file format, synthetic dataset generation,
+//! dataset catalogs, bandwidth throttling, and the shared storage system
+//! ("GPFS-sim") that every learner reads through.
+
+pub mod catalog;
+pub mod format;
+pub mod generator;
+pub mod system;
+pub mod throttle;
+
+pub use catalog::Catalog;
+pub use format::{ShardReader, ShardWriter};
+pub use generator::{generate, DatasetMeta, SyntheticSpec};
+pub use system::{Sample, StorageSystem};
+pub use throttle::TokenBucket;

@@ -1,0 +1,211 @@
+//! The shared storage system: global sample id → bytes, through the
+//! bandwidth throttle.
+//!
+//! Models the paper's network filesystem (GPFS): every learner reads
+//! through one `StorageSystem` whose aggregate rate is capped by the
+//! [`TokenBucket`]. Thread-safe; loader workers call [`read_sample`]
+//! concurrently.
+//!
+//! [`read_sample`]: StorageSystem::read_sample
+
+use super::format::ShardReader;
+use super::generator::DatasetMeta;
+use super::throttle::TokenBucket;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A read sample: raw record bytes plus its label.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Sample {
+    pub id: u32,
+    pub bytes: Vec<u8>,
+    pub label: u16,
+}
+
+impl Sample {
+    pub fn size(&self) -> usize {
+        self.bytes.len()
+    }
+}
+
+/// Shared, bandwidth-limited storage backend.
+pub struct StorageSystem {
+    meta: DatasetMeta,
+    shards: Vec<ShardReader>,
+    throttle: Option<Arc<TokenBucket>>,
+    bytes_read: AtomicU64,
+    samples_read: AtomicU64,
+}
+
+impl StorageSystem {
+    /// Open a materialized dataset directory (see [`generator::generate`]).
+    ///
+    /// [`generator::generate`]: super::generator::generate
+    pub fn open(dir: &Path, throttle: Option<Arc<TokenBucket>>) -> Result<Self> {
+        let meta = DatasetMeta::load(dir)?;
+        let mut shards = Vec::with_capacity(meta.shards.len());
+        let mut total = 0u64;
+        for p in &meta.shards {
+            let r = ShardReader::open(p)
+                .with_context(|| format!("open shard {}", p.display()))?;
+            total += r.len() as u64;
+            shards.push(r);
+        }
+        ensure!(
+            total == meta.n_samples,
+            "dataset.json says {} samples but shards hold {}",
+            meta.n_samples,
+            total
+        );
+        Ok(StorageSystem {
+            meta,
+            shards,
+            throttle,
+            bytes_read: AtomicU64::new(0),
+            samples_read: AtomicU64::new(0),
+        })
+    }
+
+    pub fn meta(&self) -> &DatasetMeta {
+        &self.meta
+    }
+
+    pub fn n_samples(&self) -> u64 {
+        self.meta.n_samples
+    }
+
+    fn locate(&self, id: u32) -> Result<(usize, usize)> {
+        ensure!(
+            (id as u64) < self.meta.n_samples,
+            "sample id {id} out of range ({})",
+            self.meta.n_samples
+        );
+        let per = self.meta.samples_per_shard;
+        Ok(((id as u64 / per) as usize, (id as u64 % per) as usize))
+    }
+
+    /// Label without touching the data path (labels live in the in-memory
+    /// shard index — the paper's setup reads labels from the dataset
+    /// listing, not the storage system).
+    pub fn label(&self, id: u32) -> Result<u16> {
+        let (s, i) = self.locate(id)?;
+        Ok(self.shards[s].label(i))
+    }
+
+    pub fn record_len(&self, id: u32) -> Result<usize> {
+        let (s, i) = self.locate(id)?;
+        Ok(self.shards[s].record_len(i))
+    }
+
+    /// Read one sample through the bandwidth throttle.
+    pub fn read_sample(&self, id: u32) -> Result<Sample> {
+        let (s, i) = self.locate(id)?;
+        let len = self.shards[s].record_len(i);
+        if let Some(tb) = &self.throttle {
+            tb.acquire(len as u64);
+        }
+        let bytes = self.shards[s].read(i)?;
+        self.bytes_read.fetch_add(len as u64, Ordering::Relaxed);
+        self.samples_read.fetch_add(1, Ordering::Relaxed);
+        Ok(Sample { id, bytes, label: self.shards[s].label(i) })
+    }
+
+    /// Total bytes served (metrics).
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read.load(Ordering::Relaxed)
+    }
+
+    /// Total samples served (metrics).
+    pub fn samples_read(&self) -> u64 {
+        self.samples_read.load(Ordering::Relaxed)
+    }
+
+    pub fn reset_counters(&self) {
+        self.bytes_read.store(0, Ordering::Relaxed);
+        self.samples_read.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::generator::{generate, SyntheticSpec};
+
+    fn open_test_system(
+        tag: &str,
+        n: u64,
+        throttle: Option<Arc<TokenBucket>>,
+    ) -> StorageSystem {
+        let dir = std::env::temp_dir()
+            .join(format!("dlio-sys-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spec = SyntheticSpec {
+            n_samples: n,
+            samples_per_shard: 64,
+            ..Default::default()
+        };
+        generate(&dir, &spec).unwrap();
+        StorageSystem::open(&dir, throttle).unwrap()
+    }
+
+    #[test]
+    fn reads_all_samples_and_counts() {
+        let sys = open_test_system("all", 150, None);
+        for id in 0..150u32 {
+            let s = sys.read_sample(id).unwrap();
+            assert_eq!(s.id, id);
+            assert_eq!(s.bytes.len(), 3072);
+            assert_eq!(s.label, sys.label(id).unwrap());
+        }
+        assert_eq!(sys.samples_read(), 150);
+        assert_eq!(sys.bytes_read(), 150 * 3072);
+    }
+
+    #[test]
+    fn out_of_range_errors() {
+        let sys = open_test_system("oor", 10, None);
+        assert!(sys.read_sample(10).is_err());
+        assert!(sys.label(11).is_err());
+    }
+
+    #[test]
+    fn concurrent_reads_are_consistent() {
+        let sys = Arc::new(open_test_system("conc", 128, None));
+        let expect: Vec<Vec<u8>> =
+            (0..128u32).map(|i| sys.read_sample(i).unwrap().bytes).collect();
+        sys.reset_counters();
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let sys = sys.clone();
+            let expect = expect.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in (t..128).step_by(4) {
+                    let s = sys.read_sample(i as u32).unwrap();
+                    assert_eq!(s.bytes, expect[i]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(sys.samples_read(), 128);
+    }
+
+    #[test]
+    fn throttle_slows_reads() {
+        use std::time::Instant;
+        // 3072-byte records at 64 KiB/s => ~21 records/s.
+        let tb = Arc::new(TokenBucket::new(64.0 * 1024.0, 4096.0));
+        let sys = open_test_system("thr", 64, Some(tb.clone()));
+        let t0 = Instant::now();
+        for id in 0..8u32 {
+            sys.read_sample(id).unwrap();
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        // 8 records = 24 KiB at 64 KiB/s ≈ 0.37s minus initial burst of 4 KiB.
+        assert!(elapsed > 0.2, "throttle ineffective: {elapsed}s");
+        assert_eq!(tb.total_bytes(), 8 * 3072);
+    }
+}

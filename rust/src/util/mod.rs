@@ -1,0 +1,17 @@
+//! Shared utilities: deterministic RNG, statistics, JSON, bounded queues,
+//! unit formatting and a property-testing harness.
+//!
+//! The offline build environment ships only the `xla` crate closure, so
+//! these replace the usual ecosystem crates (rand, serde_json, crossbeam,
+//! proptest) with small, fully-tested in-tree implementations.
+
+pub mod json;
+pub mod prop;
+pub mod queue;
+pub mod rng;
+pub mod stats;
+pub mod units;
+
+pub use json::Json;
+pub use queue::Queue;
+pub use rng::Rng;

@@ -1,0 +1,95 @@
+//! Lightweight property-based testing harness (proptest is unavailable in
+//! the offline build environment).
+//!
+//! A property is a closure over a seeded [`Rng`]; the runner executes it for
+//! many derived seeds and, on failure, re-raises the panic annotated with
+//! the failing case number and seed so the case can be replayed exactly:
+//!
+//! ```
+//! use dlio::util::prop::check;
+//! check("sum is commutative", 100, |rng| {
+//!     let a = rng.next_below(1000) as i64;
+//!     let b = rng.next_below(1000) as i64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Default number of cases for moderately expensive properties.
+pub const DEFAULT_CASES: u64 = 200;
+
+/// Run `property` for `cases` deterministic seeds. Panics (with replay
+/// information) on the first failing case.
+pub fn check<F>(name: &str, cases: u64, property: F)
+where
+    F: Fn(&mut Rng) + std::panic::RefUnwindSafe,
+{
+    check_seeded(name, 0xD1_10_5EED, cases, property)
+}
+
+/// As [`check`] but with an explicit base seed (for replaying failures).
+pub fn check_seeded<F>(name: &str, base_seed: u64, cases: u64, property: F)
+where
+    F: Fn(&mut Rng) + std::panic::RefUnwindSafe,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            property(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay with check_seeded(.., {seed:#x}, 1, ..)): {msg}"
+            );
+        }
+    }
+}
+
+/// Draw a vector of length in `[min_len, max_len]` with elements from `gen`.
+pub fn vec_of<T>(
+    rng: &mut Rng,
+    min_len: usize,
+    max_len: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+) -> Vec<T> {
+    let len = min_len + rng.next_below((max_len - min_len + 1) as u64) as usize;
+    (0..len).map(|_| gen(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::sync::atomic::AtomicU64::new(0);
+        check("count", 50, |_| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_seed() {
+        check("fails", 10, |rng| {
+            assert!(rng.next_below(4) != 2, "hit the bad value");
+        });
+    }
+
+    #[test]
+    fn vec_of_respects_bounds() {
+        check("vec bounds", 100, |rng| {
+            let v = vec_of(rng, 2, 9, |r| r.next_below(10));
+            assert!((2..=9).contains(&v.len()));
+        });
+    }
+}

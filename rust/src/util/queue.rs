@@ -1,0 +1,241 @@
+//! Bounded multi-producer multi-consumer queue with blocking semantics.
+//!
+//! This is the backbone of the loader pipeline: the prefetch queue between
+//! loader workers and the training loop, and the request queue feeding the
+//! workers. Bounded capacity is what implements *backpressure* — a loader
+//! worker that runs ahead of the consumer blocks on `push` instead of
+//! buffering the whole epoch (paper §III-A: the main process "prefetches
+//! data by submitting more batch-loading requests than its immediate
+//! demand", bounded by the prefetch depth).
+//!
+//! Implemented on `Mutex<VecDeque>` + two `Condvar`s; no external crates.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+struct Inner<T> {
+    q: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded blocking MPMC channel. Clone to share between threads.
+pub struct Queue<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for Queue<T> {
+    fn clone(&self) -> Self {
+        Queue { inner: Arc::clone(&self.inner) }
+    }
+}
+
+/// Result of a push attempt on a closed queue: the item is handed back.
+#[derive(Debug)]
+pub struct Closed<T>(pub T);
+
+impl<T> Queue<T> {
+    pub fn bounded(capacity: usize) -> Self {
+        assert!(capacity > 0, "queue capacity must be positive");
+        Queue {
+            inner: Arc::new(Inner {
+                q: Mutex::new(State { items: VecDeque::new(), closed: false }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+                capacity,
+            }),
+        }
+    }
+
+    /// Blocking push; waits while full. Err(Closed) if the queue was closed.
+    pub fn push(&self, item: T) -> Result<(), Closed<T>> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(Closed(item));
+            }
+            if st.items.len() < self.inner.capacity {
+                st.items.push_back(item);
+                drop(st);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Pop with a timeout; `Ok(None)` on closed+drained, `Err(())` on timeout.
+    pub fn pop_timeout(&self, dur: Duration) -> Result<Option<T>, ()> {
+        let deadline = std::time::Instant::now() + dur;
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.inner.not_full.notify_one();
+                return Ok(Some(item));
+            }
+            if st.closed {
+                return Ok(None);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(());
+            }
+            let (g, res) =
+                self.inner.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+            if res.timed_out() && st.items.is_empty() && !st.closed {
+                return Err(());
+            }
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        let item = st.items.pop_front();
+        if item.is_some() {
+            drop(st);
+            self.inner.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Close the queue: producers fail, consumers drain then get `None`.
+    pub fn close(&self) {
+        let mut st = self.inner.q.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.q.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let q = Queue::bounded(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = Queue::bounded(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert!(q.push(3).is_err());
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn backpressure_blocks_producer() {
+        let q = Queue::bounded(2);
+        q.push(0).unwrap();
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let h = thread::spawn(move || {
+            // This blocks until the consumer pops.
+            q2.push(2).unwrap();
+        });
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.len(), 2, "producer must be blocked at capacity");
+        assert_eq!(q.pop(), Some(0));
+        h.join().unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let q: Queue<u64> = Queue::bounded(16);
+        let producers = 4;
+        let per = 1000u64;
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let q = q.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..per {
+                    q.push(p * per + i).unwrap();
+                }
+            }));
+        }
+        let consumers = 3;
+        let mut consumer_handles = Vec::new();
+        for _ in 0..consumers {
+            let q = q.clone();
+            consumer_handles.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = q.pop() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u64> = Vec::new();
+        for h in consumer_handles {
+            all.extend(h.join().unwrap());
+        }
+        all.sort_unstable();
+        let expect: Vec<u64> = (0..producers * per).collect();
+        assert_eq!(all, expect);
+    }
+
+    #[test]
+    fn pop_timeout_times_out() {
+        let q: Queue<u32> = Queue::bounded(1);
+        assert!(q.pop_timeout(Duration::from_millis(10)).is_err());
+        q.push(7).unwrap();
+        assert_eq!(q.pop_timeout(Duration::from_millis(10)), Ok(Some(7)));
+    }
+}

@@ -1,0 +1,84 @@
+//! Byte/rate/time unit helpers used by configs, metrics and reports.
+
+/// Kibibyte/mebibyte/gibibyte constants (the paper quotes KB/GB loosely; we
+/// use binary units internally and format accordingly).
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * KIB;
+pub const GIB: u64 = 1024 * MIB;
+
+/// Format a byte count as a human-readable string ("1.46 GiB").
+pub fn fmt_bytes(bytes: u64) -> String {
+    let b = bytes as f64;
+    if bytes >= GIB {
+        format!("{:.2} GiB", b / GIB as f64)
+    } else if bytes >= MIB {
+        format!("{:.2} MiB", b / MIB as f64)
+    } else if bytes >= KIB {
+        format!("{:.2} KiB", b / KIB as f64)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Format a rate in bytes/second.
+pub fn fmt_rate(bytes_per_sec: f64) -> String {
+    format!("{}/s", fmt_bytes(bytes_per_sec.max(0.0) as u64))
+}
+
+/// Format seconds as "1h02m", "3m04s", "12.3s", "45.6ms".
+pub fn fmt_secs(secs: f64) -> String {
+    if secs >= 3600.0 {
+        format!("{}h{:02}m", (secs / 3600.0) as u64, ((secs % 3600.0) / 60.0) as u64)
+    } else if secs >= 60.0 {
+        format!("{}m{:02}s", (secs / 60.0) as u64, (secs % 60.0) as u64)
+    } else if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else if secs >= 1e-3 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.2}us", secs * 1e6)
+    }
+}
+
+/// Parse a size string like "150GB", "24.2KB", "131072", "25GiB".
+/// Decimal suffixes (KB/MB/GB) are treated as binary for simplicity — the
+/// paper's numbers are approximate; the distinction never matters here.
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let split = s.find(|c: char| c.is_ascii_alphabetic()).unwrap_or(s.len());
+    let (num, suffix) = s.split_at(split);
+    let num: f64 = num.trim().parse().ok()?;
+    let mult = match suffix.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1,
+        "k" | "kb" | "kib" => KIB,
+        "m" | "mb" | "mib" => MIB,
+        "g" | "gb" | "gib" => GIB,
+        _ => return None,
+    };
+    Some((num * mult as f64) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * MIB + MIB / 2), "3.50 MiB");
+        assert_eq!(fmt_secs(0.0123), "12.30ms");
+        assert_eq!(fmt_secs(75.0), "1m15s");
+        assert_eq!(fmt_secs(3725.0), "1h02m");
+    }
+
+    #[test]
+    fn parses() {
+        assert_eq!(parse_bytes("131072"), Some(131072));
+        assert_eq!(parse_bytes("24.2KB"), Some((24.2 * 1024.0) as u64));
+        assert_eq!(parse_bytes("150GB"), Some(150 * GIB));
+        assert_eq!(parse_bytes("25 GiB"), Some(25 * GIB));
+        assert_eq!(parse_bytes("x"), None);
+        assert_eq!(parse_bytes("10TB"), None);
+    }
+}

@@ -1,0 +1,228 @@
+//! Loader-level integration: the live multi-worker pipeline against the
+//! bandwidth-limited storage substrate, including the Fig. 7 trend
+//! (loading rate grows with workers and with threads until the storage
+//! bound) and failure injection.
+
+use dlio::cache::{CacheDirectory, Policy, SampleCache};
+use dlio::figures::{fig7, Fig7Config};
+use dlio::loader::{BatchRequest, FetchContext, Loader, LoaderConfig};
+use dlio::metrics::LoadCounters;
+use dlio::net::{Fabric, FabricConfig};
+use dlio::storage::{generate, StorageSystem, SyntheticSpec, TokenBucket};
+use std::path::PathBuf;
+use std::sync::{Arc, RwLock};
+
+fn dataset(tag: &str, n: u64) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("dlio-ldint-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    generate(&dir, &SyntheticSpec { n_samples: n, ..Default::default() })
+        .unwrap();
+    dir
+}
+
+#[test]
+fn fig7_trend_workers_and_threads_help_until_saturation() {
+    let dir = dataset("fig7", 1024);
+    let cfg = Fig7Config {
+        data_dir: dir,
+        batches: 6,
+        batch_size: 32,
+        // One worker-thread ≈ 80 samples/s; storage admits ~400/s.
+        decode_s_per_kib: 1.0 / 80.0 / 3.0,
+        storage_bps: Some(400.0 * 3072.0),
+    };
+    let rows = fig7(&cfg, &[1, 4, 8], &[0, 4]).unwrap();
+    let rate = |w: usize, t: usize| {
+        rows.iter()
+            .find(|r| r.workers == w && r.threads == t)
+            .unwrap()
+            .samples_per_s
+    };
+    // More workers help at fixed threads.
+    assert!(
+        rate(4, 0) > rate(1, 0) * 2.0,
+        "workers don't scale: {} vs {}",
+        rate(4, 0),
+        rate(1, 0)
+    );
+    // Threads help at fixed workers (the paper's §III-B claim: fewer
+    // workers needed for the same rate).
+    assert!(
+        rate(1, 4) > rate(1, 0) * 2.0,
+        "threads don't scale: {} vs {}",
+        rate(1, 4),
+        rate(1, 0)
+    );
+    // Saturation: the 8x4 config cannot exceed the storage admit rate by
+    // much (token bucket bound).
+    assert!(
+        rate(8, 4) < 400.0 * 1.5,
+        "rate {} exceeds the storage bound",
+        rate(8, 4)
+    );
+}
+
+#[test]
+fn prefetch_bounds_outstanding_requests() {
+    let dir = dataset("backpressure", 512);
+    let storage = Arc::new(StorageSystem::open(&dir, None).unwrap());
+    let ctx = Arc::new(FetchContext {
+        learner: 0,
+        storage,
+        caches: vec![Arc::new(SampleCache::new(0, Policy::InsertOnly))],
+        directory: Arc::new(RwLock::new(CacheDirectory::new(512))),
+        fabric: Arc::new(Fabric::new(FabricConfig {
+            real_time: false,
+            ..Default::default()
+        })),
+        cache_on_load: false,
+        decode_s_per_kib: 0.002,
+        counters: Arc::new(LoadCounters::new()),
+    });
+    let loader = Loader::spawn(
+        LoaderConfig { workers: 1, threads_per_worker: 0, prefetch_batches: 2 },
+        ctx,
+        3072,
+        None,
+        0,
+        0.0,
+    );
+    // Submissions beyond (queue capacity + in-flight) must block; with a
+    // slow worker the 8th submit cannot return instantly.
+    let t0 = std::time::Instant::now();
+    for step in 0..8u64 {
+        loader
+            .submit(BatchRequest {
+                epoch: 0,
+                step,
+                ids: (0..16).map(|i| (step as u32 * 16 + i) % 512).collect(),
+            })
+            .unwrap();
+    }
+    let submit_time = t0.elapsed().as_secs_f64();
+    // Each batch costs 16 samples * 3KiB * 2ms/KiB ≈ 96ms; 8 batches
+    // through a depth-2 window must take several batch-times to accept.
+    assert!(
+        submit_time > 0.2,
+        "submits returned too fast ({submit_time}s) — backpressure broken"
+    );
+    for step in 0..8u64 {
+        loader.next(step).unwrap();
+    }
+    loader.shutdown();
+}
+
+#[test]
+fn throttled_storage_bounds_end_to_end_rate() {
+    let dir = dataset("bound", 256);
+    let bps = 100.0 * 3072.0; // ~100 samples/s
+    let storage = Arc::new(
+        StorageSystem::open(&dir, Some(Arc::new(TokenBucket::new(bps, 8.0 * 3072.0))))
+            .unwrap(),
+    );
+    let ctx = Arc::new(FetchContext {
+        learner: 0,
+        storage,
+        caches: vec![Arc::new(SampleCache::new(0, Policy::InsertOnly))],
+        directory: Arc::new(RwLock::new(CacheDirectory::new(256))),
+        fabric: Arc::new(Fabric::new(FabricConfig {
+            real_time: false,
+            ..Default::default()
+        })),
+        cache_on_load: false,
+        decode_s_per_kib: 0.0,
+        counters: Arc::new(LoadCounters::new()),
+    });
+    // Plenty of parallelism — the throttle must still bound throughput.
+    let loader = Loader::spawn(
+        LoaderConfig { workers: 4, threads_per_worker: 4, prefetch_batches: 8 },
+        ctx,
+        3072,
+        None,
+        0,
+        0.0,
+    );
+    let t0 = std::time::Instant::now();
+    let total = 160usize; // 10 batches of 16
+    for step in 0..10u64 {
+        loader
+            .submit(BatchRequest {
+                epoch: 0,
+                step,
+                ids: (0..16).map(|i| (step as u32 * 16 + i) % 256).collect(),
+            })
+            .unwrap();
+    }
+    for step in 0..10u64 {
+        loader.next(step).unwrap();
+    }
+    let rate = total as f64 / t0.elapsed().as_secs_f64();
+    loader.shutdown();
+    assert!(
+        rate < 100.0 * 1.6,
+        "rate {rate} exceeds the 100/s storage bound"
+    );
+}
+
+#[test]
+fn loader_counts_every_sample_exactly_once() {
+    let dir = dataset("counts", 512);
+    let storage = Arc::new(StorageSystem::open(&dir, None).unwrap());
+    let counters = Arc::new(LoadCounters::new());
+    let ctx = Arc::new(FetchContext {
+        learner: 0,
+        storage: Arc::clone(&storage),
+        caches: vec![Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly))],
+        directory: Arc::new(RwLock::new(CacheDirectory::new(512))),
+        fabric: Arc::new(Fabric::new(FabricConfig {
+            real_time: false,
+            ..Default::default()
+        })),
+        cache_on_load: true,
+        decode_s_per_kib: 0.0,
+        counters: Arc::clone(&counters),
+    });
+    let loader = Loader::spawn(
+        LoaderConfig { workers: 3, threads_per_worker: 2, prefetch_batches: 4 },
+        ctx,
+        3072,
+        None,
+        0,
+        0.0,
+    );
+    // Epoch 1: all 512 samples once (32 batches of 16) — all storage.
+    for step in 0..32u64 {
+        loader
+            .submit(BatchRequest {
+                epoch: 0,
+                step,
+                ids: (0..16).map(|i| step as u32 * 16 + i).collect(),
+            })
+            .unwrap();
+    }
+    for step in 0..32u64 {
+        loader.next(step).unwrap();
+    }
+    let snap = counters.snapshot();
+    assert_eq!(snap.storage_loads, 512);
+    assert_eq!(snap.storage_bytes, 512 * 3072);
+    // Epoch 2: all cached now.
+    for step in 32..64u64 {
+        loader
+            .submit(BatchRequest {
+                epoch: 1,
+                step,
+                ids: (0..16).map(|i| (step as u32 - 32) * 16 + i).collect(),
+            })
+            .unwrap();
+    }
+    for step in 32..64u64 {
+        loader.next(step).unwrap();
+    }
+    let snap = counters.snapshot();
+    assert_eq!(snap.storage_loads, 512, "no new storage reads expected");
+    assert_eq!(snap.local_hits, 512);
+    assert_eq!(storage.samples_read(), 512);
+    loader.shutdown();
+}

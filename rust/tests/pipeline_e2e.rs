@@ -1,0 +1,199 @@
+//! End-to-end pipeline test on *bandwidth-limited* storage: the live
+//! mini-Fig.-12 — after the caches are populated, Loc epochs stop waiting
+//! on the throttled storage system while Reg epochs stay I/O-bound; and
+//! training still learns (accuracy via the compiled eval program).
+
+use dlio::coordinator::{SamplerKind, Trainer, TrainerConfig};
+use dlio::loader::LoaderConfig;
+use dlio::net::{Fabric, FabricConfig};
+use dlio::runtime::{default_artifacts_dir, Engine};
+use dlio::storage::{generate, StorageSystem, SyntheticSpec, TokenBucket};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn dataset(tag: &str, n: u64) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("dlio-e2e-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    generate(&dir, &SyntheticSpec { n_samples: n, ..Default::default() })
+        .unwrap();
+    dir
+}
+
+fn run(
+    data: &PathBuf,
+    sampler: SamplerKind,
+    storage_bps: Option<f64>,
+    epochs: u64,
+    eval: usize,
+) -> dlio::coordinator::TrainingReport {
+    let engine = Arc::new(Engine::load(&default_artifacts_dir()).unwrap());
+    let throttle =
+        storage_bps.map(|bps| Arc::new(TokenBucket::new(bps, 16.0 * 3072.0)));
+    let storage = Arc::new(StorageSystem::open(data, throttle).unwrap());
+    let fabric = Arc::new(Fabric::new(FabricConfig {
+        real_time: false,
+        ..Default::default()
+    }));
+    let cfg = TrainerConfig {
+        p: 2,
+        epochs,
+        local_batch: 16,
+        lr: 0.08,
+        sampler,
+        loader: LoaderConfig { workers: 2, threads_per_worker: 2, prefetch_batches: 2 },
+        seed: 77,
+        cache_capacity_bytes: u64::MAX,
+        flip_prob: 0.5,
+        decode_s_per_kib: 0.0,
+        eval_samples: eval,
+        checkpoint_path: None,
+    };
+    Trainer::new(engine, storage, fabric, cfg).unwrap().run().unwrap()
+}
+
+#[test]
+fn throttled_loc_escapes_io_bound_after_population() {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let data = dataset("throttle", 256);
+    // ~16 samples/s of storage: each 8-step epoch pulls 256 samples, so a
+    // storage-bound epoch needs ≥ ~16s of I/O — well above the ~8s of
+    // (single-core) PJRT compute, putting Reg firmly in the Fig. 1
+    // I/O-bound regime.
+    let bps = 16.0 * 3072.0;
+
+    let loc = run(&data, SamplerKind::Loc, Some(bps), 3, 0);
+    // Population epoch is storage-bound.
+    assert!(loc.epochs[0].load.storage_loads > 0);
+    // After population the storage is silent and waiting drops sharply.
+    for e in &loc.epochs[1..] {
+        assert_eq!(e.load.storage_loads, 0, "epoch {}", e.epoch);
+        assert!(
+            e.epoch_time_s < loc.epochs[0].epoch_time_s * 0.7,
+            "epoch {} ({:.2}s) not faster than population epoch ({:.2}s)",
+            e.epoch,
+            e.epoch_time_s,
+            loc.epochs[0].epoch_time_s
+        );
+    }
+
+    let reg = run(&data, SamplerKind::Reg, Some(bps), 3, 0);
+    // Reg stays storage-bound every epoch: its steady-state epochs are
+    // slower than Loc's.
+    let reg_steady: f64 = reg.epochs[1..]
+        .iter()
+        .map(|e| e.epoch_time_s)
+        .sum::<f64>()
+        / (reg.epochs.len() - 1) as f64;
+    let loc_steady: f64 = loc.epochs[1..]
+        .iter()
+        .map(|e| e.epoch_time_s)
+        .sum::<f64>()
+        / (loc.epochs.len() - 1) as f64;
+    assert!(
+        loc_steady < reg_steady * 0.75,
+        "live speedup missing: loc {loc_steady:.2}s vs reg {reg_steady:.2}s"
+    );
+}
+
+#[test]
+fn training_learns_and_evaluates() {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        return;
+    }
+    let data = dataset("learn", 256);
+    let report = run(&data, SamplerKind::Loc, None, 4, 128);
+    let acc = report.final_accuracy.expect("eval requested");
+    // 16-class synthetic prototypes: a few epochs should pass 50%.
+    assert!(acc > 0.5, "accuracy {acc} too low — pipeline not learning");
+    // Loss decreased.
+    let first = report.step_losses[0];
+    let last = *report.step_losses.last().unwrap();
+    assert!(last < first * 0.8, "loss {first} -> {last}");
+    assert!(report.learners_in_sync());
+    assert!(report.mean_grad_exec_s > 0.0);
+}
+
+#[test]
+fn distcache_serves_from_remote_caches() {
+    // §III-C live: after population, block-sliced loading is served by the
+    // aggregated cache — mostly remote hits, zero storage reads (α = 1) —
+    // while the total fabric volume stays ~the whole slice (unlike Loc).
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        return;
+    }
+    let data = dataset("distcache", 256);
+    let report = run(&data, SamplerKind::DistCache, None, 3, 0);
+    let e0 = &report.epochs[0];
+    assert!(e0.load.storage_loads > 0, "population epoch reads storage");
+    for e in &report.epochs[1..] {
+        assert_eq!(e.load.storage_loads, 0, "epoch {}", e.epoch);
+        let total = e.load.local_hits + e.load.remote_hits;
+        assert!(total > 0);
+        // Block slices vs striped-by-population ownership: with p=2 about
+        // half the slice lives remotely; require a substantial remote
+        // fraction (Loc, by contrast, keeps it under ~15%).
+        let remote_frac = e.load.remote_hits as f64 / total as f64;
+        assert!(
+            remote_frac > 0.25,
+            "epoch {}: remote fraction {remote_frac} too low for distcache",
+            e.epoch
+        );
+    }
+    // Training still learns and learners stay in sync.
+    assert!(report.learners_in_sync());
+    let first = report.step_losses[0];
+    let last = *report.step_losses.last().unwrap();
+    assert!(last < first * 0.8);
+}
+
+#[test]
+fn partial_cache_capacity_limits_alpha() {
+    // §III-C "caching a partial subset": cap each learner's cache below
+    // its full share; steady-state Loc epochs must keep reading the
+    // uncached remainder from storage — and never crash or deadlock.
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        return;
+    }
+    let data = dataset("partial", 256);
+    let engine = Arc::new(Engine::load(&default_artifacts_dir()).unwrap());
+    let storage = Arc::new(StorageSystem::open(&data, None).unwrap());
+    let fabric = Arc::new(Fabric::new(FabricConfig {
+        real_time: false,
+        ..Default::default()
+    }));
+    let cfg = TrainerConfig {
+        p: 2,
+        epochs: 3,
+        local_batch: 16,
+        lr: 0.08,
+        sampler: SamplerKind::Loc,
+        loader: LoaderConfig { workers: 2, threads_per_worker: 2, prefetch_batches: 2 },
+        seed: 77,
+        // Each learner's full share is 128 samples × 3072 B = 384 KiB;
+        // cap at ~25% of that.
+        cache_capacity_bytes: 96 * 1024,
+        flip_prob: 0.5,
+        decode_s_per_kib: 0.0,
+        eval_samples: 0,
+        checkpoint_path: None,
+    };
+    let report =
+        Trainer::new(engine, storage, fabric, cfg).unwrap().run().unwrap();
+    for e in &report.epochs[1..] {
+        assert!(
+            e.load.storage_loads > 0,
+            "epoch {}: α < 1 must leave storage misses",
+            e.epoch
+        );
+        assert!(
+            e.load.local_hits > 0,
+            "epoch {}: cached subset must produce local hits",
+            e.epoch
+        );
+    }
+    assert!(report.learners_in_sync());
+}

@@ -1,0 +1,242 @@
+//! Integration: the AOT artifacts execute correctly through PJRT.
+//!
+//! This is the cross-language contract test: numbers computed by the Rust
+//! runtime running the lowered HLO must match what the JAX programs compute
+//! (validated transitively — python/tests pin the programs to the jnp
+//! oracles; here we pin runtime behaviour to program semantics).
+
+use dlio::runtime::{default_artifacts_dir, Engine, HostTensor};
+use dlio::util::Rng;
+use std::sync::Arc;
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(Engine::load(&dir).expect("engine load")))
+}
+
+fn random_batch(rng: &mut Rng, b: usize, nf: usize, nc: usize) -> (HostTensor, HostTensor) {
+    let x: Vec<f32> = (0..b * nf).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    let y: Vec<i32> = (0..b).map(|_| rng.next_below(nc as u64) as i32).collect();
+    (HostTensor::f32(vec![b, nf], x), HostTensor::i32(vec![b], y))
+}
+
+#[test]
+fn preprocess_matches_cpu_reference() {
+    let Some(eng) = engine() else { return };
+    let b = 16usize;
+    let (h, w, c) = eng.manifest().geometry.img;
+    let mut rng = Rng::new(7);
+    let raw: Vec<u8> =
+        (0..b * h * w * c).map(|_| rng.next_below(256) as u8).collect();
+    let flip: Vec<f32> =
+        (0..b).map(|i| if i % 2 == 0 { 0.0 } else { 1.0 }).collect();
+    let prog = eng.program("preprocess16").unwrap();
+    let out = prog
+        .run(&[
+            HostTensor::u8(vec![b, h, w, c], raw.clone()),
+            HostTensor::f32(vec![b], flip.clone()),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    let got = out[0].as_f32().unwrap();
+    assert_eq!(out[0].shape, vec![b, h * w * c]);
+
+    // Independent Rust reference of the kernel semantics.
+    let mean = 0.5f32;
+    let std = 0.25f32;
+    for s in 0..b {
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..c {
+                    let src_x = if flip[s] > 0.5 { w - 1 - x } else { x };
+                    let v = raw[((s * h + y) * w + src_x) * c + ch] as f32
+                        / 255.0;
+                    let want = (v - mean) / std;
+                    let idx = s * h * w * c + (y * w + x) * c + ch;
+                    assert!(
+                        (got[idx] - want).abs() < 1e-5,
+                        "sample {s} pixel ({y},{x},{ch}): {} vs {want}",
+                        got[idx]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn grad_plus_sgd_equals_fused_train() {
+    let Some(eng) = engine() else { return };
+    let params = eng.initial_params().unwrap();
+    let g = eng.manifest().geometry.clone();
+    let mut rng = Rng::new(11);
+    let (x, y) = random_batch(&mut rng, 16, g.n_features, g.n_classes);
+    let lr = HostTensor::scalar_f32(0.05);
+
+    // Path A: grad then sgd.
+    let mut args: Vec<HostTensor> = params.clone();
+    args.push(x.clone());
+    args.push(y.clone());
+    let gout = eng.program("grad16").unwrap().run(&args).unwrap();
+    let (grads, loss_a) = gout.split_at(6);
+    let mut sgd_args: Vec<HostTensor> = params.clone();
+    sgd_args.extend(grads.iter().cloned());
+    sgd_args.push(lr.clone());
+    let updated = eng.program("sgd").unwrap().run(&sgd_args).unwrap();
+
+    // Path B: fused train.
+    let mut targs: Vec<HostTensor> = params.clone();
+    targs.push(x);
+    targs.push(y);
+    targs.push(lr);
+    let tout = eng.program("train16").unwrap().run(&targs).unwrap();
+    let (fused, loss_b) = tout.split_at(6);
+
+    assert!(
+        (loss_a[0].scalar().unwrap() - loss_b[0].scalar().unwrap()).abs()
+            < 1e-6
+    );
+    for (i, (a, b)) in updated.iter().zip(fused).enumerate() {
+        let av = a.as_f32().unwrap();
+        let bv = b.as_f32().unwrap();
+        assert_eq!(av.len(), bv.len());
+        for (x, y) in av.iter().zip(bv) {
+            assert!((x - y).abs() < 1e-6, "param {i} mismatch: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn gradient_is_permutation_invariant_theorem1_kernel() {
+    // The numerical core of Theorem 1 at the runtime level: the mean
+    // gradient over a batch does not depend on sample order.
+    let Some(eng) = engine() else { return };
+    let params = eng.initial_params().unwrap();
+    let g = eng.manifest().geometry.clone();
+    let mut rng = Rng::new(13);
+    let (x, y) = random_batch(&mut rng, 16, g.n_features, g.n_classes);
+
+    let perm = Rng::new(5).permutation(16);
+    let xs = x.as_f32().unwrap();
+    let ys = y.as_i32().unwrap();
+    let mut px = vec![0.0f32; xs.len()];
+    let mut py = vec![0i32; 16];
+    for (dst, &src) in perm.iter().enumerate() {
+        px[dst * g.n_features..(dst + 1) * g.n_features].copy_from_slice(
+            &xs[src as usize * g.n_features..(src as usize + 1) * g.n_features],
+        );
+        py[dst] = ys[src as usize];
+    }
+
+    let prog = eng.program("grad16").unwrap();
+    let mut a_args = params.clone();
+    a_args.push(x);
+    a_args.push(y);
+    let a = prog.run(&a_args).unwrap();
+    let mut b_args = params.clone();
+    b_args.push(HostTensor::f32(vec![16, g.n_features], px));
+    b_args.push(HostTensor::i32(vec![16], py));
+    let b = prog.run(&b_args).unwrap();
+
+    for (i, (ga, gb)) in a.iter().zip(&b).enumerate() {
+        let va = ga.as_f32().unwrap();
+        let vb = gb.as_f32().unwrap();
+        for (x, y) in va.iter().zip(vb) {
+            let tol = 1e-4 * x.abs().max(1.0);
+            assert!((x - y).abs() < tol, "output {i}: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn training_reduces_loss_through_runtime() {
+    let Some(eng) = engine() else { return };
+    let g = eng.manifest().geometry.clone();
+    let mut params = eng.initial_params().unwrap();
+    let mut rng = Rng::new(17);
+    let (x, y) = random_batch(&mut rng, 16, g.n_features, g.n_classes);
+    let prog = eng.program("train16").unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        let mut args = params.clone();
+        args.push(x.clone());
+        args.push(y.clone());
+        args.push(HostTensor::scalar_f32(0.1));
+        let out = prog.run(&args).unwrap();
+        losses.push(out[6].scalar().unwrap());
+        params = out[..6].to_vec();
+    }
+    assert!(
+        losses[5] < losses[0] * 0.9,
+        "loss did not decrease: {losses:?}"
+    );
+    assert!(prog.executions() == 6);
+    assert!(prog.mean_exec_s() > 0.0);
+}
+
+#[test]
+fn eval_counts_are_sane() {
+    let Some(eng) = engine() else { return };
+    let g = eng.manifest().geometry.clone();
+    let params = eng.initial_params().unwrap();
+    let mut rng = Rng::new(23);
+    let (x, y) = random_batch(&mut rng, 64, g.n_features, g.n_classes);
+    let mut args = params;
+    args.push(x);
+    args.push(y);
+    let out = eng.program("eval64").unwrap().run(&args).unwrap();
+    let loss = out[0].scalar().unwrap();
+    let correct = out[1].scalar().unwrap();
+    assert!(loss > 0.0 && loss.is_finite());
+    assert!((0.0..=64.0).contains(&correct));
+}
+
+#[test]
+fn shape_validation_rejects_bad_args() {
+    let Some(eng) = engine() else { return };
+    let prog = eng.program("sgd").unwrap();
+    // Wrong arity.
+    assert!(prog.run(&[]).is_err());
+    // Wrong shapes.
+    let bad: Vec<HostTensor> = (0..13)
+        .map(|_| HostTensor::f32(vec![2], vec![0.0; 2]))
+        .collect();
+    assert!(prog.run(&bad).is_err());
+}
+
+#[test]
+fn concurrent_execution_is_safe() {
+    let Some(eng) = engine() else { return };
+    let g = eng.manifest().geometry.clone();
+    let params = eng.initial_params().unwrap();
+    let prog = eng.program("grad16").unwrap();
+
+    // Same batch from every thread => identical gradients expected.
+    let mut rng = Rng::new(29);
+    let (x, y) = random_batch(&mut rng, 16, g.n_features, g.n_classes);
+    let mut base_args = params.clone();
+    base_args.push(x);
+    base_args.push(y);
+    let want = prog.run(&base_args).unwrap();
+
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let prog = Arc::clone(&prog);
+        let args = base_args.clone();
+        let want_loss = want[6].scalar().unwrap();
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..3 {
+                let out = prog.run(&args).unwrap();
+                let loss = out[6].scalar().unwrap();
+                assert!((loss - want_loss).abs() < 1e-6);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,157 @@
+//! Cross-validation: the discrete-event simulator must agree with the §IV
+//! closed-form model in the regimes the model covers (deep prefetch,
+//! steady state). Divergence between them would mean one of the two
+//! reproductions of the paper's cost model is wrong.
+
+use dlio::analytic::lassen_imagenet;
+use dlio::sim::{presets, simulate_epoch, Scheme};
+use dlio::storage::Catalog;
+
+/// Relative error helper.
+fn rel(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1e-12)
+}
+
+#[test]
+fn reg_loading_only_matches_eq4() {
+    let m = lassen_imagenet();
+    for nodes in [8, 32, 128] {
+        let cfg =
+            presets::loading_only(Catalog::imagenet_1k(), nodes, Scheme::Reg, true);
+        let sim = simulate_epoch(&cfg).epoch_time_s;
+        // Eq. (4) with the preset's U(node): storage + preprocess, plus the
+        // simulator's per-node local-assembly extension.
+        let d = m.d_samples;
+        let analytic = m.io_time_plain()
+            + d / (nodes as f64 * cfg.u_node_sps())
+            + d * m.avg_bytes / (nodes as f64 * cfg.local_fetch_bps);
+        assert!(
+            rel(sim, analytic) < 0.05,
+            "p={nodes}: sim {sim:.1}s vs Eq.4 {analytic:.1}s"
+        );
+    }
+}
+
+#[test]
+fn reg_training_matches_eq6() {
+    let m = lassen_imagenet();
+    for nodes in [4, 8, 16, 64, 256] {
+        let cfg = presets::training(Catalog::imagenet_1k(), nodes, Scheme::Reg);
+        let sim = simulate_epoch(&cfg).epoch_time_s;
+        // Eq. (6): max(training, loading); add the sync charge to training.
+        let steps = cfg.steps() as f64;
+        let train = m.training_time(nodes) + steps * cfg.allreduce_s;
+        let load = m.io_time_plain()
+            + m.d_samples / (nodes as f64 * cfg.u_node_sps())
+            + m.d_samples * m.avg_bytes / (nodes as f64 * cfg.local_fetch_bps);
+        let analytic = train.max(load);
+        assert!(
+            rel(sim, analytic) < 0.10,
+            "p={nodes}: sim {sim:.1}s vs Eq.6 {analytic:.1}s"
+        );
+    }
+}
+
+#[test]
+fn loc_loading_matches_eq8_shape() {
+    // Eq. (8) with α=1: io cost is only the balance term β·D/R_b, which is
+    // tiny; the simulated epoch should be dominated by preprocessing, i.e.
+    // close to D/(p·U) plus a small balance overhead.
+    for nodes in [16, 64, 256] {
+        let cfg =
+            presets::loading_only(Catalog::imagenet_1k(), nodes, Scheme::Loc, true);
+        let r = simulate_epoch(&cfg);
+        // The epoch covers steps×global_batch samples (partial batch
+        // dropped, as in the live pipeline).
+        let d = (cfg.steps() * cfg.global_batch()) as f64;
+        let pre = d / (nodes as f64 * cfg.u_node_sps())
+            + d * 117.0 * 1024.0 / (nodes as f64 * cfg.local_fetch_bps);
+        assert!(
+            r.epoch_time_s >= pre * 0.95,
+            "p={nodes}: epoch {} below preprocess floor {pre}",
+            r.epoch_time_s
+        );
+        assert!(
+            r.epoch_time_s <= pre * 1.35,
+            "p={nodes}: epoch {} far above preprocess floor {pre} — balance \
+             traffic should be small (Eq. 8)",
+            r.epoch_time_s
+        );
+        // β from the sim: moved bytes over the epoch's covered volume.
+        let covered_bytes =
+            (cfg.steps() * cfg.global_batch()) as f64 * 117.0 * 1024.0;
+        let beta = r.remote_bytes as f64 / covered_bytes;
+        assert!(
+            (0.005..0.10).contains(&beta),
+            "p={nodes}: simulated β {beta}"
+        );
+    }
+}
+
+#[test]
+fn crossover_location_agrees() {
+    // The sim's waiting time should become significant right where Eq. (5)
+    // predicts (p* ≈ 30 with the Lassen calibration).
+    let m = lassen_imagenet();
+    let pstar = m.crossover_p();
+    let wait_frac = |nodes: usize| {
+        let cfg = presets::training(Catalog::imagenet_1k(), nodes, Scheme::Reg);
+        let r = simulate_epoch(&cfg);
+        r.wait_time_s / r.epoch_time_s
+    };
+    let below = wait_frac((pstar * 0.5) as usize);
+    let above = wait_frac((pstar * 2.5) as usize);
+    assert!(below < 0.10, "below crossover wait fraction {below}");
+    assert!(above > 0.40, "above crossover wait fraction {above}");
+}
+
+#[test]
+fn distcache_sits_between_reg_and_loc() {
+    // Eq. (7) vs Eq. (8): distributed caching removes the storage bound but
+    // keeps ~full-dataset traffic on the fabric; Loc should beat it, and
+    // both should beat Reg at scale.
+    let run = |scheme| {
+        simulate_epoch(&presets::loading_only(
+            Catalog::imagenet_1k(),
+            128,
+            scheme,
+            true,
+        ))
+        .epoch_time_s
+    };
+    let reg = run(Scheme::Reg);
+    let dc = run(Scheme::DistCache);
+    let loc = run(Scheme::Loc);
+    assert!(dc < reg, "distcache {dc} !< reg {reg}");
+    assert!(loc <= dc * 1.05, "loc {loc} !<= distcache {dc}");
+}
+
+#[test]
+fn partial_alpha_interpolates() {
+    // Eq. (7)/(8) at α = 0.5: storage still serves half the volume, so the
+    // epoch should sit between the α=1 and Reg extremes.
+    let mk = |alpha: f64| {
+        let mut cfg = presets::loading_only(
+            Catalog::imagenet_1k(),
+            64,
+            Scheme::Loc,
+            true,
+        );
+        cfg.alpha = alpha;
+        simulate_epoch(&cfg).epoch_time_s
+    };
+    let full = mk(1.0);
+    let half = mk(0.5);
+    let none = mk(0.0);
+    assert!(full < half, "alpha=1 ({full}) should beat alpha=.5 ({half})");
+    assert!(half < none, "alpha=.5 ({half}) should beat alpha=0 ({none})");
+    // α=0 Loc degenerates to Reg (everything from storage).
+    let reg = simulate_epoch(&presets::loading_only(
+        Catalog::imagenet_1k(),
+        64,
+        Scheme::Reg,
+        true,
+    ))
+    .epoch_time_s;
+    assert!(rel(none, reg) < 0.05, "alpha=0 {none} vs reg {reg}");
+}

@@ -1,0 +1,134 @@
+//! Theorem 1 (paper §V-B), end to end: with the same random sequence, the
+//! locality-aware sampler produces the same training trajectory as the
+//! regular block-sliced sampler — same per-step global losses, same final
+//! parameters (up to f32 reduction reordering).
+//!
+//! This exercises the *whole* stack: shard storage → caches + directory →
+//! Reg/Loc partitioning → Algorithm 1 balancing → multi-worker loaders →
+//! Pallas preprocess → grad → all-reduce → sgd, all through PJRT.
+
+use dlio::coordinator::{SamplerKind, Trainer, TrainerConfig, TrainingReport};
+use dlio::loader::LoaderConfig;
+use dlio::net::{Fabric, FabricConfig};
+use dlio::runtime::{default_artifacts_dir, Engine};
+use dlio::storage::{generate, StorageSystem, SyntheticSpec};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn dataset(tag: &str, n: u64) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("dlio-thm1-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    generate(
+        &dir,
+        &SyntheticSpec { n_samples: n, samples_per_shard: 256, ..Default::default() },
+    )
+    .unwrap();
+    dir
+}
+
+fn run(sampler: SamplerKind, data_dir: &PathBuf, epochs: u64) -> TrainingReport {
+    let engine = Arc::new(Engine::load(&default_artifacts_dir()).unwrap());
+    let storage = Arc::new(StorageSystem::open(data_dir, None).unwrap());
+    let fabric = Arc::new(Fabric::new(FabricConfig {
+        real_time: false,
+        ..Default::default()
+    }));
+    let cfg = TrainerConfig {
+        p: 4,
+        epochs,
+        local_batch: 16,
+        lr: 0.05,
+        sampler,
+        loader: LoaderConfig { workers: 2, threads_per_worker: 2, prefetch_batches: 2 },
+        seed: 1234,
+        cache_capacity_bytes: u64::MAX,
+        flip_prob: 0.5,
+        decode_s_per_kib: 0.0,
+        eval_samples: 0,
+        checkpoint_path: None,
+    };
+    Trainer::new(engine, storage, fabric, cfg).unwrap().run().unwrap()
+}
+
+#[test]
+fn theorem1_reg_and_loc_produce_identical_training() {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let data = dataset("main", 512);
+    let reg = run(SamplerKind::Reg, &data, 3);
+    let loc = run(SamplerKind::Loc, &data, 3);
+
+    // Same number of steps.
+    assert_eq!(reg.step_losses.len(), loc.step_losses.len());
+    assert_eq!(reg.step_losses.len(), 3 * (512 / 64));
+
+    // Identical per-step global losses (up to f32 reduction reordering:
+    // learners sum different subsets in different orders).
+    for (s, (a, b)) in reg.step_losses.iter().zip(&loc.step_losses).enumerate() {
+        assert!(
+            (a - b).abs() < 5e-4 * a.abs().max(1.0),
+            "step {s}: reg loss {a} vs loc loss {b}"
+        );
+    }
+
+    // Identical final parameters.
+    for (i, (pa, pb)) in reg.params.iter().zip(&loc.params).enumerate() {
+        let va = pa.as_f32().unwrap();
+        let vb = pb.as_f32().unwrap();
+        let mut max_rel = 0.0f32;
+        for (x, y) in va.iter().zip(vb) {
+            let rel = (x - y).abs() / x.abs().max(1e-3);
+            max_rel = max_rel.max(rel);
+        }
+        assert!(max_rel < 5e-3, "param {i}: max relative diff {max_rel}");
+    }
+
+    // Loss actually went down over 3 epochs (the task is learnable).
+    let first = reg.step_losses[0];
+    let last = *reg.step_losses.last().unwrap();
+    assert!(last < first * 0.9, "no learning: {first} -> {last}");
+
+    // Both runs keep all learners in sync.
+    assert!(reg.learners_in_sync(), "{:?}", reg.param_checksums);
+    assert!(loc.learners_in_sync(), "{:?}", loc.param_checksums);
+}
+
+#[test]
+fn loc_eliminates_storage_traffic_after_population() {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        return;
+    }
+    let data = dataset("traffic", 512);
+    let loc = run(SamplerKind::Loc, &data, 3);
+
+    // Epoch 0 populates: all loads from storage.
+    let e0 = &loc.epochs[0];
+    assert!(e0.load.storage_loads > 0);
+    assert_eq!(e0.load.remote_hits, 0);
+
+    // Epochs >= 1: α = 1 (everything cached) so NO storage reads; local
+    // hits dominate; remote traffic is only balance moves.
+    for e in &loc.epochs[1..] {
+        assert_eq!(
+            e.load.storage_loads, 0,
+            "epoch {}: storage still hit after population",
+            e.epoch
+        );
+        assert!(e.load.local_hits > 0);
+        // Balance traffic is a small fraction of the epoch volume
+        // (paper Fig. 6: ≲ 10% for B_local = 16).
+        let total = e.load.local_hits + e.load.remote_hits;
+        let frac = e.load.remote_hits as f64 / total as f64;
+        assert!(frac < 0.35, "epoch {}: balance fraction {frac}", e.epoch);
+    }
+
+    // Reg on the same data keeps hammering storage every epoch.
+    let reg = run(SamplerKind::Reg, &data, 3);
+    for e in &reg.epochs {
+        assert!(e.load.storage_loads > 0, "epoch {}", e.epoch);
+        assert_eq!(e.load.local_hits, 0);
+    }
+}
