@@ -14,7 +14,7 @@ use dlio::metrics::LoadCounters;
 use dlio::net::{Fabric, FabricConfig};
 use dlio::runtime::{default_artifacts_dir, Engine, HostTensor};
 use dlio::storage::{generate, StorageSystem, SyntheticSpec};
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 fn main() -> Result<()> {
     // --- 1. Dataset -------------------------------------------------------
@@ -38,7 +38,7 @@ fn main() -> Result<()> {
         learner: 0,
         storage: Arc::clone(&storage),
         caches: vec![Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly))],
-        directory: Arc::new(RwLock::new(CacheDirectory::new(storage.n_samples()))),
+        directory: Arc::new(CacheDirectory::new(storage.n_samples())),
         fabric: Arc::new(Fabric::new(FabricConfig {
             real_time: false,
             ..Default::default()

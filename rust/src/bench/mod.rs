@@ -35,6 +35,7 @@ pub struct Bench {
     /// Minimum total measurement time; iterations are batched to reach it.
     pub min_time_s: f64,
     results: Vec<Measurement>,
+    values: Vec<(String, f64, String)>,
 }
 
 impl Default for Bench {
@@ -52,6 +53,7 @@ impl Bench {
             warmup: if quick { 1 } else { 3 },
             min_time_s: if quick { 0.05 } else { 0.25 },
             results: Vec::new(),
+            values: Vec::new(),
         }
     }
 
@@ -100,6 +102,46 @@ impl Bench {
     /// the wall-clock table (units differ).
     pub fn record(&mut self, name: &str, value: f64, unit: &str) {
         println!("VALUE\t{name}\t{value:.6}\t{unit}");
+        self.values.push((name.to_string(), value, unit.to_string()));
+    }
+
+    /// Persist everything recorded so far as machine-readable JSON
+    /// (`BENCH_*.json` trajectory files that future PRs diff against).
+    /// Names/units only ever contain `[a-z0-9_/.-]`, so no escaping is
+    /// needed; non-finite values (a degenerate workload dividing by zero)
+    /// are emitted as `null` so the file stays parseable.
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        fn num(v: f64, fmt: impl Fn(f64) -> String) -> String {
+            if v.is_finite() { fmt(v) } else { "null".to_string() }
+        }
+        let sci = |v: f64| format!("{v:.9e}");
+        let fix = |v: f64| format!("{v:.6}");
+        let mut out = String::from("{\n  \"measurements\": [\n");
+        for (k, m) in self.results.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"mean_s\": {}, \"p50_s\": {}, \
+                 \"p95_s\": {}, \"iters\": {}}}{}\n",
+                m.name,
+                num(m.mean_s, sci),
+                num(m.p50_s, sci),
+                num(m.p95_s, sci),
+                m.iters,
+                if k + 1 < self.results.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ],\n  \"values\": [\n");
+        for (k, (name, value, unit)) in self.values.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{name}\", \"value\": {}, \
+                 \"unit\": \"{unit}\"}}{}\n",
+                num(*value, fix),
+                if k + 1 < self.values.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        std::fs::write(&path, out)?;
+        eprintln!("bench: wrote {}", path.as_ref().display());
+        Ok(())
     }
 
     /// Human-readable summary table.
@@ -141,5 +183,28 @@ mod tests {
         });
         assert!(m.mean_s > 0.0);
         assert!(m.p95_s >= m.p50_s * 0.5);
+    }
+
+    #[test]
+    fn json_output_parses_back() {
+        std::env::set_var("DLIO_BENCH_QUICK", "1");
+        let mut b = Bench::new();
+        b.run("unit/spin", || {
+            black_box(1 + 1);
+        });
+        b.record("unit/rate", 123.5, "samples/s");
+        let path = std::env::temp_dir()
+            .join(format!("dlio-bench-{}.json", std::process::id()));
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::Json::parse(&text).unwrap();
+        let ms = j.at(&["measurements"]).as_arr().unwrap();
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].at(&["name"]).as_str(), Some("unit/spin"));
+        assert!(ms[0].at(&["mean_s"]).as_f64().unwrap() > 0.0);
+        let vs = j.at(&["values"]).as_arr().unwrap();
+        assert_eq!(vs[0].at(&["value"]).as_f64(), Some(123.5));
+        assert_eq!(vs[0].at(&["unit"]).as_str(), Some("samples/s"));
+        std::fs::remove_file(&path).unwrap();
     }
 }

@@ -1,66 +1,122 @@
-//! The replicated cache directory (paper §V-A).
+//! The replicated cache directory (paper §V-A), lock-free.
 //!
 //! Tracks, for every sample id, which learner's cache holds it. The paper
 //! assumes "a cache directory exists for tracking sample locations, and the
 //! directory is duplicated across all learners and stays the same (i.e. no
 //! cache replacement) after populating caches in the first epoch" — so the
-//! directory here is a plain dense vector, cheap to replicate and to
-//! consult once per sample per step.
+//! directory here is a dense table consulted once per sample per step.
+//!
+//! The table is a `Vec<AtomicU32>`: owner lookups on the fetch hot path are
+//! a single relaxed atomic load (no `RwLock`/`Mutex` anywhere — DESIGN.md
+//! §4), and population writes are last-writer-wins swaps. The directory is
+//! a routing *hint*, not the source of truth: the owning cache's own
+//! synchronization protects payloads, and a stale entry (e.g. a Fifo
+//! eviction on the owner) is repaired by the fetch path via
+//! [`clear_owner_if`].
+//!
+//! [`clear_owner_if`]: CacheDirectory::clear_owner_if
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 /// Sentinel for "not cached anywhere".
 const NONE: u32 = u32::MAX;
 
-/// Dense sample-id -> owning-learner map.
-#[derive(Clone, Debug)]
+/// Dense sample-id -> owning-learner map. All methods take `&self`; share
+/// it behind a plain `Arc`.
+#[derive(Debug)]
 pub struct CacheDirectory {
-    owner: Vec<u32>,
-    cached: u64,
+    owner: Vec<AtomicU32>,
+    cached: AtomicU64,
+}
+
+impl Clone for CacheDirectory {
+    /// Snapshot clone (per-entry relaxed loads).
+    fn clone(&self) -> Self {
+        CacheDirectory {
+            owner: self
+                .owner
+                .iter()
+                .map(|o| AtomicU32::new(o.load(Ordering::Relaxed)))
+                .collect(),
+            cached: AtomicU64::new(self.cached.load(Ordering::Relaxed)),
+        }
+    }
 }
 
 impl CacheDirectory {
     pub fn new(n_samples: u64) -> Self {
-        CacheDirectory { owner: vec![NONE; n_samples as usize], cached: 0 }
+        let mut owner = Vec::with_capacity(n_samples as usize);
+        owner.resize_with(n_samples as usize, || AtomicU32::new(NONE));
+        CacheDirectory { owner, cached: AtomicU64::new(0) }
     }
 
     pub fn n_samples(&self) -> u64 {
         self.owner.len() as u64
     }
 
-    /// Which learner caches `sample`, if any.
+    /// Which learner caches `sample`, if any. One relaxed atomic load —
+    /// the lock-free hot path.
     #[inline]
     pub fn owner(&self, sample: u32) -> Option<usize> {
         match self.owner.get(sample as usize) {
-            Some(&o) if o != NONE => Some(o as usize),
-            _ => None,
+            Some(o) => match o.load(Ordering::Relaxed) {
+                NONE => None,
+                j => Some(j as usize),
+            },
+            None => None,
         }
     }
 
     /// Record that `learner` caches `sample`. Idempotent; re-assignment is
     /// a logic error under the paper's no-replacement policy (but tolerated
     /// as last-writer-wins to keep population code simple).
-    pub fn set_owner(&mut self, sample: u32, learner: usize) {
-        let slot = &mut self.owner[sample as usize];
-        if *slot == NONE {
-            self.cached += 1;
+    pub fn set_owner(&self, sample: u32, learner: usize) {
+        let prev =
+            self.owner[sample as usize].swap(learner as u32, Ordering::Relaxed);
+        if prev == NONE {
+            self.cached.fetch_add(1, Ordering::Relaxed);
         }
-        *slot = learner as u32;
+    }
+
+    /// Repair a stale entry: atomically clear `sample`'s owner iff it still
+    /// reads `expected`. The CAS makes a concurrent re-population by a
+    /// *different* learner win over the repair; a re-population by the
+    /// *same* owner is indistinguishable by value (ABA), so callers must
+    /// re-check the owner's cache after clearing and restore the entry via
+    /// [`set_owner`] if the sample reappeared (as `FetchContext` does).
+    /// Returns whether the entry was cleared.
+    ///
+    /// [`set_owner`]: CacheDirectory::set_owner
+    pub fn clear_owner_if(&self, sample: u32, expected: usize) -> bool {
+        let cleared = self.owner[sample as usize]
+            .compare_exchange(
+                expected as u32,
+                NONE,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            )
+            .is_ok();
+        if cleared {
+            self.cached.fetch_sub(1, Ordering::Relaxed);
+        }
+        cleared
     }
 
     /// Number of samples cached somewhere.
     pub fn cached_samples(&self) -> u64 {
-        self.cached
+        self.cached.load(Ordering::Relaxed)
     }
 
     /// The paper's α: fraction of the dataset in the aggregated cache.
     pub fn alpha(&self) -> f64 {
-        self.cached as f64 / self.owner.len().max(1) as f64
+        self.cached_samples() as f64 / self.owner.len().max(1) as f64
     }
 
     /// Build a directory where learner `j` owns the contiguous block
     /// `[j*n/p, (j+1)*n/p)` — the "easily determined sample locations"
     /// population the paper recommends to avoid extra bookkeeping.
     pub fn block_populated(n_samples: u64, p: usize) -> Self {
-        let mut dir = CacheDirectory::new(n_samples);
+        let dir = CacheDirectory::new(n_samples);
         let base = n_samples / p as u64;
         let rem = n_samples % p as u64;
         let mut cursor = 0u64;
@@ -79,7 +135,7 @@ impl CacheDirectory {
     /// the mini-batch sequences are randomly shuffled"); striping spreads
     /// shard-local I/O during population.
     pub fn striped(n_samples: u64, p: usize) -> Self {
-        let mut dir = CacheDirectory::new(n_samples);
+        let dir = CacheDirectory::new(n_samples);
         for s in 0..n_samples {
             dir.set_owner(s as u32, (s % p as u64) as usize);
         }
@@ -89,7 +145,8 @@ impl CacheDirectory {
     /// Per-learner cached-sample counts.
     pub fn counts(&self, p: usize) -> Vec<u64> {
         let mut counts = vec![0u64; p];
-        for &o in &self.owner {
+        for o in &self.owner {
+            let o = o.load(Ordering::Relaxed);
             if o != NONE {
                 counts[o as usize] += 1;
             }
@@ -114,7 +171,7 @@ mod tests {
 
     #[test]
     fn set_and_lookup() {
-        let mut dir = CacheDirectory::new(10);
+        let dir = CacheDirectory::new(10);
         dir.set_owner(3, 2);
         dir.set_owner(7, 0);
         assert_eq!(dir.owner(3), Some(2));
@@ -125,6 +182,43 @@ mod tests {
         dir.set_owner(3, 1);
         assert_eq!(dir.cached_samples(), 2);
         assert_eq!(dir.owner(3), Some(1));
+    }
+
+    #[test]
+    fn clear_owner_if_repairs_only_matching_entries() {
+        let dir = CacheDirectory::new(10);
+        dir.set_owner(5, 2);
+        // Mismatched expectation: no-op.
+        assert!(!dir.clear_owner_if(5, 1));
+        assert_eq!(dir.owner(5), Some(2));
+        assert_eq!(dir.cached_samples(), 1);
+        // Matching expectation: cleared, count decremented.
+        assert!(dir.clear_owner_if(5, 2));
+        assert_eq!(dir.owner(5), None);
+        assert_eq!(dir.cached_samples(), 0);
+        // Clearing an already-clear entry is a no-op.
+        assert!(!dir.clear_owner_if(5, 2));
+        assert_eq!(dir.cached_samples(), 0);
+    }
+
+    #[test]
+    fn lock_free_concurrent_population_counts_exactly() {
+        let dir = std::sync::Arc::new(CacheDirectory::new(4000));
+        let mut handles = Vec::new();
+        for t in 0..8usize {
+            let dir = std::sync::Arc::clone(&dir);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500u32 {
+                    dir.set_owner(t as u32 * 500 + i, t);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(dir.cached_samples(), 4000);
+        assert_eq!(dir.counts(8), vec![500; 8]);
+        assert_eq!(dir.alpha(), 1.0);
     }
 
     #[test]
@@ -147,6 +241,15 @@ mod tests {
         let dir = CacheDirectory::striped(10, 3);
         assert_eq!(dir.counts(3), vec![4, 3, 3]);
         assert_eq!(dir.owner(4), Some(1));
+    }
+
+    #[test]
+    fn clone_is_a_snapshot() {
+        let dir = CacheDirectory::striped(16, 4);
+        let snap = dir.clone();
+        dir.set_owner(0, 3);
+        assert_eq!(snap.owner(0), Some(0));
+        assert_eq!(snap.cached_samples(), 16);
     }
 
     #[test]

@@ -41,8 +41,9 @@ impl AggregatedCache {
     }
 
     /// Insert into `learner`'s cache and update the directory. Returns
-    /// whether the cache accepted the sample.
-    pub fn insert(&mut self, learner: usize, sample: Arc<Sample>) -> bool {
+    /// whether the cache accepted the sample. Takes `&self`: the caches
+    /// synchronize internally and the directory is lock-free.
+    pub fn insert(&self, learner: usize, sample: Arc<Sample>) -> bool {
         let id = sample.id;
         if self.caches[learner].insert(sample) {
             self.directory.set_owner(id, learner);
@@ -69,7 +70,7 @@ mod tests {
     use super::*;
 
     fn sample(id: u32) -> Arc<Sample> {
-        Arc::new(Sample { id, bytes: vec![id as u8; 8], label: 0 })
+        Arc::new(Sample { id, bytes: vec![id as u8; 8].into(), label: 0 })
     }
 
     fn agg(p: usize, cap: u64, n: u64) -> AggregatedCache {
@@ -81,7 +82,7 @@ mod tests {
 
     #[test]
     fn insert_updates_directory_and_fetch_routes() {
-        let mut a = agg(3, 1024, 100);
+        let a = agg(3, 1024, 100);
         assert!(a.insert(1, sample(42)));
         assert_eq!(a.directory().owner(42), Some(1));
         let (owner, s) = a.fetch(42).unwrap();
@@ -92,7 +93,7 @@ mod tests {
 
     #[test]
     fn rejected_insert_leaves_directory_clean() {
-        let mut a = agg(2, 8, 10); // capacity: exactly one 8-byte sample
+        let a = agg(2, 8, 10); // capacity: exactly one 8-byte sample
         assert!(a.insert(0, sample(1)));
         assert!(!a.insert(0, sample(2)));
         assert_eq!(a.directory().owner(2), None);
@@ -101,7 +102,7 @@ mod tests {
 
     #[test]
     fn disjoint_population_alpha_reaches_one() {
-        let mut a = agg(4, u64::MAX, 40);
+        let a = agg(4, u64::MAX, 40);
         for id in 0..40u32 {
             assert!(a.insert(id as usize % 4, sample(id)));
         }

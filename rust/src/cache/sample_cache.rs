@@ -53,9 +53,16 @@ impl SampleCache {
         }
     }
 
-    /// Insert a sample. Returns `false` if rejected (InsertOnly + full).
+    /// Insert a sample. Returns `false` if rejected (InsertOnly + full, or
+    /// the sample alone exceeds the cache capacity).
     pub fn insert(&self, sample: Arc<Sample>) -> bool {
         let sz = sample.size() as u64;
+        if sz > self.capacity_bytes {
+            // An oversized sample can never fit: reject up front. (A Fifo
+            // cache used to drain its *entire* contents before discovering
+            // this — evicting everything and still returning `false`.)
+            return false;
+        }
         let mut inner = self.inner.lock().unwrap();
         if inner.map.contains_key(&sample.id) {
             return true; // already cached; idempotent
@@ -71,7 +78,7 @@ impl SampleCache {
                                     inner.bytes -= s.size() as u64;
                                 }
                             }
-                            None => return false, // sample bigger than cache
+                            None => return false, // unreachable: sz <= cap
                         }
                     }
                 }
@@ -139,7 +146,7 @@ mod tests {
     use super::*;
 
     fn sample(id: u32, size: usize) -> Arc<Sample> {
-        Arc::new(Sample { id, bytes: vec![id as u8; size], label: 0 })
+        Arc::new(Sample { id, bytes: vec![id as u8; size].into(), label: 0 })
     }
 
     #[test]
@@ -193,6 +200,27 @@ mod tests {
         let c = SampleCache::new(100, Policy::Fifo);
         assert!(!c.insert(sample(1, 200)));
         assert!(c.is_empty());
+    }
+
+    #[test]
+    fn fifo_oversized_insert_does_not_evict_existing_entries() {
+        // Regression: an oversized sample used to drain the whole Fifo
+        // cache before being rejected. It must be rejected up front with
+        // the resident set untouched.
+        let c = SampleCache::new(300, Policy::Fifo);
+        assert!(c.insert(sample(1, 100)));
+        assert!(c.insert(sample(2, 100)));
+        assert!(c.insert(sample(3, 100)));
+        assert!(!c.insert(sample(4, 400)), "oversized must be rejected");
+        assert!(
+            c.contains(1) && c.contains(2) && c.contains(3),
+            "rejection must not evict resident samples"
+        );
+        assert_eq!(c.bytes(), 300);
+        // A fitting insert afterwards still evicts normally (oldest out).
+        assert!(c.insert(sample(5, 100)));
+        assert!(!c.contains(1));
+        assert!(c.contains(5));
     }
 
     #[test]

@@ -149,7 +149,7 @@ impl TieredCache {
                 self.disk_hits.fetch_add(1, Ordering::Relaxed);
                 Ok(Some(std::sync::Arc::new(Sample {
                     id,
-                    bytes,
+                    bytes: bytes.into(),
                     label: slot.label,
                 })))
             }
@@ -196,7 +196,11 @@ mod tests {
     use std::sync::Arc;
 
     fn sample(id: u32, size: usize) -> Arc<Sample> {
-        Arc::new(Sample { id, bytes: vec![(id % 251) as u8; size], label: id as u16 })
+        Arc::new(Sample {
+            id,
+            bytes: vec![(id % 251) as u8; size].into(),
+            label: id as u16,
+        })
     }
 
     fn cache(mem: u64, disk: u64) -> TieredCache {

@@ -36,7 +36,7 @@ use crate::sampler::{loc_partition, reg_partition, EpochPlan, GlobalShuffler};
 use crate::storage::StorageSystem;
 use anyhow::{ensure, Context, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Barrier, Mutex, RwLock};
+use std::sync::{Arc, Barrier, Mutex};
 use std::time::Instant;
 
 /// Which loading scheme the learners run.
@@ -154,6 +154,9 @@ fn add_snap(a: &mut LoadSnapshot, d: &LoadSnapshot) {
     a.decode_s += d.decode_s;
     a.preprocess_s += d.preprocess_s;
     a.fetch_s += d.fetch_s;
+    a.batch_fetches += d.batch_fetches;
+    a.owner_messages += d.owner_messages;
+    a.storage_runs += d.storage_runs;
 }
 
 fn flatten(tensors: &[HostTensor], extra: f32) -> Result<Vec<f32>> {
@@ -226,7 +229,7 @@ impl Trainer {
                 ))
             })
             .collect();
-        let directory = Arc::new(RwLock::new(CacheDirectory::new(n)));
+        let directory = Arc::new(CacheDirectory::new(n));
         let populate = Arc::new(AtomicBool::new(
             cfg.cache_capacity_bytes > 0 && cfg.sampler != SamplerKind::Reg,
         ));
@@ -397,7 +400,7 @@ struct LearnerEnv {
     cfg: TrainerConfig,
     storage: Arc<StorageSystem>,
     caches: Vec<Arc<SampleCache>>,
-    directory: Arc<RwLock<CacheDirectory>>,
+    directory: Arc<CacheDirectory>,
     populate: Arc<AtomicBool>,
     fabric: Arc<Fabric>,
     sync: Arc<GradSync>,
@@ -467,8 +470,8 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
         let assignment = |step: usize| -> (Vec<u32>, u64) {
             let mb = plan.batch(step);
             if use_loc {
-                let dir = directory.read().unwrap();
-                let (parts, stats) = loc_partition(mb.sample_ids, &dir, p);
+                let (parts, stats) =
+                    loc_partition(mb.sample_ids, &directory, p);
                 (parts[j].sample_ids.clone(), stats.balance_moves as u64)
             } else {
                 (reg_partition(mb.sample_ids, p)[j].sample_ids.clone(), 0)

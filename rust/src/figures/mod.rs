@@ -12,7 +12,7 @@ use crate::sim::{presets, simulate_epoch, simulate_epochs, Scheme};
 use crate::storage::{Catalog, StorageSystem, TokenBucket};
 use crate::util::stats::BoxPlot;
 use anyhow::Result;
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 /// A generic labeled series point for scale curves.
 #[derive(Clone, Debug)]
@@ -138,7 +138,7 @@ pub fn fig7(
                 learner: 0,
                 storage: Arc::clone(&storage),
                 caches: vec![Arc::new(SampleCache::new(0, Policy::InsertOnly))],
-                directory: Arc::new(RwLock::new(CacheDirectory::new(n as u64))),
+                directory: Arc::new(CacheDirectory::new(n as u64)),
                 fabric: Arc::new(Fabric::new(FabricConfig {
                     real_time: false,
                     ..Default::default()

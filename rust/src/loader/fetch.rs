@@ -6,13 +6,32 @@
 //! the storage system". Storage reads optionally populate the local cache
 //! and the shared directory on-the-fly (the paper's first-epoch population
 //! policy).
+//!
+//! This is the zero-copy, coalesced pipeline (DESIGN.md §2/§4):
+//!
+//! * Directory lookups are single atomic loads — no lock anywhere on the
+//!   per-sample hot path.
+//! * Cache hits hand out `Arc`-backed [`SampleBytes`] slices: zero payload
+//!   copies until batch assembly.
+//! * [`fetch_batch`] groups remote misses by owning learner (ONE
+//!   `Fabric::transfer` per distinct owner per batch — message count is
+//!   O(owners), not O(batch)) and storage misses by contiguous shard run
+//!   (one `TokenBucket::acquire` + one range read per run).
+//! * A directory entry pointing at an owner that no longer holds the
+//!   sample (Fifo eviction race) falls back to storage and *repairs* the
+//!   directory instead of erroring.
+//!
+//! [`SampleBytes`]: crate::storage::SampleBytes
+//! [`fetch_batch`]: FetchContext::fetch_batch
 
 use crate::cache::{CacheDirectory, SampleCache};
 use crate::metrics::{LoadCounters, Source};
 use crate::net::Fabric;
 use crate::storage::{Sample, StorageSystem};
 use anyhow::Result;
-use std::sync::{Arc, RwLock};
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Everything a loader worker needs to materialize sample bytes.
@@ -21,8 +40,9 @@ pub struct FetchContext {
     pub storage: Arc<StorageSystem>,
     /// All learners' caches (index = learner id); `caches[learner]` is ours.
     pub caches: Vec<Arc<SampleCache>>,
-    /// Replicated cache directory (shared; updated during population).
-    pub directory: Arc<RwLock<CacheDirectory>>,
+    /// Replicated cache directory (shared, lock-free; updated during
+    /// population and repaired on stale hits).
+    pub directory: Arc<CacheDirectory>,
     pub fabric: Arc<Fabric>,
     /// Populate our cache + directory on storage reads (first epoch).
     pub cache_on_load: bool,
@@ -37,44 +57,273 @@ pub struct FetchContext {
     pub counters: Arc<LoadCounters>,
 }
 
-impl FetchContext {
-    /// Fetch one sample, charging the appropriate substrate.
-    pub fn fetch(&self, id: u32) -> Result<Arc<Sample>> {
-        let t0 = Instant::now();
-        let out = self.fetch_inner(id);
-        self.counters.fetch_ns.fetch_add(
-            t0.elapsed().as_nanos() as u64,
-            std::sync::atomic::Ordering::Relaxed,
-        );
-        out
+/// A partially resolved batch: local and (owner-coalesced) remote hits
+/// are filled in `slots`; storage misses remain in `pending` for the
+/// caller to complete — in one go via [`FetchContext::fetch_batch`], or
+/// split across loader threads via [`FetchContext::fetch_storage`] so
+/// storage admission + decode occupancy overlap while fabric messages
+/// stay one per distinct owner per *batch*.
+pub struct DeferredBatch {
+    /// One slot per requested id, in request order.
+    pub slots: Vec<Option<Arc<Sample>>>,
+    /// Unresolved storage misses: (sample id, slot positions) — one entry
+    /// per *unique* id, so duplicates are fetched and accounted once.
+    pub pending: Vec<(u32, Vec<usize>)>,
+}
+
+impl DeferredBatch {
+    /// Fill the slots of `chunk` (a slice of this batch's `pending`) with
+    /// the samples returned by [`FetchContext::fetch_storage`] for it.
+    pub fn fill(&mut self, chunk: &[(u32, Vec<usize>)], samples: Vec<Arc<Sample>>) {
+        for ((_, pos), s) in chunk.iter().zip(samples) {
+            fill_slots(&mut self.slots, pos, &s);
+        }
     }
 
-    fn fetch_inner(&self, id: u32) -> Result<Arc<Sample>> {
-        // 1. Local cache.
-        if let Some(s) = self.caches[self.learner].get(id) {
-            self.counters.record(Source::LocalCache, s.size() as u64);
-            return Ok(s);
+    /// Unwrap into request-order samples; panics if any slot is unfilled.
+    pub fn finish(self) -> Vec<Arc<Sample>> {
+        self.slots
+            .into_iter()
+            .map(|s| s.expect("every batch slot is filled"))
+            .collect()
+    }
+}
+
+fn fill_slots(slots: &mut [Option<Arc<Sample>>], pos: &[usize], s: &Arc<Sample>) {
+    for &i in pos {
+        slots[i] = Some(Arc::clone(s));
+    }
+}
+
+impl FetchContext {
+    /// Fetch one sample, charging the appropriate substrate. A batch of
+    /// one through the batch pipeline, so there is exactly ONE
+    /// implementation of the lookup hierarchy and the repair protocol
+    /// (does not count toward `batch_fetches`).
+    pub fn fetch(&self, id: u32) -> Result<Arc<Sample>> {
+        let t0 = Instant::now();
+        let result = (|| {
+            let mut batch = self.fetch_batch_core(std::slice::from_ref(&id))?;
+            let pending = std::mem::take(&mut batch.pending);
+            let fetched = self.storage_fill(&pending)?;
+            batch.fill(&pending, fetched);
+            Ok(batch
+                .finish()
+                .pop()
+                .expect("batch of one yields one sample"))
+        })();
+        self.counters
+            .fetch_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        result
+    }
+
+    /// Fetch a whole batch with owner- and run-coalescing. Returns samples
+    /// in `ids` order. For a batch whose remote hits come from `k` distinct
+    /// owners this sends exactly `k` fabric messages, and its storage
+    /// misses cost one throttle acquire + one range read per contiguous
+    /// shard run. Duplicate ids are fetched once (one read / one transfer
+    /// payload) but accounted once per requested position, so
+    /// `LoadSnapshot::total_samples` matches the sum of batch sizes.
+    pub fn fetch_batch(&self, ids: &[u32]) -> Result<Vec<Arc<Sample>>> {
+        let t0 = Instant::now();
+        if !ids.is_empty() {
+            self.counters.batch_fetches.fetch_add(1, Ordering::Relaxed);
         }
-        // 2. Remote cache, paying the interconnect.
-        let owner = self.directory.read().unwrap().owner(id);
-        if let Some(owner) = owner {
-            if owner != self.learner {
-                if let Some(s) = self.caches[owner].get(id) {
-                    self.fabric.transfer(owner, self.learner, s.size() as u64);
-                    self.counters.record(Source::RemoteCache, s.size() as u64);
-                    return Ok(s);
+        let result = (|| {
+            let mut batch = self.fetch_batch_core(ids)?;
+            let pending = std::mem::take(&mut batch.pending);
+            let fetched = self.storage_fill(&pending)?;
+            batch.fill(&pending, fetched);
+            Ok(batch.finish())
+        })();
+        self.counters
+            .fetch_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        result
+    }
+
+    /// Phase one of a batch fetch: resolve local hits and owner-coalesced
+    /// remote hits for the WHOLE batch, leaving storage misses pending.
+    /// Complete them with [`fetch_storage`] (chunkable across threads) and
+    /// [`DeferredBatch::fill`]/[`DeferredBatch::finish`].
+    ///
+    /// [`fetch_storage`]: FetchContext::fetch_storage
+    pub fn fetch_batch_begin(&self, ids: &[u32]) -> Result<DeferredBatch> {
+        let t0 = Instant::now();
+        if !ids.is_empty() {
+            self.counters.batch_fetches.fetch_add(1, Ordering::Relaxed);
+        }
+        let result = self.fetch_batch_core(ids);
+        self.counters
+            .fetch_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        result
+    }
+
+    /// Phase two: serve `pending` entries from storage — contiguous-run
+    /// coalesced reads, decode occupancy, optional population. Safe to call
+    /// concurrently on disjoint chunks of one batch's `pending` (this is
+    /// how loader threads overlap storage admission with decode).
+    pub fn fetch_storage(
+        &self,
+        pending: &[(u32, Vec<usize>)],
+    ) -> Result<Vec<Arc<Sample>>> {
+        let t0 = Instant::now();
+        let result = self.storage_fill(pending);
+        self.counters
+            .fetch_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        result
+    }
+
+    fn fetch_batch_core(&self, ids: &[u32]) -> Result<DeferredBatch> {
+        let b = ids.len();
+        let mut batch =
+            DeferredBatch { slots: vec![None; b], pending: Vec::new() };
+        if b == 0 {
+            return Ok(batch);
+        }
+
+        // 1. Local hits (zero-copy Arc handouts).
+        let mut missing: Vec<usize> = Vec::new();
+        for (i, &id) in ids.iter().enumerate() {
+            match self.caches[self.learner].get(id) {
+                Some(s) => {
+                    self.counters.record(Source::LocalCache, s.size() as u64);
+                    batch.slots[i] = Some(s);
                 }
+                None => missing.push(i),
             }
         }
-        // 3. Storage system (token-bucket-limited).
-        let s = Arc::new(self.storage.read_sample(id)?);
-        self.counters.record(Source::Storage, s.size() as u64);
-        self.decode(&s);
-        if self.cache_on_load && self.caches[self.learner].insert(Arc::clone(&s))
-        {
-            self.directory.write().unwrap().set_owner(id, self.learner);
+
+        // 2. Group misses by id — duplicates are fetched and accounted
+        //    once — then route by directory owner (single atomic load per
+        //    id; BTreeMaps keep the order deterministic).
+        let mut miss_pos: BTreeMap<u32, Vec<usize>> = BTreeMap::new();
+        for i in missing {
+            miss_pos.entry(ids[i]).or_default().push(i);
         }
-        Ok(s)
+        let mut by_owner: BTreeMap<usize, Vec<(u32, Vec<usize>)>> =
+            BTreeMap::new();
+        for (id, pos) in miss_pos {
+            match self.directory.owner(id) {
+                Some(owner) if owner != self.learner => {
+                    by_owner.entry(owner).or_default().push((id, pos));
+                }
+                Some(owner) => {
+                    // Stale self-entry: our cache no longer holds it.
+                    match self.repair_then_recheck(id, owner) {
+                        Some(s) => {
+                            self.counters.record_n(
+                                Source::LocalCache,
+                                s.size() as u64,
+                                pos.len() as u64,
+                            );
+                            fill_slots(&mut batch.slots, &pos, &s);
+                        }
+                        None => batch.pending.push((id, pos)),
+                    }
+                }
+                None => batch.pending.push((id, pos)),
+            }
+        }
+
+        // 3. Remote hits: ONE fabric message per distinct owner per batch.
+        for (owner, entries) in by_owner {
+            let mut bytes = 0u64;
+            for (id, pos) in entries {
+                let got = self
+                    .caches[owner]
+                    .get(id)
+                    .or_else(|| self.repair_then_recheck(id, owner));
+                match got {
+                    Some(s) => {
+                        // One payload crosses the wire per unique id; the
+                        // hit is accounted once per batch position.
+                        bytes += s.size() as u64;
+                        self.counters.record_n(
+                            Source::RemoteCache,
+                            s.size() as u64,
+                            pos.len() as u64,
+                        );
+                        fill_slots(&mut batch.slots, &pos, &s);
+                    }
+                    None => batch.pending.push((id, pos)),
+                }
+            }
+            if bytes > 0 {
+                self.fabric.transfer(owner, self.learner, bytes);
+                self.counters.owner_messages.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Ok(batch)
+    }
+
+    /// Untimed storage completion shared by `fetch`/`fetch_batch`/
+    /// `fetch_storage`: one coalesced `read_batch`, then per-sample decode
+    /// occupancy and population. Returns samples aligned with `pending`.
+    fn storage_fill(
+        &self,
+        pending: &[(u32, Vec<usize>)],
+    ) -> Result<Vec<Arc<Sample>>> {
+        if pending.is_empty() {
+            return Ok(Vec::new());
+        }
+        let want: Vec<u32> = pending.iter().map(|(id, _)| *id).collect();
+        let (samples, runs) = self.storage.read_batch(&want)?;
+        self.counters
+            .storage_runs
+            .fetch_add(runs as u64, Ordering::Relaxed);
+        let mut out = Vec::with_capacity(samples.len());
+        for ((_, pos), s) in pending.iter().zip(samples) {
+            self.counters.record_n(
+                Source::Storage,
+                s.size() as u64,
+                pos.len() as u64,
+            );
+            let s = Arc::new(s);
+            self.decode(&s);
+            self.populate(&s);
+            out.push(s);
+        }
+        Ok(out)
+    }
+
+    /// Stale-entry repair: CAS-clear the directory claim, then re-check
+    /// the owner's cache ONCE — a same-owner re-population is
+    /// value-identical to the stale entry (ABA) and our CAS may have
+    /// clobbered its fresh claim; if the sample reappeared, restore the
+    /// claim and hand the sample back (see `CacheDirectory::clear_owner_if`
+    /// docs). Used identically for stale self- and remote entries.
+    fn repair_then_recheck(&self, id: u32, owner: usize) -> Option<Arc<Sample>> {
+        self.directory.clear_owner_if(id, owner);
+        let s = self.caches[owner].get(id)?;
+        self.directory.set_owner(id, owner);
+        Some(s)
+    }
+
+    /// First-epoch population: local cache insert + directory claim. A
+    /// sample whose bytes pin a larger shared run buffer (`pread` fallback
+    /// mode) is compacted before caching, so the cache's byte accounting
+    /// matches what it actually keeps resident; mapped views (the default)
+    /// are cached as-is with zero copies.
+    fn populate(&self, s: &Arc<Sample>) {
+        if !self.cache_on_load {
+            return;
+        }
+        let to_cache = if s.bytes.pins_excess_heap() {
+            Arc::new(Sample {
+                id: s.id,
+                bytes: s.bytes.compacted(),
+                label: s.label,
+            })
+        } else {
+            Arc::clone(s)
+        };
+        if self.caches[self.learner].insert(to_cache) {
+            self.directory.set_owner(s.id, self.learner);
+        }
     }
 
     /// Simulated decode occupancy (parallelizable across threads; see the
@@ -86,10 +335,9 @@ impl FetchContext {
         let cost = self.decode_s_per_kib * s.size() as f64 / 1024.0;
         let t0 = Instant::now();
         std::thread::sleep(std::time::Duration::from_secs_f64(cost));
-        self.counters.decode_ns.fetch_add(
-            t0.elapsed().as_nanos() as u64,
-            std::sync::atomic::Ordering::Relaxed,
-        );
+        self.counters
+            .decode_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
 }
 
@@ -100,9 +348,13 @@ mod tests {
     use crate::net::FabricConfig;
     use crate::storage::{generate, SyntheticSpec};
 
-    fn ctx(cache_on_load: bool) -> (FetchContext, Arc<SampleCache>) {
+    fn ctx_with(
+        tag: &str,
+        cache_on_load: bool,
+        p: usize,
+    ) -> (FetchContext, Arc<SampleCache>) {
         let dir = std::env::temp_dir().join(format!(
-            "dlio-fetch-{}-{cache_on_load}",
+            "dlio-fetch-{tag}-{}-{cache_on_load}",
             std::process::id()
         ));
         let _ = std::fs::remove_dir_all(&dir);
@@ -112,7 +364,7 @@ mod tests {
         )
         .unwrap();
         let storage = Arc::new(StorageSystem::open(&dir, None).unwrap());
-        let caches: Vec<Arc<SampleCache>> = (0..2)
+        let caches: Vec<Arc<SampleCache>> = (0..p)
             .map(|_| Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly)))
             .collect();
         let mine = Arc::clone(&caches[0]);
@@ -120,7 +372,7 @@ mod tests {
             learner: 0,
             storage,
             caches,
-            directory: Arc::new(RwLock::new(CacheDirectory::new(100))),
+            directory: Arc::new(CacheDirectory::new(100)),
             fabric: Arc::new(Fabric::new(FabricConfig {
                 real_time: false,
                 ..Default::default()
@@ -132,15 +384,21 @@ mod tests {
         (fc, mine)
     }
 
+    fn ctx(cache_on_load: bool) -> (FetchContext, Arc<SampleCache>) {
+        ctx_with("base", cache_on_load, 2)
+    }
+
     #[test]
     fn storage_miss_then_local_hit_with_population() {
         let (fc, mine) = ctx(true);
         let a = fc.fetch(5).unwrap();
         assert_eq!(fc.counters.snapshot().storage_loads, 1);
         assert!(mine.contains(5));
-        assert_eq!(fc.directory.read().unwrap().owner(5), Some(0));
+        assert_eq!(fc.directory.owner(5), Some(0));
         let b = fc.fetch(5).unwrap();
         assert_eq!(a.bytes, b.bytes);
+        // The hit hands back the very same Arc — zero payload copies.
+        assert!(Arc::ptr_eq(&a, &b));
         let snap = fc.counters.snapshot();
         assert_eq!(snap.local_hits, 1);
         assert_eq!(snap.storage_loads, 1);
@@ -161,7 +419,7 @@ mod tests {
         // Put sample 3 in learner 1's cache and register it.
         let s = Arc::new(fc.storage.read_sample(3).unwrap());
         fc.caches[1].insert(Arc::clone(&s));
-        fc.directory.write().unwrap().set_owner(3, 1);
+        fc.directory.set_owner(3, 1);
         fc.storage.reset_counters();
 
         let got = fc.fetch(3).unwrap();
@@ -171,6 +429,117 @@ mod tests {
         assert_eq!(snap.remote_bytes, s.size() as u64);
         assert_eq!(fc.fabric.p2p_messages(), 1);
         assert_eq!(fc.storage.samples_read(), 0, "storage must not be hit");
+    }
+
+    #[test]
+    fn stale_directory_entry_falls_back_to_storage_and_repairs() {
+        let (fc, mine) = ctx(true);
+        // Directory claims learner 1 holds sample 9, but its cache is
+        // empty (models a Fifo eviction race).
+        fc.directory.set_owner(9, 1);
+        let got = fc.fetch(9).unwrap();
+        assert_eq!(got.id, 9);
+        let snap = fc.counters.snapshot();
+        assert_eq!(snap.storage_loads, 1, "must fall back to storage");
+        assert_eq!(snap.remote_hits, 0);
+        assert_eq!(fc.fabric.p2p_messages(), 0, "no phantom transfer");
+        // Repaired: we populated, so the entry now points at us.
+        assert!(mine.contains(9));
+        assert_eq!(fc.directory.owner(9), Some(0));
+    }
+
+    #[test]
+    fn stale_entry_without_population_clears_directory() {
+        let (fc, _) = ctx(false);
+        fc.directory.set_owner(9, 1);
+        fc.fetch(9).unwrap();
+        assert_eq!(fc.directory.owner(9), None, "stale entry must be cleared");
+        assert_eq!(fc.counters.snapshot().storage_loads, 1);
+    }
+
+    #[test]
+    fn fetch_batch_sends_one_message_per_distinct_owner() {
+        let (fc, _) = ctx_with("coal", false, 4);
+        // 12 remote samples spread over owners 1..=3 (4 each), plus 4
+        // local-cache hits and 4 storage misses.
+        let mut ids: Vec<u32> = Vec::new();
+        for id in 0..12u32 {
+            let owner = 1 + (id as usize % 3);
+            let s = Arc::new(fc.storage.read_sample(id).unwrap());
+            fc.caches[owner].insert(s);
+            fc.directory.set_owner(id, owner);
+            ids.push(id);
+        }
+        for id in 12..16u32 {
+            let s = Arc::new(fc.storage.read_sample(id).unwrap());
+            fc.caches[0].insert(s);
+            ids.push(id);
+        }
+        for id in 16..20u32 {
+            ids.push(id); // uncached: storage
+        }
+        fc.storage.reset_counters();
+
+        let before = fc.fabric.p2p_messages();
+        let got = fc.fetch_batch(&ids).unwrap();
+        assert_eq!(got.len(), 20);
+        for (k, s) in got.iter().enumerate() {
+            assert_eq!(s.id, ids[k]);
+        }
+        // Exactly k = 3 distinct owners => exactly 3 fabric messages.
+        assert_eq!(fc.fabric.p2p_messages() - before, 3);
+        let snap = fc.counters.snapshot();
+        assert_eq!(snap.remote_hits, 12);
+        assert_eq!(snap.local_hits, 4);
+        assert_eq!(snap.storage_loads, 4);
+        assert_eq!(snap.owner_messages, 3);
+        assert_eq!(snap.batch_fetches, 1);
+        // 16..20 is one contiguous run in one shard.
+        assert_eq!(snap.storage_runs, 1);
+        assert_eq!(fc.storage.samples_read(), 4);
+        // Remote bytes ride the 3 messages in full.
+        assert_eq!(fc.fabric.p2p_bytes(), 12 * 3072);
+    }
+
+    #[test]
+    fn fetch_batch_stale_owner_falls_back_and_repairs() {
+        let (fc, mine) = ctx_with("stale", true, 3);
+        // Owner 1 really holds 2 of the 4 "remote" samples; the directory
+        // lies about the other 2.
+        for id in [0u32, 1] {
+            let s = Arc::new(fc.storage.read_sample(id).unwrap());
+            fc.caches[1].insert(s);
+            fc.directory.set_owner(id, 1);
+        }
+        fc.directory.set_owner(2, 1); // stale
+        fc.directory.set_owner(3, 2); // stale
+        fc.storage.reset_counters();
+
+        let got = fc.fetch_batch(&[0, 1, 2, 3]).unwrap();
+        assert_eq!(got.len(), 4);
+        let snap = fc.counters.snapshot();
+        assert_eq!(snap.remote_hits, 2);
+        assert_eq!(snap.storage_loads, 2);
+        // One message for owner 1's real hits; the all-stale owner 2 sends
+        // nothing.
+        assert_eq!(snap.owner_messages, 1);
+        assert_eq!(fc.fabric.p2p_messages(), 1);
+        // Stale entries were repaired and repopulated to us.
+        assert!(mine.contains(2) && mine.contains(3));
+        assert_eq!(fc.directory.owner(2), Some(0));
+        assert_eq!(fc.directory.owner(3), Some(0));
+        // Content still correct.
+        for (k, s) in got.iter().enumerate() {
+            let direct = fc.storage.read_sample(k as u32).unwrap();
+            assert_eq!(s.bytes, direct.bytes);
+        }
+    }
+
+    #[test]
+    fn fetch_batch_empty_and_out_of_range() {
+        let (fc, _) = ctx(false);
+        assert!(fc.fetch_batch(&[]).unwrap().is_empty());
+        assert!(fc.fetch_batch(&[0, 1000]).is_err());
     }
 
     #[test]

@@ -23,10 +23,11 @@
 pub mod fetch;
 pub mod reorder;
 
-pub use fetch::FetchContext;
+pub use fetch::{DeferredBatch, FetchContext};
 pub use reorder::Reorder;
 
 use crate::runtime::{HostTensor, Program};
+use crate::storage::Sample;
 use crate::util::{Queue, Rng};
 use anyhow::{ensure, Context, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -189,6 +190,28 @@ fn flip_for(seed: u64, epoch: u64, sample: u32, prob: f64) -> f32 {
     }
 }
 
+/// Copy fetched samples into the batch tensor slots — the single payload
+/// copy of the whole fetch path — and collect labels.
+fn assemble(
+    ids: &[u32],
+    samples: &[Arc<Sample>],
+    rb: usize,
+    x: &mut [u8],
+    labels: &mut [i32],
+) -> Result<()> {
+    for (i, s) in samples.iter().enumerate() {
+        ensure!(
+            s.bytes.len() == rb,
+            "sample {}: {} bytes, expected {rb}",
+            ids[i],
+            s.bytes.len()
+        );
+        x[i * rb..(i + 1) * rb].copy_from_slice(&s.bytes);
+        labels[i] = s.label as i32;
+    }
+    Ok(())
+}
+
 fn load_batch(shared: &WorkerShared, req: BatchRequest) -> Result<LoadedBatch> {
     let t0 = Instant::now();
     let b = req.ids.len();
@@ -197,53 +220,40 @@ fn load_batch(shared: &WorkerShared, req: BatchRequest) -> Result<LoadedBatch> {
     let mut x_u8 = vec![0u8; b * rb];
     let mut labels = vec![0i32; b];
 
-    // Fetch + decode, optionally parallelized across scoped threads.
-    // Each thread owns disjoint chunks of the output buffers.
+    // Fetch via the coalesced zero-copy path. With intra-batch threads,
+    // phase one (local + owner-coalesced remote, one fabric message per
+    // distinct owner for the WHOLE batch) runs once, then the storage
+    // completions — admission sleeps + decode occupancy — are split
+    // across scoped threads so they overlap exactly as the paper's
+    // §III-B multithreading does. Assembly below is the ONE copy each
+    // sample byte takes between storage/cache and the batch tensor
+    // (DESIGN.md §2).
     let nthreads = shared.threads.clamp(0, b);
-    if nthreads <= 1 {
-        for (i, &id) in req.ids.iter().enumerate() {
-            let s = shared.ctx.fetch(id)?;
-            ensure!(
-                s.bytes.len() == rb,
-                "sample {id}: {} bytes, expected {rb}",
-                s.bytes.len()
-            );
-            x_u8[i * rb..(i + 1) * rb].copy_from_slice(&s.bytes);
-            labels[i] = s.label as i32;
-        }
+    let samples = if nthreads <= 1 {
+        shared.ctx.fetch_batch(&req.ids)?
     } else {
-        let ids = &req.ids;
         let ctx = &shared.ctx;
-        let chunk = b.div_ceil(nthreads);
-        let x_chunks: Vec<&mut [u8]> = x_u8.chunks_mut(chunk * rb).collect();
-        let l_chunks: Vec<&mut [i32]> = labels.chunks_mut(chunk).collect();
-        let results: Vec<Result<()>> = std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for (t, (xc, lc)) in
-                x_chunks.into_iter().zip(l_chunks).enumerate()
-            {
-                let lo = t * chunk;
-                handles.push(scope.spawn(move || -> Result<()> {
-                    for (i, lslot) in lc.iter_mut().enumerate() {
-                        let id = ids[lo + i];
-                        let s = ctx.fetch(id)?;
-                        ensure!(
-                            s.bytes.len() == rb,
-                            "sample {id}: {} bytes, expected {rb}",
-                            s.bytes.len()
-                        );
-                        xc[i * rb..(i + 1) * rb].copy_from_slice(&s.bytes);
-                        *lslot = s.label as i32;
-                    }
-                    Ok(())
-                }));
+        let mut batch = ctx.fetch_batch_begin(&req.ids)?;
+        let pending = std::mem::take(&mut batch.pending);
+        if !pending.is_empty() {
+            let per = pending.len().div_ceil(nthreads);
+            let results: Vec<Result<Vec<Arc<Sample>>>> =
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = pending
+                        .chunks(per)
+                        .map(|chunk| {
+                            scope.spawn(move || ctx.fetch_storage(chunk))
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                });
+            for (chunk, res) in pending.chunks(per).zip(results) {
+                batch.fill(chunk, res?);
             }
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        for r in results {
-            r?;
         }
-    }
+        batch.finish()
+    };
+    assemble(&req.ids, &samples, rb, &mut x_u8, &mut labels)?;
 
     let flip: Vec<f32> = req
         .ids
@@ -293,7 +303,6 @@ mod tests {
     use crate::metrics::LoadCounters;
     use crate::net::{Fabric, FabricConfig};
     use crate::storage::{generate, StorageSystem, SyntheticSpec};
-    use std::sync::RwLock;
 
     fn make_ctx(n: u64, tag: &str) -> Arc<FetchContext> {
         let dir = std::env::temp_dir()
@@ -308,7 +317,7 @@ mod tests {
                 u64::MAX,
                 Policy::InsertOnly,
             ))],
-            directory: Arc::new(RwLock::new(CacheDirectory::new(n))),
+            directory: Arc::new(CacheDirectory::new(n)),
             fabric: Arc::new(Fabric::new(FabricConfig {
                 real_time: false,
                 ..Default::default()
@@ -419,7 +428,7 @@ mod tests {
                     u64::MAX,
                     Policy::InsertOnly,
                 ))],
-                directory: Arc::new(RwLock::new(CacheDirectory::new(64))),
+                directory: Arc::new(CacheDirectory::new(64)),
                 fabric: Arc::new(Fabric::new(FabricConfig {
                     real_time: false,
                     ..Default::default()

@@ -26,6 +26,16 @@ pub struct LoadCounters {
     pub decode_ns: AtomicU64,
     pub preprocess_ns: AtomicU64,
     pub fetch_ns: AtomicU64,
+    /// `fetch_batch` invocations (the coalesced path).
+    pub batch_fetches: AtomicU64,
+    /// Fabric messages sent by `fetch_batch` — one per distinct remote
+    /// owner per batch, so `remote_hits / owner_messages` is the remote
+    /// coalescing factor.
+    pub owner_messages: AtomicU64,
+    /// Contiguous storage runs read by `fetch_batch` — one token-bucket
+    /// acquire + one range read each, so `storage_loads / storage_runs`
+    /// is the storage coalescing factor.
+    pub storage_runs: AtomicU64,
 }
 
 impl LoadCounters {
@@ -34,17 +44,25 @@ impl LoadCounters {
     }
 
     pub fn record(&self, source: Source, bytes: u64) {
+        self.record_n(source, bytes, 1);
+    }
+
+    /// Record `n` samples of `bytes` each served from `source` — used for
+    /// duplicated ids within a batch, which are fetched once (one read /
+    /// one transfer payload) but served into `n` batch positions, so
+    /// `total_samples()` always equals the sum of batch sizes.
+    pub fn record_n(&self, source: Source, bytes: u64, n: u64) {
         match source {
             Source::LocalCache => {
-                self.local_hits.fetch_add(1, Ordering::Relaxed);
+                self.local_hits.fetch_add(n, Ordering::Relaxed);
             }
             Source::RemoteCache => {
-                self.remote_hits.fetch_add(1, Ordering::Relaxed);
-                self.remote_bytes.fetch_add(bytes, Ordering::Relaxed);
+                self.remote_hits.fetch_add(n, Ordering::Relaxed);
+                self.remote_bytes.fetch_add(bytes * n, Ordering::Relaxed);
             }
             Source::Storage => {
-                self.storage_loads.fetch_add(1, Ordering::Relaxed);
-                self.storage_bytes.fetch_add(bytes, Ordering::Relaxed);
+                self.storage_loads.fetch_add(n, Ordering::Relaxed);
+                self.storage_bytes.fetch_add(bytes * n, Ordering::Relaxed);
             }
         }
     }
@@ -60,6 +78,9 @@ impl LoadCounters {
             preprocess_s: self.preprocess_ns.load(Ordering::Relaxed) as f64
                 / 1e9,
             fetch_s: self.fetch_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            batch_fetches: self.batch_fetches.load(Ordering::Relaxed),
+            owner_messages: self.owner_messages.load(Ordering::Relaxed),
+            storage_runs: self.storage_runs.load(Ordering::Relaxed),
         }
     }
 }
@@ -75,6 +96,9 @@ pub struct LoadSnapshot {
     pub decode_s: f64,
     pub preprocess_s: f64,
     pub fetch_s: f64,
+    pub batch_fetches: u64,
+    pub owner_messages: u64,
+    pub storage_runs: u64,
 }
 
 impl LoadSnapshot {
@@ -92,6 +116,9 @@ impl LoadSnapshot {
             decode_s: self.decode_s - earlier.decode_s,
             preprocess_s: self.preprocess_s - earlier.preprocess_s,
             fetch_s: self.fetch_s - earlier.fetch_s,
+            batch_fetches: self.batch_fetches - earlier.batch_fetches,
+            owner_messages: self.owner_messages - earlier.owner_messages,
+            storage_runs: self.storage_runs - earlier.storage_runs,
         }
     }
 }
@@ -233,6 +260,38 @@ mod tests {
         assert_eq!(d.storage_bytes, 70);
         assert_eq!(d.storage_loads, 1);
         assert_eq!(d.local_hits, 1);
+    }
+
+    #[test]
+    fn record_n_multiplies_counts_and_bytes() {
+        let c = LoadCounters::new();
+        c.record_n(Source::RemoteCache, 100, 3);
+        c.record_n(Source::Storage, 50, 2);
+        c.record_n(Source::LocalCache, 0, 4);
+        let s = c.snapshot();
+        assert_eq!(s.remote_hits, 3);
+        assert_eq!(s.remote_bytes, 300);
+        assert_eq!(s.storage_loads, 2);
+        assert_eq!(s.storage_bytes, 100);
+        assert_eq!(s.local_hits, 4);
+        assert_eq!(s.total_samples(), 9);
+    }
+
+    #[test]
+    fn coalescing_counters_snapshot_and_delta() {
+        let c = LoadCounters::new();
+        c.batch_fetches.fetch_add(2, Ordering::Relaxed);
+        c.owner_messages.fetch_add(3, Ordering::Relaxed);
+        let a = c.snapshot();
+        assert_eq!(a.batch_fetches, 2);
+        assert_eq!(a.owner_messages, 3);
+        assert_eq!(a.storage_runs, 0);
+        c.storage_runs.fetch_add(5, Ordering::Relaxed);
+        c.batch_fetches.fetch_add(1, Ordering::Relaxed);
+        let d = c.snapshot().delta(&a);
+        assert_eq!(d.batch_fetches, 1);
+        assert_eq!(d.owner_messages, 0);
+        assert_eq!(d.storage_runs, 5);
     }
 
     #[test]

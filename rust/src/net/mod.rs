@@ -73,6 +73,11 @@ impl Fabric {
     /// Transfer `bytes` from one learner to another: sleeps the modeled
     /// cost (when `real_time`) and records traffic. Returns the charged
     /// duration.
+    ///
+    /// One call = one message = one latency charge, which is what makes
+    /// owner-coalescing pay: `FetchContext::fetch_batch` batches all of a
+    /// remote owner's samples into a single `transfer`, so a batch costs
+    /// O(distinct owners) latencies instead of O(batch) (DESIGN.md §4).
     pub fn transfer(&self, _from: usize, _to: usize, bytes: u64) -> Duration {
         let cost = self.p2p_cost(bytes);
         if self.cfg.real_time {

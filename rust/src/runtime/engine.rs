@@ -15,6 +15,10 @@
 //! concurrently.
 
 use super::manifest::{DType, Manifest, ProgramSpec};
+// Without the `pjrt` feature the `xla` paths below resolve to the in-tree
+// stub, whose entry points fail at runtime with a clear message.
+#[cfg(not(feature = "pjrt"))]
+use super::pjrt_stub as xla;
 use super::tensor::{Data, HostTensor};
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashMap;

@@ -4,6 +4,8 @@
 
 pub mod engine;
 pub mod manifest;
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_stub;
 pub mod tensor;
 
 pub use engine::{Engine, Program};

@@ -243,7 +243,7 @@ mod tests {
     }
 
     fn striped_directory(n: u32, p: usize) -> CacheDirectory {
-        let mut dir = CacheDirectory::new(n as u64);
+        let dir = CacheDirectory::new(n as u64);
         for s in 0..n {
             dir.set_owner(s, (s as usize) % p);
         }
@@ -277,7 +277,7 @@ mod tests {
     #[test]
     fn loc_partition_misses_become_storage_loads() {
         // Directory covers only even ids.
-        let mut dir = CacheDirectory::new(100);
+        let dir = CacheDirectory::new(100);
         for s in (0..100u32).step_by(2) {
             dir.set_owner(s, (s as usize / 2) % 4);
         }
@@ -300,7 +300,7 @@ mod tests {
             let n = (p as u64 * (1 + rng.next_below(50))) as u32;
             // Random directory: each sample cached on a random learner, or
             // missing with prob ~1/8.
-            let mut dir = CacheDirectory::new(n as u64);
+            let dir = CacheDirectory::new(n as u64);
             for s in 0..n {
                 if rng.next_below(8) != 0 {
                     dir.set_owner(s, rng.next_below(p as u64) as usize);

@@ -1,0 +1,302 @@
+//! Zero-copy sample payload handles.
+//!
+//! [`SampleBytes`] is the byte handle the whole fetch path hands around
+//! instead of `Vec<u8>`: an `Arc`-backed view into either a heap buffer
+//! (cache slabs, fallback reads) or a memory-mapped shard file. Cloning is
+//! an `Arc` bump; sub-slicing shares the owner. The invariant the loader
+//! relies on (DESIGN.md §2): between storage/cache and the batch tensor,
+//! sample payload bytes are copied **at most once** — a local-cache hit
+//! hands out the same `Arc`-backed slice with zero payload copies, and the
+//! single copy happens only at batch assembly into `x_u8`.
+//!
+//! The mmap binding is a minimal direct FFI to the C library (the offline
+//! image carries no `libc`/`memmap2` crates); shard files are immutable
+//! after `ShardWriter::finish`, which is what makes the mapping safe to
+//! expose as `&[u8]`.
+
+use std::fmt;
+use std::ops::Deref;
+use std::sync::Arc;
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod ffi {
+    use std::ffi::c_void;
+    use std::os::raw::c_int;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            length: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, length: usize) -> c_int;
+    }
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+}
+
+/// A read-only, whole-file, private memory mapping.
+pub struct Mmap {
+    ptr: *mut std::ffi::c_void,
+    len: usize,
+}
+
+// SAFETY: the mapping is PROT_READ/MAP_PRIVATE over a file that is never
+// written after creation (shard files are immutable once finished); the
+// raw pointer is only ever read through `as_slice`.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map an entire file read-only. Errors surface as `io::Error` so the
+    /// caller can fall back to `pread`-based access. Gated to 64-bit unix:
+    /// the hand-rolled FFI declares `off_t` as `i64`, which only matches
+    /// the C ABI there (32-bit targets just take the `pread` path).
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    pub fn map(file: &std::fs::File) -> std::io::Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        let len = file.metadata()?.len() as usize;
+        if len == 0 {
+            return Ok(Mmap { ptr: std::ptr::null_mut(), len: 0 });
+        }
+        let ptr = unsafe {
+            ffi::mmap(
+                std::ptr::null_mut(),
+                len,
+                ffi::PROT_READ,
+                ffi::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(Mmap { ptr, len })
+    }
+
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    pub fn map(_file: &std::fs::File) -> std::io::Result<Mmap> {
+        Err(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "mmap is only supported on 64-bit unix targets",
+        ))
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        // SAFETY: ptr/len describe a live PROT_READ mapping owned by self.
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if self.len != 0 {
+            // SAFETY: exactly one munmap for the mapping created in `map`.
+            unsafe {
+                ffi::munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+#[derive(Clone)]
+enum Owner {
+    // Arc<Vec<u8>> (not Arc<[u8]>): Arc::from(Vec) would memcpy the
+    // payload into a fresh allocation, re-introducing the second copy
+    // this type exists to eliminate. Arc::new(Vec) just moves the
+    // pointer.
+    Heap(Arc<Vec<u8>>),
+    Map(Arc<Mmap>),
+}
+
+/// An `Arc`-backed, cheaply clonable byte slice over a heap buffer or a
+/// mapped shard region.
+#[derive(Clone)]
+pub struct SampleBytes {
+    owner: Owner,
+    off: usize,
+    len: usize,
+}
+
+impl SampleBytes {
+    /// Take ownership of a heap buffer without copying it (the buffer is
+    /// moved behind the `Arc`, then shared).
+    pub fn from_vec(v: Vec<u8>) -> SampleBytes {
+        let len = v.len();
+        SampleBytes { owner: Owner::Heap(Arc::new(v)), off: 0, len }
+    }
+
+    /// A view into a mapped shard file (zero payload copies).
+    pub(crate) fn from_map(map: Arc<Mmap>, off: usize, len: usize) -> SampleBytes {
+        debug_assert!(off + len <= map.as_slice().len());
+        SampleBytes { owner: Owner::Map(map), off, len }
+    }
+
+    /// Sub-slice sharing the same owner (no copy).
+    pub fn slice(&self, off: usize, len: usize) -> SampleBytes {
+        assert!(off + len <= self.len, "slice out of bounds");
+        SampleBytes {
+            owner: self.owner.clone(),
+            off: self.off + off,
+            len,
+        }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        match &self.owner {
+            Owner::Heap(b) => &b[self.off..self.off + self.len],
+            Owner::Map(m) => &m.as_slice()[self.off..self.off + self.len],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// True when the payload aliases a mapped shard file, i.e. no copy of
+    /// these bytes exists anywhere on the heap.
+    pub fn is_zero_copy(&self) -> bool {
+        matches!(self.owner, Owner::Map(_))
+    }
+
+    /// True when this view pins a heap allocation larger than itself
+    /// (a shared run buffer from the `pread` fallback). Long-lived holders
+    /// (caches) should [`compacted`] such views so evicting neighbours
+    /// actually frees memory; mapped views never count (the file mapping
+    /// exists regardless and is pageable).
+    ///
+    /// [`compacted`]: SampleBytes::compacted
+    pub fn pins_excess_heap(&self) -> bool {
+        match &self.owner {
+            Owner::Heap(b) => self.len < b.len(),
+            Owner::Map(_) => false,
+        }
+    }
+
+    /// An exact-size private copy of this view (for long-lived retention of
+    /// a view that [`pins_excess_heap`]).
+    ///
+    /// [`pins_excess_heap`]: SampleBytes::pins_excess_heap
+    pub fn compacted(&self) -> SampleBytes {
+        SampleBytes::from_vec(self.as_slice().to_vec())
+    }
+}
+
+impl Deref for SampleBytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for SampleBytes {
+    fn from(v: Vec<u8>) -> SampleBytes {
+        SampleBytes::from_vec(v)
+    }
+}
+
+impl PartialEq for SampleBytes {
+    fn eq(&self, other: &SampleBytes) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for SampleBytes {}
+
+impl PartialEq<Vec<u8>> for SampleBytes {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<[u8]> for SampleBytes {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl fmt::Debug for SampleBytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "SampleBytes({} bytes, {})",
+            self.len,
+            if self.is_zero_copy() { "mapped" } else { "heap" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn heap_roundtrip_and_slicing() {
+        let b = SampleBytes::from_vec(vec![1, 2, 3, 4, 5]);
+        assert_eq!(b.len(), 5);
+        assert!(!b.is_zero_copy());
+        assert_eq!(&b[..], &[1, 2, 3, 4, 5]);
+        let s = b.slice(1, 3);
+        assert_eq!(&s[..], &[2, 3, 4]);
+        // Clones share the owner; content equality holds.
+        let c = s.clone();
+        assert_eq!(c, s);
+        assert_eq!(b, vec![1u8, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn slice_bounds_checked() {
+        SampleBytes::from_vec(vec![0; 4]).slice(2, 3);
+    }
+
+    #[test]
+    fn mmap_roundtrip() {
+        let path = std::env::temp_dir()
+            .join(format!("dlio-mmap-{}.bin", std::process::id()));
+        let payload: Vec<u8> = (0..=255u8).collect();
+        {
+            let mut f = std::fs::File::create(&path).unwrap();
+            f.write_all(&payload).unwrap();
+            f.sync_all().unwrap();
+        }
+        let f = std::fs::File::open(&path).unwrap();
+        let map = Arc::new(Mmap::map(&f).unwrap());
+        assert_eq!(map.as_slice(), &payload[..]);
+        let view = SampleBytes::from_map(Arc::clone(&map), 10, 20);
+        assert!(view.is_zero_copy());
+        assert_eq!(&view[..], &payload[10..30]);
+        // Views outlive the file handle and other views.
+        drop(f);
+        let sub = view.slice(5, 5);
+        drop(view);
+        assert_eq!(&sub[..], &payload[15..20]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_file_maps_to_empty_slice() {
+        let path = std::env::temp_dir()
+            .join(format!("dlio-mmap-empty-{}.bin", std::process::id()));
+        std::fs::File::create(&path).unwrap();
+        let f = std::fs::File::open(&path).unwrap();
+        let map = Mmap::map(&f).unwrap();
+        assert!(map.as_slice().is_empty());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -24,11 +24,13 @@
 //! Readers keep the index in memory and serve concurrent `read_at` calls
 //! from any thread (`&self`), which is what the multi-worker loader needs.
 
-use anyhow::{bail, Context, Result};
+use super::bytes::{Mmap, SampleBytes};
+use anyhow::{bail, ensure, Context, Result};
 use std::fs::File;
 use std::io::{BufWriter, Seek, SeekFrom, Write};
 use std::os::unix::fs::FileExt;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 pub const MAGIC: &[u8; 8] = b"DLSHARD1";
 pub const VERSION: u32 = 1;
@@ -131,15 +133,37 @@ pub struct ShardInfo {
 }
 
 /// Random-access, thread-safe shard reader.
+///
+/// Two read modes: classic `pread` ([`open`]) and memory-mapped
+/// ([`open_mmap`]). In mmap mode [`read_bytes`]/[`read_run`] return
+/// [`SampleBytes`] views straight into the mapping — zero payload copies
+/// on the fetch hot path.
+///
+/// [`open`]: ShardReader::open
+/// [`open_mmap`]: ShardReader::open_mmap
+/// [`read_bytes`]: ShardReader::read_bytes
+/// [`read_run`]: ShardReader::read_run
 pub struct ShardReader {
     file: File,
     index: Vec<IndexEntry>,
     fixed_size: Option<u64>,
     path: PathBuf,
+    map: Option<Arc<Mmap>>,
 }
 
 impl ShardReader {
+    /// Open in `pread` mode.
     pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        Self::open_with(path, false)
+    }
+
+    /// Open in mmap mode; falls back to `pread` if the mapping fails
+    /// (e.g. an exotic filesystem), so callers never need to care.
+    pub fn open_mmap(path: impl AsRef<Path>) -> Result<Self> {
+        Self::open_with(path, true)
+    }
+
+    fn open_with(path: impl AsRef<Path>, want_mmap: bool) -> Result<Self> {
         let path = path.as_ref().to_path_buf();
         let file = File::open(&path)
             .with_context(|| format!("open shard {}", path.display()))?;
@@ -168,11 +192,38 @@ impl ShardReader {
                 label: u16::from_le_bytes(chunk[12..14].try_into().unwrap()),
             });
         }
+        let map = if want_mmap {
+            match Mmap::map(&file) {
+                Ok(m) => {
+                    // Bounds-check the index once so mapped views can be
+                    // handed out without per-read validation.
+                    let file_len = m.as_slice().len() as u64;
+                    for e in &index {
+                        // checked_add: a corrupt offset near u64::MAX must
+                        // not wrap past the bound in release builds.
+                        ensure!(
+                            e.offset >= HEADER_LEN
+                                && e
+                                    .offset
+                                    .checked_add(e.len as u64)
+                                    .is_some_and(|end| end <= file_len),
+                            "{}: index entry out of bounds",
+                            path.display()
+                        );
+                    }
+                    Some(Arc::new(m))
+                }
+                Err(_) => None, // fall back to pread mode
+            }
+        } else {
+            None
+        };
         Ok(ShardReader {
             file,
             index,
             fixed_size: (flags & FLAG_FIXED != 0).then_some(record_size),
             path,
+            map,
         })
     }
 
@@ -220,6 +271,66 @@ impl ShardReader {
         );
         self.file.read_exact_at(buf, e.offset)?;
         Ok(())
+    }
+
+    /// Whether reads are served from a memory mapping (zero-copy).
+    pub fn is_mmapped(&self) -> bool {
+        self.map.is_some()
+    }
+
+    /// Read record `i` as an `Arc`-backed handle: a view into the mapping
+    /// (zero-copy) in mmap mode, a one-time heap read otherwise.
+    pub fn read_bytes(&self, i: usize) -> Result<SampleBytes> {
+        let e = self.index[i];
+        match &self.map {
+            Some(m) => Ok(SampleBytes::from_map(
+                Arc::clone(m),
+                e.offset as usize,
+                e.len as usize,
+            )),
+            None => Ok(SampleBytes::from_vec(self.read(i)?)),
+        }
+    }
+
+    /// Total payload bytes spanned by the contiguous record run `[lo, hi)`
+    /// (records are packed back-to-back, so this equals the sum of their
+    /// lengths).
+    pub fn run_bytes(&self, lo: usize, hi: usize) -> u64 {
+        assert!(lo < hi && hi <= self.index.len(), "bad run {lo}..{hi}");
+        let last = self.index[hi - 1];
+        last.offset + last.len as u64 - self.index[lo].offset
+    }
+
+    /// Read the contiguous record run `[lo, hi)` with a single range read
+    /// (or zero reads in mmap mode) and return one handle per record, all
+    /// sharing a single owner allocation.
+    pub fn read_run(&self, lo: usize, hi: usize) -> Result<Vec<SampleBytes>> {
+        ensure!(lo < hi && hi <= self.index.len(), "bad run {lo}..{hi}");
+        match &self.map {
+            Some(m) => Ok((lo..hi)
+                .map(|i| {
+                    let e = self.index[i];
+                    SampleBytes::from_map(
+                        Arc::clone(m),
+                        e.offset as usize,
+                        e.len as usize,
+                    )
+                })
+                .collect()),
+            None => {
+                let base = self.index[lo].offset;
+                let span = self.run_bytes(lo, hi) as usize;
+                let mut buf = vec![0u8; span];
+                self.file.read_exact_at(&mut buf, base)?;
+                let owner = SampleBytes::from_vec(buf);
+                Ok((lo..hi)
+                    .map(|i| {
+                        let e = self.index[i];
+                        owner.slice((e.offset - base) as usize, e.len as usize)
+                    })
+                    .collect())
+            }
+        }
     }
 }
 
@@ -336,6 +447,53 @@ mod tests {
             }
             std::fs::remove_file(&p).unwrap();
         });
+    }
+
+    #[test]
+    fn mmap_reads_match_pread_and_are_zero_copy() {
+        let p = tmpdir().join("mmap.shard");
+        let mut w = ShardWriter::create(&p).unwrap();
+        let recs: Vec<Vec<u8>> =
+            (0..20).map(|i| vec![i as u8; 16 + i * 3]).collect();
+        for (i, rec) in recs.iter().enumerate() {
+            w.add(rec, i as u16).unwrap();
+        }
+        w.finish().unwrap();
+        let pread = ShardReader::open(&p).unwrap();
+        let mapped = ShardReader::open_mmap(&p).unwrap();
+        assert!(!pread.is_mmapped());
+        assert!(mapped.is_mmapped());
+        for i in 0..recs.len() {
+            let a = pread.read_bytes(i).unwrap();
+            let b = mapped.read_bytes(i).unwrap();
+            assert!(!a.is_zero_copy());
+            assert!(b.is_zero_copy());
+            assert_eq!(&a[..], &recs[i][..]);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn run_reads_agree_with_single_reads() {
+        let p = tmpdir().join("run.shard");
+        let mut w = ShardWriter::create(&p).unwrap();
+        for i in 0..32u8 {
+            w.add(&vec![i; 10 + i as usize], i as u16).unwrap();
+        }
+        w.finish().unwrap();
+        for reader in
+            [ShardReader::open(&p).unwrap(), ShardReader::open_mmap(&p).unwrap()]
+        {
+            let run = reader.read_run(5, 13).unwrap();
+            assert_eq!(run.len(), 8);
+            for (k, rec) in run.iter().enumerate() {
+                assert_eq!(&rec[..], &reader.read(5 + k).unwrap()[..]);
+            }
+            let expect: u64 = (5..13).map(|i| 10 + i as u64).sum();
+            assert_eq!(reader.run_bytes(5, 13), expect);
+            assert!(reader.read_run(13, 13).is_err());
+            assert!(reader.read_run(30, 40).is_err());
+        }
     }
 
     #[test]

@@ -2,12 +2,14 @@
 //! dataset catalogs, bandwidth throttling, and the shared storage system
 //! ("GPFS-sim") that every learner reads through.
 
+pub mod bytes;
 pub mod catalog;
 pub mod format;
 pub mod generator;
 pub mod system;
 pub mod throttle;
 
+pub use bytes::SampleBytes;
 pub use catalog::Catalog;
 pub use format::{ShardReader, ShardWriter};
 pub use generator::{generate, DatasetMeta, SyntheticSpec};

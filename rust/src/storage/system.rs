@@ -8,19 +8,23 @@
 //!
 //! [`read_sample`]: StorageSystem::read_sample
 
+use super::bytes::SampleBytes;
 use super::format::ShardReader;
 use super::generator::DatasetMeta;
 use super::throttle::TokenBucket;
 use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-/// A read sample: raw record bytes plus its label.
+/// A read sample: an `Arc`-backed payload handle plus its label. Cloning
+/// is cheap (no payload copy); a cache hit hands the same handle to every
+/// consumer.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Sample {
     pub id: u32,
-    pub bytes: Vec<u8>,
+    pub bytes: SampleBytes,
     pub label: u16,
 }
 
@@ -41,6 +45,8 @@ pub struct StorageSystem {
 
 impl StorageSystem {
     /// Open a materialized dataset directory (see [`generator::generate`]).
+    /// Shards open in mmap mode (with transparent `pread` fallback), so
+    /// `read_sample`/`read_batch` hand out zero-copy payload views.
     ///
     /// [`generator::generate`]: super::generator::generate
     pub fn open(dir: &Path, throttle: Option<Arc<TokenBucket>>) -> Result<Self> {
@@ -48,7 +54,7 @@ impl StorageSystem {
         let mut shards = Vec::with_capacity(meta.shards.len());
         let mut total = 0u64;
         for p in &meta.shards {
-            let r = ShardReader::open(p)
+            let r = ShardReader::open_mmap(p)
                 .with_context(|| format!("open shard {}", p.display()))?;
             total += r.len() as u64;
             shards.push(r);
@@ -106,10 +112,65 @@ impl StorageSystem {
         if let Some(tb) = &self.throttle {
             tb.acquire(len as u64);
         }
-        let bytes = self.shards[s].read(i)?;
+        let bytes = self.shards[s].read_bytes(i)?;
         self.bytes_read.fetch_add(len as u64, Ordering::Relaxed);
         self.samples_read.fetch_add(1, Ordering::Relaxed);
         Ok(Sample { id, bytes, label: self.shards[s].label(i) })
+    }
+
+    /// Read a batch of samples, coalescing contiguous per-shard id runs:
+    /// one [`TokenBucket::acquire`] and one contiguous range read per run
+    /// (zero reads in mmap mode). Duplicated ids are read once. Returns
+    /// the samples in input order plus the number of runs performed.
+    pub fn read_batch(&self, ids: &[u32]) -> Result<(Vec<Sample>, usize)> {
+        // Validate and locate everything before touching the throttle.
+        let mut located = Vec::with_capacity(ids.len());
+        for &id in ids {
+            located.push(self.locate(id)?);
+        }
+        // shard -> sorted unique record indices.
+        let mut by_shard: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for &(s, i) in &located {
+            by_shard.entry(s).or_default().push(i);
+        }
+        let mut fetched: BTreeMap<(usize, usize), SampleBytes> = BTreeMap::new();
+        let mut runs = 0usize;
+        for (s, mut idxs) in by_shard {
+            idxs.sort_unstable();
+            idxs.dedup();
+            let shard = &self.shards[s];
+            let mut k = 0;
+            while k < idxs.len() {
+                let mut j = k + 1;
+                while j < idxs.len() && idxs[j] == idxs[j - 1] + 1 {
+                    j += 1;
+                }
+                let (lo, hi) = (idxs[k], idxs[j - 1] + 1);
+                let span = shard.run_bytes(lo, hi);
+                if let Some(tb) = &self.throttle {
+                    tb.acquire(span);
+                }
+                let recs = shard.read_run(lo, hi)?;
+                self.bytes_read.fetch_add(span, Ordering::Relaxed);
+                self.samples_read
+                    .fetch_add((hi - lo) as u64, Ordering::Relaxed);
+                for (off, rec) in recs.into_iter().enumerate() {
+                    fetched.insert((s, lo + off), rec);
+                }
+                runs += 1;
+                k = j;
+            }
+        }
+        let out = ids
+            .iter()
+            .zip(&located)
+            .map(|(&id, &(s, i))| Sample {
+                id,
+                bytes: fetched[&(s, i)].clone(),
+                label: self.shards[s].label(i),
+            })
+            .collect();
+        Ok((out, runs))
     }
 
     /// Total bytes served (metrics).
@@ -173,8 +234,9 @@ mod tests {
     #[test]
     fn concurrent_reads_are_consistent() {
         let sys = Arc::new(open_test_system("conc", 128, None));
-        let expect: Vec<Vec<u8>> =
-            (0..128u32).map(|i| sys.read_sample(i).unwrap().bytes).collect();
+        let expect: Vec<Vec<u8>> = (0..128u32)
+            .map(|i| sys.read_sample(i).unwrap().bytes.to_vec())
+            .collect();
         sys.reset_counters();
         let mut handles = Vec::new();
         for t in 0..4 {
@@ -191,6 +253,52 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(sys.samples_read(), 128);
+    }
+
+    #[test]
+    fn samples_are_zero_copy_views_of_the_mapped_shards() {
+        let sys = open_test_system("zc", 32, None);
+        let s = sys.read_sample(3).unwrap();
+        assert!(s.bytes.is_zero_copy(), "mmap mode must hand out views");
+    }
+
+    #[test]
+    fn read_batch_matches_read_sample_and_coalesces_runs() {
+        let sys = open_test_system("batch", 200, None);
+        // Unsorted ids spanning both shards (64 per shard), with a
+        // duplicate and several contiguous stretches.
+        let ids: Vec<u32> =
+            vec![70, 5, 6, 7, 8, 150, 151, 9, 5, 199, 0, 64, 65];
+        let expect: Vec<Sample> =
+            ids.iter().map(|&i| sys.read_sample(i).unwrap()).collect();
+        sys.reset_counters();
+        let (got, runs) = sys.read_batch(&ids).unwrap();
+        assert_eq!(got.len(), ids.len());
+        for (g, e) in got.iter().zip(&expect) {
+            assert_eq!(g, e);
+        }
+        // Unique sorted runs: [0] [5..=9] [64,65] [70] [150,151] [199].
+        assert_eq!(runs, 6);
+        // Duplicate id 5 is read once: 12 unique records.
+        assert_eq!(sys.samples_read(), 12);
+        assert_eq!(sys.bytes_read(), 12 * 3072);
+        assert!(sys.read_batch(&[0, 9999]).is_err());
+    }
+
+    #[test]
+    fn read_batch_charges_the_throttle_once_per_run() {
+        use std::time::Instant;
+        // 64 KiB/s with a 4 KiB burst; a 16-record contiguous run is
+        // 48 KiB => one acquire, ≥ ~0.6s of debt.
+        let tb = Arc::new(TokenBucket::new(64.0 * 1024.0, 4096.0));
+        let sys = open_test_system("batchthr", 64, Some(tb.clone()));
+        let ids: Vec<u32> = (0..16).collect();
+        let t0 = Instant::now();
+        let (got, runs) = sys.read_batch(&ids).unwrap();
+        assert_eq!(got.len(), 16);
+        assert_eq!(runs, 1);
+        assert!(t0.elapsed().as_secs_f64() > 0.3, "throttle not charged");
+        assert_eq!(tb.total_bytes(), 16 * 3072);
     }
 
     #[test]

@@ -10,7 +10,7 @@ use dlio::metrics::LoadCounters;
 use dlio::net::{Fabric, FabricConfig};
 use dlio::storage::{generate, StorageSystem, SyntheticSpec, TokenBucket};
 use std::path::PathBuf;
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 fn dataset(tag: &str, n: u64) -> PathBuf {
     let dir = std::env::temp_dir()
@@ -19,6 +19,26 @@ fn dataset(tag: &str, n: u64) -> PathBuf {
     generate(&dir, &SyntheticSpec { n_samples: n, ..Default::default() })
         .unwrap();
     dir
+}
+
+/// A p-learner fetch context over a fresh dataset (learner 0's view).
+fn make_ctx(tag: &str, n: u64, p: usize, cache_on_load: bool) -> FetchContext {
+    let dir = dataset(tag, n);
+    FetchContext {
+        learner: 0,
+        storage: Arc::new(StorageSystem::open(&dir, None).unwrap()),
+        caches: (0..p)
+            .map(|_| Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly)))
+            .collect(),
+        directory: Arc::new(CacheDirectory::new(n)),
+        fabric: Arc::new(Fabric::new(FabricConfig {
+            real_time: false,
+            ..Default::default()
+        })),
+        cache_on_load,
+        decode_s_per_kib: 0.0,
+        counters: Arc::new(LoadCounters::new()),
+    }
 }
 
 #[test]
@@ -71,7 +91,7 @@ fn prefetch_bounds_outstanding_requests() {
         learner: 0,
         storage,
         caches: vec![Arc::new(SampleCache::new(0, Policy::InsertOnly))],
-        directory: Arc::new(RwLock::new(CacheDirectory::new(512))),
+        directory: Arc::new(CacheDirectory::new(512)),
         fabric: Arc::new(Fabric::new(FabricConfig {
             real_time: false,
             ..Default::default()
@@ -125,7 +145,7 @@ fn throttled_storage_bounds_end_to_end_rate() {
         learner: 0,
         storage,
         caches: vec![Arc::new(SampleCache::new(0, Policy::InsertOnly))],
-        directory: Arc::new(RwLock::new(CacheDirectory::new(256))),
+        directory: Arc::new(CacheDirectory::new(256)),
         fabric: Arc::new(Fabric::new(FabricConfig {
             real_time: false,
             ..Default::default()
@@ -174,7 +194,7 @@ fn loader_counts_every_sample_exactly_once() {
         learner: 0,
         storage: Arc::clone(&storage),
         caches: vec![Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly))],
-        directory: Arc::new(RwLock::new(CacheDirectory::new(512))),
+        directory: Arc::new(CacheDirectory::new(512)),
         fabric: Arc::new(Fabric::new(FabricConfig {
             real_time: false,
             ..Default::default()
@@ -225,4 +245,214 @@ fn loader_counts_every_sample_exactly_once() {
     assert_eq!(snap.local_hits, 512);
     assert_eq!(storage.samples_read(), 512);
     loader.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Zero-copy + coalescing acceptance tests (DESIGN.md §2/§4).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fetch_batch_message_count_is_distinct_owner_count() {
+    // Remote hits from k distinct owners must bump p2p_messages by exactly
+    // k — not by the number of remote samples.
+    let ctx = make_ctx("owners", 256, 5, false);
+    // 32 remote samples spread over owners 1, 2 and 4 (k = 3).
+    let owners = [1usize, 2, 4];
+    let ids: Vec<u32> = (0..32).collect();
+    for &id in &ids {
+        let owner = owners[id as usize % owners.len()];
+        let s = Arc::new(ctx.storage.read_sample(id).unwrap());
+        ctx.caches[owner].insert(s);
+        ctx.directory.set_owner(id, owner);
+    }
+    ctx.storage.reset_counters();
+
+    let before = ctx.fabric.p2p_messages();
+    let got = ctx.fetch_batch(&ids).unwrap();
+    assert_eq!(ctx.fabric.p2p_messages() - before, owners.len() as u64);
+    assert_eq!(ctx.counters.snapshot().remote_hits, 32);
+    assert_eq!(ctx.storage.samples_read(), 0, "all served from caches");
+    // Payloads are correct and byte volume is unchanged by coalescing.
+    for (k, s) in got.iter().enumerate() {
+        assert_eq!(s.id, ids[k]);
+        assert_eq!(s.bytes, ctx.storage.read_sample(ids[k]).unwrap().bytes);
+    }
+    assert_eq!(ctx.fabric.p2p_bytes(), 32 * 3072);
+}
+
+#[test]
+fn fetch_batch_coalesces_contiguous_storage_runs() {
+    let ctx = make_ctx("runs", 512, 1, false);
+    // One contiguous run of 64 ids: one token acquire, one range read.
+    let ids: Vec<u32> = (100..164).collect();
+    ctx.fetch_batch(&ids).unwrap();
+    let snap = ctx.counters.snapshot();
+    assert_eq!(snap.storage_loads, 64);
+    assert_eq!(snap.storage_runs, 1, "contiguous ids must be one run");
+    // A strided batch degrades gracefully to one run per sample.
+    let strided: Vec<u32> = (0..32).map(|i| i * 3).collect();
+    ctx.fetch_batch(&strided).unwrap();
+    let snap2 = ctx.counters.snapshot();
+    assert_eq!(snap2.storage_runs, 1 + 32);
+}
+
+#[test]
+fn fetch_fallback_on_evicted_owner_works_under_loader() {
+    // Directory entries pointing at an owner whose (Fifo) cache dropped the
+    // samples must fall back to storage and repair — through the full
+    // multi-threaded loader, not just the unit fetch path.
+    let dir = dataset("evict", 256);
+    let storage = Arc::new(StorageSystem::open(&dir, None).unwrap());
+    let caches: Vec<Arc<SampleCache>> = vec![
+        Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly)),
+        // Tiny Fifo cache: holds exactly 2 samples.
+        Arc::new(SampleCache::new(2 * 3072, Policy::Fifo)),
+    ];
+    let directory = Arc::new(CacheDirectory::new(256));
+    // Register 8 samples to learner 1, then overflow its cache so only the
+    // 2 newest survive — 6 directory entries go stale.
+    for id in 0..8u32 {
+        let s = Arc::new(storage.read_sample(id).unwrap());
+        caches[1].insert(s);
+        directory.set_owner(id, 1);
+    }
+    storage.reset_counters();
+    let counters = Arc::new(LoadCounters::new());
+    let ctx = Arc::new(FetchContext {
+        learner: 0,
+        storage: Arc::clone(&storage),
+        caches,
+        directory: Arc::clone(&directory),
+        fabric: Arc::new(Fabric::new(FabricConfig {
+            real_time: false,
+            ..Default::default()
+        })),
+        cache_on_load: false,
+        decode_s_per_kib: 0.0,
+        counters: Arc::clone(&counters),
+    });
+    let loader = Loader::spawn(
+        LoaderConfig { workers: 2, threads_per_worker: 2, prefetch_batches: 2 },
+        ctx,
+        3072,
+        None,
+        0,
+        0.0,
+    );
+    loader
+        .submit(BatchRequest { epoch: 0, step: 0, ids: (0..8).collect() })
+        .unwrap();
+    let batch = loader.next(0).unwrap();
+    loader.shutdown();
+    assert_eq!(batch.batch_size(), 8);
+    // Content is correct regardless of which tier served it.
+    for (i, &id) in batch.ids.iter().enumerate() {
+        let direct = storage.read_sample(id).unwrap();
+        assert_eq!(&batch.x_u8[i * 3072..(i + 1) * 3072], &direct.bytes[..]);
+    }
+    let snap = counters.snapshot();
+    assert_eq!(snap.remote_hits, 2, "surviving Fifo residents still hit");
+    assert_eq!(snap.storage_loads, 6, "evicted entries fall back to storage");
+    // Stale entries were repaired (cleared; no local population here).
+    let repaired = (0..6u32).filter(|&id| directory.owner(id).is_none()).count();
+    assert_eq!(repaired, 6, "stale directory entries must be cleared");
+    assert_eq!(directory.owner(6), Some(1));
+    assert_eq!(directory.owner(7), Some(1));
+}
+
+#[test]
+fn local_hits_are_zero_copy_arc_handouts() {
+    let ctx = make_ctx("zerocopy", 64, 1, true);
+    // Population read: the payload is a zero-copy view of the mapped shard.
+    let a = ctx.fetch(5).unwrap();
+    assert!(a.bytes.is_zero_copy(), "mmap storage must hand out views");
+    // Cache hits return the same Arc — no payload copy anywhere.
+    let b = ctx.fetch(5).unwrap();
+    assert!(Arc::ptr_eq(&a, &b));
+    let c = ctx.fetch_batch(&[5]).unwrap();
+    assert!(Arc::ptr_eq(&a, &c[0]));
+}
+
+#[test]
+fn concurrent_fetch_batches_race_safely_on_the_lock_free_directory() {
+    // 4 threads hammer overlapping fetch_batch calls while population
+    // writes race on the atomic owner table; every returned payload must
+    // be correct and the aggregate counters consistent.
+    let ctx = Arc::new(make_ctx("race", 256, 2, true));
+    let mut handles = Vec::new();
+    for t in 0..4u32 {
+        let ctx = Arc::clone(&ctx);
+        handles.push(std::thread::spawn(move || {
+            for round in 0..8u32 {
+                let ids: Vec<u32> =
+                    (0..64).map(|i| (t * 13 + round * 29 + i) % 256).collect();
+                let got = ctx.fetch_batch(&ids).unwrap();
+                for (k, s) in got.iter().enumerate() {
+                    assert_eq!(s.id, ids[k]);
+                    assert_eq!(s.bytes.len(), 3072);
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = ctx.counters.snapshot();
+    assert_eq!(snap.total_samples(), 4 * 8 * 64);
+    // Everything cacheable ends up owned by learner 0.
+    assert_eq!(ctx.directory.cached_samples(), 256);
+}
+
+#[test]
+fn threaded_loader_still_coalesces_messages_per_owner() {
+    // The acceptance criterion through the PRODUCTION loader: a batch
+    // whose remote hits come from k distinct owners costs exactly k
+    // fabric messages even with intra-batch threads (phase one of the
+    // two-phase fetch runs once for the whole batch).
+    let dir = dataset("ldcoal", 256);
+    let storage = Arc::new(StorageSystem::open(&dir, None).unwrap());
+    let caches: Vec<Arc<SampleCache>> = (0..3)
+        .map(|_| Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly)))
+        .collect();
+    let directory = Arc::new(CacheDirectory::new(256));
+    for id in 0..16u32 {
+        let owner = 1 + (id as usize % 2);
+        let s = Arc::new(storage.read_sample(id).unwrap());
+        caches[owner].insert(s);
+        directory.set_owner(id, owner);
+    }
+    let fabric = Arc::new(Fabric::new(FabricConfig {
+        real_time: false,
+        ..Default::default()
+    }));
+    let ctx = Arc::new(FetchContext {
+        learner: 0,
+        storage,
+        caches,
+        directory,
+        fabric: Arc::clone(&fabric),
+        cache_on_load: false,
+        decode_s_per_kib: 0.0,
+        counters: Arc::new(LoadCounters::new()),
+    });
+    let loader = Loader::spawn(
+        LoaderConfig { workers: 1, threads_per_worker: 4, prefetch_batches: 2 },
+        ctx,
+        3072,
+        None,
+        0,
+        0.0,
+    );
+    loader
+        .submit(BatchRequest { epoch: 0, step: 0, ids: (0..16).collect() })
+        .unwrap();
+    let batch = loader.next(0).unwrap();
+    loader.shutdown();
+    assert_eq!(batch.batch_size(), 16);
+    assert_eq!(
+        fabric.p2p_messages(),
+        2,
+        "k=2 distinct owners must cost exactly 2 messages"
+    );
+    assert_eq!(fabric.p2p_bytes(), 16 * 3072);
 }

@@ -1,0 +1,205 @@
+//! Minimal, dependency-free shim of the `anyhow` error-handling API.
+//!
+//! The offline build image ships no registry crates, so this in-tree crate
+//! provides the subset of `anyhow` the workspace actually uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait (on both `Result` and
+//! `Option`), and the `anyhow!` / `bail!` / `ensure!` macros. Error values
+//! carry a flat context chain (outermost first); `{}` prints the outermost
+//! message, `{:#}` the full chain joined with `": "`, and `{:?}` an
+//! anyhow-style report with a `Caused by:` list.
+
+use std::fmt;
+
+/// A string-chained error value. Deliberately does **not** implement
+/// `std::error::Error`, which is what makes the blanket
+/// `From<E: std::error::Error>` impl below coherent (same trick as the
+/// real `anyhow`).
+pub struct Error {
+    /// chain[0] is the outermost context, the last entry the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an additional layer of context (becomes the outermost
+    /// message).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// Iterate the context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow`-style result alias with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension trait for `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a context message to the error/none case.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Attach a lazily computed context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into().context(context)),
+        }
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into().context(f())),
+        }
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::Error::msg(format!($($arg)+)))
+    };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!($($arg)+)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn from_std_error_and_context_chain() {
+        let r: Result<()> = Err(io_err().into());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: gone");
+        assert!(format!("{e:?}").contains("Caused by:"));
+        assert_eq!(e.root_cause(), "gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+        assert_eq!(Some(3).context("never").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Err(anyhow!("fell through with {x}"))
+        }
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(5).unwrap_err().to_string(), "five is right out");
+        assert_eq!(f(1).unwrap_err().to_string(), "fell through with 1");
+    }
+
+    #[test]
+    fn question_mark_on_parse_error() {
+        fn f(s: &str) -> Result<u64> {
+            let v: u64 = s.parse()?;
+            Ok(v)
+        }
+        assert_eq!(f("42").unwrap(), 42);
+        assert!(f("nope").is_err());
+    }
+}
