@@ -8,7 +8,9 @@
 use dlio::balance;
 use dlio::bench::{black_box, Bench};
 use dlio::cache::{CacheDirectory, Policy, SampleCache};
-use dlio::loader::FetchContext;
+use dlio::loader::{
+    BatchRequest, FetchContext, Loader, LoaderConfig, LoaderRuntime,
+};
 use dlio::metrics::LoadCounters;
 use dlio::net::{Fabric, FabricConfig};
 use dlio::sampler::{loc_partition, reg_partition, GlobalShuffler};
@@ -204,6 +206,132 @@ fn main() {
     b.run("fetch/remote_batch_256_owners_3", || {
         black_box(remote_ctx.fetch_batch(&ids).unwrap());
     });
+
+    // --- Cache-hot steady-state loader -------------------------------------
+    // Second-epoch conditions through the PRODUCTION loader: every sample
+    // is a local cache hit, so the numbers isolate the execution layer —
+    // persistent decode executor, sharded cache locking, pooled batch
+    // buffers — from fetch-path effects. This is the ≥2x acceptance
+    // scenario for the spawn/lock/alloc/clone removal.
+    let steady_counters = Arc::new(LoadCounters::new());
+    let steady_cache =
+        Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly));
+    let steady_ctx = Arc::new(FetchContext {
+        learner: 0,
+        storage: Arc::clone(&storage),
+        caches: vec![Arc::clone(&steady_cache)],
+        directory: Arc::new(CacheDirectory::new(1024)),
+        fabric: Arc::clone(&fabric),
+        cache_on_load: true,
+        decode_s_per_kib: 0.0,
+        counters: Arc::clone(&steady_counters),
+    });
+    let lcfg = LoaderConfig {
+        workers: 4,
+        threads_per_worker: 4,
+        prefetch_batches: 8,
+    };
+    let runtime = LoaderRuntime::new(&lcfg);
+    let loader =
+        Loader::spawn_with(lcfg, steady_ctx, rb, None, 7, 0.0, &runtime);
+    let batches_per_epoch = 16u64;
+    let mut next_step = 0u64;
+    // Windowed submit/consume, like the coordinator's step loop — the
+    // prefetch depth bounds the batches (and pooled buffers) in flight.
+    let mut run_epoch = || {
+        let first = next_step;
+        next_step += batches_per_epoch;
+        let window = 8u64;
+        let ids_for = |step: u64| -> Vec<u32> {
+            (0..bsz as u32)
+                .map(|i| ((step % batches_per_epoch) as u32 * bsz as u32 + i) % 1024)
+                .collect()
+        };
+        for step in first..first + window {
+            loader
+                .submit(BatchRequest { epoch: 0, step, ids: ids_for(step) })
+                .unwrap();
+        }
+        for step in first..first + batches_per_epoch {
+            black_box(loader.next(step).unwrap());
+            if step + window < first + batches_per_epoch {
+                let nxt = step + window;
+                loader
+                    .submit(BatchRequest {
+                        epoch: 0,
+                        step: nxt,
+                        ids: ids_for(nxt),
+                    })
+                    .unwrap();
+            }
+        }
+    };
+    run_epoch(); // population epoch (storage -> cache)
+    run_epoch(); // warm the pool and the executor
+    let pool_before = runtime.pool_stats();
+    let exec_before = runtime.executor_stats().unwrap();
+    let snap_before = steady_counters.snapshot();
+    let warmup_epochs = b.warmup as u64;
+    let m_steady = b.run("loader/steady_epoch_w4t4_b256", &mut run_epoch);
+    let epoch_samples = (batches_per_epoch * bsz as u64) as f64;
+    b.record(
+        "loader/steady_samples_per_s",
+        epoch_samples / m_steady.mean_s,
+        "samples/s",
+    );
+    // Bench::run invokes the closure warmup + 1 (batch-size estimation) +
+    // iters times; the executor/pool deltas span all of them, so the
+    // per-batch denominators must too.
+    let measured_batches =
+        ((warmup_epochs + 1 + m_steady.iters) * batches_per_epoch) as f64;
+    let pool_delta = runtime.pool_stats().delta(&pool_before);
+    let exec_after = runtime.executor_stats().unwrap();
+    b.record(
+        "loader/buffer_reuse_rate",
+        pool_delta.reuse_rate(),
+        "fraction",
+    );
+    b.record(
+        "loader/thread_spawns_per_batch",
+        (exec_after.threads_spawned - exec_before.threads_spawned) as f64
+            / measured_batches,
+        "spawns/batch",
+    );
+    b.record(
+        "loader/executor_tasks_per_batch",
+        (exec_after.tasks_run - exec_before.tasks_run) as f64
+            / measured_batches,
+        "tasks/batch",
+    );
+    // Lifetime peak (includes the storage-bound population epoch — the
+    // worst backlog the executor queue ever saw).
+    b.record(
+        "loader/executor_queue_depth_peak",
+        exec_after.queue_depth_peak as f64,
+        "tasks",
+    );
+    b.record(
+        "loader/cache_shard_count",
+        steady_cache.shard_count() as f64,
+        "shards",
+    );
+    b.record(
+        "loader/cache_shard_contention",
+        steady_cache.contention_rate(),
+        "fraction",
+    );
+    let snap_delta = steady_counters.snapshot().delta(&snap_before);
+    let copied_per_sample = snap_delta.bytes_copied_per_sample();
+    b.record("loader/bytes_copied_per_sample", copied_per_sample, "bytes");
+    b.record("loader/record_bytes", rb as f64, "bytes");
+    // Cheap in-binary regression guard (CI reruns it): more than one copy
+    // per sample byte means the one-copy invariant broke somewhere.
+    assert!(
+        copied_per_sample <= rb as f64 + 1e-6,
+        "one-copy regression: {copied_per_sample} bytes copied per sample \
+         exceeds record_bytes {rb}"
+    );
+    loader.shutdown().unwrap();
 
     // --- Tensor byte serialization (§Perf iteration 1) -----------------------
     // Before: per-element to_le_bytes flat_map; after: zero-copy byte_view.

@@ -15,9 +15,15 @@
 //! Emits machine-readable `BENCH_perf_stack.json` for the perf trajectory.
 
 use dlio::bench::{black_box, Bench};
+use dlio::cache::{CacheDirectory, Policy, SampleCache};
 use dlio::figures::{fig7, Fig7Config};
+use dlio::loader::{
+    BatchRequest, FetchContext, Loader, LoaderConfig, LoaderRuntime,
+};
+use dlio::metrics::LoadCounters;
+use dlio::net::{Fabric, FabricConfig};
 use dlio::runtime::{default_artifacts_dir, Engine, HostTensor};
-use dlio::storage::{generate, SyntheticSpec};
+use dlio::storage::{generate, StorageSystem, SyntheticSpec};
 use dlio::util::Rng;
 use std::sync::Arc;
 use std::time::Instant;
@@ -121,6 +127,84 @@ fn main() {
             "samples/s",
         );
     }
+
+    // --- L3: cache-hot steady-state ceiling ---------------------------------
+    // All-local-hit epochs through the persistent-executor + pooled-buffer
+    // loader (the fig7 matrix above runs cache-less). This is the number
+    // the PR-over-PR trajectory watches for execution-layer regressions.
+    let storage =
+        Arc::new(StorageSystem::open(&cfg.data_dir, None).unwrap());
+    let rb = storage.meta().record_bytes();
+    let n = storage.n_samples() as u32;
+    let ctx = Arc::new(FetchContext {
+        learner: 0,
+        storage,
+        caches: vec![Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly))],
+        directory: Arc::new(CacheDirectory::new(n as u64)),
+        fabric: Arc::new(Fabric::new(FabricConfig {
+            real_time: false,
+            ..Default::default()
+        })),
+        cache_on_load: true,
+        decode_s_per_kib: 0.0,
+        counters: Arc::new(LoadCounters::new()),
+    });
+    let lcfg = LoaderConfig {
+        workers: 4,
+        threads_per_worker: 4,
+        prefetch_batches: 8,
+    };
+    let runtime = LoaderRuntime::new(&lcfg);
+    let loader = Loader::spawn_with(lcfg, ctx, rb, None, 7, 0.0, &runtime);
+    let bsz = 64u32;
+    let batches = 32u64;
+    let mut next_step = 0u64;
+    // Windowed submit/consume (coordinator-style) so the prefetch depth
+    // bounds the pooled buffers in flight.
+    let mut run_epoch = || {
+        let first = next_step;
+        next_step += batches;
+        let window = 8u64;
+        let ids_for = |step: u64| -> Vec<u32> {
+            (0..bsz).map(|i| ((step % batches) as u32 * bsz + i) % n).collect()
+        };
+        for step in first..first + window {
+            loader
+                .submit(BatchRequest { epoch: 0, step, ids: ids_for(step) })
+                .unwrap();
+        }
+        for step in first..first + batches {
+            black_box(loader.next(step).unwrap());
+            if step + window < first + batches {
+                let nxt = step + window;
+                loader
+                    .submit(BatchRequest {
+                        epoch: 0,
+                        step: nxt,
+                        ids: ids_for(nxt),
+                    })
+                    .unwrap();
+            }
+        }
+    };
+    run_epoch(); // population
+    let pool_before = runtime.pool_stats();
+    let t0 = Instant::now();
+    run_epoch(); // cache-hot epoch
+    let dt = t0.elapsed().as_secs_f64();
+    b.record(
+        "l3/loader_cachehot_w4t4",
+        (batches * bsz as u64) as f64 / dt,
+        "samples/s",
+    );
+    // Delta over the cache-hot epoch only — lifetime stats would fold the
+    // cold population epoch's first-allocations into the denominator.
+    b.record(
+        "l3/loader_buffer_reuse_rate",
+        runtime.pool_stats().delta(&pool_before).reuse_rate(),
+        "fraction",
+    );
+    loader.shutdown().unwrap();
 
     b.report("§Perf whole-stack");
     b.write_json("BENCH_perf_stack.json").unwrap();

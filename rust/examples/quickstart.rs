@@ -74,7 +74,7 @@ fn main() -> Result<()> {
         dt,
         (batches as usize * b) as f64 / dt
     );
-    loader.shutdown();
+    loader.shutdown()?;
 
     // --- 3. Training steps -------------------------------------------------
     let train = engine.program(&format!("train{b}"))?;
@@ -84,7 +84,7 @@ fn main() -> Result<()> {
     for step in 0..12 {
         let mut args = params.clone();
         args.push(batch.x_f32.clone().unwrap());
-        args.push(HostTensor::i32(vec![b], batch.labels.clone()));
+        args.push(HostTensor::i32_shared(vec![b], batch.labels.clone()));
         args.push(HostTensor::scalar_f32(0.08));
         let out = train.run(&args)?;
         let loss = out[out.len() - 1].scalar()?;

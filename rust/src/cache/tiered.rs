@@ -6,7 +6,9 @@
 //!
 //! Two tiers, both insert-only (no replacement, per the paper's model):
 //!
-//! * **mem** — byte-capacity-bounded in-memory map (fast path);
+//! * **mem** — a [`SampleCache`] (byte-capacity-bounded, *sharded* — the
+//!   fast path shares the sharded-lock + atomic-accounting rewrite
+//!   instead of duplicating its own single-mutex map);
 //! * **disk** — an append-only spill file with an in-memory index; reads
 //!   go through `read_at` and an optional simulated device latency, so the
 //!   DRAM-vs-SSD hierarchy of the paper is measurable in the live
@@ -15,6 +17,7 @@
 //! Thread-safe like [`SampleCache`]; the loader can use either tier
 //! transparently via [`TieredCache::get`].
 
+use super::sample_cache::{Policy, SampleCache};
 use crate::storage::Sample;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -25,11 +28,6 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
-
-struct MemTier {
-    map: HashMap<u32, std::sync::Arc<Sample>>,
-    bytes: u64,
-}
 
 #[derive(Clone, Copy)]
 struct DiskSlot {
@@ -46,14 +44,12 @@ struct DiskTier {
 
 /// Two-tier DRAM + SSD cache.
 pub struct TieredCache {
-    mem: Mutex<MemTier>,
+    mem: SampleCache,
     disk: Mutex<DiskTier>,
-    mem_capacity: u64,
     disk_capacity: u64,
     /// Simulated device read latency per disk hit (0 for a real SSD).
     disk_latency: Duration,
     path: PathBuf,
-    mem_hits: AtomicU64,
     disk_hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -75,17 +71,15 @@ impl TieredCache {
             .open(&path)
             .with_context(|| format!("create spill file {}", path.display()))?;
         Ok(TieredCache {
-            mem: Mutex::new(MemTier { map: HashMap::new(), bytes: 0 }),
+            mem: SampleCache::new(mem_capacity, Policy::InsertOnly),
             disk: Mutex::new(DiskTier {
                 index: HashMap::new(),
                 file,
                 cursor: 0,
             }),
-            mem_capacity,
             disk_capacity,
             disk_latency,
             path,
-            mem_hits: AtomicU64::new(0),
             disk_hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         })
@@ -95,16 +89,9 @@ impl TieredCache {
     /// Returns `false` only when *both* tiers are at capacity.
     pub fn insert(&self, sample: std::sync::Arc<Sample>) -> Result<bool> {
         let sz = sample.size() as u64;
-        {
-            let mut mem = self.mem.lock().unwrap();
-            if mem.map.contains_key(&sample.id) {
-                return Ok(true);
-            }
-            if mem.bytes + sz <= self.mem_capacity {
-                mem.bytes += sz;
-                mem.map.insert(sample.id, sample);
-                return Ok(true);
-            }
+        // Sharded mem tier: idempotent on duplicates, rejects when full.
+        if self.mem.insert(std::sync::Arc::clone(&sample)) {
+            return Ok(true);
         }
         // Spill to the disk tier.
         let mut disk = self.disk.lock().unwrap();
@@ -126,9 +113,8 @@ impl TieredCache {
 
     /// Look up a sample in either tier.
     pub fn get(&self, id: u32) -> Result<Option<std::sync::Arc<Sample>>> {
-        if let Some(s) = self.mem.lock().unwrap().map.get(&id) {
-            self.mem_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(Some(std::sync::Arc::clone(s)));
+        if let Some(s) = self.mem.get(id) {
+            return Ok(Some(s));
         }
         let slot = {
             let disk = self.disk.lock().unwrap();
@@ -161,12 +147,12 @@ impl TieredCache {
     }
 
     pub fn contains(&self, id: u32) -> bool {
-        self.mem.lock().unwrap().map.contains_key(&id)
+        self.mem.contains(id)
             || self.disk.lock().unwrap().index.contains_key(&id)
     }
 
     pub fn mem_len(&self) -> usize {
-        self.mem.lock().unwrap().map.len()
+        self.mem.len()
     }
 
     pub fn disk_len(&self) -> usize {
@@ -174,7 +160,7 @@ impl TieredCache {
     }
 
     pub fn mem_hits(&self) -> u64 {
-        self.mem_hits.load(Ordering::Relaxed)
+        self.mem.hits()
     }
 
     pub fn disk_hits(&self) -> u64 {

@@ -157,6 +157,7 @@ fn add_snap(a: &mut LoadSnapshot, d: &LoadSnapshot) {
     a.batch_fetches += d.batch_fetches;
     a.owner_messages += d.owner_messages;
     a.storage_runs += d.storage_runs;
+    a.copied_bytes += d.copied_bytes;
 }
 
 fn flatten(tensors: &[HostTensor], extra: f32) -> Result<Vec<f32>> {
@@ -438,6 +439,11 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
     let counters = Arc::new(LoadCounters::new());
     let record_bytes = storage.meta().record_bytes();
     let n_params = params.len();
+    // One persistent loader runtime for the whole job: the decode
+    // executor threads and the batch buffer pool survive the per-epoch
+    // loader respawns, so epochs after the first spawn zero threads and
+    // allocate zero batch buffers.
+    let loader_runtime = crate::loader::LoaderRuntime::new(&cfg.loader);
 
     for epoch in 0..cfg.epochs {
         // A fresh loader per epoch: FetchContext.cache_on_load captures the
@@ -452,13 +458,14 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
             decode_s_per_kib: cfg.decode_s_per_kib,
             counters: Arc::clone(&counters),
         });
-        let loader = Loader::spawn(
+        let loader = Loader::spawn_with(
             cfg.loader,
             Arc::clone(&ctx),
             record_bytes,
             Some(Arc::clone(&pre_prog)),
             cfg.seed,
             cfg.flip_prob,
+            &loader_runtime,
         );
 
         let plan = EpochPlan::new(&shuffler, epoch, cfg.global_batch());
@@ -518,8 +525,11 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
                 .x_f32
                 .as_ref()
                 .context("loader must preprocess for training")?;
-            let y =
-                HostTensor::i32(vec![cfg.local_batch], batch.labels.clone());
+            // Shared handle: aliases the loader's pooled label buffer.
+            let y = HostTensor::i32_shared(
+                vec![cfg.local_batch],
+                batch.labels.clone(),
+            );
             let mut args: Vec<&HostTensor> = params.iter().collect();
             args.push(x);
             args.push(&y);
@@ -558,7 +568,7 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
             train_s += t_apply.elapsed().as_secs_f64();
         }
 
-        loader.shutdown();
+        loader.shutdown()?;
         let epoch_time = epoch_t0.elapsed().as_secs_f64();
 
         // Merge this learner's epoch accounting.

@@ -171,7 +171,7 @@ pub fn fig7(
                 loader.next(step)?;
             }
             let dt = t0.elapsed().as_secs_f64();
-            loader.shutdown();
+            loader.shutdown()?;
             out.push(LoaderRate {
                 workers: w,
                 threads: t,

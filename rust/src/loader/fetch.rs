@@ -313,6 +313,12 @@ impl FetchContext {
             return;
         }
         let to_cache = if s.bytes.pins_excess_heap() {
+            // The compaction copy is deliberate (see DESIGN.md §2) and is
+            // charged to `copied_bytes` so the one-copy accounting stays
+            // honest even in `pread` fallback mode.
+            self.counters
+                .copied_bytes
+                .fetch_add(s.size() as u64, Ordering::Relaxed);
             Arc::new(Sample {
                 id: s.id,
                 bytes: s.bytes.compacted(),

@@ -6,19 +6,29 @@
 //!   loading *whole batches* concurrently from a shared request queue
 //!   (PyTorch's worker processes; threads suffice here since Rust has no
 //!   GIL).
-//! * **Multithreading** (§III-B) → `threads_per_worker` scoped threads
-//!   parallelize the per-sample fetch+decode *within* a batch
-//!   (`ThreadPoolExecutor.map` in the paper's patched PyTorch loader).
-//!   `0` = the sequential baseline ("the default PyTorch data loader").
+//! * **Multithreading** (§III-B) → a **persistent decode executor**
+//!   ([`Executor`], shared by all workers, sized
+//!   `threads_per_worker × workers`) parallelizes the per-sample
+//!   fetch+decode *within* a batch. Chunks are submitted as owned tasks
+//!   and awaited on a completion latch — zero thread spawns per batch,
+//!   unlike the scoped-spawn approach this replaced. `0` = the sequential
+//!   baseline ("the default PyTorch data loader").
 //! * **Prefetching** → the bounded request queue: the consumer keeps up to
 //!   `prefetch_batches` requests outstanding; bounded capacity is the
 //!   backpressure.
 //! * **Preprocessing** → the AOT-compiled Pallas `preprocess{B}` program,
 //!   executed by the worker so it overlaps with training (and with other
-//!   workers' I/O).
+//!   workers' I/O). Its inputs *alias* the pooled batch buffers
+//!   ([`SharedBuf`]), so preprocessing adds zero payload copies.
+//!
+//! Batch buffers (`x_u8`/`labels`/`flip`) come from a [`BatchPool`] and
+//! are recycled when the consumer drops the [`LoadedBatch`] — the steady
+//! state allocates nothing per batch (DESIGN.md §7).
 //!
 //! Batches complete out of order across workers and are re-sequenced by a
-//! [`Reorder`] buffer.
+//! [`Reorder`] buffer. A worker panic while loading a batch is caught and
+//! delivered as that step's `Err` (never a deadlocked `next`); panics
+//! outside the batch scope surface from [`Loader::shutdown`].
 
 pub mod fetch;
 pub mod reorder;
@@ -28,8 +38,12 @@ pub use reorder::Reorder;
 
 use crate::runtime::{HostTensor, Program};
 use crate::storage::Sample;
-use crate::util::{Queue, Rng};
+use crate::util::{
+    panic_message, BatchPool, Executor, ExecutorStats, PoolStats, Queue, Rng,
+    SharedBuf,
+};
 use anyhow::{ensure, Context, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -50,6 +64,42 @@ impl Default for LoaderConfig {
     }
 }
 
+/// Long-lived loader substrate: the decode executor and the batch buffer
+/// pool. Created once and shared across every [`Loader`] a learner spawns
+/// (the coordinator respawns a `Loader` per epoch; the runtime — and so
+/// the warmed pool and executor threads — persists across them).
+#[derive(Clone)]
+pub struct LoaderRuntime {
+    executor: Option<Arc<Executor>>,
+    pool: BatchPool,
+}
+
+impl LoaderRuntime {
+    pub fn new(cfg: &LoaderConfig) -> LoaderRuntime {
+        let executor = if cfg.threads_per_worker > 1 {
+            Some(Arc::new(Executor::new(
+                cfg.threads_per_worker * cfg.workers.max(1),
+            )))
+        } else {
+            None
+        };
+        // Shelf space for every batch in flight: the prefetch window plus
+        // one batch per worker plus consumer slack — so steady-state gets
+        // always find a recycled buffer.
+        let pool =
+            BatchPool::new(cfg.prefetch_batches.max(1) + cfg.workers + 4);
+        LoaderRuntime { executor, pool }
+    }
+
+    pub fn executor_stats(&self) -> Option<ExecutorStats> {
+        self.executor.as_ref().map(|e| e.stats())
+    }
+
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+}
+
 /// A batch-loading request: which samples (in order) make up this step's
 /// local batch.
 #[derive(Clone, Debug)]
@@ -59,17 +109,19 @@ pub struct BatchRequest {
     pub ids: Vec<u32>,
 }
 
-/// A loaded (and optionally preprocessed) local batch.
+/// A loaded (and optionally preprocessed) local batch. The payload fields
+/// are pooled shared buffers: dropping the batch (and any preprocess
+/// tensors aliasing them) recycles the allocations.
 #[derive(Clone, Debug)]
 pub struct LoadedBatch {
     pub epoch: u64,
     pub step: u64,
     pub ids: Vec<u32>,
     /// Raw records, concatenated in `ids` order (`B * record_bytes`).
-    pub x_u8: Vec<u8>,
-    pub labels: Vec<i32>,
+    pub x_u8: SharedBuf<u8>,
+    pub labels: SharedBuf<i32>,
     /// Augmentation flip mask drawn from the deterministic stream.
-    pub flip: Vec<f32>,
+    pub flip: SharedBuf<f32>,
     /// Preprocessed features if the loader ran the preprocess program.
     pub x_f32: Option<HostTensor>,
     /// Wall time the worker spent producing this batch.
@@ -88,6 +140,7 @@ pub struct Loader {
     completed: Reorder<Result<LoadedBatch>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     batches_loaded: Arc<AtomicU64>,
+    runtime: LoaderRuntime,
 }
 
 /// Everything a worker needs (shared, immutable).
@@ -96,12 +149,18 @@ struct WorkerShared {
     preprocess: Option<Arc<Program>>,
     record_bytes: usize,
     threads: usize,
+    executor: Option<Arc<Executor>>,
+    pool: BatchPool,
     flip_seed: u64,
     flip_prob: f64,
+    /// Test hook: panic while loading this step (exercises the
+    /// panic-to-`Err` path without a contrived real panic).
+    #[cfg(test)]
+    panic_on_step: Option<u64>,
 }
 
 impl Loader {
-    /// Spawn the worker pool.
+    /// Spawn the worker pool with a fresh private [`LoaderRuntime`].
     ///
     /// * `ctx` — the learner's fetch context.
     /// * `record_bytes` — fixed record size (checked per sample).
@@ -116,35 +175,88 @@ impl Loader {
         flip_seed: u64,
         flip_prob: f64,
     ) -> Loader {
-        assert!(cfg.workers > 0, "need at least one loader worker");
-        let requests: Queue<BatchRequest> =
-            Queue::bounded(cfg.prefetch_batches.max(1));
-        let completed: Reorder<Result<LoadedBatch>> = Reorder::new();
-        let batches_loaded = Arc::new(AtomicU64::new(0));
+        let runtime = LoaderRuntime::new(&cfg);
+        Self::spawn_with(
+            cfg,
+            ctx,
+            record_bytes,
+            preprocess,
+            flip_seed,
+            flip_prob,
+            &runtime,
+        )
+    }
+
+    /// As [`spawn`], reusing an existing runtime so the executor threads
+    /// and warmed buffer pool persist across loader generations (the
+    /// coordinator spawns one loader per epoch).
+    ///
+    /// [`spawn`]: Loader::spawn
+    pub fn spawn_with(
+        cfg: LoaderConfig,
+        ctx: Arc<FetchContext>,
+        record_bytes: usize,
+        preprocess: Option<Arc<Program>>,
+        flip_seed: u64,
+        flip_prob: f64,
+        runtime: &LoaderRuntime,
+    ) -> Loader {
         let shared = Arc::new(WorkerShared {
             ctx,
             preprocess,
             record_bytes,
             threads: cfg.threads_per_worker,
+            executor: runtime.executor.clone(),
+            pool: runtime.pool.clone(),
             flip_seed,
             flip_prob,
+            #[cfg(test)]
+            panic_on_step: None,
         });
+        Self::spawn_shared(cfg, runtime.clone(), shared)
+    }
+
+    fn spawn_shared(
+        cfg: LoaderConfig,
+        runtime: LoaderRuntime,
+        shared: Arc<WorkerShared>,
+    ) -> Loader {
+        assert!(cfg.workers > 0, "need at least one loader worker");
+        let requests: Queue<BatchRequest> =
+            Queue::bounded(cfg.prefetch_batches.max(1));
+        let completed: Reorder<Result<LoadedBatch>> = Reorder::new();
+        let batches_loaded = Arc::new(AtomicU64::new(0));
         let mut workers = Vec::with_capacity(cfg.workers);
-        for _ in 0..cfg.workers {
+        for k in 0..cfg.workers {
             let rq = requests.clone();
             let done = completed.clone();
             let shared = Arc::clone(&shared);
             let counter = Arc::clone(&batches_loaded);
-            workers.push(std::thread::spawn(move || {
-                while let Some(req) = rq.pop() {
-                    let step = req.step;
-                    let out = load_batch(&shared, req);
-                    counter.fetch_add(1, Ordering::Relaxed);
-                    done.put(step, out);
-                }
-            }));
+            let handle = std::thread::Builder::new()
+                .name(format!("dlio-worker-{k}"))
+                .spawn(move || {
+                    while let Some(req) = rq.pop() {
+                        let step = req.step;
+                        // A panic inside load_batch becomes this step's
+                        // Err: the consumer's `next(step)` fails instead
+                        // of blocking forever, and the worker lives on.
+                        let out = catch_unwind(AssertUnwindSafe(|| {
+                            load_batch(&shared, req)
+                        }))
+                        .unwrap_or_else(|payload| {
+                            Err(anyhow::anyhow!(
+                                "loader worker panicked on step {step}: {}",
+                                panic_message(&*payload)
+                            ))
+                        });
+                        counter.fetch_add(1, Ordering::Relaxed);
+                        done.put(step, out);
+                    }
+                })
+                .expect("spawn loader worker");
+            workers.push(handle);
         }
-        Loader { requests, completed, workers, batches_loaded }
+        Loader { requests, completed, workers, batches_loaded, runtime }
     }
 
     /// Submit a batch request (blocks when the prefetch window is full —
@@ -166,13 +278,31 @@ impl Loader {
         self.batches_loaded.load(Ordering::Relaxed)
     }
 
-    /// Drain and join the worker pool.
-    pub fn shutdown(self) {
+    /// The executor/pool substrate this loader runs on (stats live here).
+    pub fn runtime(&self) -> &LoaderRuntime {
+        &self.runtime
+    }
+
+    /// Drain and join the worker pool. A worker that died outside the
+    /// per-batch panic scope (so its panic could not be delivered through
+    /// the [`Reorder`]) is surfaced as an `Err` instead of being
+    /// swallowed.
+    pub fn shutdown(self) -> Result<()> {
         self.requests.close();
+        let mut failures: Vec<String> = Vec::new();
         for h in self.workers {
-            let _ = h.join();
+            if let Err(payload) = h.join() {
+                failures.push(panic_message(&*payload));
+            }
         }
         self.completed.close();
+        ensure!(
+            failures.is_empty(),
+            "{} loader worker(s) died outside batch scope: {}",
+            failures.len(),
+            failures.join("; ")
+        );
+        Ok(())
     }
 }
 
@@ -212,56 +342,98 @@ fn assemble(
     Ok(())
 }
 
+/// Resolve a batch's samples: phase one (local + owner-coalesced remote,
+/// one fabric message per distinct owner for the WHOLE batch) runs once on
+/// the worker; the storage completions — admission sleeps + decode
+/// occupancy — are chunked onto the persistent executor so they overlap
+/// exactly as the paper's §III-B multithreading does, with zero thread
+/// spawns per batch.
+fn fetch_samples(
+    shared: &WorkerShared,
+    req: &BatchRequest,
+) -> Result<Vec<Arc<Sample>>> {
+    let b = req.ids.len();
+    let nthreads = shared.threads.clamp(0, b);
+    let executor = match &shared.executor {
+        Some(ex) if nthreads > 1 => ex,
+        _ => return shared.ctx.fetch_batch(&req.ids),
+    };
+    let mut batch = shared.ctx.fetch_batch_begin(&req.ids)?;
+    let pending = std::mem::take(&mut batch.pending);
+    if pending.is_empty() {
+        return Ok(batch.finish());
+    }
+    let per = pending.len().div_ceil(nthreads);
+    let mut chunks: Vec<Vec<(u32, Vec<usize>)>> = Vec::new();
+    let mut it = pending.into_iter();
+    loop {
+        let chunk: Vec<(u32, Vec<usize>)> = it.by_ref().take(per).collect();
+        if chunk.is_empty() {
+            break;
+        }
+        chunks.push(chunk);
+    }
+    let tasks: Vec<_> = chunks
+        .into_iter()
+        .map(|chunk| {
+            let ctx = Arc::clone(&shared.ctx);
+            move || -> Result<(Vec<(u32, Vec<usize>)>, Vec<Arc<Sample>>)> {
+                let samples = ctx.fetch_storage(&chunk)?;
+                Ok((chunk, samples))
+            }
+        })
+        .collect();
+    for outcome in executor.run_batch(tasks) {
+        match outcome {
+            Ok(task_result) => {
+                let (chunk, samples) = task_result?;
+                batch.fill(&chunk, samples);
+            }
+            Err(payload) => anyhow::bail!(
+                "decode task panicked: {}",
+                panic_message(&*payload)
+            ),
+        }
+    }
+    Ok(batch.finish())
+}
+
 fn load_batch(shared: &WorkerShared, req: BatchRequest) -> Result<LoadedBatch> {
     let t0 = Instant::now();
+    #[cfg(test)]
+    if shared.panic_on_step == Some(req.step) {
+        panic!("injected loader panic (test hook)");
+    }
     let b = req.ids.len();
     ensure!(b > 0, "empty batch request");
     let rb = shared.record_bytes;
-    let mut x_u8 = vec![0u8; b * rb];
-    let mut labels = vec![0i32; b];
 
-    // Fetch via the coalesced zero-copy path. With intra-batch threads,
-    // phase one (local + owner-coalesced remote, one fabric message per
-    // distinct owner for the WHOLE batch) runs once, then the storage
-    // completions — admission sleeps + decode occupancy — are split
-    // across scoped threads so they overlap exactly as the paper's
-    // §III-B multithreading does. Assembly below is the ONE copy each
-    // sample byte takes between storage/cache and the batch tensor
-    // (DESIGN.md §2).
-    let nthreads = shared.threads.clamp(0, b);
-    let samples = if nthreads <= 1 {
-        shared.ctx.fetch_batch(&req.ids)?
-    } else {
-        let ctx = &shared.ctx;
-        let mut batch = ctx.fetch_batch_begin(&req.ids)?;
-        let pending = std::mem::take(&mut batch.pending);
-        if !pending.is_empty() {
-            let per = pending.len().div_ceil(nthreads);
-            let results: Vec<Result<Vec<Arc<Sample>>>> =
-                std::thread::scope(|scope| {
-                    let handles: Vec<_> = pending
-                        .chunks(per)
-                        .map(|chunk| {
-                            scope.spawn(move || ctx.fetch_storage(chunk))
-                        })
-                        .collect();
-                    handles.into_iter().map(|h| h.join().unwrap()).collect()
-                });
-            for (chunk, res) in pending.chunks(per).zip(results) {
-                batch.fill(chunk, res?);
-            }
-        }
-        batch.finish()
-    };
+    let samples = fetch_samples(shared, &req)?;
+
+    // Pooled batch buffers: leased after the fetch (shortest possible
+    // hold), recycled when the consumer drops the LoadedBatch. Assembly
+    // below is the ONE copy each sample byte takes between storage/cache
+    // and the batch tensor (DESIGN.md §2) — accounted in `copied_bytes`.
+    let mut x_u8 = shared.pool.get::<u8>(b * rb);
+    let mut labels = shared.pool.get::<i32>(b);
+    let mut flip = shared.pool.get::<f32>(b);
     assemble(&req.ids, &samples, rb, &mut x_u8, &mut labels)?;
-
-    let flip: Vec<f32> = req
-        .ids
-        .iter()
-        .map(|&id| flip_for(shared.flip_seed, req.epoch, id, shared.flip_prob))
-        .collect();
+    shared
+        .ctx
+        .counters
+        .copied_bytes
+        .fetch_add((b * rb) as u64, Ordering::Relaxed);
+    drop(samples);
+    for (i, &id) in req.ids.iter().enumerate() {
+        flip[i] = flip_for(shared.flip_seed, req.epoch, id, shared.flip_prob);
+    }
+    let x_u8 = x_u8.share();
+    let labels = labels.share();
+    let flip = flip.share();
 
     // Preprocess via the compiled Pallas kernel (overlaps with training).
+    // The inputs alias the pooled buffers — a shared-handle move, zero
+    // payload copies (the clones below bump an Arc, nothing else).
     let x_f32 = match &shared.preprocess {
         Some(prog) => {
             let spec = &prog.spec().inputs[0];
@@ -272,8 +444,8 @@ fn load_batch(shared: &WorkerShared, req: BatchRequest) -> Result<LoadedBatch> {
             );
             let tp0 = Instant::now();
             let out = prog.run(&[
-                HostTensor::u8(spec.shape.clone(), x_u8.clone()),
-                HostTensor::f32(vec![b], flip.clone()),
+                HostTensor::u8_shared(spec.shape.clone(), x_u8.clone()),
+                HostTensor::f32_shared(vec![b], flip.clone()),
             ])?;
             shared.ctx.counters.preprocess_ns.fetch_add(
                 tp0.elapsed().as_nanos() as u64,
@@ -348,7 +520,13 @@ mod tests {
             assert_eq!(b.labels[0], direct.label as i32);
         }
         assert_eq!(loader.batches_loaded(), 8);
-        loader.shutdown();
+        // One copy per sample byte, assembly included (8 batches × 16).
+        assert_eq!(
+            ctx.counters.snapshot().copied_bytes,
+            8 * 16 * 3072,
+            "assembly must be the only payload copy"
+        );
+        loader.shutdown().unwrap();
     }
 
     #[test]
@@ -405,7 +583,167 @@ mod tests {
             .submit(BatchRequest { epoch: 0, step: 0, ids: vec![1000] })
             .unwrap();
         assert!(loader.next(0).is_err());
-        loader.shutdown();
+        loader.shutdown().unwrap();
+    }
+
+    #[test]
+    fn worker_panic_becomes_step_error_not_deadlock() {
+        // If load_batch panics, `next(step)` must get an Err — the old
+        // loader never called done.put and the consumer hung forever —
+        // and the worker must survive to serve later steps.
+        let ctx = make_ctx(64, "panic");
+        let cfg = LoaderConfig {
+            workers: 1,
+            threads_per_worker: 0,
+            prefetch_batches: 4,
+        };
+        let runtime = LoaderRuntime::new(&cfg);
+        let shared = Arc::new(WorkerShared {
+            ctx,
+            preprocess: None,
+            record_bytes: 3072,
+            threads: 0,
+            executor: None,
+            pool: runtime.pool.clone(),
+            flip_seed: 0,
+            flip_prob: 0.0,
+            panic_on_step: Some(1),
+        });
+        let loader = Loader::spawn_shared(cfg, runtime, shared);
+        for step in 0..3u64 {
+            loader
+                .submit(BatchRequest {
+                    epoch: 0,
+                    step,
+                    ids: (0..8).collect(),
+                })
+                .unwrap();
+        }
+        assert!(loader.next(0).is_ok());
+        let err = loader.next(1).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("panicked"),
+            "error must name the panic: {err:#}"
+        );
+        // The same worker keeps serving after the panic.
+        assert!(loader.next(2).is_ok());
+        assert_eq!(loader.batches_loaded(), 3);
+        loader.shutdown().unwrap();
+    }
+
+    #[test]
+    fn steady_state_reuses_buffers_and_spawns_no_threads() {
+        let ctx = make_ctx(256, "steady");
+        let cfg = LoaderConfig {
+            workers: 2,
+            threads_per_worker: 2,
+            prefetch_batches: 4,
+        };
+        let runtime = LoaderRuntime::new(&cfg);
+        let loader = Loader::spawn_with(
+            cfg,
+            Arc::clone(&ctx),
+            3072,
+            None,
+            1,
+            0.0,
+            &runtime,
+        );
+        // Windowed submit/consume, like the coordinator's step loop — the
+        // prefetch depth bounds how many batches (and so pooled buffers)
+        // are in flight at once.
+        let run_pass = |first: u64, count: u64| {
+            let window = 4u64.min(count);
+            let ids_for = |step: u64| -> Vec<u32> {
+                (0..16).map(|i| (step as u32 * 16 + i) % 256).collect()
+            };
+            for step in first..first + window {
+                loader
+                    .submit(BatchRequest { epoch: 0, step, ids: ids_for(step) })
+                    .unwrap();
+            }
+            for step in first..first + count {
+                drop(loader.next(step).unwrap()); // recycle buffers
+                if step + window < first + count {
+                    let next = step + window;
+                    loader
+                        .submit(BatchRequest {
+                            epoch: 0,
+                            step: next,
+                            ids: ids_for(next),
+                        })
+                        .unwrap();
+                }
+            }
+        };
+        run_pass(0, 8); // warmup: pool fills, executor threads exist
+        let pool_before = runtime.pool_stats();
+        let exec_before = runtime.executor_stats().unwrap();
+        run_pass(8, 16);
+        let pool_delta = runtime.pool_stats().delta(&pool_before);
+        let exec_after = runtime.executor_stats().unwrap();
+        assert_eq!(
+            exec_after.threads_spawned, exec_before.threads_spawned,
+            "steady state must spawn zero threads per batch"
+        );
+        assert!(
+            exec_after.tasks_run > exec_before.tasks_run,
+            "chunks must run on the executor"
+        );
+        assert_eq!(pool_delta.gets, 16 * 3, "three buffers per batch");
+        assert!(
+            pool_delta.reuses as f64 >= pool_delta.gets as f64 * 0.75,
+            "steady state must mostly reuse buffers: {pool_delta:?}"
+        );
+        loader.shutdown().unwrap();
+    }
+
+    #[test]
+    fn runtime_persists_across_loader_generations() {
+        // The coordinator respawns a Loader per epoch; with a shared
+        // runtime the second generation starts with a warm pool and the
+        // same executor threads.
+        let ctx = make_ctx(64, "gens");
+        let cfg = LoaderConfig {
+            workers: 2,
+            threads_per_worker: 2,
+            prefetch_batches: 2,
+        };
+        let runtime = LoaderRuntime::new(&cfg);
+        for gen in 0..2u64 {
+            let loader = Loader::spawn_with(
+                cfg,
+                Arc::clone(&ctx),
+                3072,
+                None,
+                0,
+                0.0,
+                &runtime,
+            );
+            for step in 0..4u64 {
+                loader
+                    .submit(BatchRequest {
+                        epoch: gen,
+                        step,
+                        ids: (0..16).collect(),
+                    })
+                    .unwrap();
+            }
+            for step in 0..4u64 {
+                drop(loader.next(step).unwrap());
+            }
+            loader.shutdown().unwrap();
+        }
+        let stats = runtime.executor_stats().unwrap();
+        assert_eq!(
+            stats.threads_spawned, stats.threads as u64,
+            "one spawn per executor thread, ever"
+        );
+        let pool = runtime.pool_stats();
+        assert!(
+            pool.reuses > 0,
+            "second generation must reuse the first generation's buffers"
+        );
     }
 
     #[test]
@@ -459,7 +797,7 @@ mod tests {
                 .unwrap();
             loader.next(0).unwrap();
             let dt = t0.elapsed().as_secs_f64();
-            loader.shutdown();
+            loader.shutdown().unwrap();
             dt
         };
         let seq = mk(0, "seq");

@@ -36,6 +36,12 @@ pub struct LoadCounters {
     /// acquire + one range read each, so `storage_loads / storage_runs`
     /// is the storage coalescing factor.
     pub storage_runs: AtomicU64,
+    /// Payload bytes copied anywhere between the byte source and the
+    /// batch tensor: batch assembly (exactly `record_bytes` per sample)
+    /// plus any upstream compaction. The one-copy invariant (DESIGN.md
+    /// §2/§7) holds iff `copied_bytes / total_samples == record_bytes` —
+    /// preprocessing shares the batch buffer and must add zero.
+    pub copied_bytes: AtomicU64,
 }
 
 impl LoadCounters {
@@ -81,6 +87,7 @@ impl LoadCounters {
             batch_fetches: self.batch_fetches.load(Ordering::Relaxed),
             owner_messages: self.owner_messages.load(Ordering::Relaxed),
             storage_runs: self.storage_runs.load(Ordering::Relaxed),
+            copied_bytes: self.copied_bytes.load(Ordering::Relaxed),
         }
     }
 }
@@ -99,11 +106,20 @@ pub struct LoadSnapshot {
     pub batch_fetches: u64,
     pub owner_messages: u64,
     pub storage_runs: u64,
+    pub copied_bytes: u64,
 }
 
 impl LoadSnapshot {
     pub fn total_samples(&self) -> u64 {
         self.local_hits + self.remote_hits + self.storage_loads
+    }
+
+    /// Mean payload bytes copied per served sample — equals `record_bytes`
+    /// exactly when the one-copy invariant holds end-to-end (preprocess
+    /// included).
+    pub fn bytes_copied_per_sample(&self) -> f64 {
+        let n = self.total_samples();
+        if n == 0 { 0.0 } else { self.copied_bytes as f64 / n as f64 }
     }
 
     pub fn delta(&self, earlier: &LoadSnapshot) -> LoadSnapshot {
@@ -119,6 +135,7 @@ impl LoadSnapshot {
             batch_fetches: self.batch_fetches - earlier.batch_fetches,
             owner_messages: self.owner_messages - earlier.owner_messages,
             storage_runs: self.storage_runs - earlier.storage_runs,
+            copied_bytes: self.copied_bytes - earlier.copied_bytes,
         }
     }
 }
@@ -292,6 +309,22 @@ mod tests {
         assert_eq!(d.batch_fetches, 1);
         assert_eq!(d.owner_messages, 0);
         assert_eq!(d.storage_runs, 5);
+    }
+
+    #[test]
+    fn copied_bytes_feed_the_one_copy_check() {
+        let c = LoadCounters::new();
+        c.record_n(Source::Storage, 3072, 4);
+        c.copied_bytes.fetch_add(4 * 3072, Ordering::Relaxed);
+        let a = c.snapshot();
+        assert_eq!(a.copied_bytes, 4 * 3072);
+        assert!((a.bytes_copied_per_sample() - 3072.0).abs() < 1e-9);
+        c.record(Source::LocalCache, 3072);
+        c.copied_bytes.fetch_add(3072, Ordering::Relaxed);
+        let d = c.snapshot().delta(&a);
+        assert_eq!(d.copied_bytes, 3072);
+        assert!((d.bytes_copied_per_sample() - 3072.0).abs() < 1e-9);
+        assert_eq!(LoadSnapshot::default().bytes_copied_per_sample(), 0.0);
     }
 
     #[test]

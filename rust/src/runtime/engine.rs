@@ -24,7 +24,7 @@ use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 /// A compiled, executable program with its manifest signature.
@@ -166,7 +166,10 @@ fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
-    programs: Mutex<HashMap<String, Arc<Program>>>,
+    /// Read-mostly after warmup: learners and loader workers look
+    /// programs up every step, so lookups take a shared read lock and
+    /// only first-use compilation takes the write lock.
+    programs: RwLock<HashMap<String, Arc<Program>>>,
 }
 
 // SAFETY: see Program. PjRtClient (CPU) is thread-safe per the PJRT C API.
@@ -179,7 +182,7 @@ impl Engine {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
-        Ok(Engine { client, manifest, programs: Mutex::new(HashMap::new()) })
+        Ok(Engine { client, manifest, programs: RwLock::new(HashMap::new()) })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -192,7 +195,7 @@ impl Engine {
 
     /// Get (compiling on first use) a program by manifest name.
     pub fn program(&self, name: &str) -> Result<Arc<Program>> {
-        if let Some(p) = self.programs.lock().unwrap().get(name) {
+        if let Some(p) = self.programs.read().unwrap().get(name) {
             return Ok(Arc::clone(p));
         }
         // Compile outside the lock: compilation can take seconds and other
@@ -215,7 +218,7 @@ impl Engine {
             executions: AtomicU64::new(0),
             exec_ns: AtomicU64::new(0),
         });
-        let mut cache = self.programs.lock().unwrap();
+        let mut cache = self.programs.write().unwrap();
         let entry = cache.entry(name.to_string()).or_insert_with(|| {
             eprintln!(
                 "engine: compiled {name} in {:.2}s",

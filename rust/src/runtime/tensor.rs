@@ -4,16 +4,70 @@
 //! parameters, gradients); conversion to/from `xla::Literal` happens at the
 //! [`super::engine`] boundary. Data is stored in natural typed vectors so
 //! the gradient all-reduce can operate on `&mut [f32]` without casts.
+//!
+//! Owned vs shared payloads: each dtype has an owned `Vec` variant and a
+//! [`SharedBuf`] variant. Shared tensors alias a pooled batch buffer
+//! (`loader`'s `x_u8`/`labels`/`flip`) — constructing one moves an `Arc`,
+//! never payload bytes, which is how the preprocess call stays inside the
+//! one-copy invariant (DESIGN.md §2/§7). Shared tensors are read-only:
+//! `as_f32_mut` on one is an error by design.
 
 use super::manifest::{DType, TensorSpec};
+use crate::util::SharedBuf;
 use anyhow::{bail, ensure, Result};
 
-/// Typed tensor payload.
-#[derive(Clone, Debug, PartialEq)]
+/// Typed tensor payload — owned or aliasing a pooled batch buffer.
+#[derive(Clone, Debug)]
 pub enum Data {
     F32(Vec<f32>),
     I32(Vec<i32>),
     U8(Vec<u8>),
+    F32Shared(SharedBuf<f32>),
+    I32Shared(SharedBuf<i32>),
+    U8Shared(SharedBuf<u8>),
+}
+
+impl Data {
+    fn f32s(&self) -> Option<&[f32]> {
+        match self {
+            Data::F32(v) => Some(v),
+            Data::F32Shared(s) => Some(s.as_slice()),
+            _ => None,
+        }
+    }
+
+    fn i32s(&self) -> Option<&[i32]> {
+        match self {
+            Data::I32(v) => Some(v),
+            Data::I32Shared(s) => Some(s.as_slice()),
+            _ => None,
+        }
+    }
+
+    fn u8s(&self) -> Option<&[u8]> {
+        match self {
+            Data::U8(v) => Some(v),
+            Data::U8Shared(s) => Some(s.as_slice()),
+            _ => None,
+        }
+    }
+}
+
+/// Payload equality is by dtype + contents: an owned tensor equals a
+/// shared one holding the same bytes.
+impl PartialEq for Data {
+    fn eq(&self, other: &Self) -> bool {
+        if let (Some(a), Some(b)) = (self.f32s(), other.f32s()) {
+            return a == b;
+        }
+        if let (Some(a), Some(b)) = (self.i32s(), other.i32s()) {
+            return a == b;
+        }
+        if let (Some(a), Some(b)) = (self.u8s(), other.u8s()) {
+            return a == b;
+        }
+        false
+    }
 }
 
 /// A host tensor: shape + typed data.
@@ -42,6 +96,26 @@ impl HostTensor {
         t
     }
 
+    /// Wrap a shared (pooled) buffer without copying — the tensor aliases
+    /// the caller's payload.
+    pub fn f32_shared(shape: Vec<usize>, data: SharedBuf<f32>) -> Self {
+        let t = HostTensor { shape, data: Data::F32Shared(data) };
+        t.assert_consistent();
+        t
+    }
+
+    pub fn i32_shared(shape: Vec<usize>, data: SharedBuf<i32>) -> Self {
+        let t = HostTensor { shape, data: Data::I32Shared(data) };
+        t.assert_consistent();
+        t
+    }
+
+    pub fn u8_shared(shape: Vec<usize>, data: SharedBuf<u8>) -> Self {
+        let t = HostTensor { shape, data: Data::U8Shared(data) };
+        t.assert_consistent();
+        t
+    }
+
     pub fn scalar_f32(v: f32) -> Self {
         HostTensor::f32(vec![], vec![v])
     }
@@ -61,9 +135,9 @@ impl HostTensor {
 
     pub fn dtype(&self) -> DType {
         match &self.data {
-            Data::F32(_) => DType::F32,
-            Data::I32(_) => DType::I32,
-            Data::U8(_) => DType::U8,
+            Data::F32(_) | Data::F32Shared(_) => DType::F32,
+            Data::I32(_) | Data::I32Shared(_) => DType::I32,
+            Data::U8(_) | Data::U8Shared(_) => DType::U8,
         }
     }
 
@@ -72,6 +146,9 @@ impl HostTensor {
             Data::F32(v) => v.len(),
             Data::I32(v) => v.len(),
             Data::U8(v) => v.len(),
+            Data::F32Shared(s) => s.len(),
+            Data::I32Shared(s) => s.len(),
+            Data::U8Shared(s) => s.len(),
         }
     }
 
@@ -84,30 +161,35 @@ impl HostTensor {
     }
 
     pub fn as_f32(&self) -> Result<&[f32]> {
-        match &self.data {
-            Data::F32(v) => Ok(v),
-            _ => bail!("tensor is not f32"),
+        match self.data.f32s() {
+            Some(v) => Ok(v),
+            None => bail!("tensor is not f32"),
         }
     }
 
+    /// Mutable f32 access — owned tensors only; a shared (pooled) tensor
+    /// may be aliased by other readers and is immutable by contract.
     pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
         match &mut self.data {
             Data::F32(v) => Ok(v),
+            Data::F32Shared(_) => {
+                bail!("tensor aliases a shared pooled buffer; cannot mutate")
+            }
             _ => bail!("tensor is not f32"),
         }
     }
 
     pub fn as_i32(&self) -> Result<&[i32]> {
-        match &self.data {
-            Data::I32(v) => Ok(v),
-            _ => bail!("tensor is not i32"),
+        match self.data.i32s() {
+            Some(v) => Ok(v),
+            None => bail!("tensor is not i32"),
         }
     }
 
     pub fn as_u8(&self) -> Result<&[u8]> {
-        match &self.data {
-            Data::U8(v) => Ok(v),
-            _ => bail!("tensor is not u8"),
+        match self.data.u8s() {
+            Some(v) => Ok(v),
+            None => bail!("tensor is not u8"),
         }
     }
 
@@ -124,7 +206,8 @@ impl HostTensor {
 
     /// Zero-copy byte view on little-endian targets (all supported ones);
     /// this is the runtime-boundary hot path — a grad step moves ~14 MiB
-    /// of parameters per learner per call (§Perf).
+    /// of parameters per learner per call (§Perf). Shared payloads view
+    /// the pooled buffer in place.
     pub fn byte_view(&self) -> std::borrow::Cow<'_, [u8]> {
         #[cfg(target_endian = "little")]
         {
@@ -142,6 +225,9 @@ impl HostTensor {
                 Data::F32(v) => view(v),
                 Data::I32(v) => view(v),
                 Data::U8(v) => std::borrow::Cow::Borrowed(v),
+                Data::F32Shared(s) => view(s.as_slice()),
+                Data::I32Shared(s) => view(s.as_slice()),
+                Data::U8Shared(s) => std::borrow::Cow::Borrowed(s.as_slice()),
             }
         }
         #[cfg(not(target_endian = "little"))]
@@ -154,6 +240,13 @@ impl HostTensor {
                     v.iter().flat_map(|x| x.to_le_bytes()).collect()
                 }
                 Data::U8(v) => v.clone(),
+                Data::F32Shared(s) => {
+                    s.as_slice().iter().flat_map(|x| x.to_le_bytes()).collect()
+                }
+                Data::I32Shared(s) => {
+                    s.as_slice().iter().flat_map(|x| x.to_le_bytes()).collect()
+                }
+                Data::U8Shared(s) => s.to_vec(),
             })
         }
     }
@@ -239,6 +332,38 @@ mod tests {
         assert!(HostTensor::i32(vec![4, 2], vec![0; 8]).check(&spec).is_err());
         let z = HostTensor::zeros(&spec);
         assert!(z.check(&spec).is_ok());
+    }
+
+    #[test]
+    fn shared_tensor_aliases_without_copying() {
+        // The preprocess one-copy guarantee at the type level: wrapping a
+        // shared buffer in a tensor must not move payload bytes — the
+        // tensor's view points at the very same allocation.
+        let buf = SharedBuf::from_vec((0..=255u8).collect::<Vec<u8>>());
+        let base_ptr = buf.as_slice().as_ptr();
+        let t = HostTensor::u8_shared(vec![16, 16], buf.clone());
+        assert_eq!(t.len(), 256);
+        assert_eq!(t.dtype(), DType::U8);
+        assert_eq!(t.as_u8().unwrap().as_ptr(), base_ptr, "no payload copy");
+        assert_eq!(t.byte_view().as_ptr(), base_ptr, "byte view aliases too");
+        // Owned vs shared payload equality is by contents.
+        let owned = HostTensor::u8(vec![16, 16], (0..=255u8).collect());
+        assert_eq!(t, owned);
+        // Cloning the tensor shares the same buffer (Arc bump, no copy).
+        let t2 = t.clone();
+        assert_eq!(t2.as_u8().unwrap().as_ptr(), base_ptr);
+    }
+
+    #[test]
+    fn shared_f32_is_readable_but_not_mutable() {
+        let buf = SharedBuf::from_vec(vec![1.0f32, 2.0, 3.0]);
+        let mut t = HostTensor::f32_shared(vec![3], buf);
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0, 3.0]);
+        assert!(t.as_f32_mut().is_err(), "shared payloads are immutable");
+        let buf_i = SharedBuf::from_vec(vec![4i32, 5]);
+        let ti = HostTensor::i32_shared(vec![2], buf_i);
+        assert_eq!(ti.as_i32().unwrap(), &[4, 5]);
+        assert_eq!(ti.bytes(), vec![4, 0, 0, 0, 5, 0, 0, 0]);
     }
 
     #[test]

@@ -1,0 +1,310 @@
+//! Persistent task executor for the loader's intra-batch parallelism.
+//!
+//! The paper's §III-B multithreading used to be reproduced with
+//! `std::thread::scope` — a fresh OS-thread spawn (and join) *per batch*,
+//! a fixed tax the paper's design puts off the critical path. This module
+//! replaces it with a long-lived pool created once per loader: workers
+//! submit owned task closures and block on a completion latch, so the
+//! steady state pays one queue push/pop per chunk and **zero thread
+//! spawns per batch**.
+//!
+//! Tasks are plain `'static` closures (they own their chunk of work and an
+//! `Arc` of whatever context they need), so no scoped-lifetime machinery
+//! is required. Panics inside a task are caught and handed back to the
+//! submitter as a `thread::Result::Err` — a panicking decode never kills a
+//! pool thread or deadlocks a waiting loader worker.
+//!
+//! Stats (`queue_depth_peak`, `tasks_run`, `threads_spawned`) feed the
+//! `BENCH_hotpath.json` executor counters.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Best-effort panic payload rendering (payloads are `&str` or `String`
+/// in practice). Shared by the executor, the loader's panic-to-`Err`
+/// path, and the property-test harness.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+struct ExecState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Inner {
+    state: Mutex<ExecState>,
+    available: Condvar,
+    tasks_run: AtomicU64,
+    task_panics: AtomicU64,
+    queue_depth_peak: AtomicU64,
+    threads_spawned: AtomicU64,
+}
+
+/// Counters snapshot for the bench trajectory.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecutorStats {
+    /// Pool size (fixed at construction).
+    pub threads: usize,
+    /// Total OS threads ever spawned — constant after construction, so a
+    /// delta of 0 across a measurement window proves zero per-batch spawns.
+    pub threads_spawned: u64,
+    pub tasks_run: u64,
+    pub task_panics: u64,
+    /// Peak number of queued-not-yet-started tasks.
+    pub queue_depth_peak: u64,
+}
+
+/// A fixed-size, long-lived worker pool with blocking batch submission.
+pub struct Executor {
+    inner: Arc<Inner>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Executor {
+    /// Spawn `threads` pool threads (the only spawns for this executor's
+    /// whole lifetime).
+    pub fn new(threads: usize) -> Executor {
+        assert!(threads > 0, "executor needs at least one thread");
+        let inner = Arc::new(Inner {
+            state: Mutex::new(ExecState {
+                jobs: VecDeque::new(),
+                shutdown: false,
+            }),
+            available: Condvar::new(),
+            tasks_run: AtomicU64::new(0),
+            task_panics: AtomicU64::new(0),
+            queue_depth_peak: AtomicU64::new(0),
+            threads_spawned: AtomicU64::new(threads as u64),
+        });
+        let handles = (0..threads)
+            .map(|k| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("dlio-exec-{k}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn executor thread")
+            })
+            .collect();
+        Executor { inner, threads: handles }
+    }
+
+    /// Enqueue one fire-and-forget job.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        let depth = {
+            let mut st = self.inner.state.lock().unwrap();
+            assert!(!st.shutdown, "executor is shut down");
+            st.jobs.push_back(Box::new(job));
+            st.jobs.len() as u64
+        };
+        self.inner.queue_depth_peak.fetch_max(depth, Ordering::Relaxed);
+        self.inner.available.notify_one();
+    }
+
+    /// Run every task on the pool and block until all complete. Results
+    /// come back in task order; a panicking task yields `Err(payload)` in
+    /// its slot (and only in its slot — the pool and the other tasks are
+    /// unaffected).
+    pub fn run_batch<T, F>(&self, tasks: Vec<F>) -> Vec<std::thread::Result<T>>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = tasks.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let slots: Arc<Vec<Mutex<Option<std::thread::Result<T>>>>> =
+            Arc::new((0..n).map(|_| Mutex::new(None)).collect());
+        let latch = Arc::new((Mutex::new(n), Condvar::new()));
+        for (i, task) in tasks.into_iter().enumerate() {
+            let slots = Arc::clone(&slots);
+            let latch = Arc::clone(&latch);
+            self.submit(move || {
+                let result = catch_unwind(AssertUnwindSafe(task));
+                *slots[i].lock().unwrap() = Some(result);
+                let (remaining, cv) = &*latch;
+                let mut left = remaining.lock().unwrap();
+                *left -= 1;
+                if *left == 0 {
+                    cv.notify_all();
+                }
+            });
+        }
+        let (remaining, cv) = &*latch;
+        let mut left = remaining.lock().unwrap();
+        while *left > 0 {
+            left = cv.wait(left).unwrap();
+        }
+        drop(left);
+        slots
+            .iter()
+            .map(|slot| {
+                slot.lock().unwrap().take().expect("task slot filled at latch")
+            })
+            .collect()
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads.len()
+    }
+
+    pub fn stats(&self) -> ExecutorStats {
+        ExecutorStats {
+            threads: self.threads.len(),
+            threads_spawned: self.inner.threads_spawned.load(Ordering::Relaxed),
+            tasks_run: self.inner.tasks_run.load(Ordering::Relaxed),
+            task_panics: self.inner.task_panics.load(Ordering::Relaxed),
+            queue_depth_peak: self
+                .inner
+                .queue_depth_peak
+                .load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.inner.available.notify_all();
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    loop {
+        let job = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if let Some(job) = st.jobs.pop_front() {
+                    break job;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = inner.available.wait(st).unwrap();
+            }
+        };
+        inner.tasks_run.fetch_add(1, Ordering::Relaxed);
+        // run_batch already catches per-task panics; this outer catch
+        // covers raw submit() jobs so a panic can never kill a pool thread.
+        if catch_unwind(AssertUnwindSafe(job)).is_err() {
+            inner.task_panics.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn run_batch_returns_results_in_task_order() {
+        let ex = Executor::new(4);
+        let tasks: Vec<_> = (0..32u64).map(|i| move || i * 10).collect();
+        let out = ex.run_batch(tasks);
+        for (i, r) in out.into_iter().enumerate() {
+            assert_eq!(r.unwrap(), i as u64 * 10);
+        }
+        let stats = ex.stats();
+        assert_eq!(stats.tasks_run, 32);
+        assert_eq!(stats.threads, 4);
+        assert_eq!(stats.threads_spawned, 4);
+    }
+
+    #[test]
+    fn no_thread_spawns_after_warmup() {
+        let ex = Executor::new(2);
+        ex.run_batch((0..8u32).map(|i| move || i).collect::<Vec<_>>());
+        let before = ex.stats().threads_spawned;
+        for _ in 0..16 {
+            ex.run_batch((0..8u32).map(|i| move || i).collect::<Vec<_>>());
+        }
+        assert_eq!(
+            ex.stats().threads_spawned,
+            before,
+            "steady state must spawn zero threads"
+        );
+        assert_eq!(ex.stats().tasks_run, 8 + 16 * 8);
+    }
+
+    #[test]
+    fn panicking_task_reports_err_and_pool_survives() {
+        let ex = Executor::new(2);
+        let tasks: Vec<Box<dyn FnOnce() -> u32 + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("boom")),
+            Box::new(|| 3),
+        ];
+        let out = ex.run_batch(tasks);
+        assert!(out[0].is_ok());
+        assert!(out[1].is_err());
+        assert!(out[2].is_ok());
+        // The pool still works afterwards.
+        let again = ex.run_batch(vec![Box::new(|| 7u32) as Box<dyn FnOnce() -> u32 + Send>]);
+        assert_eq!(*again[0].as_ref().unwrap(), 7);
+    }
+
+    #[test]
+    fn concurrent_submitters_share_the_pool() {
+        let ex = Arc::new(Executor::new(3));
+        let total = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let ex = Arc::clone(&ex);
+            let total = Arc::clone(&total);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10 {
+                    let t = Arc::clone(&total);
+                    let out = ex.run_batch(vec![move || {
+                        t.fetch_add(1, Ordering::Relaxed);
+                        1usize
+                    }]);
+                    assert_eq!(*out[0].as_ref().unwrap(), 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 40);
+    }
+
+    #[test]
+    fn queue_depth_peak_is_tracked() {
+        let ex = Executor::new(1);
+        // Block the single thread, pile up jobs behind it.
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g2 = Arc::clone(&gate);
+        ex.submit(move || {
+            let (m, cv) = &*g2;
+            let mut open = m.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        });
+        for _ in 0..5 {
+            ex.submit(|| {});
+        }
+        assert!(ex.stats().queue_depth_peak >= 5);
+        let (m, cv) = &*gate;
+        *m.lock().unwrap() = true;
+        cv.notify_all();
+    }
+}

@@ -5,13 +5,17 @@
 //! these replace the usual ecosystem crates (rand, serde_json, crossbeam,
 //! proptest) with small, fully-tested in-tree implementations.
 
+pub mod executor;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod queue;
 pub mod rng;
 pub mod stats;
 pub mod units;
 
+pub use executor::{panic_message, Executor, ExecutorStats};
 pub use json::Json;
+pub use pool::{BatchPool, PoolStats, PooledVec, SharedBuf};
 pub use queue::Queue;
 pub use rng::Rng;

@@ -1,0 +1,377 @@
+//! Batch buffer pool: recycles the per-batch `x_u8`/`labels`/`flip`
+//! allocations across batches.
+//!
+//! Before this pool every batch allocated (and zeroed) a fresh
+//! `Vec<u8>` of `B × record_bytes` plus the label/flip vectors, and the
+//! preprocess call cloned the whole batch tensor again. The pool closes
+//! both holes:
+//!
+//! * [`BatchPool::get`] hands out a [`PooledVec`] — a mutable lease that
+//!   reuses a previously returned buffer when one is shelved (no alloc,
+//!   no zeroing in steady state);
+//! * [`PooledVec::share`] seals the filled buffer into a [`SharedBuf`] —
+//!   an `Arc`-backed immutable handle that the [`LoadedBatch`] fields and
+//!   the preprocess input tensor alias *without copying*; when the last
+//!   handle drops, the buffer returns to the pool.
+//!
+//! Ownership rule (DESIGN.md §7): a buffer is either *leased* (one
+//! writer, `PooledVec`) or *shared* (any readers, `SharedBuf`) — never
+//! both, so no locking is needed on the payload itself. The pool is
+//! `Weak`-linked from leases, so buffers outliving their loader simply
+//! drop instead of resurrecting a dead pool.
+//!
+//! [`LoadedBatch`]: crate::loader::LoadedBatch
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+/// One shelf of idle buffers per payload element type.
+#[doc(hidden)]
+#[derive(Default)]
+pub struct Shelves {
+    u8s: Mutex<Vec<Vec<u8>>>,
+    i32s: Mutex<Vec<Vec<i32>>>,
+    f32s: Mutex<Vec<Vec<f32>>>,
+}
+
+/// Element types the pool can recycle (the three batch payload types).
+pub trait Poolable: Sized + Send + Sync + Clone + Default + 'static {
+    #[doc(hidden)]
+    fn shelf(shelves: &Shelves) -> &Mutex<Vec<Vec<Self>>>;
+}
+
+impl Poolable for u8 {
+    fn shelf(shelves: &Shelves) -> &Mutex<Vec<Vec<u8>>> {
+        &shelves.u8s
+    }
+}
+
+impl Poolable for i32 {
+    fn shelf(shelves: &Shelves) -> &Mutex<Vec<Vec<i32>>> {
+        &shelves.i32s
+    }
+}
+
+impl Poolable for f32 {
+    fn shelf(shelves: &Shelves) -> &Mutex<Vec<Vec<f32>>> {
+        &shelves.f32s
+    }
+}
+
+struct Inner {
+    shelves: Shelves,
+    /// Idle buffers kept per shelf; returns beyond this are dropped so a
+    /// transient burst can't pin memory forever.
+    max_per_shelf: usize,
+    gets: AtomicU64,
+    reuses: AtomicU64,
+    returns: AtomicU64,
+}
+
+/// Pool counters for the bench trajectory.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub gets: u64,
+    pub reuses: u64,
+    pub returns: u64,
+}
+
+impl PoolStats {
+    /// Fraction of `get`s served by a recycled buffer.
+    pub fn reuse_rate(&self) -> f64 {
+        if self.gets == 0 {
+            0.0
+        } else {
+            self.reuses as f64 / self.gets as f64
+        }
+    }
+
+    pub fn delta(&self, earlier: &PoolStats) -> PoolStats {
+        PoolStats {
+            gets: self.gets - earlier.gets,
+            reuses: self.reuses - earlier.reuses,
+            returns: self.returns - earlier.returns,
+        }
+    }
+}
+
+/// A shareable handle to the buffer pool (cheap to clone).
+#[derive(Clone)]
+pub struct BatchPool {
+    inner: Arc<Inner>,
+}
+
+impl BatchPool {
+    pub fn new(max_per_shelf: usize) -> BatchPool {
+        BatchPool {
+            inner: Arc::new(Inner {
+                shelves: Shelves::default(),
+                max_per_shelf: max_per_shelf.max(1),
+                gets: AtomicU64::new(0),
+                reuses: AtomicU64::new(0),
+                returns: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Lease a buffer of exactly `len` elements. Reuses a shelved buffer
+    /// when available (its contents are stale — the caller overwrites);
+    /// otherwise allocates a zero-filled one.
+    pub fn get<T: Poolable>(&self, len: usize) -> PooledVec<T> {
+        self.inner.gets.fetch_add(1, Ordering::Relaxed);
+        let recycled = T::shelf(&self.inner.shelves).lock().unwrap().pop();
+        let buf = match recycled {
+            Some(mut v) => {
+                self.inner.reuses.fetch_add(1, Ordering::Relaxed);
+                v.resize(len, T::default());
+                v
+            }
+            None => vec![T::default(); len],
+        };
+        PooledVec { buf, pool: Arc::downgrade(&self.inner) }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            gets: self.inner.gets.load(Ordering::Relaxed),
+            reuses: self.inner.reuses.load(Ordering::Relaxed),
+            returns: self.inner.returns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+fn give_back<T: Poolable>(pool: &Weak<Inner>, buf: Vec<T>) {
+    if buf.capacity() == 0 {
+        return; // empty husk left by `share`/`take` — nothing to recycle
+    }
+    if let Some(inner) = pool.upgrade() {
+        inner.returns.fetch_add(1, Ordering::Relaxed);
+        let mut shelf = T::shelf(&inner.shelves).lock().unwrap();
+        if shelf.len() < inner.max_per_shelf {
+            shelf.push(buf);
+        }
+    }
+}
+
+/// An exclusively held (writable) pooled buffer.
+pub struct PooledVec<T: Poolable> {
+    buf: Vec<T>,
+    pool: Weak<Inner>,
+}
+
+impl<T: Poolable> PooledVec<T> {
+    /// Seal the filled buffer into an immutable, cloneable [`SharedBuf`].
+    pub fn share(mut self) -> SharedBuf<T> {
+        let buf = std::mem::take(&mut self.buf);
+        let pool = std::mem::replace(&mut self.pool, Weak::new());
+        SharedBuf { lease: Arc::new(Lease { buf, pool }) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+impl<T: Poolable> Deref for PooledVec<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        &self.buf
+    }
+}
+
+impl<T: Poolable> DerefMut for PooledVec<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        &mut self.buf
+    }
+}
+
+impl<T: Poolable> Drop for PooledVec<T> {
+    fn drop(&mut self) {
+        give_back(&self.pool, std::mem::take(&mut self.buf));
+    }
+}
+
+struct Lease<T: Poolable> {
+    buf: Vec<T>,
+    pool: Weak<Inner>,
+}
+
+impl<T: Poolable> Drop for Lease<T> {
+    fn drop(&mut self) {
+        give_back(&self.pool, std::mem::take(&mut self.buf));
+    }
+}
+
+/// An immutable, `Arc`-shared pooled buffer. Cloning shares the same
+/// payload (no copy); the buffer returns to its pool when the last clone
+/// drops.
+pub struct SharedBuf<T: Poolable> {
+    lease: Arc<Lease<T>>,
+}
+
+impl<T: Poolable> SharedBuf<T> {
+    /// Wrap a plain vector without a backing pool (tests, one-off
+    /// tensors). Dropping it frees the buffer normally.
+    pub fn from_vec(buf: Vec<T>) -> SharedBuf<T> {
+        SharedBuf { lease: Arc::new(Lease { buf, pool: Weak::new() }) }
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        &self.lease.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.lease.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lease.buf.is_empty()
+    }
+
+    pub fn to_vec(&self) -> Vec<T> {
+        self.lease.buf.clone()
+    }
+
+    /// True iff `other` aliases the very same backing buffer.
+    pub fn ptr_eq(&self, other: &SharedBuf<T>) -> bool {
+        Arc::ptr_eq(&self.lease, &other.lease)
+    }
+}
+
+impl<T: Poolable> Clone for SharedBuf<T> {
+    fn clone(&self) -> Self {
+        SharedBuf { lease: Arc::clone(&self.lease) }
+    }
+}
+
+impl<T: Poolable> Deref for SharedBuf<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        &self.lease.buf
+    }
+}
+
+impl<T: Poolable + fmt::Debug> fmt::Debug for SharedBuf<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_list().entries(self.lease.buf.iter()).finish()
+    }
+}
+
+impl<T: Poolable + PartialEq> PartialEq for SharedBuf<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.lease.buf == other.lease.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_after_lease_drop() {
+        let pool = BatchPool::new(8);
+        {
+            let mut a = pool.get::<u8>(64);
+            a[0] = 7;
+        } // returned
+        let b = pool.get::<u8>(64);
+        let s = pool.stats();
+        assert_eq!(s.gets, 2);
+        assert_eq!(s.reuses, 1);
+        assert_eq!(s.returns, 1);
+        assert_eq!(b.len(), 64);
+        assert!((s.reuse_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_buffer_returns_when_last_clone_drops() {
+        let pool = BatchPool::new(8);
+        let mut lease = pool.get::<f32>(16);
+        lease[3] = 1.5;
+        let shared = lease.share();
+        let clone = shared.clone();
+        assert!(shared.ptr_eq(&clone), "clones alias one buffer");
+        assert_eq!(clone[3], 1.5);
+        drop(shared);
+        assert_eq!(pool.stats().returns, 0, "still one live handle");
+        drop(clone);
+        assert_eq!(pool.stats().returns, 1);
+        // And the next get reuses it.
+        let again = pool.get::<f32>(16);
+        assert_eq!(pool.stats().reuses, 1);
+        assert_eq!(again.len(), 16);
+    }
+
+    #[test]
+    fn resize_reuses_capacity_across_lengths() {
+        let pool = BatchPool::new(4);
+        drop(pool.get::<i32>(128));
+        let smaller = pool.get::<i32>(32);
+        assert_eq!(smaller.len(), 32);
+        assert_eq!(pool.stats().reuses, 1);
+    }
+
+    #[test]
+    fn shelf_capacity_bounds_retention() {
+        let pool = BatchPool::new(2);
+        let leases: Vec<_> = (0..5).map(|_| pool.get::<u8>(8)).collect();
+        drop(leases);
+        assert_eq!(pool.stats().returns, 5);
+        // Only 2 were shelved; 3 *concurrent* gets reuse exactly 2.
+        let held: Vec<_> = (0..3).map(|_| pool.get::<u8>(8)).collect();
+        assert_eq!(pool.stats().reuses, 2);
+        drop(held);
+    }
+
+    #[test]
+    fn buffers_outlive_a_dropped_pool() {
+        let pool = BatchPool::new(4);
+        let lease = pool.get::<u8>(16);
+        let shared = lease.share();
+        drop(pool);
+        assert_eq!(shared.len(), 16); // still readable; drop just frees
+    }
+
+    #[test]
+    fn from_vec_and_equality() {
+        let a = SharedBuf::from_vec(vec![1u8, 2, 3]);
+        let b = SharedBuf::from_vec(vec![1u8, 2, 3]);
+        assert_eq!(a, b);
+        assert!(!a.ptr_eq(&b));
+        assert_eq!(a.to_vec(), vec![1, 2, 3]);
+        assert_eq!(&a[1..], &[2, 3]);
+    }
+
+    #[test]
+    fn concurrent_get_share_drop_cycles() {
+        let pool = BatchPool::new(64);
+        let mut handles = Vec::new();
+        for t in 0..4u8 {
+            let pool = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                for round in 0..200usize {
+                    let mut lease = pool.get::<u8>(256);
+                    lease[round % 256] = t;
+                    let shared = lease.share();
+                    let clone = shared.clone();
+                    assert_eq!(clone[round % 256], t);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = pool.stats();
+        assert_eq!(s.gets, 800);
+        assert_eq!(s.returns, 800);
+        assert!(s.reuses > 700, "steady state must mostly reuse");
+    }
+}

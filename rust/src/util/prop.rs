@@ -40,11 +40,7 @@ where
             property(&mut rng);
         });
         if let Err(payload) = result {
-            let msg = payload
-                .downcast_ref::<String>()
-                .map(|s| s.as_str())
-                .or_else(|| payload.downcast_ref::<&str>().copied())
-                .unwrap_or("<non-string panic>");
+            let msg = crate::util::panic_message(&*payload);
             panic!(
                 "property '{name}' failed at case {case}/{cases} \
                  (replay with check_seeded(.., {seed:#x}, 1, ..)): {msg}"
