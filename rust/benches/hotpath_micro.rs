@@ -13,7 +13,10 @@ use dlio::loader::{
 };
 use dlio::metrics::LoadCounters;
 use dlio::net::{Fabric, FabricConfig};
-use dlio::sampler::{loc_partition, reg_partition, GlobalShuffler};
+use dlio::sampler::{
+    loc_partition, reg_partition, EpochScheme, GlobalShuffler,
+    PartitionPlanner, PlannerConfig, StepPlan,
+};
 use dlio::storage::{generate, ShardReader, StorageSystem, SyntheticSpec};
 use dlio::util::{Json, Queue, Rng};
 use std::sync::Arc;
@@ -43,6 +46,95 @@ fn main() {
     b.run("reg_partition/b32768_p256", || {
         black_box(reg_partition(black_box(&batch), 256));
     });
+
+    // --- Shared epoch-partition planner -------------------------------------
+    // (a) Direct plan computation: the flat-arena, binary-heap planner vs
+    // the sequential reference timed above on the SAME batch/directory.
+    let m_plan = b.run("planner/plan_loc_b32768_p256", || {
+        black_box(StepPlan::plan_loc(0, 0, black_box(&batch), &dir, 256));
+    });
+    b.record("planner/loc_plans_per_s", 1.0 / m_plan.mean_s, "plans/s");
+    let sample_plan = StepPlan::plan_loc(0, 0, &batch, &dir, 256);
+    b.record(
+        "planner/arena_bytes_b32768_p256",
+        sample_plan.arena_bytes() as f64,
+        "bytes",
+    );
+    b.record(
+        "planner/prov_runs_b32768_p256",
+        sample_plan.prov_runs().len() as f64,
+        "runs",
+    );
+    b.run("planner/plan_reg_b32768_p256", || {
+        black_box(StepPlan::plan_reg(0, 0, black_box(&batch), 256));
+    });
+
+    // (b) Live pipelined planner: a background thread plans a 256-learner
+    // job while this (training) thread consumes — the acceptance scenario
+    // for "partition work is off the critical path". Every plan is taken
+    // exactly once; zero partitions are ever computed on this thread.
+    let planner = PartitionPlanner::spawn(
+        PlannerConfig {
+            p: 256,
+            global_batch: 32_768,
+            lead: 8,
+            consumers: 1,
+            keep_partial: false,
+        },
+        GlobalShuffler::new(11, n_samples),
+        Arc::new(CacheDirectory::striped(n_samples, 256)),
+    );
+    let planner_steps = (n_samples as usize / 32_768) as u64;
+    let mut planner_epoch = 0u64;
+    let m_pipe = b.run("planner/pipeline_epoch_b32768_p256", || {
+        planner.begin_epoch(planner_epoch, EpochScheme::Loc);
+        let eplan = planner.epoch_plan(planner_epoch).unwrap();
+        for s in 0..eplan.steps() as u64 {
+            let plan = planner.get(planner_epoch, s).unwrap();
+            // Consume like a learner: borrow a slice, never clone.
+            black_box(plan.learner_ids((s as usize) % 256));
+        }
+        planner_epoch += 1;
+    });
+    b.record(
+        "planner/pipeline_plans_per_s",
+        planner_steps as f64 / m_pipe.mean_s,
+        "plans/s",
+    );
+    let ps = planner.snapshot();
+    b.record("planner/mean_lead_steps", ps.mean_lead_steps(), "steps");
+    b.record(
+        "planner/lead_steps_peak",
+        ps.lead_steps_peak as f64,
+        "steps",
+    );
+    b.record(
+        "planner/arena_bytes_peak",
+        ps.arena_bytes_peak as f64,
+        "bytes",
+    );
+    b.record("planner/immediate_share", ps.immediate_share(), "fraction");
+    b.record(
+        "planner/get_wait_s_per_plan",
+        if ps.plans_published == 0 {
+            0.0
+        } else {
+            ps.get_wait_s / ps.plans_published as f64
+        },
+        "s",
+    );
+    b.record(
+        "planner/critical_path_recomputes",
+        ps.critical_path_recomputes as f64,
+        "recomputes",
+    );
+    // In-binary regression guard (CI reruns it): with the planner, the
+    // training thread NEVER computes a partition.
+    assert_eq!(
+        ps.critical_path_recomputes, 0,
+        "partition work leaked back onto the consuming thread"
+    );
+    drop(planner);
 
     // --- Shuffler -----------------------------------------------------------
     let sh = GlobalShuffler::new(3, n_samples);
@@ -249,7 +341,11 @@ fn main() {
         };
         for step in first..first + window {
             loader
-                .submit(BatchRequest { epoch: 0, step, ids: ids_for(step) })
+                .submit(BatchRequest {
+                    epoch: 0,
+                    step,
+                    ids: ids_for(step).into(),
+                })
                 .unwrap();
         }
         for step in first..first + batches_per_epoch {
@@ -260,7 +356,7 @@ fn main() {
                     .submit(BatchRequest {
                         epoch: 0,
                         step: nxt,
-                        ids: ids_for(nxt),
+                        ids: ids_for(nxt).into(),
                     })
                     .unwrap();
             }

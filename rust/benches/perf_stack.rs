@@ -23,6 +23,7 @@ use dlio::loader::{
 use dlio::metrics::LoadCounters;
 use dlio::net::{Fabric, FabricConfig};
 use dlio::runtime::{default_artifacts_dir, Engine, HostTensor};
+use dlio::sampler::StepPlan;
 use dlio::storage::{generate, StorageSystem, SyntheticSpec};
 use dlio::util::Rng;
 use std::sync::Arc;
@@ -170,7 +171,11 @@ fn main() {
         };
         for step in first..first + window {
             loader
-                .submit(BatchRequest { epoch: 0, step, ids: ids_for(step) })
+                .submit(BatchRequest {
+                    epoch: 0,
+                    step,
+                    ids: ids_for(step).into(),
+                })
                 .unwrap();
         }
         for step in first..first + batches {
@@ -181,7 +186,7 @@ fn main() {
                     .submit(BatchRequest {
                         epoch: 0,
                         step: nxt,
-                        ids: ids_for(nxt),
+                        ids: ids_for(nxt).into(),
                     })
                     .unwrap();
             }
@@ -205,6 +210,34 @@ fn main() {
         "fraction",
     );
     loader.shutdown().unwrap();
+
+    // --- L3: partition-planning sweep ---------------------------------------
+    // Per-step planning cost vs learner count at the paper's target scales
+    // (the P=256/1024 scenarios): one 32k-sample global batch, striped
+    // directory. The planner pays this once per step per PROCESS on its
+    // background thread; before the shared planner, the job paid it P
+    // times per step on the training threads.
+    let n_plan = 1_000_000u64;
+    let mut prng = Rng::new(5);
+    let pbatch: Vec<u32> = (0..32_768)
+        .map(|_| prng.next_below(n_plan) as u32)
+        .collect();
+    for p in [64usize, 256, 1024] {
+        let pdir = CacheDirectory::striped(n_plan, p);
+        let m = b.run(&format!("planner/plan_loc_b32768_p{p}"), || {
+            black_box(StepPlan::plan_loc(0, 0, black_box(&pbatch), &pdir, p));
+        });
+        b.record(
+            &format!("planner/plans_per_s_p{p}"),
+            1.0 / m.mean_s,
+            "plans/s",
+        );
+        b.record(
+            &format!("planner/job_partition_work_saved_p{p}"),
+            m.mean_s * (p as f64 - 1.0),
+            "s/step",
+        );
+    }
 
     b.report("§Perf whole-stack");
     b.write_json("BENCH_perf_stack.json").unwrap();

@@ -61,7 +61,7 @@ fn main() -> Result<()> {
     for step in 0..batches {
         let ids: Vec<u32> =
             (0..b as u32).map(|i| (step as u32 * b as u32 + i) % 2048).collect();
-        loader.submit(BatchRequest { epoch: 0, step, ids })?;
+        loader.submit(BatchRequest { epoch: 0, step, ids: ids.into() })?;
     }
     let mut last = None;
     for step in 0..batches {

@@ -42,6 +42,15 @@ pub fn targets(loads: &[u64]) -> Vec<u64> {
 /// Algorithm 1: greedy 2-approximation transfer schedule taking each
 /// learner from `loads[j]` to `targets(loads)[j]`.
 pub fn balance(loads: &[u64]) -> Vec<Transfer> {
+    let mut schedule = Vec::new();
+    balance_into(loads, &mut schedule);
+    schedule
+}
+
+/// As [`balance`], appending into a caller-owned buffer (cleared first) so
+/// a per-step planner can reuse its schedule allocation across steps.
+pub fn balance_into(loads: &[u64], schedule: &mut Vec<Transfer>) {
+    schedule.clear();
     let tgt = targets(loads);
     // Max-heaps keyed on imbalance; ties broken on learner id for
     // determinism across replicas.
@@ -54,7 +63,6 @@ pub fn balance(loads: &[u64]) -> Vec<Transfer> {
             deficit.push((t - l, std::cmp::Reverse(j)));
         }
     }
-    let mut schedule = Vec::new();
     while let Some((s_imb, std::cmp::Reverse(s_id))) = surplus.pop() {
         let (d_imb, std::cmp::Reverse(d_id)) =
             deficit.pop().expect("surplus without matching deficit");
@@ -68,7 +76,6 @@ pub fn balance(loads: &[u64]) -> Vec<Transfer> {
         }
     }
     debug_assert!(deficit.is_empty(), "deficit left unserved");
-    schedule
 }
 
 /// Apply a schedule to a load vector (for verification and simulation).
@@ -116,6 +123,16 @@ mod tests {
         // load is to let Red load 2 samples from Green.")
         assert_eq!(schedule, vec![Transfer { from: 1, to: 0, amount: 2 }]);
         assert_eq!(moved(&schedule), 2);
+    }
+
+    #[test]
+    fn balance_into_reuses_buffer_and_matches() {
+        let loads = [2u64, 6, 4, 9, 1];
+        let mut buf = vec![Transfer { from: 9, to: 9, amount: 9 }];
+        balance_into(&loads, &mut buf);
+        assert_eq!(buf, balance(&loads), "buffer variant must be identical");
+        balance_into(&[5, 5], &mut buf);
+        assert!(buf.is_empty(), "buffer is cleared per call");
     }
 
     #[test]

@@ -6,8 +6,11 @@
 //!
 //! 1. every learner derives the same global mini-batch sequence
 //!    ([`sampler::GlobalShuffler`]),
-//! 2. partitions it — **Reg** (even block slices) or **Loc**
-//!    (locality-aware claims + Algorithm 1 balancing),
+//! 2. consumes its share of the step's partition — **Reg** (even block
+//!    slices) or **Loc** (locality-aware claims + Algorithm 1 balancing) —
+//!    from the shared [`PartitionPlanner`], which computes each plan once
+//!    per process on a background thread, `prefetch_batches` steps ahead
+//!    of training (DESIGN.md §8),
 //! 3. loads its share through its own multi-worker prefetching [`Loader`],
 //! 4. computes local gradients with the compiled `grad{B}` program,
 //! 5. all-reduces via [`GradSync`] (fabric-cost-charged),
@@ -28,11 +31,13 @@ pub use allreduce::GradSync;
 pub use checkpoint::Checkpoint;
 
 use crate::cache::{CacheDirectory, Policy, SampleCache};
-use crate::loader::{BatchRequest, FetchContext, Loader, LoaderConfig};
-use crate::metrics::{EpochReport, LoadCounters, LoadSnapshot};
+use crate::loader::{BatchIds, BatchRequest, FetchContext, Loader, LoaderConfig};
+use crate::metrics::{EpochReport, LoadCounters, LoadSnapshot, PlannerSnapshot};
 use crate::net::Fabric;
 use crate::runtime::{Engine, HostTensor};
-use crate::sampler::{loc_partition, reg_partition, EpochPlan, GlobalShuffler};
+use crate::sampler::{
+    EpochScheme, GlobalShuffler, PartitionPlanner, PlannerConfig,
+};
 use crate::storage::StorageSystem;
 use anyhow::{ensure, Context, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -114,6 +119,10 @@ pub struct TrainingReport {
     pub param_checksums: Vec<f64>,
     /// Mean seconds per grad execution (the measured V feed for the DES).
     pub mean_grad_exec_s: f64,
+    /// Shared-planner occupancy: plans are computed once per process; a
+    /// nonzero `critical_path_recomputes` would mean partition work leaked
+    /// back onto the training threads.
+    pub planner: PlannerSnapshot,
 }
 
 impl TrainingReport {
@@ -231,6 +240,21 @@ impl Trainer {
             })
             .collect();
         let directory = Arc::new(CacheDirectory::new(n));
+        // One shared partition planner for the whole job: every step's
+        // Loc/Reg partition is computed exactly once per process, on the
+        // planner's background thread, `prefetch_batches` steps ahead of
+        // training. Learners consume immutable Arc<StepPlan>s.
+        let planner = Arc::new(PartitionPlanner::spawn(
+            PlannerConfig {
+                p,
+                global_batch: cfg.global_batch(),
+                lead: cfg.loader.prefetch_batches.max(1),
+                consumers: p,
+                keep_partial: false,
+            },
+            shuffler,
+            Arc::clone(&directory),
+        ));
         let populate = Arc::new(AtomicBool::new(
             cfg.cache_capacity_bytes > 0 && cfg.sampler != SamplerKind::Reg,
         ));
@@ -264,7 +288,7 @@ impl Trainer {
                     let step_losses = Arc::clone(&step_losses);
                     let storage = Arc::clone(&self.storage);
                     let fabric = Arc::clone(&self.fabric);
-                    let shuffler = shuffler.clone();
+                    let planner = Arc::clone(&planner);
                     let grad_prog = Arc::clone(&grad_prog);
                     let pre_prog = Arc::clone(&pre_prog);
                     let sgd_prog = Arc::clone(&sgd_prog);
@@ -282,7 +306,7 @@ impl Trainer {
                             barrier,
                             accums,
                             step_losses,
-                            shuffler,
+                            planner,
                             grad_prog,
                             pre_prog,
                             sgd_prog,
@@ -355,6 +379,7 @@ impl Trainer {
             params: params0,
             param_checksums: checksums,
             mean_grad_exec_s: grad_prog.mean_exec_s(),
+            planner: planner.snapshot(),
         })
     }
 
@@ -408,7 +433,7 @@ struct LearnerEnv {
     barrier: Arc<Barrier>,
     accums: Arc<Mutex<Vec<EpochAccum>>>,
     step_losses: Arc<Mutex<Vec<f32>>>,
-    shuffler: GlobalShuffler,
+    planner: Arc<PartitionPlanner>,
     grad_prog: Arc<crate::runtime::Program>,
     pre_prog: Arc<crate::runtime::Program>,
     sgd_prog: Arc<crate::runtime::Program>,
@@ -429,13 +454,12 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
         barrier,
         accums,
         step_losses,
-        shuffler,
+        planner,
         grad_prog,
         pre_prog,
         sgd_prog,
         mut params,
     } = env;
-    let p = cfg.p;
     let counters = Arc::new(LoadCounters::new());
     let record_bytes = storage.meta().record_bytes();
     let n_params = params.len();
@@ -468,21 +492,36 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
             &loader_runtime,
         );
 
-        let plan = EpochPlan::new(&shuffler, epoch, cfg.global_batch());
-        let steps = plan.steps();
         let use_loc = cfg.sampler == SamplerKind::Loc && epoch > 0;
+        // Learner 0 kicks off this epoch's shared planning: all learners
+        // are past the previous epoch's trailing barriers, so for Loc
+        // epochs the directory is already frozen. Everyone then consumes
+        // the SAME epoch plan (one permutation per process, not p copies)
+        // and the same Arc<StepPlan>s.
+        if j == 0 {
+            planner.begin_epoch(
+                epoch,
+                if use_loc { EpochScheme::Loc } else { EpochScheme::Reg },
+            );
+        }
+        let steps = planner.epoch_plan(epoch)?.steps();
         let mut balance_moves = 0u64;
 
-        // Assignment for a given step (deterministic on every learner).
-        let assignment = |step: usize| -> (Vec<u32>, u64) {
-            let mb = plan.batch(step);
-            if use_loc {
-                let (parts, stats) =
-                    loc_partition(mb.sample_ids, &directory, p);
-                (parts[j].sample_ids.clone(), stats.balance_moves as u64)
-            } else {
-                (reg_partition(mb.sample_ids, p)[j].sample_ids.clone(), 0)
+        // Take this step's shared plan (once per learner per step): the
+        // request ids are a zero-clone slice of the plan arena, and the
+        // balance stats ride the same plan — no second partition, on any
+        // thread, for stats. Partition work happens once per step per
+        // PROCESS, on the planner thread, never here.
+        let submit_step = |s: usize, balance_moves: &mut u64| -> Result<()> {
+            let plan = planner.get(epoch, s as u64)?;
+            if j == 0 {
+                *balance_moves += plan.stats.balance_moves as u64;
             }
+            loader.submit(BatchRequest {
+                epoch,
+                step: s as u64,
+                ids: BatchIds::planned(plan, j),
+            })
         };
 
         let load_before = counters.snapshot();
@@ -492,8 +531,7 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
         // Prime the prefetch window.
         let window = cfg.loader.prefetch_batches.max(1).min(steps);
         for s in 0..window {
-            let (ids, _) = assignment(s);
-            loader.submit(BatchRequest { epoch, step: s as u64, ids })?;
+            submit_step(s, &mut balance_moves)?;
         }
 
         let (mut wait_s, mut train_s, mut sync_s) = (0.0f64, 0.0f64, 0.0f64);
@@ -503,19 +541,7 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
             wait_s += t_wait.elapsed().as_secs_f64();
             // Keep the window full.
             if step + window < steps {
-                let (ids, _) = assignment(step + window);
-                loader.submit(BatchRequest {
-                    epoch,
-                    step: (step + window) as u64,
-                    ids,
-                })?;
-            }
-            if use_loc {
-                // Count balancing traffic once (all learners compute the
-                // same stats; attribute to learner 0).
-                if j == 0 {
-                    balance_moves += assignment(step).1;
-                }
+                submit_step(step + window, &mut balance_moves)?;
             }
 
             // Local gradient. Borrowed args: no 14-MiB parameter clone

@@ -165,7 +165,7 @@ pub fn fig7(
                 let ids: Vec<u32> = (0..cfg.batch_size)
                     .map(|_| rng.next_below(n as u64) as u32)
                     .collect();
-                loader.submit(BatchRequest { epoch: 0, step, ids })?;
+                loader.submit(BatchRequest { epoch: 0, step, ids: ids.into() })?;
             }
             for step in 0..cfg.batches as u64 {
                 loader.next(step)?;

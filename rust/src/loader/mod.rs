@@ -37,6 +37,7 @@ pub use fetch::{DeferredBatch, FetchContext};
 pub use reorder::Reorder;
 
 use crate::runtime::{HostTensor, Program};
+use crate::sampler::StepPlan;
 use crate::storage::Sample;
 use crate::util::{
     panic_message, BatchPool, Executor, ExecutorStats, PoolStats, Queue, Rng,
@@ -100,13 +101,69 @@ impl LoaderRuntime {
     }
 }
 
+/// The sample ids of one batch request: either a caller-owned list or a
+/// zero-clone view into a shared [`StepPlan`] arena.
+///
+/// The planned variant is how the coordinator submits: every learner's
+/// request aliases the *same* published plan (`Arc` bump, no per-learner
+/// `sample_ids.clone()`); `Deref<Target = [u32]>` keeps downstream code
+/// slice-shaped either way.
+#[derive(Clone, Debug)]
+pub enum BatchIds {
+    /// Caller-owned id list (tests, benches, ad-hoc loads).
+    Owned(Vec<u32>),
+    /// Learner `learner`'s slice of a shared step plan.
+    Planned { plan: Arc<StepPlan>, learner: usize },
+}
+
+impl BatchIds {
+    /// View into a shared plan — the zero-clone path.
+    pub fn planned(plan: Arc<StepPlan>, learner: usize) -> BatchIds {
+        assert!(
+            learner < plan.p(),
+            "learner {learner} out of range for a {}-way plan",
+            plan.p()
+        );
+        BatchIds::Planned { plan, learner }
+    }
+
+    pub fn as_slice(&self) -> &[u32] {
+        match self {
+            BatchIds::Owned(v) => v,
+            BatchIds::Planned { plan, learner } => plan.learner_ids(*learner),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.as_slice().is_empty()
+    }
+}
+
+impl From<Vec<u32>> for BatchIds {
+    fn from(v: Vec<u32>) -> BatchIds {
+        BatchIds::Owned(v)
+    }
+}
+
+impl std::ops::Deref for BatchIds {
+    type Target = [u32];
+
+    fn deref(&self) -> &[u32] {
+        self.as_slice()
+    }
+}
+
 /// A batch-loading request: which samples (in order) make up this step's
 /// local batch.
 #[derive(Clone, Debug)]
 pub struct BatchRequest {
     pub epoch: u64,
     pub step: u64,
-    pub ids: Vec<u32>,
+    pub ids: BatchIds,
 }
 
 /// A loaded (and optionally preprocessed) local batch. The payload fields
@@ -116,7 +173,7 @@ pub struct BatchRequest {
 pub struct LoadedBatch {
     pub epoch: u64,
     pub step: u64,
-    pub ids: Vec<u32>,
+    pub ids: BatchIds,
     /// Raw records, concatenated in `ids` order (`B * record_bytes`).
     pub x_u8: SharedBuf<u8>,
     pub labels: SharedBuf<i32>,
@@ -507,7 +564,9 @@ mod tests {
         for step in 0..8u64 {
             let ids: Vec<u32> =
                 (0..16).map(|i| (step as u32 * 16 + i) % 256).collect();
-            loader.submit(BatchRequest { epoch: 0, step, ids }).unwrap();
+            loader
+                .submit(BatchRequest { epoch: 0, step, ids: ids.into() })
+                .unwrap();
         }
         for step in 0..8u64 {
             let b = loader.next(step).unwrap();
@@ -554,6 +613,50 @@ mod tests {
     }
 
     #[test]
+    fn planned_batch_ids_alias_the_shared_plan() {
+        use crate::sampler::StepPlan;
+        let ctx = make_ctx(128, "planned");
+        let loader = Loader::spawn(
+            LoaderConfig {
+                workers: 2,
+                threads_per_worker: 0,
+                prefetch_batches: 2,
+            },
+            Arc::clone(&ctx),
+            3072,
+            None,
+            0,
+            0.0,
+        );
+        // One shared plan, two learners: both requests alias one arena —
+        // no per-learner sample_ids clone anywhere.
+        let batch: Vec<u32> = (0..32).collect();
+        let plan = Arc::new(StepPlan::plan_reg(0, 0, &batch, 2));
+        for (step, learner) in [(0u64, 0usize), (1, 1)] {
+            loader
+                .submit(BatchRequest {
+                    epoch: 0,
+                    step,
+                    ids: BatchIds::planned(Arc::clone(&plan), learner),
+                })
+                .unwrap();
+        }
+        for (step, learner) in [(0u64, 0usize), (1, 1)] {
+            let b = loader.next(step).unwrap();
+            assert_eq!(&b.ids[..], plan.learner_ids(learner));
+            assert_eq!(
+                b.ids.as_slice().as_ptr(),
+                plan.learner_ids(learner).as_ptr(),
+                "planned ids must be the plan arena itself, not a copy"
+            );
+            let direct = ctx.storage.read_sample(b.ids[0]).unwrap();
+            assert_eq!(&b.x_u8[..3072], &direct.bytes[..]);
+            assert_eq!(b.labels[0], direct.label as i32);
+        }
+        loader.shutdown().unwrap();
+    }
+
+    #[test]
     fn flip_mask_is_deterministic_and_mixed() {
         let a = flip_for(1, 0, 42, 0.5);
         let b = flip_for(1, 0, 42, 0.5);
@@ -580,7 +683,7 @@ mod tests {
             0.0,
         );
         loader
-            .submit(BatchRequest { epoch: 0, step: 0, ids: vec![1000] })
+            .submit(BatchRequest { epoch: 0, step: 0, ids: vec![1000].into() })
             .unwrap();
         assert!(loader.next(0).is_err());
         loader.shutdown().unwrap();
@@ -615,7 +718,7 @@ mod tests {
                 .submit(BatchRequest {
                     epoch: 0,
                     step,
-                    ids: (0..8).collect(),
+                    ids: (0..8).collect::<Vec<u32>>().into(),
                 })
                 .unwrap();
         }
@@ -659,7 +762,11 @@ mod tests {
             };
             for step in first..first + window {
                 loader
-                    .submit(BatchRequest { epoch: 0, step, ids: ids_for(step) })
+                    .submit(BatchRequest {
+                        epoch: 0,
+                        step,
+                        ids: ids_for(step).into(),
+                    })
                     .unwrap();
             }
             for step in first..first + count {
@@ -670,7 +777,7 @@ mod tests {
                         .submit(BatchRequest {
                             epoch: 0,
                             step: next,
-                            ids: ids_for(next),
+                            ids: ids_for(next).into(),
                         })
                         .unwrap();
                 }
@@ -725,7 +832,7 @@ mod tests {
                     .submit(BatchRequest {
                         epoch: gen,
                         step,
-                        ids: (0..16).collect(),
+                        ids: (0..16).collect::<Vec<u32>>().into(),
                     })
                     .unwrap();
             }
@@ -792,7 +899,7 @@ mod tests {
                 .submit(BatchRequest {
                     epoch: 0,
                     step: 0,
-                    ids: (0..16).collect(),
+                    ids: (0..16).collect::<Vec<u32>>().into(),
                 })
                 .unwrap();
             loader.next(0).unwrap();

@@ -140,6 +140,106 @@ impl LoadSnapshot {
     }
 }
 
+/// Counters for the shared epoch-partition planner
+/// ([`crate::sampler::PartitionPlanner`]): one planner per process computes
+/// each step's partition once on a background thread; these meter that the
+/// partition work stays off the training critical path.
+#[derive(Default)]
+pub struct PlannerCounters {
+    /// Step plans published by the background planner thread.
+    pub plans_published: AtomicU64,
+    /// Nanoseconds the background thread spent computing plans (off the
+    /// training critical path by construction).
+    pub plan_ns: AtomicU64,
+    /// Nanoseconds learner threads spent blocked in `get` waiting for a
+    /// plan — the only partition cost that can reach the critical path.
+    pub get_wait_ns: AtomicU64,
+    /// Plan requests served without blocking (plan already published).
+    pub gets_immediate: AtomicU64,
+    /// Plan requests that had to block until the planner caught up.
+    pub gets_blocked: AtomicU64,
+    /// Partitions recomputed synchronously on a *calling* (training)
+    /// thread: ticked when a plan is requested after the board retired it
+    /// — i.e. some thread consumed a step's plan more than once, the
+    /// legacy per-step double-compute pattern. The planner serves such
+    /// requests by recomputing inline, so this meters exactly the work
+    /// the planner exists to remove; `hotpath_micro`/CI assert zero.
+    pub critical_path_recomputes: AtomicU64,
+    /// Sum over publishes of how many steps ahead of the fully-consumed
+    /// frontier the planner was (mean lead = sum / plans_published).
+    pub lead_steps_sum: AtomicU64,
+    /// Peak lead observed at publish time.
+    pub lead_steps_peak: AtomicU64,
+    /// Peak bytes held by published, not-yet-retired plan arenas.
+    pub arena_bytes_peak: AtomicU64,
+    /// Epoch plans (shared permutations) built — one per epoch per process.
+    pub epochs_planned: AtomicU64,
+}
+
+impl PlannerCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Monotonic max update for the peak gauges.
+    pub fn raise_peak(gauge: &AtomicU64, value: u64) {
+        gauge.fetch_max(value, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> PlannerSnapshot {
+        PlannerSnapshot {
+            plans_published: self.plans_published.load(Ordering::Relaxed),
+            plan_s: self.plan_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            get_wait_s: self.get_wait_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            gets_immediate: self.gets_immediate.load(Ordering::Relaxed),
+            gets_blocked: self.gets_blocked.load(Ordering::Relaxed),
+            critical_path_recomputes: self
+                .critical_path_recomputes
+                .load(Ordering::Relaxed),
+            lead_steps_sum: self.lead_steps_sum.load(Ordering::Relaxed),
+            lead_steps_peak: self.lead_steps_peak.load(Ordering::Relaxed),
+            arena_bytes_peak: self.arena_bytes_peak.load(Ordering::Relaxed),
+            epochs_planned: self.epochs_planned.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Immutable snapshot of [`PlannerCounters`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PlannerSnapshot {
+    pub plans_published: u64,
+    pub plan_s: f64,
+    pub get_wait_s: f64,
+    pub gets_immediate: u64,
+    pub gets_blocked: u64,
+    pub critical_path_recomputes: u64,
+    pub lead_steps_sum: u64,
+    pub lead_steps_peak: u64,
+    pub arena_bytes_peak: u64,
+    pub epochs_planned: u64,
+}
+
+impl PlannerSnapshot {
+    /// Mean steps of lead the planner held at publish time.
+    pub fn mean_lead_steps(&self) -> f64 {
+        if self.plans_published == 0 {
+            0.0
+        } else {
+            self.lead_steps_sum as f64 / self.plans_published as f64
+        }
+    }
+
+    /// Fraction of plan requests that found their plan already published.
+    pub fn immediate_share(&self) -> f64 {
+        let total = self.gets_immediate + self.gets_blocked;
+        if total == 0 {
+            1.0
+        } else {
+            self.gets_immediate as f64 / total as f64
+        }
+    }
+}
+
 /// Per-epoch report — one row of Fig. 1/8/12-style output.
 #[derive(Clone, Debug, Default)]
 pub struct EpochReport {
@@ -325,6 +425,26 @@ mod tests {
         assert_eq!(d.copied_bytes, 3072);
         assert!((d.bytes_copied_per_sample() - 3072.0).abs() < 1e-9);
         assert_eq!(LoadSnapshot::default().bytes_copied_per_sample(), 0.0);
+    }
+
+    #[test]
+    fn planner_counters_snapshot_and_derived() {
+        let c = PlannerCounters::new();
+        assert_eq!(c.snapshot().critical_path_recomputes, 0);
+        assert_eq!(c.snapshot().immediate_share(), 1.0);
+        c.plans_published.fetch_add(4, Ordering::Relaxed);
+        c.lead_steps_sum.fetch_add(8, Ordering::Relaxed);
+        PlannerCounters::raise_peak(&c.lead_steps_peak, 3);
+        PlannerCounters::raise_peak(&c.lead_steps_peak, 2);
+        c.gets_immediate.fetch_add(3, Ordering::Relaxed);
+        c.gets_blocked.fetch_add(1, Ordering::Relaxed);
+        c.plan_ns.fetch_add(2_000_000_000, Ordering::Relaxed);
+        let s = c.snapshot();
+        assert_eq!(s.plans_published, 4);
+        assert_eq!(s.lead_steps_peak, 3, "peak is a monotonic max");
+        assert!((s.mean_lead_steps() - 2.0).abs() < 1e-12);
+        assert!((s.immediate_share() - 0.75).abs() < 1e-12);
+        assert!((s.plan_s - 2.0).abs() < 1e-12);
     }
 
     #[test]

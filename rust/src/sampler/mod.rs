@@ -10,10 +10,18 @@
 //!   claims the samples of the global mini-batch that its local cache
 //!   holds, cache misses are assigned to the least-loaded learners, and
 //!   Algorithm 1 then balances the loads (Fig. 5, §V-A).
+//! * [`PartitionPlanner`] — the shared epoch-partition planner: one
+//!   background thread per process computes each step's partition once
+//!   (into a flat-arena [`StepPlan`]) and all learner threads consume it,
+//!   taking the O(p·B) redundant sampler work off the step critical path.
 
 pub mod plan;
+pub mod planner;
 
 pub use plan::{EpochPlan, MiniBatch};
+pub use planner::{
+    EpochScheme, PartitionPlanner, PlanKind, PlannerConfig, ProvRun, StepPlan,
+};
 
 use crate::cache::CacheDirectory;
 use crate::util::rng::Rng;
@@ -67,6 +75,24 @@ pub fn reg_partition(batch: &[u32], p: usize) -> Vec<Assignment> {
     }
     debug_assert_eq!(cursor, batch.len());
     out
+}
+
+/// Learner `j`'s contiguous index range of a Reg split, by offset math
+/// alone — no `Vec<Assignment>` allocation, no per-learner clone. Exactly
+/// the range `reg_partition(batch, p)[j]` covers.
+pub fn reg_partition_range(len: usize, p: usize, j: usize) -> std::ops::Range<usize> {
+    assert!(p > 0);
+    assert!(j < p, "learner {j} out of range for p={p}");
+    let base = len / p;
+    let rem = len % p;
+    let lo = j * base + j.min(rem);
+    let hi = lo + base + usize::from(j < rem);
+    lo..hi
+}
+
+/// Learner `j`'s Reg share as a zero-copy slice of the global mini-batch.
+pub fn reg_partition_slice(batch: &[u32], p: usize, j: usize) -> &[u32] {
+    &batch[reg_partition_range(batch.len(), p, j)]
 }
 
 /// Where a Loc sample comes from, for accounting and for the loader.
@@ -240,6 +266,28 @@ mod tests {
         let sizes: Vec<usize> =
             parts.iter().map(|a| a.sample_ids.len()).collect();
         assert_eq!(sizes, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn reg_partition_slice_matches_reg_partition() {
+        prop::check("reg slice equals allocated partition", 120, |rng| {
+            let p = 1 + rng.next_below(12) as usize;
+            let len = rng.next_below(200) as usize + p; // at least p samples
+            let batch: Vec<u32> = (0..len as u32).map(|i| i * 7).collect();
+            let parts = reg_partition(&batch, p);
+            let mut cursor = 0usize;
+            for (j, part) in parts.iter().enumerate() {
+                let r = reg_partition_range(len, p, j);
+                assert_eq!(r.start, cursor, "ranges must tile the batch");
+                assert_eq!(
+                    reg_partition_slice(&batch, p, j),
+                    &part.sample_ids[..],
+                    "slice j={j} diverges from reg_partition"
+                );
+                cursor = r.end;
+            }
+            assert_eq!(cursor, len);
+        });
     }
 
     fn striped_directory(n: u32, p: usize) -> CacheDirectory {

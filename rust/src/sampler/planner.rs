@@ -1,0 +1,1003 @@
+//! Shared epoch-partition planner: compute Loc/Reg assignments **once**
+//! per process, off the training critical path.
+//!
+//! The paper's locality-aware scheme (§V-A, Algorithm 1) lets every
+//! learner derive the *same* partition from the replicated directory with
+//! no communication. Deriving it on every learner is what makes the
+//! scheme coordination-free across *nodes* — but inside one process it is
+//! pure redundancy: p learner threads recomputing an identical
+//! O(B + misses·log p + p log p) plan every step puts O(p·B) sampler work
+//! on the step critical path. The [`PartitionPlanner`] moves that work to
+//! one dedicated background thread per job:
+//!
+//! * the planner computes each step's partition exactly once, staying up
+//!   to `lead` steps ahead of training (the same pipelining idea as the
+//!   loader's prefetch window), and publishes immutable [`Arc<StepPlan>`]s;
+//! * learner threads `get(epoch, step)` a shared plan — a lock-light
+//!   hand-off that in steady state finds the plan already published;
+//! * a [`StepPlan`] stores all assignments in a single flat arena
+//!   (`Vec<u32>` + per-learner offsets + run-length-encoded provenance)
+//!   instead of `Vec<Vec<(u32, Provenance)>>`, so each learner's share is
+//!   a zero-clone `&[u32]` slice of one allocation;
+//! * the epoch permutation is built once per process and shared as an
+//!   [`Arc<EpochPlan>`] (previously each learner materialized its own
+//!   full-dataset copy);
+//! * [`LocStats`] (balance-move counts etc.) fall out of planning as a
+//!   byproduct, killing the coordinator's old duplicate
+//!   `loc_partition` recompute for stats.
+//!
+//! DESIGN.md §8 documents the lifecycle and why per-process planning is
+//! sound here while the paper's per-node planning remains the model in
+//! `sim/`.
+
+use super::{
+    reg_partition_range, EpochPlan, GlobalShuffler, LocAssignment, LocStats,
+    Provenance,
+};
+use crate::balance::{self, Transfer};
+use crate::cache::CacheDirectory;
+use crate::metrics::{PlannerCounters, PlannerSnapshot};
+use anyhow::{bail, ensure, Result};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Which partitioning scheme a plan was computed under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanKind {
+    /// Even contiguous slices of the global mini-batch (Fig. 4).
+    Reg,
+    /// Locality-aware claims + Algorithm 1 balancing (Fig. 5, §V-A).
+    Loc,
+}
+
+/// The scheme the planner runs for one epoch (the coordinator plans Reg
+/// during the Loc population epoch, Loc afterwards).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EpochScheme {
+    Reg,
+    Loc,
+}
+
+/// One run-length-encoded provenance span over the assignment arena:
+/// arena positions `[prev_run.end, end)` all carry `prov`. Loc claims are
+/// naturally runny (a learner's local hits, then its storage fills, then
+/// balanced-in tails), so this is far denser than one tag per sample.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProvRun {
+    /// Exclusive end position of the run in the arena.
+    pub end: u32,
+    pub prov: Provenance,
+}
+
+/// One step's partition for *all* learners, in a single flat arena.
+///
+/// Learner `j`'s share is the contiguous slice
+/// `ids[offsets[j]..offsets[j+1]]` — callers borrow it zero-clone via
+/// [`StepPlan::learner_ids`]. Provenance is run-length encoded over the
+/// same positions. Immutable once published; shared as `Arc<StepPlan>`.
+#[derive(Debug)]
+pub struct StepPlan {
+    pub epoch: u64,
+    pub step: u64,
+    pub kind: PlanKind,
+    /// Partition statistics (zeros for Reg plans) — the coordinator reads
+    /// `stats.balance_moves` here instead of re-partitioning.
+    pub stats: LocStats,
+    ids: Vec<u32>,
+    /// `p + 1` fenceposts into `ids`.
+    offsets: Vec<u32>,
+    /// RLE provenance covering the whole arena (empty iff the arena is).
+    prov_runs: Vec<ProvRun>,
+}
+
+impl StepPlan {
+    /// Number of learners this plan partitions across.
+    pub fn p(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Total samples in the plan (the global mini-batch size).
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Learner `j`'s arena range.
+    pub fn learner_range(&self, j: usize) -> std::ops::Range<usize> {
+        self.offsets[j] as usize..self.offsets[j + 1] as usize
+    }
+
+    /// Learner `j`'s sample ids — a zero-clone slice of the shared arena.
+    pub fn learner_ids(&self, j: usize) -> &[u32] {
+        &self.ids[self.learner_range(j)]
+    }
+
+    /// Provenance of the sample at arena position `i`.
+    pub fn provenance_at(&self, i: usize) -> Provenance {
+        debug_assert!(i < self.ids.len(), "arena position out of range");
+        let k = self.prov_runs.partition_point(|r| (r.end as usize) <= i);
+        self.prov_runs[k].prov
+    }
+
+    /// Learner `j`'s per-sample provenance, materialized (test/compat
+    /// path; hot paths should walk [`StepPlan::prov_runs`] instead).
+    pub fn learner_provenance(&self, j: usize) -> Vec<Provenance> {
+        self.learner_range(j).map(|i| self.provenance_at(i)).collect()
+    }
+
+    /// The raw provenance runs.
+    pub fn prov_runs(&self) -> &[ProvRun] {
+        &self.prov_runs
+    }
+
+    /// Heap bytes held by the plan arena (occupancy metric for benches).
+    pub fn arena_bytes(&self) -> usize {
+        self.ids.len() * std::mem::size_of::<u32>()
+            + self.offsets.len() * std::mem::size_of::<u32>()
+            + self.prov_runs.len() * std::mem::size_of::<ProvRun>()
+    }
+
+    /// Expand back into the legacy per-learner representation (tests and
+    /// equivalence checks against `loc_partition`).
+    pub fn to_loc_assignments(&self) -> Vec<LocAssignment> {
+        (0..self.p())
+            .map(|j| LocAssignment {
+                sample_ids: self.learner_ids(j).to_vec(),
+                provenance: self.learner_provenance(j),
+            })
+            .collect()
+    }
+
+    /// Plan one step under **Reg**: even contiguous slices, by offset math
+    /// over a single copy of the batch (no per-learner allocation).
+    /// Identical to [`super::reg_partition`] output.
+    pub fn plan_reg(epoch: u64, step: u64, batch: &[u32], p: usize) -> StepPlan {
+        assert!(p > 0);
+        let mut offsets = Vec::with_capacity(p + 1);
+        offsets.push(0u32);
+        for j in 0..p {
+            offsets.push(reg_partition_range(batch.len(), p, j).end as u32);
+        }
+        let prov_runs = if batch.is_empty() {
+            Vec::new()
+        } else {
+            // Reg provenance is not meaningful (the fetch path decides the
+            // byte source); tag the whole arena Storage for uniformity.
+            vec![ProvRun { end: batch.len() as u32, prov: Provenance::Storage }]
+        };
+        StepPlan {
+            epoch,
+            step,
+            kind: PlanKind::Reg,
+            stats: LocStats::default(),
+            ids: batch.to_vec(),
+            offsets,
+            prov_runs,
+        }
+    }
+
+    /// Plan one step under **Loc**. Bit-identical to
+    /// [`super::loc_partition`] (assignments, provenance and stats) but
+    /// with the least-loaded miss assignment on a binary heap —
+    /// O(misses·log p) instead of the reference's O(misses·p) scan.
+    pub fn plan_loc(
+        epoch: u64,
+        step: u64,
+        batch: &[u32],
+        dir: &CacheDirectory,
+        p: usize,
+    ) -> StepPlan {
+        PlanScratch::default().plan_loc(epoch, step, batch, dir, p)
+    }
+}
+
+/// Reusable working memory for Loc planning: the planner thread plans
+/// hundreds of steps per epoch; steady state allocates only the published
+/// arena, never the scratch.
+#[derive(Default)]
+struct PlanScratch {
+    claims: Vec<Vec<(u32, Provenance)>>,
+    misses: Vec<u32>,
+    loads: Vec<u64>,
+    heap: BinaryHeap<Reverse<(usize, usize)>>,
+    schedule: Vec<Transfer>,
+}
+
+impl PlanScratch {
+    fn plan_loc(
+        &mut self,
+        epoch: u64,
+        step: u64,
+        batch: &[u32],
+        dir: &CacheDirectory,
+        p: usize,
+    ) -> StepPlan {
+        assert!(p > 0);
+        if self.claims.len() != p {
+            self.claims.clear();
+            self.claims.resize_with(p, Vec::new);
+        }
+        for c in &mut self.claims {
+            c.clear();
+        }
+        self.misses.clear();
+
+        // Step 1: cache owners claim their samples (same replicated
+        // directory on every learner — no communication).
+        for &s in batch {
+            match dir.owner(s) {
+                Some(owner) => {
+                    debug_assert!(owner < p, "directory owner out of range");
+                    self.claims[owner].push((s, Provenance::LocalCache));
+                }
+                None => self.misses.push(s),
+            }
+        }
+        let mut stats = LocStats {
+            local_hits: batch.len() - self.misses.len(),
+            storage_misses: self.misses.len(),
+            ..Default::default()
+        };
+
+        // Step 2: each miss to the least-loaded learner. A binary heap of
+        // (load, learner) with every learner present exactly once pops the
+        // same (len, j)-minimum as the reference's linear scan — ties
+        // break on learner index — in O(log p) per miss.
+        self.heap.clear();
+        for (j, c) in self.claims.iter().enumerate() {
+            self.heap.push(Reverse((c.len(), j)));
+        }
+        let misses = std::mem::take(&mut self.misses);
+        for &s in &misses {
+            let Reverse((load, j)) =
+                self.heap.pop().expect("heap holds every learner");
+            self.claims[j].push((s, Provenance::Storage));
+            self.heap.push(Reverse((load + 1, j)));
+        }
+        self.misses = misses; // keep the capacity for the next step
+
+        // Step 3: Algorithm 1 balancing, into the reused schedule buffer.
+        self.loads.clear();
+        for c in &self.claims {
+            self.loads.push(c.len() as u64);
+        }
+        let mut schedule = std::mem::take(&mut self.schedule);
+        balance::balance_into(&self.loads, &mut schedule);
+        for t in &schedule {
+            for _ in 0..t.amount {
+                let (s, prov) =
+                    self.claims[t.from].pop().expect("surplus underflow");
+                // A sample that was going to be read from storage anyway
+                // keeps Storage provenance (the receiver reads it); cached
+                // samples become remote-cache transfers.
+                let new_prov = match prov {
+                    Provenance::Storage => Provenance::Storage,
+                    _ => {
+                        stats.balance_moves += 1;
+                        Provenance::RemoteCache { from: t.from }
+                    }
+                };
+                self.claims[t.to].push((s, new_prov));
+            }
+        }
+        self.schedule = schedule;
+
+        // Flatten into the published arena: learners contiguous, RLE
+        // provenance over the same positions.
+        let total = batch.len();
+        let mut ids = Vec::with_capacity(total);
+        let mut offsets = Vec::with_capacity(p + 1);
+        let mut prov_runs: Vec<ProvRun> = Vec::new();
+        offsets.push(0u32);
+        for c in &self.claims {
+            for &(s, prov) in c.iter() {
+                ids.push(s);
+                match prov_runs.last_mut() {
+                    Some(run) if run.prov == prov => run.end = ids.len() as u32,
+                    _ => prov_runs
+                        .push(ProvRun { end: ids.len() as u32, prov }),
+                }
+            }
+            offsets.push(ids.len() as u32);
+        }
+        debug_assert_eq!(ids.len(), total, "arena must cover the batch");
+        StepPlan {
+            epoch,
+            step,
+            kind: PlanKind::Loc,
+            stats,
+            ids,
+            offsets,
+            prov_runs,
+        }
+    }
+}
+
+/// Planner tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct PlannerConfig {
+    /// Learners the partition splits across.
+    pub p: usize,
+    /// Global mini-batch size (`p × local_batch`).
+    pub global_batch: usize,
+    /// How many steps ahead of the fully-consumed frontier the planner
+    /// runs (mirrors the loader's `prefetch_batches`).
+    pub lead: usize,
+    /// How many `get` calls retire a step from the hand-off board
+    /// (the coordinator passes `p`: every learner takes each plan once).
+    pub consumers: usize,
+    /// Keep a trailing partial batch (see [`EpochPlan::with_partial`]).
+    pub keep_partial: bool,
+}
+
+/// Per-epoch publication state on the hand-off board.
+struct EpochState {
+    epoch: u64,
+    scheme: EpochScheme,
+    eplan: Arc<EpochPlan>,
+    steps: u64,
+    published: HashMap<u64, Arc<StepPlan>>,
+    taken: HashMap<u64, usize>,
+    retired: Vec<bool>,
+    /// Next step the planner thread will publish.
+    next_publish: u64,
+    /// Lowest step not yet retired by all consumers.
+    floor: u64,
+    arena_bytes_live: u64,
+}
+
+impl EpochState {
+    fn new(epoch: u64, scheme: EpochScheme, eplan: Arc<EpochPlan>) -> EpochState {
+        let steps = eplan.steps() as u64;
+        EpochState {
+            epoch,
+            scheme,
+            eplan,
+            steps,
+            published: HashMap::new(),
+            taken: HashMap::new(),
+            retired: vec![false; steps as usize],
+            next_publish: 0,
+            floor: 0,
+            arena_bytes_live: 0,
+        }
+    }
+
+    /// Hand out the published plan for `step`, retiring it from the board
+    /// after the last consumer (the `Arc` keeps it alive for holders).
+    /// Returns `(plan, retired)`; `None` if not yet published.
+    fn take(
+        &mut self,
+        step: u64,
+        consumers: usize,
+    ) -> Option<(Arc<StepPlan>, bool)> {
+        let plan = Arc::clone(self.published.get(&step)?);
+        let taken = self.taken.entry(step).or_insert(0);
+        *taken += 1;
+        if *taken < consumers {
+            return Some((plan, false));
+        }
+        self.taken.remove(&step);
+        self.published.remove(&step);
+        self.retired[step as usize] = true;
+        self.arena_bytes_live = self
+            .arena_bytes_live
+            .saturating_sub(plan.arena_bytes() as u64);
+        while (self.floor as usize) < self.retired.len()
+            && self.retired[self.floor as usize]
+        {
+            self.floor += 1;
+        }
+        Some((plan, true))
+    }
+}
+
+struct Board {
+    state: Option<EpochState>,
+    pending: Option<(u64, EpochScheme)>,
+    closed: bool,
+}
+
+struct Shared {
+    board: Mutex<Board>,
+    cv: Condvar,
+    counters: PlannerCounters,
+    directory: Arc<CacheDirectory>,
+    shuffler: GlobalShuffler,
+    cfg: PlannerConfig,
+}
+
+/// One planner per job: a dedicated background thread computes each
+/// step's partition once per process and publishes immutable
+/// [`Arc<StepPlan>`]s that all learner threads consume.
+pub struct PartitionPlanner {
+    shared: Arc<Shared>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PartitionPlanner {
+    pub fn spawn(
+        cfg: PlannerConfig,
+        shuffler: GlobalShuffler,
+        directory: Arc<CacheDirectory>,
+    ) -> PartitionPlanner {
+        assert!(cfg.p > 0, "planner needs at least one learner");
+        assert!(cfg.consumers > 0, "planner needs at least one consumer");
+        assert!(cfg.global_batch > 0, "global batch must be positive");
+        let shared = Arc::new(Shared {
+            board: Mutex::new(Board {
+                state: None,
+                pending: None,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            counters: PlannerCounters::new(),
+            directory,
+            shuffler,
+            cfg,
+        });
+        let thread_shared = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name("dlio-planner".into())
+            .spawn(move || planner_thread(thread_shared))
+            .expect("spawn partition planner");
+        PartitionPlanner { shared, handle: Some(handle) }
+    }
+
+    /// Start planning `epoch` under `scheme`. Called once per epoch by a
+    /// single thread (the coordinator uses learner 0, after the epoch
+    /// barrier — so for Loc epochs the directory is already frozen).
+    pub fn begin_epoch(&self, epoch: u64, scheme: EpochScheme) {
+        let mut board = self.shared.board.lock().unwrap();
+        assert!(
+            board.pending.is_none(),
+            "begin_epoch called before the previous request was planned"
+        );
+        board.pending = Some((epoch, scheme));
+        drop(board);
+        self.shared.cv.notify_all();
+    }
+
+    /// The shared epoch permutation — one `Arc<EpochPlan>` per epoch per
+    /// process (learners no longer materialize private copies). Blocks
+    /// until the planner has built it.
+    pub fn epoch_plan(&self, epoch: u64) -> Result<Arc<EpochPlan>> {
+        let mut board = self.shared.board.lock().unwrap();
+        loop {
+            ensure!(!board.closed, "partition planner closed");
+            if let Some(st) = &board.state {
+                if st.epoch == epoch {
+                    return Ok(Arc::clone(&st.eplan));
+                }
+                ensure!(
+                    st.epoch < epoch,
+                    "epoch {epoch} plan requested after epoch {} began",
+                    st.epoch
+                );
+            }
+            board = self.shared.cv.wait(board).unwrap();
+        }
+    }
+
+    /// Take the shared plan for `(epoch, step)`. In steady state the plan
+    /// is already published and this is a map lookup under one short lock;
+    /// each step is retired from the board after `consumers` takes (the
+    /// `Arc` keeps it alive for whoever still holds it).
+    ///
+    /// Requesting a step the board has already retired — every consumer
+    /// took it once and someone is asking *again*, the legacy
+    /// double-consume pattern — is served correctly by recomputing the
+    /// partition inline, but metered in `critical_path_recomputes`: that
+    /// is partition work on the calling thread, exactly what the planner
+    /// exists to prevent, and benches/CI fail if it ever goes nonzero.
+    pub fn get(&self, epoch: u64, step: u64) -> Result<Arc<StepPlan>> {
+        enum Served {
+            Published(Arc<StepPlan>, bool),
+            Retired(Arc<EpochPlan>, EpochScheme),
+        }
+        let shared = &self.shared;
+        let mut waited: Option<Instant> = None;
+        let mut board = shared.board.lock().unwrap();
+        let served = loop {
+            ensure!(!board.closed, "partition planner closed");
+            if let Some(st) = board.state.as_mut() {
+                if st.epoch > epoch {
+                    bail!(
+                        "plan for epoch {epoch} step {step} requested after \
+                         epoch {} began",
+                        st.epoch
+                    );
+                }
+                if st.epoch == epoch {
+                    ensure!(
+                        step < st.steps,
+                        "step {step} out of range for epoch {epoch} \
+                         ({} steps)",
+                        st.steps
+                    );
+                    if let Some((plan, retired)) =
+                        st.take(step, shared.cfg.consumers)
+                    {
+                        break Served::Published(plan, retired);
+                    }
+                    if st.retired[step as usize] {
+                        break Served::Retired(
+                            Arc::clone(&st.eplan),
+                            st.scheme,
+                        );
+                    }
+                }
+            }
+            if waited.is_none() {
+                waited = Some(Instant::now());
+            }
+            board = shared.cv.wait(board).unwrap();
+        };
+        drop(board);
+        let c = &shared.counters;
+        match waited {
+            None => {
+                c.gets_immediate.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(t0) => {
+                c.gets_blocked.fetch_add(1, Ordering::Relaxed);
+                let ns = t0.elapsed().as_nanos() as u64;
+                c.get_wait_ns.fetch_add(ns, Ordering::Relaxed);
+            }
+        }
+        match served {
+            Served::Published(plan, retired) => {
+                if retired {
+                    // The publish window may have opened.
+                    shared.cv.notify_all();
+                }
+                Ok(plan)
+            }
+            Served::Retired(eplan, scheme) => {
+                c.critical_path_recomputes.fetch_add(1, Ordering::Relaxed);
+                let mb = eplan.batch(step as usize);
+                let plan = match scheme {
+                    EpochScheme::Reg => StepPlan::plan_reg(
+                        epoch,
+                        step,
+                        mb.sample_ids,
+                        shared.cfg.p,
+                    ),
+                    EpochScheme::Loc => StepPlan::plan_loc(
+                        epoch,
+                        step,
+                        mb.sample_ids,
+                        &shared.directory,
+                        shared.cfg.p,
+                    ),
+                };
+                Ok(Arc::new(plan))
+            }
+        }
+    }
+
+    /// Planner health/occupancy counters (lead, wait, recompute guards).
+    pub fn snapshot(&self) -> PlannerSnapshot {
+        self.shared.counters.snapshot()
+    }
+
+    /// Raw counters (for callers that meter deltas).
+    pub fn counters(&self) -> &PlannerCounters {
+        &self.shared.counters
+    }
+
+    /// Stop the background thread; blocked `get`s error out.
+    pub fn close(&self) {
+        let mut board = self.shared.board.lock().unwrap();
+        board.closed = true;
+        drop(board);
+        self.shared.cv.notify_all();
+    }
+}
+
+impl Drop for PartitionPlanner {
+    fn drop(&mut self) {
+        self.close();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn planner_thread(shared: Arc<Shared>) {
+    let mut scratch = PlanScratch::default();
+    loop {
+        // Wait for the next epoch request (or shutdown).
+        let (epoch, scheme) = {
+            let mut board = shared.board.lock().unwrap();
+            loop {
+                if board.closed {
+                    return;
+                }
+                if let Some(req) = board.pending.take() {
+                    break req;
+                }
+                board = shared.cv.wait(board).unwrap();
+            }
+        };
+
+        // Build the epoch permutation once per process and publish it.
+        let eplan = Arc::new(
+            EpochPlan::new(&shared.shuffler, epoch, shared.cfg.global_batch)
+                .with_partial(shared.cfg.keep_partial),
+        );
+        shared.counters.epochs_planned.fetch_add(1, Ordering::Relaxed);
+        let steps = {
+            let mut board = shared.board.lock().unwrap();
+            if board.closed {
+                return;
+            }
+            let st = EpochState::new(epoch, scheme, Arc::clone(&eplan));
+            let steps = st.steps;
+            board.state = Some(st);
+            drop(board);
+            shared.cv.notify_all();
+            steps
+        };
+
+        let capacity = shared.cfg.lead.max(1) as u64;
+        for step in 0..steps {
+            // Window gate: stay at most `lead` unretired steps ahead.
+            {
+                let mut board = shared.board.lock().unwrap();
+                loop {
+                    if board.closed {
+                        return;
+                    }
+                    let st = board.state.as_ref().expect("epoch state set");
+                    if st.next_publish < st.floor + capacity {
+                        break;
+                    }
+                    board = shared.cv.wait(board).unwrap();
+                }
+            }
+
+            // Compute OUTSIDE the lock — this is the partition work the
+            // training threads no longer do.
+            let mb = eplan.batch(step as usize);
+            let t0 = Instant::now();
+            let plan = Arc::new(match scheme {
+                EpochScheme::Reg => {
+                    StepPlan::plan_reg(epoch, step, mb.sample_ids, shared.cfg.p)
+                }
+                EpochScheme::Loc => scratch.plan_loc(
+                    epoch,
+                    step,
+                    mb.sample_ids,
+                    &shared.directory,
+                    shared.cfg.p,
+                ),
+            });
+            let plan_ns = t0.elapsed().as_nanos() as u64;
+            shared.counters.plan_ns.fetch_add(plan_ns, Ordering::Relaxed);
+            let arena = plan.arena_bytes() as u64;
+
+            let mut board = shared.board.lock().unwrap();
+            if board.closed {
+                return;
+            }
+            let c = &shared.counters;
+            let st = board.state.as_mut().expect("epoch state set");
+            st.published.insert(step, plan);
+            st.next_publish = step + 1;
+            st.arena_bytes_live += arena;
+            PlannerCounters::raise_peak(&c.arena_bytes_peak, st.arena_bytes_live);
+            let lead_now = st.next_publish - st.floor;
+            c.plans_published.fetch_add(1, Ordering::Relaxed);
+            c.lead_steps_sum.fetch_add(lead_now, Ordering::Relaxed);
+            PlannerCounters::raise_peak(&c.lead_steps_peak, lead_now);
+            drop(board);
+            shared.cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::{loc_partition, reg_partition};
+    use crate::util::prop;
+
+    fn striped_directory(n: u32, p: usize) -> CacheDirectory {
+        let dir = CacheDirectory::new(n as u64);
+        for s in 0..n {
+            dir.set_owner(s, (s as usize) % p);
+        }
+        dir
+    }
+
+    #[test]
+    fn plan_reg_matches_reference_partition() {
+        for (len, p) in [(120usize, 8usize), (10, 4), (7, 7), (5, 9), (0, 3)] {
+            let batch: Vec<u32> = (0..len as u32).map(|i| i * 3 + 1).collect();
+            let plan = StepPlan::plan_reg(2, 5, &batch, p);
+            let parts = reg_partition(&batch, p);
+            assert_eq!(plan.p(), p);
+            assert_eq!(plan.len(), len);
+            assert_eq!(plan.kind, PlanKind::Reg);
+            for (j, part) in parts.iter().enumerate() {
+                assert_eq!(plan.learner_ids(j), &part.sample_ids[..]);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_loc_is_bit_identical_to_sequential_reference() {
+        prop::check("planner == loc_partition", 120, |rng| {
+            let p = 1 + rng.next_below(16) as usize;
+            let n = (p as u64 * (1 + rng.next_below(50))) as u32;
+            let dir = CacheDirectory::new(n as u64);
+            for s in 0..n {
+                if rng.next_below(8) != 0 {
+                    dir.set_owner(s, rng.next_below(p as u64) as usize);
+                }
+            }
+            let b = (1 + rng.next_below(n.max(2) as u64 / 2)) as usize;
+            let mut ids: Vec<u32> = (0..n).collect();
+            rng.shuffle(&mut ids);
+            let batch = &ids[..b];
+
+            let (parts, stats) = loc_partition(batch, &dir, p);
+            let plan = StepPlan::plan_loc(0, 0, batch, &dir, p);
+            assert_eq!(plan.kind, PlanKind::Loc);
+            assert_eq!(plan.stats.local_hits, stats.local_hits);
+            assert_eq!(plan.stats.storage_misses, stats.storage_misses);
+            assert_eq!(plan.stats.balance_moves, stats.balance_moves);
+            for (j, part) in parts.iter().enumerate() {
+                assert_eq!(
+                    plan.learner_ids(j),
+                    &part.sample_ids[..],
+                    "ids diverge for learner {j}"
+                );
+                assert_eq!(
+                    plan.learner_provenance(j),
+                    part.provenance,
+                    "provenance diverges for learner {j}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn scratch_reuse_does_not_leak_state_across_steps() {
+        // Two different batches through ONE scratch must equal fresh
+        // computations (stale claims/misses would corrupt the second).
+        let dir = striped_directory(500, 6);
+        let mut scratch = PlanScratch::default();
+        let b1: Vec<u32> = (0..120).map(|i| (i * 3) % 500).collect();
+        let b2: Vec<u32> = (0..90).map(|i| (i * 7 + 1) % 500).collect();
+        let a1 = scratch.plan_loc(0, 0, &b1, &dir, 6);
+        let a2 = scratch.plan_loc(0, 1, &b2, &dir, 6);
+        let f1 = StepPlan::plan_loc(0, 0, &b1, &dir, 6);
+        let f2 = StepPlan::plan_loc(0, 1, &b2, &dir, 6);
+        for j in 0..6 {
+            assert_eq!(a1.learner_ids(j), f1.learner_ids(j));
+            assert_eq!(a2.learner_ids(j), f2.learner_ids(j));
+            assert_eq!(a2.learner_provenance(j), f2.learner_provenance(j));
+        }
+        // Scratch with a different p afterwards still works.
+        let a3 = scratch.plan_loc(0, 2, &b1, &dir, 3);
+        let f3 = StepPlan::plan_loc(0, 2, &b1, &dir, 3);
+        for j in 0..3 {
+            assert_eq!(a3.learner_ids(j), f3.learner_ids(j));
+        }
+    }
+
+    #[test]
+    fn prov_runs_cover_arena_and_compress() {
+        let dir = striped_directory(1000, 5);
+        let batch: Vec<u32> = (0..200).collect();
+        let plan = StepPlan::plan_loc(0, 0, &batch, &dir, 5);
+        let runs = plan.prov_runs();
+        assert!(!runs.is_empty());
+        assert_eq!(runs.last().unwrap().end as usize, plan.len());
+        let mut prev = 0u32;
+        for r in runs {
+            assert!(r.end > prev, "runs must advance");
+            prev = r.end;
+        }
+        // All-local batch: far fewer runs than samples.
+        assert!(
+            runs.len() <= plan.p() + plan.stats.balance_moves + 1,
+            "runs should compress: {} runs for {} samples",
+            runs.len(),
+            plan.len()
+        );
+    }
+
+    #[test]
+    fn arena_bytes_tracks_payload() {
+        let batch: Vec<u32> = (0..64).collect();
+        let plan = StepPlan::plan_reg(0, 0, &batch, 4);
+        assert!(plan.arena_bytes() >= 64 * 4 + 5 * 4);
+    }
+
+    fn direct_plan(
+        scheme: EpochScheme,
+        epoch: u64,
+        s: u64,
+        batch: &[u32],
+        dir: &CacheDirectory,
+        p: usize,
+    ) -> StepPlan {
+        match scheme {
+            EpochScheme::Reg => StepPlan::plan_reg(epoch, s, batch, p),
+            EpochScheme::Loc => StepPlan::plan_loc(epoch, s, batch, dir, p),
+        }
+    }
+
+    #[test]
+    fn pipeline_publishes_every_step_once_and_matches_direct() {
+        let p = 3usize;
+        let n = 600u64;
+        let dir = Arc::new(striped_directory(n as u32, p));
+        let shuffler = GlobalShuffler::new(77, n);
+        let planner = PartitionPlanner::spawn(
+            PlannerConfig {
+                p,
+                global_batch: 60,
+                lead: 2,
+                consumers: p,
+                keep_partial: false,
+            },
+            shuffler.clone(),
+            Arc::clone(&dir),
+        );
+        for (epoch, scheme) in
+            [(0u64, EpochScheme::Reg), (1, EpochScheme::Loc)]
+        {
+            planner.begin_epoch(epoch, scheme);
+            let eplan = planner.epoch_plan(epoch).unwrap();
+            assert_eq!(eplan.steps(), 10);
+            // p learner threads each take every step once, in order.
+            std::thread::scope(|scope| {
+                for j in 0..p {
+                    let planner = &planner;
+                    let eplan = Arc::clone(&eplan);
+                    let dir = Arc::clone(&dir);
+                    scope.spawn(move || {
+                        for s in 0..eplan.steps() as u64 {
+                            let plan = planner.get(epoch, s).unwrap();
+                            assert_eq!(plan.epoch, epoch);
+                            assert_eq!(plan.step, s);
+                            let mb = eplan.batch(s as usize);
+                            let want = direct_plan(scheme, epoch, s, mb.sample_ids, &dir, p);
+                            assert_eq!(
+                                plan.learner_ids(j),
+                                want.learner_ids(j),
+                                "epoch {epoch} step {s} learner {j}"
+                            );
+                        }
+                    });
+                }
+            });
+        }
+        let snap = planner.snapshot();
+        assert_eq!(snap.plans_published, 20, "10 steps x 2 epochs, each once");
+        assert_eq!(snap.epochs_planned, 2);
+        assert_eq!(snap.critical_path_recomputes, 0);
+        assert!(
+            snap.lead_steps_peak <= 2 + 1,
+            "lead window must bound run-ahead: {}",
+            snap.lead_steps_peak
+        );
+        assert!(snap.arena_bytes_peak > 0);
+    }
+
+    #[test]
+    fn epoch_plan_is_shared_not_copied() {
+        let planner = PartitionPlanner::spawn(
+            PlannerConfig {
+                p: 2,
+                global_batch: 32,
+                lead: 4,
+                consumers: 1,
+                keep_partial: false,
+            },
+            GlobalShuffler::new(5, 128),
+            Arc::new(CacheDirectory::new(128)),
+        );
+        planner.begin_epoch(0, EpochScheme::Reg);
+        let a = planner.epoch_plan(0).unwrap();
+        let b = planner.epoch_plan(0).unwrap();
+        assert!(
+            Arc::ptr_eq(&a, &b),
+            "learners must share one epoch permutation"
+        );
+    }
+
+    #[test]
+    fn close_unblocks_waiters_with_error() {
+        let planner = PartitionPlanner::spawn(
+            PlannerConfig {
+                p: 2,
+                global_batch: 16,
+                lead: 1,
+                consumers: 2,
+                keep_partial: false,
+            },
+            GlobalShuffler::new(1, 64),
+            Arc::new(CacheDirectory::new(64)),
+        );
+        // No begin_epoch: a get would block forever without close.
+        std::thread::scope(|scope| {
+            let h = scope.spawn(|| planner.get(0, 0));
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            planner.close();
+            assert!(h.join().unwrap().is_err());
+        });
+        assert!(planner.epoch_plan(0).is_err());
+    }
+
+    #[test]
+    fn over_consumed_step_recomputes_inline_and_is_metered() {
+        // A step the board already retired (everyone took it once) can
+        // still be served — by recomputing on the CALLING thread. That is
+        // the legacy per-step double-consume pattern; the counter the
+        // benches/CI gate on must tick.
+        let p = 2usize;
+        let dir = Arc::new(striped_directory(256, p));
+        let planner = PartitionPlanner::spawn(
+            PlannerConfig {
+                p,
+                global_batch: 32,
+                lead: 2,
+                consumers: 1,
+                keep_partial: false,
+            },
+            GlobalShuffler::new(8, 256),
+            Arc::clone(&dir),
+        );
+        planner.begin_epoch(1, EpochScheme::Loc);
+        let first = planner.get(1, 0).unwrap();
+        assert_eq!(planner.snapshot().critical_path_recomputes, 0);
+        let again = planner.get(1, 0).unwrap();
+        assert_eq!(
+            planner.snapshot().critical_path_recomputes,
+            1,
+            "double-consume must be metered as on-critical-path work"
+        );
+        assert!(!Arc::ptr_eq(&first, &again), "recomputed, not cached");
+        for j in 0..p {
+            assert_eq!(first.learner_ids(j), again.learner_ids(j));
+            assert_eq!(
+                first.learner_provenance(j),
+                again.learner_provenance(j)
+            );
+        }
+    }
+
+    #[test]
+    fn stale_epoch_request_errors_instead_of_hanging() {
+        let planner = PartitionPlanner::spawn(
+            PlannerConfig {
+                p: 1,
+                global_batch: 8,
+                lead: 2,
+                consumers: 1,
+                keep_partial: false,
+            },
+            GlobalShuffler::new(3, 64),
+            Arc::new(CacheDirectory::new(64)),
+        );
+        planner.begin_epoch(0, EpochScheme::Reg);
+        let steps = planner.epoch_plan(0).unwrap().steps() as u64;
+        for s in 0..steps {
+            planner.get(0, s).unwrap();
+        }
+        planner.begin_epoch(1, EpochScheme::Reg);
+        planner.epoch_plan(1).unwrap();
+        assert!(planner.get(0, 0).is_err(), "epoch 0 is gone");
+    }
+}

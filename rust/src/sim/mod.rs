@@ -85,6 +85,18 @@ pub struct SimConfig {
     /// Loc learners train with their raw claims; the step's compute time
     /// is gated by the most-loaded node.
     pub balance_enabled: bool,
+    /// Per-step partition-planning cost in seconds (Loc directory claims +
+    /// least-loaded fills + Algorithm 1). The paper's model is per-*node*
+    /// planning: every node derives the same partition from its replica of
+    /// the directory, so the cost is paid once per node per step — this
+    /// field is that per-node cost (the live pipeline's per-process
+    /// [`crate::sampler::PartitionPlanner`] is the in-process analogue).
+    pub plan_s_per_step: f64,
+    /// Where planning runs. `true` (the planner architecture) rides the
+    /// pipelined supply stage and overlaps training; `false` models the
+    /// legacy synchronous recompute on the training threads, which lands
+    /// directly on the step critical path.
+    pub plan_pipelined: bool,
     pub seed: u64,
 }
 
@@ -264,9 +276,14 @@ pub fn simulate_epoch(cfg: &SimConfig) -> SimResult {
     let mut compute_end = vec![0.0f64; steps];
     let mut result = SimResult { steps, ..Default::default() };
 
+    let t_plan = cfg.plan_s_per_step.max(0.0);
     for s in 0..steps {
         let tr = step_traffic(cfg, &mut rng);
-        let t_compute = compute_time(tr.max_node_batch);
+        // Pipelined planning (the planner architecture) joins the supply
+        // stages and overlaps compute; synchronous planning (the legacy
+        // per-learner recompute) gates the training step directly.
+        let t_compute = compute_time(tr.max_node_batch)
+            + if cfg.plan_pipelined { 0.0 } else { t_plan };
         // Supply stages: shared storage (serialized across nodes), then
         // parallel per-link exchange, then parallel per-node preprocess.
         let t_storage = tr.storage_bytes / cfg.r_storage_bps;
@@ -279,7 +296,8 @@ pub fn simulate_epoch(cfg: &SimConfig) -> SimResult {
         // Per-node batch assembly (local fetch of the node's share).
         let t_local = tr.max_node_batch * cfg.catalog.avg_bytes as f64
             / cfg.local_fetch_bps;
-        let t_supply = t_storage + t_remote + t_pre + t_local;
+        let t_supply = t_storage + t_remote + t_pre + t_local
+            + if cfg.plan_pipelined { t_plan } else { 0.0 };
 
         // Loader may start this step's supply once the previous supply is
         // done AND the prefetch window allows (compute of step s-q done).
@@ -482,6 +500,34 @@ mod tests {
             loc.train_time_s
         );
         assert!(loc.epoch_time_s < reg.epoch_time_s);
+    }
+
+    #[test]
+    fn pipelined_planning_stays_off_the_critical_path() {
+        // Compute-bound regime (8 nodes, Fig. 12 left): a per-step
+        // planning cost rides the supply pipeline for free when pipelined
+        // (the planner architecture), but inflates every step when it
+        // recomputes synchronously on the training threads (the legacy
+        // per-learner scheme this PR removes).
+        let base = presets::training(Catalog::imagenet_1k(), 8, Scheme::Loc);
+        let t_base = simulate_epoch(&base).epoch_time_s;
+        let mut piped = base.clone();
+        piped.plan_s_per_step = 0.05;
+        piped.plan_pipelined = true;
+        let t_piped = simulate_epoch(&piped).epoch_time_s;
+        let mut sync = piped.clone();
+        sync.plan_pipelined = false;
+        let t_sync = simulate_epoch(&sync).epoch_time_s;
+        assert!(
+            (t_piped - t_base).abs() / t_base < 0.02,
+            "pipelined planning must hide under compute: \
+             {t_piped:.2}s vs {t_base:.2}s"
+        );
+        assert!(
+            t_sync > t_base * 1.08,
+            "synchronous planning must show up on the critical path: \
+             {t_sync:.2}s vs {t_base:.2}s"
+        );
     }
 
     #[test]

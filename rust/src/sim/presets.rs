@@ -54,6 +54,11 @@ pub fn loading_only(
         scheme,
         alpha: 1.0,
         balance_enabled: true,
+        // Partition planning is pipelined (the planner architecture) and
+        // its per-node cost is negligible at Lassen scale; sweeps override
+        // these to study the synchronous-recompute ablation.
+        plan_s_per_step: 0.0,
+        plan_pipelined: true,
         seed: 0xF1C5,
     }
 }

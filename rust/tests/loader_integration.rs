@@ -116,7 +116,10 @@ fn prefetch_bounds_outstanding_requests() {
             .submit(BatchRequest {
                 epoch: 0,
                 step,
-                ids: (0..16).map(|i| (step as u32 * 16 + i) % 512).collect(),
+                ids: (0..16)
+                    .map(|i| (step as u32 * 16 + i) % 512)
+                    .collect::<Vec<u32>>()
+                    .into(),
             })
             .unwrap();
     }
@@ -170,7 +173,10 @@ fn throttled_storage_bounds_end_to_end_rate() {
             .submit(BatchRequest {
                 epoch: 0,
                 step,
-                ids: (0..16).map(|i| (step as u32 * 16 + i) % 256).collect(),
+                ids: (0..16)
+                    .map(|i| (step as u32 * 16 + i) % 256)
+                    .collect::<Vec<u32>>()
+                    .into(),
             })
             .unwrap();
     }
@@ -217,7 +223,10 @@ fn loader_counts_every_sample_exactly_once() {
             .submit(BatchRequest {
                 epoch: 0,
                 step,
-                ids: (0..16).map(|i| step as u32 * 16 + i).collect(),
+                ids: (0..16)
+                    .map(|i| step as u32 * 16 + i)
+                    .collect::<Vec<u32>>()
+                    .into(),
             })
             .unwrap();
     }
@@ -233,7 +242,10 @@ fn loader_counts_every_sample_exactly_once() {
             .submit(BatchRequest {
                 epoch: 1,
                 step,
-                ids: (0..16).map(|i| (step as u32 - 32) * 16 + i).collect(),
+                ids: (0..16)
+                    .map(|i| (step as u32 - 32) * 16 + i)
+                    .collect::<Vec<u32>>()
+                    .into(),
             })
             .unwrap();
     }
@@ -358,7 +370,7 @@ fn fetch_fallback_on_evicted_owner_works_under_loader() {
         0.0,
     );
     loader
-        .submit(BatchRequest { epoch: 0, step: 0, ids: (0..8).collect() })
+        .submit(BatchRequest { epoch: 0, step: 0, ids: (0..8).collect::<Vec<u32>>().into() })
         .unwrap();
     let batch = loader.next(0).unwrap();
     loader.shutdown().unwrap();
@@ -470,7 +482,7 @@ fn threaded_loader_still_coalesces_messages_per_owner() {
         0.0,
     );
     loader
-        .submit(BatchRequest { epoch: 0, step: 0, ids: (0..16).collect() })
+        .submit(BatchRequest { epoch: 0, step: 0, ids: (0..16).collect::<Vec<u32>>().into() })
         .unwrap();
     let batch = loader.next(0).unwrap();
     loader.shutdown().unwrap();

@@ -115,6 +115,12 @@ fn training_learns_and_evaluates() {
     assert!(last < first * 0.8, "loss {first} -> {last}");
     assert!(report.learners_in_sync());
     assert!(report.mean_grad_exec_s > 0.0);
+    // Partition planning ran exactly once per step per PROCESS (not once
+    // per learner), on the planner thread — never on a training thread.
+    let total_steps: u64 = report.epochs.iter().map(|e| e.steps as u64).sum();
+    assert_eq!(report.planner.plans_published, total_steps);
+    assert_eq!(report.planner.epochs_planned, report.epochs.len() as u64);
+    assert_eq!(report.planner.critical_path_recomputes, 0);
 }
 
 #[test]

@@ -1,0 +1,242 @@
+//! PartitionPlanner output is bit-identical to the sequential reference
+//! partitioners — assignments, provenance, and `LocStats` — across seeds,
+//! P ∈ {1, 3, 8, 256}, and partial final batches; and deterministic
+//! across repeated runs. The planner's binary-heap miss assignment and
+//! flat-arena layout must be observationally indistinguishable from
+//! `loc_partition` / `reg_partition`, or learners would diverge.
+
+use dlio::cache::CacheDirectory;
+use dlio::sampler::{
+    loc_partition, reg_partition, EpochPlan, EpochScheme, GlobalShuffler,
+    PartitionPlanner, PlannerConfig, StepPlan,
+};
+use dlio::util::prop;
+use dlio::util::Rng;
+use std::sync::Arc;
+
+/// Random directory: each sample cached on a random learner, or missing
+/// with probability ~1/8 (the same shape the in-crate property tests use).
+fn random_directory(rng: &mut Rng, n: u32, p: usize) -> CacheDirectory {
+    let dir = CacheDirectory::new(n as u64);
+    for s in 0..n {
+        if rng.next_below(8) != 0 {
+            dir.set_owner(s, rng.next_below(p as u64) as usize);
+        }
+    }
+    dir
+}
+
+fn assert_plan_matches_reference(
+    plan: &StepPlan,
+    batch: &[u32],
+    dir: &CacheDirectory,
+    p: usize,
+) {
+    let (parts, stats) = loc_partition(batch, dir, p);
+    assert_eq!(plan.p(), p);
+    assert_eq!(plan.len(), batch.len());
+    assert_eq!(plan.stats.local_hits, stats.local_hits, "local_hits");
+    assert_eq!(
+        plan.stats.storage_misses, stats.storage_misses,
+        "storage_misses"
+    );
+    assert_eq!(
+        plan.stats.balance_moves, stats.balance_moves,
+        "balance_moves"
+    );
+    for (j, part) in parts.iter().enumerate() {
+        assert_eq!(
+            plan.learner_ids(j),
+            &part.sample_ids[..],
+            "learner {j} ids diverge"
+        );
+        assert_eq!(
+            plan.learner_provenance(j),
+            part.provenance,
+            "learner {j} provenance diverges"
+        );
+    }
+}
+
+#[test]
+fn loc_plans_bit_identical_across_p_and_seeds() {
+    for &p in &[1usize, 3, 8, 256] {
+        // 256-way plans are bigger; fewer cases keep the test quick.
+        let cases = if p >= 256 { 8 } else { 60 };
+        prop::check_seeded(
+            &format!("planner == loc_partition (p={p})"),
+            0x9A0F + p as u64,
+            cases,
+            move |rng| {
+                let n = ((p as u64) * (2 + rng.next_below(40))
+                    + rng.next_below(64)) as u32;
+                let dir = random_directory(rng, n, p);
+                let b = (1 + rng.next_below(n as u64)) as usize;
+                let mut ids: Vec<u32> = (0..n).collect();
+                rng.shuffle(&mut ids);
+                let batch = &ids[..b];
+                let plan = StepPlan::plan_loc(0, 0, batch, &dir, p);
+                assert_plan_matches_reference(&plan, batch, &dir, p);
+            },
+        );
+    }
+}
+
+#[test]
+fn reg_plans_bit_identical_including_remainders() {
+    prop::check("planner == reg_partition", 120, |rng| {
+        let p = 1 + rng.next_below(300) as usize;
+        let len = rng.next_below(2048) as usize;
+        let batch: Vec<u32> = (0..len as u32).map(|i| i.wrapping_mul(7)).collect();
+        let plan = StepPlan::plan_reg(0, 0, &batch, p);
+        let parts = reg_partition(&batch, p);
+        for (j, part) in parts.iter().enumerate() {
+            assert_eq!(plan.learner_ids(j), &part.sample_ids[..]);
+        }
+    });
+}
+
+#[test]
+fn plans_are_deterministic_across_runs() {
+    let mut rng = Rng::new(0xDE7);
+    let p = 8;
+    let dir = random_directory(&mut rng, 4096, p);
+    let batch: Vec<u32> = (0..1024u32).map(|i| (i * 3) % 4096).collect();
+    let a = StepPlan::plan_loc(3, 7, &batch, &dir, p);
+    let b = StepPlan::plan_loc(3, 7, &batch, &dir, p);
+    assert_eq!(a.prov_runs(), b.prov_runs());
+    for j in 0..p {
+        assert_eq!(a.learner_ids(j), b.learner_ids(j));
+    }
+}
+
+#[test]
+fn pipelined_planner_covers_partial_final_batches() {
+    // 100 samples, global batch 32, keep_partial: the 4th step is a
+    // 4-sample tail — the planner must partition it identically to the
+    // sequential reference (Reg epoch 0, Loc epoch 1).
+    let n = 100u64;
+    let p = 3usize;
+    let mut rng = Rng::new(0xACE);
+    let dir = Arc::new(random_directory(&mut rng, n as u32, p));
+    let shuffler = GlobalShuffler::new(21, n);
+    let planner = PartitionPlanner::spawn(
+        PlannerConfig {
+            p,
+            global_batch: 32,
+            lead: 2,
+            consumers: 1,
+            keep_partial: true,
+        },
+        shuffler.clone(),
+        Arc::clone(&dir),
+    );
+    let reference = EpochPlan::new(&shuffler, 1, 32).with_partial(true);
+    assert_eq!(reference.steps(), 4);
+    assert_eq!(reference.batch(3).sample_ids.len(), 4);
+
+    planner.begin_epoch(0, EpochScheme::Reg);
+    let e0 = planner.epoch_plan(0).unwrap();
+    for s in 0..e0.steps() as u64 {
+        let plan = planner.get(0, s).unwrap();
+        let mb = e0.batch(s as usize);
+        let parts = reg_partition(mb.sample_ids, p);
+        for (j, part) in parts.iter().enumerate() {
+            assert_eq!(plan.learner_ids(j), &part.sample_ids[..]);
+        }
+    }
+
+    planner.begin_epoch(1, EpochScheme::Loc);
+    let e1 = planner.epoch_plan(1).unwrap();
+    assert_eq!(e1.steps(), 4);
+    for s in 0..e1.steps() as u64 {
+        let plan = planner.get(1, s).unwrap();
+        let mb = e1.batch(s as usize);
+        assert_plan_matches_reference(&plan, mb.sample_ids, &dir, p);
+    }
+
+    let snap = planner.snapshot();
+    assert_eq!(snap.plans_published, 8);
+    assert_eq!(snap.critical_path_recomputes, 0);
+}
+
+#[test]
+fn concurrent_consumers_see_one_shared_plan_per_step() {
+    // p learner threads take every step of a Loc epoch concurrently; all
+    // must observe the SAME Arc (planned once per process) and slices
+    // that tile the global batch exactly.
+    let n = 2048u64;
+    let p = 8usize;
+    let mut rng = Rng::new(0xC0C);
+    let dir = Arc::new(random_directory(&mut rng, n as u32, p));
+    let planner = Arc::new(PartitionPlanner::spawn(
+        PlannerConfig {
+            p,
+            global_batch: 256,
+            lead: 4,
+            consumers: p,
+            keep_partial: false,
+        },
+        GlobalShuffler::new(9, n),
+        Arc::clone(&dir),
+    ));
+    planner.begin_epoch(0, EpochScheme::Reg);
+    let eplan = planner.epoch_plan(0).unwrap();
+    let steps = eplan.steps() as u64;
+    let collected: Vec<Vec<Arc<StepPlan>>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..p)
+            .map(|_| {
+                let planner = Arc::clone(&planner);
+                scope.spawn(move || {
+                    (0..steps)
+                        .map(|s| planner.get(0, s).unwrap())
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for s in 0..steps as usize {
+        let first = &collected[0][s];
+        for learner in collected.iter().skip(1) {
+            assert!(
+                Arc::ptr_eq(first, &learner[s]),
+                "step {s}: learners must share one plan, not recompute"
+            );
+        }
+        // Slices tile the global batch exactly once.
+        let mut all: Vec<u32> = (0..p)
+            .flat_map(|j| first.learner_ids(j).to_vec())
+            .collect();
+        all.sort_unstable();
+        let mut want = eplan.batch(s).sample_ids.to_vec();
+        want.sort_unstable();
+        assert_eq!(all, want, "step {s}: plan must cover the batch");
+    }
+    assert_eq!(planner.snapshot().plans_published, steps);
+    assert_eq!(planner.snapshot().critical_path_recomputes, 0);
+}
+
+#[test]
+fn epoch_permutation_is_shared_once_per_process() {
+    let planner = PartitionPlanner::spawn(
+        PlannerConfig {
+            p: 4,
+            global_batch: 64,
+            lead: 2,
+            consumers: 1,
+            keep_partial: false,
+        },
+        GlobalShuffler::new(123, 1024),
+        Arc::new(CacheDirectory::new(1024)),
+    );
+    planner.begin_epoch(0, EpochScheme::Reg);
+    let a = planner.epoch_plan(0).unwrap();
+    let b = planner.epoch_plan(0).unwrap();
+    assert!(Arc::ptr_eq(&a, &b), "one Arc<EpochPlan> per epoch per process");
+    // And it is the same permutation every learner used to derive alone.
+    let reference = EpochPlan::new(&GlobalShuffler::new(123, 1024), 0, 64);
+    for (x, y) in a.iter().zip(reference.iter()) {
+        assert_eq!(x.sample_ids, y.sample_ids);
+    }
+}
