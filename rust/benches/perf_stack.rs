@@ -25,7 +25,7 @@ use dlio::net::{Fabric, FabricConfig};
 use dlio::runtime::{default_artifacts_dir, Engine, HostTensor};
 use dlio::sampler::StepPlan;
 use dlio::storage::{generate, StorageSystem, SyntheticSpec};
-use dlio::util::Rng;
+use dlio::util::{Executor, Rng};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -210,6 +210,82 @@ fn main() {
         "fraction",
     );
     loader.shutdown().unwrap();
+
+    // --- L3: overlapped remote fetch, owners ∈ {1, 4, 16} -------------------
+    // Cache-warm remote path: every sample of a 256-batch is a remote hit
+    // spread over k distinct owners, resolved through the overlapped
+    // owner-task wave on a real-time link-occupancy fabric (scaled to
+    // 200 MB/s links + 1 ms latency so modeled costs dominate scheduler
+    // noise). With k owner links in parallel the remote wall approaches
+    // max-over-owners, so throughput should grow with k while the serial
+    // sum would be flat — the trajectory watches both samples/s and the
+    // measured overlap ratio per k.
+    let remote_storage =
+        Arc::new(StorageSystem::open(&cfg.data_dir, None).unwrap());
+    let remote_exec = Executor::new(16);
+    let bsz_remote = 256usize;
+    for owners in [1usize, 4, 16] {
+        let fabric = Arc::new(Fabric::new(FabricConfig {
+            link_bandwidth_bps: 2.0e8,
+            latency_s: 1.0e-3,
+            ingress_rails: 4,
+            real_time: true,
+        }));
+        let octx = Arc::new(FetchContext {
+            learner: 0,
+            storage: Arc::clone(&remote_storage),
+            caches: (0..owners + 1)
+                .map(|_| {
+                    Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly))
+                })
+                .collect(),
+            directory: Arc::new(CacheDirectory::new(
+                remote_storage.n_samples(),
+            )),
+            fabric: Arc::clone(&fabric),
+            cache_on_load: false,
+            decode_s_per_kib: 0.0,
+            counters: Arc::new(LoadCounters::new()),
+        });
+        let ids: Vec<u32> = (0..bsz_remote as u32).collect();
+        for &id in &ids {
+            let owner = 1 + (id as usize % owners);
+            let s = Arc::new(octx.storage.read_sample(id).unwrap());
+            octx.caches[owner].insert(s);
+            octx.directory.set_owner(id, owner);
+        }
+        let before = fabric.snapshot();
+        let m = b.run(
+            &format!("l3/remote_overlapped_b256_owners{owners}"),
+            || {
+                black_box(
+                    FetchContext::fetch_batch_overlapped(
+                        &octx,
+                        &ids,
+                        &remote_exec,
+                        4,
+                    )
+                    .unwrap(),
+                );
+            },
+        );
+        let delta = fabric.snapshot().delta(&before);
+        b.record(
+            &format!("l3/remote_samples_per_s_owners{owners}"),
+            bsz_remote as f64 / m.mean_s,
+            "samples/s",
+        );
+        b.record(
+            &format!("l3/remote_overlap_ratio_owners{owners}"),
+            delta.overlap_ratio(),
+            "x",
+        );
+        b.record(
+            &format!("l3/remote_inflight_peak_owners{owners}"),
+            delta.inflight_peak as f64,
+            "transfers",
+        );
+    }
 
     // --- L3: partition-planning sweep ---------------------------------------
     // Per-step planning cost vs learner count at the paper's target scales

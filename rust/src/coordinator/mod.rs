@@ -32,7 +32,9 @@ pub use checkpoint::Checkpoint;
 
 use crate::cache::{CacheDirectory, Policy, SampleCache};
 use crate::loader::{BatchIds, BatchRequest, FetchContext, Loader, LoaderConfig};
-use crate::metrics::{EpochReport, LoadCounters, LoadSnapshot, PlannerSnapshot};
+use crate::metrics::{
+    EpochReport, FabricSnapshot, LoadCounters, LoadSnapshot, PlannerSnapshot,
+};
 use crate::net::Fabric;
 use crate::runtime::{Engine, HostTensor};
 use crate::sampler::{
@@ -123,6 +125,9 @@ pub struct TrainingReport {
     /// nonzero `critical_path_recomputes` would mean partition work leaked
     /// back onto the training threads.
     pub planner: PlannerSnapshot,
+    /// Fabric overlap accounting (serialized vs overlapped transfer time,
+    /// per-link queueing, peak in-flight transfers; DESIGN.md §9).
+    pub fabric: FabricSnapshot,
 }
 
 impl TrainingReport {
@@ -191,8 +196,12 @@ impl Trainer {
         engine: Arc<Engine>,
         storage: Arc<StorageSystem>,
         fabric: Arc<Fabric>,
-        cfg: TrainerConfig,
+        mut cfg: TrainerConfig,
     ) -> Result<Trainer> {
+        // Config validation normalizes the loader knobs once; every use
+        // site below (planner lead, prefetch window, loader spawn) reads
+        // the clamped values directly.
+        cfg.loader = cfg.loader.normalized();
         ensure!(cfg.p > 0, "p must be positive");
         ensure!(
             cfg.epochs > 0,
@@ -248,7 +257,7 @@ impl Trainer {
             PlannerConfig {
                 p,
                 global_batch: cfg.global_batch(),
-                lead: cfg.loader.prefetch_batches.max(1),
+                lead: cfg.loader.prefetch_batches,
                 consumers: p,
                 keep_partial: false,
             },
@@ -380,6 +389,7 @@ impl Trainer {
             param_checksums: checksums,
             mean_grad_exec_s: grad_prog.mean_exec_s(),
             planner: planner.snapshot(),
+            fabric: self.fabric.snapshot(),
         })
     }
 
@@ -529,7 +539,7 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
         let epoch_t0 = Instant::now();
 
         // Prime the prefetch window.
-        let window = cfg.loader.prefetch_batches.max(1).min(steps);
+        let window = cfg.loader.prefetch_batches.min(steps);
         for s in 0..window {
             submit_step(s, &mut balance_moves)?;
         }

@@ -7,7 +7,8 @@
 //! and the shared directory on-the-fly (the paper's first-epoch population
 //! policy).
 //!
-//! This is the zero-copy, coalesced pipeline (DESIGN.md §2/§4):
+//! This is the zero-copy, coalesced, overlapped pipeline (DESIGN.md
+//! §2/§4/§9):
 //!
 //! * Directory lookups are single atomic loads — no lock anywhere on the
 //!   per-sample hot path.
@@ -17,17 +18,27 @@
 //!   `Fabric::transfer` per distinct owner per batch — message count is
 //!   O(owners), not O(batch)) and storage misses by contiguous shard run
 //!   (one `TokenBucket::acquire` + one range read per run).
+//! * [`fetch_batch_overlapped`] dispatches those owner groups as
+//!   independent tasks on the persistent decode executor, in the same wave
+//!   as the storage-run chunks: each owner's transfer rides its own fabric
+//!   link ([`crate::net::LinkClock`]), so a batch touching k owners pays
+//!   ≈ the max of the k transfer costs (plus link queueing), not the sum,
+//!   and storage admission + decode overlap with the in-flight transfers.
 //! * A directory entry pointing at an owner that no longer holds the
 //!   sample (Fifo eviction race) falls back to storage and *repairs* the
-//!   directory instead of erroring.
+//!   directory instead of erroring — including when the eviction lands
+//!   *between* the directory lookup (batch planning) and the owner-cache
+//!   read (owner task), the overlapped path's wider race window.
 //!
 //! [`SampleBytes`]: crate::storage::SampleBytes
 //! [`fetch_batch`]: FetchContext::fetch_batch
+//! [`fetch_batch_overlapped`]: FetchContext::fetch_batch_overlapped
 
 use crate::cache::{CacheDirectory, SampleCache};
 use crate::metrics::{LoadCounters, Source};
 use crate::net::Fabric;
 use crate::storage::{Sample, StorageSystem};
+use crate::util::{panic_message, Executor};
 use anyhow::Result;
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
@@ -57,18 +68,43 @@ pub struct FetchContext {
     pub counters: Arc<LoadCounters>,
 }
 
-/// A partially resolved batch: local and (owner-coalesced) remote hits
-/// are filled in `slots`; storage misses remain in `pending` for the
-/// caller to complete — in one go via [`FetchContext::fetch_batch`], or
-/// split across loader threads via [`FetchContext::fetch_storage`] so
-/// storage admission + decode occupancy overlap while fabric messages
-/// stay one per distinct owner per *batch*.
+/// A partially resolved batch: local hits are filled in `slots`; remote
+/// hits remain grouped in `remote` (one [`OwnerGroup`] per distinct
+/// owning learner) and storage misses in `pending`, for the caller to
+/// complete — serially via [`FetchContext::fetch_batch`], or as one
+/// overlapped task wave via [`FetchContext::fetch_batch_overlapped`].
+///
+/// Ownership rule for remote-pending slots (DESIGN.md §9): the groups own
+/// their `(id, positions)` entries; resolver tasks never touch `slots`.
+/// Only the batch's owning worker writes `slots`, by folding each task's
+/// [`OwnerFetch`] back in after the wave completes, so slot filling needs
+/// no synchronization and the result is identical no matter how the
+/// transfers interleaved.
 pub struct DeferredBatch {
     /// One slot per requested id, in request order.
     pub slots: Vec<Option<Arc<Sample>>>,
     /// Unresolved storage misses: (sample id, slot positions) — one entry
     /// per *unique* id, so duplicates are fetched and accounted once.
     pub pending: Vec<(u32, Vec<usize>)>,
+    /// Unresolved remote hits, grouped by owning learner (one fabric
+    /// message each). Resolve with [`FetchContext::fetch_owner`].
+    pub remote: Vec<OwnerGroup>,
+}
+
+/// One distinct remote owner's share of a batch: every id the directory
+/// assigns to `owner`, with the batch positions each id serves.
+pub struct OwnerGroup {
+    pub owner: usize,
+    /// (sample id, slot positions), unique ids, id-sorted.
+    pub entries: Vec<(u32, Vec<usize>)>,
+}
+
+/// The outcome of resolving one [`OwnerGroup`]: samples that arrived over
+/// the fabric, plus entries whose owner no longer held them (stale
+/// directory) — those fall back to storage.
+pub struct OwnerFetch {
+    pub resolved: Vec<(Vec<usize>, Arc<Sample>)>,
+    pub fallback: Vec<(u32, Vec<usize>)>,
 }
 
 impl DeferredBatch {
@@ -78,6 +114,16 @@ impl DeferredBatch {
         for ((_, pos), s) in chunk.iter().zip(samples) {
             fill_slots(&mut self.slots, pos, &s);
         }
+    }
+
+    /// Fold one owner task's resolved samples into the batch; returns the
+    /// entries that must fall back to storage. Called only by the batch's
+    /// owning worker (see the ownership rule above).
+    pub fn fill_remote(&mut self, fetched: OwnerFetch) -> Vec<(u32, Vec<usize>)> {
+        for (pos, s) in fetched.resolved {
+            fill_slots(&mut self.slots, &pos, &s);
+        }
+        fetched.fallback
     }
 
     /// Unwrap into request-order samples; panics if any slot is unfilled.
@@ -103,12 +149,9 @@ impl FetchContext {
     pub fn fetch(&self, id: u32) -> Result<Arc<Sample>> {
         let t0 = Instant::now();
         let result = (|| {
-            let mut batch = self.fetch_batch_core(std::slice::from_ref(&id))?;
-            let pending = std::mem::take(&mut batch.pending);
-            let fetched = self.storage_fill(&pending)?;
-            batch.fill(&pending, fetched);
-            Ok(batch
-                .finish()
+            let batch = self.fetch_batch_core(std::slice::from_ref(&id))?;
+            Ok(self
+                .resolve_serial(batch)?
                 .pop()
                 .expect("batch of one yields one sample"))
         })();
@@ -131,11 +174,8 @@ impl FetchContext {
             self.counters.batch_fetches.fetch_add(1, Ordering::Relaxed);
         }
         let result = (|| {
-            let mut batch = self.fetch_batch_core(ids)?;
-            let pending = std::mem::take(&mut batch.pending);
-            let fetched = self.storage_fill(&pending)?;
-            batch.fill(&pending, fetched);
-            Ok(batch.finish())
+            let batch = self.fetch_batch_core(ids)?;
+            self.resolve_serial(batch)
         })();
         self.counters
             .fetch_ns
@@ -143,12 +183,53 @@ impl FetchContext {
         result
     }
 
-    /// Phase one of a batch fetch: resolve local hits and owner-coalesced
-    /// remote hits for the WHOLE batch, leaving storage misses pending.
-    /// Complete them with [`fetch_storage`] (chunkable across threads) and
-    /// [`DeferredBatch::fill`]/[`DeferredBatch::finish`].
+    /// As [`fetch_batch`], but owner groups and storage-run chunks are
+    /// dispatched as ONE task wave on `executor`: each owner's coalesced
+    /// transfer reserves its own fabric link and they complete
+    /// concurrently, so the batch's remote wall time approaches
+    /// max-over-owners (+ link queueing) instead of the sum, while storage
+    /// admission and decode occupancy proceed under the in-flight
+    /// transfers. `parallelism` bounds the storage chunk fan-out (the
+    /// §III-B intra-batch thread budget); owner groups are always one task
+    /// each.
     ///
+    /// Batch contents and accounting are independent of task interleaving
+    /// (see `DeferredBatch` ownership rules); stale-owner entries fall
+    /// back to storage after the wave.
+    ///
+    /// Associated-function form (`FetchContext::fetch_batch_overlapped(
+    /// &ctx, ..)`) because the executor tasks need an owned handle to
+    /// clone from.
+    ///
+    /// [`fetch_batch`]: FetchContext::fetch_batch
+    pub fn fetch_batch_overlapped(
+        ctx: &Arc<FetchContext>,
+        ids: &[u32],
+        executor: &Executor,
+        parallelism: usize,
+    ) -> Result<Vec<Arc<Sample>>> {
+        let t0 = Instant::now();
+        if !ids.is_empty() {
+            ctx.counters.batch_fetches.fetch_add(1, Ordering::Relaxed);
+        }
+        let result = Self::overlapped_core(ctx, ids, executor, parallelism);
+        ctx.counters
+            .fetch_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        result
+    }
+
+    /// Phase one of a batch fetch: resolve local hits for the WHOLE batch
+    /// and route every miss — remote hits into per-owner groups (no
+    /// transfer issued yet), storage misses into `pending`. Complete with
+    /// [`fetch_owner`] per group and [`fetch_storage`] per chunk (both
+    /// safe to run concurrently), or let [`fetch_batch`] /
+    /// [`fetch_batch_overlapped`] drive the whole thing.
+    ///
+    /// [`fetch_owner`]: FetchContext::fetch_owner
     /// [`fetch_storage`]: FetchContext::fetch_storage
+    /// [`fetch_batch`]: FetchContext::fetch_batch
+    /// [`fetch_batch_overlapped`]: FetchContext::fetch_batch_overlapped
     pub fn fetch_batch_begin(&self, ids: &[u32]) -> Result<DeferredBatch> {
         let t0 = Instant::now();
         if !ids.is_empty() {
@@ -159,6 +240,49 @@ impl FetchContext {
             .fetch_ns
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         result
+    }
+
+    /// Resolve one owner group: read the owner's cache (repairing stale
+    /// directory entries), then send ONE coalesced fabric message for
+    /// everything it still holds, blocking to the transfer's reserved
+    /// completion. Safe to call concurrently for distinct groups — that
+    /// concurrency is exactly what overlaps the owners' links. Entries the
+    /// owner no longer holds come back in `fallback` for a storage fetch;
+    /// they are accounted there (storage), never double-counted here.
+    /// Takes the group by value: position lists move through to the
+    /// result, no per-id clones on the remote hot path.
+    pub fn fetch_owner(&self, group: OwnerGroup) -> OwnerFetch {
+        let OwnerGroup { owner, entries } = group;
+        let mut out = OwnerFetch {
+            resolved: Vec::with_capacity(entries.len()),
+            fallback: Vec::new(),
+        };
+        let mut bytes = 0u64;
+        for (id, pos) in entries {
+            let got = self
+                .caches[owner]
+                .get(id)
+                .or_else(|| self.repair_then_recheck(id, owner));
+            match got {
+                Some(s) => {
+                    // One payload crosses the wire per unique id; the
+                    // hit is accounted once per batch position.
+                    bytes += s.size() as u64;
+                    self.counters.record_n(
+                        Source::RemoteCache,
+                        s.size() as u64,
+                        pos.len() as u64,
+                    );
+                    out.resolved.push((pos, s));
+                }
+                None => out.fallback.push((id, pos)),
+            }
+        }
+        if bytes > 0 {
+            self.fabric.transfer_begin(owner, self.learner, bytes).wait();
+            self.counters.owner_messages.fetch_add(1, Ordering::Relaxed);
+        }
+        out
     }
 
     /// Phase two: serve `pending` entries from storage — contiguous-run
@@ -179,8 +303,11 @@ impl FetchContext {
 
     fn fetch_batch_core(&self, ids: &[u32]) -> Result<DeferredBatch> {
         let b = ids.len();
-        let mut batch =
-            DeferredBatch { slots: vec![None; b], pending: Vec::new() };
+        let mut batch = DeferredBatch {
+            slots: vec![None; b],
+            pending: Vec::new(),
+            remote: Vec::new(),
+        };
         if b == 0 {
             return Ok(batch);
         }
@@ -229,35 +356,103 @@ impl FetchContext {
             }
         }
 
-        // 3. Remote hits: ONE fabric message per distinct owner per batch.
-        for (owner, entries) in by_owner {
-            let mut bytes = 0u64;
-            for (id, pos) in entries {
-                let got = self
-                    .caches[owner]
-                    .get(id)
-                    .or_else(|| self.repair_then_recheck(id, owner));
-                match got {
-                    Some(s) => {
-                        // One payload crosses the wire per unique id; the
-                        // hit is accounted once per batch position.
-                        bytes += s.size() as u64;
-                        self.counters.record_n(
-                            Source::RemoteCache,
-                            s.size() as u64,
-                            pos.len() as u64,
-                        );
-                        fill_slots(&mut batch.slots, &pos, &s);
-                    }
-                    None => batch.pending.push((id, pos)),
+        // 3. Remote hits become per-owner groups (ONE fabric message per
+        //    distinct owner per batch, issued when the group is resolved —
+        //    serially by `resolve_serial`, concurrently by
+        //    `fetch_batch_overlapped`).
+        batch.remote = by_owner
+            .into_iter()
+            .map(|(owner, entries)| OwnerGroup { owner, entries })
+            .collect();
+        Ok(batch)
+    }
+
+    /// Serial completion shared by `fetch`/`fetch_batch`: resolve owner
+    /// groups one after another (transfers queue on the fabric exactly as
+    /// the pre-overlap pipeline did), then serve every storage miss —
+    /// including stale-owner fallbacks — in one coalesced read.
+    fn resolve_serial(&self, mut batch: DeferredBatch) -> Result<Vec<Arc<Sample>>> {
+        for group in std::mem::take(&mut batch.remote) {
+            let fetched = self.fetch_owner(group);
+            let fallback = batch.fill_remote(fetched);
+            batch.pending.extend(fallback);
+        }
+        let pending = std::mem::take(&mut batch.pending);
+        let fetched = self.storage_fill(&pending)?;
+        batch.fill(&pending, fetched);
+        Ok(batch.finish())
+    }
+
+    /// One overlapped task wave: owner groups + storage-run chunks, all on
+    /// the executor at once. See [`FetchContext::fetch_batch_overlapped`].
+    fn overlapped_core(
+        ctx: &Arc<FetchContext>,
+        ids: &[u32],
+        executor: &Executor,
+        parallelism: usize,
+    ) -> Result<Vec<Arc<Sample>>> {
+        let mut batch = ctx.fetch_batch_core(ids)?;
+        let remote = std::mem::take(&mut batch.remote);
+        let pending = std::mem::take(&mut batch.pending);
+        if remote.is_empty() && pending.is_empty() {
+            return Ok(batch.finish());
+        }
+
+        // A task's result: which kind of work it was, plus its outcome.
+        enum Done {
+            Remote(OwnerFetch),
+            Storage(Vec<(u32, Vec<usize>)>, Result<Vec<Arc<Sample>>>),
+        }
+        let mut tasks: Vec<Box<dyn FnOnce() -> Done + Send>> =
+            Vec::with_capacity(remote.len() + parallelism);
+        for group in remote {
+            let ctx = Arc::clone(ctx);
+            tasks.push(Box::new(move || Done::Remote(ctx.fetch_owner(group))));
+        }
+        if !pending.is_empty() {
+            let per = pending.len().div_ceil(parallelism.max(1));
+            let mut it = pending.into_iter();
+            loop {
+                let chunk: Vec<(u32, Vec<usize>)> =
+                    it.by_ref().take(per).collect();
+                if chunk.is_empty() {
+                    break;
                 }
-            }
-            if bytes > 0 {
-                self.fabric.transfer(owner, self.learner, bytes);
-                self.counters.owner_messages.fetch_add(1, Ordering::Relaxed);
+                let ctx = Arc::clone(ctx);
+                tasks.push(Box::new(move || {
+                    // Untimed fill: the whole wave is inside the caller's
+                    // single fetch_ns charge — the timed `fetch_storage`
+                    // here would double-count every storage second.
+                    let got = ctx.storage_fill(&chunk);
+                    Done::Storage(chunk, got)
+                }));
             }
         }
-        Ok(batch)
+
+        // Single-writer assembly: run_batch is a barrier (the wave's wall
+        // time is max over tasks — decode and storage admission ran UNDER
+        // the in-flight transfers, which is the §9 win); this worker then
+        // folds every task's chunk into `slots`, alone.
+        let mut fallback: Vec<(u32, Vec<usize>)> = Vec::new();
+        for outcome in executor.run_batch(tasks) {
+            match outcome {
+                Ok(Done::Remote(fetched)) => {
+                    fallback.extend(batch.fill_remote(fetched));
+                }
+                Ok(Done::Storage(chunk, got)) => batch.fill(&chunk, got?),
+                Err(payload) => anyhow::bail!(
+                    "fetch task panicked: {}",
+                    panic_message(&*payload)
+                ),
+            }
+        }
+        // Stale-owner leftovers (rare): one more coalesced storage read
+        // (untimed — still inside the caller's fetch_ns charge).
+        if !fallback.is_empty() {
+            let got = ctx.storage_fill(&fallback)?;
+            batch.fill(&fallback, got);
+        }
+        Ok(batch.finish())
     }
 
     /// Untimed storage completion shared by `fetch`/`fetch_batch`/

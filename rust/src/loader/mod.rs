@@ -33,7 +33,7 @@
 pub mod fetch;
 pub mod reorder;
 
-pub use fetch::{DeferredBatch, FetchContext};
+pub use fetch::{DeferredBatch, FetchContext, OwnerFetch, OwnerGroup};
 pub use reorder::Reorder;
 
 use crate::runtime::{HostTensor, Program};
@@ -65,6 +65,18 @@ impl Default for LoaderConfig {
     }
 }
 
+impl LoaderConfig {
+    /// Clamp knobs to their working ranges (a zero prefetch window would
+    /// deadlock submit). Applied once where a config enters a substrate
+    /// ([`LoaderRuntime::new`], [`Loader`] spawn, the trainer's config
+    /// validation) so use sites read the field directly instead of
+    /// re-clamping at each one.
+    pub fn normalized(mut self) -> Self {
+        self.prefetch_batches = self.prefetch_batches.max(1);
+        self
+    }
+}
+
 /// Long-lived loader substrate: the decode executor and the batch buffer
 /// pool. Created once and shared across every [`Loader`] a learner spawns
 /// (the coordinator respawns a `Loader` per epoch; the runtime — and so
@@ -77,6 +89,7 @@ pub struct LoaderRuntime {
 
 impl LoaderRuntime {
     pub fn new(cfg: &LoaderConfig) -> LoaderRuntime {
+        let cfg = cfg.normalized();
         let executor = if cfg.threads_per_worker > 1 {
             Some(Arc::new(Executor::new(
                 cfg.threads_per_worker * cfg.workers.max(1),
@@ -87,8 +100,7 @@ impl LoaderRuntime {
         // Shelf space for every batch in flight: the prefetch window plus
         // one batch per worker plus consumer slack — so steady-state gets
         // always find a recycled buffer.
-        let pool =
-            BatchPool::new(cfg.prefetch_batches.max(1) + cfg.workers + 4);
+        let pool = BatchPool::new(cfg.prefetch_batches + cfg.workers + 4);
         LoaderRuntime { executor, pool }
     }
 
@@ -278,9 +290,10 @@ impl Loader {
         runtime: LoaderRuntime,
         shared: Arc<WorkerShared>,
     ) -> Loader {
+        let cfg = cfg.normalized();
         assert!(cfg.workers > 0, "need at least one loader worker");
         let requests: Queue<BatchRequest> =
-            Queue::bounded(cfg.prefetch_batches.max(1));
+            Queue::bounded(cfg.prefetch_batches);
         let completed: Reorder<Result<LoadedBatch>> = Reorder::new();
         let batches_loaded = Arc::new(AtomicU64::new(0));
         let mut workers = Vec::with_capacity(cfg.workers);
@@ -399,60 +412,26 @@ fn assemble(
     Ok(())
 }
 
-/// Resolve a batch's samples: phase one (local + owner-coalesced remote,
-/// one fabric message per distinct owner for the WHOLE batch) runs once on
-/// the worker; the storage completions — admission sleeps + decode
-/// occupancy — are chunked onto the persistent executor so they overlap
-/// exactly as the paper's §III-B multithreading does, with zero thread
-/// spawns per batch.
+/// Resolve a batch's samples through the overlapped wave: local hits
+/// resolve inline on the worker, then every remote owner group and every
+/// storage-run chunk is dispatched onto the persistent executor at once
+/// (DESIGN.md §9). Owner transfers ride distinct fabric links
+/// concurrently — a k-owner batch pays ≈ max over owners, not the sum —
+/// while storage admission sleeps + decode occupancy overlap under them,
+/// with zero thread spawns per batch. Without an executor (`threads ≤ 1`)
+/// the sequential `fetch_batch` path preserves the pre-overlap baseline.
 fn fetch_samples(
     shared: &WorkerShared,
     req: &BatchRequest,
 ) -> Result<Vec<Arc<Sample>>> {
     let b = req.ids.len();
     let nthreads = shared.threads.clamp(0, b);
-    let executor = match &shared.executor {
-        Some(ex) if nthreads > 1 => ex,
-        _ => return shared.ctx.fetch_batch(&req.ids),
-    };
-    let mut batch = shared.ctx.fetch_batch_begin(&req.ids)?;
-    let pending = std::mem::take(&mut batch.pending);
-    if pending.is_empty() {
-        return Ok(batch.finish());
-    }
-    let per = pending.len().div_ceil(nthreads);
-    let mut chunks: Vec<Vec<(u32, Vec<usize>)>> = Vec::new();
-    let mut it = pending.into_iter();
-    loop {
-        let chunk: Vec<(u32, Vec<usize>)> = it.by_ref().take(per).collect();
-        if chunk.is_empty() {
-            break;
+    match &shared.executor {
+        Some(ex) if nthreads > 1 => {
+            FetchContext::fetch_batch_overlapped(&shared.ctx, &req.ids, ex, nthreads)
         }
-        chunks.push(chunk);
+        _ => shared.ctx.fetch_batch(&req.ids),
     }
-    let tasks: Vec<_> = chunks
-        .into_iter()
-        .map(|chunk| {
-            let ctx = Arc::clone(&shared.ctx);
-            move || -> Result<(Vec<(u32, Vec<usize>)>, Vec<Arc<Sample>>)> {
-                let samples = ctx.fetch_storage(&chunk)?;
-                Ok((chunk, samples))
-            }
-        })
-        .collect();
-    for outcome in executor.run_batch(tasks) {
-        match outcome {
-            Ok(task_result) => {
-                let (chunk, samples) = task_result?;
-                batch.fill(&chunk, samples);
-            }
-            Err(payload) => anyhow::bail!(
-                "decode task panicked: {}",
-                panic_message(&*payload)
-            ),
-        }
-    }
-    Ok(batch.finish())
 }
 
 fn load_batch(shared: &WorkerShared, req: BatchRequest) -> Result<LoadedBatch> {
@@ -609,6 +588,20 @@ mod tests {
         run_loader(
             LoaderConfig { workers: 2, threads_per_worker: 64, prefetch_batches: 4 },
             "clamp",
+        );
+    }
+
+    #[test]
+    fn prefetch_is_normalized_once_at_the_boundary() {
+        let z = LoaderConfig { prefetch_batches: 0, ..Default::default() };
+        assert_eq!(z.normalized().prefetch_batches, 1);
+        let k = LoaderConfig { prefetch_batches: 7, ..Default::default() };
+        assert_eq!(k.normalized().prefetch_batches, 7);
+        // A zero-prefetch config still yields a working loader: spawn and
+        // runtime construction clamp it, so no use site needs to.
+        run_loader(
+            LoaderConfig { workers: 1, threads_per_worker: 2, prefetch_batches: 0 },
+            "prefetch0",
         );
     }
 

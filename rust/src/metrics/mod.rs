@@ -114,6 +114,21 @@ impl LoadSnapshot {
         self.local_hits + self.remote_hits + self.storage_loads
     }
 
+    /// This snapshot with the wall-clock occupancy fields zeroed, leaving
+    /// only the fields that must be bit-identical for a given workload
+    /// regardless of thread interleaving (hits, bytes, messages, runs).
+    /// The overlap-determinism tests compare these: the overlapped remote
+    /// path may complete owner transfers in any order, but accounting and
+    /// batch contents must not depend on that order.
+    pub fn deterministic(&self) -> LoadSnapshot {
+        LoadSnapshot {
+            decode_s: 0.0,
+            preprocess_s: 0.0,
+            fetch_s: 0.0,
+            ..*self
+        }
+    }
+
     /// Mean payload bytes copied per served sample — equals `record_bytes`
     /// exactly when the one-copy invariant holds end-to-end (preprocess
     /// included).
@@ -136,6 +151,85 @@ impl LoadSnapshot {
             owner_messages: self.owner_messages - earlier.owner_messages,
             storage_runs: self.storage_runs - earlier.storage_runs,
             copied_bytes: self.copied_bytes - earlier.copied_bytes,
+        }
+    }
+}
+
+/// Fabric overlap/occupancy snapshot ([`crate::net::Fabric::snapshot`]):
+/// meters whether remote transfers actually overlap on the link-occupancy
+/// fabric (DESIGN.md §9) instead of serializing on one worker thread.
+///
+/// * `serialized_transfer_s` — the sum of every transfer's charged cost
+///   (latency + bytes/bw): what the remote path would cost end-to-end if
+///   every transfer ran back-to-back (the pre-overlap behaviour).
+/// * `overlapped_wall_s` — real wall time during which at least one
+///   transfer was in flight (union of in-flight spans). With k-owner
+///   overlap this approaches max-over-owners, so
+///   `serialized / overlapped` — [`overlap_ratio`] — is the measured
+///   overlap factor (≈1 serialized, →k at full overlap). Only meaningful
+///   when the fabric runs `real_time`.
+/// * `queue_delay_s` — total time transfers spent queued behind earlier
+///   reservations on a contended link (completion − request − cost),
+///   split by direction in `egress_queue_s`/`ingress_queue_s`.
+///
+/// [`overlap_ratio`]: FabricSnapshot::overlap_ratio
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FabricSnapshot {
+    pub transfers: u64,
+    pub bytes: u64,
+    pub serialized_transfer_s: f64,
+    pub overlapped_wall_s: f64,
+    pub max_transfer_s: f64,
+    pub queue_delay_s: f64,
+    pub egress_queue_s: f64,
+    pub ingress_queue_s: f64,
+    /// Peak concurrently in-flight transfers (lifetime gauge; `delta`
+    /// keeps the later value, it cannot be windowed).
+    pub inflight_peak: u64,
+    /// Whether the fabric slept transfers in real time. The wall/queue
+    /// gauges are physical measurements only when true — virtual mode
+    /// anchors reservations to the request clock without sleeping, so
+    /// there they are relative indicators at best. Traffic counters
+    /// (transfers, bytes, serialized seconds) are exact in both modes.
+    pub real_time: bool,
+}
+
+impl FabricSnapshot {
+    /// Measured overlap factor: charged transfer seconds per wall second
+    /// of transfer activity. 0 when nothing was in flight long enough to
+    /// measure — or when the fabric ran virtual (no sleeps, so no wall
+    /// measurement exists to divide by).
+    pub fn overlap_ratio(&self) -> f64 {
+        if !self.real_time || self.overlapped_wall_s <= 0.0 {
+            0.0
+        } else {
+            self.serialized_transfer_s / self.overlapped_wall_s
+        }
+    }
+
+    /// Mean queueing delay per transfer.
+    pub fn queue_delay_per_transfer_s(&self) -> f64 {
+        if self.transfers == 0 {
+            0.0
+        } else {
+            self.queue_delay_s / self.transfers as f64
+        }
+    }
+
+    pub fn delta(&self, earlier: &FabricSnapshot) -> FabricSnapshot {
+        FabricSnapshot {
+            transfers: self.transfers - earlier.transfers,
+            bytes: self.bytes - earlier.bytes,
+            serialized_transfer_s: self.serialized_transfer_s
+                - earlier.serialized_transfer_s,
+            overlapped_wall_s: self.overlapped_wall_s
+                - earlier.overlapped_wall_s,
+            max_transfer_s: self.max_transfer_s,
+            queue_delay_s: self.queue_delay_s - earlier.queue_delay_s,
+            egress_queue_s: self.egress_queue_s - earlier.egress_queue_s,
+            ingress_queue_s: self.ingress_queue_s - earlier.ingress_queue_s,
+            inflight_peak: self.inflight_peak,
+            real_time: self.real_time,
         }
     }
 }
@@ -425,6 +519,70 @@ mod tests {
         assert_eq!(d.copied_bytes, 3072);
         assert!((d.bytes_copied_per_sample() - 3072.0).abs() < 1e-9);
         assert_eq!(LoadSnapshot::default().bytes_copied_per_sample(), 0.0);
+    }
+
+    #[test]
+    fn deterministic_view_zeroes_wall_clock_fields() {
+        let c = LoadCounters::new();
+        c.record(Source::Storage, 100);
+        c.fetch_ns.fetch_add(1234, Ordering::Relaxed);
+        c.decode_ns.fetch_add(999, Ordering::Relaxed);
+        let s = c.snapshot();
+        let d = s.deterministic();
+        assert_eq!(d.fetch_s, 0.0);
+        assert_eq!(d.decode_s, 0.0);
+        assert_eq!(d.preprocess_s, 0.0);
+        assert_eq!(d.storage_loads, 1);
+        assert_eq!(d.storage_bytes, 100);
+        // Two equal workloads compare equal regardless of timing.
+        assert_eq!(d, s.deterministic());
+    }
+
+    #[test]
+    fn fabric_snapshot_ratio_and_delta() {
+        let a = FabricSnapshot {
+            transfers: 2,
+            bytes: 100,
+            serialized_transfer_s: 0.4,
+            overlapped_wall_s: 0.1,
+            max_transfer_s: 0.2,
+            queue_delay_s: 0.05,
+            egress_queue_s: 0.05,
+            ingress_queue_s: 0.0,
+            inflight_peak: 3,
+            real_time: true,
+        };
+        assert!((a.overlap_ratio() - 4.0).abs() < 1e-12);
+        assert!((a.queue_delay_per_transfer_s() - 0.025).abs() < 1e-12);
+        // A virtual-mode snapshot never reports a wall-derived ratio.
+        let v = FabricSnapshot { real_time: false, ..a };
+        assert_eq!(v.overlap_ratio(), 0.0);
+        assert_eq!(FabricSnapshot::default().overlap_ratio(), 0.0);
+        assert_eq!(
+            FabricSnapshot::default().queue_delay_per_transfer_s(),
+            0.0
+        );
+        let b = FabricSnapshot {
+            transfers: 5,
+            bytes: 300,
+            serialized_transfer_s: 1.0,
+            overlapped_wall_s: 0.3,
+            max_transfer_s: 0.25,
+            queue_delay_s: 0.15,
+            egress_queue_s: 0.1,
+            ingress_queue_s: 0.05,
+            inflight_peak: 4,
+            real_time: true,
+        };
+        let d = b.delta(&a);
+        assert_eq!(d.transfers, 3);
+        assert_eq!(d.bytes, 200);
+        assert!((d.serialized_transfer_s - 0.6).abs() < 1e-12);
+        assert!((d.overlapped_wall_s - 0.2).abs() < 1e-12);
+        assert!((d.overlap_ratio() - 3.0).abs() < 1e-12);
+        // Peaks are lifetime gauges: the delta keeps the later value.
+        assert_eq!(d.inflight_peak, 4);
+        assert_eq!(d.max_transfer_s, 0.25);
     }
 
     #[test]

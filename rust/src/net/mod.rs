@@ -6,56 +6,205 @@
 //! learner gradient buffers and *charges* the ring-all-reduce cost
 //! `2·(p−1)/p · bytes / link_bw`.
 //!
-//! Only relative rates matter for the paper's phenomena (R_c ≫ R; Eq. 7–8),
-//! so the fabric is configured in bytes/sec alongside the storage throttle.
+//! Transfers are scheduled on a **link-occupancy model** (DESIGN.md §9):
+//! every endpoint owns an egress [`LinkClock`] and an ingress [`LinkClock`],
+//! and a transfer reserves virtual time on the sender's egress link and the
+//! receiver's ingress link. Reservations on *distinct* links overlap in
+//! wall time; reservations contending for the *same* link queue behind each
+//! other. A transfer's completion is a single reserved instant — callers
+//! sleep once, to that instant ([`TransferHandle::wait`]) — so k concurrent
+//! transfers from k distinct owners cost ≈ the max of their individual
+//! costs, not the sum, exactly as the paper's fabric assumption (R_c per
+//! link, links in parallel; Eq. 7–8) requires.
+//!
+//! Only relative rates matter for the paper's phenomena (R_c ≫ R), so the
+//! fabric is configured in bytes/sec alongside the storage throttle.
 
-use crate::util::stats::Welford;
+use crate::metrics::FabricSnapshot;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
-use std::time::Duration;
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
 
 /// Fabric configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct FabricConfig {
     /// Per-link bandwidth in bytes/sec (both directions, full duplex).
     pub link_bandwidth_bps: f64,
-    /// Per-message latency in seconds.
+    /// Per-message latency in seconds. Latency is propagation + software
+    /// stack, not wire occupancy: it pipelines, so concurrent messages do
+    /// not queue behind each other's latency.
     pub latency_s: f64,
+    /// Ingress fan-in width: how many full-rate incoming transfers an
+    /// endpoint's NIC complex can land concurrently. Models the multi-rail
+    /// adapters of Lassen-class nodes (one rail per learner); `1` degrades
+    /// to a single shared ingress wire that serializes the bandwidth term
+    /// of every incoming transfer.
+    pub ingress_rails: usize,
     /// If false, transfers are accounted but not slept (virtual mode for
-    /// fast tests; the DES charges time instead).
+    /// fast tests; the DES charges time instead). Link clocks still
+    /// reserve occupancy, but reservation *start* times are anchored to
+    /// the real request clock, so in virtual mode the queue/occupancy
+    /// gauges are relative indicators (they depend on how fast the host
+    /// issues transfers), and the wall-time overlap metrics are
+    /// meaningful only when `real_time`. Traffic counters (bytes,
+    /// messages, charged transfer time) are exact in both modes.
     pub real_time: bool,
 }
 
 impl Default for FabricConfig {
     fn default() -> Self {
-        // EDR-class: ~12 GB/s per link, ~2us latency.
+        // EDR-class: ~12 GB/s per link, ~2us latency, quad-rail nodes.
         FabricConfig {
             link_bandwidth_bps: 12.0e9,
             latency_s: 2.0e-6,
+            ingress_rails: 4,
             real_time: true,
         }
     }
 }
 
+/// One direction of one endpoint's link: an occupancy resource in virtual
+/// time. `busy_until_ns` is the earliest instant a new reservation can
+/// start; reservation is a CAS loop, so the clock is lock-free and safe to
+/// hammer from every loader thread at once.
+#[derive(Default)]
+pub struct LinkClock {
+    busy_until_ns: AtomicU64,
+    /// Total time reservations spent queued behind earlier ones.
+    queue_ns: AtomicU64,
+    reservations: AtomicU64,
+}
+
+impl LinkClock {
+    /// Reserve `occ_ns` of occupancy at or after `now_ns`; returns the
+    /// reserved `(start, end)` in fabric time.
+    fn reserve(&self, now_ns: u64, occ_ns: u64) -> (u64, u64) {
+        loop {
+            let free = self.busy_until_ns.load(Ordering::Acquire);
+            let start = free.max(now_ns);
+            let end = start + occ_ns;
+            if self
+                .busy_until_ns
+                .compare_exchange_weak(
+                    free,
+                    end,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                )
+                .is_ok()
+            {
+                if start > now_ns {
+                    self.queue_ns.fetch_add(start - now_ns, Ordering::Relaxed);
+                }
+                self.reservations.fetch_add(1, Ordering::Relaxed);
+                return (start, end);
+            }
+        }
+    }
+
+    pub fn queue_delay(&self) -> Duration {
+        Duration::from_nanos(self.queue_ns.load(Ordering::Relaxed))
+    }
+
+    pub fn reservations(&self) -> u64 {
+        self.reservations.load(Ordering::Relaxed)
+    }
+}
+
+/// An endpoint's pair of directional link clocks.
+#[derive(Default)]
+struct Endpoint {
+    egress: LinkClock,
+    ingress: LinkClock,
+}
+
 /// The interconnect. Thread-safe; all learners share one instance.
 pub struct Fabric {
     cfg: FabricConfig,
+    /// Origin of fabric time (reservations are nanoseconds since this).
+    epoch: Instant,
+    /// Per-endpoint link clocks, grown on first use of an endpoint id
+    /// (read-mostly: the write lock is only ever taken to grow).
+    links: RwLock<Vec<Arc<Endpoint>>>,
     p2p_bytes: AtomicU64,
     p2p_messages: AtomicU64,
     allreduce_bytes: AtomicU64,
     allreduce_count: AtomicU64,
-    transfer_times: Mutex<Welford>,
+    // Transfer-time stats, lock-free (was a Mutex<Welford> — a global
+    // lock on the remote hit path).
+    transfer_ns_sum: AtomicU64,
+    transfer_ns_max: AtomicU64,
+    // Overlap accounting: serialized (charged) vs overlapped (wall) time.
+    queue_delay_ns: AtomicU64,
+    inflight: AtomicU64,
+    inflight_peak: AtomicU64,
+    busy_start_ns: AtomicU64,
+    overlapped_ns: AtomicU64,
+}
+
+/// An in-flight transfer: link time is already reserved; [`wait`] sleeps
+/// once, to the reserved completion instant. Dropping without waiting
+/// completes the accounting immediately (the reservation stands — the
+/// bytes still occupy the links — but no sleep is charged).
+///
+/// [`wait`]: TransferHandle::wait
+#[must_use = "a transfer completes (and is slept) in TransferHandle::wait"]
+pub struct TransferHandle<'a> {
+    fabric: &'a Fabric,
+    done_ns: u64,
+    cost: Duration,
+    queue_delay: Duration,
+    finished: bool,
+}
+
+impl TransferHandle<'_> {
+    /// The charged cost of this transfer alone (latency + bytes/bw),
+    /// excluding queueing behind other transfers.
+    pub fn cost(&self) -> Duration {
+        self.cost
+    }
+
+    /// Time this transfer spent queued behind earlier reservations on
+    /// either link.
+    pub fn queue_delay(&self) -> Duration {
+        self.queue_delay
+    }
+
+    /// Block (single sleep, when `real_time`) until the reserved
+    /// completion instant; returns the charged cost.
+    pub fn wait(mut self) -> Duration {
+        self.finished = true;
+        self.fabric.complete(self.done_ns, true);
+        self.cost
+    }
+}
+
+impl Drop for TransferHandle<'_> {
+    fn drop(&mut self) {
+        if !self.finished {
+            self.fabric.complete(self.done_ns, false);
+        }
+    }
 }
 
 impl Fabric {
     pub fn new(cfg: FabricConfig) -> Self {
+        assert!(cfg.ingress_rails > 0, "need at least one ingress rail");
         Fabric {
             cfg,
+            epoch: Instant::now(),
+            links: RwLock::new(Vec::new()),
             p2p_bytes: AtomicU64::new(0),
             p2p_messages: AtomicU64::new(0),
             allreduce_bytes: AtomicU64::new(0),
             allreduce_count: AtomicU64::new(0),
-            transfer_times: Mutex::new(Welford::new()),
+            transfer_ns_sum: AtomicU64::new(0),
+            transfer_ns_max: AtomicU64::new(0),
+            queue_delay_ns: AtomicU64::new(0),
+            inflight: AtomicU64::new(0),
+            inflight_peak: AtomicU64::new(0),
+            busy_start_ns: AtomicU64::new(0),
+            overlapped_ns: AtomicU64::new(0),
         }
     }
 
@@ -63,30 +212,113 @@ impl Fabric {
         &self.cfg
     }
 
-    /// Time a point-to-point transfer of `bytes` would take.
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Resolve a transfer's endpoint pair under ONE read guard (the write
+    /// lock is taken only while growing the table, i.e. the first time an
+    /// endpoint id is seen). Steady state: one uncontended read-lock per
+    /// transfer — per owner *message*, not per sample.
+    fn endpoints(&self, a: usize, b: usize) -> (Arc<Endpoint>, Arc<Endpoint>) {
+        {
+            let links = self.links.read().unwrap();
+            if a < links.len() && b < links.len() {
+                return (Arc::clone(&links[a]), Arc::clone(&links[b]));
+            }
+        }
+        let mut links = self.links.write().unwrap();
+        while links.len() <= a.max(b) {
+            links.push(Arc::new(Endpoint::default()));
+        }
+        (Arc::clone(&links[a]), Arc::clone(&links[b]))
+    }
+
+    /// Time a point-to-point transfer of `bytes` would take on an idle
+    /// fabric.
     pub fn p2p_cost(&self, bytes: u64) -> Duration {
         Duration::from_secs_f64(
             self.cfg.latency_s + bytes as f64 / self.cfg.link_bandwidth_bps,
         )
     }
 
-    /// Transfer `bytes` from one learner to another: sleeps the modeled
-    /// cost (when `real_time`) and records traffic. Returns the charged
-    /// duration.
+    /// Begin a point-to-point transfer: reserve occupancy on `from`'s
+    /// egress link and `to`'s ingress link (virtual-time CAS reservation,
+    /// no lock, no sleep) and return a handle whose
+    /// [`TransferHandle::wait`] sleeps once, to the reserved completion.
     ///
     /// One call = one message = one latency charge, which is what makes
-    /// owner-coalescing pay: `FetchContext::fetch_batch` batches all of a
-    /// remote owner's samples into a single `transfer`, so a batch costs
-    /// O(distinct owners) latencies instead of O(batch) (DESIGN.md §4).
-    pub fn transfer(&self, _from: usize, _to: usize, bytes: u64) -> Duration {
+    /// owner-coalescing pay: the batch fetch path sends ONE message per
+    /// distinct remote owner (DESIGN.md §4), and dispatches the per-owner
+    /// messages concurrently so distinct owner links overlap (§9).
+    pub fn transfer_begin(
+        &self,
+        from: usize,
+        to: usize,
+        bytes: u64,
+    ) -> TransferHandle<'_> {
         let cost = self.p2p_cost(bytes);
-        if self.cfg.real_time {
-            std::thread::sleep(cost);
-        }
+        let cost_ns = cost.as_nanos() as u64;
+        let latency_ns = Duration::from_secs_f64(self.cfg.latency_s)
+            .as_nanos() as u64;
+        // bytes/bw: the wire occupancy (latency pipelines, it never queues)
+        let occ_ns = cost_ns.saturating_sub(latency_ns);
+        let occ_ingress_ns =
+            (occ_ns as f64 / self.cfg.ingress_rails as f64) as u64;
+        let now = self.now_ns();
+        let (src, dst) = self.endpoints(from, to);
+        let (_, egress_end) = src.egress.reserve(now, occ_ns);
+        let (_, ingress_end) = dst.ingress.reserve(now, occ_ingress_ns);
+        let done_ns = egress_end.max(ingress_end) + latency_ns;
+        let queue_ns = (done_ns - now).saturating_sub(cost_ns);
+
         self.p2p_bytes.fetch_add(bytes, Ordering::Relaxed);
         self.p2p_messages.fetch_add(1, Ordering::Relaxed);
-        self.transfer_times.lock().unwrap().push(cost.as_secs_f64());
-        cost
+        self.transfer_ns_sum.fetch_add(cost_ns, Ordering::Relaxed);
+        self.transfer_ns_max.fetch_max(cost_ns, Ordering::Relaxed);
+        self.queue_delay_ns.fetch_add(queue_ns, Ordering::Relaxed);
+        let inflight = self.inflight.fetch_add(1, Ordering::AcqRel) + 1;
+        if inflight == 1 {
+            // Only a begin that observed 0 opens a new busy span, and any
+            // complete that will close the old one has already read
+            // `busy_start_ns` before its decrement (see `complete`).
+            self.busy_start_ns.store(now, Ordering::Release);
+        }
+        self.inflight_peak.fetch_max(inflight, Ordering::Relaxed);
+
+        TransferHandle {
+            fabric: self,
+            done_ns,
+            cost,
+            queue_delay: Duration::from_nanos(queue_ns),
+            finished: false,
+        }
+    }
+
+    /// Transfer `bytes` from one learner to another, blocking until the
+    /// reserved completion (when `real_time`). Returns the charged cost
+    /// (excluding queueing). Equivalent to `transfer_begin(..).wait()`.
+    pub fn transfer(&self, from: usize, to: usize, bytes: u64) -> Duration {
+        self.transfer_begin(from, to, bytes).wait()
+    }
+
+    fn complete(&self, done_ns: u64, sleep: bool) {
+        if sleep && self.cfg.real_time {
+            let now = self.now_ns();
+            if done_ns > now {
+                std::thread::sleep(Duration::from_nanos(done_ns - now));
+            }
+        }
+        let now = self.now_ns();
+        // Read the span start BEFORE decrementing: a racing begin only
+        // overwrites `busy_start_ns` after it observes our decremented 0,
+        // so the last completer of a busy span always closes it against
+        // the span's true start (never a freshly opened one).
+        let started = self.busy_start_ns.load(Ordering::Acquire);
+        if self.inflight.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.overlapped_ns
+                .fetch_add(now.saturating_sub(started), Ordering::Relaxed);
+        }
     }
 
     /// Ring all-reduce cost model: each member sends/receives
@@ -150,7 +382,42 @@ impl Fabric {
     }
 
     pub fn mean_transfer_s(&self) -> f64 {
-        self.transfer_times.lock().unwrap().mean()
+        let n = self.p2p_messages.load(Ordering::Relaxed);
+        if n == 0 {
+            return f64::NAN;
+        }
+        self.transfer_ns_sum.load(Ordering::Relaxed) as f64 / 1e9 / n as f64
+    }
+
+    /// Overlap/occupancy counters (see [`FabricSnapshot`]). The
+    /// `overlapped_wall_s` busy-span is measured in real time, so the
+    /// overlap ratio is meaningful only in `real_time` mode.
+    pub fn snapshot(&self) -> FabricSnapshot {
+        let links = self.links.read().unwrap();
+        let (mut egress_q, mut ingress_q) = (0u64, 0u64);
+        for ep in links.iter() {
+            egress_q += ep.egress.queue_ns.load(Ordering::Relaxed);
+            ingress_q += ep.ingress.queue_ns.load(Ordering::Relaxed);
+        }
+        FabricSnapshot {
+            transfers: self.p2p_messages.load(Ordering::Relaxed),
+            bytes: self.p2p_bytes.load(Ordering::Relaxed),
+            serialized_transfer_s: self.transfer_ns_sum.load(Ordering::Relaxed)
+                as f64
+                / 1e9,
+            overlapped_wall_s: self.overlapped_ns.load(Ordering::Relaxed)
+                as f64
+                / 1e9,
+            max_transfer_s: self.transfer_ns_max.load(Ordering::Relaxed)
+                as f64
+                / 1e9,
+            queue_delay_s: self.queue_delay_ns.load(Ordering::Relaxed) as f64
+                / 1e9,
+            egress_queue_s: egress_q as f64 / 1e9,
+            ingress_queue_s: ingress_q as f64 / 1e9,
+            inflight_peak: self.inflight_peak.load(Ordering::Relaxed),
+            real_time: self.cfg.real_time,
+        }
     }
 }
 
@@ -160,6 +427,17 @@ mod tests {
 
     fn virtual_fabric() -> Fabric {
         Fabric::new(FabricConfig { real_time: false, ..Default::default() })
+    }
+
+    /// Slow fabric for wall-clock overlap tests: 1 MB/s, zero-ish latency,
+    /// costs in the milliseconds so scheduler noise stays negligible.
+    fn slow_fabric(rails: usize) -> Fabric {
+        Fabric::new(FabricConfig {
+            link_bandwidth_bps: 1.0e6,
+            latency_s: 1.0e-5,
+            ingress_rails: rails,
+            real_time: true,
+        })
     }
 
     #[test]
@@ -181,6 +459,134 @@ mod tests {
         assert_eq!(f.p2p_bytes(), 1500);
         assert_eq!(f.p2p_messages(), 2);
         assert!(f.mean_transfer_s() > 0.0);
+        let snap = f.snapshot();
+        assert_eq!(snap.transfers, 2);
+        assert_eq!(snap.bytes, 1500);
+        assert!(snap.serialized_transfer_s > 0.0);
+        assert!(snap.max_transfer_s >= f.p2p_cost(1000).as_secs_f64() - 1e-12);
+        assert_eq!(snap.inflight_peak, 1);
+    }
+
+    #[test]
+    fn distinct_owner_links_overlap_in_wall_time() {
+        // 4 senders, one receiver, quad-rail ingress: wall ≈ max of the
+        // individual costs (~4 ms each), nowhere near the 16 ms sum.
+        let f = Arc::new(slow_fabric(4));
+        let bytes = 4000u64; // 4 ms at 1 MB/s
+        let serial: f64 = (1..=4).map(|_| f.p2p_cost(bytes).as_secs_f64()).sum();
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for owner in 1..=4usize {
+                let f = Arc::clone(&f);
+                s.spawn(move || {
+                    f.transfer(owner, 0, bytes);
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        assert!(
+            wall < serial * 0.6,
+            "4-owner fan-in must overlap: wall={wall:.4}s serial={serial:.4}s"
+        );
+        let snap = f.snapshot();
+        assert!(snap.inflight_peak >= 2, "peak={}", snap.inflight_peak);
+        assert!(
+            snap.serialized_transfer_s / snap.overlapped_wall_s > 1.5,
+            "overlap ratio too low: {snap:?}"
+        );
+    }
+
+    #[test]
+    fn same_egress_link_queues() {
+        // Two concurrent transfers from the SAME owner serialize on its
+        // egress clock: wall ≈ sum, and queueing delay is recorded.
+        let f = Arc::new(slow_fabric(4));
+        let bytes = 3000u64; // 3 ms each
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for to in [0usize, 2] {
+                let f = Arc::clone(&f);
+                s.spawn(move || {
+                    f.transfer(1, to, bytes);
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let single = f.p2p_cost(bytes).as_secs_f64();
+        assert!(
+            wall > single * 1.8,
+            "same-link transfers must queue: wall={wall:.4}s single={single:.4}s"
+        );
+        let snap = f.snapshot();
+        // The queued transfer waited ~one full occupancy (minus thread
+        // spawn skew) behind the first.
+        assert!(snap.queue_delay_s > single * 0.5, "{snap:?}");
+        assert!(snap.egress_queue_s > 0.0, "{snap:?}");
+    }
+
+    #[test]
+    fn single_rail_ingress_serializes_bandwidth() {
+        // rails = 1: the receiver's one ingress wire carries every
+        // incoming bandwidth term back-to-back, so a 4-owner fan-in
+        // approaches the sum again (minus latency pipelining).
+        let f = Arc::new(slow_fabric(1));
+        let bytes = 2000u64; // 2 ms each
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for owner in 1..=4usize {
+                let f = Arc::clone(&f);
+                s.spawn(move || {
+                    f.transfer(owner, 0, bytes);
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let single = f.p2p_cost(bytes).as_secs_f64();
+        assert!(
+            wall > single * 3.0,
+            "single-rail fan-in must serialize: wall={wall:.4}s"
+        );
+    }
+
+    #[test]
+    fn transfer_begin_reserves_then_single_sleep() {
+        let f = slow_fabric(4);
+        let h = f.transfer_begin(1, 0, 2000); // 2 ms
+        assert_eq!(h.queue_delay(), Duration::ZERO);
+        let cost = h.cost();
+        let t0 = Instant::now();
+        let charged = h.wait();
+        assert_eq!(charged, cost);
+        // The sleep covers the reserved completion (allow scheduler slop).
+        assert!(t0.elapsed().as_secs_f64() > cost.as_secs_f64() * 0.5);
+    }
+
+    #[test]
+    fn dropped_handle_completes_accounting_without_sleep() {
+        let f = slow_fabric(4);
+        let t0 = Instant::now();
+        drop(f.transfer_begin(1, 0, 50_000)); // 50 ms if slept
+        assert!(t0.elapsed().as_secs_f64() < 0.040);
+        assert_eq!(f.p2p_messages(), 1);
+        let snap = f.snapshot();
+        assert_eq!(snap.inflight_peak, 1);
+    }
+
+    #[test]
+    fn virtual_mode_accounts_without_sleeping() {
+        let f = virtual_fabric();
+        let t0 = Instant::now();
+        // 1 GiB at 12 GB/s would sleep ~90ms per call in real-time mode.
+        for _ in 0..4 {
+            f.transfer(1, 0, 1 << 30);
+        }
+        assert!(t0.elapsed().as_secs_f64() < 0.050, "virtual mode slept");
+        assert_eq!(f.p2p_messages(), 4);
+        // Back-to-back reservations on one sender's egress clock queue in
+        // virtual time even though nothing sleeps (each reserves ~90 ms of
+        // occupancy; the loop issues them within the elapsed bound above,
+        // so at least the later ones start queued).
+        assert!(f.snapshot().egress_queue_s > 0.0);
     }
 
     #[test]

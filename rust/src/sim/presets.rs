@@ -19,6 +19,9 @@ use crate::storage::Catalog;
 /// Shared hardware constants.
 pub const R_STORAGE_BPS: f64 = 5.2e9;
 pub const RC_LINK_BPS: f64 = 12.5e9;
+/// Ingress fan-in width per node (multi-rail EDR adapters, one rail per
+/// learner — mirrors the live `FabricConfig::ingress_rails` default).
+pub const RC_INGRESS_RAILS: usize = 4;
 pub const U_THREAD_SPS: f64 = 125.0;
 /// Per-node local-cache fetch + batch-assembly bandwidth (DRAM reads
 /// through the loader; calibrates Fig. 11's MuMMI speedups: 18-120x).
@@ -43,6 +46,7 @@ pub fn loading_only(
         per_learner_batch: 128,
         r_storage_bps: R_STORAGE_BPS,
         rc_link_bps: RC_LINK_BPS,
+        rc_ingress_rails: RC_INGRESS_RAILS,
         u_thread_sps: U_THREAD_SPS,
         workers: 10,
         threads_per_worker: if multithreaded { 4 } else { 1 },

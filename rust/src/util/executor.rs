@@ -49,6 +49,8 @@ struct Inner {
     task_panics: AtomicU64,
     queue_depth_peak: AtomicU64,
     threads_spawned: AtomicU64,
+    tasks_running: AtomicU64,
+    tasks_inflight_peak: AtomicU64,
 }
 
 /// Counters snapshot for the bench trajectory.
@@ -63,6 +65,10 @@ pub struct ExecutorStats {
     pub task_panics: u64,
     /// Peak number of queued-not-yet-started tasks.
     pub queue_depth_peak: u64,
+    /// Peak tasks *executing* concurrently (≤ threads). The overlapped
+    /// remote-fetch wave (DESIGN.md §9) shows up here: owner-transfer
+    /// tasks occupying pool threads while their fabric reservations run.
+    pub tasks_inflight_peak: u64,
 }
 
 /// A fixed-size, long-lived worker pool with blocking batch submission.
@@ -86,6 +92,8 @@ impl Executor {
             task_panics: AtomicU64::new(0),
             queue_depth_peak: AtomicU64::new(0),
             threads_spawned: AtomicU64::new(threads as u64),
+            tasks_running: AtomicU64::new(0),
+            tasks_inflight_peak: AtomicU64::new(0),
         });
         let handles = (0..threads)
             .map(|k| {
@@ -169,6 +177,10 @@ impl Executor {
                 .inner
                 .queue_depth_peak
                 .load(Ordering::Relaxed),
+            tasks_inflight_peak: self
+                .inner
+                .tasks_inflight_peak
+                .load(Ordering::Relaxed),
         }
     }
 }
@@ -201,11 +213,14 @@ fn worker_loop(inner: &Inner) {
             }
         };
         inner.tasks_run.fetch_add(1, Ordering::Relaxed);
+        let running = inner.tasks_running.fetch_add(1, Ordering::Relaxed) + 1;
+        inner.tasks_inflight_peak.fetch_max(running, Ordering::Relaxed);
         // run_batch already catches per-task panics; this outer catch
         // covers raw submit() jobs so a panic can never kill a pool thread.
         if catch_unwind(AssertUnwindSafe(job)).is_err() {
             inner.task_panics.fetch_add(1, Ordering::Relaxed);
         }
+        inner.tasks_running.fetch_sub(1, Ordering::Relaxed);
     }
 }
 

@@ -1,0 +1,275 @@
+//! Overlapped remote fetch: determinism, stale-owner races, and wall-time
+//! overlap (DESIGN.md §9).
+//!
+//! The owner-task wave may complete transfers in any order, on any number
+//! of executor threads — batch contents, per-source accounting, and the
+//! directory's final state must not depend on that order. And the whole
+//! point of the wave: a batch touching k owners should pay ≈ the max of
+//! the k transfer costs, not the sum.
+
+use dlio::cache::{CacheDirectory, Policy, SampleCache};
+use dlio::loader::FetchContext;
+use dlio::metrics::LoadCounters;
+use dlio::net::{Fabric, FabricConfig};
+use dlio::storage::{generate, StorageSystem, SyntheticSpec};
+use dlio::util::Executor;
+use std::sync::Arc;
+use std::time::Instant;
+
+const RB: usize = 3072;
+
+fn data_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("dlio-overlap-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    generate(&dir, &SyntheticSpec { n_samples: 100, ..Default::default() })
+        .unwrap();
+    dir
+}
+
+fn ctx(
+    dir: &std::path::Path,
+    p: usize,
+    cache_on_load: bool,
+    fabric: Arc<Fabric>,
+) -> Arc<FetchContext> {
+    Arc::new(FetchContext {
+        learner: 0,
+        storage: Arc::new(StorageSystem::open(dir, None).unwrap()),
+        caches: (0..p)
+            .map(|_| Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly)))
+            .collect(),
+        directory: Arc::new(CacheDirectory::new(100)),
+        fabric,
+        cache_on_load,
+        decode_s_per_kib: 0.0,
+        counters: Arc::new(LoadCounters::new()),
+    })
+}
+
+fn virtual_fabric() -> Arc<Fabric> {
+    Arc::new(Fabric::new(FabricConfig {
+        real_time: false,
+        ..Default::default()
+    }))
+}
+
+/// A mixed workload: 12 remote ids over owners 1..=3, 4 local hits, 6
+/// storage misses, one stale directory entry, plus duplicated ids.
+fn mixed_scenario(fc: &FetchContext) -> Vec<u32> {
+    let mut ids: Vec<u32> = Vec::new();
+    for id in 0..12u32 {
+        let owner = 1 + (id as usize % 3);
+        let s = Arc::new(fc.storage.read_sample(id).unwrap());
+        fc.caches[owner].insert(s);
+        fc.directory.set_owner(id, owner);
+        ids.push(id);
+    }
+    for id in 12..16u32 {
+        let s = Arc::new(fc.storage.read_sample(id).unwrap());
+        fc.caches[0].insert(s);
+        fc.directory.set_owner(id, 0);
+        ids.push(id);
+    }
+    for id in 16..22u32 {
+        ids.push(id); // uncached: storage
+    }
+    // Stale: directory claims owner 2 holds 40, but its cache does not.
+    fc.directory.set_owner(40, 2);
+    ids.push(40);
+    // Duplicates across every source class.
+    ids.extend([0, 12, 16, 0]);
+    ids
+}
+
+/// Everything downstream accounting can observe after one wave.
+#[derive(PartialEq, Debug)]
+struct WaveResult {
+    ids: Vec<u32>,
+    bytes: Vec<Vec<u8>>,
+    snap: dlio::metrics::LoadSnapshot,
+    owners: Vec<Option<usize>>,
+    ours: Vec<bool>,
+}
+
+/// Run the mixed scenario through the overlapped wave on `threads`
+/// executor threads. The storage-chunk parallelism is held FIXED (4) so
+/// both runs dispatch the *identical* task set — the run-coalescing
+/// meters (`storage_runs`) legitimately depend on how `pending` is
+/// chunked — and only the execution interleaving varies with `threads`.
+fn run_wave(tag: &str, threads: usize) -> WaveResult {
+    let dir = data_dir(tag);
+    let fc = ctx(&dir, 4, true, virtual_fabric());
+    let ids = mixed_scenario(&fc);
+    let ex = Executor::new(threads);
+    let got = FetchContext::fetch_batch_overlapped(&fc, &ids, &ex, 4).unwrap();
+    assert_eq!(got.len(), ids.len());
+    WaveResult {
+        bytes: got.iter().map(|s| s.bytes.to_vec()).collect(),
+        owners: (0..100u32).map(|id| fc.directory.owner(id)).collect(),
+        ours: (0..100u32).map(|id| fc.caches[0].contains(id)).collect(),
+        snap: fc.counters.snapshot().deterministic(),
+        ids,
+    }
+}
+
+#[test]
+fn overlapped_wave_is_deterministic_across_thread_counts() {
+    let one = run_wave("det1", 1);
+    let eight = run_wave("det8", 8);
+    assert_eq!(
+        one, eight,
+        "batch contents, accounting, directory and cache state must not \
+         depend on task interleaving"
+    );
+    // And the accounting itself is what the scenario prescribes:
+    // 12 remote + 2 dup positions of id 0, 4 local + 1 dup, 6 storage +
+    // 1 dup of id 16, and the stale id 40 falling back to storage.
+    let snap = one.snap;
+    assert_eq!(snap.remote_hits, 12 + 2);
+    assert_eq!(snap.local_hits, 4 + 1);
+    assert_eq!(snap.storage_loads, 6 + 1 + 1);
+    assert_eq!(snap.owner_messages, 3, "one message per distinct owner");
+    assert_eq!(snap.batch_fetches, 1);
+    assert_eq!(
+        snap.total_samples(),
+        one.ids.len() as u64,
+        "every position accounted exactly once"
+    );
+    // Stale entry repaired: 40 was repopulated to us.
+    assert_eq!(one.owners[40], Some(0));
+    assert!(one.ours[40]);
+}
+
+#[test]
+fn stale_owner_eviction_between_begin_and_owner_read_repairs() {
+    // The overlapped path widens the lookup→read race window: the
+    // directory is consulted at batch-planning time, the owner's cache
+    // only when its task runs. Evict in between: the task must fall back
+    // to storage, repair the directory, and account each position once.
+    let dir = data_dir("race");
+    let fabric = virtual_fabric();
+    let storage = Arc::new(StorageSystem::open(&dir, None).unwrap());
+    // Owner 1 runs a 2-sample Fifo cache so we can force an eviction.
+    let caches: Vec<Arc<SampleCache>> = vec![
+        Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly)),
+        Arc::new(SampleCache::new((2 * RB) as u64, Policy::Fifo)),
+        Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly)),
+    ];
+    let fc = Arc::new(FetchContext {
+        learner: 0,
+        storage: Arc::clone(&storage),
+        caches,
+        directory: Arc::new(CacheDirectory::new(100)),
+        fabric,
+        cache_on_load: true,
+        decode_s_per_kib: 0.0,
+        counters: Arc::new(LoadCounters::new()),
+    });
+    for id in [0u32, 1] {
+        let s = Arc::new(storage.read_sample(id).unwrap());
+        assert!(fc.caches[1].insert(s));
+        fc.directory.set_owner(id, 1);
+    }
+
+    // Plan the batch (directory still says owner 1 holds both)...
+    let mut batch = fc.fetch_batch_begin(&[0, 1, 0]).unwrap();
+    assert_eq!(batch.remote.len(), 1);
+    assert_eq!(batch.remote[0].owner, 1);
+    assert_eq!(batch.remote[0].entries.len(), 2);
+    assert!(batch.pending.is_empty());
+
+    // ...then the owner evicts id 0 (Fifo: oldest out) before its task
+    // runs — the in-flight-transfer race.
+    let evictor = Arc::new(storage.read_sample(50).unwrap());
+    fc.caches[1].insert(evictor);
+    assert!(!fc.caches[1].contains(0), "precondition: 0 evicted");
+    assert!(fc.caches[1].contains(1));
+
+    // Resolve the wave exactly as the worker does.
+    for group in std::mem::take(&mut batch.remote) {
+        let fetched = fc.fetch_owner(group);
+        let fallback = batch.fill_remote(fetched);
+        batch.pending.extend(fallback);
+    }
+    let pending = std::mem::take(&mut batch.pending);
+    let got = fc.fetch_storage(&pending).unwrap();
+    batch.fill(&pending, got);
+    let samples = batch.finish();
+
+    // Contents correct, in request order.
+    for (k, want) in [0u32, 1, 0].iter().enumerate() {
+        assert_eq!(samples[k].id, *want);
+        let direct = storage.read_sample(*want).unwrap();
+        assert_eq!(samples[k].bytes, direct.bytes);
+    }
+    // No double accounting: id 0 (2 positions) from storage, id 1 remote.
+    let snap = fc.counters.snapshot();
+    assert_eq!(snap.remote_hits, 1);
+    assert_eq!(snap.storage_loads, 2);
+    assert_eq!(snap.local_hits, 0);
+    assert_eq!(snap.total_samples(), 3);
+    // One message (owner 1's surviving hit), one payload.
+    assert_eq!(snap.owner_messages, 1);
+    assert_eq!(fc.fabric.p2p_messages(), 1);
+    assert_eq!(fc.fabric.p2p_bytes(), RB as u64);
+    // Directory repaired: 0 now points at us (repopulated), 1 untouched.
+    assert_eq!(fc.directory.owner(0), Some(0));
+    assert!(fc.caches[0].contains(0));
+    assert_eq!(fc.directory.owner(1), Some(1));
+}
+
+#[test]
+fn stale_owner_without_population_clears_the_claim() {
+    let dir = data_dir("race-nopop");
+    let fc = ctx(&dir, 3, false, virtual_fabric());
+    fc.directory.set_owner(7, 2); // stale: cache 2 is empty
+    let ex = Executor::new(4);
+    let got = FetchContext::fetch_batch_overlapped(&fc, &[7], &ex, 4).unwrap();
+    assert_eq!(got[0].id, 7);
+    assert_eq!(fc.directory.owner(7), None, "stale claim must be cleared");
+    let snap = fc.counters.snapshot();
+    assert_eq!(snap.storage_loads, 1);
+    assert_eq!(snap.remote_hits, 0);
+    assert_eq!(fc.fabric.p2p_messages(), 0, "no phantom transfer");
+}
+
+#[test]
+fn remote_wall_time_approaches_max_over_owners() {
+    // Real-time fabric, slow enough (1 MB/s) that modeled costs dominate
+    // scheduler noise: 4 owners × 2 samples × 3 KiB ≈ 6.1 ms per owner
+    // message. Serial resolution pays ≈ 24.6 ms; the overlapped wave must
+    // land well under 60% of that (max-over-owners + ingress queueing).
+    let dir = data_dir("wall");
+    let fabric = Arc::new(Fabric::new(FabricConfig {
+        link_bandwidth_bps: 1.0e6,
+        latency_s: 1.0e-5,
+        ingress_rails: 4,
+        real_time: true,
+    }));
+    let fc = ctx(&dir, 5, false, Arc::clone(&fabric));
+    let ids: Vec<u32> = (0..8).collect();
+    for &id in &ids {
+        let owner = 1 + (id as usize % 4);
+        let s = Arc::new(fc.storage.read_sample(id).unwrap());
+        fc.caches[owner].insert(s);
+        fc.directory.set_owner(id, owner);
+    }
+    let t0 = Instant::now();
+    fc.fetch_batch(&ids).unwrap();
+    let serial = t0.elapsed().as_secs_f64();
+
+    let ex = Executor::new(8);
+    let t1 = Instant::now();
+    let got = FetchContext::fetch_batch_overlapped(&fc, &ids, &ex, 4).unwrap();
+    let overlapped = t1.elapsed().as_secs_f64();
+    assert_eq!(got.len(), 8);
+    assert!(
+        overlapped < serial * 0.6,
+        "remote wall must approach max-over-owners: \
+         serial={serial:.4}s overlapped={overlapped:.4}s"
+    );
+    let snap = fabric.snapshot();
+    assert!(snap.inflight_peak >= 2, "transfers never overlapped: {snap:?}");
+    assert_eq!(fc.counters.snapshot().remote_hits, 16, "both passes all-remote");
+}
