@@ -7,7 +7,7 @@
 
 use dlio::balance;
 use dlio::bench::{black_box, Bench};
-use dlio::cache::{CacheDirectory, Policy, SampleCache};
+use dlio::cache::{CacheDirectory, CacheStack, Policy, SpillConfig};
 use dlio::loader::{
     BatchRequest, FetchContext, Loader, LoaderConfig, LoaderRuntime,
 };
@@ -214,7 +214,10 @@ fn main() {
     let ctx = FetchContext {
         learner: 0,
         storage: Arc::clone(&storage),
-        caches: vec![Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly))],
+        caches: vec![Arc::new(CacheStack::mem_only(
+            u64::MAX,
+            Policy::InsertOnly,
+        ))],
         directory: Arc::new(CacheDirectory::new(1024)),
         fabric: Arc::clone(&fabric),
         cache_on_load: true,
@@ -272,7 +275,9 @@ fn main() {
         learner: 0,
         storage: Arc::clone(&storage),
         caches: (0..4)
-            .map(|_| Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly)))
+            .map(|_| {
+                Arc::new(CacheStack::mem_only(u64::MAX, Policy::InsertOnly))
+            })
             .collect(),
         directory: Arc::new(CacheDirectory::new(1024)),
         fabric: Arc::clone(&fabric),
@@ -319,7 +324,9 @@ fn main() {
         learner: 0,
         storage: Arc::clone(&storage),
         caches: (0..5)
-            .map(|_| Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly)))
+            .map(|_| {
+                Arc::new(CacheStack::mem_only(u64::MAX, Policy::InsertOnly))
+            })
             .collect(),
         directory: Arc::new(CacheDirectory::new(1024)),
         fabric: Arc::clone(&overlap_fabric),
@@ -375,7 +382,7 @@ fn main() {
     // scenario for the spawn/lock/alloc/clone removal.
     let steady_counters = Arc::new(LoadCounters::new());
     let steady_cache =
-        Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly));
+        Arc::new(CacheStack::mem_only(u64::MAX, Policy::InsertOnly));
     let steady_ctx = Arc::new(FetchContext {
         learner: 0,
         storage: Arc::clone(&storage),
@@ -476,12 +483,12 @@ fn main() {
     );
     b.record(
         "loader/cache_shard_count",
-        steady_cache.shard_count() as f64,
+        steady_cache.mem().shard_count() as f64,
         "shards",
     );
     b.record(
         "loader/cache_shard_contention",
-        steady_cache.contention_rate(),
+        steady_cache.mem().contention_rate(),
         "fraction",
     );
     let snap_delta = steady_counters.snapshot().delta(&snap_before);
@@ -496,6 +503,146 @@ fn main() {
          exceeds record_bytes {rb}"
     );
     loader.shutdown().unwrap();
+
+    // --- Hierarchical cache stack: DRAM-overflow steady state ----------------
+    // The §III-C/§VIII acceptance scenario: the 1024-sample dataset is 2×
+    // the DRAM tier, so population spills half of it to the SSD tier
+    // write-behind on the loader's persistent executor; steady epochs then
+    // serve ~half their lookups from disk as mmap-backed views. Guards
+    // (self-asserting + CI): disk hits must copy ZERO payload bytes
+    // (bytes-copied-per-sample stays ≤ record_bytes) and no spill write
+    // may land on a batch critical path.
+    let tier_cfg = LoaderConfig {
+        workers: 4,
+        threads_per_worker: 4,
+        prefetch_batches: 8,
+    };
+    let tier_runtime = LoaderRuntime::new(&tier_cfg);
+    let tier_stack = Arc::new(
+        CacheStack::tiered(
+            (512 * rb) as u64,
+            Policy::InsertOnly,
+            &SpillConfig {
+                path: std::env::temp_dir().join(format!(
+                    "dlio-bench-overflow-{}.spill",
+                    std::process::id()
+                )),
+                capacity_bytes: (1024 * rb) as u64,
+                read_latency: std::time::Duration::ZERO,
+            },
+        )
+        .expect("create spill segment")
+        .with_spill_executor(tier_runtime.executor().expect("threads > 1")),
+    );
+    let tier_counters = Arc::new(LoadCounters::new());
+    let tier_ctx = Arc::new(FetchContext {
+        learner: 0,
+        storage: Arc::clone(&storage),
+        caches: vec![Arc::clone(&tier_stack)],
+        directory: Arc::new(CacheDirectory::new(1024)),
+        fabric: Arc::clone(&fabric),
+        cache_on_load: true,
+        decode_s_per_kib: 0.0,
+        counters: Arc::clone(&tier_counters),
+    });
+    let tier_loader = Loader::spawn_with(
+        tier_cfg,
+        tier_ctx,
+        rb,
+        None,
+        7,
+        0.0,
+        &tier_runtime,
+    );
+    let overflow_batches = 4u64; // 4 × 256 covers the dataset once
+    let mut tier_step = 0u64;
+    let mut tier_epoch = || {
+        let first = tier_step;
+        tier_step += overflow_batches;
+        for step in first..first + overflow_batches {
+            let ids: Vec<u32> = (0..bsz as u32)
+                .map(|i| ((step - first) as u32 * bsz as u32 + i) % 1024)
+                .collect();
+            tier_loader
+                .submit(BatchRequest { epoch: 0, step, ids: ids.into() })
+                .unwrap();
+        }
+        for step in first..first + overflow_batches {
+            black_box(tier_loader.next(step).unwrap());
+        }
+    };
+    tier_epoch(); // population: 512 in DRAM, 512 spilled write-behind
+    tier_stack.drain_spills();
+    let tier_snap0 = tier_counters.snapshot();
+    let m_overflow =
+        b.run("cache/overflow_epoch_w4t4_b256", &mut tier_epoch);
+    b.record(
+        "cache/overflow_samples_per_s",
+        (overflow_batches * bsz as u64) as f64 / m_overflow.mean_s,
+        "samples/s",
+    );
+    let tier_delta = tier_counters.snapshot().delta(&tier_snap0);
+    let ts = tier_stack.tier_snapshot();
+    b.record("cache/disk_hit_ratio", ts.disk_hit_ratio(), "fraction");
+    b.record("cache/mem_hit_ratio", ts.mem_hit_ratio(), "fraction");
+    b.record(
+        "cache/spill_offpath_ratio",
+        ts.spill_offpath_ratio(),
+        "fraction",
+    );
+    b.record("cache/spill_bytes", ts.spill_bytes as f64, "bytes");
+    b.record(
+        "cache/spill_queue_peak",
+        ts.spill_queue_peak as f64,
+        "tasks",
+    );
+    b.record(
+        "cache/disk_hit_copied_bytes",
+        ts.disk_hit_copied_bytes as f64,
+        "bytes",
+    );
+    b.record(
+        "cache/spill_failures",
+        ts.spill_failures as f64,
+        "failures",
+    );
+    b.record(
+        "cache/overflow_bytes_copied_per_sample",
+        tier_delta.bytes_copied_per_sample(),
+        "bytes",
+    );
+    // In-binary regression guards (CI reruns them).
+    assert_eq!(
+        tier_stack.mem().len(),
+        512,
+        "DRAM tier must fill to exactly its capacity"
+    );
+    assert_eq!(
+        tier_stack.disk().map(|d| d.entries()),
+        Some(512),
+        "overflow must land on the SSD tier"
+    );
+    assert!(
+        ts.disk_hit_ratio() > 0.25,
+        "DRAM-overflow epochs must be disk-served: ratio {}",
+        ts.disk_hit_ratio()
+    );
+    assert_eq!(
+        ts.disk_hit_copied_bytes, 0,
+        "disk hits copied payload bytes — the SSD tier broke zero-copy"
+    );
+    assert_eq!(
+        ts.spilled_inline, 0,
+        "spill writes landed on the batch critical path"
+    );
+    assert_eq!(ts.spill_failures, 0, "write-behind spills must not fail");
+    assert_eq!(tier_delta.storage_loads, 0, "warm epochs must not re-read");
+    assert!(
+        tier_delta.bytes_copied_per_sample() <= rb as f64 + 1e-6,
+        "one-copy regression with the SSD tier in the path: {} > {rb}",
+        tier_delta.bytes_copied_per_sample()
+    );
+    tier_loader.shutdown().unwrap();
 
     // --- Tensor byte serialization (§Perf iteration 1) -----------------------
     // Before: per-element to_le_bytes flat_map; after: zero-copy byte_view.

@@ -15,7 +15,7 @@
 //! Emits machine-readable `BENCH_perf_stack.json` for the perf trajectory.
 
 use dlio::bench::{black_box, Bench};
-use dlio::cache::{CacheDirectory, Policy, SampleCache};
+use dlio::cache::{CacheDirectory, CacheStack, Policy, SpillConfig};
 use dlio::figures::{fig7, Fig7Config};
 use dlio::loader::{
     BatchRequest, FetchContext, Loader, LoaderConfig, LoaderRuntime,
@@ -140,7 +140,10 @@ fn main() {
     let ctx = Arc::new(FetchContext {
         learner: 0,
         storage,
-        caches: vec![Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly))],
+        caches: vec![Arc::new(CacheStack::mem_only(
+            u64::MAX,
+            Policy::InsertOnly,
+        ))],
         directory: Arc::new(CacheDirectory::new(n as u64)),
         fabric: Arc::new(Fabric::new(FabricConfig {
             real_time: false,
@@ -211,6 +214,135 @@ fn main() {
     );
     loader.shutdown().unwrap();
 
+    // --- L3: hierarchical cache stack, mem:disk ∈ {1:0, 1:2, 1:8} -----------
+    // Cache-warm epochs over a 3072-sample working set with a 1024-record
+    // DRAM tier: with no disk tier the overflow re-reads storage every
+    // epoch; with a 2× or 8× SSD tier the whole set is cache-resident and
+    // the overflow is served as mmap views (§III-C/§VIII). The trajectory
+    // watches throughput and the measured disk-hit share per ratio.
+    let tier_storage =
+        Arc::new(StorageSystem::open(&cfg.data_dir, None).unwrap());
+    let working_set = 3072u32; // 3× the DRAM tier
+    for (disk_x, tag) in [(0u64, "m1d0"), (2, "m1d2"), (8, "m1d8")] {
+        let lcfg = LoaderConfig {
+            workers: 4,
+            threads_per_worker: 4,
+            prefetch_batches: 8,
+        };
+        let tier_runtime = LoaderRuntime::new(&lcfg);
+        let mem_cap = (1024 * rb) as u64;
+        let stack = if disk_x == 0 {
+            CacheStack::mem_only(mem_cap, Policy::InsertOnly)
+        } else {
+            CacheStack::tiered(
+                mem_cap,
+                Policy::InsertOnly,
+                &SpillConfig {
+                    path: std::env::temp_dir().join(format!(
+                        "dlio-perf-tier-{tag}-{}.spill",
+                        std::process::id()
+                    )),
+                    capacity_bytes: disk_x * mem_cap,
+                    read_latency: std::time::Duration::ZERO,
+                },
+            )
+            .expect("create spill segment")
+            .with_spill_executor(tier_runtime.executor().expect("threads"))
+        };
+        let stack = Arc::new(stack);
+        let counters = Arc::new(LoadCounters::new());
+        let tctx = Arc::new(FetchContext {
+            learner: 0,
+            storage: Arc::clone(&tier_storage),
+            caches: vec![Arc::clone(&stack)],
+            directory: Arc::new(CacheDirectory::new(
+                tier_storage.n_samples(),
+            )),
+            fabric: Arc::new(Fabric::new(FabricConfig {
+                real_time: false,
+                ..Default::default()
+            })),
+            cache_on_load: true,
+            decode_s_per_kib: 0.0,
+            counters: Arc::clone(&counters),
+        });
+        let tloader =
+            Loader::spawn_with(lcfg, tctx, rb, None, 7, 0.0, &tier_runtime);
+        let tbsz = 256u32;
+        let tbatches = (working_set / tbsz) as u64; // 12
+        let mut next = 0u64;
+        let mut run_tier_epoch = || {
+            let first = next;
+            next += tbatches;
+            let window = 8u64.min(tbatches);
+            let ids_for = |step: u64| -> Vec<u32> {
+                (0..tbsz)
+                    .map(|i| {
+                        ((step % tbatches) as u32 * tbsz + i) % working_set
+                    })
+                    .collect()
+            };
+            for step in first..first + window {
+                tloader
+                    .submit(BatchRequest {
+                        epoch: 0,
+                        step,
+                        ids: ids_for(step).into(),
+                    })
+                    .unwrap();
+            }
+            for step in first..first + tbatches {
+                black_box(tloader.next(step).unwrap());
+                if step + window < first + tbatches {
+                    let nxt = step + window;
+                    tloader
+                        .submit(BatchRequest {
+                            epoch: 0,
+                            step: nxt,
+                            ids: ids_for(nxt).into(),
+                        })
+                        .unwrap();
+                }
+            }
+        };
+        run_tier_epoch(); // population (+ write-behind spills)
+        stack.drain_spills();
+        let snap0 = counters.snapshot();
+        let t0 = Instant::now();
+        run_tier_epoch(); // steady epoch
+        let dt = t0.elapsed().as_secs_f64();
+        let delta = counters.snapshot().delta(&snap0);
+        b.record(
+            &format!("l3/tiered_samples_per_s_{tag}"),
+            working_set as f64 / dt,
+            "samples/s",
+        );
+        b.record(
+            &format!("l3/tiered_disk_hit_ratio_{tag}"),
+            stack.tier_snapshot().disk_hit_ratio(),
+            "fraction",
+        );
+        b.record(
+            &format!("l3/tiered_storage_loads_per_epoch_{tag}"),
+            delta.storage_loads as f64,
+            "samples",
+        );
+        // Coverage guards: a ≥2× disk tier makes the set fully resident.
+        if disk_x >= 2 {
+            assert_eq!(
+                delta.storage_loads, 0,
+                "{tag}: tiered working set must be storage-silent"
+            );
+            assert_eq!(stack.tier_snapshot().disk_hit_copied_bytes, 0);
+        } else {
+            assert!(
+                delta.storage_loads > 0,
+                "{tag}: DRAM-only overflow must re-read storage"
+            );
+        }
+        tloader.shutdown().unwrap();
+    }
+
     // --- L3: overlapped remote fetch, owners ∈ {1, 4, 16} -------------------
     // Cache-warm remote path: every sample of a 256-batch is a remote hit
     // spread over k distinct owners, resolved through the overlapped
@@ -236,7 +368,10 @@ fn main() {
             storage: Arc::clone(&remote_storage),
             caches: (0..owners + 1)
                 .map(|_| {
-                    Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly))
+                    Arc::new(CacheStack::mem_only(
+                        u64::MAX,
+                        Policy::InsertOnly,
+                    ))
                 })
                 .collect(),
             directory: Arc::new(CacheDirectory::new(

@@ -58,6 +58,7 @@ fn main() {
             decode_s_per_kib: 0.0,
             eval_samples: n.min(128) as usize,
         checkpoint_path: None,
+        ..Default::default()
         };
         Trainer::new(engine, storage, fabric, cfg).unwrap().run().unwrap()
     };

@@ -8,7 +8,7 @@
 //! Run with: `cargo run --release --example quickstart`
 
 use anyhow::Result;
-use dlio::cache::{CacheDirectory, Policy, SampleCache};
+use dlio::cache::{CacheDirectory, CacheStack, Policy};
 use dlio::loader::{BatchRequest, FetchContext, Loader, LoaderConfig};
 use dlio::metrics::LoadCounters;
 use dlio::net::{Fabric, FabricConfig};
@@ -37,7 +37,7 @@ fn main() -> Result<()> {
     let ctx = Arc::new(FetchContext {
         learner: 0,
         storage: Arc::clone(&storage),
-        caches: vec![Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly))],
+        caches: vec![Arc::new(CacheStack::mem_only(u64::MAX, Policy::InsertOnly))],
         directory: Arc::new(CacheDirectory::new(storage.n_samples())),
         fabric: Arc::new(Fabric::new(FabricConfig {
             real_time: false,

@@ -53,6 +53,7 @@ fn run(
         decode_s_per_kib: 0.0,
         eval_samples: 256,
         checkpoint_path: None,
+        ..Default::default()
     };
     Trainer::new(engine, storage, fabric, cfg)?.run()
 }

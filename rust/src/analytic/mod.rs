@@ -27,8 +27,15 @@ pub struct ModelParams {
     pub rb: f64,
     /// Max preprocessing rate U of one node, samples/sec.
     pub u: f64,
-    /// Cached fraction α of the dataset (aggregated cache).
+    /// Cached fraction α of the dataset (aggregated cache, both tiers).
     pub alpha: f64,
+    /// Fraction of the dataset held on the SSD tier of the hierarchical
+    /// cache stack (§III-C/§VIII: "datasets too large to fit in the local
+    /// DRAM can be cached in SSDs"). The DRAM share is `alpha −
+    /// alpha_disk`; 0 keeps the original all-DRAM Eqs. 7/8.
+    pub alpha_disk: f64,
+    /// Per-node SSD read bandwidth serving disk-tier hits, bytes/sec.
+    pub r_disk: f64,
     /// Balance traffic ratio β (Fig. 6: ~0.03–0.07).
     pub beta: f64,
 }
@@ -70,21 +77,36 @@ impl ModelParams {
         self.training_time(p).max(self.loading_time_plain(p))
     }
 
-    /// Eq. (7): sample I/O time with distributed caching.
+    /// Hierarchical cache term extending Eqs. (7)/(8): the disk-tier
+    /// share of cache hits is read from the owners' local SSDs — p SSDs
+    /// in parallel, so the term scales with p like training does. 0 when
+    /// the stack is all-DRAM (the paper's original equations).
+    pub fn disk_read_time(&self, p: usize) -> f64 {
+        let share = self.alpha_disk.clamp(0.0, self.alpha);
+        if share <= 0.0 || self.r_disk <= 0.0 {
+            return 0.0;
+        }
+        share * self.d_samples * self.avg_bytes / (p as f64 * self.r_disk)
+    }
+
+    /// Eq. (7): sample I/O time with distributed caching, extended with
+    /// the hierarchical disk-tier read term.
     pub fn io_time_distcache(&self, p: usize) -> f64 {
         let d_bytes = self.d_samples * self.avg_bytes;
         let storage = (1.0 - self.alpha) * d_bytes / self.r;
         let remote = self.alpha * d_bytes / self.rc
             * ((p as f64 - 1.0) / p as f64);
-        storage + remote
+        storage + remote + self.disk_read_time(p)
     }
 
-    /// Eq. (8): sample I/O time with locality-aware loading.
-    pub fn io_time_loc(&self) -> f64 {
+    /// Eq. (8): sample I/O time with locality-aware loading, extended
+    /// with the hierarchical disk-tier read term (which is why it now
+    /// takes p: the SSD reads parallelize across nodes).
+    pub fn io_time_loc(&self, p: usize) -> f64 {
         let d_bytes = self.d_samples * self.avg_bytes;
         let storage = (1.0 - self.alpha) * d_bytes / self.r;
         let balance = self.alpha * d_bytes / self.rb * self.beta;
-        storage + balance
+        storage + balance + self.disk_read_time(p)
     }
 
     /// True cost under distributed caching.
@@ -96,7 +118,7 @@ impl ModelParams {
     /// True cost under locality-aware loading.
     pub fn true_cost_loc(&self, p: usize) -> f64 {
         self.training_time(p)
-            .max(self.io_time_loc() + self.preprocess_time(p))
+            .max(self.io_time_loc(p) + self.preprocess_time(p))
     }
 
     /// Loading-only cost (no training), the Figs. 8–11 regime.
@@ -105,7 +127,7 @@ impl ModelParams {
     }
 
     pub fn loading_only_loc(&self, p: usize) -> f64 {
-        self.io_time_loc() + self.preprocess_time(p)
+        self.io_time_loc(p) + self.preprocess_time(p)
     }
 }
 
@@ -123,6 +145,8 @@ pub fn lassen_imagenet() -> ModelParams {
         rb: 12.5e9,
         u: 5_000.0,
         alpha: 1.0,
+        alpha_disk: 0.0,
+        r_disk: 2.4e9,
         beta: 0.035,
     }
 }
@@ -185,7 +209,7 @@ mod tests {
         // (p-1)/p ≈ 1 ≫ β, so Loc's second term is ~β× the DistCache one.
         for nodes in [16, 64, 256] {
             let dc = m.io_time_distcache(nodes);
-            let loc = m.io_time_loc();
+            let loc = m.io_time_loc(nodes);
             assert!(
                 loc < dc * 0.2,
                 "p={nodes}: loc={loc} not ≪ distcache={dc}"
@@ -199,7 +223,7 @@ mod tests {
         m.alpha = 0.0;
         for nodes in [4, 64] {
             assert!((m.io_time_distcache(nodes) - m.io_time_plain()).abs() < 1e-6);
-            assert!((m.io_time_loc() - m.io_time_plain()).abs() < 1e-6);
+            assert!((m.io_time_loc(nodes) - m.io_time_plain()).abs() < 1e-6);
         }
     }
 
@@ -221,5 +245,55 @@ mod tests {
         // put the ratio in tens.
         let ratio = m.loading_only_plain(256) / m.loading_only_loc(256);
         assert!((10.0..120.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn hierarchical_cache_term_degenerates_when_all_dram() {
+        // alpha_disk = 0 must reproduce the paper's original Eqs. 7/8
+        // bit-for-bit — the hierarchy is a strict extension.
+        let m = p();
+        assert_eq!(m.alpha_disk, 0.0);
+        for nodes in [4, 16, 64, 256] {
+            assert_eq!(m.disk_read_time(nodes), 0.0);
+        }
+        let mut t = m;
+        t.alpha_disk = 0.5;
+        t.r_disk = 0.0; // no SSD: term defined as 0 rather than ∞
+        assert_eq!(t.disk_read_time(16), 0.0);
+    }
+
+    #[test]
+    fn disk_tier_term_scales_with_p_and_keeps_loc_scaling() {
+        // Half the dataset on SSD (DRAM exhausted at α=1): the disk term
+        // parallelizes across nodes, so Loc keeps scaling — the §VIII
+        // motivation for the hierarchy.
+        let mut m = p();
+        m.alpha_disk = 0.5;
+        let d16 = m.disk_read_time(16);
+        let d256 = m.disk_read_time(256);
+        assert!((d16 / d256 - 16.0).abs() < 1e-9, "disk term must be ∝ 1/p");
+        // Tiered Loc costs more than all-DRAM Loc but still beats plain
+        // loading by a wide margin at scale.
+        let dram = p();
+        for nodes in [16, 64, 256] {
+            assert!(m.io_time_loc(nodes) > dram.io_time_loc(nodes));
+            assert!(
+                m.loading_only_loc(nodes) < m.loading_only_plain(nodes),
+                "p={nodes}: tiered Loc must still beat plain loading"
+            );
+        }
+        // ... and the paper's headline regime survives the SSD tier.
+        let ratio = m.loading_only_plain(256) / m.loading_only_loc(256);
+        assert!((10.0..120.0).contains(&ratio), "256-node ratio {ratio}");
+        // alpha_disk is clamped to the cached fraction.
+        let mut c = p();
+        c.alpha = 0.3;
+        c.alpha_disk = 0.9;
+        assert!(
+            (c.disk_read_time(16)
+                - 0.3 * c.d_samples * c.avg_bytes / (16.0 * c.r_disk))
+                .abs()
+                < 1e-6
+        );
     }
 }

@@ -16,10 +16,29 @@
 //!
 //! [`clear_owner_if`]: CacheDirectory::clear_owner_if
 
+use super::Tier;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 /// Sentinel for "not cached anywhere".
 const NONE: u32 = u32::MAX;
+
+/// High bit of an entry marking a *disk-tier* resident (hierarchical cache
+/// stack); the owner id lives in the low bits. Checked after the `NONE`
+/// sentinel (which has every bit set).
+const DISK_BIT: u32 = 1 << 30;
+const OWNER_MASK: u32 = DISK_BIT - 1;
+
+fn encode(learner: usize, tier: Tier) -> u32 {
+    debug_assert!(
+        (learner as u64) < DISK_BIT as u64,
+        "learner id {learner} exceeds the directory's owner range"
+    );
+    learner as u32
+        | match tier {
+            Tier::Mem => 0,
+            Tier::Disk => DISK_BIT,
+        }
+}
 
 /// Dense sample-id -> owning-learner map. All methods take `&self`; share
 /// it behind a plain `Arc`.
@@ -55,24 +74,54 @@ impl CacheDirectory {
     }
 
     /// Which learner caches `sample`, if any. One relaxed atomic load —
-    /// the lock-free hot path.
+    /// the lock-free hot path. Tier-agnostic (the owner id is masked out
+    /// of the entry); use [`owner_tier`] when the hit-cost class matters.
+    ///
+    /// [`owner_tier`]: CacheDirectory::owner_tier
     #[inline]
     pub fn owner(&self, sample: u32) -> Option<usize> {
         match self.owner.get(sample as usize) {
             Some(o) => match o.load(Ordering::Relaxed) {
                 NONE => None,
-                j => Some(j as usize),
+                j => Some((j & OWNER_MASK) as usize),
             },
             None => None,
         }
     }
 
-    /// Record that `learner` caches `sample`. Idempotent; re-assignment is
-    /// a logic error under the paper's no-replacement policy (but tolerated
-    /// as last-writer-wins to keep population code simple).
+    /// Which learner caches `sample` and in which tier of its stack
+    /// (hierarchical capacity: DRAM hits and SSD hits cost differently —
+    /// the Eq. 7/8 split the sim and analytic model mirror).
+    #[inline]
+    pub fn owner_tier(&self, sample: u32) -> Option<(usize, Tier)> {
+        match self.owner.get(sample as usize) {
+            Some(o) => match o.load(Ordering::Relaxed) {
+                NONE => None,
+                j => Some((
+                    (j & OWNER_MASK) as usize,
+                    if j & DISK_BIT != 0 { Tier::Disk } else { Tier::Mem },
+                )),
+            },
+            None => None,
+        }
+    }
+
+    /// Record that `learner` caches `sample` (in its DRAM tier).
+    /// Idempotent; re-assignment is a logic error under the paper's
+    /// no-replacement policy (but tolerated as last-writer-wins to keep
+    /// population code simple).
     pub fn set_owner(&self, sample: u32, learner: usize) {
-        let prev =
-            self.owner[sample as usize].swap(learner as u32, Ordering::Relaxed);
+        self.set_owner_tier(sample, learner, Tier::Mem);
+    }
+
+    /// As [`set_owner`], recording which tier of the owner's stack holds
+    /// the sample. Write-behind spills publish their claim with
+    /// `Tier::Disk` *after* the SSD write commits.
+    ///
+    /// [`set_owner`]: CacheDirectory::set_owner
+    pub fn set_owner_tier(&self, sample: u32, learner: usize, tier: Tier) {
+        let prev = self.owner[sample as usize]
+            .swap(encode(learner, tier), Ordering::Relaxed);
         if prev == NONE {
             self.cached.fetch_add(1, Ordering::Relaxed);
         }
@@ -88,18 +137,28 @@ impl CacheDirectory {
     ///
     /// [`set_owner`]: CacheDirectory::set_owner
     pub fn clear_owner_if(&self, sample: u32, expected: usize) -> bool {
-        let cleared = self.owner[sample as usize]
-            .compare_exchange(
-                expected as u32,
-                NONE,
-                Ordering::Relaxed,
-                Ordering::Relaxed,
-            )
-            .is_ok();
-        if cleared {
-            self.cached.fetch_sub(1, Ordering::Relaxed);
+        // Tier-agnostic: clear whichever encoding (mem or disk bit)
+        // currently names `expected` — a stale entry is stale regardless
+        // of which tier it claimed.
+        let cell = &self.owner[sample as usize];
+        loop {
+            let cur = cell.load(Ordering::Relaxed);
+            if cur == NONE || (cur & OWNER_MASK) as usize != expected {
+                return false;
+            }
+            if cell
+                .compare_exchange_weak(
+                    cur,
+                    NONE,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                )
+                .is_ok()
+            {
+                self.cached.fetch_sub(1, Ordering::Relaxed);
+                return true;
+            }
         }
-        cleared
     }
 
     /// Number of samples cached somewhere.
@@ -142,16 +201,37 @@ impl CacheDirectory {
         dir
     }
 
-    /// Per-learner cached-sample counts.
+    /// Per-learner cached-sample counts (both tiers).
     pub fn counts(&self, p: usize) -> Vec<u64> {
         let mut counts = vec![0u64; p];
         for o in &self.owner {
             let o = o.load(Ordering::Relaxed);
             if o != NONE {
-                counts[o as usize] += 1;
+                counts[(o & OWNER_MASK) as usize] += 1;
             }
         }
         counts
+    }
+
+    /// (mem-tier, disk-tier) cached-sample counts across all owners — the
+    /// hierarchical capacity view the sim/analytic Eq. 7 split consumes.
+    pub fn tier_counts(&self) -> (u64, u64) {
+        let (mut mem, mut disk) = (0u64, 0u64);
+        for o in &self.owner {
+            match o.load(Ordering::Relaxed) {
+                NONE => {}
+                v if v & DISK_BIT != 0 => disk += 1,
+                _ => mem += 1,
+            }
+        }
+        (mem, disk)
+    }
+
+    /// Fraction of the dataset cached on the *disk* tier (the hierarchical
+    /// α_disk of the extended Eq. 7; `alpha() - alpha_disk()` is the DRAM
+    /// share).
+    pub fn alpha_disk(&self) -> f64 {
+        self.tier_counts().1 as f64 / self.owner.len().max(1) as f64
     }
 }
 
@@ -241,6 +321,40 @@ mod tests {
         let dir = CacheDirectory::striped(10, 3);
         assert_eq!(dir.counts(3), vec![4, 3, 3]);
         assert_eq!(dir.owner(4), Some(1));
+    }
+
+    #[test]
+    fn tiered_entries_round_trip_and_aggregate() {
+        let dir = CacheDirectory::new(10);
+        dir.set_owner_tier(1, 3, Tier::Mem);
+        dir.set_owner_tier(2, 3, Tier::Disk);
+        dir.set_owner_tier(3, 7, Tier::Disk);
+        // Tier-agnostic lookup masks the tier bit out.
+        assert_eq!(dir.owner(1), Some(3));
+        assert_eq!(dir.owner(2), Some(3));
+        assert_eq!(dir.owner(3), Some(7));
+        assert_eq!(dir.owner_tier(1), Some((3, Tier::Mem)));
+        assert_eq!(dir.owner_tier(2), Some((3, Tier::Disk)));
+        assert_eq!(dir.owner_tier(3), Some((7, Tier::Disk)));
+        assert_eq!(dir.owner_tier(4), None);
+        assert_eq!(dir.cached_samples(), 3);
+        assert_eq!(dir.counts(8), vec![0, 0, 0, 2, 0, 0, 0, 1]);
+        assert_eq!(dir.tier_counts(), (1, 2));
+        assert!((dir.alpha_disk() - 0.2).abs() < 1e-9);
+        // A spill commit re-publishing a mem claim as disk keeps the count.
+        dir.set_owner_tier(1, 3, Tier::Disk);
+        assert_eq!(dir.cached_samples(), 3);
+        assert_eq!(dir.tier_counts(), (0, 3));
+    }
+
+    #[test]
+    fn clear_owner_if_is_tier_agnostic() {
+        let dir = CacheDirectory::new(4);
+        dir.set_owner_tier(0, 2, Tier::Disk);
+        assert!(!dir.clear_owner_if(0, 1), "wrong owner must not clear");
+        assert!(dir.clear_owner_if(0, 2), "disk-tier entry must clear");
+        assert_eq!(dir.owner(0), None);
+        assert_eq!(dir.cached_samples(), 0);
     }
 
     #[test]

@@ -1,30 +1,42 @@
-//! Software caching (paper §III-C): per-learner sample caches, the
-//! replicated cache directory, and the aggregated-cache view used by the
-//! locality-aware sampler.
+//! Software caching (paper §III-C): per-learner hierarchical cache stacks
+//! (DRAM + SSD spill tier), the replicated cache directory, and the
+//! aggregated-cache view used by the locality-aware sampler.
 
 pub mod directory;
 pub mod sample_cache;
-pub mod tiered;
+pub mod stack;
 
 pub use directory::CacheDirectory;
 pub use sample_cache::{Policy, SampleCache};
-pub use tiered::TieredCache;
+pub use stack::{Admit, CacheStack, CommitHook, DiskTier, Lookup, SpillConfig};
 
 use crate::storage::Sample;
 use std::sync::Arc;
 
-/// The aggregated (distributed) cache: every learner's local cache plus the
-/// shared directory. In-process stand-in for the paper's node-spanning
-/// cache — learner `j`'s cache is reachable from any learner, with the
-/// interconnect cost accounted by [`crate::net::Fabric`].
+/// Which tier of a learner's [`CacheStack`] holds a sample. Distinct
+/// tiers cost differently to hit (DRAM vs SSD) — the directory records
+/// the tier alongside the owner so the whole pipeline (fetch routing,
+/// sim/analytic Eq. 7) can model the hierarchy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// DRAM tier (the sharded [`SampleCache`]).
+    Mem,
+    /// SSD spill tier (mmap-backed reads).
+    Disk,
+}
+
+/// The aggregated (distributed) cache: every learner's local cache stack
+/// plus the shared directory. In-process stand-in for the paper's
+/// node-spanning cache — learner `j`'s stack is reachable from any
+/// learner, with the interconnect cost accounted by [`crate::net::Fabric`].
 pub struct AggregatedCache {
-    caches: Vec<Arc<SampleCache>>,
-    directory: CacheDirectory,
+    caches: Vec<Arc<CacheStack>>,
+    directory: Arc<CacheDirectory>,
 }
 
 impl AggregatedCache {
-    pub fn new(caches: Vec<Arc<SampleCache>>, n_samples: u64) -> Self {
-        let directory = CacheDirectory::new(n_samples);
+    pub fn new(caches: Vec<Arc<CacheStack>>, n_samples: u64) -> Self {
+        let directory = Arc::new(CacheDirectory::new(n_samples));
         AggregatedCache { caches, directory }
     }
 
@@ -36,24 +48,28 @@ impl AggregatedCache {
         &self.directory
     }
 
-    pub fn cache(&self, learner: usize) -> &Arc<SampleCache> {
+    pub fn cache(&self, learner: usize) -> &Arc<CacheStack> {
         &self.caches[learner]
     }
 
-    /// Insert into `learner`'s cache and update the directory. Returns
-    /// whether the cache accepted the sample. Takes `&self`: the caches
-    /// synchronize internally and the directory is lock-free.
+    /// Insert into `learner`'s stack and update the directory (for a
+    /// write-behind spill the claim is published by the commit hook once
+    /// the bytes are servable). Returns whether the stack accepted the
+    /// sample. Takes `&self`: the stacks synchronize internally and the
+    /// directory is lock-free.
     pub fn insert(&self, learner: usize, sample: Arc<Sample>) -> bool {
         let id = sample.id;
-        if self.caches[learner].insert(sample) {
-            self.directory.set_owner(id, learner);
-            true
-        } else {
-            false
-        }
+        let directory = Arc::clone(&self.directory);
+        let admit = self.caches[learner].insert_with(
+            sample,
+            Some(Box::new(move |tier| {
+                directory.set_owner_tier(id, learner, tier);
+            })),
+        );
+        !matches!(admit, Admit::Rejected)
     }
 
-    /// Fetch a sample from whichever cache owns it.
+    /// Fetch a sample from whichever stack owns it.
     pub fn fetch(&self, id: u32) -> Option<(usize, Arc<Sample>)> {
         let owner = self.directory.owner(id)?;
         self.caches[owner].get(id).map(|s| (owner, s))
@@ -75,7 +91,7 @@ mod tests {
 
     fn agg(p: usize, cap: u64, n: u64) -> AggregatedCache {
         let caches = (0..p)
-            .map(|_| Arc::new(SampleCache::new(cap, Policy::InsertOnly)))
+            .map(|_| Arc::new(CacheStack::mem_only(cap, Policy::InsertOnly)))
             .collect();
         AggregatedCache::new(caches, n)
     }
@@ -85,6 +101,7 @@ mod tests {
         let a = agg(3, 1024, 100);
         assert!(a.insert(1, sample(42)));
         assert_eq!(a.directory().owner(42), Some(1));
+        assert_eq!(a.directory().owner_tier(42), Some((1, Tier::Mem)));
         let (owner, s) = a.fetch(42).unwrap();
         assert_eq!(owner, 1);
         assert_eq!(s.id, 42);
@@ -111,5 +128,32 @@ mod tests {
             let (owner, _) = a.fetch(id).unwrap();
             assert_eq!(owner, id as usize % 4);
         }
+    }
+
+    #[test]
+    fn tiered_member_publishes_disk_claims() {
+        // One learner's stack overflows its DRAM tier; spilled members are
+        // claimed in the directory with Tier::Disk and stay fetchable.
+        let spill = SpillConfig {
+            path: std::env::temp_dir().join(format!(
+                "dlio-agg-{}.spill",
+                std::process::id()
+            )),
+            capacity_bytes: 4096,
+            read_latency: std::time::Duration::ZERO,
+        };
+        let caches = vec![Arc::new(
+            CacheStack::tiered(16, Policy::InsertOnly, &spill).unwrap(),
+        )];
+        let a = AggregatedCache::new(caches, 10);
+        assert!(a.insert(0, sample(1))); // 8B: mem
+        assert!(a.insert(0, sample(2))); // 8B: mem full
+        assert!(a.insert(0, sample(3))); // spills (inline)
+        assert_eq!(a.directory().owner_tier(2), Some((0, Tier::Mem)));
+        assert_eq!(a.directory().owner_tier(3), Some((0, Tier::Disk)));
+        assert_eq!(a.directory().tier_counts(), (2, 1));
+        let (owner, s) = a.fetch(3).unwrap();
+        assert_eq!(owner, 0);
+        assert!(s.bytes.is_zero_copy(), "disk hit must be an mmap view");
     }
 }

@@ -1,0 +1,759 @@
+//! Hierarchical cache stack (paper §III-C + §VIII): the DRAM tier backed
+//! by a zero-copy SSD spill tier, behind ONE handle the whole fetch path
+//! holds.
+//!
+//! The paper singles out SSDs as the way to keep the locality-aware
+//! scheme's communication savings once per-node DRAM runs out ("training
+//! datasets too large to fit in the local DRAM can be cached in SSDs",
+//! §III-C; "ideal for a hierarchical caching design", §VIII). This module
+//! promotes that hierarchy to a first-class subsystem:
+//!
+//! * **mem** — the sharded, atomically-accounted [`SampleCache`];
+//! * **disk** — a [`DiskTier`]: a preallocated spill *segment* with a
+//!   sharded in-memory index. Offsets are claimed by a lock-free cursor
+//!   reservation (occupancy is accounted with the *written* length, so a
+//!   size/len mismatch can never drift the cursor away from the bytes on
+//!   disk), writes go through `pwrite`, and reads hand out **mmap-backed
+//!   [`SampleBytes`] views** of the shared segment mapping — a disk hit
+//!   copies zero payload bytes, preserving the one-copy invariant
+//!   (DESIGN.md §2) for the SSD tier;
+//! * **write-behind spill** — a mem-tier rejection *reserves* its slot
+//!   inline (so admission stays exact) but performs the SSD write as a
+//!   task on the attached persistent [`Executor`], keeping spill writes
+//!   off the batch critical path. The caller's commit hook (directory
+//!   claim) runs only after the bytes are durable and indexed.
+//!
+//! Both tiers are insert-only on the locality-aware path (no replacement
+//! after population, per the paper's model); the mem tier may run Fifo for
+//! the partial-cache ablations. Thread-safe throughout; the loader's
+//! workers, the decode executor's tasks and remote peers all operate on
+//! one `Arc<CacheStack>` per learner.
+//!
+//! [`SampleBytes`]: crate::storage::SampleBytes
+//! [`Executor`]: crate::util::Executor
+
+use super::sample_cache::{Policy, SampleCache};
+use super::Tier;
+use crate::metrics::TierSnapshot;
+use crate::storage::bytes::Mmap;
+use crate::storage::{Sample, SampleBytes};
+use crate::util::Executor;
+use anyhow::{ensure, Context, Result};
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Index shards of the disk tier (power of two; id-hashed like the mem
+/// tier's shards, so concurrent spill commits and slot lookups only
+/// serialize when they collide).
+const DISK_SHARDS: usize = 16;
+
+/// Spill-tier configuration.
+#[derive(Clone, Debug)]
+pub struct SpillConfig {
+    /// Where the spill segment lives (created, truncated, preallocated to
+    /// `capacity_bytes`; unlinked when the tier drops).
+    pub path: PathBuf,
+    /// Segment size — a real byte budget (the file is preallocated and
+    /// mapped at this length), not a `u64::MAX`-style "unbounded".
+    pub capacity_bytes: u64,
+    /// Simulated device read latency per disk hit (0 for a real SSD).
+    pub read_latency: Duration,
+}
+
+#[derive(Clone, Copy)]
+struct DiskSlot {
+    offset: u64,
+    len: u32,
+    label: u16,
+}
+
+/// The SSD spill tier: cursor-reserved segment + sharded index, reads are
+/// mmap-backed views. See the module docs for the write-once/publish
+/// protocol that keeps the shared mapping sound.
+pub struct DiskTier {
+    file: File,
+    map: Arc<Mmap>,
+    capacity: u64,
+    /// Reserved bytes (monotone). Reservation happens at admission time on
+    /// the caller's thread so capacity accounting is exact even while the
+    /// write itself runs behind.
+    cursor: AtomicU64,
+    shards: Box<[Mutex<HashMap<u32, DiskSlot>>]>,
+    entries: AtomicU64,
+    committed_bytes: AtomicU64,
+    read_latency: Duration,
+    path: PathBuf,
+}
+
+impl DiskTier {
+    fn create(cfg: &SpillConfig) -> Result<DiskTier> {
+        ensure!(
+            cfg.capacity_bytes > 0,
+            "disk tier needs a positive capacity"
+        );
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&cfg.path)
+            .with_context(|| {
+                format!("create spill segment {}", cfg.path.display())
+            })?;
+        // Preallocate (sparse) so the whole segment can be mapped once;
+        // slots become readable through the shared mapping as they are
+        // written and indexed.
+        file.set_len(cfg.capacity_bytes).with_context(|| {
+            format!(
+                "preallocate {} bytes of spill segment (disk capacity must \
+                 be a real byte budget)",
+                cfg.capacity_bytes
+            )
+        })?;
+        let map = Arc::new(Mmap::map_shared(&file).with_context(|| {
+            format!("map spill segment {}", cfg.path.display())
+        })?);
+        Ok(DiskTier {
+            file,
+            map,
+            capacity: cfg.capacity_bytes,
+            cursor: AtomicU64::new(0),
+            shards: (0..DISK_SHARDS)
+                .map(|_| Mutex::new(HashMap::new()))
+                .collect(),
+            entries: AtomicU64::new(0),
+            committed_bytes: AtomicU64::new(0),
+            read_latency: cfg.read_latency,
+            path: cfg.path.clone(),
+        })
+    }
+
+    fn shard_index(&self, id: u32) -> usize {
+        let h = (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32;
+        (h as usize) & (DISK_SHARDS - 1)
+    }
+
+    fn slot(&self, id: u32) -> Option<DiskSlot> {
+        self.shards[self.shard_index(id)]
+            .lock()
+            .unwrap()
+            .get(&id)
+            .copied()
+    }
+
+    fn contains(&self, id: u32) -> bool {
+        self.slot(id).is_some()
+    }
+
+    /// Claim `len` bytes of the segment; `None` when the tier is full.
+    fn reserve(&self, len: u64) -> Option<u64> {
+        let cap = self.capacity;
+        self.cursor
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |c| {
+                match c.checked_add(len) {
+                    Some(nc) if nc <= cap => Some(nc),
+                    _ => None,
+                }
+            })
+            .ok()
+    }
+
+    /// Write the payload at its reserved offset, then publish the index
+    /// entry. The write happens strictly before the publish (same thread),
+    /// so a reader that finds the slot only ever sees final bytes through
+    /// the shared mapping. Returns `false` if a racing insert of the same
+    /// id published first (this reservation's span is then simply unused).
+    fn commit(&self, offset: u64, sample: &Sample) -> std::io::Result<bool> {
+        let len = sample.bytes.len();
+        self.file.write_all_at(&sample.bytes, offset)?;
+        {
+            let mut shard =
+                self.shards[self.shard_index(sample.id)].lock().unwrap();
+            if shard.contains_key(&sample.id) {
+                return Ok(false);
+            }
+            shard.insert(
+                sample.id,
+                DiskSlot {
+                    offset,
+                    len: len as u32,
+                    label: sample.label,
+                },
+            );
+        }
+        self.entries.fetch_add(1, Ordering::Relaxed);
+        // Occupancy accounted with the WRITTEN length — the same quantity
+        // the reservation claimed — so cursor and on-disk bytes can never
+        // drift apart (the old append-file tier advanced its cursor by a
+        // separately computed size).
+        self.committed_bytes.fetch_add(len as u64, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    /// One latency charge + one mmap-backed view; zero payload copies and
+    /// no second index lock (the slot was copied out by the caller).
+    fn read(&self, id: u32, slot: DiskSlot) -> Arc<Sample> {
+        if !self.read_latency.is_zero() {
+            std::thread::sleep(self.read_latency);
+        }
+        let bytes = SampleBytes::from_map(
+            Arc::clone(&self.map),
+            slot.offset as usize,
+            slot.len as usize,
+        );
+        Arc::new(Sample { id, bytes, label: slot.label })
+    }
+
+    pub fn entries(&self) -> u64 {
+        self.entries.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.committed_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for DiskTier {
+    fn drop(&mut self) {
+        // Unlink the segment: live mappings stay valid until munmap, and
+        // unit-test runs stop littering temp_dir with `.spill` files.
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Outcome of a [`CacheStack`] admission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admit {
+    /// Resident in the DRAM tier (or already was).
+    Mem,
+    /// Reserved on the disk tier; the SSD write (and the caller's commit
+    /// hook) runs write-behind on the spill executor.
+    SpillQueued,
+    /// Resident in the disk tier (inline spill, or already there).
+    Disk,
+    /// Every tier is at capacity (or the write failed inline).
+    Rejected,
+}
+
+/// Result of the routing probe [`CacheStack::lookup`].
+pub enum Lookup {
+    /// DRAM hit — the zero-copy `Arc` handout, resolved inline.
+    Mem(Arc<Sample>),
+    /// Resident in the disk tier; resolve with [`CacheStack::get_disk`]
+    /// (the fetch path defers this into the overlapped task wave so the
+    /// SSD read, and any simulated device latency, runs under in-flight
+    /// transfers).
+    Disk,
+    /// In neither tier.
+    Miss,
+}
+
+/// Hook invoked once an admitted sample is actually resident (mem: inline;
+/// write-behind spill: on the executor, after the write + index publish).
+/// The argument is the tier that holds it — the fetch path uses this to
+/// publish tier-accurate directory claims.
+pub type CommitHook = Box<dyn FnOnce(Tier) + Send + 'static>;
+
+#[derive(Default)]
+struct SpillStats {
+    pending: AtomicU64,
+    queue_peak: AtomicU64,
+    offpath: AtomicU64,
+    inline: AtomicU64,
+    failures: AtomicU64,
+    bytes: AtomicU64,
+}
+
+/// The unified mem + disk cache handle (see module docs).
+pub struct CacheStack {
+    mem: SampleCache,
+    disk: Option<Arc<DiskTier>>,
+    spill_executor: Option<Arc<Executor>>,
+    spill: Arc<SpillStats>,
+    disk_hits: AtomicU64,
+    disk_hit_bytes: AtomicU64,
+    /// Nonzero means a disk hit handed out a non-mapped payload — the
+    /// zero-copy invariant broke; benches/CI assert this stays 0.
+    disk_hit_copied_bytes: AtomicU64,
+    misses: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl CacheStack {
+    /// A DRAM-only stack — exactly the pre-hierarchy [`SampleCache`]
+    /// behaviour behind the stack handle.
+    pub fn mem_only(capacity_bytes: u64, policy: Policy) -> CacheStack {
+        CacheStack {
+            mem: SampleCache::new(capacity_bytes, policy),
+            disk: None,
+            spill_executor: None,
+            spill: Arc::new(SpillStats::default()),
+            disk_hits: AtomicU64::new(0),
+            disk_hit_bytes: AtomicU64::new(0),
+            disk_hit_copied_bytes: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    /// A two-tier stack spilling mem-tier rejections into `spill`'s
+    /// segment. Spills run inline until a spill executor is attached with
+    /// [`with_spill_executor`].
+    ///
+    /// [`with_spill_executor`]: CacheStack::with_spill_executor
+    pub fn tiered(
+        mem_capacity_bytes: u64,
+        policy: Policy,
+        spill: &SpillConfig,
+    ) -> Result<CacheStack> {
+        let mut stack = CacheStack::mem_only(mem_capacity_bytes, policy);
+        stack.disk = Some(Arc::new(DiskTier::create(spill)?));
+        Ok(stack)
+    }
+
+    /// Attach the persistent executor that runs write-behind spills. SSD
+    /// writes then leave the batch critical path entirely: admission only
+    /// reserves the slot and enqueues the write.
+    pub fn with_spill_executor(mut self, ex: Arc<Executor>) -> CacheStack {
+        self.spill_executor = Some(ex);
+        self
+    }
+
+    /// The DRAM tier (shard stats, capacity, residency).
+    pub fn mem(&self) -> &SampleCache {
+        &self.mem
+    }
+
+    /// The SSD tier, when configured.
+    pub fn disk(&self) -> Option<&DiskTier> {
+        self.disk.as_deref()
+    }
+
+    pub fn has_disk_tier(&self) -> bool {
+        self.disk.is_some()
+    }
+
+    /// Insert a sample, memory first, spilling to disk when memory is
+    /// full. `false` only when every tier rejected it.
+    pub fn insert(&self, sample: Arc<Sample>) -> bool {
+        !matches!(self.insert_with(sample, None), Admit::Rejected)
+    }
+
+    /// As [`insert`], running `on_commit` with the holding tier once the
+    /// sample is resident — inline for mem admissions and duplicates,
+    /// after the SSD write + index publish for write-behind spills (where
+    /// it is how the fetch path defers its directory claim until the
+    /// bytes are actually servable). A rejected insert drops the hook
+    /// unrun.
+    ///
+    /// [`insert`]: CacheStack::insert
+    pub fn insert_with(
+        &self,
+        sample: Arc<Sample>,
+        on_commit: Option<CommitHook>,
+    ) -> Admit {
+        if self.mem.insert(Arc::clone(&sample)) {
+            if let Some(hook) = on_commit {
+                hook(Tier::Mem);
+            }
+            return Admit::Mem;
+        }
+        let Some(disk) = &self.disk else {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return Admit::Rejected;
+        };
+        if disk.contains(sample.id) {
+            if let Some(hook) = on_commit {
+                hook(Tier::Disk);
+            }
+            return Admit::Disk;
+        }
+        let len = sample.bytes.len() as u64;
+        let Some(offset) = disk.reserve(len) else {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return Admit::Rejected;
+        };
+        match &self.spill_executor {
+            Some(ex) => {
+                let disk = Arc::clone(disk);
+                let stats = Arc::clone(&self.spill);
+                let depth = stats.pending.fetch_add(1, Ordering::Relaxed) + 1;
+                stats.queue_peak.fetch_max(depth, Ordering::Relaxed);
+                ex.submit(move || {
+                    match disk.commit(offset, &sample) {
+                        Ok(true) => {
+                            stats.offpath.fetch_add(1, Ordering::Relaxed);
+                            stats.bytes.fetch_add(len, Ordering::Relaxed);
+                            if let Some(hook) = on_commit {
+                                hook(Tier::Disk);
+                            }
+                        }
+                        // A racing insert of the same id won the publish;
+                        // its commit ran the claim.
+                        Ok(false) => {}
+                        Err(_) => {
+                            stats.failures.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    stats.pending.fetch_sub(1, Ordering::Relaxed);
+                });
+                Admit::SpillQueued
+            }
+            None => match disk.commit(offset, &sample) {
+                Ok(committed) => {
+                    if committed {
+                        self.spill.inline.fetch_add(1, Ordering::Relaxed);
+                        self.spill.bytes.fetch_add(len, Ordering::Relaxed);
+                    }
+                    if let Some(hook) = on_commit {
+                        hook(Tier::Disk);
+                    }
+                    Admit::Disk
+                }
+                Err(_) => {
+                    self.spill.failures.fetch_add(1, Ordering::Relaxed);
+                    self.rejected.fetch_add(1, Ordering::Relaxed);
+                    Admit::Rejected
+                }
+            },
+        }
+    }
+
+    /// Routing probe: resolve a DRAM hit inline, *identify* a disk-tier
+    /// resident without reading it, or miss. Every call ticks exactly one
+    /// of {mem hit, disk hit, miss}, so
+    /// `mem_hits + disk_hits + misses == lookups` holds at all times.
+    pub fn lookup(&self, id: u32) -> Lookup {
+        if let Some(s) = self.mem.get(id) {
+            return Lookup::Mem(s);
+        }
+        if let Some(disk) = &self.disk {
+            if disk.contains(id) {
+                self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                return Lookup::Disk;
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Lookup::Miss
+    }
+
+    /// Resolve a disk-tier resident: one latency charge, one mmap-backed
+    /// view, zero payload copies. Pairs with a [`lookup`] that returned
+    /// [`Lookup::Disk`] (the hit was counted there). `None` only if the
+    /// slot vanished, which insert-only tiers never do.
+    ///
+    /// [`lookup`]: CacheStack::lookup
+    pub fn get_disk(&self, id: u32) -> Option<Arc<Sample>> {
+        let disk = self.disk.as_ref()?;
+        let slot = disk.slot(id)?;
+        let s = disk.read(id, slot);
+        self.disk_hit_bytes
+            .fetch_add(slot.len as u64, Ordering::Relaxed);
+        if !s.bytes.is_zero_copy() {
+            self.disk_hit_copied_bytes
+                .fetch_add(slot.len as u64, Ordering::Relaxed);
+        }
+        Some(s)
+    }
+
+    /// Look up a sample in either tier.
+    pub fn get(&self, id: u32) -> Option<Arc<Sample>> {
+        match self.lookup(id) {
+            Lookup::Mem(s) => Some(s),
+            Lookup::Disk => self.get_disk(id),
+            Lookup::Miss => None,
+        }
+    }
+
+    /// As [`get`], reporting which tier served the hit (tier-accurate
+    /// directory repair).
+    ///
+    /// [`get`]: CacheStack::get
+    pub fn get_tiered(&self, id: u32) -> Option<(Tier, Arc<Sample>)> {
+        match self.lookup(id) {
+            Lookup::Mem(s) => Some((Tier::Mem, s)),
+            Lookup::Disk => self.get_disk(id).map(|s| (Tier::Disk, s)),
+            Lookup::Miss => None,
+        }
+    }
+
+    /// Peek without touching hit/miss counters.
+    pub fn contains(&self, id: u32) -> bool {
+        self.mem.contains(id)
+            || self.disk.as_ref().is_some_and(|d| d.contains(id))
+    }
+
+    /// Write-behind spills not yet committed.
+    pub fn spill_queue_depth(&self) -> u64 {
+        self.spill.pending.load(Ordering::Relaxed)
+    }
+
+    /// Block until every queued spill has committed. Used at
+    /// population/epoch boundaries and before snapshots. Liveness holds by
+    /// construction: the stack keeps its spill executor alive (`Arc`), the
+    /// executor drains its queue before shutting down, and a failed write
+    /// still decrements the pending gauge — so this terminates however
+    /// slow the device or deep the backlog.
+    pub fn drain_spills(&self) {
+        while self.spill.pending.load(Ordering::Relaxed) > 0 {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    /// Tier accounting for `BENCH_hotpath.json` / `TrainingReport.tiers`.
+    pub fn tier_snapshot(&self) -> TierSnapshot {
+        let (disk_entries, disk_bytes, disk_capacity) = match &self.disk {
+            Some(d) => (d.entries(), d.bytes(), d.capacity_bytes()),
+            None => (0, 0, 0),
+        };
+        TierSnapshot {
+            mem_hits: self.mem.hits(),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            mem_entries: self.mem.len() as u64,
+            mem_bytes: self.mem.bytes(),
+            mem_capacity: self.mem.capacity_bytes(),
+            disk_entries,
+            disk_bytes,
+            disk_capacity,
+            spill_bytes: self.spill.bytes.load(Ordering::Relaxed),
+            spill_queue_depth: self.spill.pending.load(Ordering::Relaxed),
+            spill_queue_peak: self.spill.queue_peak.load(Ordering::Relaxed),
+            spilled_offpath: self.spill.offpath.load(Ordering::Relaxed),
+            spilled_inline: self.spill.inline.load(Ordering::Relaxed),
+            spill_failures: self.spill.failures.load(Ordering::Relaxed),
+            disk_hit_bytes: self.disk_hit_bytes.load(Ordering::Relaxed),
+            disk_hit_copied_bytes: self
+                .disk_hit_copied_bytes
+                .load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(id: u32, size: usize) -> Arc<Sample> {
+        Arc::new(Sample {
+            id,
+            bytes: vec![(id % 251) as u8; size].into(),
+            label: id as u16,
+        })
+    }
+
+    fn spill_cfg(tag: &str, capacity: u64, latency: Duration) -> SpillConfig {
+        SpillConfig {
+            path: std::env::temp_dir().join(format!(
+                "dlio-stack-{tag}-{}-{:?}.spill",
+                std::process::id(),
+                std::thread::current().id()
+            )),
+            capacity_bytes: capacity,
+            read_latency: latency,
+        }
+    }
+
+    fn stack(tag: &str, mem: u64, disk: u64) -> CacheStack {
+        CacheStack::tiered(
+            mem,
+            Policy::InsertOnly,
+            &spill_cfg(tag, disk, Duration::ZERO),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn memory_first_then_spill_and_reads_are_zero_copy() {
+        let c = stack("basic", 250, 10_000);
+        assert!(c.insert(sample(1, 100)));
+        assert!(c.insert(sample(2, 100)));
+        assert!(c.insert(sample(3, 100))); // spills (inline: no executor)
+        assert_eq!(c.mem().len(), 2);
+        assert_eq!(c.disk().unwrap().entries(), 1);
+        for id in 1..=3u32 {
+            let s = c.get(id).unwrap();
+            assert_eq!(s.bytes, vec![(id % 251) as u8; 100]);
+            assert_eq!(s.label, id as u16);
+        }
+        let ts = c.tier_snapshot();
+        assert_eq!(ts.mem_hits, 2);
+        assert_eq!(ts.disk_hits, 1);
+        assert_eq!(ts.misses, 0);
+        assert_eq!(ts.spilled_inline, 1);
+        assert_eq!(ts.spilled_offpath, 0);
+        // The disk hit is an mmap view of the segment: zero payload copies.
+        assert!(c.get(3).unwrap().bytes.is_zero_copy());
+        assert_eq!(c.tier_snapshot().disk_hit_copied_bytes, 0);
+    }
+
+    #[test]
+    fn both_tiers_full_rejects() {
+        let c = stack("full", 100, 150);
+        assert!(c.insert(sample(1, 100))); // mem
+        assert!(c.insert(sample(2, 100))); // disk
+        assert!(!c.insert(sample(3, 100))); // both full
+        assert!(!c.contains(3));
+        assert!(c.get(3).is_none());
+        let ts = c.tier_snapshot();
+        assert_eq!(ts.misses, 1);
+        assert_eq!(ts.rejected, 1);
+    }
+
+    #[test]
+    fn duplicate_inserts_idempotent_across_tiers() {
+        let c = stack("dup", 100, 10_000);
+        assert_eq!(c.insert_with(sample(1, 100), None), Admit::Mem);
+        assert_eq!(c.insert_with(sample(1, 100), None), Admit::Mem);
+        assert_eq!(c.insert_with(sample(2, 100), None), Admit::Disk);
+        assert_eq!(c.insert_with(sample(2, 100), None), Admit::Disk);
+        assert_eq!(c.mem().len(), 1);
+        assert_eq!(c.disk().unwrap().entries(), 1);
+        // The duplicate disk insert neither re-wrote nor re-accounted.
+        assert_eq!(c.disk().unwrap().bytes(), 100);
+    }
+
+    #[test]
+    fn disk_offset_accounting_with_varied_sizes() {
+        // Regression for the old tier's offset drift: occupancy must be
+        // the sum of the WRITTEN lengths, every slot bit-identical —
+        // varied sizes would have corrupted later offsets had reservation
+        // and write disagreed.
+        let c = stack("sizes", 0, 100_000);
+        let sizes = [37usize, 1, 512, 64, 300, 7, 2048, 99];
+        let mut total = 0u64;
+        for (id, &sz) in sizes.iter().enumerate() {
+            assert!(c.insert(sample(id as u32, sz)));
+            total += sz as u64;
+        }
+        assert_eq!(c.disk().unwrap().bytes(), total);
+        assert_eq!(c.disk().unwrap().entries(), sizes.len() as u64);
+        for (id, &sz) in sizes.iter().enumerate() {
+            let s = c.get(id as u32).unwrap();
+            assert_eq!(s.bytes.len(), sz, "slot {id} length drifted");
+            assert_eq!(
+                s.bytes,
+                vec![(id as u32 % 251) as u8; sz],
+                "slot {id} bytes corrupted"
+            );
+            assert!(s.bytes.is_zero_copy());
+        }
+    }
+
+    #[test]
+    fn disk_latency_is_charged_once_per_hit() {
+        let c = CacheStack::tiered(
+            0,
+            Policy::InsertOnly,
+            &spill_cfg("lat", 10_000, Duration::from_millis(5)),
+        )
+        .unwrap();
+        assert!(c.insert(sample(9, 64)));
+        let t0 = std::time::Instant::now();
+        for _ in 0..4 {
+            c.get(9).unwrap();
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(18));
+    }
+
+    #[test]
+    fn spill_segment_unlinked_on_drop() {
+        let cfg = spill_cfg("drop", 4096, Duration::ZERO);
+        let path = cfg.path.clone();
+        {
+            let c =
+                CacheStack::tiered(0, Policy::InsertOnly, &cfg).unwrap();
+            assert!(c.insert(sample(1, 64)));
+            assert!(path.exists());
+            // A view taken before the drop stays readable (mapping
+            // outlives the unlink).
+            let s = c.get(1).unwrap();
+            drop(c);
+            assert_eq!(s.bytes, vec![1u8; 64]);
+        }
+        assert!(!path.exists(), "spill segment must be unlinked on drop");
+    }
+
+    #[test]
+    fn write_behind_spill_commits_off_thread_and_runs_hook() {
+        use std::sync::atomic::AtomicU32;
+        let ex = Arc::new(Executor::new(2));
+        let c = stack("wb", 100, 10_000).with_spill_executor(Arc::clone(&ex));
+        let committed_tier: Arc<AtomicU32> = Arc::new(AtomicU32::new(99));
+        assert_eq!(c.insert_with(sample(1, 100), None), Admit::Mem);
+        let tier_probe = Arc::clone(&committed_tier);
+        let admit = c.insert_with(
+            sample(2, 100),
+            Some(Box::new(move |tier| {
+                tier_probe.store(
+                    match tier {
+                        Tier::Mem => 0,
+                        Tier::Disk => 1,
+                    },
+                    Ordering::SeqCst,
+                );
+            })),
+        );
+        assert_eq!(admit, Admit::SpillQueued);
+        c.drain_spills();
+        assert_eq!(
+            committed_tier.load(Ordering::SeqCst),
+            1,
+            "commit hook must run with Tier::Disk after the write"
+        );
+        let ts = c.tier_snapshot();
+        assert_eq!(ts.spilled_offpath, 1);
+        assert_eq!(ts.spilled_inline, 0);
+        assert_eq!(ts.spill_bytes, 100);
+        assert_eq!(ts.spill_queue_depth, 0);
+        assert!(ts.spill_queue_peak >= 1);
+        assert_eq!(c.get(2).unwrap().bytes, vec![2u8; 100]);
+    }
+
+    #[test]
+    fn lookup_accounting_is_exact() {
+        let c = stack("acct", 100, 10_000);
+        assert!(c.insert(sample(1, 100))); // mem
+        assert!(c.insert(sample(2, 100))); // disk
+        let lookups = 30u64;
+        for k in 0..lookups {
+            let _ = c.get((k % 3) as u32); // 0 misses, 1 mem, 2 disk
+        }
+        let ts = c.tier_snapshot();
+        assert_eq!(ts.mem_hits + ts.disk_hits + ts.misses, lookups);
+        assert_eq!(ts.mem_hits, 10);
+        assert_eq!(ts.disk_hits, 10);
+        assert_eq!(ts.misses, 10);
+    }
+
+    #[test]
+    fn mem_only_stack_matches_sample_cache_semantics() {
+        let c = CacheStack::mem_only(250, Policy::InsertOnly);
+        assert!(!c.has_disk_tier());
+        assert!(c.insert(sample(1, 100)));
+        assert!(c.insert(sample(2, 100)));
+        assert!(!c.insert(sample(3, 100)), "mem-only must reject when full");
+        assert!(c.get(1).is_some());
+        assert!(c.get(3).is_none());
+        let ts = c.tier_snapshot();
+        assert_eq!(ts.mem_hits, 1);
+        assert_eq!(ts.disk_hits, 0);
+        assert_eq!(ts.misses, 1);
+        assert_eq!(ts.rejected, 1);
+        assert_eq!(ts.disk_capacity, 0);
+    }
+}

@@ -6,7 +6,7 @@
 //! Every option also has an environment fallback `DLIO_<KEY>` (upper-cased,
 //! dashes → underscores) so benches can be tuned without editing code.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
 
 /// Parsed command line.
@@ -102,6 +102,18 @@ impl Args {
         }
     }
 
+    /// Byte-quantity option: plain integers, `k`/`m`/`g` (and `kb`/`kib`
+    /// etc.) suffixed sizes — "512k", "1.5GiB" — or "max" for `u64::MAX`.
+    /// Cache/spill capacities read through this so CLI users don't count
+    /// zeros.
+    pub fn bytes_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.lookup(key) {
+            None => Ok(default),
+            Some(v) => parse_bytes(&v)
+                .with_context(|| format!("--{key} {v:?}: not a byte size")),
+        }
+    }
+
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
             || std::env::var(format!(
@@ -130,6 +142,40 @@ impl Args {
                 .collect(),
         }
     }
+}
+
+/// Parse a human byte size: "4096", "512k", "16m", "1.5g", "2GiB", "max".
+fn parse_bytes(raw: &str) -> Result<u64> {
+    let t = raw.trim().to_ascii_lowercase();
+    if t == "max" {
+        return Ok(u64::MAX);
+    }
+    let suffixes: [(&str, u64); 9] = [
+        ("kib", 1 << 10),
+        ("mib", 1 << 20),
+        ("gib", 1 << 30),
+        ("kb", 1 << 10),
+        ("mb", 1 << 20),
+        ("gb", 1 << 30),
+        ("k", 1 << 10),
+        ("m", 1 << 20),
+        ("g", 1 << 30),
+    ];
+    let (digits, mult) = suffixes
+        .iter()
+        .find_map(|&(suf, mult)| {
+            t.strip_suffix(suf).map(|rest| (rest, mult))
+        })
+        .unwrap_or((t.as_str(), 1));
+    let n: f64 = digits
+        .trim()
+        .parse()
+        .with_context(|| format!("bad byte quantity {raw:?}"))?;
+    ensure!(
+        n.is_finite() && n >= 0.0,
+        "byte quantity {raw:?} must be non-negative"
+    );
+    Ok((n * mult as f64) as u64)
 }
 
 #[cfg(test)]
@@ -166,6 +212,27 @@ mod tests {
         let b = parse("sim --nodes 2,8,32");
         assert_eq!(b.usize_list_or("nodes", &[]).unwrap(), vec![2, 8, 32]);
         assert!(a.usize_list_or("nodes", &[]).is_err() || !a.positional().is_empty());
+    }
+
+    #[test]
+    fn byte_quantities_parse_with_suffixes() {
+        let a = parse(
+            "train --cache-bytes 512k --disk-cache-bytes 1.5g --raw 4096 \
+             --cap max --pad 2MiB",
+        );
+        assert_eq!(a.bytes_or("cache-bytes", 0).unwrap(), 512 * 1024);
+        assert_eq!(
+            a.bytes_or("disk-cache-bytes", 0).unwrap(),
+            (1.5 * (1u64 << 30) as f64) as u64
+        );
+        assert_eq!(a.bytes_or("raw", 0).unwrap(), 4096);
+        assert_eq!(a.bytes_or("cap", 0).unwrap(), u64::MAX);
+        assert_eq!(a.bytes_or("pad", 0).unwrap(), 2 << 20);
+        assert_eq!(a.bytes_or("absent", 77).unwrap(), 77);
+        let bad = parse("train --cache-bytes nope");
+        assert!(bad.bytes_or("cache-bytes", 0).is_err());
+        let neg = parse("train --cache-bytes -1k");
+        assert!(neg.bytes_or("cache-bytes", 0).is_err());
     }
 
     #[test]

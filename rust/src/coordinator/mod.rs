@@ -30,10 +30,11 @@ pub mod checkpoint;
 pub use allreduce::GradSync;
 pub use checkpoint::Checkpoint;
 
-use crate::cache::{CacheDirectory, Policy, SampleCache};
+use crate::cache::{CacheDirectory, CacheStack, Policy, SpillConfig};
 use crate::loader::{BatchIds, BatchRequest, FetchContext, Loader, LoaderConfig};
 use crate::metrics::{
     EpochReport, FabricSnapshot, LoadCounters, LoadSnapshot, PlannerSnapshot,
+    TierSnapshot,
 };
 use crate::net::Fabric;
 use crate::runtime::{Engine, HostTensor};
@@ -41,6 +42,7 @@ use crate::sampler::{
     EpochScheme, GlobalShuffler, PartitionPlanner, PlannerConfig,
 };
 use crate::storage::StorageSystem;
+use crate::util::Executor;
 use anyhow::{ensure, Context, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
@@ -70,8 +72,19 @@ pub struct TrainerConfig {
     pub sampler: SamplerKind,
     pub loader: LoaderConfig,
     pub seed: u64,
-    /// Per-learner cache capacity; 0 disables caching (pure Reg baseline).
+    /// Per-learner DRAM cache capacity; 0 disables caching (pure Reg
+    /// baseline).
     pub cache_capacity_bytes: u64,
+    /// Per-learner SSD spill-tier capacity; 0 keeps the stack mem-only.
+    /// Must be a real byte budget (the spill segment is preallocated), not
+    /// `u64::MAX`. DRAM overflow spills here write-behind and is served
+    /// back as zero-copy mmap views (paper §III-C/§VIII hierarchy).
+    pub disk_cache_capacity_bytes: u64,
+    /// Simulated SSD read latency per disk hit, seconds (0 = real device).
+    pub disk_latency_s: f64,
+    /// Where spill segments live (default: the OS temp dir). Segments are
+    /// unlinked when the job's stacks drop.
+    pub spill_dir: Option<std::path::PathBuf>,
     pub flip_prob: f64,
     pub decode_s_per_kib: f64,
     /// Samples held out for the final validation pass (the LAST
@@ -94,6 +107,9 @@ impl Default for TrainerConfig {
             loader: LoaderConfig::default(),
             seed: 42,
             cache_capacity_bytes: u64::MAX,
+            disk_cache_capacity_bytes: 0,
+            disk_latency_s: 0.0,
+            spill_dir: None,
             flip_prob: 0.5,
             decode_s_per_kib: 0.0,
             eval_samples: 0,
@@ -128,6 +144,10 @@ pub struct TrainingReport {
     /// Fabric overlap accounting (serialized vs overlapped transfer time,
     /// per-link queueing, peak in-flight transfers; DESIGN.md §9).
     pub fabric: FabricSnapshot,
+    /// Hierarchical cache-tier accounting aggregated over every learner's
+    /// stack: mem/disk hit split, spill write-behind occupancy, and the
+    /// disk-hit zero-copy meter (DESIGN.md §10).
+    pub tiers: TierSnapshot,
 }
 
 impl TrainingReport {
@@ -163,6 +183,8 @@ fn add_snap(a: &mut LoadSnapshot, d: &LoadSnapshot) {
     a.storage_bytes += d.storage_bytes;
     a.remote_bytes += d.remote_bytes;
     a.local_hits += d.local_hits;
+    a.disk_hits += d.disk_hits;
+    a.disk_bytes += d.disk_bytes;
     a.remote_hits += d.remote_hits;
     a.storage_loads += d.storage_loads;
     a.decode_s += d.decode_s;
@@ -239,15 +261,51 @@ impl Trainer {
         let train_n = n - eval_n;
         let shuffler = GlobalShuffler::new(cfg.seed, train_n);
 
-        // Shared distributed state.
-        let caches: Vec<Arc<SampleCache>> = (0..p)
-            .map(|_| {
-                Arc::new(SampleCache::new(
-                    cfg.cache_capacity_bytes,
-                    Policy::InsertOnly,
-                ))
+        // Shared distributed state. Each learner holds ONE cache-stack
+        // handle: the DRAM tier plus, when configured, an SSD spill tier
+        // whose write-behind runs on a job-wide spill executor (so SSD
+        // writes never ride a batch's critical path).
+        let spill_executor = (cfg.disk_cache_capacity_bytes > 0)
+            .then(|| Arc::new(Executor::new(2)));
+        // Job-unique segment names: two tiered trainers in one process
+        // (test harness) must never truncate each other's segments.
+        static SPILL_SEQ: std::sync::atomic::AtomicU64 =
+            std::sync::atomic::AtomicU64::new(0);
+        let spill_job = SPILL_SEQ.fetch_add(1, Ordering::SeqCst);
+        let caches: Vec<Arc<CacheStack>> = (0..p)
+            .map(|j| -> Result<Arc<CacheStack>> {
+                let stack = if cfg.disk_cache_capacity_bytes > 0 {
+                    let dir = cfg
+                        .spill_dir
+                        .clone()
+                        .unwrap_or_else(std::env::temp_dir);
+                    let mut stack = CacheStack::tiered(
+                        cfg.cache_capacity_bytes,
+                        Policy::InsertOnly,
+                        &SpillConfig {
+                            path: dir.join(format!(
+                                "dlio-spill-{}-{spill_job}-l{j}.seg",
+                                std::process::id()
+                            )),
+                            capacity_bytes: cfg.disk_cache_capacity_bytes,
+                            read_latency: std::time::Duration::from_secs_f64(
+                                cfg.disk_latency_s.max(0.0),
+                            ),
+                        },
+                    )?;
+                    if let Some(ex) = &spill_executor {
+                        stack = stack.with_spill_executor(Arc::clone(ex));
+                    }
+                    stack
+                } else {
+                    CacheStack::mem_only(
+                        cfg.cache_capacity_bytes,
+                        Policy::InsertOnly,
+                    )
+                };
+                Ok(Arc::new(stack))
             })
-            .collect();
+            .collect::<Result<_>>()?;
         let directory = Arc::new(CacheDirectory::new(n));
         // One shared partition planner for the whole job: every step's
         // Loc/Reg partition is computed exactly once per process, on the
@@ -355,6 +413,17 @@ impl Trainer {
             None
         };
 
+        // Settle any write-behind spills still queued, then snapshot the
+        // hierarchical tier accounting across every learner's stack.
+        for c in &caches {
+            c.drain_spills();
+        }
+        let tiers = caches
+            .iter()
+            .fold(TierSnapshot::default(), |acc, c| {
+                acc.merge(&c.tier_snapshot())
+            });
+
         let accums = Arc::try_unwrap(accums).ok().unwrap().into_inner().unwrap();
         let epochs = accums
             .into_iter()
@@ -390,6 +459,7 @@ impl Trainer {
             mean_grad_exec_s: grad_prog.mean_exec_s(),
             planner: planner.snapshot(),
             fabric: self.fabric.snapshot(),
+            tiers,
         })
     }
 
@@ -435,7 +505,7 @@ struct LearnerEnv {
     j: usize,
     cfg: TrainerConfig,
     storage: Arc<StorageSystem>,
-    caches: Vec<Arc<SampleCache>>,
+    caches: Vec<Arc<CacheStack>>,
     directory: Arc<CacheDirectory>,
     populate: Arc<AtomicBool>,
     fabric: Arc<Fabric>,
@@ -629,6 +699,13 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
 
         barrier.wait();
         if j == 0 && epoch == 0 {
+            // Settle write-behind spills before freezing: every learner is
+            // past its loader shutdown, so the queue only drains — and the
+            // directory then holds the complete (tier-accurate) population
+            // that Loc planning for the remaining epochs relies on.
+            for c in &caches {
+                c.drain_spills();
+            }
             // Freeze the directory: no replacement after the first epoch.
             populate.store(false, Ordering::SeqCst);
         }

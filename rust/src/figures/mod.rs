@@ -4,7 +4,7 @@
 //! fall — are the reproduction target; absolute numbers correspond to the
 //! Lassen-calibrated simulator or the local live pipeline.
 
-use crate::cache::{CacheDirectory, Policy, SampleCache};
+use crate::cache::{CacheDirectory, CacheStack, Policy};
 use crate::loader::{BatchRequest, FetchContext, Loader, LoaderConfig};
 use crate::metrics::LoadCounters;
 use crate::net::{Fabric, FabricConfig};
@@ -137,7 +137,7 @@ pub fn fig7(
             let ctx = Arc::new(FetchContext {
                 learner: 0,
                 storage: Arc::clone(&storage),
-                caches: vec![Arc::new(SampleCache::new(0, Policy::InsertOnly))],
+                caches: vec![Arc::new(CacheStack::mem_only(0, Policy::InsertOnly))],
                 directory: Arc::new(CacheDirectory::new(n as u64)),
                 fabric: Arc::new(Fabric::new(FabricConfig {
                     real_time: false,

@@ -1,11 +1,17 @@
-//! Sample fetch path: local cache → remote cache (via fabric) → storage.
+//! Sample fetch path: local cache stack (mem → disk) → remote cache (via
+//! fabric) → storage.
 //!
 //! One [`FetchContext`] per learner, shared by its loader workers. The
 //! lookup order implements the paper's hierarchy (§III-C): "a sample load
 //! can be a local cache hit, a remote cache hit, or a cache miss served by
-//! the storage system". Storage reads optionally populate the local cache
-//! and the shared directory on-the-fly (the paper's first-epoch population
-//! policy).
+//! the storage system" — with the local tier itself hierarchical
+//! (DESIGN.md §10): DRAM hits resolve inline, SSD-tier residents are
+//! *routed* at batch-planning time and resolved inside the overlapped
+//! task wave, so their device reads overlap in-flight transfers. Storage
+//! reads optionally populate the local stack and the shared directory
+//! on-the-fly (the paper's first-epoch population policy); mem-tier
+//! overflow spills to the SSD tier write-behind, publishing its directory
+//! claim only once the bytes are servable.
 //!
 //! This is the zero-copy, coalesced, overlapped pipeline (DESIGN.md
 //! §2/§4/§9):
@@ -34,7 +40,7 @@
 //! [`fetch_batch`]: FetchContext::fetch_batch
 //! [`fetch_batch_overlapped`]: FetchContext::fetch_batch_overlapped
 
-use crate::cache::{CacheDirectory, SampleCache};
+use crate::cache::{CacheDirectory, CacheStack, Lookup, Tier};
 use crate::metrics::{LoadCounters, Source};
 use crate::net::Fabric;
 use crate::storage::{Sample, StorageSystem};
@@ -49,8 +55,9 @@ use std::time::Instant;
 pub struct FetchContext {
     pub learner: usize,
     pub storage: Arc<StorageSystem>,
-    /// All learners' caches (index = learner id); `caches[learner]` is ours.
-    pub caches: Vec<Arc<SampleCache>>,
+    /// All learners' cache stacks (index = learner id);
+    /// `caches[learner]` is ours.
+    pub caches: Vec<Arc<CacheStack>>,
     /// Replicated cache directory (shared, lock-free; updated during
     /// population and repaired on stale hits).
     pub directory: Arc<CacheDirectory>,
@@ -86,6 +93,11 @@ pub struct DeferredBatch {
     /// Unresolved storage misses: (sample id, slot positions) — one entry
     /// per *unique* id, so duplicates are fetched and accounted once.
     pub pending: Vec<(u32, Vec<usize>)>,
+    /// Local SSD-tier residents, routed (not read) at planning time —
+    /// unique ids with their slot positions. Resolve with
+    /// [`FetchContext::fetch_disk`]; the overlapped path dispatches them
+    /// as wave tasks so the device reads run under in-flight transfers.
+    pub disk: Vec<(u32, Vec<usize>)>,
     /// Unresolved remote hits, grouped by owning learner (one fabric
     /// message each). Resolve with [`FetchContext::fetch_owner`].
     pub remote: Vec<OwnerGroup>,
@@ -219,12 +231,15 @@ impl FetchContext {
         result
     }
 
-    /// Phase one of a batch fetch: resolve local hits for the WHOLE batch
-    /// and route every miss — remote hits into per-owner groups (no
-    /// transfer issued yet), storage misses into `pending`. Complete with
-    /// [`fetch_owner`] per group and [`fetch_storage`] per chunk (both
-    /// safe to run concurrently), or let [`fetch_batch`] /
+    /// Phase one of a batch fetch: resolve local DRAM hits for the WHOLE
+    /// batch and route every other sample — local SSD-tier residents into
+    /// `disk` (no device read issued yet), remote hits into per-owner
+    /// groups (no transfer issued yet), storage misses into `pending`.
+    /// Complete with [`fetch_disk`] / [`fetch_owner`] / [`fetch_storage`]
+    /// (all safe to run concurrently), or let [`fetch_batch`] /
     /// [`fetch_batch_overlapped`] drive the whole thing.
+    ///
+    /// [`fetch_disk`]: FetchContext::fetch_disk
     ///
     /// [`fetch_owner`]: FetchContext::fetch_owner
     /// [`fetch_storage`]: FetchContext::fetch_storage
@@ -259,10 +274,9 @@ impl FetchContext {
         };
         let mut bytes = 0u64;
         for (id, pos) in entries {
-            let got = self
-                .caches[owner]
-                .get(id)
-                .or_else(|| self.repair_then_recheck(id, owner));
+            let got = self.caches[owner].get(id).or_else(|| {
+                self.repair_then_recheck(id, owner).map(|(_, s)| s)
+            });
             match got {
                 Some(s) => {
                     // One payload crosses the wire per unique id; the
@@ -306,23 +320,30 @@ impl FetchContext {
         let mut batch = DeferredBatch {
             slots: vec![None; b],
             pending: Vec::new(),
+            disk: Vec::new(),
             remote: Vec::new(),
         };
         if b == 0 {
             return Ok(batch);
         }
 
-        // 1. Local hits (zero-copy Arc handouts).
+        // 1. Local stack routing: DRAM hits resolve inline (zero-copy Arc
+        //    handouts); SSD-tier residents are deferred — their reads (and
+        //    any simulated device latency) belong in the task wave, under
+        //    the in-flight transfers, not on this planning pass.
         let mut missing: Vec<usize> = Vec::new();
+        let mut disk_pos: BTreeMap<u32, Vec<usize>> = BTreeMap::new();
         for (i, &id) in ids.iter().enumerate() {
-            match self.caches[self.learner].get(id) {
-                Some(s) => {
+            match self.caches[self.learner].lookup(id) {
+                Lookup::Mem(s) => {
                     self.counters.record(Source::LocalCache, s.size() as u64);
                     batch.slots[i] = Some(s);
                 }
-                None => missing.push(i),
+                Lookup::Disk => disk_pos.entry(id).or_default().push(i),
+                Lookup::Miss => missing.push(i),
             }
         }
+        batch.disk = disk_pos.into_iter().collect();
 
         // 2. Group misses by id — duplicates are fetched and accounted
         //    once — then route by directory owner (single atomic load per
@@ -339,11 +360,18 @@ impl FetchContext {
                     by_owner.entry(owner).or_default().push((id, pos));
                 }
                 Some(owner) => {
-                    // Stale self-entry: our cache no longer holds it.
+                    // Stale self-entry (mem eviction) — or a write-behind
+                    // spill whose commit landed between the stack probe
+                    // above and this directory read. Recheck and account
+                    // by the tier that actually serves it.
                     match self.repair_then_recheck(id, owner) {
-                        Some(s) => {
+                        Some((tier, s)) => {
+                            let src = match tier {
+                                Tier::Mem => Source::LocalCache,
+                                Tier::Disk => Source::LocalDisk,
+                            };
                             self.counters.record_n(
-                                Source::LocalCache,
+                                src,
                                 s.size() as u64,
                                 pos.len() as u64,
                             );
@@ -367,16 +395,52 @@ impl FetchContext {
         Ok(batch)
     }
 
+    /// Resolve routed local SSD-tier entries: one latency charge and one
+    /// mmap-backed view per unique id — zero payload copies (the handle
+    /// aliases the spill segment; `copied_bytes` is untouched). Entries
+    /// the tier no longer holds (defensive: spill tiers are insert-only)
+    /// come back for a storage fetch. Safe to call concurrently on
+    /// disjoint chunks — that concurrency is how disk reads overlap the
+    /// wave's transfers.
+    pub fn fetch_disk(
+        &self,
+        entries: Vec<(u32, Vec<usize>)>,
+    ) -> (Vec<(Vec<usize>, Arc<Sample>)>, Vec<(u32, Vec<usize>)>) {
+        let mut resolved = Vec::with_capacity(entries.len());
+        let mut fallback = Vec::new();
+        for (id, pos) in entries {
+            match self.caches[self.learner].get_disk(id) {
+                Some(s) => {
+                    self.counters.record_n(
+                        Source::LocalDisk,
+                        s.size() as u64,
+                        pos.len() as u64,
+                    );
+                    resolved.push((pos, s));
+                }
+                None => fallback.push((id, pos)),
+            }
+        }
+        (resolved, fallback)
+    }
+
     /// Serial completion shared by `fetch`/`fetch_batch`: resolve owner
     /// groups one after another (transfers queue on the fabric exactly as
-    /// the pre-overlap pipeline did), then serve every storage miss —
-    /// including stale-owner fallbacks — in one coalesced read.
+    /// the pre-overlap pipeline did), read the local SSD-tier entries,
+    /// then serve every storage miss — including stale-owner fallbacks —
+    /// in one coalesced read.
     fn resolve_serial(&self, mut batch: DeferredBatch) -> Result<Vec<Arc<Sample>>> {
         for group in std::mem::take(&mut batch.remote) {
             let fetched = self.fetch_owner(group);
             let fallback = batch.fill_remote(fetched);
             batch.pending.extend(fallback);
         }
+        let (resolved, fallback) =
+            self.fetch_disk(std::mem::take(&mut batch.disk));
+        for (pos, s) in resolved {
+            fill_slots(&mut batch.slots, &pos, &s);
+        }
+        batch.pending.extend(fallback);
         let pending = std::mem::take(&mut batch.pending);
         let fetched = self.storage_fill(&pending)?;
         batch.fill(&pending, fetched);
@@ -393,21 +457,42 @@ impl FetchContext {
     ) -> Result<Vec<Arc<Sample>>> {
         let mut batch = ctx.fetch_batch_core(ids)?;
         let remote = std::mem::take(&mut batch.remote);
+        let disk = std::mem::take(&mut batch.disk);
         let pending = std::mem::take(&mut batch.pending);
-        if remote.is_empty() && pending.is_empty() {
+        if remote.is_empty() && disk.is_empty() && pending.is_empty() {
             return Ok(batch.finish());
         }
 
         // A task's result: which kind of work it was, plus its outcome.
         enum Done {
             Remote(OwnerFetch),
+            Disk(Vec<(Vec<usize>, Arc<Sample>)>, Vec<(u32, Vec<usize>)>),
             Storage(Vec<(u32, Vec<usize>)>, Result<Vec<Arc<Sample>>>),
         }
         let mut tasks: Vec<Box<dyn FnOnce() -> Done + Send>> =
-            Vec::with_capacity(remote.len() + parallelism);
+            Vec::with_capacity(remote.len() + 2 * parallelism);
         for group in remote {
             let ctx = Arc::clone(ctx);
             tasks.push(Box::new(move || Done::Remote(ctx.fetch_owner(group))));
+        }
+        // Local SSD-tier reads ride the same wave: chunked like storage so
+        // per-hit device latency parallelizes, resolved UNDER the
+        // in-flight transfers (the §III-C hierarchy at full overlap).
+        if !disk.is_empty() {
+            let per = disk.len().div_ceil(parallelism.max(1));
+            let mut it = disk.into_iter();
+            loop {
+                let chunk: Vec<(u32, Vec<usize>)> =
+                    it.by_ref().take(per).collect();
+                if chunk.is_empty() {
+                    break;
+                }
+                let ctx = Arc::clone(ctx);
+                tasks.push(Box::new(move || {
+                    let (resolved, fb) = ctx.fetch_disk(chunk);
+                    Done::Disk(resolved, fb)
+                }));
+            }
         }
         if !pending.is_empty() {
             let per = pending.len().div_ceil(parallelism.max(1));
@@ -430,14 +515,20 @@ impl FetchContext {
         }
 
         // Single-writer assembly: run_batch is a barrier (the wave's wall
-        // time is max over tasks — decode and storage admission ran UNDER
-        // the in-flight transfers, which is the §9 win); this worker then
-        // folds every task's chunk into `slots`, alone.
+        // time is max over tasks — decode, storage admission and SSD reads
+        // ran UNDER the in-flight transfers, which is the §9 win); this
+        // worker then folds every task's chunk into `slots`, alone.
         let mut fallback: Vec<(u32, Vec<usize>)> = Vec::new();
         for outcome in executor.run_batch(tasks) {
             match outcome {
                 Ok(Done::Remote(fetched)) => {
                     fallback.extend(batch.fill_remote(fetched));
+                }
+                Ok(Done::Disk(resolved, fb)) => {
+                    for (pos, s) in resolved {
+                        fill_slots(&mut batch.slots, &pos, &s);
+                    }
+                    fallback.extend(fb);
                 }
                 Ok(Done::Storage(chunk, got)) => batch.fill(&chunk, got?),
                 Err(payload) => anyhow::bail!(
@@ -491,18 +582,28 @@ impl FetchContext {
     /// clobbered its fresh claim; if the sample reappeared, restore the
     /// claim and hand the sample back (see `CacheDirectory::clear_owner_if`
     /// docs). Used identically for stale self- and remote entries.
-    fn repair_then_recheck(&self, id: u32, owner: usize) -> Option<Arc<Sample>> {
+    fn repair_then_recheck(
+        &self,
+        id: u32,
+        owner: usize,
+    ) -> Option<(Tier, Arc<Sample>)> {
         self.directory.clear_owner_if(id, owner);
-        let s = self.caches[owner].get(id)?;
-        self.directory.set_owner(id, owner);
-        Some(s)
+        let (tier, s) = self.caches[owner].get_tiered(id)?;
+        self.directory.set_owner_tier(id, owner, tier);
+        Some((tier, s))
     }
 
-    /// First-epoch population: local cache insert + directory claim. A
+    /// First-epoch population: local stack insert + directory claim. A
     /// sample whose bytes pin a larger shared run buffer (`pread` fallback
     /// mode) is compacted before caching, so the cache's byte accounting
     /// matches what it actually keeps resident; mapped views (the default)
     /// are cached as-is with zero copies.
+    ///
+    /// The directory claim rides the stack's commit hook: a mem admission
+    /// claims inline (as before), while a write-behind spill claims — with
+    /// `Tier::Disk` — only after the SSD write commits, so the directory
+    /// never advertises bytes that are not yet servable. A rejected insert
+    /// drops the hook and claims nothing.
     fn populate(&self, s: &Arc<Sample>) {
         if !self.cache_on_load {
             return;
@@ -522,9 +623,24 @@ impl FetchContext {
         } else {
             Arc::clone(s)
         };
-        if self.caches[self.learner].insert(to_cache) {
-            self.directory.set_owner(s.id, self.learner);
+        let id = s.id;
+        let learner = self.learner;
+        // Mem-only stacks (baselines, partial-cache runs) resolve the
+        // admission inline — no boxed hook, no Arc clones, exactly the
+        // pre-hierarchy population cost.
+        if !self.caches[learner].has_disk_tier() {
+            if self.caches[learner].insert(to_cache) {
+                self.directory.set_owner(id, learner);
+            }
+            return;
         }
+        let directory = Arc::clone(&self.directory);
+        self.caches[learner].insert_with(
+            to_cache,
+            Some(Box::new(move |tier| {
+                directory.set_owner_tier(id, learner, tier);
+            })),
+        );
     }
 
     /// Simulated decode occupancy (parallelizable across threads; see the
@@ -553,7 +669,7 @@ mod tests {
         tag: &str,
         cache_on_load: bool,
         p: usize,
-    ) -> (FetchContext, Arc<SampleCache>) {
+    ) -> (FetchContext, Arc<CacheStack>) {
         let dir = std::env::temp_dir().join(format!(
             "dlio-fetch-{tag}-{}-{cache_on_load}",
             std::process::id()
@@ -565,8 +681,10 @@ mod tests {
         )
         .unwrap();
         let storage = Arc::new(StorageSystem::open(&dir, None).unwrap());
-        let caches: Vec<Arc<SampleCache>> = (0..p)
-            .map(|_| Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly)))
+        let caches: Vec<Arc<CacheStack>> = (0..p)
+            .map(|_| {
+                Arc::new(CacheStack::mem_only(u64::MAX, Policy::InsertOnly))
+            })
             .collect();
         let mine = Arc::clone(&caches[0]);
         let fc = FetchContext {
@@ -585,7 +703,7 @@ mod tests {
         (fc, mine)
     }
 
-    fn ctx(cache_on_load: bool) -> (FetchContext, Arc<SampleCache>) {
+    fn ctx(cache_on_load: bool) -> (FetchContext, Arc<CacheStack>) {
         ctx_with("base", cache_on_load, 2)
     }
 
@@ -741,6 +859,79 @@ mod tests {
         let (fc, _) = ctx(false);
         assert!(fc.fetch_batch(&[]).unwrap().is_empty());
         assert!(fc.fetch_batch(&[0, 1000]).is_err());
+    }
+
+    #[test]
+    fn disk_tier_hits_resolve_in_batch_with_zero_copies() {
+        use crate::cache::SpillConfig;
+        // Local stack whose mem tier holds half the working set; the rest
+        // spills (inline — no executor here) during population. A warm
+        // batch must then serve mem + disk with zero storage reads, and
+        // the disk share must stay zero-copy (mmap views of the segment).
+        let dir = std::env::temp_dir()
+            .join(format!("dlio-fetch-tier-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        generate(
+            &dir,
+            &SyntheticSpec { n_samples: 32, ..Default::default() },
+        )
+        .unwrap();
+        let storage = Arc::new(StorageSystem::open(&dir, None).unwrap());
+        let rb = storage.meta().record_bytes();
+        let stack = Arc::new(
+            CacheStack::tiered(
+                (8 * rb) as u64,
+                Policy::InsertOnly,
+                &SpillConfig {
+                    path: std::env::temp_dir().join(format!(
+                        "dlio-fetch-tier-{}.spill",
+                        std::process::id()
+                    )),
+                    capacity_bytes: (32 * rb) as u64,
+                    read_latency: std::time::Duration::ZERO,
+                },
+            )
+            .unwrap(),
+        );
+        let fc = FetchContext {
+            learner: 0,
+            storage,
+            caches: vec![Arc::clone(&stack)],
+            directory: Arc::new(CacheDirectory::new(32)),
+            fabric: Arc::new(Fabric::new(FabricConfig {
+                real_time: false,
+                ..Default::default()
+            })),
+            cache_on_load: true,
+            decode_s_per_kib: 0.0,
+            counters: Arc::new(LoadCounters::new()),
+        };
+        let ids: Vec<u32> = (0..16).collect();
+        let cold = fc.fetch_batch(&ids).unwrap();
+        assert_eq!(stack.mem().len(), 8, "mem tier must fill to capacity");
+        assert_eq!(stack.disk().unwrap().entries(), 8, "overflow must spill");
+        // Disk claims are tier-accurate in the directory.
+        let (dir_mem, dir_disk) = fc.directory.tier_counts();
+        assert_eq!((dir_mem, dir_disk), (8, 8));
+
+        let before = fc.counters.snapshot();
+        fc.storage.reset_counters();
+        let warm = fc.fetch_batch(&ids).unwrap();
+        let delta = fc.counters.snapshot().delta(&before);
+        assert_eq!(delta.local_hits, 8);
+        assert_eq!(delta.disk_hits, 8);
+        assert_eq!(delta.storage_loads, 0, "warm batch must not hit storage");
+        assert_eq!(fc.storage.samples_read(), 0);
+        assert_eq!(
+            delta.copied_bytes, 0,
+            "cache-tier hits must add zero payload copies"
+        );
+        let ts = stack.tier_snapshot();
+        assert_eq!(ts.disk_hit_copied_bytes, 0, "disk hits must be mmap views");
+        assert_eq!(ts.disk_hit_bytes, (8 * rb) as u64);
+        for (k, s) in warm.iter().enumerate() {
+            assert_eq!(s.bytes, cold[k].bytes, "tiered contents must match");
+        }
     }
 
     #[test]

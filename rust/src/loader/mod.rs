@@ -104,6 +104,14 @@ impl LoaderRuntime {
         LoaderRuntime { executor, pool }
     }
 
+    /// The persistent decode executor (None when `threads_per_worker ≤ 1`).
+    /// Also the natural spill executor for a write-behind
+    /// [`crate::cache::CacheStack`]: SSD writes ride the same long-lived
+    /// pool, off the batch critical path.
+    pub fn executor(&self) -> Option<Arc<Executor>> {
+        self.executor.clone()
+    }
+
     pub fn executor_stats(&self) -> Option<ExecutorStats> {
         self.executor.as_ref().map(|e| e.stats())
     }
@@ -507,7 +515,7 @@ fn load_batch(shared: &WorkerShared, req: BatchRequest) -> Result<LoadedBatch> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cache::{CacheDirectory, Policy, SampleCache};
+    use crate::cache::{CacheDirectory, CacheStack, Policy};
     use crate::metrics::LoadCounters;
     use crate::net::{Fabric, FabricConfig};
     use crate::storage::{generate, StorageSystem, SyntheticSpec};
@@ -521,7 +529,7 @@ mod tests {
         Arc::new(FetchContext {
             learner: 0,
             storage: Arc::new(StorageSystem::open(&dir, None).unwrap()),
-            caches: vec![Arc::new(SampleCache::new(
+            caches: vec![Arc::new(CacheStack::mem_only(
                 u64::MAX,
                 Policy::InsertOnly,
             ))],
@@ -862,7 +870,7 @@ mod tests {
             let ctx = Arc::new(FetchContext {
                 learner: 0,
                 storage: Arc::new(StorageSystem::open(&dir, None).unwrap()),
-                caches: vec![Arc::new(SampleCache::new(
+                caches: vec![Arc::new(CacheStack::mem_only(
                     u64::MAX,
                     Policy::InsertOnly,
                 ))],

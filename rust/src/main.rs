@@ -119,7 +119,10 @@ fn train(args: &Args) -> Result<()> {
             prefetch_batches: args.usize_or("prefetch", 2)?,
         },
         seed: args.u64_or("seed", 42)?,
-        cache_capacity_bytes: args.u64_or("cache-bytes", u64::MAX)?,
+        cache_capacity_bytes: args.bytes_or("cache-bytes", u64::MAX)?,
+        disk_cache_capacity_bytes: args.bytes_or("disk-cache-bytes", 0)?,
+        disk_latency_s: args.f64_or("disk-latency", 0.0)?,
+        spill_dir: args.str_opt("spill-dir").map(PathBuf::from),
         flip_prob: args.f64_or("flip", 0.5)?,
         decode_s_per_kib: args.f64_or("decode", 0.0)?,
         eval_samples: args.usize_or("eval", 0)?,
@@ -146,6 +149,24 @@ fn train(args: &Args) -> Result<()> {
         report.learners_in_sync(),
         report.mean_grad_exec_s * 1e3
     );
+    if report.tiers.disk_capacity > 0 {
+        println!(
+            "cache tiers: mem hits {:.1}% disk hits {:.1}% | spilled \
+             {:.1} MiB ({:.0}% off-path) | disk-hit copied bytes {}",
+            report.tiers.mem_hit_ratio() * 100.0,
+            report.tiers.disk_hit_ratio() * 100.0,
+            report.tiers.spill_bytes as f64 / (1024.0 * 1024.0),
+            report.tiers.spill_offpath_ratio() * 100.0,
+            report.tiers.disk_hit_copied_bytes,
+        );
+        if report.tiers.spill_failures > 0 {
+            eprintln!(
+                "WARNING: {} spill write(s) failed — those samples are \
+                 uncached and re-read from storage every epoch",
+                report.tiers.spill_failures
+            );
+        }
+    }
     Ok(())
 }
 
@@ -242,7 +263,7 @@ fn run_analytic(args: &Args) -> Result<()> {
             m.loading_time_plain(p),
             m.true_cost_plain(p),
             m.io_time_distcache(p),
-            m.io_time_loc(),
+            m.io_time_loc(p),
         );
     }
     Ok(())

@@ -7,10 +7,14 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Where a sample's bytes came from (accounting mirror of
-/// `sampler::Provenance`).
+/// `sampler::Provenance`). The local tier is split mem/disk so the
+/// hierarchical cache stack's distinct hit costs stay visible end-to-end.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Source {
+    /// DRAM tier of the local cache stack.
     LocalCache,
+    /// SSD spill tier of the local cache stack (mmap-backed, zero-copy).
+    LocalDisk,
     RemoteCache,
     Storage,
 }
@@ -21,6 +25,11 @@ pub struct LoadCounters {
     pub storage_bytes: AtomicU64,
     pub remote_bytes: AtomicU64,
     pub local_hits: AtomicU64,
+    /// Batch positions served by the local stack's SSD tier.
+    pub disk_hits: AtomicU64,
+    /// Payload bytes those positions carried (all mmap views — served, not
+    /// copied).
+    pub disk_bytes: AtomicU64,
     pub remote_hits: AtomicU64,
     pub storage_loads: AtomicU64,
     pub decode_ns: AtomicU64,
@@ -62,6 +71,10 @@ impl LoadCounters {
             Source::LocalCache => {
                 self.local_hits.fetch_add(n, Ordering::Relaxed);
             }
+            Source::LocalDisk => {
+                self.disk_hits.fetch_add(n, Ordering::Relaxed);
+                self.disk_bytes.fetch_add(bytes * n, Ordering::Relaxed);
+            }
             Source::RemoteCache => {
                 self.remote_hits.fetch_add(n, Ordering::Relaxed);
                 self.remote_bytes.fetch_add(bytes * n, Ordering::Relaxed);
@@ -78,6 +91,8 @@ impl LoadCounters {
             storage_bytes: self.storage_bytes.load(Ordering::Relaxed),
             remote_bytes: self.remote_bytes.load(Ordering::Relaxed),
             local_hits: self.local_hits.load(Ordering::Relaxed),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
+            disk_bytes: self.disk_bytes.load(Ordering::Relaxed),
             remote_hits: self.remote_hits.load(Ordering::Relaxed),
             storage_loads: self.storage_loads.load(Ordering::Relaxed),
             decode_s: self.decode_ns.load(Ordering::Relaxed) as f64 / 1e9,
@@ -98,6 +113,8 @@ pub struct LoadSnapshot {
     pub storage_bytes: u64,
     pub remote_bytes: u64,
     pub local_hits: u64,
+    pub disk_hits: u64,
+    pub disk_bytes: u64,
     pub remote_hits: u64,
     pub storage_loads: u64,
     pub decode_s: f64,
@@ -111,7 +128,7 @@ pub struct LoadSnapshot {
 
 impl LoadSnapshot {
     pub fn total_samples(&self) -> u64 {
-        self.local_hits + self.remote_hits + self.storage_loads
+        self.local_hits + self.disk_hits + self.remote_hits + self.storage_loads
     }
 
     /// This snapshot with the wall-clock occupancy fields zeroed, leaving
@@ -142,6 +159,8 @@ impl LoadSnapshot {
             storage_bytes: self.storage_bytes - earlier.storage_bytes,
             remote_bytes: self.remote_bytes - earlier.remote_bytes,
             local_hits: self.local_hits - earlier.local_hits,
+            disk_hits: self.disk_hits - earlier.disk_hits,
+            disk_bytes: self.disk_bytes - earlier.disk_bytes,
             remote_hits: self.remote_hits - earlier.remote_hits,
             storage_loads: self.storage_loads - earlier.storage_loads,
             decode_s: self.decode_s - earlier.decode_s,
@@ -151,6 +170,136 @@ impl LoadSnapshot {
             owner_messages: self.owner_messages - earlier.owner_messages,
             storage_runs: self.storage_runs - earlier.storage_runs,
             copied_bytes: self.copied_bytes - earlier.copied_bytes,
+        }
+    }
+}
+
+/// Hierarchical cache-tier accounting (produced by
+/// `CacheStack::tier_snapshot`): mem/disk hit split, spill write-behind
+/// occupancy, and
+/// the disk-hit zero-copy meter. Aggregated across learners via [`merge`]
+/// into `TrainingReport.tiers` and the `BENCH_hotpath.json` cache section.
+///
+/// [`merge`]: TierSnapshot::merge
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierSnapshot {
+    /// Lookups served by the DRAM tier.
+    pub mem_hits: u64,
+    /// Lookups routed to the SSD tier.
+    pub disk_hits: u64,
+    /// Lookups that missed both tiers.
+    pub misses: u64,
+    pub mem_entries: u64,
+    pub mem_bytes: u64,
+    pub mem_capacity: u64,
+    pub disk_entries: u64,
+    pub disk_bytes: u64,
+    pub disk_capacity: u64,
+    /// Payload bytes written into the spill segment (either path).
+    pub spill_bytes: u64,
+    /// Write-behind spills still queued (instantaneous gauge).
+    pub spill_queue_depth: u64,
+    /// Peak write-behind queue depth (lifetime gauge; `merge` keeps max).
+    pub spill_queue_peak: u64,
+    /// Spill writes that ran on the spill executor — off the batch
+    /// critical path.
+    pub spilled_offpath: u64,
+    /// Spill writes that ran inline on the inserting thread (no executor
+    /// attached); the benches/CI guard this at 0 for the live pipeline.
+    pub spilled_inline: u64,
+    pub spill_failures: u64,
+    /// Payload bytes materialized from the spill segment (mmap views —
+    /// served, not copied), once per *unique* id per batch. `disk_hits`
+    /// counts routed lookups (one per batch position), so with duplicated
+    /// ids this is deliberately NOT `disk_hits × record_bytes`; the
+    /// per-position byte meter is `LoadSnapshot::disk_bytes`.
+    pub disk_hit_bytes: u64,
+    /// Disk-hit payload bytes that were NOT zero-copy mapped views. Any
+    /// nonzero value means the SSD tier broke the one-copy invariant.
+    pub disk_hit_copied_bytes: u64,
+    /// Inserts every tier rejected.
+    pub rejected: u64,
+}
+
+impl TierSnapshot {
+    pub fn lookups(&self) -> u64 {
+        self.mem_hits + self.disk_hits + self.misses
+    }
+
+    pub fn mem_hit_ratio(&self) -> f64 {
+        let n = self.lookups();
+        if n == 0 { 0.0 } else { self.mem_hits as f64 / n as f64 }
+    }
+
+    /// Fraction of lookups the SSD tier served — the DRAM-overflow meter
+    /// (`cache/disk_hit_ratio` in `BENCH_hotpath.json`).
+    pub fn disk_hit_ratio(&self) -> f64 {
+        let n = self.lookups();
+        if n == 0 { 0.0 } else { self.disk_hits as f64 / n as f64 }
+    }
+
+    pub fn hit_ratio(&self) -> f64 {
+        let n = self.lookups();
+        if n == 0 {
+            0.0
+        } else {
+            (self.mem_hits + self.disk_hits) as f64 / n as f64
+        }
+    }
+
+    /// Fraction of spill writes that stayed off the batch critical path;
+    /// 1.0 when nothing spilled.
+    pub fn spill_offpath_ratio(&self) -> f64 {
+        let total = self.spilled_offpath + self.spilled_inline;
+        if total == 0 {
+            1.0
+        } else {
+            self.spilled_offpath as f64 / total as f64
+        }
+    }
+
+    /// Disk-tier share of the resident set — the live pipeline's measured
+    /// α_disk/α split feeding the hierarchical Eq. 7 term.
+    pub fn disk_share(&self) -> f64 {
+        let n = self.mem_entries + self.disk_entries;
+        if n == 0 { 0.0 } else { self.disk_entries as f64 / n as f64 }
+    }
+
+    /// Combined two-tier resident bytes / capacity.
+    pub fn total_bytes(&self) -> u64 {
+        self.mem_bytes + self.disk_bytes
+    }
+
+    pub fn total_capacity(&self) -> u64 {
+        self.mem_capacity.saturating_add(self.disk_capacity)
+    }
+
+    /// Sum two stacks' accounting (capacities saturate: an "unbounded"
+    /// `u64::MAX` mem tier must not wrap; peaks keep the max).
+    pub fn merge(&self, other: &TierSnapshot) -> TierSnapshot {
+        TierSnapshot {
+            mem_hits: self.mem_hits + other.mem_hits,
+            disk_hits: self.disk_hits + other.disk_hits,
+            misses: self.misses + other.misses,
+            mem_entries: self.mem_entries + other.mem_entries,
+            mem_bytes: self.mem_bytes + other.mem_bytes,
+            mem_capacity: self.mem_capacity.saturating_add(other.mem_capacity),
+            disk_entries: self.disk_entries + other.disk_entries,
+            disk_bytes: self.disk_bytes + other.disk_bytes,
+            disk_capacity: self
+                .disk_capacity
+                .saturating_add(other.disk_capacity),
+            spill_bytes: self.spill_bytes + other.spill_bytes,
+            spill_queue_depth: self.spill_queue_depth
+                + other.spill_queue_depth,
+            spill_queue_peak: self.spill_queue_peak.max(other.spill_queue_peak),
+            spilled_offpath: self.spilled_offpath + other.spilled_offpath,
+            spilled_inline: self.spilled_inline + other.spilled_inline,
+            spill_failures: self.spill_failures + other.spill_failures,
+            disk_hit_bytes: self.disk_hit_bytes + other.disk_hit_bytes,
+            disk_hit_copied_bytes: self.disk_hit_copied_bytes
+                + other.disk_hit_copied_bytes,
+            rejected: self.rejected + other.rejected,
         }
     }
 }
@@ -382,13 +531,13 @@ impl EpochReport {
 
     pub fn csv_header() -> &'static str {
         "epoch,steps,epoch_s,wait_s,train_s,sync_s,loss,storage_bytes,\
-         remote_bytes,local_hits,remote_hits,storage_loads,accuracy,\
-         balance_moves"
+         remote_bytes,local_hits,disk_hits,remote_hits,storage_loads,\
+         accuracy,balance_moves"
     }
 
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{},{},{},{},{}",
+            "{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{},{},{},{},{},{}",
             self.epoch,
             self.steps,
             self.epoch_time_s,
@@ -399,6 +548,7 @@ impl EpochReport {
             self.load.storage_bytes,
             self.load.remote_bytes,
             self.load.local_hits,
+            self.load.disk_hits,
             self.load.remote_hits,
             self.load.storage_loads,
             self.accuracy.map(|a| a.to_string()).unwrap_or_default(),
@@ -536,6 +686,78 @@ mod tests {
         assert_eq!(d.storage_bytes, 100);
         // Two equal workloads compare equal regardless of timing.
         assert_eq!(d, s.deterministic());
+    }
+
+    #[test]
+    fn local_disk_source_feeds_the_hierarchy_split() {
+        let c = LoadCounters::new();
+        c.record_n(Source::LocalCache, 3072, 2);
+        c.record_n(Source::LocalDisk, 3072, 3);
+        c.record(Source::Storage, 3072);
+        let s = c.snapshot();
+        assert_eq!(s.local_hits, 2);
+        assert_eq!(s.disk_hits, 3);
+        assert_eq!(s.disk_bytes, 3 * 3072);
+        assert_eq!(s.total_samples(), 6);
+        let d = c.snapshot().delta(&s);
+        assert_eq!(d.disk_hits, 0);
+        assert_eq!(d.disk_bytes, 0);
+        c.record(Source::LocalDisk, 100);
+        let d = c.snapshot().delta(&s);
+        assert_eq!(d.disk_hits, 1);
+        assert_eq!(d.disk_bytes, 100);
+    }
+
+    #[test]
+    fn tier_snapshot_ratios_and_merge() {
+        let a = TierSnapshot {
+            mem_hits: 6,
+            disk_hits: 3,
+            misses: 1,
+            mem_entries: 4,
+            mem_bytes: 400,
+            mem_capacity: u64::MAX,
+            disk_entries: 2,
+            disk_bytes: 200,
+            disk_capacity: 1000,
+            spill_bytes: 200,
+            spill_queue_depth: 0,
+            spill_queue_peak: 5,
+            spilled_offpath: 2,
+            spilled_inline: 0,
+            spill_failures: 0,
+            disk_hit_bytes: 300,
+            disk_hit_copied_bytes: 0,
+            rejected: 1,
+        };
+        assert_eq!(a.lookups(), 10);
+        assert!((a.mem_hit_ratio() - 0.6).abs() < 1e-12);
+        assert!((a.disk_hit_ratio() - 0.3).abs() < 1e-12);
+        assert!((a.hit_ratio() - 0.9).abs() < 1e-12);
+        assert_eq!(a.spill_offpath_ratio(), 1.0);
+        assert!((a.disk_share() - 2.0 / 6.0).abs() < 1e-12);
+        assert_eq!(a.total_bytes(), 600);
+        // Unbounded mem capacity saturates instead of wrapping.
+        assert_eq!(a.total_capacity(), u64::MAX);
+        let b = TierSnapshot {
+            spilled_inline: 2,
+            spilled_offpath: 2,
+            spill_queue_peak: 3,
+            mem_capacity: 50,
+            ..TierSnapshot::default()
+        };
+        assert!((b.spill_offpath_ratio() - 0.5).abs() < 1e-12);
+        let m = a.merge(&b);
+        assert_eq!(m.mem_hits, 6);
+        assert_eq!(m.spilled_offpath, 4);
+        assert_eq!(m.spilled_inline, 2);
+        assert_eq!(m.spill_queue_peak, 5, "peaks merge as max");
+        assert_eq!(m.mem_capacity, u64::MAX, "capacity merge saturates");
+        // Defaults are safe on empty stacks.
+        let z = TierSnapshot::default();
+        assert_eq!(z.disk_hit_ratio(), 0.0);
+        assert_eq!(z.spill_offpath_ratio(), 1.0);
+        assert_eq!(z.disk_share(), 0.0);
     }
 
     #[test]

@@ -92,6 +92,14 @@ pub struct SimConfig {
     pub scheme: Scheme,
     /// Cached fraction α (Loc/DistCache; 1.0 = fully cached).
     pub alpha: f64,
+    /// Fraction of the dataset held on the SSD tier of the hierarchical
+    /// cache stack (≤ α; 0 = all-DRAM). Mirrors the live `CacheStack`
+    /// mem→disk spill: that share of every step's cache-served samples is
+    /// read from the owners' local SSDs before it can ship or assemble.
+    pub alpha_disk: f64,
+    /// Per-node SSD read bandwidth serving disk-tier hits, bytes/s
+    /// (mirrors the live spill segment; Eq. 7's hierarchical read term).
+    pub disk_read_bps: f64,
     /// Algorithm 1 load balancing (ablation: §V-C stragglers). When off,
     /// Loc learners train with their raw claims; the step's compute time
     /// is gated by the most-loaded node.
@@ -302,6 +310,25 @@ pub fn simulate_epoch(cfg: &SimConfig) -> SimResult {
     let mut result = SimResult { steps, ..Default::default() };
 
     let t_plan = cfg.plan_s_per_step.max(0.0);
+    // Hierarchical cache stack (DESIGN.md §10): the disk-tier share of a
+    // step's cache-served samples costs a per-node, parallel SSD read.
+    // Constant per step in the fluid model: Reg serves nothing from cache.
+    let disk_share = if cfg.alpha > 0.0 {
+        (cfg.alpha_disk / cfg.alpha).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    let t_disk = if cfg.scheme != Scheme::Reg
+        && disk_share > 0.0
+        && cfg.disk_read_bps > 0.0
+    {
+        cfg.global_batch() as f64 * cfg.alpha * disk_share
+            / cfg.nodes as f64
+            * cfg.catalog.avg_bytes as f64
+            / cfg.disk_read_bps
+    } else {
+        0.0
+    };
     for s in 0..steps {
         let tr = step_traffic(cfg, &mut rng);
         // Pipelined planning (the planner architecture) joins the supply
@@ -321,7 +348,7 @@ pub fn simulate_epoch(cfg: &SimConfig) -> SimResult {
         // Per-node batch assembly (local fetch of the node's share).
         let t_local = tr.max_node_batch * cfg.catalog.avg_bytes as f64
             / cfg.local_fetch_bps;
-        let t_supply = t_storage + t_remote + t_pre + t_local
+        let t_supply = t_storage + t_remote + t_disk + t_pre + t_local
             + if cfg.plan_pipelined { t_plan } else { 0.0 };
 
         // Loader may start this step's supply once the previous supply is
@@ -600,6 +627,52 @@ mod tests {
             fast < slow,
             "remote supply must be egress-gated: fast={fast} slow={slow}"
         );
+    }
+
+    #[test]
+    fn disk_tier_supply_term_is_hierarchical() {
+        // The hierarchical cache stack in the DES: alpha_disk = 0 is
+        // bit-identical to the all-DRAM model; a slow SSD tier slows
+        // supply; a fast one approaches the DRAM baseline from above.
+        let base = presets::loading_only(
+            Catalog::imagenet_1k(),
+            32,
+            Scheme::Loc,
+            true,
+        );
+        let t_dram = simulate_epoch(&base).epoch_time_s;
+        let mut zero = base.clone();
+        zero.alpha_disk = 0.0;
+        assert_eq!(simulate_epoch(&zero).epoch_time_s, t_dram);
+
+        let mut slow = base.clone();
+        slow.alpha_disk = 0.8;
+        slow.disk_read_bps = 1.0e8;
+        let t_slow = simulate_epoch(&slow).epoch_time_s;
+        assert!(
+            t_slow > t_dram * 1.5,
+            "slow SSD tier must gate supply: {t_slow} vs {t_dram}"
+        );
+
+        let mut fast = slow.clone();
+        fast.disk_read_bps = 1.0e12;
+        let t_fast = simulate_epoch(&fast).epoch_time_s;
+        assert!(t_fast >= t_dram - 1e-9);
+        assert!(
+            (t_fast - t_dram) / t_dram < 0.02,
+            "fast SSD must approach the DRAM baseline: {t_fast} vs {t_dram}"
+        );
+        // Reg has no cache to tier: alpha_disk must be inert.
+        let mut reg = presets::loading_only(
+            Catalog::imagenet_1k(),
+            32,
+            Scheme::Reg,
+            true,
+        );
+        let t_reg = simulate_epoch(&reg).epoch_time_s;
+        reg.alpha_disk = 0.8;
+        reg.disk_read_bps = 1.0e8;
+        assert_eq!(simulate_epoch(&reg).epoch_time_s, t_reg);
     }
 
     #[test]

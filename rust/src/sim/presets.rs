@@ -29,6 +29,9 @@ pub const LOCAL_FETCH_BPS: f64 = 5.0e9;
 pub const V_NODE_SPS: f64 = 1440.0;
 pub const CORES_PER_NODE: usize = 44;
 pub const ALLREDUCE_S: f64 = 0.030; // ResNet50 grads over EDR, per step
+/// Per-node SSD read bandwidth of the hierarchical cache stack's spill
+/// tier (Lassen's node-local 1.6 TB NVMe, ~2.4 GB/s sequential reads).
+pub const DISK_READ_BPS: f64 = 2.4e9;
 
 /// Loading-only experiment (Figs. 8–11): no training, measure the epoch's
 /// collective loading cost. `multithreaded` toggles the paper's 4-thread
@@ -57,6 +60,8 @@ pub fn loading_only(
         prefetch: 8,
         scheme,
         alpha: 1.0,
+        alpha_disk: 0.0,
+        disk_read_bps: DISK_READ_BPS,
         balance_enabled: true,
         // Partition planning is pipelined (the planner architecture) and
         // its per-node cost is negligible at Lassen scale; sweeps override

@@ -36,6 +36,7 @@ mod ffi {
     }
 
     pub const PROT_READ: c_int = 1;
+    pub const MAP_SHARED: c_int = 1;
     pub const MAP_PRIVATE: c_int = 2;
 }
 
@@ -56,19 +57,36 @@ impl Mmap {
     /// caller can fall back to `pread`-based access. Gated to 64-bit unix:
     /// the hand-rolled FFI declares `off_t` as `i64`, which only matches
     /// the C ABI there (32-bit targets just take the `pread` path).
-    #[cfg(all(unix, target_pointer_width = "64"))]
     pub fn map(file: &std::fs::File) -> std::io::Result<Mmap> {
+        Self::map_flags(file, false)
+    }
+
+    /// As [`map`], but `MAP_SHARED`: reads through the mapping observe
+    /// later `pwrite`s to the file (unified page cache). Used by the cache
+    /// stack's spill segment, whose *published* slots are written exactly
+    /// once, strictly before their index entry appears — consumers only
+    /// ever read bytes that no longer change, which is what keeps the
+    /// `&[u8]` views sound. Immutable-file users should prefer [`map`].
+    ///
+    /// [`map`]: Mmap::map
+    pub fn map_shared(file: &std::fs::File) -> std::io::Result<Mmap> {
+        Self::map_flags(file, true)
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    fn map_flags(file: &std::fs::File, shared: bool) -> std::io::Result<Mmap> {
         use std::os::unix::io::AsRawFd;
         let len = file.metadata()?.len() as usize;
         if len == 0 {
             return Ok(Mmap { ptr: std::ptr::null_mut(), len: 0 });
         }
+        let flags = if shared { ffi::MAP_SHARED } else { ffi::MAP_PRIVATE };
         let ptr = unsafe {
             ffi::mmap(
                 std::ptr::null_mut(),
                 len,
                 ffi::PROT_READ,
-                ffi::MAP_PRIVATE,
+                flags,
                 file.as_raw_fd(),
                 0,
             )
@@ -80,7 +98,10 @@ impl Mmap {
     }
 
     #[cfg(not(all(unix, target_pointer_width = "64")))]
-    pub fn map(_file: &std::fs::File) -> std::io::Result<Mmap> {
+    fn map_flags(
+        _file: &std::fs::File,
+        _shared: bool,
+    ) -> std::io::Result<Mmap> {
         Err(std::io::Error::new(
             std::io::ErrorKind::Unsupported,
             "mmap is only supported on 64-bit unix targets",
@@ -286,6 +307,34 @@ mod tests {
         let sub = view.slice(5, 5);
         drop(view);
         assert_eq!(&sub[..], &payload[15..20]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn shared_mapping_observes_later_pwrites() {
+        // The spill-segment protocol: map the preallocated file first,
+        // pwrite a slot, then read it through the mapping (MAP_SHARED is
+        // coherent with write(2) via the unified page cache).
+        use std::os::unix::fs::FileExt;
+        let path = std::env::temp_dir()
+            .join(format!("dlio-mmap-shared-{}.bin", std::process::id()));
+        let f = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .unwrap();
+        f.set_len(64).unwrap();
+        let map = Arc::new(Mmap::map_shared(&f).unwrap());
+        f.write_all_at(&[7u8; 16], 16).unwrap();
+        let view = SampleBytes::from_map(Arc::clone(&map), 16, 16);
+        assert!(view.is_zero_copy());
+        assert_eq!(&view[..], &[7u8; 16]);
+        // A second slot published later is visible too.
+        f.write_all_at(&[9u8; 8], 40).unwrap();
+        let second = SampleBytes::from_map(map, 40, 8);
+        assert_eq!(&second[..], &[9u8; 8]);
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -3,7 +3,7 @@
 //! (loading rate grows with workers and with threads until the storage
 //! bound) and failure injection.
 
-use dlio::cache::{CacheDirectory, Policy, SampleCache};
+use dlio::cache::{CacheDirectory, CacheStack, Policy};
 use dlio::figures::{fig7, Fig7Config};
 use dlio::loader::{BatchRequest, FetchContext, Loader, LoaderConfig};
 use dlio::metrics::LoadCounters;
@@ -28,7 +28,9 @@ fn make_ctx(tag: &str, n: u64, p: usize, cache_on_load: bool) -> FetchContext {
         learner: 0,
         storage: Arc::new(StorageSystem::open(&dir, None).unwrap()),
         caches: (0..p)
-            .map(|_| Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly)))
+            .map(|_| {
+                Arc::new(CacheStack::mem_only(u64::MAX, Policy::InsertOnly))
+            })
             .collect(),
         directory: Arc::new(CacheDirectory::new(n)),
         fabric: Arc::new(Fabric::new(FabricConfig {
@@ -90,7 +92,7 @@ fn prefetch_bounds_outstanding_requests() {
     let ctx = Arc::new(FetchContext {
         learner: 0,
         storage,
-        caches: vec![Arc::new(SampleCache::new(0, Policy::InsertOnly))],
+        caches: vec![Arc::new(CacheStack::mem_only(0, Policy::InsertOnly))],
         directory: Arc::new(CacheDirectory::new(512)),
         fabric: Arc::new(Fabric::new(FabricConfig {
             real_time: false,
@@ -147,7 +149,7 @@ fn throttled_storage_bounds_end_to_end_rate() {
     let ctx = Arc::new(FetchContext {
         learner: 0,
         storage,
-        caches: vec![Arc::new(SampleCache::new(0, Policy::InsertOnly))],
+        caches: vec![Arc::new(CacheStack::mem_only(0, Policy::InsertOnly))],
         directory: Arc::new(CacheDirectory::new(256)),
         fabric: Arc::new(Fabric::new(FabricConfig {
             real_time: false,
@@ -199,7 +201,7 @@ fn loader_counts_every_sample_exactly_once() {
     let ctx = Arc::new(FetchContext {
         learner: 0,
         storage: Arc::clone(&storage),
-        caches: vec![Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly))],
+        caches: vec![Arc::new(CacheStack::mem_only(u64::MAX, Policy::InsertOnly))],
         directory: Arc::new(CacheDirectory::new(512)),
         fabric: Arc::new(Fabric::new(FabricConfig {
             real_time: false,
@@ -333,10 +335,10 @@ fn fetch_fallback_on_evicted_owner_works_under_loader() {
     // multi-threaded loader, not just the unit fetch path.
     let dir = dataset("evict", 256);
     let storage = Arc::new(StorageSystem::open(&dir, None).unwrap());
-    let caches: Vec<Arc<SampleCache>> = vec![
-        Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly)),
+    let caches: Vec<Arc<CacheStack>> = vec![
+        Arc::new(CacheStack::mem_only(u64::MAX, Policy::InsertOnly)),
         // Tiny Fifo cache: holds exactly 2 samples.
-        Arc::new(SampleCache::new(2 * 3072, Policy::Fifo)),
+        Arc::new(CacheStack::mem_only(2 * 3072, Policy::Fifo)),
     ];
     let directory = Arc::new(CacheDirectory::new(256));
     // Register 8 samples to learner 1, then overflow its cache so only the
@@ -449,8 +451,8 @@ fn threaded_loader_still_coalesces_messages_per_owner() {
     // two-phase fetch runs once for the whole batch).
     let dir = dataset("ldcoal", 256);
     let storage = Arc::new(StorageSystem::open(&dir, None).unwrap());
-    let caches: Vec<Arc<SampleCache>> = (0..3)
-        .map(|_| Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly)))
+    let caches: Vec<Arc<CacheStack>> = (0..3)
+        .map(|_| Arc::new(CacheStack::mem_only(u64::MAX, Policy::InsertOnly)))
         .collect();
     let directory = Arc::new(CacheDirectory::new(256));
     for id in 0..16u32 {

@@ -7,7 +7,7 @@
 //! point of the wave: a batch touching k owners should pay ≈ the max of
 //! the k transfer costs, not the sum.
 
-use dlio::cache::{CacheDirectory, Policy, SampleCache};
+use dlio::cache::{CacheDirectory, CacheStack, Policy, SpillConfig};
 use dlio::loader::FetchContext;
 use dlio::metrics::LoadCounters;
 use dlio::net::{Fabric, FabricConfig};
@@ -37,7 +37,9 @@ fn ctx(
         learner: 0,
         storage: Arc::new(StorageSystem::open(dir, None).unwrap()),
         caches: (0..p)
-            .map(|_| Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly)))
+            .map(|_| {
+                Arc::new(CacheStack::mem_only(u64::MAX, Policy::InsertOnly))
+            })
             .collect(),
         directory: Arc::new(CacheDirectory::new(100)),
         fabric,
@@ -151,10 +153,10 @@ fn stale_owner_eviction_between_begin_and_owner_read_repairs() {
     let fabric = virtual_fabric();
     let storage = Arc::new(StorageSystem::open(&dir, None).unwrap());
     // Owner 1 runs a 2-sample Fifo cache so we can force an eviction.
-    let caches: Vec<Arc<SampleCache>> = vec![
-        Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly)),
-        Arc::new(SampleCache::new((2 * RB) as u64, Policy::Fifo)),
-        Arc::new(SampleCache::new(u64::MAX, Policy::InsertOnly)),
+    let caches: Vec<Arc<CacheStack>> = vec![
+        Arc::new(CacheStack::mem_only(u64::MAX, Policy::InsertOnly)),
+        Arc::new(CacheStack::mem_only((2 * RB) as u64, Policy::Fifo)),
+        Arc::new(CacheStack::mem_only(u64::MAX, Policy::InsertOnly)),
     ];
     let fc = Arc::new(FetchContext {
         learner: 0,
@@ -232,6 +234,114 @@ fn stale_owner_without_population_clears_the_claim() {
     assert_eq!(snap.storage_loads, 1);
     assert_eq!(snap.remote_hits, 0);
     assert_eq!(fc.fabric.p2p_messages(), 0, "no phantom transfer");
+}
+
+/// Build a ctx whose learner-0 stack is disk-only (mem capacity 0, every
+/// resident spilled inline) with `latency` per disk hit, 8 disk residents,
+/// 4 remote ids on owner 1 and 4 storage misses.
+fn disk_scenario(
+    tag: &str,
+    latency_ms: u64,
+    fabric: Arc<Fabric>,
+) -> (Arc<FetchContext>, Vec<u32>) {
+    let dir = data_dir(tag);
+    let storage = Arc::new(StorageSystem::open(&dir, None).unwrap());
+    let stack0 = CacheStack::tiered(
+        0,
+        Policy::InsertOnly,
+        &SpillConfig {
+            path: std::env::temp_dir().join(format!(
+                "dlio-overlap-{tag}-{}.spill",
+                std::process::id()
+            )),
+            capacity_bytes: (64 * RB) as u64,
+            read_latency: std::time::Duration::from_millis(latency_ms),
+        },
+    )
+    .unwrap();
+    let caches = vec![
+        Arc::new(stack0),
+        Arc::new(CacheStack::mem_only(u64::MAX, Policy::InsertOnly)),
+    ];
+    let mut ids = Vec::new();
+    for id in 0..8u32 {
+        let s = Arc::new(storage.read_sample(id).unwrap());
+        assert!(caches[0].insert(s), "spill-tier population");
+        ids.push(id);
+    }
+    for id in 8..12u32 {
+        let s = Arc::new(storage.read_sample(id).unwrap());
+        caches[1].insert(s);
+        ids.push(id);
+    }
+    for id in 12..16u32 {
+        ids.push(id); // storage
+    }
+    let fc = Arc::new(FetchContext {
+        learner: 0,
+        storage,
+        caches,
+        directory: Arc::new(CacheDirectory::new(100)),
+        fabric,
+        cache_on_load: false,
+        decode_s_per_kib: 0.0,
+        counters: Arc::new(LoadCounters::new()),
+    });
+    for id in 8..12u32 {
+        fc.directory.set_owner(id, 1);
+    }
+    (fc, ids)
+}
+
+#[test]
+fn disk_tier_wave_is_deterministic_and_zero_copy() {
+    // Same workload, 1 vs 8 executor threads: contents, accounting (incl.
+    // the new disk_hits split) and the zero-copy meter must not depend on
+    // interleaving.
+    let run = |tag: &str, threads: usize| {
+        let (fc, ids) = disk_scenario(tag, 0, virtual_fabric());
+        let ex = Executor::new(threads);
+        let got =
+            FetchContext::fetch_batch_overlapped(&fc, &ids, &ex, 4).unwrap();
+        let bytes: Vec<Vec<u8>> = got.iter().map(|s| s.bytes.to_vec()).collect();
+        let ts = fc.caches[0].tier_snapshot();
+        assert_eq!(
+            ts.disk_hit_copied_bytes, 0,
+            "disk hits must stay mmap-backed in the wave"
+        );
+        (bytes, fc.counters.snapshot().deterministic())
+    };
+    let (b1, s1) = run("dwave1", 1);
+    let (b8, s8) = run("dwave8", 8);
+    assert_eq!(b1, b8);
+    assert_eq!(s1, s8);
+    assert_eq!(s1.disk_hits, 8);
+    assert_eq!(s1.remote_hits, 4);
+    assert_eq!(s1.storage_loads, 4);
+    assert_eq!(s1.local_hits, 0);
+    assert_eq!(s1.total_samples(), 16);
+}
+
+#[test]
+fn disk_reads_overlap_inside_the_wave() {
+    // 8 disk hits × 5 ms device latency: resolved serially they cost
+    // ≥ 40 ms; chunked into the wave (parallelism 4, 8 pool threads) the
+    // chunks run concurrently, so the batch should land well under 60%.
+    let (fc_serial, ids) = disk_scenario("dser", 5, virtual_fabric());
+    let t0 = Instant::now();
+    fc_serial.fetch_batch(&ids).unwrap();
+    let serial = t0.elapsed().as_secs_f64();
+
+    let (fc_over, ids) = disk_scenario("dover", 5, virtual_fabric());
+    let ex = Executor::new(8);
+    let t1 = Instant::now();
+    FetchContext::fetch_batch_overlapped(&fc_over, &ids, &ex, 4).unwrap();
+    let overlapped = t1.elapsed().as_secs_f64();
+    assert!(
+        overlapped < serial * 0.6,
+        "disk reads must parallelize in the wave: \
+         serial={serial:.4}s overlapped={overlapped:.4}s"
+    );
 }
 
 #[test]

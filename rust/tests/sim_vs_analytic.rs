@@ -127,6 +127,36 @@ fn distcache_sits_between_reg_and_loc() {
 }
 
 #[test]
+fn hierarchical_disk_term_agrees_between_sim_and_eq7() {
+    // The DES and the extended Eq. 7/8 must charge the SAME cost for the
+    // disk tier: push half the cached set onto a deliberately slow SSD so
+    // the disk term dominates, and compare the epoch-time increase against
+    // the closed form D'·α_disk·b̄/(p·R_disk) over the covered volume.
+    let mut m = lassen_imagenet();
+    for nodes in [16usize, 64] {
+        let base =
+            presets::loading_only(Catalog::imagenet_1k(), nodes, Scheme::Loc, true);
+        let mut tiered = base.clone();
+        tiered.alpha_disk = 0.5;
+        tiered.disk_read_bps = 2.0e8; // slow SSD: the term dominates noise
+        let t_base = simulate_epoch(&base).epoch_time_s;
+        let t_tiered = simulate_epoch(&tiered).epoch_time_s;
+        // Closed form over the epoch's covered samples (partial batch
+        // dropped, exactly as the sim counts them).
+        m.d_samples = (base.steps() * base.global_batch()) as f64;
+        m.alpha_disk = 0.5;
+        m.r_disk = 2.0e8;
+        let analytic_extra = m.disk_read_time(nodes);
+        assert!(
+            rel(t_tiered - t_base, analytic_extra) < 0.05,
+            "p={nodes}: sim disk term {:.2}s vs Eq.7 extension {:.2}s",
+            t_tiered - t_base,
+            analytic_extra
+        );
+    }
+}
+
+#[test]
 fn partial_alpha_interpolates() {
     // Eq. (7)/(8) at α = 0.5: storage still serves half the volume, so the
     // epoch should sit between the α=1 and Reg extremes.

@@ -47,6 +47,7 @@ fn run(sampler: SamplerKind, data_dir: &PathBuf, epochs: u64) -> TrainingReport 
         decode_s_per_kib: 0.0,
         eval_samples: 0,
         checkpoint_path: None,
+        ..Default::default()
     };
     Trainer::new(engine, storage, fabric, cfg).unwrap().run().unwrap()
 }
