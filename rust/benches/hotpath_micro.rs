@@ -8,6 +8,7 @@
 use dlio::balance;
 use dlio::bench::{black_box, Bench};
 use dlio::cache::{CacheDirectory, CacheStack, Policy, SpillConfig};
+use dlio::fault::{FaultPlan, NodeFault};
 use dlio::loader::{
     BatchRequest, FetchContext, Loader, LoaderConfig, LoaderRuntime,
 };
@@ -372,6 +373,105 @@ fn main() {
         "fetch/remote_exec_tasks_inflight_peak",
         overlap_exec.stats().tasks_inflight_peak as f64,
         "tasks",
+    );
+
+    // --- Straggler resilience (fault injection, DESIGN.md §11) ---------------
+    // CI guard #1: with the fault layer merged but nothing injected, the
+    // remote fetch path stays bit-deterministic — two identical epochs
+    // produce identical load accounting (timings zeroed by
+    // `deterministic()`; counts, bytes, and message tallies must match
+    // exactly).
+    let det_run = || {
+        let counters = Arc::new(LoadCounters::new());
+        let ctx = Arc::new(FetchContext {
+            learner: 0,
+            storage: Arc::clone(&storage),
+            caches: octx.caches.clone(),
+            directory: Arc::clone(&octx.directory),
+            fabric: Arc::clone(&overlap_fabric),
+            cache_on_load: false,
+            decode_s_per_kib: 0.0,
+            counters: Arc::clone(&counters),
+        });
+        FetchContext::fetch_batch_overlapped(&ctx, &ids, &overlap_exec, 4)
+            .unwrap();
+        counters.snapshot().deterministic()
+    };
+    let clean_deterministic = det_run() == det_run();
+    b.record(
+        "fault/clean_determinism",
+        if clean_deterministic { 1.0 } else { 0.0 },
+        "bool",
+    );
+    assert!(
+        clean_deterministic,
+        "zero-injection load accounting diverged between identical epochs"
+    );
+
+    // CI guard #2: one owner 2x slow on the wire (link_bw_scale 0.5).
+    // Unmitigated, the slow owner's transfer dominates the overlapped
+    // wave; the rebalancing response — Algorithm 1's weighted targets
+    // shedding claims off the straggler, the bench-scale analogue of the
+    // monitor's directory sweep + plan amendment — must bring the epoch
+    // back under 1.5x the clean time.
+    let clean_s = m_remote_over.mean_s;
+    overlap_fabric.set_fault_plan(Some(Arc::new(FaultPlan::single(
+        0xBAD,
+        5,
+        1,
+        NodeFault { link_bw_scale: 0.5, ..NodeFault::default() },
+    ))));
+    let m_straggler = b.run("fetch/remote_overlapped_straggler", || {
+        black_box(
+            FetchContext::fetch_batch_overlapped(&octx, &ids, &overlap_exec, 4)
+                .unwrap(),
+        );
+    });
+    b.record(
+        "fault/unmitigated_degradation",
+        m_straggler.mean_s / clean_s,
+        "x",
+    );
+    // Weighted re-apportionment: owner slots 1..=4 held 64 claims each;
+    // the straggler (owner 1) serves at half weight, so it sheds 27
+    // samples to the healthy owners (re-owned in their caches and the
+    // directory — what `PartitionPlanner::amend_weights` does to
+    // published plans in the live trainer).
+    let owner_loads = [64u64, 64, 64, 64];
+    let tgt = balance::weighted_targets(&owner_loads, &[0.5, 1.0, 1.0, 1.0]);
+    let mut shed: Vec<u32> = ids
+        .iter()
+        .copied()
+        .filter(|&id| octx.directory.owner(id) == Some(1))
+        .collect();
+    shed.truncate((owner_loads[0] - tgt[0]) as usize);
+    let mut next_shed = 0usize;
+    for (slot, &t) in tgt.iter().enumerate().skip(1) {
+        let owner = slot + 1;
+        for _ in owner_loads[slot]..t {
+            let id = shed[next_shed];
+            next_shed += 1;
+            let s = Arc::new(storage.read_sample(id).unwrap());
+            octx.caches[owner].insert(s);
+            octx.directory.set_owner(id, owner);
+        }
+    }
+    assert_eq!(next_shed, shed.len(), "every shed sample must be re-owned");
+    let m_mitigated = b.run("fetch/remote_overlapped_rebalanced", || {
+        black_box(
+            FetchContext::fetch_batch_overlapped(&octx, &ids, &overlap_exec, 4)
+                .unwrap(),
+        );
+    });
+    overlap_fabric.set_fault_plan(None);
+    let degradation = m_mitigated.mean_s / clean_s;
+    b.record("fault/epoch_degradation", degradation, "x");
+    // In-binary regression guard (CI reruns it): the rebalanced epoch
+    // must stay well under the 2x the raw injection would cost.
+    assert!(
+        degradation < 1.5,
+        "straggler mitigation failed: rebalanced epoch is {degradation:.2}x \
+         the clean epoch (must stay < 1.5x)"
     );
 
     // --- Cache-hot steady-state loader -------------------------------------

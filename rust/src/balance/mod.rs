@@ -39,6 +39,52 @@ pub fn targets(loads: &[u64]) -> Vec<u64> {
     (0..p).map(|j| base + u64::from(j < rem)).collect()
 }
 
+/// Capacity-weighted target loads (DESIGN.md §11): apportion the total in
+/// proportion to `weights`, so a degraded learner (small weight) takes a
+/// small share and a dead one (weight ≤ 0) takes none. Largest-remainder
+/// apportionment: totals are preserved exactly and ties break on learner
+/// id, so every replica computes identical targets without communication.
+/// Falls back to the uniform [`targets`] when no weight is positive.
+pub fn weighted_targets(loads: &[u64], weights: &[f64]) -> Vec<u64> {
+    let p = loads.len();
+    assert!(p > 0);
+    assert_eq!(p, weights.len(), "one weight per learner");
+    let total: u64 = loads.iter().sum();
+    let wsum: f64 = weights.iter().filter(|w| **w > 0.0).sum();
+    if wsum <= 0.0 {
+        return targets(loads);
+    }
+    let mut out = vec![0u64; p];
+    let mut rem: Vec<(f64, usize)> = Vec::with_capacity(p);
+    let mut assigned = 0u64;
+    for (j, &w) in weights.iter().enumerate() {
+        let share = if w > 0.0 {
+            total as f64 * (w / wsum)
+        } else {
+            0.0
+        };
+        let floor = share.floor();
+        out[j] = floor as u64;
+        assigned += out[j];
+        rem.push((share - floor, j));
+    }
+    // Hand leftover units to the largest remainders, lowest learner id
+    // first on ties — replica-deterministic by construction.
+    rem.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut left = total - assigned;
+    let mut k = 0usize;
+    while left > 0 {
+        let (_, j) = rem[k % p];
+        // A non-positive weight never takes a unit (dead node).
+        if weights[j] > 0.0 {
+            out[j] += 1;
+            left -= 1;
+        }
+        k += 1;
+    }
+    out
+}
+
 /// Algorithm 1: greedy 2-approximation transfer schedule taking each
 /// learner from `loads[j]` to `targets(loads)[j]`.
 pub fn balance(loads: &[u64]) -> Vec<Transfer> {
@@ -50,13 +96,38 @@ pub fn balance(loads: &[u64]) -> Vec<Transfer> {
 /// As [`balance`], appending into a caller-owned buffer (cleared first) so
 /// a per-step planner can reuse its schedule allocation across steps.
 pub fn balance_into(loads: &[u64], schedule: &mut Vec<Transfer>) {
-    schedule.clear();
     let tgt = targets(loads);
+    balance_to_targets_into(loads, &tgt, schedule);
+}
+
+/// Algorithm 1 against caller-supplied targets (e.g.
+/// [`weighted_targets`]): the same greedy max-surplus/max-deficit
+/// matching, taking each learner from `loads[j]` to `tgt[j]`.
+pub fn balance_to_targets(loads: &[u64], tgt: &[u64]) -> Vec<Transfer> {
+    let mut schedule = Vec::new();
+    balance_to_targets_into(loads, tgt, &mut schedule);
+    schedule
+}
+
+/// As [`balance_to_targets`], appending into a caller-owned buffer
+/// (cleared first). `tgt` must conserve the total load.
+pub fn balance_to_targets_into(
+    loads: &[u64],
+    tgt: &[u64],
+    schedule: &mut Vec<Transfer>,
+) {
+    schedule.clear();
+    assert_eq!(loads.len(), tgt.len(), "one target per learner");
+    debug_assert_eq!(
+        loads.iter().sum::<u64>(),
+        tgt.iter().sum::<u64>(),
+        "targets must conserve the total load"
+    );
     // Max-heaps keyed on imbalance; ties broken on learner id for
     // determinism across replicas.
     let mut surplus: BinaryHeap<(u64, std::cmp::Reverse<usize>)> = BinaryHeap::new();
     let mut deficit: BinaryHeap<(u64, std::cmp::Reverse<usize>)> = BinaryHeap::new();
-    for (j, (&l, &t)) in loads.iter().zip(&tgt).enumerate() {
+    for (j, (&l, &t)) in loads.iter().zip(tgt).enumerate() {
         if l > t {
             surplus.push((l - t, std::cmp::Reverse(j)));
         } else if t > l {
@@ -148,6 +219,55 @@ mod tests {
         let loads = [10u64, 0, 0];
         let schedule = balance(&loads);
         assert_eq!(apply(&loads, &schedule), vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn weighted_targets_apportion_and_conserve() {
+        let loads = [4u64, 4, 4, 4];
+        // Uniform weights reproduce the uniform split.
+        assert_eq!(weighted_targets(&loads, &[1.0; 4]), targets(&loads));
+        // A half-speed learner takes roughly half a healthy share.
+        let w = [1.0, 0.5, 1.0, 1.0];
+        let t = weighted_targets(&loads, &w);
+        assert_eq!(t.iter().sum::<u64>(), 16, "total conserved");
+        assert_eq!(t, vec![5, 2, 5, 4]);
+        // A dead learner (weight 0) takes nothing.
+        let t = weighted_targets(&loads, &[1.0, 0.0, 1.0, 1.0]);
+        assert_eq!(t, vec![6, 0, 5, 5]);
+        // No positive weight -> uniform fallback.
+        assert_eq!(weighted_targets(&loads, &[0.0; 4]), targets(&loads));
+    }
+
+    #[test]
+    fn balance_to_targets_hits_weighted_targets() {
+        let loads = [6u64, 6, 6, 6];
+        let tgt = weighted_targets(&loads, &[1.0, 0.25, 1.0, 1.0]);
+        let schedule = balance_to_targets(&loads, &tgt);
+        assert_eq!(apply(&loads, &schedule), tgt);
+        assert!(schedule.len() <= 3, "<= p - 1 transfers");
+    }
+
+    #[test]
+    fn prop_weighted_targets_conserve_and_balance() {
+        prop::check("weighted targets conserve", 200, |rng| {
+            let loads = prop::vec_of(rng, 1, 32, |r| r.next_below(100));
+            let weights: Vec<f64> = (0..loads.len())
+                .map(|_| rng.next_below(8) as f64 / 4.0)
+                .collect();
+            let tgt = weighted_targets(&loads, &weights);
+            assert_eq!(
+                tgt.iter().sum::<u64>(),
+                loads.iter().sum::<u64>(),
+                "conservation"
+            );
+            for (j, &w) in weights.iter().enumerate() {
+                if w <= 0.0 && weights.iter().any(|&x| x > 0.0) {
+                    assert_eq!(tgt[j], 0, "dead learner takes a share");
+                }
+            }
+            let schedule = balance_to_targets(&loads, &tgt);
+            assert_eq!(apply(&loads, &schedule), tgt);
+        });
     }
 
     #[test]

@@ -161,6 +161,25 @@ impl CacheDirectory {
         }
     }
 
+    /// Evict every claim naming `owner`, in either tier — the dead-owner
+    /// repair (DESIGN.md §11): once a fault plan declares an owner dead,
+    /// its claims only route fetches into doomed transfers, so the first
+    /// learner to notice sweeps them out and subsequent plans re-route.
+    /// Each entry is cleared with the same CAS as [`clear_owner_if`], so
+    /// a concurrent re-population by a *live* learner wins and is kept.
+    /// Returns how many entries were cleared.
+    ///
+    /// [`clear_owner_if`]: CacheDirectory::clear_owner_if
+    pub fn evict_owner(&self, owner: usize) -> u64 {
+        let mut cleared = 0u64;
+        for s in 0..self.owner.len() {
+            if self.clear_owner_if(s as u32, owner) {
+                cleared += 1;
+            }
+        }
+        cleared
+    }
+
     /// Number of samples cached somewhere.
     pub fn cached_samples(&self) -> u64 {
         self.cached.load(Ordering::Relaxed)
@@ -355,6 +374,76 @@ mod tests {
         assert!(dir.clear_owner_if(0, 2), "disk-tier entry must clear");
         assert_eq!(dir.owner(0), None);
         assert_eq!(dir.cached_samples(), 0);
+    }
+
+    #[test]
+    fn evict_owner_clears_only_that_owners_claims() {
+        let dir = CacheDirectory::striped(100, 4);
+        // A disk-tier claim is swept just the same.
+        dir.set_owner_tier(1, 1, Tier::Disk);
+        assert_eq!(dir.evict_owner(1), 25);
+        assert_eq!(dir.cached_samples(), 75);
+        let counts = dir.counts(4);
+        assert_eq!(counts[1], 0);
+        assert_eq!(counts[0] + counts[2] + counts[3], 75);
+        assert_eq!(dir.tier_counts(), (75, 0));
+        // Idempotent: a second sweep finds nothing.
+        assert_eq!(dir.evict_owner(1), 0);
+    }
+
+    #[test]
+    fn concurrent_eviction_and_reclaim_leaves_no_stale_claims() {
+        use std::sync::Arc;
+        // A dead owner's sweep racing live learners re-claiming half of
+        // its ids: no surviving entry names the dead owner, the other
+        // half ends cleared, and cached/tier counters agree with a full
+        // rescan (the CAS protocol never double-counts).
+        let n = 4096u32;
+        for _ in 0..4 {
+            let dir = Arc::new(CacheDirectory::striped(n as u64, 4));
+            let mut handles = Vec::new();
+            {
+                let dir = Arc::clone(&dir);
+                handles.push(std::thread::spawn(move || dir.evict_owner(0)));
+            }
+            // Learners 1-3 re-claim the dead owner's ids with s % 8 == 0
+            // (a third each, mixed tiers); ids with s % 8 == 4 stay his.
+            for t in 1..4usize {
+                let dir = Arc::clone(&dir);
+                handles.push(std::thread::spawn(move || {
+                    let mut claimed = 0u64;
+                    for s in (0..n).step_by(8) {
+                        if (s / 8) as usize % 3 + 1 != t {
+                            continue;
+                        }
+                        let tier =
+                            if s % 16 == 0 { Tier::Mem } else { Tier::Disk };
+                        dir.set_owner_tier(s, t, tier);
+                        claimed += 1;
+                    }
+                    claimed
+                }));
+            }
+            let cleared = handles.remove(0).join().unwrap();
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert!((512..=1024).contains(&cleared), "cleared {cleared}");
+            let (mut mem, mut disk, mut cached) = (0u64, 0u64, 0u64);
+            for s in 0..n {
+                if let Some((o, tier)) = dir.owner_tier(s) {
+                    assert_ne!(o, 0, "stale claim for dead owner at {s}");
+                    cached += 1;
+                    match tier {
+                        Tier::Mem => mem += 1,
+                        Tier::Disk => disk += 1,
+                    }
+                }
+            }
+            assert_eq!(cached, (n - n / 8) as u64);
+            assert_eq!(dir.cached_samples(), cached);
+            assert_eq!(dir.tier_counts(), (mem, disk));
+        }
     }
 
     #[test]

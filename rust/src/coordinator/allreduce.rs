@@ -8,10 +8,14 @@
 //! all learners.
 //!
 //! The time a learner spends blocked here is the paper's synchronization /
-//! straggler time.
+//! straggler time — recorded per learner in [`GradSync::blocked_s`] and
+//! surfaced as the `barrier_s` component of
+//! [`crate::metrics::StallSnapshot`] (DESIGN.md §11).
 
 use crate::net::Fabric;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 struct State {
     generation: u64,
@@ -26,6 +30,9 @@ pub struct GradSync {
     fabric: Arc<Fabric>,
     state: Mutex<State>,
     cv: Condvar,
+    /// Per-learner time spent blocked at the rendezvous waiting for the
+    /// stragglers of its step.
+    blocked_ns: Vec<AtomicU64>,
 }
 
 impl GradSync {
@@ -40,11 +47,21 @@ impl GradSync {
                 result: None,
             }),
             cv: Condvar::new(),
+            blocked_ns: (0..p).map(|_| AtomicU64::new(0)).collect(),
         }
     }
 
     pub fn p(&self) -> usize {
         self.p
+    }
+
+    /// Total time learner `j` has spent blocked at the rendezvous
+    /// waiting for slower learners, in seconds — the paper's straggler
+    /// time. The last arrival of a step records (essentially) nothing;
+    /// the collective's own cost is charged separately and is not
+    /// blocked time.
+    pub fn blocked_s(&self, j: usize) -> f64 {
+        self.blocked_ns[j].load(Ordering::Relaxed) as f64 / 1e9
     }
 
     /// Deposit `grad` for `learner`; block until every learner of this
@@ -83,10 +100,14 @@ impl GradSync {
             return Arc::clone(st.result.as_ref().unwrap());
         }
 
-        // Wait for this generation to complete.
+        // Wait for this generation to complete; time blocked here is the
+        // learner's barrier-wait (straggler) stall.
+        let t0 = Instant::now();
         while st.generation == my_gen {
             st = self.cv.wait(st).unwrap();
         }
+        self.blocked_ns[learner]
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         Arc::clone(st.result.as_ref().expect("result published"))
     }
 }
@@ -146,6 +167,26 @@ mod tests {
             assert_eq!(*ra, *rb);
             assert_eq!(*ra, vec![base + 0.5, base + 2.5]);
         }
+    }
+
+    #[test]
+    fn meters_per_learner_blocked_time() {
+        let s = sync_of(2);
+        let a = Arc::clone(&s);
+        let h = std::thread::spawn(move || a.sync(0, vec![1.0]));
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        s.sync(1, vec![3.0]);
+        h.join().unwrap();
+        assert!(
+            s.blocked_s(0) > 0.02,
+            "early learner must record blocking: {}",
+            s.blocked_s(0)
+        );
+        assert!(
+            s.blocked_s(1) < 0.02,
+            "last arrival barely blocks: {}",
+            s.blocked_s(1)
+        );
     }
 
     #[test]

@@ -31,10 +31,11 @@ pub use allreduce::GradSync;
 pub use checkpoint::Checkpoint;
 
 use crate::cache::{CacheDirectory, CacheStack, Policy, SpillConfig};
+use crate::fault::{FaultPlan, NodeFault};
 use crate::loader::{BatchIds, BatchRequest, FetchContext, Loader, LoaderConfig};
 use crate::metrics::{
     EpochReport, FabricSnapshot, LoadCounters, LoadSnapshot, PlannerSnapshot,
-    TierSnapshot,
+    StallSnapshot, TierSnapshot,
 };
 use crate::net::Fabric;
 use crate::runtime::{Engine, HostTensor};
@@ -94,6 +95,28 @@ pub struct TrainerConfig {
     pub eval_samples: usize,
     /// If set, the final parameters are checkpointed here (atomic write).
     pub checkpoint_path: Option<std::path::PathBuf>,
+    /// Deterministic fault injection (DESIGN.md §11): when set, this
+    /// learner runs the whole job under the degradation below. `None`
+    /// leaves the fault layer uninstalled — the zero-injection hot path
+    /// stays bit-identical to a build without the fault module.
+    pub fault_node: Option<usize>,
+    /// Fabric bandwidth multiplier for the faulted node's links in
+    /// (0, 1]; 1.0 = healthy.
+    pub fault_link_scale: f64,
+    /// Storage read-rate multiplier for the faulted node in (0, 1];
+    /// 1.0 = healthy.
+    pub fault_disk_scale: f64,
+    /// Dead-owner mode: the faulted node refuses fabric transfers; the
+    /// fetch path evicts its claims and falls back to storage.
+    pub fault_dead: bool,
+    /// Seed for the fault plan's deterministic jitter/failure draws.
+    pub fault_seed: u64,
+    /// Straggler-mitigation monitor period, seconds; 0 disables the
+    /// monitor (the default). When enabled with a Loc sampler, a
+    /// background thread periodically sweeps degraded owners out of the
+    /// cache directory and amends already-published step plans so
+    /// in-window steps re-route off the straggler (DESIGN.md §11).
+    pub rebalance_interval_s: f64,
 }
 
 impl Default for TrainerConfig {
@@ -114,6 +137,12 @@ impl Default for TrainerConfig {
             decode_s_per_kib: 0.0,
             eval_samples: 0,
             checkpoint_path: None,
+            fault_node: None,
+            fault_link_scale: 1.0,
+            fault_disk_scale: 1.0,
+            fault_dead: false,
+            fault_seed: 0x5EED,
+            rebalance_interval_s: 0.0,
         }
     }
 }
@@ -148,6 +177,11 @@ pub struct TrainingReport {
     /// stack: mem/disk hit split, spill write-behind occupancy, and the
     /// disk-hit zero-copy meter (DESIGN.md §10).
     pub tiers: TierSnapshot,
+    /// Per-learner stall decomposition over the whole job — loader-wait
+    /// (fetch), pipeline decode+preprocess time (prep), and time blocked
+    /// at the gradient barrier behind slower peers. The straggler
+    /// diagnosis surface (DESIGN.md §11).
+    pub stalls: Vec<StallSnapshot>,
 }
 
 impl TrainingReport {
@@ -163,6 +197,13 @@ impl TrainingReport {
         self.param_checksums
             .windows(2)
             .all(|w| (w[0] - w[1]).abs() < 1e-3)
+    }
+
+    /// Job-wide stall totals (all learners merged).
+    pub fn stall_total(&self) -> StallSnapshot {
+        self.stalls
+            .iter()
+            .fold(StallSnapshot::default(), |a, s| a.merge(s))
     }
 }
 
@@ -261,6 +302,28 @@ impl Trainer {
         let train_n = n - eval_n;
         let shuffler = GlobalShuffler::new(cfg.seed, train_n);
 
+        // Install the job's fault plan (DESIGN.md §11). Fabric and
+        // storage consult the same plan object, so one value describes
+        // the whole scenario. No fault configured ⇒ nothing installed ⇒
+        // the substrates run their zero-injection fast paths.
+        let fault_plan = match cfg.fault_node {
+            Some(node) => {
+                ensure!(node < p, "fault node {node} out of range (p={p})");
+                let spec = NodeFault {
+                    dead: cfg.fault_dead,
+                    link_bw_scale: cfg.fault_link_scale,
+                    disk_rate_scale: cfg.fault_disk_scale,
+                    ..NodeFault::default()
+                };
+                Some(Arc::new(FaultPlan::single(cfg.fault_seed, p, node, spec)))
+            }
+            None => None,
+        };
+        if let Some(plan) = &fault_plan {
+            self.fabric.set_fault_plan(Some(Arc::clone(plan)));
+            self.storage.set_fault_plan(Some(Arc::clone(plan)));
+        }
+
         // Shared distributed state. Each learner holds ONE cache-stack
         // handle: the DRAM tier plus, when configured, an SSD spill tier
         // whose write-behind runs on a job-wide spill executor (so SSD
@@ -332,6 +395,54 @@ impl Trainer {
             cfg.epochs as usize
         ]));
         let step_losses: Arc<Mutex<Vec<f32>>> = Arc::new(Mutex::new(Vec::new()));
+        let stalls = Arc::new(Mutex::new(vec![StallSnapshot::default(); p]));
+
+        // Straggler-mitigation monitor (default off). The installed
+        // fault plan doubles as the monitor's service observation: a
+        // node whose service score is past the CI degradation threshold
+        // (1.5×) is swept out of the cache directory so it stops serving
+        // remote fetches, and every already-published-but-untaken step
+        // plan is amended to re-route around it — mid-epoch, off the
+        // training threads. Trainer amendments keep shares equal (the
+        // compiled grad program is fixed-batch); weighted shares are for
+        // loading-only harnesses (`balance::weighted_targets`).
+        let monitor_stop = Arc::new(AtomicBool::new(false));
+        let monitor_on = cfg.rebalance_interval_s > 0.0
+            && cfg.sampler == SamplerKind::Loc
+            && fault_plan.is_some();
+        let monitor = monitor_on.then(|| {
+            let planner = Arc::clone(&planner);
+            let directory = Arc::clone(&directory);
+            let stop = Arc::clone(&monitor_stop);
+            let plan = Arc::clone(fault_plan.as_ref().unwrap());
+            let interval = cfg.rebalance_interval_s;
+            std::thread::spawn(move || {
+                let slice = std::time::Duration::from_millis(2);
+                let mut waited = 0.0f64;
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(slice);
+                    waited += slice.as_secs_f64();
+                    if waited < interval {
+                        continue;
+                    }
+                    waited = 0.0;
+                    for node in 0..plan.len() {
+                        let f = plan.node(node);
+                        let score = f.link_bw_scale.min(f.disk_rate_scale);
+                        if !f.dead && score > 1.0 / 1.5 {
+                            continue;
+                        }
+                        // Idempotent sweep: re-claims made while the
+                        // node was still populating are cleared on the
+                        // next tick; amendment only runs when the sweep
+                        // actually re-routed something.
+                        if directory.evict_owner(node) > 0 {
+                            planner.amend_weights(&vec![1.0; plan.len()]);
+                        }
+                    }
+                }
+            })
+        });
 
         // Pre-compile the programs every learner needs (avoids p racing
         // compilations of the same HLO).
@@ -353,6 +464,7 @@ impl Trainer {
                     let barrier = Arc::clone(&barrier);
                     let accums = Arc::clone(&accums);
                     let step_losses = Arc::clone(&step_losses);
+                    let stalls = Arc::clone(&stalls);
                     let storage = Arc::clone(&self.storage);
                     let fabric = Arc::clone(&self.fabric);
                     let planner = Arc::clone(&planner);
@@ -373,6 +485,7 @@ impl Trainer {
                             barrier,
                             accums,
                             step_losses,
+                            stalls,
                             planner,
                             grad_prog,
                             pre_prog,
@@ -383,6 +496,17 @@ impl Trainer {
                 }
                 handles.into_iter().map(|h| h.join().unwrap()).collect()
             });
+
+        monitor_stop.store(true, Ordering::SeqCst);
+        if let Some(h) = monitor {
+            h.join().ok();
+        }
+        // The run owns its scenario: leave the substrates clean for the
+        // next job sharing this fabric/storage pair.
+        if fault_plan.is_some() {
+            self.fabric.set_fault_plan(None);
+            self.storage.set_fault_plan(None);
+        }
 
         let mut params0 = None;
         let mut checksums = Vec::with_capacity(p);
@@ -460,6 +584,7 @@ impl Trainer {
             planner: planner.snapshot(),
             fabric: self.fabric.snapshot(),
             tiers,
+            stalls: Arc::try_unwrap(stalls).ok().unwrap().into_inner().unwrap(),
         })
     }
 
@@ -513,6 +638,7 @@ struct LearnerEnv {
     barrier: Arc<Barrier>,
     accums: Arc<Mutex<Vec<EpochAccum>>>,
     step_losses: Arc<Mutex<Vec<f32>>>,
+    stalls: Arc<Mutex<Vec<StallSnapshot>>>,
     planner: Arc<PartitionPlanner>,
     grad_prog: Arc<crate::runtime::Program>,
     pre_prog: Arc<crate::runtime::Program>,
@@ -534,6 +660,7 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
         barrier,
         accums,
         step_losses,
+        stalls,
         planner,
         grad_prog,
         pre_prog,
@@ -543,6 +670,9 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
     let counters = Arc::new(LoadCounters::new());
     let record_bytes = storage.meta().record_bytes();
     let n_params = params.len();
+    // Job-total loader-wait for this learner: the "fetch" leg of the
+    // stall decomposition (DESIGN.md §11).
+    let mut fetch_stall_s = 0.0f64;
     // One persistent loader runtime for the whole job: the decode
     // executor threads and the batch buffer pool survive the per-epoch
     // loader respawns, so epochs after the first spawn zero threads and
@@ -682,6 +812,7 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
             let delta = counters.snapshot().delta(&load_before);
             let mut acc = accums.lock().unwrap();
             let a = &mut acc[epoch as usize];
+            fetch_stall_s += wait_s;
             a.wait_s += wait_s;
             a.train_s += train_s;
             a.sync_s += sync_s;
@@ -710,6 +841,18 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
             populate.store(false, Ordering::SeqCst);
         }
         barrier.wait();
+    }
+
+    // Publish this learner's stall decomposition: loader-wait (fetch),
+    // cumulative pipeline decode+preprocess (prep), and time blocked at
+    // the gradient barrier behind slower peers.
+    {
+        let snap = counters.snapshot();
+        stalls.lock().unwrap()[j] = StallSnapshot {
+            fetch_s: fetch_stall_s,
+            prep_s: snap.decode_s + snap.preprocess_s,
+            barrier_s: sync.blocked_s(j),
+        };
     }
 
     let checksum: f64 = params

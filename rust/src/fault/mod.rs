@@ -1,0 +1,245 @@
+//! Deterministic fault & heterogeneity injection (DESIGN.md §11).
+//!
+//! A [`FaultPlan`] describes per-node degradations — link bandwidth
+//! scaling, added transfer latency and jitter, dead owners whose
+//! transfers error, disk-rate scaling, and injectable storage read
+//! latency/failures — and is installed into the live substrates with
+//! [`crate::net::Fabric::set_fault_plan`] and
+//! [`crate::storage::StorageSystem::set_fault_plan`]. The plan is the
+//! single source of truth: the fetch path and the rebalancing monitor
+//! consult the same object the substrates degrade under, so a scenario
+//! is one value, not scattered knobs.
+//!
+//! Everything is deterministic and seedable: jitter amplitudes and
+//! failure cadences are counter-based hashes of `(seed, node, event
+//! index)`, so a node's k-th fault event is identical run to run. With
+//! no plan installed — or an all-healthy plan — every substrate is
+//! bit-identical to the unfaulted build; the zero-injection CI guard
+//! (`fault/clean_determinism`) pins that down.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Per-node fault specification. The default is a healthy node; every
+/// field's inert value injects nothing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeFault {
+    /// Dead owner: transfers touching this node error
+    /// ([`crate::net::Fabric::try_transfer_begin`]), and the fetch path
+    /// evicts its directory claims and falls back to storage.
+    pub dead: bool,
+    /// Link bandwidth multiplier in (0, 1]; 0.5 halves the node's
+    /// effective link rate (a transfer's wire occupancy is stretched by
+    /// the *worst* endpoint's scale).
+    pub link_bw_scale: f64,
+    /// Added propagation latency per transfer touching this node, s.
+    pub extra_latency_s: f64,
+    /// Deterministic jitter amplitude per transfer, seconds: each event
+    /// adds a uniform draw from `[0, jitter_s)`.
+    pub jitter_s: f64,
+    /// Disk/storage service-rate multiplier in (0, 1]; 0.5 makes the
+    /// node's storage reads take twice as long.
+    pub disk_rate_scale: f64,
+    /// Added latency per storage batch read issued by this node, s.
+    pub read_latency_s: f64,
+    /// Every k-th storage read from this node fails (0 = never).
+    pub read_fail_every: u64,
+}
+
+impl Default for NodeFault {
+    fn default() -> Self {
+        NodeFault {
+            dead: false,
+            link_bw_scale: 1.0,
+            extra_latency_s: 0.0,
+            jitter_s: 0.0,
+            disk_rate_scale: 1.0,
+            read_latency_s: 0.0,
+            read_fail_every: 0,
+        }
+    }
+}
+
+impl NodeFault {
+    /// A healthy node (all fields inert).
+    pub fn healthy() -> NodeFault {
+        NodeFault::default()
+    }
+
+    /// True iff this spec injects nothing.
+    pub fn is_inert(&self) -> bool {
+        !self.dead
+            && self.link_bw_scale >= 1.0
+            && self.extra_latency_s <= 0.0
+            && self.jitter_s <= 0.0
+            && self.disk_rate_scale >= 1.0
+            && self.read_latency_s <= 0.0
+            && self.read_fail_every == 0
+    }
+}
+
+/// A deterministic, seedable per-node fault schedule.
+pub struct FaultPlan {
+    seed: u64,
+    nodes: Vec<NodeFault>,
+    /// Per-node transfer-event counters driving the jitter stream.
+    xfer_events: Vec<AtomicU64>,
+    /// Per-node storage-read counters driving the failure cadence.
+    read_events: Vec<AtomicU64>,
+}
+
+/// splitmix64 finalizer: a full-avalanche hash, so consecutive event
+/// indices map to independent-looking draws.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, nodes: Vec<NodeFault>) -> FaultPlan {
+        let n = nodes.len();
+        FaultPlan {
+            seed,
+            nodes,
+            xfer_events: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            read_events: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// An all-healthy plan over `p` nodes (injects nothing).
+    pub fn healthy(p: usize) -> FaultPlan {
+        FaultPlan::new(0, vec![NodeFault::healthy(); p])
+    }
+
+    /// A plan over `p` nodes where only `node` carries `fault`.
+    pub fn single(
+        seed: u64,
+        p: usize,
+        node: usize,
+        fault: NodeFault,
+    ) -> FaultPlan {
+        assert!(node < p, "faulty node {node} out of range ({p} nodes)");
+        let mut nodes = vec![NodeFault::healthy(); p];
+        nodes[node] = fault;
+        FaultPlan::new(seed, nodes)
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Node `j`'s spec; out-of-range nodes are healthy (plans sized for
+    /// p learners tolerate auxiliary endpoint ids).
+    pub fn node(&self, j: usize) -> NodeFault {
+        self.nodes.get(j).copied().unwrap_or_default()
+    }
+
+    pub fn is_dead(&self, j: usize) -> bool {
+        self.node(j).dead
+    }
+
+    /// True iff the whole plan injects nothing.
+    pub fn is_inert(&self) -> bool {
+        self.nodes.iter().all(NodeFault::is_inert)
+    }
+
+    /// Next jitter draw for a transfer touching node `j`: uniform in
+    /// `[0, jitter_s)`, keyed by `(seed, j, event index)`. Free (and
+    /// counter-silent) for jitterless nodes, so the zero-injection path
+    /// stays bit-identical.
+    pub fn link_jitter_s(&self, j: usize) -> f64 {
+        let amp = self.node(j).jitter_s;
+        if amp <= 0.0 || j >= self.xfer_events.len() {
+            return 0.0;
+        }
+        let k = self.xfer_events[j].fetch_add(1, Ordering::Relaxed);
+        let h = mix(self.seed ^ mix((j as u64) << 32 | k));
+        (h >> 11) as f64 / (1u64 << 53) as f64 * amp
+    }
+
+    /// Whether node `j`'s next storage read fails (every k-th does when
+    /// `read_fail_every == k`). Counter-silent for healthy nodes.
+    pub fn next_read_fails(&self, j: usize) -> bool {
+        let every = self.node(j).read_fail_every;
+        if every == 0 || j >= self.read_events.len() {
+            return false;
+        }
+        let k = self.read_events[j].fetch_add(1, Ordering::Relaxed);
+        k % every == every - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_inert() {
+        assert!(NodeFault::healthy().is_inert());
+        let plan = FaultPlan::healthy(8);
+        assert!(plan.is_inert());
+        assert_eq!(plan.len(), 8);
+        for j in 0..8 {
+            assert!(!plan.is_dead(j));
+            assert_eq!(plan.link_jitter_s(j), 0.0);
+            assert!(!plan.next_read_fails(j));
+        }
+        // Out-of-range nodes are healthy, not a panic.
+        assert!(plan.node(100).is_inert());
+        assert!(!plan.is_dead(100));
+    }
+
+    #[test]
+    fn single_targets_one_node() {
+        let plan = FaultPlan::single(
+            7,
+            4,
+            2,
+            NodeFault { dead: true, ..NodeFault::healthy() },
+        );
+        assert!(plan.is_dead(2));
+        for j in [0usize, 1, 3] {
+            assert!(!plan.is_dead(j));
+        }
+        assert!(!plan.is_inert());
+    }
+
+    #[test]
+    fn jitter_stream_is_deterministic_and_bounded() {
+        let fault = NodeFault { jitter_s: 0.25, ..NodeFault::healthy() };
+        let a = FaultPlan::single(42, 3, 1, fault);
+        let b = FaultPlan::single(42, 3, 1, fault);
+        let draws: Vec<f64> =
+            (0..64).map(|_| a.link_jitter_s(1)).collect();
+        for (i, &d) in draws.iter().enumerate() {
+            assert!((0.0..0.25).contains(&d), "draw {i} = {d}");
+            assert_eq!(d, b.link_jitter_s(1), "draw {i} diverges");
+        }
+        // Not all equal: the stream actually varies.
+        assert!(draws.iter().any(|&d| (d - draws[0]).abs() > 1e-6));
+        // Other nodes stay silent.
+        assert_eq!(a.link_jitter_s(0), 0.0);
+        // Different seeds give different streams.
+        let c = FaultPlan::single(43, 3, 1, fault);
+        assert_ne!(c.link_jitter_s(1), draws[0]);
+    }
+
+    #[test]
+    fn read_failures_follow_the_cadence() {
+        let fault =
+            NodeFault { read_fail_every: 3, ..NodeFault::healthy() };
+        let plan = FaultPlan::single(0, 2, 0, fault);
+        let pattern: Vec<bool> =
+            (0..9).map(|_| plan.next_read_fails(0)).collect();
+        assert_eq!(
+            pattern,
+            [false, false, true, false, false, true, false, false, true]
+        );
+        assert!(!plan.next_read_fails(1));
+    }
+}

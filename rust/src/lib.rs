@@ -24,6 +24,7 @@ pub mod bench;
 pub mod cache;
 pub mod config;
 pub mod coordinator;
+pub mod fault;
 pub mod figures;
 pub mod loader;
 pub mod metrics;

@@ -51,6 +51,12 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
+/// Attempts at reserving an owner transfer before the group demotes to
+/// storage fallback. The fabric only refuses when an endpoint is dead
+/// (fault injection), so this bounds the race between the liveness probe
+/// and the reservation — it never spins on a healthy link.
+const OWNER_RETRIES: usize = 3;
+
 /// Everything a loader worker needs to materialize sample bytes.
 pub struct FetchContext {
     pub learner: usize,
@@ -140,9 +146,22 @@ impl DeferredBatch {
 
     /// Unwrap into request-order samples; panics if any slot is unfilled.
     pub fn finish(self) -> Vec<Arc<Sample>> {
+        self.try_finish().expect("every batch slot is filled")
+    }
+
+    /// Fallible [`DeferredBatch::finish`]: an unfilled slot propagates as
+    /// an `Err` instead of panicking, so a fault on the fetch hot path
+    /// (dead owner, injected read failure) surfaces as a step error the
+    /// trainer can report rather than a poisoned worker (DESIGN.md §11).
+    pub fn try_finish(self) -> Result<Vec<Arc<Sample>>> {
         self.slots
             .into_iter()
-            .map(|s| s.expect("every batch slot is filled"))
+            .enumerate()
+            .map(|(i, s)| {
+                s.ok_or_else(|| {
+                    anyhow::anyhow!("batch slot {i} left unfilled")
+                })
+            })
             .collect()
     }
 }
@@ -162,10 +181,9 @@ impl FetchContext {
         let t0 = Instant::now();
         let result = (|| {
             let batch = self.fetch_batch_core(std::slice::from_ref(&id))?;
-            Ok(self
-                .resolve_serial(batch)?
-                .pop()
-                .expect("batch of one yields one sample"))
+            self.resolve_serial(batch)?.pop().ok_or_else(|| {
+                anyhow::anyhow!("batch of one yielded no sample")
+            })
         })();
         self.counters
             .fetch_ns
@@ -266,12 +284,31 @@ impl FetchContext {
     /// they are accounted there (storage), never double-counted here.
     /// Takes the group by value: position lists move through to the
     /// result, no per-id clones on the remote hot path.
+    ///
+    /// Fault tolerance (DESIGN.md §11): a dead owner — or a transfer the
+    /// fabric refuses after [`OWNER_RETRIES`] attempts — demotes the
+    /// whole group to storage fallback, evicting the owner's directory
+    /// claims so later batches route around it at planning time.
+    /// Remote-hit accounting happens only AFTER the transfer succeeds,
+    /// so a refused transfer never leaves phantom remote hits behind.
     pub fn fetch_owner(&self, group: OwnerGroup) -> OwnerFetch {
         let OwnerGroup { owner, entries } = group;
         let mut out = OwnerFetch {
             resolved: Vec::with_capacity(entries.len()),
             fallback: Vec::new(),
         };
+        // A dead owner serves nothing: clear its claims for these ids so
+        // subsequent steps route straight to storage, and demote the
+        // whole group — no transfer attempt, no remote accounting.
+        if self.fabric.endpoint_dead(owner) {
+            for (id, pos) in entries {
+                self.directory.clear_owner_if(id, owner);
+                out.fallback.push((id, pos));
+            }
+            return out;
+        }
+        let mut held: Vec<(u32, Vec<usize>, Arc<Sample>)> =
+            Vec::with_capacity(entries.len());
         let mut bytes = 0u64;
         for (id, pos) in entries {
             let got = self.caches[owner].get(id).or_else(|| {
@@ -279,22 +316,47 @@ impl FetchContext {
             });
             match got {
                 Some(s) => {
-                    // One payload crosses the wire per unique id; the
-                    // hit is accounted once per batch position.
+                    // One payload crosses the wire per unique id.
                     bytes += s.size() as u64;
-                    self.counters.record_n(
-                        Source::RemoteCache,
-                        s.size() as u64,
-                        pos.len() as u64,
-                    );
-                    out.resolved.push((pos, s));
+                    held.push((id, pos, s));
                 }
                 None => out.fallback.push((id, pos)),
             }
         }
-        if bytes > 0 {
-            self.fabric.transfer_begin(owner, self.learner, bytes).wait();
+        if bytes == 0 {
+            return out;
+        }
+        // Bounded retry: the owner can die between the liveness probe
+        // above and the reservation (fault plans install concurrently).
+        let mut sent = false;
+        for _ in 0..OWNER_RETRIES {
+            match self.fabric.try_transfer_begin(owner, self.learner, bytes)
+            {
+                Ok(handle) => {
+                    handle.wait();
+                    sent = true;
+                    break;
+                }
+                Err(_) => continue,
+            }
+        }
+        if sent {
             self.counters.owner_messages.fetch_add(1, Ordering::Relaxed);
+            for (_, pos, s) in held {
+                // The hit is accounted once per batch position — only
+                // now that the bytes actually arrived.
+                self.counters.record_n(
+                    Source::RemoteCache,
+                    s.size() as u64,
+                    pos.len() as u64,
+                );
+                out.resolved.push((pos, s));
+            }
+        } else {
+            for (id, pos, _) in held {
+                self.directory.clear_owner_if(id, owner);
+                out.fallback.push((id, pos));
+            }
         }
         out
     }
@@ -444,7 +506,7 @@ impl FetchContext {
         let pending = std::mem::take(&mut batch.pending);
         let fetched = self.storage_fill(&pending)?;
         batch.fill(&pending, fetched);
-        Ok(batch.finish())
+        batch.try_finish()
     }
 
     /// One overlapped task wave: owner groups + storage-run chunks, all on
@@ -460,7 +522,7 @@ impl FetchContext {
         let disk = std::mem::take(&mut batch.disk);
         let pending = std::mem::take(&mut batch.pending);
         if remote.is_empty() && disk.is_empty() && pending.is_empty() {
-            return Ok(batch.finish());
+            return batch.try_finish();
         }
 
         // A task's result: which kind of work it was, plus its outcome.
@@ -543,7 +605,7 @@ impl FetchContext {
             let got = ctx.storage_fill(&fallback)?;
             batch.fill(&fallback, got);
         }
-        Ok(batch.finish())
+        batch.try_finish()
     }
 
     /// Untimed storage completion shared by `fetch`/`fetch_batch`/
@@ -557,7 +619,8 @@ impl FetchContext {
             return Ok(Vec::new());
         }
         let want: Vec<u32> = pending.iter().map(|(id, _)| *id).collect();
-        let (samples, runs) = self.storage.read_batch(&want)?;
+        let (samples, runs) =
+            self.storage.read_batch_for(self.learner, &want)?;
         self.counters
             .storage_runs
             .fetch_add(runs as u64, Ordering::Relaxed);
@@ -852,6 +915,62 @@ mod tests {
             let direct = fc.storage.read_sample(k as u32).unwrap();
             assert_eq!(s.bytes, direct.bytes);
         }
+    }
+
+    #[test]
+    fn dead_owner_falls_back_to_storage_and_evicts_claims() {
+        use crate::fault::{FaultPlan, NodeFault};
+        let (fc, mine) = ctx_with("dead", true, 3);
+        // Owner 1 really holds samples 0..4 — then dies.
+        for id in 0..4u32 {
+            let s = Arc::new(fc.storage.read_sample(id).unwrap());
+            fc.caches[1].insert(s);
+            fc.directory.set_owner(id, 1);
+        }
+        fc.fabric.set_fault_plan(Some(Arc::new(FaultPlan::single(
+            7,
+            3,
+            1,
+            NodeFault { dead: true, ..Default::default() },
+        ))));
+        fc.storage.reset_counters();
+
+        let got = fc.fetch_batch(&[0, 1, 2, 3]).unwrap();
+        assert_eq!(got.len(), 4);
+        let snap = fc.counters.snapshot();
+        assert_eq!(snap.remote_hits, 0, "dead owner must serve nothing");
+        assert_eq!(snap.storage_loads, 4, "all entries fall back to storage");
+        assert_eq!(fc.fabric.p2p_messages(), 0, "no transfer to a dead owner");
+        // The dead owner's claims were evicted and (cache_on_load) the
+        // repopulation re-routed them to us — later steps skip owner 1.
+        for id in 0..4u32 {
+            assert_eq!(fc.directory.owner(id), Some(0));
+            assert!(mine.contains(id));
+        }
+
+        // Recovery: clearing the plan restores the remote path.
+        fc.fabric.set_fault_plan(None);
+        let s = Arc::new(fc.storage.read_sample(9).unwrap());
+        fc.caches[1].insert(s);
+        fc.directory.set_owner(9, 1);
+        fc.fetch(9).unwrap();
+        assert_eq!(fc.counters.snapshot().remote_hits, 1);
+        assert_eq!(fc.fabric.p2p_messages(), 1);
+    }
+
+    #[test]
+    fn injected_read_failure_surfaces_as_error_not_panic() {
+        use crate::fault::{FaultPlan, NodeFault};
+        let (fc, _) = ctx_with("readfail", false, 2);
+        fc.storage.set_fault_plan(Some(Arc::new(FaultPlan::single(
+            1,
+            2,
+            0,
+            NodeFault { read_fail_every: 1, ..Default::default() },
+        ))));
+        assert!(fc.fetch_batch(&[0, 1]).is_err(), "injected failure -> Err");
+        fc.storage.set_fault_plan(None);
+        assert_eq!(fc.fetch_batch(&[0, 1]).unwrap().len(), 2);
     }
 
     #[test]

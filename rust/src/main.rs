@@ -127,6 +127,20 @@ fn train(args: &Args) -> Result<()> {
         decode_s_per_kib: args.f64_or("decode", 0.0)?,
         eval_samples: args.usize_or("eval", 0)?,
         checkpoint_path: args.str_opt("checkpoint").map(PathBuf::from),
+        // Fault injection & straggler mitigation (DESIGN.md §11):
+        //   --fault-node 1 --fault-link-scale 0.5   degrade node 1's links
+        //   --fault-disk-scale 0.5                  degrade its storage reads
+        //   --fault-dead                            dead-owner mode
+        //   --rebalance-interval 0.05               enable the monitor
+        fault_node: args
+            .str_opt("fault-node")
+            .map(|s| s.parse().context("bad --fault-node"))
+            .transpose()?,
+        fault_link_scale: args.f64_or("fault-link-scale", 1.0)?,
+        fault_disk_scale: args.f64_or("fault-disk-scale", 1.0)?,
+        fault_dead: args.flag("fault-dead"),
+        fault_seed: args.u64_or("fault-seed", 0x5EED)?,
+        rebalance_interval_s: args.f64_or("rebalance-interval", 0.0)?,
     };
     println!(
         "training: p={} epochs={} B_local={} sampler={:?} (engine: {})",
@@ -148,6 +162,15 @@ fn train(args: &Args) -> Result<()> {
         "learners in sync: {}; mean grad step: {:.1} ms",
         report.learners_in_sync(),
         report.mean_grad_exec_s * 1e3
+    );
+    let st = report.stall_total();
+    println!(
+        "stalls: fetch {:.2}s prep {:.2}s barrier {:.2}s \
+         (barrier share {:.0}%)",
+        st.fetch_s,
+        st.prep_s,
+        st.barrier_s,
+        st.barrier_share() * 100.0
     );
     if report.tiers.disk_capacity > 0 {
         println!(

@@ -174,6 +174,48 @@ impl LoadSnapshot {
     }
 }
 
+/// Per-learner stall decomposition (DESIGN.md §11): where the time a
+/// learner spends NOT training actually goes. The three components are
+/// disjoint by construction:
+///
+/// * `fetch_s` — blocked waiting for sample bytes (loader dequeue /
+///   fetch path), the paper's Fig. 1 "waiting for data".
+/// * `prep_s` — decode + preprocess occupancy charged to this learner's
+///   workers (CPU work, not waiting — but it is time the accelerator
+///   sits idle when it leaks onto the critical path).
+/// * `barrier_s` — blocked at the gradient rendezvous waiting for
+///   slower learners ([`crate::coordinator::GradSync::blocked_s`]): the
+///   straggler term, the signature a fault injection run must move.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StallSnapshot {
+    pub fetch_s: f64,
+    pub prep_s: f64,
+    pub barrier_s: f64,
+}
+
+impl StallSnapshot {
+    /// Total stalled seconds across the three components.
+    pub fn total_s(&self) -> f64 {
+        self.fetch_s + self.prep_s + self.barrier_s
+    }
+
+    /// Sum two learners' stalls (aggregation into `TrainingReport`).
+    pub fn merge(&self, other: &StallSnapshot) -> StallSnapshot {
+        StallSnapshot {
+            fetch_s: self.fetch_s + other.fetch_s,
+            prep_s: self.prep_s + other.prep_s,
+            barrier_s: self.barrier_s + other.barrier_s,
+        }
+    }
+
+    /// Share of total stall spent waiting on stragglers — the headline
+    /// number a fault-injection run reads.
+    pub fn barrier_share(&self) -> f64 {
+        let t = self.total_s();
+        if t <= 0.0 { 0.0 } else { self.barrier_s / t }
+    }
+}
+
 /// Hierarchical cache-tier accounting (produced by
 /// `CacheStack::tier_snapshot`): mem/disk hit split, spill write-behind
 /// occupancy, and
@@ -706,6 +748,19 @@ mod tests {
         let d = c.snapshot().delta(&s);
         assert_eq!(d.disk_hits, 1);
         assert_eq!(d.disk_bytes, 100);
+    }
+
+    #[test]
+    fn stall_snapshot_totals_and_merge() {
+        let a = StallSnapshot { fetch_s: 0.2, prep_s: 0.1, barrier_s: 0.7 };
+        assert!((a.total_s() - 1.0).abs() < 1e-12);
+        assert!((a.barrier_share() - 0.7).abs() < 1e-12);
+        let b = StallSnapshot { fetch_s: 0.1, prep_s: 0.0, barrier_s: 0.1 };
+        let m = a.merge(&b);
+        assert!((m.fetch_s - 0.3).abs() < 1e-12);
+        assert!((m.barrier_s - 0.8).abs() < 1e-12);
+        assert_eq!(StallSnapshot::default().barrier_share(), 0.0);
+        assert_eq!(StallSnapshot::default().total_s(), 0.0);
     }
 
     #[test]

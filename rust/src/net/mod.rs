@@ -20,7 +20,9 @@
 //! Only relative rates matter for the paper's phenomena (R_c ≫ R), so the
 //! fabric is configured in bytes/sec alongside the storage throttle.
 
+use crate::fault::FaultPlan;
 use crate::metrics::FabricSnapshot;
+use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
@@ -140,6 +142,11 @@ pub struct Fabric {
     inflight_peak: AtomicU64,
     busy_start_ns: AtomicU64,
     overlapped_ns: AtomicU64,
+    /// Installed fault plan (DESIGN.md §11). `None` — the default — is
+    /// the zero-injection path: no degradation, bit-identical to the
+    /// unfaulted build. Read-mostly: one uncontended read-guard per
+    /// transfer, the write lock only when (re)installing a plan.
+    fault: RwLock<Option<Arc<FaultPlan>>>,
 }
 
 /// An in-flight transfer: link time is already reserved; [`wait`] sleeps
@@ -205,11 +212,53 @@ impl Fabric {
             inflight_peak: AtomicU64::new(0),
             busy_start_ns: AtomicU64::new(0),
             overlapped_ns: AtomicU64::new(0),
+            fault: RwLock::new(None),
         }
     }
 
     pub fn config(&self) -> &FabricConfig {
         &self.cfg
+    }
+
+    /// Install (or clear, with `None`) a fault plan. Subsequent
+    /// transfers pay its per-endpoint degradations; in-flight handles
+    /// keep the terms they were reserved under.
+    pub fn set_fault_plan(&self, plan: Option<Arc<FaultPlan>>) {
+        *self.fault.write().unwrap() = plan;
+    }
+
+    /// Whether the installed fault plan declares endpoint `j` dead
+    /// (no plan = everyone alive). The fetch path checks this before
+    /// resolving an owner group so a dead owner's claims can be evicted
+    /// without issuing a doomed transfer.
+    pub fn endpoint_dead(&self, j: usize) -> bool {
+        self.fault
+            .read()
+            .unwrap()
+            .as_ref()
+            .map(|p| p.is_dead(j))
+            .unwrap_or(false)
+    }
+
+    /// Fault-adjusted `(occupancy stretch, extra propagation ns)` for a
+    /// transfer between `from` and `to`; `(1.0, 0)` with no plan. The
+    /// stretch is the reciprocal of the *worst* endpoint's bandwidth
+    /// scale; extra latency and jitter from both endpoints add as
+    /// propagation (they pipeline, like base latency).
+    fn fault_terms(&self, from: usize, to: usize) -> (f64, u64) {
+        let guard = self.fault.read().unwrap();
+        let Some(plan) = guard.as_ref() else {
+            return (1.0, 0);
+        };
+        let a = plan.node(from);
+        let b = plan.node(to);
+        let scale = a.link_bw_scale.min(b.link_bw_scale).clamp(1e-9, 1.0);
+        let extra_s = a.extra_latency_s.max(0.0)
+            + b.extra_latency_s.max(0.0)
+            + plan.link_jitter_s(from)
+            + plan.link_jitter_s(to);
+        let extra_ns = Duration::from_secs_f64(extra_s).as_nanos() as u64;
+        (1.0 / scale, extra_ns)
     }
 
     fn now_ns(&self) -> u64 {
@@ -257,19 +306,64 @@ impl Fabric {
         to: usize,
         bytes: u64,
     ) -> TransferHandle<'_> {
-        let cost = self.p2p_cost(bytes);
-        let cost_ns = cost.as_nanos() as u64;
+        let (occ_scale, extra_ns) = self.fault_terms(from, to);
+        self.transfer_begin_inner(from, to, bytes, occ_scale, extra_ns)
+    }
+
+    /// Fallible [`transfer_begin`]: errors (reserving nothing) when the
+    /// installed fault plan declares either endpoint dead. The robust
+    /// fetch path uses this so dead-owner transfers surface as per-step
+    /// errors instead of occupying links that will never deliver.
+    ///
+    /// [`transfer_begin`]: Fabric::transfer_begin
+    pub fn try_transfer_begin(
+        &self,
+        from: usize,
+        to: usize,
+        bytes: u64,
+    ) -> Result<TransferHandle<'_>> {
+        let (occ_scale, extra_ns) = {
+            let guard = self.fault.read().unwrap();
+            if let Some(plan) = guard.as_ref() {
+                if plan.is_dead(from) {
+                    bail!("transfer from dead endpoint {from}");
+                }
+                if plan.is_dead(to) {
+                    bail!("transfer to dead endpoint {to}");
+                }
+            }
+            drop(guard);
+            self.fault_terms(from, to)
+        };
+        Ok(self.transfer_begin_inner(from, to, bytes, occ_scale, extra_ns))
+    }
+
+    fn transfer_begin_inner(
+        &self,
+        from: usize,
+        to: usize,
+        bytes: u64,
+        occ_scale: f64,
+        extra_ns: u64,
+    ) -> TransferHandle<'_> {
+        let base_ns = self.p2p_cost(bytes).as_nanos() as u64;
         let latency_ns = Duration::from_secs_f64(self.cfg.latency_s)
             .as_nanos() as u64;
-        // bytes/bw: the wire occupancy (latency pipelines, it never queues)
-        let occ_ns = cost_ns.saturating_sub(latency_ns);
+        // bytes/bw: the wire occupancy (latency pipelines, it never
+        // queues), stretched by any injected bandwidth degradation.
+        let occ_ns = ((base_ns.saturating_sub(latency_ns)) as f64
+            * occ_scale) as u64;
+        // Propagation: base latency plus injected latency/jitter.
+        let prop_ns = latency_ns + extra_ns;
+        let cost_ns = occ_ns + prop_ns;
+        let cost = Duration::from_nanos(cost_ns);
         let occ_ingress_ns =
             (occ_ns as f64 / self.cfg.ingress_rails as f64) as u64;
         let now = self.now_ns();
         let (src, dst) = self.endpoints(from, to);
         let (_, egress_end) = src.egress.reserve(now, occ_ns);
         let (_, ingress_end) = dst.ingress.reserve(now, occ_ingress_ns);
-        let done_ns = egress_end.max(ingress_end) + latency_ns;
+        let done_ns = egress_end.max(ingress_end) + prop_ns;
         let queue_ns = (done_ns - now).saturating_sub(cost_ns);
 
         self.p2p_bytes.fetch_add(bytes, Ordering::Relaxed);
@@ -424,6 +518,7 @@ impl Fabric {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fault::NodeFault;
 
     fn virtual_fabric() -> Fabric {
         Fabric::new(FabricConfig { real_time: false, ..Default::default() })
@@ -587,6 +682,71 @@ mod tests {
         // occupancy; the loop issues them within the elapsed bound above,
         // so at least the later ones start queued).
         assert!(f.snapshot().egress_queue_s > 0.0);
+    }
+
+    #[test]
+    fn dead_endpoint_errors_without_reserving() {
+        let f = virtual_fabric();
+        f.set_fault_plan(Some(Arc::new(FaultPlan::single(
+            0,
+            4,
+            1,
+            NodeFault { dead: true, ..NodeFault::healthy() },
+        ))));
+        assert!(f.endpoint_dead(1));
+        assert!(!f.endpoint_dead(2));
+        assert!(f.try_transfer_begin(1, 0, 1000).is_err());
+        assert!(f.try_transfer_begin(0, 1, 1000).is_err());
+        assert_eq!(f.p2p_messages(), 0, "failed transfers reserve nothing");
+        f.try_transfer_begin(2, 3, 1000).unwrap().wait();
+        assert_eq!(f.p2p_messages(), 1);
+        f.set_fault_plan(None);
+        assert!(!f.endpoint_dead(1));
+        f.try_transfer_begin(1, 0, 1000).unwrap().wait();
+        assert_eq!(f.p2p_messages(), 2);
+    }
+
+    #[test]
+    fn degraded_link_stretches_occupancy_only() {
+        let f = virtual_fabric();
+        let clean = f.transfer_begin(1, 0, 1 << 20).cost();
+        // An all-healthy plan is bit-identical to no plan at all.
+        f.set_fault_plan(Some(Arc::new(FaultPlan::healthy(4))));
+        assert_eq!(f.transfer_begin(1, 0, 1 << 20).cost(), clean);
+        // Halved bandwidth on one endpoint doubles the bandwidth term;
+        // the latency term is propagation and does not stretch.
+        f.set_fault_plan(Some(Arc::new(FaultPlan::single(
+            0,
+            4,
+            1,
+            NodeFault { link_bw_scale: 0.5, ..NodeFault::healthy() },
+        ))));
+        let slow = f.transfer_begin(1, 0, 1 << 20).cost();
+        let lat = Duration::from_secs_f64(f.config().latency_s);
+        let want = (clean - lat) * 2 + lat;
+        let diff = (slow.as_secs_f64() - want.as_secs_f64()).abs();
+        assert!(diff < 1e-6, "slow={slow:?} want={want:?}");
+        // Untouched endpoint pairs pay the clean cost.
+        assert_eq!(f.transfer_begin(2, 3, 1 << 20).cost(), clean);
+    }
+
+    #[test]
+    fn extra_latency_and_jitter_add_propagation() {
+        let f = virtual_fabric();
+        let clean = f.transfer_begin(1, 0, 4096).cost().as_secs_f64();
+        f.set_fault_plan(Some(Arc::new(FaultPlan::single(
+            9,
+            4,
+            1,
+            NodeFault {
+                extra_latency_s: 0.010,
+                jitter_s: 0.005,
+                ..NodeFault::healthy()
+            },
+        ))));
+        let c = f.transfer_begin(1, 0, 4096).cost().as_secs_f64();
+        assert!(c >= clean + 0.010 - 1e-9, "extra latency missing: {c}");
+        assert!(c < clean + 0.015 + 1e-9, "jitter out of bounds: {c}");
     }
 
     #[test]

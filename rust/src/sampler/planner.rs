@@ -193,7 +193,22 @@ impl StepPlan {
         dir: &CacheDirectory,
         p: usize,
     ) -> StepPlan {
-        PlanScratch::default().plan_loc(epoch, step, batch, dir, p)
+        PlanScratch::default().plan_loc(epoch, step, batch, dir, p, None)
+    }
+
+    /// As [`StepPlan::plan_loc`], balancing toward
+    /// [`crate::balance::weighted_targets`] under per-learner capacity
+    /// weights instead of the uniform split (DESIGN.md §11 — straggler
+    /// mitigation). `None` weights are exactly `plan_loc`.
+    pub fn plan_loc_weighted(
+        epoch: u64,
+        step: u64,
+        batch: &[u32],
+        dir: &CacheDirectory,
+        p: usize,
+        weights: Option<&[f64]>,
+    ) -> StepPlan {
+        PlanScratch::default().plan_loc(epoch, step, batch, dir, p, weights)
     }
 }
 
@@ -217,6 +232,7 @@ impl PlanScratch {
         batch: &[u32],
         dir: &CacheDirectory,
         p: usize,
+        weights: Option<&[f64]>,
     ) -> StepPlan {
         assert!(p > 0);
         if self.claims.len() != p {
@@ -263,12 +279,24 @@ impl PlanScratch {
         self.misses = misses; // keep the capacity for the next step
 
         // Step 3: Algorithm 1 balancing, into the reused schedule buffer.
+        // With capacity weights present (straggler mitigation) the targets
+        // shift toward the healthy learners; the matching is unchanged.
         self.loads.clear();
         for c in &self.claims {
             self.loads.push(c.len() as u64);
         }
         let mut schedule = std::mem::take(&mut self.schedule);
-        balance::balance_into(&self.loads, &mut schedule);
+        match weights {
+            Some(w) => {
+                let tgt = balance::weighted_targets(&self.loads, w);
+                balance::balance_to_targets_into(
+                    &self.loads,
+                    &tgt,
+                    &mut schedule,
+                );
+            }
+            None => balance::balance_into(&self.loads, &mut schedule),
+        }
         for t in &schedule {
             for _ in 0..t.amount {
                 let (s, prov) =
@@ -411,6 +439,11 @@ struct Shared {
     directory: Arc<CacheDirectory>,
     shuffler: GlobalShuffler,
     cfg: PlannerConfig,
+    /// Advisory per-learner capacity weights (DESIGN.md §11). `None`
+    /// means uniform targets; the straggler monitor amends this via
+    /// [`PartitionPlanner::amend_weights`] and all subsequently computed
+    /// Loc plans balance toward the weighted targets.
+    weights: Mutex<Option<Vec<f64>>>,
 }
 
 /// One planner per job: a dedicated background thread computes each
@@ -441,6 +474,7 @@ impl PartitionPlanner {
             directory,
             shuffler,
             cfg,
+            weights: Mutex::new(None),
         });
         let thread_shared = Arc::clone(&shared);
         let handle = std::thread::Builder::new()
@@ -569,17 +603,91 @@ impl PartitionPlanner {
                         mb.sample_ids,
                         shared.cfg.p,
                     ),
-                    EpochScheme::Loc => StepPlan::plan_loc(
-                        epoch,
-                        step,
-                        mb.sample_ids,
-                        &shared.directory,
-                        shared.cfg.p,
-                    ),
+                    EpochScheme::Loc => {
+                        let w = shared.weights.lock().unwrap().clone();
+                        StepPlan::plan_loc_weighted(
+                            epoch,
+                            step,
+                            mb.sample_ids,
+                            &shared.directory,
+                            shared.cfg.p,
+                            w.as_deref(),
+                        )
+                    }
                 };
                 Ok(Arc::new(plan))
             }
         }
+    }
+
+    /// Publish amended per-learner capacity weights (DESIGN.md §11):
+    /// every Loc plan computed from now on is balanced toward
+    /// [`crate::balance::weighted_targets`] under `weights`, and any
+    /// already-published plan that NO consumer has taken yet is
+    /// recomputed off the board lock and swapped in place. Plans with at
+    /// least one take are never touched — every consumer of a step must
+    /// see the identical plan, so an amendment can shift future steps
+    /// but never split one (the advisory-plan protocol). Returns how
+    /// many published plans were replaced.
+    pub fn amend_weights(&self, weights: &[f64]) -> usize {
+        let shared = &self.shared;
+        assert_eq!(weights.len(), shared.cfg.p, "one weight per learner");
+        *shared.weights.lock().unwrap() = Some(weights.to_vec());
+        // Snapshot the amendable frontier: published Loc steps nobody
+        // has taken. Recompute each outside the board lock, then swap
+        // only if it is STILL untaken (a racing take wins — the step
+        // keeps the plan its first consumer saw).
+        let (epoch, eplan, mut steps) = {
+            let board = shared.board.lock().unwrap();
+            let Some(st) = board.state.as_ref() else { return 0 };
+            if st.scheme != EpochScheme::Loc {
+                return 0;
+            }
+            let steps: Vec<u64> = st
+                .published
+                .keys()
+                .copied()
+                .filter(|s| st.taken.get(s).copied().unwrap_or(0) == 0)
+                .collect();
+            (st.epoch, Arc::clone(&st.eplan), steps)
+        };
+        steps.sort_unstable();
+        let mut scratch = PlanScratch::default();
+        let mut replaced = 0usize;
+        for &s in &steps {
+            let mb = eplan.batch(s as usize);
+            let plan = Arc::new(scratch.plan_loc(
+                epoch,
+                s,
+                mb.sample_ids,
+                &shared.directory,
+                shared.cfg.p,
+                Some(weights),
+            ));
+            let arena = plan.arena_bytes() as u64;
+            let mut board = shared.board.lock().unwrap();
+            if board.closed {
+                break;
+            }
+            if let Some(st) = board.state.as_mut() {
+                // `published` membership matters: a step retired since
+                // the snapshot also has no `taken` entry, and amending
+                // it would resurrect a dead board slot.
+                if st.epoch == epoch
+                    && st.published.contains_key(&s)
+                    && st.taken.get(&s).copied().unwrap_or(0) == 0
+                {
+                    if let Some(old) = st.published.insert(s, plan) {
+                        st.arena_bytes_live = st
+                            .arena_bytes_live
+                            .saturating_sub(old.arena_bytes() as u64)
+                            + arena;
+                        replaced += 1;
+                    }
+                }
+            }
+        }
+        replaced
     }
 
     /// Planner health/occupancy counters (lead, wait, recompute guards).
@@ -671,13 +779,17 @@ fn planner_thread(shared: Arc<Shared>) {
                 EpochScheme::Reg => {
                     StepPlan::plan_reg(epoch, step, mb.sample_ids, shared.cfg.p)
                 }
-                EpochScheme::Loc => scratch.plan_loc(
-                    epoch,
-                    step,
-                    mb.sample_ids,
-                    &shared.directory,
-                    shared.cfg.p,
-                ),
+                EpochScheme::Loc => {
+                    let w = shared.weights.lock().unwrap().clone();
+                    scratch.plan_loc(
+                        epoch,
+                        step,
+                        mb.sample_ids,
+                        &shared.directory,
+                        shared.cfg.p,
+                        w.as_deref(),
+                    )
+                }
             });
             let plan_ns = t0.elapsed().as_nanos() as u64;
             shared.counters.plan_ns.fetch_add(plan_ns, Ordering::Relaxed);
@@ -777,8 +889,8 @@ mod tests {
         let mut scratch = PlanScratch::default();
         let b1: Vec<u32> = (0..120).map(|i| (i * 3) % 500).collect();
         let b2: Vec<u32> = (0..90).map(|i| (i * 7 + 1) % 500).collect();
-        let a1 = scratch.plan_loc(0, 0, &b1, &dir, 6);
-        let a2 = scratch.plan_loc(0, 1, &b2, &dir, 6);
+        let a1 = scratch.plan_loc(0, 0, &b1, &dir, 6, None);
+        let a2 = scratch.plan_loc(0, 1, &b2, &dir, 6, None);
         let f1 = StepPlan::plan_loc(0, 0, &b1, &dir, 6);
         let f2 = StepPlan::plan_loc(0, 1, &b2, &dir, 6);
         for j in 0..6 {
@@ -787,7 +899,7 @@ mod tests {
             assert_eq!(a2.learner_provenance(j), f2.learner_provenance(j));
         }
         // Scratch with a different p afterwards still works.
-        let a3 = scratch.plan_loc(0, 2, &b1, &dir, 3);
+        let a3 = scratch.plan_loc(0, 2, &b1, &dir, 3, None);
         let f3 = StepPlan::plan_loc(0, 2, &b1, &dir, 3);
         for j in 0..3 {
             assert_eq!(a3.learner_ids(j), f3.learner_ids(j));
@@ -976,6 +1088,108 @@ mod tests {
                 again.learner_provenance(j)
             );
         }
+    }
+
+    #[test]
+    fn weighted_plan_shifts_load_toward_healthy_learners() {
+        let p = 3usize;
+        let dir = striped_directory(240, p);
+        let batch: Vec<u32> = (0..60).collect();
+        let uniform = StepPlan::plan_loc(0, 0, &batch, &dir, p);
+        // Weights of None reproduce plan_loc exactly.
+        let same =
+            StepPlan::plan_loc_weighted(0, 0, &batch, &dir, p, None);
+        for j in 0..p {
+            assert_eq!(uniform.learner_ids(j), same.learner_ids(j));
+        }
+        // A dead learner (weight 0) ends up with an empty share; the
+        // survivors split its load.
+        let w = [1.0, 1.0, 0.0];
+        let plan =
+            StepPlan::plan_loc_weighted(0, 0, &batch, &dir, p, Some(&w));
+        assert_eq!(plan.learner_ids(2).len(), 0, "dead learner keeps load");
+        assert_eq!(
+            plan.learner_ids(0).len() + plan.learner_ids(1).len(),
+            60,
+            "total conserved"
+        );
+        assert_eq!(plan.len(), 60);
+    }
+
+    #[test]
+    fn amend_weights_reroutes_published_and_future_plans() {
+        let p = 3usize;
+        let dir = Arc::new(striped_directory(240, p));
+        let planner = PartitionPlanner::spawn(
+            PlannerConfig {
+                p,
+                global_batch: 60,
+                lead: 3,
+                consumers: 1,
+                keep_partial: false,
+            },
+            GlobalShuffler::new(21, 240),
+            Arc::clone(&dir),
+        );
+        planner.begin_epoch(0, EpochScheme::Loc);
+        let eplan = planner.epoch_plan(0).unwrap();
+        assert_eq!(eplan.steps(), 4);
+        // Let the planner fill its whole lead window: it then blocks at
+        // the window gate with NO plan in flight, so every published
+        // plan is amendable and every later one sees the new weights.
+        while planner.snapshot().plans_published < 3 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let replaced = planner.amend_weights(&[1.0, 1.0, 0.0]);
+        assert_eq!(replaced, 3, "all published untaken plans amended");
+        // Every step seen after the amendment — replaced or computed
+        // fresh under the new weights — routes around learner 2.
+        for s in 0..eplan.steps() as u64 {
+            let plan = planner.get(0, s).unwrap();
+            assert_eq!(
+                plan.learner_ids(2).len(),
+                0,
+                "step {s} still loads the drained learner"
+            );
+            assert_eq!(plan.len(), 60, "step {s} lost samples");
+        }
+    }
+
+    #[test]
+    fn amend_weights_never_splits_a_partially_taken_step() {
+        let p = 2usize;
+        let dir = Arc::new(striped_directory(128, p));
+        let planner = PartitionPlanner::spawn(
+            PlannerConfig {
+                p,
+                global_batch: 32,
+                lead: 2,
+                consumers: 2,
+                keep_partial: false,
+            },
+            GlobalShuffler::new(9, 128),
+            Arc::clone(&dir),
+        );
+        planner.begin_epoch(0, EpochScheme::Loc);
+        planner.epoch_plan(0).unwrap();
+        // Consumer 0 takes step 0; the step is now partially taken.
+        let first = planner.get(0, 0).unwrap();
+        planner.amend_weights(&[1.0, 0.0]);
+        // Consumer 1 must see the SAME plan object, not an amended one.
+        let second = planner.get(0, 0).unwrap();
+        assert!(
+            Arc::ptr_eq(&first, &second),
+            "amendment split a partially-taken step"
+        );
+        // Amendment on a Reg epoch is a no-op (nothing to reweight).
+        for s in 1..4u64 {
+            for _ in 0..2 {
+                planner.get(0, s).unwrap();
+            }
+        }
+        planner.begin_epoch(1, EpochScheme::Reg);
+        planner.epoch_plan(1).unwrap();
+        assert_eq!(planner.amend_weights(&[1.0, 1.0]), 0);
     }
 
     #[test]

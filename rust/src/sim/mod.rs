@@ -116,6 +116,16 @@ pub struct SimConfig {
     /// legacy synchronous recompute on the training threads, which lands
     /// directly on the step critical path.
     pub plan_pipelined: bool,
+    /// Straggler injection (DESIGN.md §11): `Some((node, f))` runs that
+    /// node's preprocess/assembly stages `f`× slower — the DES mirror of
+    /// the live fault plan's per-node degradation. `None` (or `f ≤ 1`)
+    /// is a healthy cluster, bit-identical to the pre-fault model.
+    pub straggler: Option<(usize, f64)>,
+    /// Advisory rebalancing against the straggler: when true, weighted
+    /// targets shrink the slow node's share until all nodes finish a
+    /// step together (the live `amend_weights` protocol); when false it
+    /// keeps a full 1/p share and gates every synchronous step.
+    pub straggler_rebalance: bool,
     pub seed: u64,
 }
 
@@ -329,6 +339,23 @@ pub fn simulate_epoch(cfg: &SimConfig) -> SimResult {
     } else {
         0.0
     };
+    // Straggler gate (DESIGN.md §11): a node running its per-node stages
+    // f× slower stalls every synchronous step by f while it keeps a full
+    // 1/p share. Advisory rebalancing shrinks its share until all nodes
+    // finish together: the gate becomes m = p / ((p−1) + 1/f) — strictly
+    // below f for p > 1, approaching 1 as p grows.
+    let straggler_m = match cfg.straggler {
+        Some((node, f)) if f > 1.0 => {
+            assert!(node < cfg.nodes, "straggler node out of range");
+            if cfg.straggler_rebalance && cfg.nodes > 1 {
+                let p = cfg.nodes as f64;
+                p / ((p - 1.0) + 1.0 / f)
+            } else {
+                f
+            }
+        }
+        _ => 1.0,
+    };
     for s in 0..steps {
         let tr = step_traffic(cfg, &mut rng);
         // Pipelined planning (the planner architecture) joins the supply
@@ -341,13 +368,14 @@ pub fn simulate_epoch(cfg: &SimConfig) -> SimResult {
         let t_storage = tr.storage_bytes / cfg.r_storage_bps;
         let t_remote = tr.max_link_bytes / cfg.rc_link_bps;
         let t_pre = if u_node.is_finite() {
-            tr.max_node_batch / u_node
+            tr.max_node_batch / u_node * straggler_m
         } else {
             0.0
         };
         // Per-node batch assembly (local fetch of the node's share).
         let t_local = tr.max_node_batch * cfg.catalog.avg_bytes as f64
-            / cfg.local_fetch_bps;
+            / cfg.local_fetch_bps
+            * straggler_m;
         let t_supply = t_storage + t_remote + t_disk + t_pre + t_local
             + if cfg.plan_pipelined { t_plan } else { 0.0 };
 
@@ -673,6 +701,40 @@ mod tests {
         reg.alpha_disk = 0.8;
         reg.disk_read_bps = 1.0e8;
         assert_eq!(simulate_epoch(&reg).epoch_time_s, t_reg);
+    }
+
+    #[test]
+    fn straggler_gates_epoch_and_rebalance_recovers() {
+        // A 2x-slow node doubles a preprocess-bound Loc epoch when its
+        // share stays uniform; advisory rebalancing shrinks its share and
+        // recovers nearly all of it (m = p/((p-1)+1/f) ≈ 1.016 at p=32).
+        let base = presets::loading_only(
+            Catalog::imagenet_1k(),
+            32,
+            Scheme::Loc,
+            true,
+        );
+        let t_clean = simulate_epoch(&base).epoch_time_s;
+        let mut unmit = base.clone();
+        unmit.straggler = Some((3, 2.0));
+        unmit.straggler_rebalance = false;
+        let t_unmit = simulate_epoch(&unmit).epoch_time_s;
+        let mut mit = unmit.clone();
+        mit.straggler_rebalance = true;
+        let t_mit = simulate_epoch(&mit).epoch_time_s;
+        assert!(
+            t_unmit > t_clean * 1.5,
+            "unmitigated straggler must gate: {t_unmit} vs {t_clean}"
+        );
+        assert!(
+            t_mit < t_clean * 1.1,
+            "rebalancing must recover the epoch: {t_mit} vs {t_clean}"
+        );
+        assert!(t_mit >= t_clean - 1e-9, "mitigation cannot beat healthy");
+        // A unit factor is inert: bit-identical to the healthy model.
+        let mut inert = base.clone();
+        inert.straggler = Some((0, 1.0));
+        assert_eq!(simulate_epoch(&inert).epoch_time_s, t_clean);
     }
 
     #[test]

@@ -68,6 +68,8 @@ pub fn loading_only(
         // these to study the synchronous-recompute ablation.
         plan_s_per_step: 0.0,
         plan_pipelined: true,
+        straggler: None,
+        straggler_rebalance: true,
         seed: 0xF1C5,
     }
 }

@@ -12,11 +12,13 @@ use super::bytes::SampleBytes;
 use super::format::ShardReader;
 use super::generator::DatasetMeta;
 use super::throttle::TokenBucket;
-use anyhow::{ensure, Context, Result};
+use crate::fault::FaultPlan;
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
 
 /// A read sample: an `Arc`-backed payload handle plus its label. Cloning
 /// is cheap (no payload copy); a cache hit hands the same handle to every
@@ -41,6 +43,11 @@ pub struct StorageSystem {
     throttle: Option<Arc<TokenBucket>>,
     bytes_read: AtomicU64,
     samples_read: AtomicU64,
+    /// Installed fault plan (DESIGN.md §11); `None` injects nothing.
+    /// Only the node-aware [`read_batch_for`] consults it.
+    ///
+    /// [`read_batch_for`]: StorageSystem::read_batch_for
+    fault: RwLock<Option<Arc<FaultPlan>>>,
 }
 
 impl StorageSystem {
@@ -71,7 +78,15 @@ impl StorageSystem {
             throttle,
             bytes_read: AtomicU64::new(0),
             samples_read: AtomicU64::new(0),
+            fault: RwLock::new(None),
         })
+    }
+
+    /// Install (or clear, with `None`) a fault plan; node-aware reads
+    /// ([`StorageSystem::read_batch_for`]) apply its per-node disk
+    /// degradations.
+    pub fn set_fault_plan(&self, plan: Option<Arc<FaultPlan>>) {
+        *self.fault.write().unwrap() = plan;
     }
 
     pub fn meta(&self) -> &DatasetMeta {
@@ -171,6 +186,54 @@ impl StorageSystem {
             })
             .collect();
         Ok((out, runs))
+    }
+
+    /// Node-aware batched read: [`StorageSystem::read_batch`] plus the
+    /// installed fault plan's per-node degradations for `node` — added
+    /// read latency, disk-rate scaling (extra sleep on top of the
+    /// shared throttle's admission), and deterministic every-k read
+    /// failures. With no plan, or a healthy node, this is exactly
+    /// `read_batch` — the zero-injection path pays one read-guard and
+    /// nothing else.
+    pub fn read_batch_for(
+        &self,
+        node: usize,
+        ids: &[u32],
+    ) -> Result<(Vec<Sample>, usize)> {
+        let nf = {
+            let guard = self.fault.read().unwrap();
+            match guard.as_ref() {
+                Some(plan) => {
+                    let nf = plan.node(node);
+                    if nf.is_inert() {
+                        return self.read_batch(ids);
+                    }
+                    if plan.next_read_fails(node) {
+                        bail!("injected storage read failure (node {node})");
+                    }
+                    nf
+                }
+                None => return self.read_batch(ids),
+            }
+        };
+        if nf.read_latency_s > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(nf.read_latency_s));
+        }
+        let out = self.read_batch(ids)?;
+        // A degraded disk serves the same bytes at `disk_rate_scale` of
+        // the healthy rate: charge the difference as extra sleep beyond
+        // the shared token bucket's admission (throttle-less systems
+        // model unbounded local storage, which nothing scales).
+        if nf.disk_rate_scale < 1.0 {
+            if let Some(tb) = &self.throttle {
+                let span: u64 =
+                    out.0.iter().map(|s| s.size() as u64).sum();
+                let extra = span as f64 / tb.rate_bps()
+                    * (1.0 / nf.disk_rate_scale.max(1e-9) - 1.0);
+                std::thread::sleep(Duration::from_secs_f64(extra));
+            }
+        }
+        Ok(out)
     }
 
     /// Total bytes served (metrics).
@@ -299,6 +362,64 @@ mod tests {
         assert_eq!(runs, 1);
         assert!(t0.elapsed().as_secs_f64() > 0.3, "throttle not charged");
         assert_eq!(tb.total_bytes(), 16 * 3072);
+    }
+
+    #[test]
+    fn node_aware_reads_apply_injected_faults() {
+        use crate::fault::{FaultPlan, NodeFault};
+        let sys = open_test_system("fault", 64, None);
+        let ids: Vec<u32> = (0..8).collect();
+        // No plan: identical to read_batch.
+        let (clean, runs) = sys.read_batch_for(1, &ids).unwrap();
+        assert_eq!(runs, 1);
+        // Healthy plan: still identical.
+        sys.set_fault_plan(Some(Arc::new(FaultPlan::healthy(4))));
+        let (same, _) = sys.read_batch_for(1, &ids).unwrap();
+        assert_eq!(clean, same);
+        // Every-2nd-read failure on node 1 only.
+        sys.set_fault_plan(Some(Arc::new(FaultPlan::single(
+            0,
+            4,
+            1,
+            NodeFault { read_fail_every: 2, ..NodeFault::healthy() },
+        ))));
+        assert!(sys.read_batch_for(1, &ids).is_ok());
+        assert!(sys.read_batch_for(1, &ids).is_err());
+        assert!(sys.read_batch_for(0, &ids).is_ok());
+        // Injected read latency shows up as wall time.
+        sys.set_fault_plan(Some(Arc::new(FaultPlan::single(
+            0,
+            4,
+            2,
+            NodeFault { read_latency_s: 0.05, ..NodeFault::healthy() },
+        ))));
+        let t0 = std::time::Instant::now();
+        sys.read_batch_for(2, &ids).unwrap();
+        assert!(t0.elapsed().as_secs_f64() > 0.04);
+        sys.set_fault_plan(None);
+        assert!(sys.read_batch_for(1, &ids).is_ok());
+    }
+
+    #[test]
+    fn disk_rate_scale_slows_node_reads() {
+        use crate::fault::{FaultPlan, NodeFault};
+        // 1 MiB/s with a huge burst: clean batch reads admit instantly.
+        let tb = Arc::new(TokenBucket::new(1024.0 * 1024.0, 1.0e9));
+        let sys = open_test_system("faultdisk", 64, Some(tb));
+        let ids: Vec<u32> = (0..16).collect(); // 48 KiB
+        let t0 = std::time::Instant::now();
+        sys.read_batch_for(0, &ids).unwrap();
+        assert!(t0.elapsed().as_secs_f64() < 0.05);
+        sys.set_fault_plan(Some(Arc::new(FaultPlan::single(
+            0,
+            2,
+            0,
+            NodeFault { disk_rate_scale: 0.25, ..NodeFault::healthy() },
+        ))));
+        // 48 KiB at 1/4 the 1 MiB/s rate: ~0.14s of extra service time.
+        let t1 = std::time::Instant::now();
+        sys.read_batch_for(0, &ids).unwrap();
+        assert!(t1.elapsed().as_secs_f64() > 0.08, "no slowdown injected");
     }
 
     #[test]

@@ -15,7 +15,10 @@ use std::time::{Duration, Instant};
 /// that many bytes without exceeding the configured aggregate rate.
 pub struct TokenBucket {
     state: Mutex<BucketState>,
-    rate_bps: f64,
+    /// Aggregate rate in bytes/s, stored as f64 bits so fault injection
+    /// can retune a live bucket ([`TokenBucket::set_rate_bps`]) without
+    /// taking the state lock.
+    rate_bits: AtomicU64,
     burst_bytes: f64,
     /// Total bytes admitted (metrics).
     total_bytes: AtomicU64,
@@ -39,7 +42,7 @@ impl TokenBucket {
                 tokens: burst_bytes,
                 last_refill: Instant::now(),
             }),
-            rate_bps,
+            rate_bits: AtomicU64::new(rate_bps.to_bits()),
             burst_bytes: burst_bytes.max(1.0),
             total_bytes: AtomicU64::new(0),
             total_wait_ns: AtomicU64::new(0),
@@ -47,7 +50,16 @@ impl TokenBucket {
     }
 
     pub fn rate_bps(&self) -> f64 {
-        self.rate_bps
+        f64::from_bits(self.rate_bits.load(Ordering::Relaxed))
+    }
+
+    /// Retune the aggregate rate on a live bucket (fault injection's
+    /// per-node disk-rate scaling). Takes effect on the next
+    /// [`TokenBucket::acquire`]; outstanding sleeps keep the rate they
+    /// were admitted under.
+    pub fn set_rate_bps(&self, rate_bps: f64) {
+        assert!(rate_bps > 0.0);
+        self.rate_bits.store(rate_bps.to_bits(), Ordering::Relaxed);
     }
 
     /// Block until `bytes` may pass. Fair enough for our purposes: callers
@@ -55,19 +67,21 @@ impl TokenBucket {
     pub fn acquire(&self, bytes: u64) {
         let need = bytes as f64;
         let start = Instant::now();
+        // One rate load per request: refill and debt sleep agree on the
+        // rate even if `set_rate_bps` races this acquire.
+        let rate = self.rate_bps();
         let wait: Option<Duration> = {
             let mut st = self.state.lock().unwrap();
             let now = Instant::now();
             let elapsed = now.duration_since(st.last_refill).as_secs_f64();
-            st.tokens =
-                (st.tokens + elapsed * self.rate_bps).min(self.burst_bytes);
+            st.tokens = (st.tokens + elapsed * rate).min(self.burst_bytes);
             st.last_refill = now;
             // Debt model: go negative and sleep until solvent. This keeps a
             // single lock acquisition per request (no wakeup herd) while the
             // *aggregate* admitted rate still converges to rate_bps.
             st.tokens -= need;
             if st.tokens < 0.0 {
-                Some(Duration::from_secs_f64(-st.tokens / self.rate_bps))
+                Some(Duration::from_secs_f64(-st.tokens / rate))
             } else {
                 None
             }
@@ -138,6 +152,18 @@ mod tests {
         // 1 MiB total at 8 MiB/s => >= ~100ms minus the initial burst.
         let elapsed = t0.elapsed().as_secs_f64();
         assert!(elapsed > 0.08, "finished too fast: {elapsed}s");
+    }
+
+    #[test]
+    fn rate_is_runtime_adjustable() {
+        let tb = TokenBucket::new(100.0 * 1024.0 * 1024.0, 1024.0);
+        assert_eq!(tb.rate_bps(), 100.0 * 1024.0 * 1024.0);
+        tb.set_rate_bps(1024.0 * 1024.0);
+        assert_eq!(tb.rate_bps(), 1024.0 * 1024.0);
+        // 128 KiB of debt at the retuned 1 MiB/s blocks ≈ 0.12s.
+        let t0 = Instant::now();
+        tb.acquire(128 * 1024);
+        assert!(t0.elapsed().as_secs_f64() > 0.05, "new rate not applied");
     }
 
     #[test]

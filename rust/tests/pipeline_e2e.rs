@@ -239,6 +239,75 @@ fn tiered_stack_serves_dram_overflow_from_disk_e2e() {
 }
 
 #[test]
+fn dead_owner_training_survives_and_meters_stalls() {
+    // DESIGN.md §11 acceptance: kill one of two learners' *serving* role
+    // (dead-owner mode — its fabric transfers error) and training must
+    // still complete, stay bit-synchronized, and fall back to storage
+    // for every sample the dead owner would have served; the stall
+    // meter must come back populated for every learner.
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        return;
+    }
+    let data = dataset("deadowner", 256);
+    let engine = Arc::new(Engine::load(&default_artifacts_dir()).unwrap());
+    let storage = Arc::new(StorageSystem::open(&data, None).unwrap());
+    let fabric = Arc::new(Fabric::new(FabricConfig {
+        real_time: false,
+        ..Default::default()
+    }));
+    let cfg = TrainerConfig {
+        p: 2,
+        epochs: 3,
+        local_batch: 16,
+        lr: 0.08,
+        sampler: SamplerKind::Loc,
+        loader: LoaderConfig { workers: 2, threads_per_worker: 2, prefetch_batches: 2 },
+        seed: 77,
+        cache_capacity_bytes: u64::MAX,
+        flip_prob: 0.5,
+        decode_s_per_kib: 0.0,
+        eval_samples: 0,
+        checkpoint_path: None,
+        fault_node: Some(1),
+        fault_dead: true,
+        // Exercise the mitigation monitor end to end: it sweeps the dead
+        // owner's claims and amends published plans off-critical-path.
+        rebalance_interval_s: 0.005,
+        ..Default::default()
+    };
+    let report =
+        Trainer::new(engine, storage, fabric, cfg).unwrap().run().unwrap();
+    // With p=2 every peer transfer touches the dead node, so the whole
+    // job must complete without a single remote hit — the robust fetch
+    // path re-routed every one of them to storage.
+    for e in &report.epochs {
+        assert_eq!(e.load.remote_hits, 0, "epoch {}", e.epoch);
+    }
+    for e in &report.epochs[1..] {
+        assert!(
+            e.load.storage_loads > 0,
+            "epoch {}: dead-owner fallback must read storage",
+            e.epoch
+        );
+        assert!(e.load.local_hits > 0, "epoch {}", e.epoch);
+    }
+    // Training still learned, in lockstep.
+    assert!(report.learners_in_sync());
+    let first = report.step_losses[0];
+    let last = *report.step_losses.last().unwrap();
+    assert!(last < first, "loss {first} -> {last}");
+    // The stall meter is populated per learner and decomposes cleanly.
+    assert_eq!(report.stalls.len(), 2);
+    for (j, s) in report.stalls.iter().enumerate() {
+        assert!(s.fetch_s >= 0.0 && s.prep_s >= 0.0, "learner {j}");
+        assert!(s.barrier_s >= 0.0, "learner {j}");
+    }
+    let total = report.stall_total();
+    assert!(total.total_s() > 0.0, "stall meter recorded nothing");
+    assert!(total.barrier_share() >= 0.0 && total.barrier_share() <= 1.0);
+}
+
+#[test]
 fn partial_cache_capacity_limits_alpha() {
     // §III-C "caching a partial subset": cap each learner's cache below
     // its full share; steady-state Loc epochs must keep reading the
