@@ -8,7 +8,8 @@
 use dlio::balance;
 use dlio::bench::{black_box, Bench};
 use dlio::cache::{CacheDirectory, CacheStack, Policy, SpillConfig};
-use dlio::fault::{FaultPlan, NodeFault};
+use dlio::coordinator::{GradSync, Membership};
+use dlio::fault::{FaultPlan, FaultTimeline, NodeFault};
 use dlio::loader::{
     BatchRequest, FetchContext, Loader, LoaderConfig, LoaderRuntime,
 };
@@ -21,6 +22,7 @@ use dlio::sampler::{
 use dlio::storage::{generate, ShardReader, StorageSystem, SyntheticSpec};
 use dlio::util::{Executor, Json, Queue, Rng};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn main() {
     let mut b = Bench::new();
@@ -472,6 +474,78 @@ fn main() {
         degradation < 1.5,
         "straggler mitigation failed: rebalanced epoch is {degradation:.2}x \
          the clean epoch (must stay < 1.5x)"
+    );
+
+    // --- Elastic recovery: MTTR under a node death --------------------------
+    // Engine-free replay of the membership-epoch protocol (DESIGN.md §12):
+    // three learners rendezvous through GradSync each step, a FaultTimeline
+    // kills node 2 at step 5, and the survivors run exactly what the
+    // trainer's barrier loop does — deadline miss, mark_dead, proxy-deposit
+    // the dead share, re-wait, note_recovered. The bench's figure of merit
+    // is mean-time-to-recovery in steps plus the wall-clock cost of the one
+    // detection stall (≈ the barrier deadline).
+    let mttr_sync = GradSync::new(3, Arc::clone(&fabric));
+    let mttr_membership = Membership::new(3);
+    let mttr_tl = FaultTimeline::new(0xD1E, 3).kill(2, 5);
+    let mttr_deadline = Some(Duration::from_millis(50));
+    let mttr_grad = vec![1.0f32; 256];
+    let mut recovery_wall_s = 0.0f64;
+    for step in 0..8u64 {
+        let gen = mttr_sync.deposit(0, mttr_grad.clone());
+        mttr_sync.deposit(1, mttr_grad.clone());
+        if !mttr_tl.is_dead_at(2, step) {
+            mttr_sync.deposit(2, mttr_grad.clone());
+        } else if mttr_membership.any_dead() {
+            // Steps after detection: the adopter proxies the dead share
+            // proactively, so the rendezvous never stalls again.
+            assert!(mttr_sync.try_deposit_for(2, mttr_grad.clone(), gen));
+        }
+        let t0 = Instant::now();
+        let mut missed = false;
+        loop {
+            match mttr_sync.wait_generation(gen, 0, mttr_deadline) {
+                Ok(reduced) => {
+                    black_box(reduced);
+                    break;
+                }
+                Err(stall) => {
+                    missed = true;
+                    mttr_membership.record_deadline_miss();
+                    mttr_membership.mark_dead(2, step);
+                    assert!(
+                        mttr_sync.try_deposit_for(2, mttr_grad.clone(), gen),
+                        "adoption proxy-deposit rejected after {stall}"
+                    );
+                }
+            }
+        }
+        if missed {
+            recovery_wall_s = t0.elapsed().as_secs_f64();
+            mttr_membership.note_recovered(step);
+        }
+        mttr_sync.wait_generation(gen, 1, mttr_deadline).unwrap();
+    }
+    let recovery = mttr_membership.snapshot();
+    b.record("fault/mttr", recovery.mttr_steps as f64, "steps");
+    b.record("fault/mttr_recovery_s", recovery_wall_s, "s");
+    b.record(
+        "fault/mttr_deadline_misses",
+        recovery.deadline_misses as f64,
+        "misses",
+    );
+    // In-binary regression guard (CI reruns it): detection + adoption must
+    // finish inside the step that missed the deadline — MTTR of one step,
+    // from a single miss, at a wall cost of roughly one barrier deadline.
+    assert_eq!(
+        recovery.mttr_steps, 1,
+        "recovery took {} steps (must detect + adopt within the miss step)",
+        recovery.mttr_steps
+    );
+    assert_eq!(recovery.deadline_misses, 1, "proactive adoption regressed");
+    assert!(
+        recovery_wall_s < 1.0,
+        "detection stall {recovery_wall_s:.3}s blew past the 50ms deadline \
+         by over an order of magnitude"
     );
 
     // --- Cache-hot steady-state loader -------------------------------------

@@ -252,6 +252,46 @@ impl CacheDirectory {
     pub fn alpha_disk(&self) -> f64 {
         self.tier_counts().1 as f64 / self.owner.len().max(1) as f64
     }
+
+    /// Raw owner words (tier bits included, `u32::MAX` = unowned), one per
+    /// sample — the checkpointable wire form. Per-entry relaxed loads;
+    /// take it at a quiescent point (epoch boundary) for an exact image.
+    pub fn snapshot_raw(&self) -> Vec<u32> {
+        self.owner.iter().map(|o| o.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Rebuild a directory from [`snapshot_raw`] output — step-granular
+    /// resume restores ownership so post-restart plans route identically
+    /// to the checkpointed run. The cached count is recomputed from the
+    /// words.
+    ///
+    /// [`snapshot_raw`]: CacheDirectory::snapshot_raw
+    pub fn from_raw(words: &[u32]) -> Self {
+        let cached = words.iter().filter(|&&w| w != NONE).count() as u64;
+        CacheDirectory {
+            owner: words.iter().map(|&w| AtomicU32::new(w)).collect(),
+            cached: AtomicU64::new(cached),
+        }
+    }
+
+    /// Overwrite this directory in place from [`snapshot_raw`] words (the
+    /// resume path, where the directory `Arc` is already shared with
+    /// loaders and must keep its identity). Lengths must match.
+    ///
+    /// [`snapshot_raw`]: CacheDirectory::snapshot_raw
+    pub fn restore_raw(&self, words: &[u32]) {
+        assert_eq!(
+            words.len(),
+            self.owner.len(),
+            "directory snapshot length mismatch"
+        );
+        let mut cached = 0u64;
+        for (cell, &w) in self.owner.iter().zip(words) {
+            cell.store(w, Ordering::Relaxed);
+            cached += u64::from(w != NONE);
+        }
+        self.cached.store(cached, Ordering::Relaxed);
+    }
 }
 
 #[cfg(test)]
@@ -453,6 +493,37 @@ mod tests {
         dir.set_owner(0, 3);
         assert_eq!(snap.owner(0), Some(0));
         assert_eq!(snap.cached_samples(), 16);
+    }
+
+    #[test]
+    fn raw_snapshot_round_trips_owners_tiers_and_counts() {
+        let dir = CacheDirectory::striped(64, 4);
+        dir.set_owner_tier(5, 2, Tier::Disk);
+        dir.clear_owner_if(6, 2);
+        let words = dir.snapshot_raw();
+        assert_eq!(words.len(), 64);
+
+        let rebuilt = CacheDirectory::from_raw(&words);
+        assert_eq!(rebuilt.cached_samples(), dir.cached_samples());
+        assert_eq!(rebuilt.tier_counts(), dir.tier_counts());
+        for s in 0..64u32 {
+            assert_eq!(rebuilt.owner_tier(s), dir.owner_tier(s));
+        }
+
+        // In-place restore over a diverged directory converges too.
+        let live = CacheDirectory::new(64);
+        live.set_owner(0, 3);
+        live.restore_raw(&words);
+        assert_eq!(live.cached_samples(), dir.cached_samples());
+        assert_eq!(live.owner_tier(5), Some((2, Tier::Disk)));
+        assert_eq!(live.owner(6), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn restore_raw_rejects_wrong_length() {
+        let dir = CacheDirectory::new(8);
+        dir.restore_raw(&[0u32; 4]);
     }
 
     #[test]

@@ -207,6 +207,18 @@ impl SampleCache {
         self.lock_shard(id).map.contains_key(&id)
     }
 
+    /// Drop every resident sample (the cold-cache rejoin path). Hit/miss
+    /// and lock counters are lifetime accounting and are kept.
+    pub fn clear(&self) {
+        for shard in self.shards.iter() {
+            let mut shard = shard.lock().unwrap();
+            shard.map.clear();
+            shard.fifo.clear();
+        }
+        self.bytes.store(0, Ordering::Relaxed);
+        self.entries.store(0, Ordering::Relaxed);
+    }
+
     pub fn len(&self) -> usize {
         self.entries.load(Ordering::Relaxed) as usize
     }

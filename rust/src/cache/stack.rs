@@ -209,6 +209,19 @@ impl DiskTier {
         Arc::new(Sample { id, bytes, label: slot.label })
     }
 
+    /// Drop every slot and rewind the reservation cursor so the segment
+    /// can be refilled. UNSAFE TO CALL with disk-hit views outstanding —
+    /// new writes would land under their mapped spans; the rejoin path
+    /// only clears after the node's loader has shut down.
+    fn clear(&self) {
+        for shard in self.shards.iter() {
+            shard.lock().unwrap().clear();
+        }
+        self.entries.store(0, Ordering::Relaxed);
+        self.committed_bytes.store(0, Ordering::Relaxed);
+        self.cursor.store(0, Ordering::Relaxed);
+    }
+
     pub fn entries(&self) -> u64 {
         self.entries.load(Ordering::Relaxed)
     }
@@ -513,6 +526,22 @@ impl CacheStack {
         }
     }
 
+    /// Empty both tiers — the cold-cache rejoin (DESIGN.md §12): a node
+    /// revived after a death window must not serve payloads cached before
+    /// it died (its directory claims were swept at detection, so nothing
+    /// routes to them; the data itself is re-fetched on demand). Queued
+    /// spills are drained first so no write-behind commit resurrects an
+    /// entry after the wipe. Lifetime hit/miss/spill counters are kept.
+    /// Callers must ensure the node's loader is shut down (no outstanding
+    /// disk-hit views) before clearing a disk-tiered stack.
+    pub fn clear(&self) {
+        self.drain_spills();
+        self.mem.clear();
+        if let Some(d) = &self.disk {
+            d.clear();
+        }
+    }
+
     /// Tier accounting for `BENCH_hotpath.json` / `TrainingReport.tiers`.
     pub fn tier_snapshot(&self) -> TierSnapshot {
         let (disk_entries, disk_bytes, disk_capacity) = match &self.disk {
@@ -599,6 +628,29 @@ mod tests {
         // The disk hit is an mmap view of the segment: zero payload copies.
         assert!(c.get(3).unwrap().bytes.is_zero_copy());
         assert_eq!(c.tier_snapshot().disk_hit_copied_bytes, 0);
+    }
+
+    #[test]
+    fn clear_empties_both_tiers_and_allows_refill() {
+        let c = stack("clear", 250, 10_000);
+        assert!(c.insert(sample(1, 100)));
+        assert!(c.insert(sample(2, 100)));
+        assert!(c.insert(sample(3, 100))); // spills
+        c.clear();
+        assert_eq!(c.mem().len(), 0);
+        assert_eq!(c.mem().bytes(), 0);
+        assert_eq!(c.disk().unwrap().entries(), 0);
+        assert_eq!(c.disk().unwrap().bytes(), 0);
+        for id in 1..=3u32 {
+            assert!(!c.contains(id), "cold cache still held {id}");
+        }
+        // The segment cursor rewound: a fresh fill fits and reads back.
+        assert!(c.insert(sample(7, 200)));
+        assert!(c.insert(sample(8, 200)));
+        assert!(c.insert(sample(9, 200)));
+        assert_eq!(c.get(9).unwrap().bytes, vec![(9 % 251) as u8; 200]);
+        // Lifetime spill accounting survives the wipe.
+        assert!(c.tier_snapshot().spilled_inline >= 1);
     }
 
     #[test]

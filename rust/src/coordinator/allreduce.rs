@@ -12,16 +12,37 @@
 //! surfaced as the `barrier_s` component of
 //! [`crate::metrics::StallSnapshot`] (DESIGN.md §11).
 
+use crate::fault::{StallError, StallKind};
 use crate::net::Fabric;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 struct State {
     generation: u64,
     slots: Vec<Option<Vec<f32>>>,
-    arrived: usize,
+    /// Membership mask: a generation completes when every ACTIVE slot is
+    /// filled. Inactive (dead) slots don't gate the rendezvous, but a
+    /// proxy deposit into one (a survivor adopting the dead learner's
+    /// share) still joins the reduction — that's what keeps the global
+    /// gradient bit-identical to the no-death run.
+    active: Vec<bool>,
     result: Option<Arc<Vec<f32>>>,
+}
+
+impl State {
+    fn filled(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    fn ready(&self) -> bool {
+        self.filled() > 0
+            && self
+                .slots
+                .iter()
+                .zip(&self.active)
+                .all(|(slot, &active)| !active || slot.is_some())
+    }
 }
 
 /// Reusable p-way gradient combiner.
@@ -43,7 +64,7 @@ impl GradSync {
             state: Mutex::new(State {
                 generation: 0,
                 slots: vec![None; p],
-                arrived: 0,
+                active: vec![true; p],
                 result: None,
             }),
             cv: Condvar::new(),
@@ -67,48 +88,157 @@ impl GradSync {
     /// Deposit `grad` for `learner`; block until every learner of this
     /// step has arrived; return the averaged global gradient.
     pub fn sync(&self, learner: usize, grad: Vec<f32>) -> Arc<Vec<f32>> {
+        let gen = self.deposit(learner, grad);
+        self.wait_generation(gen, learner, None)
+            .expect("indefinite rendezvous wait cannot miss")
+    }
+
+    /// Deposit `grad` into `learner`'s slot for the current generation;
+    /// the last needed arrival performs the reduction. Returns the
+    /// generation deposited into — pass it to [`wait_generation`] to
+    /// collect the result. Split from the wait so a survivor can deposit
+    /// its own gradient, then *additionally* proxy-deposit an adopted
+    /// dead peer's share before waiting (the membership-epoch recovery
+    /// path, DESIGN.md §12).
+    ///
+    /// [`wait_generation`]: GradSync::wait_generation
+    pub fn deposit(&self, learner: usize, grad: Vec<f32>) -> u64 {
         let mut st = self.state.lock().unwrap();
         let my_gen = st.generation;
         assert!(st.slots[learner].is_none(), "learner {learner} double-sync");
         st.slots[learner] = Some(grad);
-        st.arrived += 1;
+        self.maybe_reduce(&mut st);
+        my_gen
+    }
 
-        if st.arrived == self.p {
-            // Last arrival performs the reduction in deterministic order.
-            let n = st.slots[0].as_ref().unwrap().len();
-            let mut acc = vec![0.0f32; n];
-            for slot in st.slots.iter_mut() {
-                let g = slot.take().expect("missing gradient slot");
-                assert_eq!(g.len(), n, "gradient length mismatch");
-                for (a, x) in acc.iter_mut().zip(&g) {
-                    *a += x;
-                }
-            }
-            let inv = 1.0 / self.p as f32;
-            for a in acc.iter_mut() {
-                *a *= inv;
-            }
-            // Charge the modeled collective cost (once per step).
-            let cost = self.fabric.allreduce_cost((n * 4) as u64, self.p);
-            if self.fabric.config().real_time {
-                std::thread::sleep(cost);
-            }
-            st.result = Some(Arc::new(acc));
-            st.generation += 1;
-            st.arrived = 0;
-            self.cv.notify_all();
-            return Arc::clone(st.result.as_ref().unwrap());
+    /// Proxy deposit: fill `learner`'s slot for generation `gen` iff that
+    /// generation is still open and the slot is still empty (false
+    /// otherwise — e.g. the generation already completed over the
+    /// survivor set, or another adopter won the race). Used by the
+    /// membership layer's adopter to contribute a dead peer's share.
+    pub fn try_deposit_for(
+        &self,
+        learner: usize,
+        grad: Vec<f32>,
+        gen: u64,
+    ) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.generation != gen || st.slots[learner].is_some() {
+            return false;
         }
+        st.slots[learner] = Some(grad);
+        self.maybe_reduce(&mut st);
+        true
+    }
 
-        // Wait for this generation to complete; time blocked here is the
-        // learner's barrier-wait (straggler) stall.
+    /// Whether `learner`'s slot for generation `gen` is still empty (the
+    /// adopter's "does the dead peer still owe this step?" query).
+    pub fn slot_missing(&self, gen: u64, learner: usize) -> bool {
+        let st = self.state.lock().unwrap();
+        st.generation == gen && st.slots[learner].is_none()
+    }
+
+    /// Remove `learner` from the rendezvous: generations no longer wait
+    /// for its deposit (GradSync reduces over the survivor set). If its
+    /// absence was the only thing holding the current generation open,
+    /// the reduction fires immediately. Idempotent.
+    pub fn deactivate(&self, learner: usize) {
+        let mut st = self.state.lock().unwrap();
+        if !st.active[learner] {
+            return;
+        }
+        st.active[learner] = false;
+        self.maybe_reduce(&mut st);
+    }
+
+    /// Readmit `learner` (a revived node rejoining at an epoch
+    /// boundary): from the next generation on, the rendezvous waits for
+    /// its deposit again. Idempotent.
+    pub fn reactivate(&self, learner: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.active[learner] = true;
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.state.lock().unwrap().active.iter().filter(|&&a| a).count()
+    }
+
+    /// Wait for generation `gen` to complete and return its reduced
+    /// gradient, blocking at most `deadline` (None = forever). A miss
+    /// returns a typed [`StallError`] and leaves the learner's deposit in
+    /// place, so the caller can run membership recovery (mark dead peers,
+    /// proxy-deposit their shares) and wait again for the same
+    /// generation. Time blocked here is the learner's barrier-wait
+    /// (straggler) stall.
+    pub fn wait_generation(
+        &self,
+        gen: u64,
+        learner: usize,
+        deadline: Option<Duration>,
+    ) -> Result<Arc<Vec<f32>>, StallError> {
+        let mut st = self.state.lock().unwrap();
         let t0 = Instant::now();
-        while st.generation == my_gen {
-            st = self.cv.wait(st).unwrap();
+        while st.generation <= gen {
+            st = match deadline {
+                None => self.cv.wait(st).unwrap(),
+                Some(budget) => {
+                    let waited = t0.elapsed();
+                    if waited >= budget {
+                        self.blocked_ns[learner].fetch_add(
+                            waited.as_nanos() as u64,
+                            Ordering::Relaxed,
+                        );
+                        return Err(StallError {
+                            kind: StallKind::Barrier,
+                            waited,
+                            deadline: budget,
+                        });
+                    }
+                    self.cv.wait_timeout(st, budget - waited).unwrap().0
+                }
+            };
         }
         self.blocked_ns[learner]
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        Arc::clone(st.result.as_ref().expect("result published"))
+        Ok(Arc::clone(st.result.as_ref().expect("result published")))
+    }
+
+    /// Reduce and publish if every active slot is filled. The reduction
+    /// runs in fixed slot order 0..p and divides by the number of FILLED
+    /// slots: a full rendezvous (p deposits, possibly including proxies
+    /// for dead peers) reproduces the healthy mean bit-for-bit, while a
+    /// survivor-set rendezvous (dead slot empty and inactive) averages
+    /// over the survivors.
+    fn maybe_reduce(&self, st: &mut State) {
+        if !st.ready() {
+            return;
+        }
+        let filled = st.filled();
+        let n = st
+            .slots
+            .iter()
+            .find_map(|s| s.as_ref().map(|g| g.len()))
+            .expect("at least one deposit");
+        let mut acc = vec![0.0f32; n];
+        for slot in st.slots.iter_mut() {
+            let Some(g) = slot.take() else { continue };
+            assert_eq!(g.len(), n, "gradient length mismatch");
+            for (a, x) in acc.iter_mut().zip(&g) {
+                *a += x;
+            }
+        }
+        let inv = 1.0 / filled as f32;
+        for a in acc.iter_mut() {
+            *a *= inv;
+        }
+        // Charge the modeled collective cost (once per step).
+        let cost = self.fabric.allreduce_cost((n * 4) as u64, self.p);
+        if self.fabric.config().real_time {
+            std::thread::sleep(cost);
+        }
+        st.result = Some(Arc::new(acc));
+        st.generation += 1;
+        self.cv.notify_all();
     }
 }
 
@@ -187,6 +317,92 @@ mod tests {
             "last arrival barely blocks: {}",
             s.blocked_s(1)
         );
+    }
+
+    #[test]
+    fn deadline_miss_then_proxy_deposit_recovers_the_step() {
+        let s = sync_of(3);
+        // Learners 0 and 1 deposit; learner 2 is dead and never arrives.
+        let g0 = s.deposit(0, vec![3.0, 3.0]);
+        let g1 = s.deposit(1, vec![6.0, 6.0]);
+        assert_eq!(g0, g1);
+        let err = s
+            .wait_generation(g0, 0, Some(Duration::from_millis(30)))
+            .unwrap_err();
+        assert_eq!(err.kind, StallKind::Barrier);
+        assert!(s.blocked_s(0) > 0.0);
+        // Recovery: learner 0 adopts learner 2's share and proxies it in.
+        assert!(s.slot_missing(g0, 2));
+        assert!(s.try_deposit_for(2, vec![0.0, 0.0], g0));
+        // The generation completes over all 3 slots: mean(3,6,0) = 3.
+        let out = s.wait_generation(g0, 0, Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(*out, vec![3.0, 3.0]);
+        let out1 = s.wait_generation(g1, 1, None).unwrap();
+        assert_eq!(*out1, vec![3.0, 3.0]);
+        // A late proxy for a completed generation is refused.
+        assert!(!s.try_deposit_for(2, vec![9.0, 9.0], g0));
+        assert!(!s.slot_missing(g0, 2));
+    }
+
+    #[test]
+    fn deactivation_reduces_over_the_survivor_set() {
+        let s = sync_of(3);
+        let gen = s.deposit(0, vec![2.0]);
+        s.deposit(1, vec![4.0]);
+        // No adopter available: drop the dead peer from the rendezvous.
+        // Its absence was the only gate, so the reduction fires at once,
+        // averaging over the two survivors: mean(2,4) = 3.
+        s.deactivate(2);
+        assert_eq!(s.active_count(), 2);
+        let out = s.wait_generation(gen, 0, None).unwrap();
+        assert_eq!(*out, vec![3.0]);
+        // Next generation only waits for the survivors.
+        let gen2 = s.deposit(0, vec![10.0]);
+        let h = {
+            let s = Arc::clone(&s);
+            std::thread::spawn(move || s.sync(1, vec![20.0]))
+        };
+        assert_eq!(*h.join().unwrap(), vec![15.0]);
+        let out2 = s.wait_generation(gen2, 0, None).unwrap();
+        assert_eq!(*out2, vec![15.0]);
+        // Reactivation restores the full-p rendezvous for later steps.
+        s.reactivate(2);
+        assert_eq!(s.active_count(), 3);
+        let gen3 = s.deposit(0, vec![1.0]);
+        s.deposit(1, vec![2.0]);
+        assert!(s
+            .wait_generation(gen3, 0, Some(Duration::from_millis(20)))
+            .is_err());
+        s.deposit(2, vec![3.0]);
+        assert_eq!(*s.wait_generation(gen3, 0, None).unwrap(), vec![2.0]);
+    }
+
+    #[test]
+    fn proxy_deposit_matches_healthy_reduction_bits() {
+        // The adoption guarantee: a step where a survivor proxies the
+        // dead learner's exact gradient reduces to the same bits as the
+        // healthy step.
+        let grads = [
+            vec![0.1f32, 1e8, -1e8],
+            vec![0.2, -1e8, 1e8],
+            vec![0.3, 1.0, 2.0],
+        ];
+        let healthy = {
+            let s = sync_of(3);
+            let gen = s.deposit(0, grads[0].clone());
+            s.deposit(1, grads[1].clone());
+            s.deposit(2, grads[2].clone());
+            (*s.wait_generation(gen, 0, None).unwrap()).clone()
+        };
+        let adopted = {
+            let s = sync_of(3);
+            let gen = s.deposit(0, grads[0].clone());
+            s.deposit(1, grads[1].clone());
+            // Learner 2 is dead; learner 0 proxies its exact share.
+            assert!(s.try_deposit_for(2, grads[2].clone(), gen));
+            (*s.wait_generation(gen, 0, None).unwrap()).clone()
+        };
+        assert_eq!(healthy, adopted, "adoption must be bit-transparent");
     }
 
     #[test]

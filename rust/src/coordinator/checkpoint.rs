@@ -1,28 +1,47 @@
-//! Model checkpointing: persist/restore the parameter set so training
-//! jobs survive restarts — table-stakes for a framework the paper's users
+//! Model checkpointing: persist/restore the training state so jobs
+//! survive restarts — table-stakes for a framework the paper's users
 //! would deploy (the paper trains 90-epoch ImageNet jobs).
+//!
+//! v2 extends the v1 parameter dump into a *step-granular resume* image
+//! (DESIGN.md §12): sampler position (epoch, step), membership epoch,
+//! and the cache-directory owner words, so a restarted job replays the
+//! exact plans the checkpointed run would have seen.
 //!
 //! Format (little-endian):
 //! ```text
-//! [0..8)   magic "DLCKPT01"
-//! [8..16)  epoch u64
-//! [16..24) step  u64
-//! [24..28) n_tensors u32
+//! [0..8)   magic "DLCKPT02"
+//! [8..16)  epoch u64            (next epoch to run, or epoch of `step`)
+//! [16..24) step  u64            (global step; steps below it are done)
+//! [24..32) membership_epoch u64
+//! [32..40) n_dir u64
+//! then n_dir raw directory owner words (u32 each, u32::MAX = unowned)
+//! then n_tensors u32
 //! then per tensor: ndims u32 | dims u64... | payload f32...
 //! ```
+//!
+//! `load` recognizes the magic prefix `DLCKPT` and dispatches on the
+//! version digits, so a v1 file fails with "unsupported checkpoint
+//! version 01", not "not a checkpoint".
 
 use crate::runtime::HostTensor;
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"DLCKPT01";
+const MAGIC_PREFIX: &[u8; 6] = b"DLCKPT";
+const VERSION: &[u8; 2] = b"02";
 
 /// A saved training state.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
     pub epoch: u64,
     pub step: u64,
+    /// Membership epoch at save time (0 when no deaths/revivals).
+    pub membership_epoch: u64,
+    /// Raw cache-directory owner words
+    /// ([`crate::cache::CacheDirectory::snapshot_raw`]); empty when the
+    /// run's scheme doesn't use a directory.
+    pub directory: Vec<u32>,
     pub params: Vec<HostTensor>,
 }
 
@@ -35,9 +54,15 @@ impl Checkpoint {
                 std::fs::File::create(&tmp)
                     .with_context(|| format!("create {}", tmp.display()))?,
             );
-            f.write_all(MAGIC)?;
+            f.write_all(MAGIC_PREFIX)?;
+            f.write_all(VERSION)?;
             f.write_all(&self.epoch.to_le_bytes())?;
             f.write_all(&self.step.to_le_bytes())?;
+            f.write_all(&self.membership_epoch.to_le_bytes())?;
+            f.write_all(&(self.directory.len() as u64).to_le_bytes())?;
+            for &w in &self.directory {
+                f.write_all(&w.to_le_bytes())?;
+            }
             f.write_all(&(self.params.len() as u32).to_le_bytes())?;
             for t in &self.params {
                 f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
@@ -59,39 +84,71 @@ impl Checkpoint {
                 .with_context(|| format!("open {}", path.display()))?,
         );
         let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
+        f.read_exact(&mut magic)
+            .with_context(|| format!("{}: truncated header", path.display()))?;
+        if &magic[..6] != MAGIC_PREFIX {
             bail!("{}: not a dlio checkpoint", path.display());
         }
+        if &magic[6..] != VERSION {
+            bail!(
+                "{}: unsupported checkpoint version {}",
+                path.display(),
+                String::from_utf8_lossy(&magic[6..]),
+            );
+        }
         let mut u64buf = [0u8; 8];
-        f.read_exact(&mut u64buf)?;
-        let epoch = u64::from_le_bytes(u64buf);
-        f.read_exact(&mut u64buf)?;
-        let step = u64::from_le_bytes(u64buf);
+        let mut read_u64 = |f: &mut dyn Read, what: &str| -> Result<u64> {
+            f.read_exact(&mut u64buf)
+                .with_context(|| format!("truncated checkpoint: {what}"))?;
+            Ok(u64::from_le_bytes(u64buf))
+        };
+        let epoch = read_u64(&mut f, "epoch")?;
+        let step = read_u64(&mut f, "step")?;
+        let membership_epoch = read_u64(&mut f, "membership epoch")?;
+        let n_dir = read_u64(&mut f, "directory length")?;
+        ensure!(n_dir <= u32::MAX as u64, "unreasonable directory size {n_dir}");
+        let mut dir_raw = vec![0u8; n_dir as usize * 4];
+        f.read_exact(&mut dir_raw).with_context(|| {
+            format!("truncated checkpoint: directory ({n_dir} entries)")
+        })?;
+        let directory: Vec<u32> = dir_raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
         let mut u32buf = [0u8; 4];
-        f.read_exact(&mut u32buf)?;
+        f.read_exact(&mut u32buf)
+            .context("truncated checkpoint: tensor count")?;
         let n = u32::from_le_bytes(u32buf);
         ensure!(n <= 4096, "unreasonable tensor count {n}");
         let mut params = Vec::with_capacity(n as usize);
-        for _ in 0..n {
-            f.read_exact(&mut u32buf)?;
+        for i in 0..n {
+            f.read_exact(&mut u32buf)
+                .with_context(|| format!("truncated checkpoint: tensor {i}"))?;
             let ndims = u32::from_le_bytes(u32buf) as usize;
             ensure!(ndims <= 8, "unreasonable rank {ndims}");
             let mut shape = Vec::with_capacity(ndims);
             for _ in 0..ndims {
-                f.read_exact(&mut u64buf)?;
-                shape.push(u64::from_le_bytes(u64buf) as usize);
+                let d = {
+                    let mut b = [0u8; 8];
+                    f.read_exact(&mut b).with_context(|| {
+                        format!("truncated checkpoint: tensor {i} shape")
+                    })?;
+                    u64::from_le_bytes(b)
+                };
+                shape.push(d as usize);
             }
             let count: usize = shape.iter().product();
             let mut raw = vec![0u8; count * 4];
-            f.read_exact(&mut raw)?;
+            f.read_exact(&mut raw).with_context(|| {
+                format!("truncated checkpoint: tensor {i} payload")
+            })?;
             let data: Vec<f32> = raw
                 .chunks_exact(4)
                 .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                 .collect();
             params.push(HostTensor::f32(shape, data));
         }
-        Ok(Checkpoint { epoch, step, params })
+        Ok(Checkpoint { epoch, step, membership_epoch, directory, params })
     }
 }
 
@@ -107,11 +164,21 @@ mod tests {
         ]
     }
 
+    fn ckpt() -> Checkpoint {
+        Checkpoint {
+            epoch: 7,
+            step: 123,
+            membership_epoch: 3,
+            directory: vec![0, 1, u32::MAX, (1 << 30) | 2, 0],
+            params: tensors(),
+        }
+    }
+
     #[test]
     fn roundtrip_exact() {
         let path = std::env::temp_dir()
             .join(format!("dlio-ckpt-{}.bin", std::process::id()));
-        let ck = Checkpoint { epoch: 7, step: 123, params: tensors() };
+        let ck = ckpt();
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back, ck);
@@ -123,15 +190,61 @@ mod tests {
         let path = std::env::temp_dir()
             .join(format!("dlio-ckpt-bad-{}.bin", std::process::id()));
         std::fs::write(&path, b"NOTACKPT________").unwrap();
-        assert!(Checkpoint::load(&path).is_err());
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("not a dlio checkpoint"), "{err}");
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_old_version_with_a_version_error() {
+        let path = std::env::temp_dir()
+            .join(format!("dlio-ckpt-v1-{}.bin", std::process::id()));
+        // A v1 header: valid prefix, old version digits, arbitrary body.
+        let mut bytes = b"DLCKPT01".to_vec();
+        bytes.extend_from_slice(&[0u8; 20]);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(
+            err.contains("unsupported checkpoint version 01"),
+            "v1 must fail as a version mismatch, got: {err}"
+        );
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_truncation_at_every_boundary() {
+        let path = std::env::temp_dir()
+            .join(format!("dlio-ckpt-trunc-{}.bin", std::process::id()));
+        let cut = std::env::temp_dir()
+            .join(format!("dlio-ckpt-cut-{}.bin", std::process::id()));
+        ckpt().save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // Chop at the header, inside the directory, at the tensor table,
+        // and mid-payload: every cut must fail cleanly, never panic.
+        for &len in &[4usize, 8, 20, 40, 48, 60, full.len() - 3] {
+            assert!(len < full.len(), "cut {len} is not a truncation");
+            std::fs::write(&cut, &full[..len]).unwrap();
+            let err = Checkpoint::load(&cut).unwrap_err().to_string();
+            assert!(
+                err.contains("truncated"),
+                "cut at {len} gave unexpected error: {err}"
+            );
+        }
+        std::fs::remove_file(&path).unwrap();
+        std::fs::remove_file(&cut).unwrap();
     }
 
     #[test]
     fn save_is_atomic_no_tmp_left() {
         let path = std::env::temp_dir()
             .join(format!("dlio-ckpt-atomic-{}.bin", std::process::id()));
-        let ck = Checkpoint { epoch: 0, step: 0, params: tensors() };
+        let ck = Checkpoint {
+            epoch: 0,
+            step: 0,
+            membership_epoch: 0,
+            directory: Vec::new(),
+            params: tensors(),
+        };
         ck.save(&path).unwrap();
         assert!(!path.with_extension("tmp").exists());
         assert!(path.exists());

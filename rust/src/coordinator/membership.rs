@@ -1,0 +1,243 @@
+//! Membership epochs: who is in the job *right now*, and who speaks for
+//! the dead (DESIGN.md §12).
+//!
+//! PR 6 made *degraded* nodes survivable; this layer handles nodes that
+//! die outright. Detection is a deadline miss on a critical-path wait
+//! (the [`crate::fault::StallError`] surfaced by the GradSync barrier or
+//! a transfer); the detecting survivor consults the fault timeline,
+//! transitions the peer to dead here — exactly one caller wins the
+//! transition — and the winner runs the reconciliation sweep: bump the
+//! membership epoch, evict the dead node's directory claims, amend the
+//! planner's weights, and install an *adopter*.
+//!
+//! The adopter (lowest-id survivor) reproduces the dead learner's share
+//! for every remaining step of the epoch — possible because the batch
+//! partition and the augmentation flips are pure functions of
+//! `(seed, epoch, sample)`, never of the learner — and proxy-deposits
+//! the resulting gradient into the dead slot, so the reduction stays a
+//! full-p mean, bit-identical to the no-death run. A revived node
+//! rejoins only at the next epoch boundary ([`Membership::mark_alive`]),
+//! with a cold cache and parameters resynced from a survivor.
+
+use crate::metrics::RecoverySnapshot;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+struct Inner {
+    epoch: u64,
+    alive: Vec<bool>,
+    /// `adopter[k] = Some(j)`: survivor `j` carries dead learner `k`'s
+    /// share until `k` rejoins.
+    adopter: Vec<Option<usize>>,
+    deaths: u64,
+    revivals: u64,
+    /// Step at which the most recent un-recovered death was detected.
+    detect_step: Option<u64>,
+    /// Max steps from deadline-miss detection to the first
+    /// post-reconciliation step, over all recovery events.
+    mttr_steps_max: u64,
+}
+
+/// Shared membership view for one training job.
+pub struct Membership {
+    p: usize,
+    state: Mutex<Inner>,
+    deadline_misses: AtomicU64,
+}
+
+impl Membership {
+    pub fn new(p: usize) -> Membership {
+        assert!(p > 0, "membership needs at least one node");
+        Membership {
+            p,
+            state: Mutex::new(Inner {
+                epoch: 0,
+                alive: vec![true; p],
+                adopter: vec![None; p],
+                deaths: 0,
+                revivals: 0,
+                detect_step: None,
+                mttr_steps_max: 0,
+            }),
+            deadline_misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Current membership epoch (bumped on every death and revival).
+    pub fn epoch(&self) -> u64 {
+        self.state.lock().unwrap().epoch
+    }
+
+    /// Restore a persisted membership epoch on resume (monotonic: the
+    /// counter never moves backwards across a kill/restart).
+    pub fn restore_epoch(&self, epoch: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.epoch = st.epoch.max(epoch);
+    }
+
+    pub fn alive(&self, node: usize) -> bool {
+        self.state.lock().unwrap().alive[node]
+    }
+
+    pub fn n_alive(&self) -> usize {
+        self.state.lock().unwrap().alive.iter().filter(|&&a| a).count()
+    }
+
+    pub fn any_dead(&self) -> bool {
+        self.state.lock().unwrap().alive.iter().any(|&a| !a)
+    }
+
+    /// Transition `node` to dead, detected at global step `step`. Exactly
+    /// one caller wins (`true`): racing survivors that also timed out get
+    /// `false` and skip the reconciliation sweep. The winner's side
+    /// effects here: membership epoch bump, adopter assignment (lowest-id
+    /// survivor), MTTR clock start.
+    pub fn mark_dead(&self, node: usize, step: u64) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if !st.alive[node] {
+            return false;
+        }
+        st.alive[node] = false;
+        st.epoch += 1;
+        st.deaths += 1;
+        let adopter = st.alive.iter().position(|&a| a);
+        st.adopter[node] = adopter;
+        if st.detect_step.is_none() {
+            st.detect_step = Some(step);
+        }
+        true
+    }
+
+    /// Readmit `node` (epoch-boundary rejoin). Returns true iff it was
+    /// dead. Clears its adoption and bumps the membership epoch; the
+    /// caller owns the cold-cache/param-resync side of the rejoin.
+    pub fn mark_alive(&self, node: usize) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.alive[node] {
+            return false;
+        }
+        st.alive[node] = true;
+        st.epoch += 1;
+        st.revivals += 1;
+        st.adopter[node] = None;
+        true
+    }
+
+    /// Dead learners whose share survivor `j` currently carries.
+    pub fn adoptions_for(&self, j: usize) -> Vec<usize> {
+        let st = self.state.lock().unwrap();
+        (0..self.p)
+            .filter(|&k| !st.alive[k] && st.adopter[k] == Some(j))
+            .collect()
+    }
+
+    /// Lowest-id live node (the job's coordinator-of-record for
+    /// epoch-boundary duties like publishing the param beacon).
+    pub fn lowest_alive(&self) -> Option<usize> {
+        self.state.lock().unwrap().alive.iter().position(|&a| a)
+    }
+
+    /// Count a deadline miss observed on the critical path (detection
+    /// signal accounting; the miss itself is recovered, not fatal).
+    pub fn record_deadline_miss(&self) {
+        self.deadline_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The first step to complete after a reconciliation closes the MTTR
+    /// clock opened by [`mark_dead`]: steps-to-recover is
+    /// `step - detect_step + 1` (1 = the detecting step itself completed
+    /// after recovery).
+    ///
+    /// [`mark_dead`]: Membership::mark_dead
+    pub fn note_recovered(&self, step: u64) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(detect) = st.detect_step.take() {
+            let steps = step.saturating_sub(detect) + 1;
+            st.mttr_steps_max = st.mttr_steps_max.max(steps);
+        }
+    }
+
+    pub fn snapshot(&self) -> RecoverySnapshot {
+        let st = self.state.lock().unwrap();
+        RecoverySnapshot {
+            membership_epoch: st.epoch,
+            deaths: st.deaths,
+            revivals: st.revivals,
+            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
+            mttr_steps: st.mttr_steps_max,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn death_transition_has_exactly_one_winner() {
+        let m = Membership::new(4);
+        assert_eq!(m.epoch(), 0);
+        assert!(m.mark_dead(2, 17));
+        assert!(!m.mark_dead(2, 17), "second marker must lose");
+        assert_eq!(m.epoch(), 1);
+        assert!(!m.alive(2));
+        assert_eq!(m.n_alive(), 3);
+        assert!(m.any_dead());
+        // Lowest-id survivor adopts.
+        assert_eq!(m.adoptions_for(0), vec![2]);
+        assert!(m.adoptions_for(1).is_empty());
+        assert_eq!(m.lowest_alive(), Some(0));
+    }
+
+    #[test]
+    fn rejoin_clears_adoption_and_bumps_epoch() {
+        let m = Membership::new(3);
+        assert!(m.mark_dead(1, 5));
+        m.note_recovered(5);
+        assert!(m.mark_alive(1));
+        assert!(!m.mark_alive(1), "already alive");
+        assert_eq!(m.epoch(), 2);
+        assert!(m.alive(1));
+        assert!(m.adoptions_for(0).is_empty());
+        let snap = m.snapshot();
+        assert_eq!(snap.deaths, 1);
+        assert_eq!(snap.revivals, 1);
+        assert_eq!(snap.membership_epoch, 2);
+        assert_eq!(snap.mttr_steps, 1, "same-step recovery is 1 step");
+    }
+
+    #[test]
+    fn mttr_tracks_detection_to_first_completed_step() {
+        let m = Membership::new(2);
+        assert!(m.mark_dead(1, 10));
+        m.record_deadline_miss();
+        m.note_recovered(12);
+        // A second recovery closes faster; the max is kept.
+        assert!(m.mark_alive(1));
+        assert!(m.mark_dead(1, 30));
+        m.note_recovered(30);
+        let snap = m.snapshot();
+        assert_eq!(snap.mttr_steps, 3, "12 - 10 + 1");
+        assert_eq!(snap.deadline_misses, 1);
+        assert_eq!(snap.deaths, 2);
+    }
+
+    #[test]
+    fn adopter_reassigns_when_the_adopter_itself_dies() {
+        let m = Membership::new(3);
+        assert!(m.mark_dead(2, 1));
+        assert_eq!(m.adoptions_for(0), vec![2]);
+        // Learner 0 (the adopter) dies too; learner 1 inherits 0, and 2's
+        // adopter entry still names 0 — the caller resolves chains by
+        // re-asking after every transition, which the trainer does on
+        // each recovery pass.
+        assert!(m.mark_dead(0, 2));
+        assert_eq!(m.adoptions_for(1), vec![0]);
+        assert_eq!(m.lowest_alive(), Some(1));
+        assert_eq!(m.n_alive(), 1);
+    }
+}

@@ -26,25 +26,31 @@
 
 pub mod allreduce;
 pub mod checkpoint;
+pub mod membership;
 
 pub use allreduce::GradSync;
 pub use checkpoint::Checkpoint;
+pub use membership::Membership;
 
 use crate::cache::{CacheDirectory, CacheStack, Policy, SpillConfig};
-use crate::fault::{FaultPlan, NodeFault};
-use crate::loader::{BatchIds, BatchRequest, FetchContext, Loader, LoaderConfig};
+use crate::fault::{Deadlines, FaultPlan, FaultTimeline, NodeFault};
+use crate::loader::{
+    load_batch_adhoc, BatchIds, BatchRequest, FetchContext, Loader,
+    LoaderConfig, LoaderRuntime,
+};
 use crate::metrics::{
     EpochReport, FabricSnapshot, LoadCounters, LoadSnapshot, PlannerSnapshot,
-    StallSnapshot, TierSnapshot,
+    RecoverySnapshot, StallSnapshot, TierSnapshot,
 };
 use crate::net::Fabric;
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{Engine, HostTensor, Program};
 use crate::sampler::{
-    EpochScheme, GlobalShuffler, PartitionPlanner, PlannerConfig,
+    EpochScheme, GlobalShuffler, PartitionPlanner, PlannerConfig, StepPlan,
 };
 use crate::storage::StorageSystem;
 use crate::util::Executor;
 use anyhow::{ensure, Context, Result};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 use std::time::Instant;
@@ -117,6 +123,35 @@ pub struct TrainerConfig {
     /// cache directory and amends already-published step plans so
     /// in-window steps re-route off the straggler (DESIGN.md §11).
     pub rebalance_interval_s: f64,
+    /// Chaos schedule (DESIGN.md §12): a deterministic step-driven fault
+    /// timeline — kill node k at step a, revive it at step b, flap a
+    /// link every n steps — installed into the fabric for the run. A
+    /// timeline that can kill a node requires `deadlines.barrier`, the
+    /// wait whose miss is the survivors' detection signal.
+    pub fault_timeline: Option<Arc<FaultTimeline>>,
+    /// Deadline budgets for every blocking wait on the training critical
+    /// path: fabric transfers and executor task latches (read off the
+    /// fabric by the fetch path), shared-planner plan-gets, and the
+    /// gradient rendezvous. [`Deadlines::none()`] keeps the legacy
+    /// indefinite waits.
+    pub deadlines: Deadlines,
+    /// Save a resume checkpoint to `checkpoint_path` every this many
+    /// global steps (0 = only the final save). Saves taken after epoch 0
+    /// capture the frozen directory and resume exactly; an epoch-0 save
+    /// restores a partially-populated directory (valid, not bit-exact).
+    pub checkpoint_interval_steps: u64,
+    /// Resume from a v2 checkpoint: restores parameters, membership
+    /// epoch, and the cache-directory image (rehydrating each learner's
+    /// owned samples from storage), then skips every global step below
+    /// the saved position — with exactly-once accounting, the resumed
+    /// run trains precisely the steps the killed run did not.
+    pub resume_from: Option<std::path::PathBuf>,
+    /// Chaos hook: complete global step N (including its periodic
+    /// checkpoint), then abort every learner with an error — the
+    /// deterministic in-process stand-in for `kill -9` in the
+    /// kill/resume acceptance tests. Like a real kill it does not shut
+    /// the loader pools down. `None` (the default) disables.
+    pub halt_after_gstep: Option<u64>,
 }
 
 impl Default for TrainerConfig {
@@ -143,6 +178,11 @@ impl Default for TrainerConfig {
             fault_dead: false,
             fault_seed: 0x5EED,
             rebalance_interval_s: 0.0,
+            fault_timeline: None,
+            deadlines: Deadlines::none(),
+            checkpoint_interval_steps: 0,
+            resume_from: None,
+            halt_after_gstep: None,
         }
     }
 }
@@ -182,6 +222,10 @@ pub struct TrainingReport {
     /// at the gradient barrier behind slower peers. The straggler
     /// diagnosis surface (DESIGN.md §11).
     pub stalls: Vec<StallSnapshot>,
+    /// Membership-epoch and recovery accounting — deaths, revivals,
+    /// deadline misses, worst-case steps-to-recover (DESIGN.md §12).
+    /// All-zero on healthy runs.
+    pub recovery: RecoverySnapshot,
 }
 
 impl TrainingReport {
@@ -218,6 +262,11 @@ struct EpochAccum {
     loss_n: u64,
     epoch_time_s: f64,
     steps: usize,
+    /// Exactly-once accounting: gradient contributions this epoch across
+    /// all learners (own shares + adopted shares), and the
+    /// order-independent multiset digest of the sample ids behind them.
+    trained_samples: u64,
+    sample_digest: u64,
 }
 
 fn add_snap(a: &mut LoadSnapshot, d: &LoadSnapshot) {
@@ -324,6 +373,45 @@ impl Trainer {
             self.storage.set_fault_plan(Some(Arc::clone(plan)));
         }
 
+        // Install the chaos timeline and the job's deadline budgets
+        // (DESIGN.md §12). The fetch path reads transfer/task budgets off
+        // the fabric; plan-get and rendezvous budgets are passed at the
+        // wait sites below.
+        let steps_per_epoch = self.epoch_steps(train_n);
+        if let Some(tl) = &cfg.fault_timeline {
+            ensure!(
+                tl.len() == p,
+                "fault timeline covers {} nodes, job has {p}",
+                tl.len()
+            );
+            ensure!(
+                tl.is_inert() || cfg.deadlines.barrier.is_some(),
+                "a fault timeline needs a barrier deadline so survivors \
+                 can detect a dead peer"
+            );
+            self.fabric.set_fault_timeline(Some(Arc::clone(tl)));
+        }
+        self.fabric.set_deadlines(cfg.deadlines);
+
+        // Step-granular resume (DESIGN.md §12): restore parameters, the
+        // membership epoch, and the directory image; skip every global
+        // step below the saved position.
+        let resume = match &cfg.resume_from {
+            Some(path) => Some(Checkpoint::load(path).with_context(|| {
+                format!("resume from {}", path.display())
+            })?),
+            None => None,
+        };
+        if let Some(ck) = &resume {
+            ensure!(
+                ck.step <= cfg.epochs * steps_per_epoch,
+                "checkpoint position {} is past this job's {} steps",
+                ck.step,
+                cfg.epochs * steps_per_epoch
+            );
+        }
+        let resume_gstep = resume.as_ref().map(|c| c.step).unwrap_or(0);
+
         // Shared distributed state. Each learner holds ONE cache-stack
         // handle: the DRAM tier plus, when configured, an SSD spill tier
         // whose write-behind runs on a job-wide spill executor (so SSD
@@ -370,6 +458,28 @@ impl Trainer {
             })
             .collect::<Result<_>>()?;
         let directory = Arc::new(CacheDirectory::new(n));
+        if let Some(ck) = &resume {
+            if !ck.directory.is_empty() {
+                ensure!(
+                    ck.directory.len() as u64 == n,
+                    "checkpoint directory covers {} samples, dataset has {n}",
+                    ck.directory.len()
+                );
+                directory.restore_raw(&ck.directory);
+                // Rehydrate every restored claim from storage so the
+                // directory's owners can actually serve: the resumed run
+                // then routes — and Loc-plans — exactly like the
+                // checkpointed one.
+                for id in 0..n as u32 {
+                    if let Some(owner) = directory.owner(id) {
+                        if owner < p {
+                            caches[owner]
+                                .insert(Arc::new(self.storage.read_sample(id)?));
+                        }
+                    }
+                }
+            }
+        }
         // One shared partition planner for the whole job: every step's
         // Loc/Reg partition is computed exactly once per process, on the
         // planner's background thread, `prefetch_batches` steps ahead of
@@ -385,9 +495,23 @@ impl Trainer {
             shuffler,
             Arc::clone(&directory),
         ));
+        // A run resumed past epoch 0 restored a frozen directory: no
+        // repopulation.
+        let resumed_frozen = matches!(&resume, Some(c) if c.epoch > 0);
         let populate = Arc::new(AtomicBool::new(
-            cfg.cache_capacity_bytes > 0 && cfg.sampler != SamplerKind::Reg,
+            cfg.cache_capacity_bytes > 0
+                && cfg.sampler != SamplerKind::Reg
+                && !resumed_frozen,
         ));
+        let membership = Arc::new(Membership::new(p));
+        if let Some(ck) = &resume {
+            membership.restore_epoch(ck.membership_epoch);
+        }
+        // Parameter beacon for epoch-boundary rejoins: the lowest-id
+        // survivor publishes its (bit-identical across survivors) params
+        // at each epoch end while a peer is dead.
+        let beacon: Arc<Mutex<Option<Vec<HostTensor>>>> =
+            Arc::new(Mutex::new(None));
         let sync = Arc::new(GradSync::new(p, Arc::clone(&self.fabric)));
         let barrier = Arc::new(Barrier::new(p));
         let accums = Arc::new(Mutex::new(vec![
@@ -451,7 +575,19 @@ impl Trainer {
         let grad_prog = self.engine.program(&grad_name)?;
         let pre_prog = self.engine.program(&pre_name)?;
         let sgd_prog = self.engine.program("sgd")?;
-        let init_params = self.engine.initial_params()?;
+        let init_params = match &resume {
+            Some(ck) => {
+                let fresh = self.engine.initial_params()?;
+                ensure!(
+                    ck.params.len() == fresh.len(),
+                    "checkpoint has {} parameter tensors, model has {}",
+                    ck.params.len(),
+                    fresh.len()
+                );
+                ck.params.clone()
+            }
+            None => self.engine.initial_params()?,
+        };
 
         let outcomes: Vec<Result<(Vec<HostTensor>, f64)>> =
             std::thread::scope(|scope| {
@@ -472,6 +608,8 @@ impl Trainer {
                     let pre_prog = Arc::clone(&pre_prog);
                     let sgd_prog = Arc::clone(&sgd_prog);
                     let params = init_params.clone();
+                    let membership = Arc::clone(&membership);
+                    let beacon = Arc::clone(&beacon);
                     handles.push(scope.spawn(move || {
                         learner_loop(LearnerEnv {
                             j,
@@ -491,6 +629,10 @@ impl Trainer {
                             pre_prog,
                             sgd_prog,
                             params,
+                            membership,
+                            beacon,
+                            resume_gstep,
+                            steps_per_epoch,
                         })
                     }));
                 }
@@ -507,6 +649,10 @@ impl Trainer {
             self.fabric.set_fault_plan(None);
             self.storage.set_fault_plan(None);
         }
+        if cfg.fault_timeline.is_some() {
+            self.fabric.set_fault_timeline(None);
+        }
+        self.fabric.set_deadlines(Deadlines::none());
 
         let mut params0 = None;
         let mut checksums = Vec::with_capacity(p);
@@ -521,12 +667,15 @@ impl Trainer {
         let params0 = params0.unwrap();
 
         if let Some(path) = &cfg.checkpoint_path {
-            Checkpoint {
-                epoch: cfg.epochs,
-                step: cfg.epochs * self.epoch_steps(train_n),
-                params: params0.clone(),
-            }
-            .save(path)?;
+            save_resume_point(
+                path,
+                cfg,
+                cfg.epochs * steps_per_epoch,
+                steps_per_epoch,
+                &membership,
+                &directory,
+                &params0,
+            )?;
         }
 
         // Final validation pass over the held-out split (direct storage
@@ -567,6 +716,8 @@ impl Trainer {
                 },
                 accuracy: None,
                 balance_moves: a.balance_moves,
+                trained_samples: a.trained_samples,
+                sample_digest: a.sample_digest,
             })
             .collect();
 
@@ -585,6 +736,7 @@ impl Trainer {
             fabric: self.fabric.snapshot(),
             tiers,
             stalls: Arc::try_unwrap(stalls).ok().unwrap().into_inner().unwrap(),
+            recovery: membership.snapshot(),
         })
     }
 
@@ -640,13 +792,146 @@ struct LearnerEnv {
     step_losses: Arc<Mutex<Vec<f32>>>,
     stalls: Arc<Mutex<Vec<StallSnapshot>>>,
     planner: Arc<PartitionPlanner>,
-    grad_prog: Arc<crate::runtime::Program>,
-    pre_prog: Arc<crate::runtime::Program>,
-    sgd_prog: Arc<crate::runtime::Program>,
+    grad_prog: Arc<Program>,
+    pre_prog: Arc<Program>,
+    sgd_prog: Arc<Program>,
     params: Vec<HostTensor>,
+    membership: Arc<Membership>,
+    beacon: Arc<Mutex<Option<Vec<HostTensor>>>>,
+    /// Global steps below this are done (from the resume checkpoint).
+    resume_gstep: u64,
+    steps_per_epoch: u64,
+}
+
+/// splitmix64 finalizer for the order-independent sample digest: the
+/// per-epoch digest is the wrapping sum of `digest_mix(id)` over every
+/// trained sample, so two runs that trained the same multiset compare
+/// equal regardless of partition or arrival order.
+fn digest_mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Whether node `j` sits out global step `gstep`: dead there per the
+/// timeline, or dead at any earlier step of the same epoch — a revived
+/// node rejoins only at the next epoch boundary, cold (DESIGN.md §12).
+/// A pure function of its arguments, so the prefetch-ahead submit
+/// decision and the step-top skip agree under every interleaving.
+fn ghost_at(tl: &FaultTimeline, j: usize, gstep: u64, spe: u64) -> bool {
+    let epoch_start = gstep / spe * spe;
+    (epoch_start..=gstep).any(|s| tl.is_dead_at(j, s))
+}
+
+/// Everything the adoption path needs besides per-step state.
+struct AdoptCtx<'a> {
+    membership: &'a Membership,
+    sync: &'a GradSync,
+    ctx: &'a Arc<FetchContext>,
+    runtime: &'a LoaderRuntime,
+    record_bytes: usize,
+    pre_prog: &'a Arc<Program>,
+    grad_prog: &'a Arc<Program>,
+    cfg: &'a TrainerConfig,
+}
+
+/// Load and proxy-deposit every dead peer's share that survivor `j`
+/// currently adopts, for generation `gen` of the step planned by `plan`.
+/// The batch partition and the augmentation flips are pure functions of
+/// `(seed, epoch, sample)` — never of the learner — so the adopter
+/// reproduces the dead learner's gradient bit-for-bit; with it deposited
+/// the reduction is a full-p mean, identical to the step nobody missed.
+fn adopt_dead_shares(
+    a: &AdoptCtx<'_>,
+    j: usize,
+    gen: u64,
+    plan: &Arc<StepPlan>,
+    params: &[HostTensor],
+    digest: &mut (u64, u64),
+) -> Result<()> {
+    for k in a.membership.adoptions_for(j) {
+        if !a.sync.slot_missing(gen, k) {
+            continue;
+        }
+        let req = BatchRequest {
+            epoch: plan.epoch,
+            step: plan.step,
+            ids: BatchIds::planned(Arc::clone(plan), k),
+        };
+        let batch = load_batch_adhoc(
+            a.ctx,
+            a.runtime.pool(),
+            a.record_bytes,
+            Some(Arc::clone(a.pre_prog)),
+            a.cfg.seed,
+            a.cfg.flip_prob,
+            req,
+        )?;
+        let x = batch
+            .x_f32
+            .as_ref()
+            .context("ad-hoc load must preprocess for training")?;
+        let y = HostTensor::i32_shared(
+            vec![a.cfg.local_batch],
+            batch.labels.clone(),
+        );
+        let n_params = params.len();
+        let mut args: Vec<&HostTensor> = params.iter().collect();
+        args.push(x);
+        args.push(&y);
+        let gout = a.grad_prog.run_refs(&args)?;
+        let loss = gout[n_params].scalar()?;
+        let flat = flatten(&gout[..n_params], loss)?;
+        if a.sync.try_deposit_for(k, flat, gen) {
+            for &id in batch.ids.as_slice() {
+                digest.0 += 1;
+                digest.1 = digest.1.wrapping_add(digest_mix(id as u64));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Write a v2 resume checkpoint: position `next_gstep` (steps below it
+/// are done), the membership epoch, the directory image when the scheme
+/// has one, and the parameters.
+fn save_resume_point(
+    path: &std::path::Path,
+    cfg: &TrainerConfig,
+    next_gstep: u64,
+    spe: u64,
+    membership: &Membership,
+    directory: &CacheDirectory,
+    params: &[HostTensor],
+) -> Result<()> {
+    let dir_words =
+        if cfg.cache_capacity_bytes > 0 && cfg.sampler != SamplerKind::Reg {
+            directory.snapshot_raw()
+        } else {
+            Vec::new()
+        };
+    Checkpoint {
+        epoch: next_gstep / spe.max(1),
+        step: next_gstep,
+        membership_epoch: membership.epoch(),
+        directory: dir_words,
+        params: params.to_vec(),
+    }
+    .save(path)
 }
 
 /// One learner's whole-job loop.
+///
+/// Under a chaos timeline a killed learner turns *ghost*: it keeps
+/// taking shared plans (so the planner's retirement accounting flows at
+/// `consumers = p`) and keeps meeting the epoch barriers, but loads
+/// nothing, deposits nothing, and trains nothing. Survivors detect the
+/// death as a barrier-deadline miss, win the membership transition, and
+/// the adopter reproduces the dead share until the ghost rejoins at an
+/// epoch boundary — cold cache, parameters from the survivors' beacon.
+/// Learner 0 carries accounting and checkpoint duties and is assumed to
+/// survive (kill nodes 1..p in chaos schedules).
 fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
     let LearnerEnv {
         j,
@@ -666,6 +951,10 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
         pre_prog,
         sgd_prog,
         mut params,
+        membership,
+        beacon,
+        resume_gstep,
+        steps_per_epoch,
     } = env;
     let counters = Arc::new(LoadCounters::new());
     let record_bytes = storage.meta().record_bytes();
@@ -677,9 +966,30 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
     // executor threads and the batch buffer pool survive the per-epoch
     // loader respawns, so epochs after the first spawn zero threads and
     // allocate zero batch buffers.
-    let loader_runtime = crate::loader::LoaderRuntime::new(&cfg.loader);
+    let loader_runtime = LoaderRuntime::new(&cfg.loader);
+    let timeline = cfg.fault_timeline.clone();
+    let spe = steps_per_epoch.max(1);
+    // Whether this learner currently sits out as a ghost.
+    let mut ghost = false;
 
     for epoch in 0..cfg.epochs {
+        let epoch_base = epoch * spe;
+        // Epoch-boundary rejoin: if the timeline revived this node before
+        // the boundary, it re-enters here — cold cache, parameters
+        // resynced from the beacon, membership epoch bumped. This runs
+        // before the epoch's first barrier, so every survivor observes
+        // the rejoin before its first step of the epoch.
+        if let Some(tl) = &timeline {
+            let now_ghost = ghost_at(tl, j, epoch_base, spe);
+            if ghost && !now_ghost {
+                caches[j].clear();
+                if let Some(fresh) = beacon.lock().unwrap().clone() {
+                    params = fresh;
+                }
+                membership.mark_alive(j);
+            }
+            ghost = now_ghost;
+        }
         // A fresh loader per epoch: FetchContext.cache_on_load captures the
         // population flag, which flips after epoch 0.
         let ctx = Arc::new(FetchContext {
@@ -714,24 +1024,74 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
                 if use_loc { EpochScheme::Loc } else { EpochScheme::Reg },
             );
         }
-        let steps = planner.epoch_plan(epoch)?.steps();
+        let steps = planner
+            .epoch_plan_deadline(epoch, cfg.deadlines.plan)?
+            .steps();
+        assert_eq!(
+            steps as u64, spe,
+            "epoch plan disagrees with the global step grid"
+        );
         let mut balance_moves = 0u64;
+        // Exactly-once accounting for this epoch: (count, digest) of the
+        // samples whose gradients this learner contributed — its own
+        // share plus any adopted dead shares.
+        let mut digest = (0u64, 0u64);
+        // In-window plans kept for the adoption path (the loader consumed
+        // its Arc at submit time; the adopter needs the same plan again).
+        let mut plans: HashMap<u64, Arc<StepPlan>> = HashMap::new();
+        let adopt_ctx = AdoptCtx {
+            membership: &membership,
+            sync: &sync,
+            ctx: &ctx,
+            runtime: &loader_runtime,
+            record_bytes,
+            pre_prog: &pre_prog,
+            grad_prog: &grad_prog,
+            cfg: &cfg,
+        };
+
+        // Will this learner train step `s` of this epoch? Pure in
+        // `(j, s)`: the prefetch-ahead submit decision and the step-top
+        // skip always agree, so a ghost's loader never holds batches
+        // nobody will consume.
+        let trains = |s: usize| -> bool {
+            let g = epoch_base + s as u64;
+            if g < resume_gstep {
+                return false;
+            }
+            match &timeline {
+                Some(tl) => !ghost_at(tl, j, g, spe),
+                None => true,
+            }
+        };
 
         // Take this step's shared plan (once per learner per step): the
         // request ids are a zero-clone slice of the plan arena, and the
         // balance stats ride the same plan — no second partition, on any
         // thread, for stats. Partition work happens once per step per
-        // PROCESS, on the planner thread, never here.
-        let submit_step = |s: usize, balance_moves: &mut u64| -> Result<()> {
-            let plan = planner.get(epoch, s as u64)?;
+        // PROCESS, on the planner thread, never here. EVERY learner takes
+        // every plan — ghosts and resume-skipped steps included — so plan
+        // retirement keeps flowing at `consumers = p`; only steps this
+        // learner will train are submitted to its loader.
+        let submit_step = |s: usize,
+                           balance_moves: &mut u64,
+                           plans: &mut HashMap<u64, Arc<StepPlan>>|
+         -> Result<()> {
+            let plan =
+                planner.get_deadline(epoch, s as u64, cfg.deadlines.plan)?;
             if j == 0 {
                 *balance_moves += plan.stats.balance_moves as u64;
+            }
+            if !trains(s) {
+                return Ok(());
             }
             loader.submit(BatchRequest {
                 epoch,
                 step: s as u64,
-                ids: BatchIds::planned(plan, j),
-            })
+                ids: BatchIds::planned(Arc::clone(&plan), j),
+            })?;
+            plans.insert(s as u64, plan);
+            Ok(())
         };
 
         let load_before = counters.snapshot();
@@ -741,18 +1101,27 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
         // Prime the prefetch window.
         let window = cfg.loader.prefetch_batches.min(steps);
         for s in 0..window {
-            submit_step(s, &mut balance_moves)?;
+            submit_step(s, &mut balance_moves, &mut plans)?;
         }
 
         let (mut wait_s, mut train_s, mut sync_s) = (0.0f64, 0.0f64, 0.0f64);
         for step in 0..steps {
+            let gstep = epoch_base + step as u64;
+            // Advance the fabric's step clock: timeline-driven deaths
+            // become visible to the fetch path at this step.
+            fabric.observe_step(gstep);
+            // Keep the take/submit window full (even across skipped
+            // steps — later plans still need taking).
+            if step + window < steps {
+                submit_step(step + window, &mut balance_moves, &mut plans)?;
+            }
+            if !trains(step) {
+                continue;
+            }
+
             let t_wait = Instant::now();
             let batch = loader.next(step as u64)?;
             wait_s += t_wait.elapsed().as_secs_f64();
-            // Keep the window full.
-            if step + window < steps {
-                submit_step(step + window, &mut balance_moves)?;
-            }
 
             // Local gradient. Borrowed args: no 14-MiB parameter clone
             // per step (§Perf).
@@ -774,9 +1143,66 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
             let flat = flatten(&gout[..n_params], local_loss)?;
             train_s += t_train.elapsed().as_secs_f64();
 
-            // Global gradient.
+            // Global gradient: deposit, carry any adopted dead shares,
+            // then wait under the barrier deadline. A miss is the
+            // detection signal — consult the timeline for the missing
+            // depositor, win the death transition (exactly one survivor
+            // does), sweep the dead node's directory claims so published
+            // Loc plans re-route off it, adopt its share, and wait again
+            // for the SAME generation.
             let t_sync = Instant::now();
-            let global = sync.sync(j, flat);
+            let gen = sync.deposit(j, flat);
+            for &id in batch.ids.as_slice() {
+                digest.0 += 1;
+                digest.1 = digest.1.wrapping_add(digest_mix(id as u64));
+            }
+            let plan = plans
+                .remove(&(step as u64))
+                .expect("trained step was submitted with its plan");
+            if membership.any_dead() {
+                adopt_dead_shares(
+                    &adopt_ctx, j, gen, &plan, &params, &mut digest,
+                )?;
+            }
+            let mut misses = 0u32;
+            let global = loop {
+                match sync.wait_generation(gen, j, cfg.deadlines.barrier) {
+                    Ok(g) => break g,
+                    Err(stall) => {
+                        membership.record_deadline_miss();
+                        misses += 1;
+                        ensure!(
+                            misses <= 1 + 2 * cfg.p as u32,
+                            "learner {j} step {gstep}: rendezvous kept \
+                             missing its deadline with no recoverable \
+                             dead peer ({stall})"
+                        );
+                        if let Some(tl) = &timeline {
+                            for k in 0..cfg.p {
+                                // Winner's reconciliation sweep: evict
+                                // the dead node's claims; if any were
+                                // re-routed, amend published plans too.
+                                if k != j
+                                    && sync.slot_missing(gen, k)
+                                    && ghost_at(tl, k, gstep, spe)
+                                    && membership.mark_dead(k, gstep)
+                                    && directory.evict_owner(k) > 0
+                                {
+                                    planner.amend_weights(&vec![1.0; cfg.p]);
+                                }
+                            }
+                        }
+                        adopt_dead_shares(
+                            &adopt_ctx, j, gen, &plan, &params, &mut digest,
+                        )?;
+                    }
+                }
+            };
+            if membership.any_dead() {
+                // First completed step after a detection closes the MTTR
+                // clock (no-op while no recovery is pending).
+                membership.note_recovered(gstep);
+            }
             sync_s += t_sync.elapsed().as_secs_f64();
             let mean_loss = *global.last().unwrap();
             if j == 0 {
@@ -802,6 +1228,33 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
             let updated = sgd_prog.run_refs(&sgd_args)?;
             params = updated;
             train_s += t_apply.elapsed().as_secs_f64();
+
+            // Periodic resume checkpoint (learner 0). Saves after
+            // epoch 0 capture the frozen directory and resume exactly.
+            if j == 0 && cfg.checkpoint_interval_steps > 0 {
+                if let Some(path) = &cfg.checkpoint_path {
+                    if (gstep + 1) % cfg.checkpoint_interval_steps == 0 {
+                        save_resume_point(
+                            path,
+                            &cfg,
+                            gstep + 1,
+                            spe,
+                            &membership,
+                            &directory,
+                            &params,
+                        )?;
+                    }
+                }
+            }
+
+            // Simulated kill -9 (chaos hook): abort after this step's
+            // checkpoint, leaving loader pools un-shutdown like a real
+            // kill would.
+            if cfg.halt_after_gstep == Some(gstep) {
+                anyhow::bail!(
+                    "halted by config after step {gstep} (simulated kill)"
+                );
+            }
         }
 
         loader.shutdown()?;
@@ -818,14 +1271,27 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
             a.sync_s += sync_s;
             add_snap(&mut a.load, &delta);
             a.balance_moves += balance_moves;
+            a.trained_samples += digest.0;
+            a.sample_digest = a.sample_digest.wrapping_add(digest.1);
             if j == 0 {
                 a.steps = steps;
                 a.epoch_time_s = epoch_time;
                 let losses = step_losses.lock().unwrap();
-                let tail = &losses[losses.len() - steps..];
+                // A resumed epoch may have trained only a tail of its
+                // steps; slice what was actually pushed.
+                let take = steps.min(losses.len());
+                let tail = &losses[losses.len() - take..];
                 a.loss_sum = tail.iter().map(|&l| l as f64).sum();
-                a.loss_n = steps as u64;
+                a.loss_n = take as u64;
             }
+        }
+
+        // Publish the rejoin beacon while a peer is dead: survivors'
+        // parameters are bit-identical, so the lowest-id one speaks. The
+        // ghost reads it at the next epoch boundary, after the trailing
+        // barriers below.
+        if membership.any_dead() && membership.lowest_alive() == Some(j) {
+            *beacon.lock().unwrap() = Some(params.clone());
         }
 
         barrier.wait();

@@ -18,6 +18,97 @@
 //! (`fault/clean_determinism`) pins that down.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Which blocking wait missed its deadline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StallKind {
+    /// A fabric transfer ([`crate::net::TransferHandle::wait_deadline`]).
+    Transfer,
+    /// The gradient rendezvous
+    /// ([`crate::coordinator::GradSync`]).
+    Barrier,
+    /// A shared-planner plan-get
+    /// ([`crate::sampler::PartitionPlanner`]).
+    Plan,
+    /// An executor completion latch
+    /// ([`crate::util::Executor::run_batch_deadline`]).
+    Task,
+}
+
+impl std::fmt::Display for StallKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            StallKind::Transfer => "transfer",
+            StallKind::Barrier => "barrier",
+            StallKind::Plan => "plan",
+            StallKind::Task => "task",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A blocking wait exceeded its configured deadline. Every wait on the
+/// training critical path returns this instead of blocking indefinitely,
+/// so a dead peer surfaces as an error within bounded time — the
+/// detection signal the membership layer recovers from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StallError {
+    pub kind: StallKind,
+    /// How long the caller actually blocked before giving up.
+    pub waited: Duration,
+    /// The configured budget that was exceeded.
+    pub deadline: Duration,
+}
+
+impl std::fmt::Display for StallError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} wait exceeded its deadline: waited {:.3}s (budget {:.3}s)",
+            self.kind,
+            self.waited.as_secs_f64(),
+            self.deadline.as_secs_f64()
+        )
+    }
+}
+
+impl std::error::Error for StallError {}
+
+/// Per-wait-class deadline budgets. `None` keeps the legacy indefinite
+/// wait; the trainer installs one value for the whole job (fabric-wide
+/// for transfers/tasks, passed explicitly to planner/barrier waits).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Deadlines {
+    /// Budget for one fabric transfer wait (real-time fabrics only; a
+    /// virtual-time fabric never blocks, so it can never miss).
+    pub transfer: Option<Duration>,
+    /// Budget for an executor completion latch (one fetch wave).
+    pub task: Option<Duration>,
+    /// Budget for a shared-planner plan-get.
+    pub plan: Option<Duration>,
+    /// Budget for the gradient rendezvous — the wait that turns a dead
+    /// peer into a detection event.
+    pub barrier: Option<Duration>,
+}
+
+impl Deadlines {
+    /// No budgets anywhere: every wait keeps its legacy indefinite
+    /// behavior.
+    pub fn none() -> Deadlines {
+        Deadlines::default()
+    }
+
+    /// One budget for every wait class.
+    pub fn uniform(d: Duration) -> Deadlines {
+        Deadlines {
+            transfer: Some(d),
+            task: Some(d),
+            plan: Some(d),
+            barrier: Some(d),
+        }
+    }
+}
 
 /// Per-node fault specification. The default is a healthy node; every
 /// field's inert value injects nothing.
@@ -174,6 +265,161 @@ impl FaultPlan {
     }
 }
 
+/// One scheduled membership/degradation change: from `step` onward,
+/// `node` runs under `fault` (until a later event overrides it).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub step: u64,
+    pub node: usize,
+    pub fault: NodeFault,
+}
+
+/// A deterministic, seedable fault *schedule* driven by the trainer's
+/// global step clock: kill a node at step k, revive it at step m, flap a
+/// link every n steps. Where [`FaultPlan`] describes one static scenario
+/// for the whole run, a timeline lets failures *change* mid-run while
+/// staying a pure function of `(node, step)` — the property that keeps
+/// chaos runs bit-reproducible: any consumer asking "what is node j's
+/// spec at step s?" gets the same answer in every run, regardless of
+/// thread interleaving.
+#[derive(Debug)]
+pub struct FaultTimeline {
+    seed: u64,
+    p: usize,
+    base: Vec<NodeFault>,
+    /// Sorted by step (stable), applied in order; last match wins.
+    events: Vec<FaultEvent>,
+    /// `(node, period, fault)`: the node runs `fault` during every odd
+    /// `period`-step window (steps `[period, 2*period)`, `[3*period,
+    /// 4*period)`, ...) — a link that goes bad and comes back forever.
+    flaps: Vec<(usize, u64, NodeFault)>,
+    /// Per-node transfer-event counters driving the jitter stream (the
+    /// same counter-hash scheme as [`FaultPlan::link_jitter_s`]).
+    xfer_events: Vec<AtomicU64>,
+}
+
+impl FaultTimeline {
+    pub fn new(seed: u64, p: usize) -> FaultTimeline {
+        FaultTimeline {
+            seed,
+            p,
+            base: vec![NodeFault::healthy(); p],
+            events: Vec::new(),
+            flaps: Vec::new(),
+            xfer_events: (0..p).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Set node `j`'s spec for step 0 onward (before any event fires).
+    pub fn with_base(mut self, node: usize, fault: NodeFault) -> Self {
+        assert!(node < self.p, "node {node} out of range (p={})", self.p);
+        self.base[node] = fault;
+        self
+    }
+
+    /// Schedule `node` to run under `fault` from `step` onward.
+    pub fn at(mut self, step: u64, node: usize, fault: NodeFault) -> Self {
+        assert!(node < self.p, "node {node} out of range (p={})", self.p);
+        let pos = self
+            .events
+            .iter()
+            .position(|e| e.step > step)
+            .unwrap_or(self.events.len());
+        self.events.insert(pos, FaultEvent { step, node, fault });
+        self
+    }
+
+    /// Hard-kill `node` at `step`: from that step it refuses transfers
+    /// and deposits no gradients.
+    pub fn kill(self, node: usize, step: u64) -> Self {
+        self.at(step, node, NodeFault { dead: true, ..NodeFault::healthy() })
+    }
+
+    /// Revive `node` at `step` (healthy from that step onward; the
+    /// trainer readmits it only at the next epoch boundary, cold).
+    pub fn revive(self, node: usize, step: u64) -> Self {
+        self.at(step, node, NodeFault::healthy())
+    }
+
+    /// Flap `node`: run `fault` during every odd `period`-step window.
+    pub fn flap(mut self, node: usize, period: u64, fault: NodeFault) -> Self {
+        assert!(node < self.p, "node {node} out of range (p={})", self.p);
+        assert!(period > 0, "flap period must be positive");
+        self.flaps.push((node, period, fault));
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.p
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.p == 0
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// True iff the timeline injects nothing at any step.
+    pub fn is_inert(&self) -> bool {
+        self.base.iter().all(NodeFault::is_inert)
+            && self.events.iter().all(|e| e.fault.is_inert())
+            && self.flaps.iter().all(|(_, _, f)| f.is_inert())
+    }
+
+    /// Node `j`'s effective spec at global step `step` — a pure function
+    /// of its arguments (no interior counters), which is what makes the
+    /// timeline safe to consult from racing prefetch threads without
+    /// breaking accounting determinism. Out-of-range nodes are healthy.
+    pub fn spec_at(&self, node: usize, step: u64) -> NodeFault {
+        if node >= self.p {
+            return NodeFault::healthy();
+        }
+        let mut spec = self.base[node];
+        for e in &self.events {
+            if e.node == node && e.step <= step {
+                spec = e.fault;
+            }
+        }
+        for &(fnode, period, fault) in &self.flaps {
+            if fnode == node && (step / period) % 2 == 1 {
+                spec = fault;
+            }
+        }
+        spec
+    }
+
+    pub fn is_dead_at(&self, node: usize, step: u64) -> bool {
+        self.spec_at(node, step).dead
+    }
+
+    /// First step ≥ `step` at which `node` is alive, if any is scheduled.
+    pub fn next_alive_at(&self, node: usize, step: u64) -> Option<u64> {
+        if !self.is_dead_at(node, step) {
+            return Some(step);
+        }
+        self.events
+            .iter()
+            .filter(|e| e.node == node && e.step > step && !e.fault.dead)
+            .map(|e| e.step)
+            .find(|&s| !self.is_dead_at(node, s))
+    }
+
+    /// Next jitter draw for a transfer touching node `j` at `step`:
+    /// amplitude from the step's spec, stream position from a per-node
+    /// event counter (timing-only, so the counter race is harmless).
+    pub fn link_jitter_s(&self, j: usize, step: u64) -> f64 {
+        let amp = self.spec_at(j, step).jitter_s;
+        if amp <= 0.0 || j >= self.xfer_events.len() {
+            return 0.0;
+        }
+        let k = self.xfer_events[j].fetch_add(1, Ordering::Relaxed);
+        let h = mix(self.seed ^ mix((j as u64) << 32 | k));
+        (h >> 11) as f64 / (1u64 << 53) as f64 * amp
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -241,5 +487,89 @@ mod tests {
             [false, false, true, false, false, true, false, false, true]
         );
         assert!(!plan.next_read_fails(1));
+    }
+
+    #[test]
+    fn stall_error_formats_and_converts() {
+        let e = StallError {
+            kind: StallKind::Barrier,
+            waited: Duration::from_millis(1500),
+            deadline: Duration::from_secs(1),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("barrier"), "{msg}");
+        assert!(msg.contains("1.500"), "{msg}");
+        // Converts into the crate's error type via std::error::Error.
+        let any: anyhow::Error = e.into();
+        assert!(any.to_string().contains("deadline"));
+    }
+
+    #[test]
+    fn timeline_kill_revive_is_a_pure_step_function() {
+        let tl = FaultTimeline::new(9, 4).kill(2, 10).revive(2, 25);
+        for step in 0..10 {
+            assert!(!tl.is_dead_at(2, step), "alive before kill ({step})");
+        }
+        for step in 10..25 {
+            assert!(tl.is_dead_at(2, step), "dead in window ({step})");
+        }
+        for step in 25..40 {
+            assert!(!tl.is_dead_at(2, step), "alive after revive ({step})");
+        }
+        // Other nodes never flinch.
+        for j in [0usize, 1, 3] {
+            assert!(!tl.is_dead_at(j, 15));
+        }
+        assert!(!tl.is_inert());
+        assert_eq!(tl.next_alive_at(2, 12), Some(25));
+        assert_eq!(tl.next_alive_at(2, 3), Some(3));
+        // Same queries, same answers — no interior state involved.
+        assert_eq!(tl.spec_at(2, 15), tl.spec_at(2, 15));
+    }
+
+    #[test]
+    fn timeline_flap_alternates_windows() {
+        let slow =
+            NodeFault { link_bw_scale: 0.5, ..NodeFault::healthy() };
+        let tl = FaultTimeline::new(1, 2).flap(1, 4, slow);
+        for step in 0..4 {
+            assert!(tl.spec_at(1, step).is_inert(), "even window ({step})");
+        }
+        for step in 4..8 {
+            assert_eq!(
+                tl.spec_at(1, step).link_bw_scale,
+                0.5,
+                "odd window ({step})"
+            );
+        }
+        assert!(tl.spec_at(1, 9).is_inert());
+        assert!(!tl.is_inert());
+    }
+
+    #[test]
+    fn timeline_zero_schedule_is_inert() {
+        let tl = FaultTimeline::new(7, 8);
+        assert!(tl.is_inert());
+        for j in 0..8 {
+            for s in [0u64, 5, 1000] {
+                assert!(tl.spec_at(j, s).is_inert());
+            }
+            assert_eq!(tl.link_jitter_s(j, 0), 0.0);
+        }
+        // Out-of-range nodes are healthy, mirroring FaultPlan::node.
+        assert!(tl.spec_at(99, 0).is_inert());
+    }
+
+    #[test]
+    fn timeline_jitter_stream_matches_plan_scheme() {
+        let jittery = NodeFault { jitter_s: 0.25, ..NodeFault::healthy() };
+        let a = FaultTimeline::new(42, 3).with_base(1, jittery);
+        let b = FaultTimeline::new(42, 3).with_base(1, jittery);
+        for i in 0..32 {
+            let da = a.link_jitter_s(1, i);
+            assert!((0.0..0.25).contains(&da));
+            assert_eq!(da, b.link_jitter_s(1, i), "draw {i} diverges");
+        }
+        assert_eq!(a.link_jitter_s(0, 0), 0.0);
     }
 }

@@ -49,13 +49,44 @@ use anyhow::Result;
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Attempts at reserving an owner transfer before the group demotes to
 /// storage fallback. The fabric only refuses when an endpoint is dead
 /// (fault injection), so this bounds the race between the liveness probe
 /// and the reservation — it never spins on a healthy link.
 const OWNER_RETRIES: usize = 3;
+
+/// Base sleep before the first owner-transfer retry; attempt k waits
+/// `RETRY_BASE_US << k` µs ± 25% deterministic jitter.
+const RETRY_BASE_US: u64 = 50;
+
+/// Jittered exponential backoff for the [`OWNER_RETRIES`] loop. Attempt 0
+/// is immediate; attempt k ≥ 1 sleeps `base·2^k` µs with ±25% jitter so
+/// concurrent learners retrying against the same recovering owner don't
+/// re-collide in lockstep. The jitter is a pure hash of `(salt, attempt)`
+/// — deterministic per call site, no RNG state — and the total across all
+/// retries is bounded (< 1 ms for the default constants; see the
+/// `backoff_total_is_bounded` test), so a doomed group demotes to storage
+/// fallback on a known budget instead of an unbounded spin.
+fn retry_backoff(attempt: usize, salt: u64) -> Duration {
+    if attempt == 0 {
+        return Duration::ZERO;
+    }
+    let base = RETRY_BASE_US << attempt.min(10);
+    // splitmix64-style avalanche of (salt, attempt) for the jitter draw.
+    let mut z = salt
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(attempt as u64)
+        .wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    // ±25%: jitter in [-base/4, +base/4).
+    let span = (base / 2).max(1);
+    let jitter = (z % span) as i64 - (base / 4) as i64;
+    Duration::from_micros(base.saturating_add_signed(jitter))
+}
 
 /// Everything a loader worker needs to materialize sample bytes.
 pub struct FetchContext {
@@ -328,13 +359,27 @@ impl FetchContext {
         }
         // Bounded retry: the owner can die between the liveness probe
         // above and the reservation (fault plans install concurrently).
+        // Retries back off with deterministic jitter (see
+        // `retry_backoff`), and the completion wait carries the fabric's
+        // transfer deadline: a transfer that blows its budget is treated
+        // exactly like a refused one — the group demotes to storage —
+        // so no learner ever blocks unboundedly on a sick link.
+        let deadline = self.fabric.deadlines().transfer;
         let mut sent = false;
-        for _ in 0..OWNER_RETRIES {
+        for attempt in 0..OWNER_RETRIES {
+            let pause = retry_backoff(attempt, owner as u64);
+            if !pause.is_zero() {
+                std::thread::sleep(pause);
+            }
             match self.fabric.try_transfer_begin(owner, self.learner, bytes)
             {
                 Ok(handle) => {
-                    handle.wait();
-                    sent = true;
+                    if handle.wait_deadline(deadline).is_ok() {
+                        sent = true;
+                    }
+                    // A deadline miss is not retried: re-sending the
+                    // payload against a link that just blew its budget
+                    // would miss again; storage is the bounded path.
                     break;
                 }
                 Err(_) => continue,
@@ -576,12 +621,17 @@ impl FetchContext {
             }
         }
 
-        // Single-writer assembly: run_batch is a barrier (the wave's wall
-        // time is max over tasks — decode, storage admission and SSD reads
-        // ran UNDER the in-flight transfers, which is the §9 win); this
-        // worker then folds every task's chunk into `slots`, alone.
+        // Single-writer assembly: the wave is a barrier (its wall time is
+        // max over tasks — decode, storage admission and SSD reads ran
+        // UNDER the in-flight transfers, which is the §9 win); this
+        // worker then folds each task's chunk into `slots`, alone. The
+        // completion latch carries the fabric's task deadline: a wave
+        // that blows its budget surfaces as this step's typed StallError
+        // instead of blocking the worker forever (DESIGN.md §12).
         let mut fallback: Vec<(u32, Vec<usize>)> = Vec::new();
-        for outcome in executor.run_batch(tasks) {
+        let wave = executor
+            .run_batch_deadline(tasks, ctx.fabric.deadlines().task)?;
+        for outcome in wave {
             match outcome {
                 Ok(Done::Remote(fetched)) => {
                     fallback.extend(batch.fill_remote(fetched));
@@ -1051,6 +1101,95 @@ mod tests {
         for (k, s) in warm.iter().enumerate() {
             assert_eq!(s.bytes, cold[k].bytes, "tiered contents must match");
         }
+    }
+
+    #[test]
+    fn backoff_total_is_bounded_and_deterministic() {
+        // The whole retry loop's sleep budget must stay well under a
+        // millisecond so a doomed owner group demotes to storage on a
+        // known bound instead of stalling the batch.
+        let mut total = Duration::ZERO;
+        for attempt in 0..OWNER_RETRIES {
+            total += retry_backoff(attempt, 1);
+        }
+        assert!(
+            total < Duration::from_millis(1),
+            "retry budget blew up: {total:?}"
+        );
+        // Attempt 0 is immediate (the common healthy-race case pays
+        // nothing); later attempts grow roughly geometrically.
+        assert_eq!(retry_backoff(0, 7), Duration::ZERO);
+        let a1 = retry_backoff(1, 7);
+        let a2 = retry_backoff(2, 7);
+        assert!(a1 >= Duration::from_micros(75));
+        assert!(a2 > a1, "backoff must grow: {a1:?} -> {a2:?}");
+        // Pure function of (attempt, salt): same inputs, same pause.
+        assert_eq!(retry_backoff(2, 7), a2);
+        // Different salts de-synchronize concurrent retriers.
+        assert_ne!(retry_backoff(1, 1), retry_backoff(1, 2));
+        // Large attempt indices must not overflow the shift.
+        let _ = retry_backoff(63, 0);
+    }
+
+    #[test]
+    fn transfer_deadline_miss_demotes_group_to_storage() {
+        use crate::fault::Deadlines;
+        // A real-time fabric slow enough that the coalesced owner
+        // transfer cannot meet a tiny budget: the group must fall back to
+        // storage (bounded wall time, batch still completes) and evict
+        // the owner's claims rather than hang on the link.
+        let dir = std::env::temp_dir()
+            .join(format!("dlio-fetch-ddl-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        generate(
+            &dir,
+            &SyntheticSpec { n_samples: 8, ..Default::default() },
+        )
+        .unwrap();
+        let storage = Arc::new(StorageSystem::open(&dir, None).unwrap());
+        let caches: Vec<Arc<CacheStack>> = (0..2)
+            .map(|_| {
+                Arc::new(CacheStack::mem_only(u64::MAX, Policy::InsertOnly))
+            })
+            .collect();
+        let fc = FetchContext {
+            learner: 0,
+            storage,
+            caches,
+            directory: Arc::new(CacheDirectory::new(8)),
+            fabric: Arc::new(Fabric::new(FabricConfig {
+                real_time: true,
+                link_bandwidth_bps: 1_000_000.0, // 3 KiB sample ≈ 3 ms
+                latency_s: 0.0,
+                ..Default::default()
+            })),
+            cache_on_load: false,
+            decode_s_per_kib: 0.0,
+            counters: Arc::new(LoadCounters::new()),
+        };
+        let s = Arc::new(fc.storage.read_sample(2).unwrap());
+        fc.caches[1].insert(Arc::clone(&s));
+        fc.directory.set_owner(2, 1);
+        fc.fabric.set_deadlines(Deadlines {
+            transfer: Some(Duration::from_micros(200)),
+            ..Deadlines::none()
+        });
+
+        let t0 = Instant::now();
+        let got = fc.fetch_batch(&[2]).unwrap();
+        assert_eq!(got[0].bytes, s.bytes, "storage fallback still serves");
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "deadline must bound the wait"
+        );
+        let snap = fc.counters.snapshot();
+        assert_eq!(snap.remote_hits, 0, "a missed transfer is not a hit");
+        assert_eq!(snap.storage_loads, 1);
+        assert_eq!(
+            fc.directory.owner(2),
+            None,
+            "missed-deadline owner claims must be evicted"
+        );
     }
 
     #[test]

@@ -119,6 +119,12 @@ impl LoaderRuntime {
     pub fn pool_stats(&self) -> PoolStats {
         self.pool.stats()
     }
+
+    /// The shared batch-buffer pool (ad-hoc loads lease from it too, so
+    /// adoption steps recycle the same shelf as the worker path).
+    pub fn pool(&self) -> &BatchPool {
+        &self.pool
+    }
 }
 
 /// The sample ids of one batch request: either a caller-owned list or a
@@ -382,6 +388,38 @@ impl Loader {
         );
         Ok(())
     }
+}
+
+/// Load one batch outside any worker pool — the adoption path
+/// (DESIGN.md §12). A survivor reproducing a dead learner's share needs
+/// that learner's *exact* batch: same assembly, same deterministic flip
+/// stream (keyed by sample id, so learner-independent), same preprocess
+/// program. This runs the identical `load_batch` body on the caller's
+/// thread against the caller's own fetch context — the payload bytes are
+/// the same whichever node serves them — without touching the caller's
+/// loader queues or reorder sequence.
+pub fn load_batch_adhoc(
+    ctx: &Arc<FetchContext>,
+    pool: &BatchPool,
+    record_bytes: usize,
+    preprocess: Option<Arc<Program>>,
+    flip_seed: u64,
+    flip_prob: f64,
+    req: BatchRequest,
+) -> Result<LoadedBatch> {
+    let shared = WorkerShared {
+        ctx: Arc::clone(ctx),
+        preprocess,
+        record_bytes,
+        threads: 0,
+        executor: None,
+        pool: pool.clone(),
+        flip_seed,
+        flip_prob,
+        #[cfg(test)]
+        panic_on_step: None,
+    };
+    load_batch(&shared, req)
 }
 
 /// Deterministic flip mask for (epoch, step): identical no matter which
@@ -654,6 +692,47 @@ mod tests {
             assert_eq!(&b.x_u8[..3072], &direct.bytes[..]);
             assert_eq!(b.labels[0], direct.label as i32);
         }
+        loader.shutdown().unwrap();
+    }
+
+    #[test]
+    fn adhoc_load_is_bit_identical_to_the_pooled_path() {
+        // The adoption path's guarantee: a batch loaded off-pool matches
+        // what a loader worker would have produced, byte for byte.
+        let ctx = make_ctx(128, "adhoc");
+        let cfg = LoaderConfig {
+            workers: 2,
+            threads_per_worker: 2,
+            prefetch_batches: 2,
+        };
+        let runtime = LoaderRuntime::new(&cfg);
+        let loader = Loader::spawn_with(
+            cfg,
+            Arc::clone(&ctx),
+            3072,
+            None,
+            99,
+            0.5,
+            &runtime,
+        );
+        let ids: Vec<u32> = (0..16).map(|i| (i * 7) % 128).collect();
+        loader
+            .submit(BatchRequest { epoch: 3, step: 0, ids: ids.clone().into() })
+            .unwrap();
+        let pooled = loader.next(0).unwrap();
+        let adhoc = load_batch_adhoc(
+            &ctx,
+            &runtime.pool,
+            3072,
+            None,
+            99,
+            0.5,
+            BatchRequest { epoch: 3, step: 0, ids: ids.into() },
+        )
+        .unwrap();
+        assert_eq!(&adhoc.x_u8[..], &pooled.x_u8[..]);
+        assert_eq!(&adhoc.labels[..], &pooled.labels[..]);
+        assert_eq!(&adhoc.flip[..], &pooled.flip[..]);
         loader.shutdown().unwrap();
     }
 

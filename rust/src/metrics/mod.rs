@@ -216,6 +216,23 @@ impl StallSnapshot {
     }
 }
 
+/// Elastic-recovery accounting (produced by
+/// `coordinator::Membership::snapshot`): membership epochs, death/revival
+/// counts, deadline misses observed on critical-path waits, and the
+/// worst-case MTTR in steps (deadline-miss detection → first step
+/// completed after reconciliation). All zeros on a healthy run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoverySnapshot {
+    /// Monotonic membership epoch; bumped on every death and revival.
+    pub membership_epoch: u64,
+    pub deaths: u64,
+    pub revivals: u64,
+    /// Deadline misses surfaced as `StallError` and recovered from.
+    pub deadline_misses: u64,
+    /// Max steps from detection to the first post-reconciliation step.
+    pub mttr_steps: u64,
+}
+
 /// Hierarchical cache-tier accounting (produced by
 /// `CacheStack::tier_snapshot`): mem/disk hit split, spill write-behind
 /// occupancy, and
@@ -543,6 +560,15 @@ pub struct EpochReport {
     pub accuracy: Option<f64>,
     /// Samples moved for balancing this epoch (Loc only).
     pub balance_moves: u64,
+    /// Samples whose gradients entered the reduction this epoch —
+    /// adopted shares included, so exactly-once holds iff this equals the
+    /// epoch's planned sample count even under chaos.
+    pub trained_samples: u64,
+    /// Order-independent multiset digest of the grad-consumed sample ids
+    /// (wrapping sum of a per-id mix). Chaos and clean runs of the same
+    /// schedule must agree per epoch: same value ⟺ same samples trained,
+    /// no loss, no duplication.
+    pub sample_digest: u64,
 }
 
 impl EpochReport {
@@ -574,12 +600,12 @@ impl EpochReport {
     pub fn csv_header() -> &'static str {
         "epoch,steps,epoch_s,wait_s,train_s,sync_s,loss,storage_bytes,\
          remote_bytes,local_hits,disk_hits,remote_hits,storage_loads,\
-         accuracy,balance_moves"
+         accuracy,balance_moves,trained_samples,sample_digest"
     }
 
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{},{},{},{},{},{}",
+            "{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{},{},{},{},{},{},{},{}",
             self.epoch,
             self.steps,
             self.epoch_time_s,
@@ -595,6 +621,8 @@ impl EpochReport {
             self.load.storage_loads,
             self.accuracy.map(|a| a.to_string()).unwrap_or_default(),
             self.balance_moves,
+            self.trained_samples,
+            self.sample_digest,
         )
     }
 }
@@ -901,6 +929,29 @@ mod tests {
             csv.split(',').count(),
             EpochReport::csv_header().split(',').count()
         );
+    }
+
+    #[test]
+    fn recovery_snapshot_is_all_zero_on_healthy_runs() {
+        let z = RecoverySnapshot::default();
+        assert_eq!(z.membership_epoch, 0);
+        assert_eq!(z.deaths, 0);
+        assert_eq!(z.revivals, 0);
+        assert_eq!(z.deadline_misses, 0);
+        assert_eq!(z.mttr_steps, 0);
+        assert_eq!(z, RecoverySnapshot::default());
+    }
+
+    #[test]
+    fn csv_row_carries_exactly_once_accounting() {
+        let r = EpochReport {
+            epoch: 1,
+            trained_samples: 96,
+            sample_digest: 0xDEAD_BEEF,
+            ..Default::default()
+        };
+        let csv = r.csv_row();
+        assert!(csv.ends_with(&format!(",96,{}", 0xDEAD_BEEFu64)));
     }
 
     #[test]

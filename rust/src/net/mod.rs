@@ -20,7 +20,9 @@
 //! Only relative rates matter for the paper's phenomena (R_c ≫ R), so the
 //! fabric is configured in bytes/sec alongside the storage throttle.
 
-use crate::fault::FaultPlan;
+use crate::fault::{
+    Deadlines, FaultPlan, FaultTimeline, StallError, StallKind,
+};
 use crate::metrics::FabricSnapshot;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -147,6 +149,17 @@ pub struct Fabric {
     /// unfaulted build. Read-mostly: one uncontended read-guard per
     /// transfer, the write lock only when (re)installing a plan.
     fault: RwLock<Option<Arc<FaultPlan>>>,
+    /// Installed fault timeline (step-scheduled chaos; PR 7). Consulted
+    /// at the fabric's current training step so dead/degraded windows
+    /// open and close mid-run; `None` is the zero-injection path.
+    timeline: RwLock<Option<Arc<FaultTimeline>>>,
+    /// The trainer's global step clock, advanced monotonically via
+    /// [`Fabric::observe_step`]; timeline queries without an explicit
+    /// step (in-flight prefetch, monitors) read this.
+    step: AtomicU64,
+    /// Deadline budgets for waits on this fabric (transfers and fetch
+    /// task latches). Installed once per job by the trainer.
+    deadlines: RwLock<Deadlines>,
 }
 
 /// An in-flight transfer: link time is already reserved; [`wait`] sleeps
@@ -184,6 +197,47 @@ impl TransferHandle<'_> {
         self.fabric.complete(self.done_ns, true);
         self.cost
     }
+
+    /// Deadline-bounded [`wait`]: blocks at most `deadline` of real time.
+    /// On a virtual-time fabric (`real_time: false`) a wait never blocks,
+    /// so it can never miss. On a real-time fabric, if the reserved
+    /// completion lies beyond the budget the caller sleeps only the
+    /// budget, the transfer's accounting still completes (the reservation
+    /// stands — the bytes occupied the links), and a typed
+    /// [`StallError`] surfaces the miss: a dead or crawling peer becomes
+    /// an error on the critical path within bounded time instead of a
+    /// hang. `None` behaves exactly like [`wait`].
+    ///
+    /// [`wait`]: TransferHandle::wait
+    pub fn wait_deadline(
+        mut self,
+        deadline: Option<Duration>,
+    ) -> Result<Duration, StallError> {
+        self.finished = true;
+        let Some(budget) = deadline else {
+            self.fabric.complete(self.done_ns, true);
+            return Ok(self.cost);
+        };
+        if !self.fabric.cfg.real_time {
+            self.fabric.complete(self.done_ns, false);
+            return Ok(self.cost);
+        }
+        let now = self.fabric.now_ns();
+        let remaining = Duration::from_nanos(self.done_ns.saturating_sub(now));
+        if remaining <= budget {
+            self.fabric.complete(self.done_ns, true);
+            return Ok(self.cost);
+        }
+        // Sleep only the budget; complete the accounting without a second
+        // sleep so the link clocks stay truthful.
+        std::thread::sleep(budget);
+        self.fabric.complete(self.done_ns, false);
+        Err(StallError {
+            kind: StallKind::Transfer,
+            waited: budget,
+            deadline: budget,
+        })
+    }
 }
 
 impl Drop for TransferHandle<'_> {
@@ -213,6 +267,9 @@ impl Fabric {
             busy_start_ns: AtomicU64::new(0),
             overlapped_ns: AtomicU64::new(0),
             fault: RwLock::new(None),
+            timeline: RwLock::new(None),
+            step: AtomicU64::new(0),
+            deadlines: RwLock::new(Deadlines::none()),
         }
     }
 
@@ -227,16 +284,63 @@ impl Fabric {
         *self.fault.write().unwrap() = plan;
     }
 
-    /// Whether the installed fault plan declares endpoint `j` dead
-    /// (no plan = everyone alive). The fetch path checks this before
-    /// resolving an owner group so a dead owner's claims can be evicted
-    /// without issuing a doomed transfer.
+    /// Install (or clear) a step-scheduled fault timeline. The timeline
+    /// is consulted at the fabric's current step clock (or an explicit
+    /// step, on the `_at` query variants), so a kill/revive/flap window
+    /// opens the moment the trainer's clock crosses it.
+    pub fn set_fault_timeline(&self, timeline: Option<Arc<FaultTimeline>>) {
+        *self.timeline.write().unwrap() = timeline;
+    }
+
+    /// Install the job's deadline budgets (transfer/task waits on this
+    /// fabric read them; `Deadlines::none()` restores indefinite waits).
+    pub fn set_deadlines(&self, d: Deadlines) {
+        *self.deadlines.write().unwrap() = d;
+    }
+
+    pub fn deadlines(&self) -> Deadlines {
+        *self.deadlines.read().unwrap()
+    }
+
+    /// Advance the fabric's global step clock (monotonic max — racing
+    /// learners can observe out of order without moving it backwards).
+    pub fn observe_step(&self, step: u64) {
+        self.step.fetch_max(step, Ordering::Relaxed);
+    }
+
+    pub fn current_step(&self) -> u64 {
+        self.step.load(Ordering::Relaxed)
+    }
+
+    /// Whether endpoint `j` is dead under the static plan or under the
+    /// timeline *at the current step clock* (no plan/timeline = alive).
+    /// The fetch path checks this before resolving an owner group so a
+    /// dead owner's claims can be evicted without issuing a doomed
+    /// transfer.
     pub fn endpoint_dead(&self, j: usize) -> bool {
-        self.fault
+        self.endpoint_dead_at(j, self.current_step())
+    }
+
+    /// Step-explicit deadness query — the accounting-deterministic form:
+    /// callers that know the training step a fetch belongs to get an
+    /// answer that is a pure function of `(j, step)`, immune to races
+    /// against the global clock.
+    pub fn endpoint_dead_at(&self, j: usize, step: u64) -> bool {
+        if self
+            .fault
             .read()
             .unwrap()
             .as_ref()
             .map(|p| p.is_dead(j))
+            .unwrap_or(false)
+        {
+            return true;
+        }
+        self.timeline
+            .read()
+            .unwrap()
+            .as_ref()
+            .map(|t| t.is_dead_at(j, step))
             .unwrap_or(false)
     }
 
@@ -246,19 +350,37 @@ impl Fabric {
     /// scale; extra latency and jitter from both endpoints add as
     /// propagation (they pipeline, like base latency).
     fn fault_terms(&self, from: usize, to: usize) -> (f64, u64) {
-        let guard = self.fault.read().unwrap();
-        let Some(plan) = guard.as_ref() else {
-            return (1.0, 0);
-        };
-        let a = plan.node(from);
-        let b = plan.node(to);
-        let scale = a.link_bw_scale.min(b.link_bw_scale).clamp(1e-9, 1.0);
-        let extra_s = a.extra_latency_s.max(0.0)
-            + b.extra_latency_s.max(0.0)
-            + plan.link_jitter_s(from)
-            + plan.link_jitter_s(to);
-        let extra_ns = Duration::from_secs_f64(extra_s).as_nanos() as u64;
-        (1.0 / scale, extra_ns)
+        self.fault_terms_at(from, to, self.current_step())
+    }
+
+    fn fault_terms_at(&self, from: usize, to: usize, step: u64) -> (f64, u64) {
+        let (mut inv_scale, mut extra_s) = (1.0f64, 0.0f64);
+        if let Some(plan) = self.fault.read().unwrap().as_ref() {
+            let a = plan.node(from);
+            let b = plan.node(to);
+            let scale =
+                a.link_bw_scale.min(b.link_bw_scale).clamp(1e-9, 1.0);
+            inv_scale = inv_scale.max(1.0 / scale);
+            extra_s += a.extra_latency_s.max(0.0)
+                + b.extra_latency_s.max(0.0)
+                + plan.link_jitter_s(from)
+                + plan.link_jitter_s(to);
+        }
+        if let Some(tl) = self.timeline.read().unwrap().as_ref() {
+            let a = tl.spec_at(from, step);
+            let b = tl.spec_at(to, step);
+            let scale =
+                a.link_bw_scale.min(b.link_bw_scale).clamp(1e-9, 1.0);
+            inv_scale = inv_scale.max(1.0 / scale);
+            extra_s += a.extra_latency_s.max(0.0)
+                + b.extra_latency_s.max(0.0)
+                + tl.link_jitter_s(from, step)
+                + tl.link_jitter_s(to, step);
+        }
+        if extra_s <= 0.0 {
+            return (inv_scale, 0);
+        }
+        (inv_scale, Duration::from_secs_f64(extra_s).as_nanos() as u64)
     }
 
     fn now_ns(&self) -> u64 {
@@ -322,19 +444,29 @@ impl Fabric {
         to: usize,
         bytes: u64,
     ) -> Result<TransferHandle<'_>> {
-        let (occ_scale, extra_ns) = {
-            let guard = self.fault.read().unwrap();
-            if let Some(plan) = guard.as_ref() {
-                if plan.is_dead(from) {
-                    bail!("transfer from dead endpoint {from}");
-                }
-                if plan.is_dead(to) {
-                    bail!("transfer to dead endpoint {to}");
-                }
-            }
-            drop(guard);
-            self.fault_terms(from, to)
-        };
+        self.try_transfer_begin_at(from, to, bytes, self.current_step())
+    }
+
+    /// Step-explicit [`try_transfer_begin`]: deadness and degradation are
+    /// evaluated at the training step the transfer belongs to, so a
+    /// prefetching loader racing the global clock still gets
+    /// accounting-deterministic refusals.
+    ///
+    /// [`try_transfer_begin`]: Fabric::try_transfer_begin
+    pub fn try_transfer_begin_at(
+        &self,
+        from: usize,
+        to: usize,
+        bytes: u64,
+        step: u64,
+    ) -> Result<TransferHandle<'_>> {
+        if self.endpoint_dead_at(from, step) {
+            bail!("transfer from dead endpoint {from}");
+        }
+        if self.endpoint_dead_at(to, step) {
+            bail!("transfer to dead endpoint {to}");
+        }
+        let (occ_scale, extra_ns) = self.fault_terms_at(from, to, step);
         Ok(self.transfer_begin_inner(from, to, bytes, occ_scale, extra_ns))
     }
 
@@ -787,5 +919,95 @@ mod tests {
         let mut b = vec![0.0f32; 4];
         let mut bufs: Vec<&mut [f32]> = vec![&mut a[..], &mut b[..]];
         f.allreduce_sum(&mut bufs);
+    }
+
+    #[test]
+    fn timeline_opens_and_closes_dead_windows() {
+        use crate::fault::FaultTimeline;
+        let f = virtual_fabric();
+        f.set_fault_timeline(Some(Arc::new(
+            FaultTimeline::new(3, 4).kill(1, 10).revive(1, 20),
+        )));
+        // Step-explicit queries are pure in (node, step).
+        assert!(!f.endpoint_dead_at(1, 9));
+        assert!(f.endpoint_dead_at(1, 10));
+        assert!(f.endpoint_dead_at(1, 19));
+        assert!(!f.endpoint_dead_at(1, 20));
+        assert!(f.try_transfer_begin_at(1, 0, 1000, 15).is_err());
+        assert!(f.try_transfer_begin_at(0, 1, 1000, 15).is_err());
+        f.try_transfer_begin_at(1, 0, 1000, 25).unwrap().wait();
+        // The clockless query follows the observed step.
+        f.observe_step(15);
+        assert!(f.endpoint_dead(1));
+        f.observe_step(20);
+        assert!(!f.endpoint_dead(1));
+        // The clock is monotonic: stale observations don't rewind it.
+        f.observe_step(5);
+        assert_eq!(f.current_step(), 20);
+        f.set_fault_timeline(None);
+        assert!(!f.endpoint_dead_at(1, 15));
+    }
+
+    #[test]
+    fn timeline_degradation_stretches_transfers_in_window() {
+        use crate::fault::FaultTimeline;
+        let f = virtual_fabric();
+        let clean = f.transfer_begin(1, 0, 1 << 20).cost();
+        f.set_fault_timeline(Some(Arc::new(FaultTimeline::new(0, 4).at(
+            8,
+            1,
+            NodeFault { link_bw_scale: 0.5, ..NodeFault::healthy() },
+        ))));
+        f.observe_step(4);
+        assert_eq!(f.transfer_begin(1, 0, 1 << 20).cost(), clean);
+        f.observe_step(8);
+        assert!(f.transfer_begin(1, 0, 1 << 20).cost() > clean);
+        // Untouched endpoint pairs stay clean even inside the window.
+        assert_eq!(f.transfer_begin(2, 3, 1 << 20).cost(), clean);
+    }
+
+    #[test]
+    fn wait_deadline_is_a_noop_on_virtual_fabrics() {
+        let f = virtual_fabric();
+        let h = f.transfer_begin(1, 0, 1 << 30);
+        let cost = h.cost();
+        // Virtual time never blocks, so it can never miss.
+        let got = h.wait_deadline(Some(Duration::from_nanos(1))).unwrap();
+        assert_eq!(got, cost);
+    }
+
+    #[test]
+    fn wait_deadline_bounds_real_blocking_time() {
+        let f = Fabric::new(FabricConfig {
+            real_time: true,
+            link_bandwidth_bps: 1e6, // 1 MB/s: 1 MiB ~ 1s on the wire
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        let err = f
+            .transfer_begin(1, 0, 1 << 20)
+            .wait_deadline(Some(Duration::from_millis(30)))
+            .unwrap_err();
+        let waited = t0.elapsed();
+        assert_eq!(err.kind, crate::fault::StallKind::Transfer);
+        assert!(waited >= Duration::from_millis(25), "{waited:?}");
+        assert!(waited < Duration::from_millis(500), "{waited:?}");
+        // The reservation still completed its accounting.
+        assert_eq!(f.snapshot().transfers, 1);
+        // A comfortable budget passes.
+        f.transfer_begin(1, 0, 64)
+            .wait_deadline(Some(Duration::from_secs(5)))
+            .unwrap();
+    }
+
+    #[test]
+    fn deadlines_install_and_clear() {
+        let f = virtual_fabric();
+        assert_eq!(f.deadlines(), Deadlines::none());
+        let d = Deadlines::uniform(Duration::from_millis(250));
+        f.set_deadlines(d);
+        assert_eq!(f.deadlines().transfer, Some(Duration::from_millis(250)));
+        f.set_deadlines(Deadlines::none());
+        assert_eq!(f.deadlines().barrier, None);
     }
 }

@@ -37,12 +37,13 @@ use super::{
 use crate::balance::{self, Transfer};
 use crate::cache::CacheDirectory;
 use crate::metrics::{PlannerCounters, PlannerSnapshot};
+use crate::fault::{StallError, StallKind};
 use anyhow::{bail, ensure, Result};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Which partitioning scheme a plan was computed under.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -502,6 +503,21 @@ impl PartitionPlanner {
     /// process (learners no longer materialize private copies). Blocks
     /// until the planner has built it.
     pub fn epoch_plan(&self, epoch: u64) -> Result<Arc<EpochPlan>> {
+        self.epoch_plan_deadline(epoch, None)
+    }
+
+    /// [`epoch_plan`] with a bounded wait: a planner thread wedged behind
+    /// a dead dependency surfaces as a typed
+    /// [`StallError`](crate::fault::StallError)-rooted error within
+    /// `deadline` instead of hanging the epoch kickoff.
+    ///
+    /// [`epoch_plan`]: PartitionPlanner::epoch_plan
+    pub fn epoch_plan_deadline(
+        &self,
+        epoch: u64,
+        deadline: Option<Duration>,
+    ) -> Result<Arc<EpochPlan>> {
+        let t0 = Instant::now();
         let mut board = self.shared.board.lock().unwrap();
         loop {
             ensure!(!board.closed, "partition planner closed");
@@ -515,7 +531,25 @@ impl PartitionPlanner {
                     st.epoch
                 );
             }
-            board = self.shared.cv.wait(board).unwrap();
+            board = match deadline {
+                None => self.shared.cv.wait(board).unwrap(),
+                Some(budget) => {
+                    let waited = t0.elapsed();
+                    if waited >= budget {
+                        return Err(StallError {
+                            kind: StallKind::Plan,
+                            waited,
+                            deadline: budget,
+                        }
+                        .into());
+                    }
+                    self.shared
+                        .cv
+                        .wait_timeout(board, budget - waited)
+                        .unwrap()
+                        .0
+                }
+            };
         }
     }
 
@@ -531,6 +565,22 @@ impl PartitionPlanner {
     /// is partition work on the calling thread, exactly what the planner
     /// exists to prevent, and benches/CI fail if it ever goes nonzero.
     pub fn get(&self, epoch: u64, step: u64) -> Result<Arc<StepPlan>> {
+        self.get_deadline(epoch, step, None)
+    }
+
+    /// [`get`] with a bounded wait: if the step's plan has not been
+    /// published within `deadline`, return a typed
+    /// [`StallError`](crate::fault::StallError)-rooted error instead of
+    /// blocking the training step indefinitely behind a wedged planner
+    /// (or a peer that stopped retiring plans). `None` waits forever.
+    ///
+    /// [`get`]: PartitionPlanner::get
+    pub fn get_deadline(
+        &self,
+        epoch: u64,
+        step: u64,
+        deadline: Option<Duration>,
+    ) -> Result<Arc<StepPlan>> {
         enum Served {
             Published(Arc<StepPlan>, bool),
             Retired(Arc<EpochPlan>, EpochScheme),
@@ -571,7 +621,25 @@ impl PartitionPlanner {
             if waited.is_none() {
                 waited = Some(Instant::now());
             }
-            board = shared.cv.wait(board).unwrap();
+            board = match deadline {
+                None => shared.cv.wait(board).unwrap(),
+                Some(budget) => {
+                    let spent = waited.unwrap().elapsed();
+                    if spent >= budget {
+                        return Err(StallError {
+                            kind: StallKind::Plan,
+                            waited: spent,
+                            deadline: budget,
+                        }
+                        .into());
+                    }
+                    shared
+                        .cv
+                        .wait_timeout(board, budget - spent)
+                        .unwrap()
+                        .0
+                }
+            };
         };
         drop(board);
         let c = &shared.counters;

@@ -126,7 +126,31 @@ pub struct SimConfig {
     /// step together (the live `amend_weights` protocol); when false it
     /// keeps a full 1/p share and gates every synchronous step.
     pub straggler_rebalance: bool,
+    /// Node-death injection (DESIGN.md §12): the DES mirror of the live
+    /// chaos timeline + adoption protocol. `None` is a healthy cluster,
+    /// bit-identical to the pre-fault model.
+    pub node_death: Option<NodeDeath>,
     pub seed: u64,
+}
+
+/// One node-death event for the DES, mirroring the trainer's recovery
+/// model: the kill step pays the survivors' detection stall (a burned
+/// barrier-deadline budget), and every dead step afterwards is gated by
+/// the adopter carrying a double share through its per-node stages
+/// (preprocess, assembly, compute), while the dead node's cache-served
+/// share re-routes to storage (its directory claims are evicted).
+#[derive(Clone, Copy, Debug)]
+pub struct NodeDeath {
+    pub node: usize,
+    /// First dead step (the step whose rendezvous misses its deadline).
+    pub kill_step: usize,
+    /// First step the node is back; steps in `[kill_step, revive_step)`
+    /// run p−1 nodes. Clamp to `steps()` for a dies-for-the-epoch run
+    /// (the live protocol rejoins only at epoch boundaries).
+    pub revive_step: usize,
+    /// Detection stall charged once, on the kill step: the barrier
+    /// deadline survivors must burn before reconciling membership.
+    pub detect_stall_s: f64,
 }
 
 impl SimConfig {
@@ -356,24 +380,55 @@ pub fn simulate_epoch(cfg: &SimConfig) -> SimResult {
         }
         _ => 1.0,
     };
+    // Node-death gate (DESIGN.md §12): on dead steps the adopter carries
+    // the dead node's share too — its per-node stages run at 2× batch —
+    // and the kill step burns the detection stall once. The dead node's
+    // cache-served share (α·B/p samples) re-routes to storage after its
+    // directory claims are swept (a fluid upper bound: the re-claimed
+    // samples keep reading storage until repopulation).
+    if let Some(d) = cfg.node_death {
+        assert!(d.node < cfg.nodes, "dead node out of range");
+        assert!(cfg.nodes > 1, "a 1-node job cannot survive a death");
+    }
+    let dead_reroute_bytes = match (cfg.node_death, cfg.scheme) {
+        (Some(_), Scheme::DistCache | Scheme::Loc) => {
+            cfg.global_batch() as f64 / cfg.nodes as f64
+                * cfg.alpha
+                * cfg.catalog.avg_bytes as f64
+        }
+        _ => 0.0,
+    };
     for s in 0..steps {
         let tr = step_traffic(cfg, &mut rng);
+        let dead = matches!(
+            cfg.node_death,
+            Some(d) if s >= d.kill_step && s < d.revive_step
+        );
+        let share_gate = if dead { 2.0 } else { 1.0 };
+        let detect_stall = match cfg.node_death {
+            Some(d) if dead && s == d.kill_step => d.detect_stall_s.max(0.0),
+            _ => 0.0,
+        };
         // Pipelined planning (the planner architecture) joins the supply
         // stages and overlaps compute; synchronous planning (the legacy
         // per-learner recompute) gates the training step directly.
-        let t_compute = compute_time(tr.max_node_batch)
+        let t_compute = compute_time(tr.max_node_batch * share_gate)
+            + detect_stall
             + if cfg.plan_pipelined { 0.0 } else { t_plan };
         // Supply stages: shared storage (serialized across nodes), then
         // parallel per-link exchange, then parallel per-node preprocess.
-        let t_storage = tr.storage_bytes / cfg.r_storage_bps;
+        let step_storage_bytes =
+            tr.storage_bytes + if dead { dead_reroute_bytes } else { 0.0 };
+        let t_storage = step_storage_bytes / cfg.r_storage_bps;
         let t_remote = tr.max_link_bytes / cfg.rc_link_bps;
         let t_pre = if u_node.is_finite() {
-            tr.max_node_batch / u_node * straggler_m
+            tr.max_node_batch * share_gate / u_node * straggler_m
         } else {
             0.0
         };
         // Per-node batch assembly (local fetch of the node's share).
-        let t_local = tr.max_node_batch * cfg.catalog.avg_bytes as f64
+        let t_local = tr.max_node_batch * share_gate
+            * cfg.catalog.avg_bytes as f64
             / cfg.local_fetch_bps
             * straggler_m;
         let t_supply = t_storage + t_remote + t_disk + t_pre + t_local
@@ -393,7 +448,7 @@ pub fn simulate_epoch(cfg: &SimConfig) -> SimResult {
         result.wait_time_s += compute_start - prev_compute;
         compute_end[s] = compute_start + t_compute;
 
-        result.storage_bytes += tr.storage_bytes as u64;
+        result.storage_bytes += step_storage_bytes as u64;
         result.remote_bytes += tr.remote_bytes_total as u64;
         result.local_hits += tr.local_hits;
         result.train_time_s += t_compute;
@@ -735,6 +790,54 @@ mod tests {
         let mut inert = base.clone();
         inert.straggler = Some((0, 1.0));
         assert_eq!(simulate_epoch(&inert).epoch_time_s, t_clean);
+    }
+
+    #[test]
+    fn node_death_gates_epoch_and_zero_injection_is_inert() {
+        // The DES mirror of the trainer's recovery model: a mid-epoch
+        // death charges the detection stall once, then the adopter's
+        // double share gates every remaining dead step; reviving earlier
+        // recovers part of the epoch. A `None` injection is bit-identical
+        // to the pre-fault model.
+        let base = presets::loading_only(
+            Catalog::imagenet_1k(),
+            32,
+            Scheme::Loc,
+            true,
+        );
+        let t_clean = simulate_epoch(&base).epoch_time_s;
+        let steps = base.steps();
+        let mut dead = base.clone();
+        dead.node_death = Some(NodeDeath {
+            node: 3,
+            kill_step: steps / 2,
+            revive_step: steps,
+            detect_stall_s: 2.0,
+        });
+        let r_dead = simulate_epoch(&dead);
+        assert!(
+            r_dead.epoch_time_s > t_clean + 2.0,
+            "death must gate the epoch: {} vs {t_clean}",
+            r_dead.epoch_time_s
+        );
+        // Evicted claims re-route to storage on dead steps.
+        let clean_storage = simulate_epoch(&base).storage_bytes;
+        assert!(r_dead.storage_bytes > clean_storage);
+
+        let mut brief = dead.clone();
+        brief.node_death.as_mut().unwrap().revive_step = steps / 2 + 4;
+        let t_brief = simulate_epoch(&brief).epoch_time_s;
+        assert!(
+            t_brief < r_dead.epoch_time_s,
+            "earlier revival must recover time: {t_brief} vs {}",
+            r_dead.epoch_time_s
+        );
+        assert!(t_brief > t_clean, "a brief death still costs something");
+
+        // Zero injection ≡ no injection, bitwise.
+        let mut none = base.clone();
+        none.node_death = None;
+        assert_eq!(simulate_epoch(&none).epoch_time_s, t_clean);
     }
 
     #[test]

@@ -70,6 +70,7 @@ pub fn loading_only(
         plan_pipelined: true,
         straggler: None,
         straggler_rebalance: true,
+        node_death: None,
         seed: 0xF1C5,
     }
 }

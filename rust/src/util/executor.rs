@@ -128,9 +128,31 @@ impl Executor {
         T: Send + 'static,
         F: FnOnce() -> T + Send + 'static,
     {
+        self.run_batch_deadline(tasks, None)
+            .expect("indefinite latch wait cannot miss")
+    }
+
+    /// [`run_batch`] with a bounded completion wait: if the latch has not
+    /// drained within `deadline`, give up with a typed
+    /// [`StallError`](crate::fault::StallError) instead of blocking
+    /// forever behind a task stuck on a dead peer. The abandoned tasks
+    /// keep running harmlessly on the pool (slots and latch are `Arc`d),
+    /// so the pool itself is never poisoned by a miss. `None` waits
+    /// indefinitely (the legacy behavior).
+    ///
+    /// [`run_batch`]: Executor::run_batch
+    pub fn run_batch_deadline<T, F>(
+        &self,
+        tasks: Vec<F>,
+        deadline: Option<std::time::Duration>,
+    ) -> Result<Vec<std::thread::Result<T>>, crate::fault::StallError>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
         let n = tasks.len();
         if n == 0 {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         let slots: Arc<Vec<Mutex<Option<std::thread::Result<T>>>>> =
             Arc::new((0..n).map(|_| Mutex::new(None)).collect());
@@ -151,16 +173,36 @@ impl Executor {
         }
         let (remaining, cv) = &*latch;
         let mut left = remaining.lock().unwrap();
-        while *left > 0 {
-            left = cv.wait(left).unwrap();
+        match deadline {
+            None => {
+                while *left > 0 {
+                    left = cv.wait(left).unwrap();
+                }
+            }
+            Some(budget) => {
+                let t0 = std::time::Instant::now();
+                while *left > 0 {
+                    let waited = t0.elapsed();
+                    if waited >= budget {
+                        return Err(crate::fault::StallError {
+                            kind: crate::fault::StallKind::Task,
+                            waited,
+                            deadline: budget,
+                        });
+                    }
+                    let (guard, _timeout) =
+                        cv.wait_timeout(left, budget - waited).unwrap();
+                    left = guard;
+                }
+            }
         }
         drop(left);
-        slots
+        Ok(slots
             .iter()
             .map(|slot| {
                 slot.lock().unwrap().take().expect("task slot filled at latch")
             })
-            .collect()
+            .collect())
     }
 
     pub fn threads(&self) -> usize {
@@ -299,6 +341,43 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(total.load(Ordering::Relaxed), 40);
+    }
+
+    #[test]
+    fn run_batch_deadline_bounds_the_latch_wait() {
+        use std::time::{Duration, Instant};
+        let ex = Executor::new(2);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g2 = Arc::clone(&gate);
+        let t0 = Instant::now();
+        let err = ex
+            .run_batch_deadline(
+                vec![move || {
+                    let (m, cv) = &*g2;
+                    let mut open = m.lock().unwrap();
+                    while !*open {
+                        open = cv.wait(open).unwrap();
+                    }
+                    1u32
+                }],
+                Some(Duration::from_millis(40)),
+            )
+            .unwrap_err();
+        let waited = t0.elapsed();
+        assert_eq!(err.kind, crate::fault::StallKind::Task);
+        assert!(waited >= Duration::from_millis(35), "{waited:?}");
+        assert!(waited < Duration::from_secs(2), "{waited:?}");
+        // Release the straggler: the pool is unharmed and reusable.
+        let (m, cv) = &*gate;
+        *m.lock().unwrap() = true;
+        cv.notify_all();
+        let out = ex
+            .run_batch_deadline(
+                vec![|| 7u32],
+                Some(Duration::from_secs(5)),
+            )
+            .unwrap();
+        assert_eq!(*out[0].as_ref().unwrap(), 7);
     }
 
     #[test]

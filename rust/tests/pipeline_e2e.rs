@@ -3,13 +3,15 @@
 //! on the throttled storage system while Reg epochs stay I/O-bound; and
 //! training still learns (accuracy via the compiled eval program).
 
-use dlio::coordinator::{SamplerKind, Trainer, TrainerConfig};
+use dlio::coordinator::{Checkpoint, SamplerKind, Trainer, TrainerConfig};
+use dlio::fault::{Deadlines, FaultTimeline};
 use dlio::loader::LoaderConfig;
 use dlio::net::{Fabric, FabricConfig};
 use dlio::runtime::{default_artifacts_dir, Engine};
 use dlio::storage::{generate, StorageSystem, SyntheticSpec, TokenBucket};
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Duration;
 
 fn dataset(tag: &str, n: u64) -> PathBuf {
     let dir = std::env::temp_dir()
@@ -354,4 +356,246 @@ fn partial_cache_capacity_limits_alpha() {
         );
     }
     assert!(report.learners_in_sync());
+}
+
+#[test]
+fn chaos_kill_and_rejoin_trains_every_sample_exactly_once() {
+    // DESIGN.md §12 acceptance: a 3-learner Loc job whose node 2 dies
+    // mid-epoch-1 and revives for epoch 2 must complete end to end. The
+    // survivors detect the death as a barrier-deadline miss, bump the
+    // membership epoch, sweep the dead node's directory claims, and the
+    // adopter reproduces the dead share (full-p mean, so the job stays
+    // in sync); the revived node rejoins at the epoch boundary with a
+    // cold cache. Every epoch must still train exactly the sample
+    // multiset a fault-free run trains.
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        return;
+    }
+    let data = dataset("chaos", 240);
+    let run3 = |timeline: Option<Arc<FaultTimeline>>,
+                deadlines: Deadlines|
+     -> dlio::coordinator::TrainingReport {
+        let engine = Arc::new(Engine::load(&default_artifacts_dir()).unwrap());
+        let storage = Arc::new(StorageSystem::open(&data, None).unwrap());
+        let fabric = Arc::new(Fabric::new(FabricConfig {
+            real_time: false,
+            ..Default::default()
+        }));
+        let cfg = TrainerConfig {
+            p: 3,
+            epochs: 3,
+            local_batch: 16,
+            lr: 0.08,
+            sampler: SamplerKind::Loc,
+            loader: LoaderConfig {
+                workers: 2,
+                threads_per_worker: 2,
+                prefetch_batches: 2,
+            },
+            seed: 77,
+            cache_capacity_bytes: u64::MAX,
+            flip_prob: 0.5,
+            decode_s_per_kib: 0.0,
+            eval_samples: 0,
+            checkpoint_path: None,
+            fault_timeline: timeline,
+            deadlines,
+            ..Default::default()
+        };
+        Trainer::new(engine, storage, fabric, cfg).unwrap().run().unwrap()
+    };
+    // 240 samples / (3 × 16) = 5 steps per epoch; epoch 1 spans global
+    // steps 5..10. Node 2 dies at step 7 and is healthy again from the
+    // epoch-2 boundary (step 10), where the trainer readmits it.
+    let tl = Arc::new(FaultTimeline::new(9, 3).kill(2, 7).revive(2, 10));
+    let chaos = run3(
+        Some(tl),
+        Deadlines {
+            barrier: Some(Duration::from_secs(2)),
+            ..Deadlines::uniform(Duration::from_secs(20))
+        },
+    );
+    let clean = run3(None, Deadlines::none());
+
+    // One death, one epoch-boundary rejoin, detected as deadline misses;
+    // recovery completed within the detecting step (proactive adoption).
+    assert_eq!(chaos.recovery.deaths, 1);
+    assert_eq!(chaos.recovery.revivals, 1);
+    assert_eq!(chaos.recovery.membership_epoch, 2);
+    assert!(chaos.recovery.deadline_misses >= 1);
+    assert!(chaos.recovery.mttr_steps >= 1);
+    assert!(chaos.learners_in_sync());
+    assert_eq!(clean.recovery.deaths, 0);
+    assert_eq!(clean.recovery.deadline_misses, 0);
+
+    // Exactly-once: every epoch trains the full 240-sample multiset —
+    // own shares plus adopted shares — matching the fault-free run's
+    // order-independent digest even though the partitions differ.
+    for (c, h) in clean.epochs.iter().zip(chaos.epochs.iter()) {
+        assert_eq!(h.trained_samples, 240, "epoch {}", h.epoch);
+        assert_eq!(
+            (h.trained_samples, h.sample_digest),
+            (c.trained_samples, c.sample_digest),
+            "epoch {}: chaos run trained a different sample multiset",
+            h.epoch
+        );
+    }
+}
+
+#[test]
+fn checkpoint_kill_resume_matches_uninterrupted_run() {
+    // Step-granular resume (DESIGN.md §12): a job killed right after a
+    // periodic checkpoint, restarted with `resume_from`, must train
+    // precisely the steps the killed run did not — and land on final
+    // parameters bit-identical to a never-interrupted run.
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        return;
+    }
+    let data = dataset("resume", 160);
+    let ckpt = std::env::temp_dir()
+        .join(format!("dlio-e2e-resume-{}.ckpt", std::process::id()));
+    let _ = std::fs::remove_file(&ckpt);
+    let run_cfg = |cfg: TrainerConfig| {
+        let engine = Arc::new(Engine::load(&default_artifacts_dir()).unwrap());
+        let storage = Arc::new(StorageSystem::open(&data, None).unwrap());
+        let fabric = Arc::new(Fabric::new(FabricConfig {
+            real_time: false,
+            ..Default::default()
+        }));
+        Trainer::new(engine, storage, fabric, cfg).unwrap().run()
+    };
+    let base = TrainerConfig {
+        p: 2,
+        epochs: 3,
+        local_batch: 16,
+        lr: 0.08,
+        sampler: SamplerKind::Loc,
+        loader: LoaderConfig {
+            workers: 2,
+            threads_per_worker: 2,
+            prefetch_batches: 2,
+        },
+        seed: 77,
+        cache_capacity_bytes: u64::MAX,
+        flip_prob: 0.5,
+        decode_s_per_kib: 0.0,
+        eval_samples: 0,
+        checkpoint_path: None,
+        ..Default::default()
+    };
+
+    // 160 samples / 32 = 5 steps per epoch, 15 global steps. Interval 7
+    // saves at positions 7 and 14; the kill lands right after the
+    // step-14 save — four steps into epoch 2.
+    let killed = run_cfg(TrainerConfig {
+        checkpoint_path: Some(ckpt.clone()),
+        checkpoint_interval_steps: 7,
+        halt_after_gstep: Some(13),
+        ..base.clone()
+    });
+    let err = killed.expect_err("the halted run must fail like a kill");
+    assert!(
+        format!("{err:#}").contains("simulated kill"),
+        "unexpected failure: {err:#}"
+    );
+    let saved = Checkpoint::load(&ckpt).unwrap();
+    assert_eq!(saved.step, 14, "last periodic save is position 14");
+    assert_eq!(saved.epoch, 2);
+    assert_eq!(saved.membership_epoch, 0);
+    assert_eq!(saved.directory.len(), 160, "frozen directory captured");
+
+    let resumed = run_cfg(TrainerConfig {
+        resume_from: Some(ckpt.clone()),
+        ..base.clone()
+    })
+    .unwrap();
+    let full = run_cfg(base).unwrap();
+
+    // The resumed run trained exactly the one remaining step (32
+    // samples), skipping everything the killed run completed.
+    assert_eq!(resumed.epochs[0].trained_samples, 0);
+    assert_eq!(resumed.epochs[1].trained_samples, 0);
+    assert_eq!(resumed.epochs[2].trained_samples, 32);
+    assert_ne!(resumed.epochs[2].sample_digest, 0);
+    assert_eq!(full.epochs[2].trained_samples, 160);
+
+    // Exactness: frozen directory + restored params + skipped prefix
+    // give bit-identical final parameters.
+    assert_eq!(resumed.params, full.params);
+    assert!(resumed.learners_in_sync());
+    std::fs::remove_file(&ckpt).unwrap();
+}
+
+#[test]
+fn chaos_timeline_is_deterministic_and_zero_injection_is_free() {
+    // Fault determinism (DESIGN.md §12): the same seed + timeline gives
+    // bit-identical results twice; under Reg (no directory amendments)
+    // the chaos run is even bit-identical to the fault-free run, because
+    // the adopter reproduces the dead learner's exact share; and an
+    // event-free timeline is completely inert.
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        return;
+    }
+    let data = dataset("chaosdet", 128);
+    let run_reg = |timeline: Option<Arc<FaultTimeline>>,
+                   deadlines: Deadlines|
+     -> dlio::coordinator::TrainingReport {
+        let engine = Arc::new(Engine::load(&default_artifacts_dir()).unwrap());
+        let storage = Arc::new(StorageSystem::open(&data, None).unwrap());
+        let fabric = Arc::new(Fabric::new(FabricConfig {
+            real_time: false,
+            ..Default::default()
+        }));
+        let cfg = TrainerConfig {
+            p: 2,
+            epochs: 3,
+            local_batch: 16,
+            lr: 0.08,
+            sampler: SamplerKind::Reg,
+            loader: LoaderConfig {
+                workers: 2,
+                threads_per_worker: 2,
+                prefetch_batches: 2,
+            },
+            seed: 77,
+            cache_capacity_bytes: 0,
+            flip_prob: 0.5,
+            decode_s_per_kib: 0.0,
+            eval_samples: 0,
+            checkpoint_path: None,
+            fault_timeline: timeline,
+            deadlines,
+            ..Default::default()
+        };
+        Trainer::new(engine, storage, fabric, cfg).unwrap().run().unwrap()
+    };
+    // 128 samples / 32 = 4 steps per epoch; node 1 dies at global step 5
+    // (mid-epoch-1) and revives for epoch 2 (step 8).
+    let tl = Arc::new(FaultTimeline::new(5, 2).kill(1, 5).revive(1, 8));
+    let dl = Deadlines {
+        barrier: Some(Duration::from_secs(2)),
+        ..Deadlines::uniform(Duration::from_secs(20))
+    };
+    let a = run_reg(Some(Arc::clone(&tl)), dl);
+    let b = run_reg(Some(tl), dl);
+    assert_eq!(a.step_losses, b.step_losses, "chaos must be replayable");
+    assert_eq!(a.params, b.params);
+    assert_eq!(a.recovery.deaths, 1);
+    assert_eq!(b.recovery.membership_epoch, 2);
+
+    let clean = run_reg(None, Deadlines::none());
+    assert_eq!(
+        a.step_losses, clean.step_losses,
+        "adoption must reproduce the dead share bit-for-bit under Reg"
+    );
+    assert_eq!(a.params, clean.params);
+
+    let inert = run_reg(
+        Some(Arc::new(FaultTimeline::new(5, 2))),
+        Deadlines::none(),
+    );
+    assert_eq!(inert.step_losses, clean.step_losses);
+    assert_eq!(inert.params, clean.params);
+    assert_eq!(inert.recovery.deaths, 0);
+    assert_eq!(inert.recovery.deadline_misses, 0);
 }
