@@ -8,7 +8,10 @@ pub mod stack;
 
 pub use directory::CacheDirectory;
 pub use sample_cache::{Policy, SampleCache};
-pub use stack::{Admit, CacheStack, CommitHook, DiskTier, Lookup, SpillConfig};
+pub use stack::{
+    sweep_orphaned_spills, Admit, CacheStack, CommitHook, DiskTier, Lookup,
+    SpillConfig,
+};
 
 use crate::storage::Sample;
 use std::sync::Arc;

@@ -573,6 +573,76 @@ impl CacheStack {
     }
 }
 
+/// Startup sweep (DESIGN.md §13): remove spill segments orphaned by dead
+/// processes.
+///
+/// [`DiskTier`] unlinks its segment on drop, but a SIGKILLed process —
+/// exactly what the multi-process supervisor injects — never runs `Drop`,
+/// so its segment leaks in `spill_dir` forever. This sweep runs at job
+/// startup, before any new tier is created: it scans `dir` for files
+/// matching the crate's spill naming schemes (`dlio-spill-{pid}-…` /
+/// `dlio-stack-…-{pid}-….spill`), parses the owning pid out of the name,
+/// and removes the file only when that process no longer exists. Files
+/// owned by live processes (including our own) and files that don't
+/// match the naming scheme are never touched. Returns the number of
+/// segments removed; all I/O errors are swallowed (a sweep must never
+/// block a job from starting).
+pub fn sweep_orphaned_spills(dir: &Path) -> usize {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return 0;
+    };
+    let mut removed = 0;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(pid) = spill_owner_pid(name) else { continue };
+        if pid == std::process::id() || process_exists(pid) {
+            continue;
+        }
+        if std::fs::remove_file(entry.path()).is_ok() {
+            removed += 1;
+        }
+    }
+    removed
+}
+
+/// Parse the owning pid out of a spill-segment file name, or `None` when
+/// the name doesn't match a known scheme.
+fn spill_owner_pid(name: &str) -> Option<u32> {
+    if let Some(rest) = name.strip_prefix("dlio-spill-") {
+        // Trainer scheme: dlio-spill-{pid}-{job}-l{j}.seg
+        if !name.ends_with(".seg") {
+            return None;
+        }
+        return rest.split('-').next()?.parse().ok();
+    }
+    if name.starts_with("dlio-stack-") && name.ends_with(".spill") {
+        // Test scheme: dlio-stack-{tag}-{pid}-{thread}.spill — the pid
+        // is the second-to-last dash-separated segment (tags may
+        // themselves contain dashes).
+        let stem = name.strip_suffix(".spill")?;
+        let mut parts: Vec<&str> = stem.split('-').collect();
+        parts.pop()?; // thread id
+        return parts.pop()?.parse().ok();
+    }
+    None
+}
+
+/// Liveness check for the sweep. On Linux `/proc/{pid}` is authoritative;
+/// elsewhere we can't check cheaply, so the sweep conservatively treats
+/// every pid as alive (leak beats deleting a live process's segment).
+fn process_exists(pid: u32) -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        std::path::Path::new(&format!("/proc/{pid}")).exists()
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = pid;
+        true
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -807,5 +877,42 @@ mod tests {
         assert_eq!(ts.misses, 1);
         assert_eq!(ts.rejected, 1);
         assert_eq!(ts.disk_capacity, 0);
+    }
+
+    #[test]
+    fn sweep_removes_only_dead_process_segments() {
+        let dir = std::env::temp_dir().join(format!(
+            "dlio-sweep-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // Orphan: pid 4000000000 is above PID_MAX_LIMIT, so it cannot
+        // be a live process on any Linux system.
+        let orphan = dir.join("dlio-spill-4000000000-7-l2.seg");
+        let orphan_stack = dir.join("dlio-stack-tag-with-dash-4000000000-ThreadId(9).spill");
+        // Live: our own pid.
+        let mine = dir.join(format!("dlio-spill-{}-1-l0.seg", std::process::id()));
+        // Not ours to touch: unrelated names and wrong extensions.
+        let unrelated = dir.join("checkpoint.bin");
+        let wrong_ext = dir.join("dlio-spill-4000000000-7-l2.tmp");
+        for f in [&orphan, &orphan_stack, &mine, &unrelated, &wrong_ext] {
+            std::fs::write(f, b"x").unwrap();
+        }
+        let removed = sweep_orphaned_spills(&dir);
+        assert_eq!(removed, 2, "exactly the two dead-owner segments");
+        assert!(!orphan.exists());
+        assert!(!orphan_stack.exists());
+        assert!(mine.exists(), "live-process segments must survive");
+        assert!(unrelated.exists());
+        assert!(wrong_ext.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sweep_of_missing_dir_is_a_noop() {
+        let ghost = std::env::temp_dir().join("dlio-sweep-no-such-dir");
+        assert_eq!(sweep_orphaned_spills(&ghost), 0);
     }
 }

@@ -17,19 +17,72 @@
 //! then n_dir raw directory owner words (u32 each, u32::MAX = unowned)
 //! then n_tensors u32
 //! then per tensor: ndims u32 | dims u64... | payload f32...
+//! then FNV-1a 64 checksum (u64) over every preceding byte
 //! ```
 //!
 //! `load` recognizes the magic prefix `DLCKPT` and dispatches on the
 //! version digits, so a v1 file fails with "unsupported checkpoint
 //! version 01", not "not a checkpoint".
+//!
+//! **Corruption hardening (DESIGN.md §13).** A checkpoint is the one file
+//! a SIGKILLed process leaves behind for its successor, so `load` must
+//! treat it as adversarial: every read is bounds-checked against the
+//! file's actual length *before* any allocation is sized from file bytes
+//! (a flipped length word can't allocate gigabytes), truncation at any
+//! boundary is a typed "truncated checkpoint" error, and the trailing
+//! checksum is verified over the whole image — a bit flip that still
+//! parses structurally fails as "checksum mismatch" instead of silently
+//! restoring wrong weights. Parse errors surface before the checksum
+//! verdict so a short file reports *truncated*, not *corrupt*.
 
 use crate::runtime::HostTensor;
 use anyhow::{bail, ensure, Context, Result};
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::Path;
 
 const MAGIC_PREFIX: &[u8; 6] = b"DLCKPT";
 const VERSION: &[u8; 2] = b"02";
+
+/// FNV-1a 64-bit over `bytes` (dependency-free, stable across builds).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Bounds-checked cursor over the checkpoint body; every over-read is a
+/// typed "truncated checkpoint" error, never a panic.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn need(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        ensure!(
+            self.buf.len() - self.pos >= n,
+            "truncated checkpoint: {what}"
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.need(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.need(8, what)?.try_into().unwrap()))
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
 
 /// A saved training state.
 #[derive(Clone, Debug, PartialEq)]
@@ -46,31 +99,35 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
-    /// Atomically write to `path` (tmp file + rename).
+    /// Atomically write to `path` (tmp file + rename). The image is
+    /// built in memory so the trailing checksum covers every byte.
     pub fn save(&self, path: &Path) -> Result<()> {
+        let mut body = Vec::with_capacity(64 + self.directory.len() * 4);
+        body.extend_from_slice(MAGIC_PREFIX);
+        body.extend_from_slice(VERSION);
+        body.extend_from_slice(&self.epoch.to_le_bytes());
+        body.extend_from_slice(&self.step.to_le_bytes());
+        body.extend_from_slice(&self.membership_epoch.to_le_bytes());
+        body.extend_from_slice(&(self.directory.len() as u64).to_le_bytes());
+        for &w in &self.directory {
+            body.extend_from_slice(&w.to_le_bytes());
+        }
+        body.extend_from_slice(&(self.params.len() as u32).to_le_bytes());
+        for t in &self.params {
+            body.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+            for &d in &t.shape {
+                body.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            body.extend_from_slice(&t.byte_view());
+        }
+        let sum = fnv1a(&body);
+        body.extend_from_slice(&sum.to_le_bytes());
+
         let tmp = path.with_extension("tmp");
         {
-            let mut f = std::io::BufWriter::new(
-                std::fs::File::create(&tmp)
-                    .with_context(|| format!("create {}", tmp.display()))?,
-            );
-            f.write_all(MAGIC_PREFIX)?;
-            f.write_all(VERSION)?;
-            f.write_all(&self.epoch.to_le_bytes())?;
-            f.write_all(&self.step.to_le_bytes())?;
-            f.write_all(&self.membership_epoch.to_le_bytes())?;
-            f.write_all(&(self.directory.len() as u64).to_le_bytes())?;
-            for &w in &self.directory {
-                f.write_all(&w.to_le_bytes())?;
-            }
-            f.write_all(&(self.params.len() as u32).to_le_bytes())?;
-            for t in &self.params {
-                f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
-                for &d in &t.shape {
-                    f.write_all(&(d as u64).to_le_bytes())?;
-                }
-                f.write_all(&t.byte_view())?;
-            }
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("create {}", tmp.display()))?;
+            f.write_all(&body)?;
             f.flush()?;
         }
         std::fs::rename(&tmp, path)
@@ -79,13 +136,10 @@ impl Checkpoint {
     }
 
     pub fn load(path: &Path) -> Result<Checkpoint> {
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(path)
-                .with_context(|| format!("open {}", path.display()))?,
-        );
-        let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)
-            .with_context(|| format!("{}: truncated header", path.display()))?;
+        let data = std::fs::read(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        ensure!(data.len() >= 8, "{}: truncated header", path.display());
+        let magic = &data[..8];
         if &magic[..6] != MAGIC_PREFIX {
             bail!("{}: not a dlio checkpoint", path.display());
         }
@@ -96,58 +150,79 @@ impl Checkpoint {
                 String::from_utf8_lossy(&magic[6..]),
             );
         }
-        let mut u64buf = [0u8; 8];
-        let mut read_u64 = |f: &mut dyn Read, what: &str| -> Result<u64> {
-            f.read_exact(&mut u64buf)
-                .with_context(|| format!("truncated checkpoint: {what}"))?;
-            Ok(u64::from_le_bytes(u64buf))
-        };
-        let epoch = read_u64(&mut f, "epoch")?;
-        let step = read_u64(&mut f, "step")?;
-        let membership_epoch = read_u64(&mut f, "membership epoch")?;
-        let n_dir = read_u64(&mut f, "directory length")?;
+        ensure!(
+            data.len() >= 16,
+            "{}: truncated checkpoint: checksum trailer",
+            path.display()
+        );
+        let (body, trailer) = data.split_at(data.len() - 8);
+        let stored = u64::from_le_bytes(trailer.try_into().unwrap());
+        // Parse before verifying: a *short* file should report where it
+        // was cut, not a generic corruption verdict. Every length that
+        // sizes an allocation is checked against the bytes actually
+        // present first.
+        let ck = Self::parse_body(&body[8..])
+            .with_context(|| path.display().to_string())?;
+        ensure!(
+            fnv1a(body) == stored,
+            "{}: checksum mismatch (corrupt checkpoint)",
+            path.display()
+        );
+        Ok(ck)
+    }
+
+    fn parse_body(buf: &[u8]) -> Result<Checkpoint> {
+        let mut c = Cursor { buf, pos: 0 };
+        let epoch = c.u64("epoch")?;
+        let step = c.u64("step")?;
+        let membership_epoch = c.u64("membership epoch")?;
+        let n_dir = c.u64("directory length")?;
         ensure!(n_dir <= u32::MAX as u64, "unreasonable directory size {n_dir}");
-        let mut dir_raw = vec![0u8; n_dir as usize * 4];
-        f.read_exact(&mut dir_raw).with_context(|| {
-            format!("truncated checkpoint: directory ({n_dir} entries)")
-        })?;
-        let directory: Vec<u32> = dir_raw
+        let dir_bytes = (n_dir as usize)
+            .checked_mul(4)
+            .filter(|&b| b <= c.remaining())
+            .with_context(|| {
+                format!("truncated checkpoint: directory ({n_dir} entries)")
+            })?;
+        let directory: Vec<u32> = c
+            .need(dir_bytes, "directory")?
             .chunks_exact(4)
-            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .map(|w| u32::from_le_bytes(w.try_into().unwrap()))
             .collect();
-        let mut u32buf = [0u8; 4];
-        f.read_exact(&mut u32buf)
-            .context("truncated checkpoint: tensor count")?;
-        let n = u32::from_le_bytes(u32buf);
+        let n = c.u32("tensor count")?;
         ensure!(n <= 4096, "unreasonable tensor count {n}");
         let mut params = Vec::with_capacity(n as usize);
         for i in 0..n {
-            f.read_exact(&mut u32buf)
-                .with_context(|| format!("truncated checkpoint: tensor {i}"))?;
-            let ndims = u32::from_le_bytes(u32buf) as usize;
+            let ndims = c.u32(&format!("tensor {i}"))? as usize;
             ensure!(ndims <= 8, "unreasonable rank {ndims}");
             let mut shape = Vec::with_capacity(ndims);
+            let mut count = 1usize;
             for _ in 0..ndims {
-                let d = {
-                    let mut b = [0u8; 8];
-                    f.read_exact(&mut b).with_context(|| {
-                        format!("truncated checkpoint: tensor {i} shape")
-                    })?;
-                    u64::from_le_bytes(b)
-                };
+                let d = c.u64(&format!("tensor {i} shape"))?;
+                ensure!(d <= u32::MAX as u64, "unreasonable dimension {d}");
+                count = count
+                    .checked_mul(d as usize)
+                    .with_context(|| format!("tensor {i} element count overflows"))?;
                 shape.push(d as usize);
             }
-            let count: usize = shape.iter().product();
-            let mut raw = vec![0u8; count * 4];
-            f.read_exact(&mut raw).with_context(|| {
-                format!("truncated checkpoint: tensor {i} payload")
-            })?;
-            let data: Vec<f32> = raw
+            let payload_bytes = count
+                .checked_mul(4)
+                .filter(|&b| b <= c.remaining())
+                .with_context(|| {
+                    format!("truncated checkpoint: tensor {i} payload")
+                })?;
+            let data: Vec<f32> = c
+                .need(payload_bytes, "tensor payload")?
                 .chunks_exact(4)
-                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .map(|w| f32::from_le_bytes(w.try_into().unwrap()))
                 .collect();
             params.push(HostTensor::f32(shape, data));
         }
+        ensure!(
+            c.remaining() == 0,
+            "corrupt checkpoint: {} trailing bytes",
+            c.remaining()
+        );
         Ok(Checkpoint { epoch, step, membership_epoch, directory, params })
     }
 }
@@ -224,7 +299,8 @@ mod tests {
         for &len in &[4usize, 8, 20, 40, 48, 60, full.len() - 3] {
             assert!(len < full.len(), "cut {len} is not a truncation");
             std::fs::write(&cut, &full[..len]).unwrap();
-            let err = Checkpoint::load(&cut).unwrap_err().to_string();
+            let err = Checkpoint::load(&cut).unwrap_err();
+            let err = format!("{err:#}");
             assert!(
                 err.contains("truncated"),
                 "cut at {len} gave unexpected error: {err}"
@@ -232,6 +308,87 @@ mod tests {
         }
         std::fs::remove_file(&path).unwrap();
         std::fs::remove_file(&cut).unwrap();
+    }
+
+    /// Satellite (DESIGN.md §13): corruption, not just truncation. Every
+    /// single-byte flip of a valid checkpoint must yield a typed `Err` —
+    /// never a panic, never a silently wrong restore.
+    #[test]
+    fn every_single_byte_flip_is_a_typed_error() {
+        let path = std::env::temp_dir()
+            .join(format!("dlio-ckpt-fuzz-{}.bin", std::process::id()));
+        let mangled = std::env::temp_dir()
+            .join(format!("dlio-ckpt-fuzz-m-{}.bin", std::process::id()));
+        ckpt().save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        for i in 0..full.len() {
+            let mut bytes = full.clone();
+            bytes[i] ^= 0xA5;
+            std::fs::write(&mangled, &bytes).unwrap();
+            match Checkpoint::load(&mangled) {
+                Err(_) => {}
+                Ok(back) => panic!(
+                    "flip at byte {i} loaded silently (epoch {}, step {})",
+                    back.epoch, back.step
+                ),
+            }
+        }
+        std::fs::remove_file(&path).unwrap();
+        std::fs::remove_file(&mangled).unwrap();
+    }
+
+    /// Multi-byte corruption (deterministic pseudo-random burst) and the
+    /// specific verdicts: a payload flip that still parses structurally
+    /// must be called out as a checksum mismatch, and a length word
+    /// inflated by corruption must fail bounds *before* sizing an
+    /// allocation from it.
+    #[test]
+    fn corruption_verdicts_are_specific() {
+        let path = std::env::temp_dir()
+            .join(format!("dlio-ckpt-verd-{}.bin", std::process::id()));
+        ckpt().save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+
+        // Flip one payload byte (inside the last tensor's f32 data, well
+        // clear of any length word): structure parses, checksum differs.
+        let mut bytes = full.clone();
+        let off = full.len() - 12;
+        bytes[off] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+
+        // Inflate the directory length word (offset 32) to u32::MAX
+        // entries: must fail as truncation/bounds, not OOM.
+        let mut bytes = full.clone();
+        bytes[32..40].copy_from_slice(&(u32::MAX as u64).to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        assert!(err.contains("truncated checkpoint: directory"), "{err}");
+
+        // A deterministic burst of random flips across the image.
+        let mut state = 0x9E3779B97F4A7C15u64;
+        for _ in 0..64 {
+            let mut bytes = full.clone();
+            for _ in 0..4 {
+                state = state
+                    .wrapping_mul(6364136223846793005)
+                    .wrapping_add(1442695040888963407);
+                let i = (state >> 33) as usize % bytes.len();
+                bytes[i] ^= (state >> 7) as u8 | 1;
+            }
+            std::fs::write(&path, &bytes).unwrap();
+            // Corrupt images may hit any typed error; they must never
+            // load as Ok with different contents or panic.
+            if let Ok(back) = Checkpoint::load(&path) {
+                assert_eq!(
+                    back,
+                    ckpt(),
+                    "corrupted image restored silently wrong state"
+                );
+            }
+        }
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

@@ -27,10 +27,15 @@
 pub mod allreduce;
 pub mod checkpoint;
 pub mod membership;
+pub mod service;
+pub mod supervisor;
+pub mod worker;
 
 pub use allreduce::GradSync;
 pub use checkpoint::Checkpoint;
 pub use membership::Membership;
+pub use supervisor::{run_multiproc, MultiProcConfig, SupervisorReport};
+pub use worker::worker_main;
 
 use crate::cache::{CacheDirectory, CacheStack, Policy, SpillConfig};
 use crate::fault::{Deadlines, FaultPlan, FaultTimeline, NodeFault};
@@ -423,6 +428,14 @@ impl Trainer {
         static SPILL_SEQ: std::sync::atomic::AtomicU64 =
             std::sync::atomic::AtomicU64::new(0);
         let spill_job = SPILL_SEQ.fetch_add(1, Ordering::SeqCst);
+        // Crash hygiene: a SIGKILLed process never runs DiskTier::drop,
+        // so reclaim segments orphaned by dead processes before binding
+        // new ones in the same directory.
+        if cfg.disk_cache_capacity_bytes > 0 {
+            crate::cache::sweep_orphaned_spills(
+                &cfg.spill_dir.clone().unwrap_or_else(std::env::temp_dir),
+            );
+        }
         let caches: Vec<Arc<CacheStack>> = (0..p)
             .map(|j| -> Result<Arc<CacheStack>> {
                 let stack = if cfg.disk_cache_capacity_bytes > 0 {

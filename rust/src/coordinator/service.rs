@@ -1,0 +1,771 @@
+//! Directory/membership service for the multi-process mode
+//! (DESIGN.md §13).
+//!
+//! The supervisor process runs one **coordinator**: a single-threaded
+//! event loop owning the authoritative [`Membership`], the merged
+//! cache-directory image, and the gradient rendezvous. Workers connect
+//! over a Unix-domain control socket and speak the length-prefixed frame
+//! codec from [`crate::net::transport`]; per-connection reader threads
+//! forward decoded frames into the loop over a channel, so all protocol
+//! state lives on one thread and needs no locks.
+//!
+//! ## Control protocol (frame kinds 1–12)
+//!
+//! ```text
+//! worker → coordinator
+//!   HELLO      rank u32 | pid u32 | rejoin u8
+//!   CLAIMS     rank u32 | dir vec<u32>          (epoch-0 claim words)
+//!   EPOCH_END  rank u32 | epoch u64 | digest u64 | params vec<f32>
+//!   GRAD       gen u64 | learner u32 | grads vec<f32>
+//!   HB         rank u32 | gstep u64
+//!   DONE       rank u32 | digest u64 | 8×u64 load stats
+//!   ABORT      rank u32 | message utf-8
+//! coordinator → worker
+//!   WELCOME    rank u32 | procs u32 | g u32 | epochs u64 | next_epoch u64
+//!              | membership_epoch u64 | params vec<f32> | dir vec<u32>
+//!              | evicted vec<u32> | dead_ranks vec<u32>
+//!   EPOCH_SYNC epoch u64 | membership_epoch u64 | freeze u8
+//!              | dir vec<u32> | rejoined vec<u32>
+//!   MEAN       gen u64 | grads vec<f32>
+//!   DEATH      rank u32 | gen u64 | membership_epoch u64
+//! ```
+//!
+//! ## Determinism contract
+//!
+//! The coordinator sums each generation's gradient slots in **fixed
+//! learner order** and divides by the *configured* learner count, then
+//! broadcasts one mean — every worker (and every rerun, faulted or not)
+//! applies bit-identical updates. A dead rank's slots are refilled by
+//! the adoption path: gradients are pure functions of `(params, epoch,
+//! step, plan)`, so the survivor's recomputation is bit-for-bit the
+//! gradient the dead rank would have sent. Duplicate slot writes (the
+//! dead rank raced its own death) are idempotent for the same reason
+//! and simply ignored.
+
+use super::membership::Membership;
+use crate::metrics::RecoverySnapshot;
+use crate::fault::ProcKill;
+use crate::cache::CacheDirectory;
+use crate::net::transport::{read_frame, write_frame, Wire, WireReader};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+// Control-plane frame kinds (peer-plane kinds 20+ live in net::transport).
+pub const HELLO: u8 = 1;
+pub const WELCOME: u8 = 2;
+pub const CLAIMS: u8 = 3;
+pub const EPOCH_END: u8 = 4;
+pub const EPOCH_SYNC: u8 = 5;
+pub const GRAD: u8 = 6;
+pub const MEAN: u8 = 7;
+pub const DEATH: u8 = 8;
+pub const HB: u8 = 9;
+pub const DONE: u8 = 10;
+pub const ABORT: u8 = 12;
+
+/// Coordinator-side configuration (derived from the supervisor's).
+pub struct CoordConfig {
+    pub procs: usize,
+    pub learners_per_proc: usize,
+    pub epochs: u64,
+    /// Dataset size — sizes the merged directory image.
+    pub n_samples: u64,
+    /// A welcomed worker whose heartbeat goes silent this long is dead.
+    pub hb_timeout: Duration,
+    /// A gradient generation incomplete this long after its first
+    /// arrival marks the missing ranks dead (the live analogue of the
+    /// in-process barrier deadline).
+    pub grad_deadline: Duration,
+    /// Hard wall-clock bound on the whole run (a recovery deadlock must
+    /// fail the job, not hang it).
+    pub overall_deadline: Duration,
+    /// Fault injection: SIGKILL this rank once its heartbeat reports
+    /// reaching the given global step.
+    pub kill: Option<ProcKill>,
+    /// Respawn killed ranks (`--rejoin` children) at the next epoch
+    /// boundary instead of excising them for good.
+    pub restart: bool,
+}
+
+/// Per-rank load accounting carried home in DONE frames. `steady_*`
+/// exclude epoch 0 (the population epoch), so they are directly
+/// comparable with the simulator's steady-state model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RankLoad {
+    pub local_hits: u64,
+    pub remote_hits: u64,
+    pub storage_loads: u64,
+    pub disk_hits: u64,
+    pub steady_local: u64,
+    pub steady_remote: u64,
+    pub steady_storage: u64,
+    pub steady_disk: u64,
+}
+
+/// What the coordinator observed over a full run.
+pub struct CoordReport {
+    /// Final parameter digest (asserted identical across alive ranks).
+    pub digest: u64,
+    pub recovery: RecoverySnapshot,
+    /// Per-rank load stats; `None` for ranks that died and never
+    /// rejoined.
+    pub rank_stats: Vec<Option<RankLoad>>,
+    pub epoch_wall_s: Vec<f64>,
+    pub killed: Vec<usize>,
+    pub rejoined: Vec<usize>,
+    pub steps: u64,
+    pub wall_s: f64,
+}
+
+/// Supervisor hooks the coordinator drives: deliver SIGKILL to a child,
+/// respawn an excised rank with `--rejoin`.
+pub trait CoordHooks {
+    fn kill(&mut self, rank: usize);
+    fn respawn(&mut self, rank: usize) -> Result<()>;
+}
+
+/// No-op hooks for tests that drive workers without a supervisor.
+pub struct NoHooks;
+impl CoordHooks for NoHooks {
+    fn kill(&mut self, _rank: usize) {}
+    fn respawn(&mut self, _rank: usize) -> Result<()> {
+        Ok(())
+    }
+}
+
+enum Event {
+    Hello { rank: usize, rejoin: bool, write: UnixStream },
+    Frame { rank: usize, kind: u8, payload: Vec<u8> },
+    Eof { rank: usize },
+}
+
+struct RankState {
+    write: Option<UnixStream>,
+    welcomed: bool,
+    done: bool,
+    last_hb: Instant,
+    hb_gstep: u64,
+    claims: Option<Vec<u32>>,
+    epoch_end: Option<(u64, u64, Vec<f32>)>,
+    stats: Option<RankLoad>,
+    digest: Option<u64>,
+}
+
+impl RankState {
+    fn new() -> RankState {
+        RankState {
+            write: None,
+            welcomed: false,
+            done: false,
+            last_hb: Instant::now(),
+            hb_gstep: 0,
+            claims: None,
+            epoch_end: None,
+            stats: None,
+            digest: None,
+        }
+    }
+}
+
+struct GradGen {
+    slots: Vec<Option<Vec<f32>>>,
+    first: Instant,
+}
+
+/// Send one frame to a rank, ignoring write errors (a dead socket will
+/// surface as an EOF event from its reader thread).
+fn send(rank: &mut RankState, kind: u8, payload: &[u8]) {
+    if let Some(w) = rank.write.as_mut() {
+        let _ = w.set_write_timeout(Some(Duration::from_secs(30)));
+        if write_frame(w, kind, payload).is_err() {
+            rank.write = None;
+        }
+    }
+}
+
+/// Accept loop + per-connection reader threads. Every decoded frame is
+/// forwarded as an [`Event`]; the first frame on a connection must be
+/// HELLO (it names the rank all later frames are attributed to).
+fn spawn_acceptor(
+    listener: UnixListener,
+    tx: mpsc::Sender<Event>,
+    stop: Arc<AtomicBool>,
+) {
+    std::thread::spawn(move || {
+        let _ = listener.set_nonblocking(true);
+        while !stop.load(Ordering::Acquire) {
+            match listener.accept() {
+                Ok((conn, _)) => {
+                    let tx = tx.clone();
+                    std::thread::spawn(move || reader_thread(conn, tx));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(_) => break,
+            }
+        }
+    });
+}
+
+fn reader_thread(mut conn: UnixStream, tx: mpsc::Sender<Event>) {
+    let Ok((kind, payload)) = read_frame(&mut conn) else { return };
+    if kind != HELLO {
+        return;
+    }
+    let mut r = WireReader::new(&payload);
+    let Ok(rank) = r.u32() else { return };
+    let _pid = r.u32().unwrap_or(0);
+    let rejoin = r.u8().unwrap_or(0) != 0;
+    let rank = rank as usize;
+    let Ok(write) = conn.try_clone() else { return };
+    if tx.send(Event::Hello { rank, rejoin, write }).is_err() {
+        return;
+    }
+    loop {
+        match read_frame(&mut conn) {
+            Ok((kind, payload)) => {
+                if tx.send(Event::Frame { rank, kind, payload }).is_err() {
+                    return;
+                }
+            }
+            Err(_) => {
+                let _ = tx.send(Event::Eof { rank });
+                return;
+            }
+        }
+    }
+}
+
+/// Run the coordinator over `listener` until every alive rank reports
+/// DONE (or a deadline/abort fails the run). Single-threaded: all state
+/// mutation happens here.
+pub fn run_coordinator(
+    listener: UnixListener,
+    cfg: &CoordConfig,
+    hooks: &mut dyn CoordHooks,
+) -> Result<CoordReport> {
+    let g = cfg.learners_per_proc;
+    let p_global = cfg.procs * g;
+    let start = Instant::now();
+    let (tx, rx) = mpsc::channel();
+    let stop = Arc::new(AtomicBool::new(false));
+    spawn_acceptor(listener, tx.clone(), stop.clone());
+
+    let membership = Membership::new(cfg.procs);
+    let mut ranks: Vec<RankState> =
+        (0..cfg.procs).map(|_| RankState::new()).collect();
+    let mut started = false;
+    let mut pending_rejoin: Vec<usize> = Vec::new();
+    let mut gens: BTreeMap<u64, GradGen> = BTreeMap::new();
+    let mut frozen_dir: Vec<u32> = Vec::new();
+    let mut evicted: Vec<u32> = Vec::new();
+    let mut dead_ranks: Vec<usize> = Vec::new();
+    let mut killed: Vec<usize> = Vec::new();
+    let mut rejoined_total: Vec<usize> = Vec::new();
+    let mut params_latest: Vec<f32> = Vec::new();
+    let mut kill_fired = false;
+    let mut steps = 0u64;
+    let mut epoch_wall_s: Vec<f64> = Vec::new();
+    let mut epoch_started = Instant::now();
+
+    macro_rules! mark_rank_dead {
+        ($rank:expr, $why:expr) => {{
+            let r: usize = $rank;
+            let step = ranks.iter().map(|s| s.hb_gstep).max().unwrap_or(0);
+            if membership.mark_dead(r, step) {
+                dead_ranks.push(r);
+                ranks[r].write = None;
+                ranks[r].welcomed = false;
+                for l in (r * g)..(r * g + g) {
+                    evicted.push(l as u32);
+                }
+                let pending_gen =
+                    gens.keys().next().copied().unwrap_or(u64::MAX);
+                let mut w = Wire::new();
+                w.u32(r as u32)
+                    .u64(pending_gen)
+                    .u64(membership.epoch());
+                let payload = w.take();
+                for (i, s) in ranks.iter_mut().enumerate() {
+                    if membership.alive(i) && !s.done {
+                        send(s, DEATH, &payload);
+                    }
+                }
+                let _ = $why;
+                if cfg.restart {
+                    hooks
+                        .respawn(r)
+                        .with_context(|| format!("respawn rank {r}"))?;
+                }
+            }
+        }};
+    }
+
+    loop {
+        // ---- event pump -------------------------------------------------
+        match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(Event::Hello { rank, rejoin, write }) => {
+                ensure!(rank < cfg.procs, "hello from unknown rank {rank}");
+                ranks[rank].write = Some(write);
+                ranks[rank].last_hb = Instant::now();
+                if rejoin {
+                    pending_rejoin.push(rank);
+                } else if !started
+                    && ranks.iter().all(|s| s.write.is_some())
+                {
+                    // Start barrier: every rank is connected; release
+                    // them into epoch 0 together.
+                    started = true;
+                    epoch_started = Instant::now();
+                    for (i, s) in ranks.iter_mut().enumerate() {
+                        let mut w = Wire::new();
+                        w.u32(i as u32)
+                            .u32(cfg.procs as u32)
+                            .u32(g as u32)
+                            .u64(cfg.epochs)
+                            .u64(0) // next_epoch
+                            .u64(0) // membership_epoch
+                            .vec_f32(&[])
+                            .vec_u32(&[])
+                            .vec_u32(&[])
+                            .vec_u32(&[]);
+                        send(s, WELCOME, &w.take());
+                        s.welcomed = true;
+                        s.last_hb = Instant::now();
+                    }
+                }
+            }
+            Ok(Event::Frame { rank, kind, payload }) => {
+                let mut r = WireReader::new(&payload);
+                match kind {
+                    HB => {
+                        let _rank = r.u32().ok();
+                        if let Ok(gstep) = r.u64() {
+                            ranks[rank].last_hb = Instant::now();
+                            ranks[rank].hb_gstep = gstep;
+                        }
+                    }
+                    GRAD => {
+                        let (gen, learner, grads) = (|| {
+                            Ok::<_, anyhow::Error>((
+                                r.u64()?,
+                                r.u32()? as usize,
+                                r.vec_f32()?,
+                            ))
+                        })()
+                        .context("bad GRAD frame")?;
+                        ensure!(learner < p_global, "grad for unknown learner");
+                        let entry =
+                            gens.entry(gen).or_insert_with(|| GradGen {
+                                slots: vec![None; p_global],
+                                first: Instant::now(),
+                            });
+                        // First write wins: duplicates (a dead rank
+                        // racing its adopter) are bit-identical anyway.
+                        if entry.slots[learner].is_none() {
+                            entry.slots[learner] = Some(grads);
+                        }
+                    }
+                    CLAIMS => {
+                        let _rank = r.u32().ok();
+                        if let Ok(words) = r.vec_u32() {
+                            ranks[rank].claims = Some(words);
+                        }
+                    }
+                    EPOCH_END => {
+                        let (_r, epoch, digest, params) = (|| {
+                            Ok::<_, anyhow::Error>((
+                                r.u32()?,
+                                r.u64()?,
+                                r.u64()?,
+                                r.vec_f32()?,
+                            ))
+                        })()
+                        .context("bad EPOCH_END frame")?;
+                        ranks[rank].epoch_end = Some((epoch, digest, params));
+                    }
+                    DONE => {
+                        let (_r, digest) = (|| {
+                            Ok::<_, anyhow::Error>((r.u32()?, r.u64()?))
+                        })()
+                        .context("bad DONE frame")?;
+                        let mut load = RankLoad::default();
+                        let fields: [&mut u64; 8] = [
+                            &mut load.local_hits,
+                            &mut load.remote_hits,
+                            &mut load.storage_loads,
+                            &mut load.disk_hits,
+                            &mut load.steady_local,
+                            &mut load.steady_remote,
+                            &mut load.steady_storage,
+                            &mut load.steady_disk,
+                        ];
+                        for f in fields {
+                            *f = r.u64().unwrap_or(0);
+                        }
+                        ranks[rank].done = true;
+                        ranks[rank].digest = Some(digest);
+                        ranks[rank].stats = Some(load);
+                    }
+                    ABORT => {
+                        // A worker hit a terminal error: treat its rank
+                        // as dead (the supervisor reports the child's
+                        // exit code separately).
+                        mark_rank_dead!(rank, "abort");
+                    }
+                    _ => {}
+                }
+            }
+            Ok(Event::Eof { rank }) => {
+                if !ranks[rank].done && membership.alive(rank) {
+                    mark_rank_dead!(rank, "socket EOF");
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                bail!("coordinator event channel closed unexpectedly")
+            }
+        }
+
+        // ---- gradient generations ---------------------------------------
+        // Complete the oldest generation first (workers are in lockstep,
+        // so at most one generation is truly pending; later ones appear
+        // only transiently).
+        while let Some((&gen, entry)) = gens.iter().next() {
+            let complete = entry
+                .slots
+                .iter()
+                .enumerate()
+                .all(|(l, s)| s.is_some() || !membership.alive(l / g))
+                && entry.slots.iter().any(|s| s.is_some());
+            // A dead rank's learners must still be filled — by its
+            // adopter — before the mean is taken; `alive` only excuses
+            // ranks that died *and* whose learners were adopted by a
+            // survivor that already resent. So completion is simply:
+            // every slot filled.
+            let all_filled = entry.slots.iter().all(|s| s.is_some());
+            if all_filled {
+                let dim =
+                    entry.slots[0].as_ref().map(|v| v.len()).unwrap_or(0);
+                let mut mean = vec![0f32; dim];
+                for slot in &entry.slots {
+                    let gvec = slot.as_ref().unwrap();
+                    ensure!(
+                        gvec.len() == dim,
+                        "gradient dimension mismatch in gen {gen}"
+                    );
+                    for (m, x) in mean.iter_mut().zip(gvec) {
+                        *m += *x;
+                    }
+                }
+                for m in &mut mean {
+                    *m /= p_global as f32;
+                }
+                let mut w = Wire::new();
+                w.u64(gen).vec_f32(&mean);
+                let payload = w.take();
+                for (i, s) in ranks.iter_mut().enumerate() {
+                    if membership.alive(i) && !s.done {
+                        send(s, MEAN, &payload);
+                    }
+                }
+                steps = steps.max(gen + 1);
+                gens.remove(&gen);
+                continue;
+            }
+            // Deadline: blame the alive ranks whose learners are missing.
+            if complete || entry.first.elapsed() <= cfg.grad_deadline {
+                break;
+            }
+            let missing: Vec<usize> = entry
+                .slots
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.is_none())
+                .map(|(l, _)| l / g)
+                .filter(|r| membership.alive(*r))
+                .collect();
+            if missing.is_empty() {
+                break;
+            }
+            membership.record_deadline_miss();
+            for r in missing {
+                mark_rank_dead!(r, "gradient deadline");
+            }
+            break;
+        }
+
+        // ---- epoch boundary ---------------------------------------------
+        let boundary: Option<u64> = {
+            let alive_pending: Vec<&RankState> = ranks
+                .iter()
+                .enumerate()
+                .filter(|(i, s)| membership.alive(*i) && !s.done)
+                .map(|(_, s)| s)
+                .collect();
+            if !alive_pending.is_empty()
+                && alive_pending.iter().all(|s| s.epoch_end.is_some())
+            {
+                Some(alive_pending[0].epoch_end.as_ref().unwrap().0)
+            } else {
+                None
+            }
+        };
+        if let Some(epoch) = boundary {
+            // Split-brain check: every alive rank must hold identical
+            // parameters at the boundary.
+            let mut digest0: Option<u64> = None;
+            for (i, s) in ranks.iter().enumerate() {
+                if !membership.alive(i) || s.done {
+                    continue;
+                }
+                let (e, d, _) = s.epoch_end.as_ref().unwrap();
+                ensure!(
+                    *e == epoch,
+                    "rank {i} is at epoch {e}, expected {epoch} (lockstep broken)"
+                );
+                match digest0 {
+                    None => digest0 = Some(*d),
+                    Some(d0) => ensure!(
+                        d0 == *d,
+                        "divergent parameters at epoch {epoch}: rank {i} \
+                         digest {d:#x} != {d0:#x}"
+                    ),
+                }
+            }
+            if let Some(s) = ranks
+                .iter()
+                .enumerate()
+                .find(|(i, s)| membership.alive(*i) && !s.done)
+                .map(|(_, s)| s)
+            {
+                params_latest = s.epoch_end.as_ref().unwrap().2.clone();
+            }
+            // Epoch 0: merge every rank's claim words into the master
+            // image, evict any learners that died during population,
+            // and freeze.
+            let freeze = epoch == 0;
+            if freeze {
+                let master = CacheDirectory::new(cfg.n_samples);
+                let mut words = master.snapshot_raw();
+                let empty = CacheDirectory::new(1).snapshot_raw()[0];
+                for s in ranks.iter_mut() {
+                    if let Some(claims) = s.claims.take() {
+                        ensure!(
+                            claims.len() == words.len(),
+                            "claim image size mismatch"
+                        );
+                        for (w, c) in words.iter_mut().zip(&claims) {
+                            if *c != empty && *w == empty {
+                                *w = *c;
+                            }
+                        }
+                    }
+                }
+                let d = CacheDirectory::from_raw(&words);
+                for &l in &evicted {
+                    d.evict_owner(l as usize);
+                }
+                frozen_dir = d.snapshot_raw();
+            }
+            // Rejoins land exactly at the boundary: restore state from
+            // the authoritative image and include the rank in the sync
+            // broadcast so survivors re-admit it.
+            let mut rejoined_now: Vec<u32> = Vec::new();
+            for rank in std::mem::take(&mut pending_rejoin) {
+                if !membership.mark_alive(rank) {
+                    continue;
+                }
+                dead_ranks.retain(|&r| r != rank);
+                rejoined_now.push(rank as u32);
+                rejoined_total.push(rank);
+                let s = &mut ranks[rank];
+                s.welcomed = true;
+                s.done = false;
+                s.last_hb = Instant::now();
+                // A prior life may have left a stale boundary/claim
+                // image behind; the rejoined rank starts clean.
+                s.epoch_end = None;
+                s.claims = None;
+                s.digest = None;
+                let dead_now: Vec<u32> = (0..cfg.procs)
+                    .filter(|r| !membership.alive(*r))
+                    .map(|r| r as u32)
+                    .collect();
+                let mut w = Wire::new();
+                w.u32(rank as u32)
+                    .u32(cfg.procs as u32)
+                    .u32(g as u32)
+                    .u64(cfg.epochs)
+                    .u64(epoch + 1)
+                    .u64(membership.epoch())
+                    .vec_f32(&params_latest)
+                    .vec_u32(&frozen_dir)
+                    .vec_u32(&evicted)
+                    .vec_u32(&dead_now);
+                send(s, WELCOME, &w.take());
+            }
+            let mut w = Wire::new();
+            w.u64(epoch).u64(membership.epoch()).u8(freeze as u8);
+            if freeze {
+                w.vec_u32(&frozen_dir);
+            } else {
+                w.vec_u32(&[]);
+            }
+            w.vec_u32(&rejoined_now);
+            let payload = w.take();
+            for (i, s) in ranks.iter_mut().enumerate() {
+                // Skip ranks that just rejoined — their WELCOME already
+                // carries this boundary's state, and they start at
+                // epoch+1 directly.
+                if membership.alive(i)
+                    && !s.done
+                    && !rejoined_now.contains(&(i as u32))
+                {
+                    s.epoch_end = None;
+                    send(s, EPOCH_SYNC, &payload);
+                }
+            }
+            epoch_wall_s.push(epoch_started.elapsed().as_secs_f64());
+            epoch_started = Instant::now();
+        }
+
+        // ---- timers -----------------------------------------------------
+        if let (Some(kill), false) = (cfg.kill, kill_fired) {
+            // Fire on whichever progress signal arrives first: the
+            // victim's own heartbeat clock, or the coordinator's step
+            // counter (heartbeats are periodic, so a fast run could
+            // otherwise finish before the next beat reports the step).
+            if kill.rank < cfg.procs
+                && membership.alive(kill.rank)
+                && !ranks[kill.rank].done
+                && (ranks[kill.rank].hb_gstep >= kill.at_gstep
+                    || steps >= kill.at_gstep)
+            {
+                kill_fired = true;
+                killed.push(kill.rank);
+                hooks.kill(kill.rank);
+            }
+        }
+        if started {
+            let silent: Vec<usize> = ranks
+                .iter()
+                .enumerate()
+                .filter(|(i, s)| {
+                    membership.alive(*i)
+                        && s.welcomed
+                        && !s.done
+                        && s.last_hb.elapsed() > cfg.hb_timeout
+                })
+                .map(|(i, _)| i)
+                .collect();
+            for rank in silent {
+                membership.record_deadline_miss();
+                mark_rank_dead!(rank, "missed heartbeats");
+            }
+        }
+        ensure!(
+            start.elapsed() <= cfg.overall_deadline,
+            "multi-process run exceeded its {}s wall deadline",
+            cfg.overall_deadline.as_secs_f64()
+        );
+        ensure!(
+            membership.n_alive() > 0,
+            "all ranks dead — nothing left to supervise"
+        );
+
+        // ---- completion -------------------------------------------------
+        let all_done = ranks
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| membership.alive(*i))
+            .all(|(_, s)| s.done);
+        if started && all_done {
+            stop.store(true, Ordering::Release);
+            let mut digest: Option<u64> = None;
+            for (i, s) in ranks.iter().enumerate() {
+                if !membership.alive(i) {
+                    continue;
+                }
+                let d = s
+                    .digest
+                    .with_context(|| format!("rank {i} finished without a digest"))?;
+                match digest {
+                    None => digest = Some(d),
+                    Some(d0) => ensure!(
+                        d0 == d,
+                        "final parameter digests diverge: {d0:#x} vs {d:#x}"
+                    ),
+                }
+            }
+            return Ok(CoordReport {
+                digest: digest.context("no surviving rank")?,
+                recovery: membership.snapshot(),
+                rank_stats: ranks.iter().map(|s| s.stats).collect(),
+                epoch_wall_s,
+                killed,
+                rejoined: rejoined_total,
+                steps,
+                wall_s: start.elapsed().as_secs_f64(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn control_frames_roundtrip() {
+        // WELCOME carries the richest payload; exercise it end to end.
+        let mut w = Wire::new();
+        w.u32(3)
+            .u32(4)
+            .u32(2)
+            .u64(5)
+            .u64(1)
+            .u64(2)
+            .vec_f32(&[1.0, -2.5])
+            .vec_u32(&[7, u32::MAX])
+            .vec_u32(&[6])
+            .vec_u32(&[]);
+        let payload = w.take();
+        let mut buf = Vec::new();
+        write_frame(&mut buf, WELCOME, &payload).unwrap();
+        let (kind, back) = read_frame(&mut &buf[..]).unwrap();
+        assert_eq!(kind, WELCOME);
+        let mut r = WireReader::new(&back);
+        assert_eq!(r.u32().unwrap(), 3);
+        assert_eq!(r.u32().unwrap(), 4);
+        assert_eq!(r.u32().unwrap(), 2);
+        assert_eq!(r.u64().unwrap(), 5);
+        assert_eq!(r.u64().unwrap(), 1);
+        assert_eq!(r.u64().unwrap(), 2);
+        assert_eq!(r.vec_f32().unwrap(), vec![1.0, -2.5]);
+        assert_eq!(r.vec_u32().unwrap(), vec![7, u32::MAX]);
+        assert_eq!(r.vec_u32().unwrap(), vec![6]);
+        assert_eq!(r.vec_u32().unwrap(), Vec::<u32>::new());
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn frame_kind_spaces_do_not_collide() {
+        use crate::net::transport::{PFETCH, PSAMP};
+        let ctrl = [
+            HELLO, WELCOME, CLAIMS, EPOCH_END, EPOCH_SYNC, GRAD, MEAN,
+            DEATH, HB, DONE, ABORT,
+        ];
+        for k in ctrl {
+            assert!(k < 20, "control kinds stay below the peer range");
+            assert_ne!(k, PFETCH);
+            assert_ne!(k, PSAMP);
+        }
+    }
+}

@@ -1,0 +1,310 @@
+//! Process supervisor for the multi-process mode (DESIGN.md §13).
+//!
+//! Forks one worker process per rank (each hosting `g` learners), runs
+//! the in-process [`super::service`] coordinator over the rendezvous
+//! control socket, injects configured SIGKILLs, and — depending on the
+//! restart policy — respawns dead ranks with `--rejoin` or excises them
+//! for good. After the run it reaps every child and maps each exit
+//! status through [`crate::fault::exitcode`] so a deadline-stall death,
+//! an injected kill and a crash are distinguishable in the report.
+
+use super::service::{
+    run_coordinator, CoordConfig, CoordHooks, CoordReport,
+};
+use super::SamplerKind;
+use crate::cache::sweep_orphaned_spills;
+use crate::fault::{exitcode, ProcKill};
+use crate::net::transport::TransportKind;
+use crate::storage::{generate, DatasetMeta, SyntheticSpec};
+use anyhow::{ensure, Context, Result};
+use std::os::unix::net::UnixListener;
+use std::os::unix::process::ExitStatusExt;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+/// Everything a supervised multi-process run needs.
+pub struct MultiProcConfig {
+    pub procs: usize,
+    pub learners_per_proc: usize,
+    pub epochs: u64,
+    pub local_batch: usize,
+    /// Dataset directory (generated on demand if absent).
+    pub data_dir: PathBuf,
+    pub samples: u64,
+    pub seed: u64,
+    pub lr: f64,
+    pub flip_prob: f64,
+    pub sampler: SamplerKind,
+    pub transport: TransportKind,
+    /// Worker executable (normally the running `dlio` binary itself).
+    pub worker_bin: PathBuf,
+    pub hb_interval: Duration,
+    pub hb_timeout: Duration,
+    pub grad_deadline: Duration,
+    pub transfer_deadline: Duration,
+    pub overall_deadline: Duration,
+    /// SIGKILL this rank once its heartbeat reaches the given step.
+    pub kill: Option<ProcKill>,
+    /// Respawn killed ranks with `--rejoin` at the next epoch boundary.
+    pub restart: bool,
+    /// Write a `BENCH_multiproc.json` style artifact here.
+    pub bench_out: Option<PathBuf>,
+}
+
+impl Default for MultiProcConfig {
+    fn default() -> Self {
+        MultiProcConfig {
+            procs: 2,
+            learners_per_proc: 2,
+            epochs: 2,
+            local_batch: 8,
+            data_dir: std::env::temp_dir().join("dlio-mp-data"),
+            samples: 256,
+            seed: 42,
+            lr: 0.05,
+            flip_prob: 0.5,
+            sampler: SamplerKind::Loc,
+            transport: TransportKind::Uds,
+            worker_bin: std::env::current_exe()
+                .unwrap_or_else(|_| PathBuf::from("dlio")),
+            hb_interval: Duration::from_millis(50),
+            hb_timeout: Duration::from_secs(5),
+            grad_deadline: Duration::from_secs(10),
+            transfer_deadline: Duration::from_secs(5),
+            overall_deadline: Duration::from_secs(120),
+            kill: None,
+            restart: false,
+            bench_out: None,
+        }
+    }
+}
+
+/// What the supervisor hands back: the coordinator's view plus every
+/// child's decoded exit status.
+pub struct SupervisorReport {
+    pub coord: CoordReport,
+    /// `(rank, exit_code, fatal_signal)` — code is `None` when the
+    /// child died to a signal (e.g. the injected SIGKILL).
+    pub exits: Vec<(usize, Option<i32>, Option<i32>)>,
+}
+
+impl SupervisorReport {
+    /// Human-readable status line for one child.
+    pub fn describe_exit(code: Option<i32>, signal: Option<i32>) -> String {
+        match (code, signal) {
+            (Some(c), _) => {
+                format!("exit {c} ({})", exitcode::describe(c))
+            }
+            (None, Some(s)) => format!("signal {s}"),
+            (None, None) => "unknown".to_string(),
+        }
+    }
+}
+
+struct Children {
+    slots: Vec<Option<Child>>,
+    spawn_args: Vec<Vec<String>>,
+    worker_bin: PathBuf,
+}
+
+impl Children {
+    fn spawn(&mut self, rank: usize, rejoin: bool) -> Result<()> {
+        let mut cmd = Command::new(&self.worker_bin);
+        cmd.args(&self.spawn_args[rank]);
+        if rejoin {
+            cmd.arg("--rejoin");
+        }
+        cmd.stdin(Stdio::null()).stdout(Stdio::null());
+        let child = cmd
+            .spawn()
+            .with_context(|| format!("spawn worker rank {rank}"))?;
+        // A replaced slot (rejoin after kill) must not leak a zombie.
+        if let Some(mut old) = self.slots[rank].replace(child) {
+            let _ = old.kill();
+            let _ = old.wait();
+        }
+        Ok(())
+    }
+}
+
+impl CoordHooks for Children {
+    fn kill(&mut self, rank: usize) {
+        if let Some(c) = self.slots[rank].as_mut() {
+            let _ = c.kill(); // SIGKILL — no chance to flush or unwind
+        }
+    }
+
+    fn respawn(&mut self, rank: usize) -> Result<()> {
+        self.spawn(rank, true)
+    }
+}
+
+/// Ensure a synthetic dataset of the configured size exists at
+/// `data_dir` (idempotent across runs and processes).
+fn ensure_dataset(cfg: &MultiProcConfig) -> Result<()> {
+    if let Ok(meta) = DatasetMeta::load(&cfg.data_dir) {
+        if meta.n_samples == cfg.samples {
+            return Ok(());
+        }
+    }
+    let spec = SyntheticSpec {
+        n_samples: cfg.samples,
+        samples_per_shard: (cfg.samples / 4).max(1),
+        seed: cfg.seed,
+        ..SyntheticSpec::default()
+    };
+    generate(&cfg.data_dir, &spec)?;
+    Ok(())
+}
+
+/// Run a full supervised multi-process training job. Blocks until every
+/// surviving worker reports DONE (or a deadline fails the run), then
+/// reaps all children.
+pub fn run_multiproc(cfg: &MultiProcConfig) -> Result<SupervisorReport> {
+    ensure!(cfg.procs >= 1, "need at least one process");
+    ensure!(
+        cfg.sampler != SamplerKind::DistCache,
+        "multi-process mode supports reg|loc samplers"
+    );
+    ensure!(
+        cfg.transport != TransportKind::InProc,
+        "multi-process mode needs a real transport (uds or shm)"
+    );
+    ensure_dataset(cfg)?;
+    // Crash hygiene: reclaim spill segments leaked by SIGKILLed
+    // processes of earlier runs before forking new ones.
+    sweep_orphaned_spills(&std::env::temp_dir());
+
+    // Short rendezvous path — sun_path caps UDS paths at ~107 bytes.
+    // Sequence-unique within the process: the test harness runs several
+    // supervisors concurrently.
+    static MP_SEQ: std::sync::atomic::AtomicU64 =
+        std::sync::atomic::AtomicU64::new(0);
+    let seq = MP_SEQ.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+    let rendezvous = std::env::temp_dir()
+        .join(format!("dlio-mp-{}-{seq}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&rendezvous);
+    std::fs::create_dir_all(&rendezvous)?;
+    // Bind before spawning so no worker can race the listener.
+    let listener = UnixListener::bind(rendezvous.join("ctrl.sock"))?;
+
+    let base_args: Vec<Vec<String>> = (0..cfg.procs)
+        .map(|rank| {
+            vec![
+                "worker".into(),
+                "--rank".into(),
+                rank.to_string(),
+                "--procs".into(),
+                cfg.procs.to_string(),
+                "--learners".into(),
+                cfg.learners_per_proc.to_string(),
+                "--dir".into(),
+                cfg.data_dir.display().to_string(),
+                "--rendezvous".into(),
+                rendezvous.display().to_string(),
+                "--epochs".into(),
+                cfg.epochs.to_string(),
+                "--batch".into(),
+                cfg.local_batch.to_string(),
+                "--seed".into(),
+                cfg.seed.to_string(),
+                "--lr".into(),
+                cfg.lr.to_string(),
+                "--flip".into(),
+                cfg.flip_prob.to_string(),
+                "--sampler".into(),
+                match cfg.sampler {
+                    SamplerKind::Reg => "reg".into(),
+                    _ => "loc".to_string(),
+                },
+                "--transport".into(),
+                cfg.transport.as_str().into(),
+                "--hb-interval-ms".into(),
+                cfg.hb_interval.as_millis().to_string(),
+                "--transfer-deadline-ms".into(),
+                cfg.transfer_deadline.as_millis().to_string(),
+            ]
+        })
+        .collect();
+    let mut children = Children {
+        slots: (0..cfg.procs).map(|_| None).collect(),
+        spawn_args: base_args,
+        worker_bin: cfg.worker_bin.clone(),
+    };
+    for rank in 0..cfg.procs {
+        children.spawn(rank, false)?;
+    }
+
+    let coord_cfg = CoordConfig {
+        procs: cfg.procs,
+        learners_per_proc: cfg.learners_per_proc,
+        epochs: cfg.epochs,
+        n_samples: cfg.samples,
+        hb_timeout: cfg.hb_timeout,
+        grad_deadline: cfg.grad_deadline,
+        overall_deadline: cfg.overall_deadline,
+        kill: cfg.kill,
+        restart: cfg.restart,
+    };
+    let coord = run_coordinator(listener, &coord_cfg, &mut children);
+
+    // Reap everything no matter how the coordinator ended: a failed run
+    // must not leave orphan workers holding sockets.
+    let mut exits = Vec::new();
+    for (rank, slot) in children.slots.iter_mut().enumerate() {
+        if let Some(child) = slot.as_mut() {
+            if coord.is_err() {
+                let _ = child.kill();
+            }
+            match child.wait() {
+                Ok(status) => {
+                    exits.push((rank, status.code(), status.signal()))
+                }
+                Err(_) => exits.push((rank, None, None)),
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&rendezvous);
+    let coord = coord?;
+
+    if let Some(path) = &cfg.bench_out {
+        let mut bench = crate::bench::Bench::new();
+        bench.record("multiproc_procs", cfg.procs as f64, "procs");
+        bench.record("multiproc_wall_s", coord.wall_s, "s");
+        bench.record("multiproc_steps", coord.steps as f64, "steps");
+        bench.record(
+            "multiproc_membership_epoch",
+            coord.recovery.membership_epoch as f64,
+            "epochs",
+        );
+        bench.record(
+            "multiproc_deaths",
+            coord.recovery.deaths as f64,
+            "deaths",
+        );
+        let _ = bench.write_json(path);
+    }
+    Ok(SupervisorReport { coord, exits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_sane() {
+        let cfg = MultiProcConfig::default();
+        assert_eq!(cfg.procs * cfg.learners_per_proc, 4);
+        assert!(cfg.hb_timeout > cfg.hb_interval * 10);
+        assert!(cfg.overall_deadline > cfg.grad_deadline);
+    }
+
+    #[test]
+    fn exit_descriptions_name_the_class() {
+        let s = SupervisorReport::describe_exit(Some(40), None);
+        assert!(s.contains("transfer-deadline stall"), "{s}");
+        let k = SupervisorReport::describe_exit(None, Some(9));
+        assert!(k.contains("signal 9"), "{k}");
+    }
+}

@@ -1,0 +1,712 @@
+//! Worker-process main for the supervised multi-process mode
+//! (DESIGN.md §13).
+//!
+//! One worker process hosts one node's learner group (`g` learners). It
+//! speaks the control protocol of [`super::service`] to the coordinator
+//! (HELLO/WELCOME, per-step GRAD/MEAN, boundary EPOCH_END/EPOCH_SYNC,
+//! heartbeats) and serves its learners' cache stacks to peer processes
+//! over the [`crate::net::transport`] UDS peer plane.
+//!
+//! ## Determinism
+//!
+//! Everything that feeds the parameters is a pure function of the run
+//! config: the epoch permutation (seed), the step plan (permutation +
+//! frozen directory), augmentation flips (`flip_for`), the feature map
+//! (record bytes), and the gradient (params × batch, summed in batch
+//! order). The coordinator averages in fixed learner order, so every
+//! process applies bit-identical updates — and a survivor that adopts a
+//! dead rank's learners recomputes exactly the gradients the dead rank
+//! would have produced. That is the whole kill-recovery argument: a
+//! SIGKILL changes *who computes* a learner's share, never *what* is
+//! computed.
+//!
+//! The model itself is a deliberately small pure-Rust linear probe
+//! (`D = 32`): the multi-process tier exercises transports, membership
+//! and recovery, not kernels — the in-process trainer keeps the real
+//! engine path.
+
+use super::service::{
+    ABORT, CLAIMS, DEATH, DONE, EPOCH_END, EPOCH_SYNC, GRAD, HB, HELLO,
+    MEAN, WELCOME,
+};
+use super::SamplerKind;
+use crate::cache::{CacheDirectory, CacheStack, Policy};
+use crate::config::Args;
+use crate::fault::{StallError, StallKind};
+use crate::loader::{
+    load_batch_adhoc, BatchIds, BatchRequest, FetchContext, LoaderConfig,
+    LoaderRuntime,
+};
+use crate::metrics::LoadCounters;
+use crate::net::transport::{
+    read_frame, write_frame, PeerServer, PeerTransport, TransportKind,
+    UdsPeers, Wire, WireReader,
+};
+use crate::net::{Fabric, FabricConfig};
+use crate::sampler::{EpochPlan, GlobalShuffler, StepPlan};
+use crate::storage::StorageSystem;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeSet;
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Linear-probe dimensionality (kept tiny: params ride in every
+/// EPOCH_END frame).
+pub const MODEL_DIM: usize = 32;
+
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Deterministic initial parameters (same on every rank).
+pub fn init_params(seed: u64) -> Vec<f32> {
+    (0..MODEL_DIM)
+        .map(|d| {
+            let r = mix(seed ^ mix(d as u64 + 1));
+            ((r >> 40) as f32 / (1u64 << 24) as f32 - 0.5) * 0.2
+        })
+        .collect()
+}
+
+/// Order-sensitive digest of the parameter vector (bit-exact: folds the
+/// raw f32 bit patterns, so two runs agree iff the floats are identical).
+pub fn param_digest(params: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for p in params {
+        h = mix(h ^ p.to_bits() as u64);
+    }
+    h
+}
+
+/// Deterministic feature map: `MODEL_DIM` pseudo-random taps into the
+/// record's bytes, sign-modulated by the augmentation flip factor.
+fn features(bytes: &[u8], flip: f32, out: &mut [f32]) {
+    let n = bytes.len().max(1);
+    for (d, o) in out.iter_mut().enumerate() {
+        let tap = (d.wrapping_mul(97).wrapping_add(13)) % n;
+        *o = (bytes[tap] as f32 / 255.0 - 0.5) * flip;
+    }
+}
+
+/// Accumulate one batch's mean squared-error gradient into `grad`
+/// (summed in batch order, divided by batch size — pure in
+/// `(params, bytes, labels, flip)`).
+fn batch_grad(
+    params: &[f32],
+    record_bytes: usize,
+    x_u8: &[u8],
+    labels: &[i32],
+    flip: &[f32],
+    grad: &mut [f32],
+) {
+    let b = labels.len();
+    let mut x = [0f32; MODEL_DIM];
+    for g in grad.iter_mut() {
+        *g = 0.0;
+    }
+    for i in 0..b {
+        let rec = &x_u8[i * record_bytes..(i + 1) * record_bytes];
+        features(rec, flip[i], &mut x);
+        let target = if labels[i] % 2 == 0 { 1.0f32 } else { -1.0 };
+        let mut pred = 0f32;
+        for d in 0..MODEL_DIM {
+            pred += params[d] * x[d];
+        }
+        let err = 2.0 * (pred - target) / b as f32;
+        for d in 0..MODEL_DIM {
+            grad[d] += err * x[d];
+        }
+    }
+}
+
+/// Read one control frame with a hard deadline. A timeout is terminal (a
+/// partially read frame cannot be resumed), surfaced as a barrier-class
+/// [`StallError`] so the process exits with the barrier stall code.
+fn next_frame(
+    conn: &mut UnixStream,
+    budget: Duration,
+) -> Result<(u8, Vec<u8>)> {
+    conn.set_read_timeout(Some(budget))?;
+    let start = Instant::now();
+    match read_frame(conn) {
+        Ok(f) => Ok(f),
+        Err(e)
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ) =>
+        {
+            Err(StallError {
+                kind: StallKind::Barrier,
+                waited: start.elapsed(),
+                deadline: budget,
+            }
+            .into())
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            bail!("coordinator connection closed")
+        }
+        Err(e) => Err(e.into()),
+    }
+}
+
+struct Ctrl {
+    read: UnixStream,
+    write: Arc<Mutex<UnixStream>>,
+}
+
+impl Ctrl {
+    fn connect(path: &Path, budget: Duration) -> Result<Ctrl> {
+        let start = Instant::now();
+        let conn = loop {
+            match UnixStream::connect(path) {
+                Ok(c) => break c,
+                Err(_) if start.elapsed() < budget => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!("connect coordinator at {}", path.display())
+                    })
+                }
+            }
+        };
+        let write = Arc::new(Mutex::new(conn.try_clone()?));
+        Ok(Ctrl { read: conn, write })
+    }
+
+    fn send(&self, kind: u8, payload: &[u8]) -> Result<()> {
+        let mut w = self.write.lock().unwrap();
+        w.set_write_timeout(Some(Duration::from_secs(30)))?;
+        write_frame(&mut *w, kind, payload)
+            .context("write to coordinator")?;
+        Ok(())
+    }
+}
+
+struct WelcomeMsg {
+    procs: usize,
+    g: usize,
+    epochs: u64,
+    next_epoch: u64,
+    params: Vec<f32>,
+    dir: Vec<u32>,
+    evicted: Vec<u32>,
+    dead_ranks: Vec<u32>,
+}
+
+fn parse_welcome(payload: &[u8]) -> Result<WelcomeMsg> {
+    let mut r = WireReader::new(payload);
+    let _rank = r.u32()?;
+    let procs = r.u32()? as usize;
+    let g = r.u32()? as usize;
+    let epochs = r.u64()?;
+    let next_epoch = r.u64()?;
+    let _membership_epoch = r.u64()?;
+    let params = r.vec_f32()?;
+    let dir = r.vec_u32()?;
+    let evicted = r.vec_u32()?;
+    let dead_ranks = r.vec_u32()?;
+    Ok(WelcomeMsg { procs, g, epochs, next_epoch, params, dir, evicted, dead_ranks })
+}
+
+/// Entry point for the hidden `dlio worker` subcommand the supervisor
+/// spawns (one invocation per rank).
+pub fn worker_main(args: &Args) -> Result<()> {
+    let rank = args.usize_or("rank", 0)?;
+    let procs = args.usize_or("procs", 2)?;
+    let g = args.usize_or("learners", 2)?;
+    let dir = PathBuf::from(
+        args.str_opt("dir").context("worker needs --dir")?,
+    );
+    let rendezvous = PathBuf::from(
+        args.str_opt("rendezvous").context("worker needs --rendezvous")?,
+    );
+    let epochs_cfg = args.u64_or("epochs", 2)?;
+    let local_batch = args.usize_or("batch", 8)?;
+    let seed = args.u64_or("seed", 42)?;
+    let lr = args.f64_or("lr", 0.05)? as f32;
+    let flip_prob = args.f64_or("flip", 0.5)?;
+    let sampler = match args.str_or("sampler", "loc").as_str() {
+        "reg" => SamplerKind::Reg,
+        "loc" => SamplerKind::Loc,
+        other => bail!("worker sampler must be reg|loc, got {other}"),
+    };
+    let transport_str = args.str_or("transport", "uds");
+    let transport_kind = TransportKind::parse(&transport_str)
+        .with_context(|| format!("unknown --transport {transport_str}"))?;
+    ensure!(
+        transport_kind != TransportKind::InProc,
+        "a spawned worker needs a real transport (uds or shm), not inproc"
+    );
+    let rejoin = args.flag("rejoin");
+    let hb_interval =
+        Duration::from_millis(args.u64_or("hb-interval-ms", 50)?);
+    let barrier_budget =
+        Duration::from_millis(args.u64_or("barrier-deadline-ms", 30_000)?);
+    let transfer_budget =
+        Duration::from_millis(args.u64_or("transfer-deadline-ms", 5_000)?);
+
+    let p_global = procs * g;
+    ensure!(rank < procs, "rank {rank} out of range for {procs} procs");
+
+    // ---- data plane -----------------------------------------------------
+    let storage = Arc::new(StorageSystem::open(&dir, None)?);
+    let n = storage.n_samples();
+    let record_bytes = storage.meta().record_bytes();
+    let serve_dir = Arc::new(CacheDirectory::new(n));
+    let mut plan_dir = Arc::new(CacheDirectory::new(n));
+    // One stack per *global* learner id. Only this rank's g stacks ever
+    // hold bytes; remote learners' entries are placeholders the
+    // transport hook routes around before they are touched.
+    let caches: Vec<Arc<CacheStack>> = (0..p_global)
+        .map(|_| Arc::new(CacheStack::mem_only(u64::MAX, Policy::InsertOnly)))
+        .collect();
+    let fabric = Arc::new(Fabric::new(FabricConfig {
+        real_time: false,
+        ..FabricConfig::default()
+    }));
+    fabric.set_deadlines(crate::fault::Deadlines {
+        transfer: Some(transfer_budget),
+        barrier: Some(barrier_budget),
+        ..crate::fault::Deadlines::none()
+    });
+    let peer_paths: Vec<PathBuf> = (0..procs)
+        .map(|r| UdsPeers::peer_path(&rendezvous, r))
+        .collect();
+    let peers = Arc::new(UdsPeers::new(rank, g, peer_paths));
+    fabric.set_transport(Some(peers.clone() as Arc<dyn PeerTransport>));
+    let served: std::collections::HashMap<usize, Arc<CacheStack>> = (0..g)
+        .map(|j| (rank * g + j, Arc::clone(&caches[rank * g + j])))
+        .collect();
+    let _server =
+        PeerServer::start(UdsPeers::peer_path(&rendezvous, rank), served)?;
+
+    // ---- control plane --------------------------------------------------
+    let ctrl = Ctrl::connect(
+        &rendezvous.join("ctrl.sock"),
+        Duration::from_secs(10),
+    )?;
+    let mut hello = Wire::new();
+    hello.u32(rank as u32).u32(std::process::id()).u8(rejoin as u8);
+    ctrl.send(HELLO, &hello.take())?;
+    let mut read = ctrl.read.try_clone()?;
+    let (kind, payload) = next_frame(&mut read, barrier_budget)
+        .context("waiting for WELCOME")?;
+    ensure!(kind == WELCOME, "expected WELCOME, got frame kind {kind}");
+    let w = parse_welcome(&payload)?;
+    ensure!(
+        w.procs == procs && w.g == g,
+        "coordinator topology {}x{} != worker config {procs}x{g}",
+        w.procs,
+        w.g
+    );
+    let epochs = if w.epochs > 0 { w.epochs } else { epochs_cfg };
+    let mut params = if w.params.is_empty() {
+        init_params(seed)
+    } else {
+        w.params.clone()
+    };
+    ensure!(params.len() == MODEL_DIM, "bad parameter image");
+    if !w.dir.is_empty() {
+        plan_dir = Arc::new(CacheDirectory::from_raw(&w.dir));
+        serve_dir.restore_raw(&w.dir);
+    }
+    for &l in &w.evicted {
+        serve_dir.evict_owner(l as usize);
+    }
+    let mut dead: BTreeSet<usize> = BTreeSet::new();
+    for &r in &w.dead_ranks {
+        dead.insert(r as usize);
+        peers.mark_dead(r as usize);
+        for l in (r as usize * g)..(r as usize * g + g) {
+            serve_dir.evict_owner(l);
+        }
+    }
+
+    // Heartbeats ride a dedicated thread over the shared writer so a
+    // long fetch never silences the rank.
+    let gstep = Arc::new(AtomicU64::new(0));
+    let hb_stop = Arc::new(AtomicBool::new(false));
+    let hb_handle = {
+        let write = Arc::clone(&ctrl.write);
+        let gstep = Arc::clone(&gstep);
+        let stop = Arc::clone(&hb_stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                let mut w = Wire::new();
+                w.u32(rank as u32).u64(gstep.load(Ordering::Acquire));
+                let payload = w.take();
+                {
+                    let mut c = write.lock().unwrap();
+                    if write_frame(&mut *c, HB, &payload).is_err() {
+                        return;
+                    }
+                }
+                std::thread::sleep(hb_interval);
+            }
+        })
+    };
+
+    let result = run_epochs(RunCtx {
+        rank,
+        procs,
+        g,
+        p_global,
+        epochs,
+        next_epoch: w.next_epoch,
+        local_batch,
+        seed,
+        lr,
+        flip_prob,
+        sampler,
+        record_bytes,
+        storage,
+        caches,
+        serve_dir,
+        plan_dir: &mut plan_dir,
+        fabric,
+        peers,
+        ctrl: &ctrl,
+        read: &mut read,
+        barrier_budget,
+        gstep: &gstep,
+        dead: &mut dead,
+        params: &mut params,
+    });
+    hb_stop.store(true, Ordering::Release);
+    let _ = hb_handle.join();
+    if let Err(e) = &result {
+        let mut w = Wire::new();
+        w.u32(rank as u32).bytes(format!("{e:#}").as_bytes());
+        let _ = ctrl.send(ABORT, &w.take());
+    }
+    result
+}
+
+struct RunCtx<'a> {
+    rank: usize,
+    procs: usize,
+    g: usize,
+    p_global: usize,
+    epochs: u64,
+    next_epoch: u64,
+    local_batch: usize,
+    seed: u64,
+    lr: f32,
+    flip_prob: f64,
+    sampler: SamplerKind,
+    record_bytes: usize,
+    storage: Arc<StorageSystem>,
+    caches: Vec<Arc<CacheStack>>,
+    serve_dir: Arc<CacheDirectory>,
+    plan_dir: &'a mut Arc<CacheDirectory>,
+    fabric: Arc<Fabric>,
+    peers: Arc<UdsPeers>,
+    ctrl: &'a Ctrl,
+    read: &'a mut UnixStream,
+    barrier_budget: Duration,
+    gstep: &'a AtomicU64,
+    dead: &'a mut BTreeSet<usize>,
+    params: &'a mut Vec<f32>,
+}
+
+fn run_epochs(mut c: RunCtx<'_>) -> Result<()> {
+    let counters = Arc::new(LoadCounters::new());
+    let runtime = LoaderRuntime::new(&LoaderConfig {
+        workers: 1,
+        threads_per_worker: 1,
+        prefetch_batches: 2,
+    });
+    let shuffler = GlobalShuffler::new(c.seed, c.storage.n_samples());
+    let global_batch = c.local_batch * c.p_global;
+    let mut gen = c.next_epoch
+        * (EpochPlan::new(&shuffler, 0, global_batch).steps() as u64);
+    let mut pop_snapshot = counters.snapshot();
+
+    for epoch in c.next_epoch..c.epochs {
+        let plan = EpochPlan::new(&shuffler, epoch, global_batch);
+        let populate = epoch == 0 && c.sampler == SamplerKind::Loc;
+        // One context per global learner: local ones serve/populate the
+        // rank's stacks, adopted ones ride the same storage + transport
+        // paths with their own (empty) placeholder stacks.
+        let ctxs: Vec<Arc<FetchContext>> = (0..c.p_global)
+            .map(|l| {
+                Arc::new(FetchContext {
+                    learner: l,
+                    storage: Arc::clone(&c.storage),
+                    caches: c.caches.clone(),
+                    directory: Arc::clone(&c.serve_dir),
+                    fabric: Arc::clone(&c.fabric),
+                    cache_on_load: populate
+                        && l / c.g == c.rank,
+                    decode_s_per_kib: 0.0,
+                    counters: Arc::clone(&counters),
+                })
+            })
+            .collect();
+
+        for step in 0..plan.steps() {
+            c.fabric.observe_step(gen);
+            let batch = plan.batch(step);
+            let splan = Arc::new(match c.sampler {
+                SamplerKind::Loc => StepPlan::plan_loc(
+                    epoch,
+                    step as u64,
+                    batch.sample_ids,
+                    c.plan_dir,
+                    c.p_global,
+                ),
+                _ => StepPlan::plan_reg(
+                    epoch,
+                    step as u64,
+                    batch.sample_ids,
+                    c.p_global,
+                ),
+            });
+            let mut sent: BTreeSet<usize> = BTreeSet::new();
+            send_owned_grads(
+                &mut c, &ctxs, &runtime, &splan, epoch, step as u64, gen,
+                &mut sent,
+            )?;
+            // Rendezvous: wait for this generation's MEAN, servicing
+            // DEATH notifications (and adopting their shares) meanwhile.
+            let mean = loop {
+                let (kind, payload) =
+                    next_frame(c.read, c.barrier_budget).with_context(
+                        || format!("awaiting MEAN for step {gen}"),
+                    )?;
+                match kind {
+                    MEAN => {
+                        let mut r = WireReader::new(&payload);
+                        let mgen = r.u64()?;
+                        if mgen < gen {
+                            continue; // stale broadcast from a past gen
+                        }
+                        ensure!(
+                            mgen == gen,
+                            "MEAN for gen {mgen} arrived at gen {gen}"
+                        );
+                        break r.vec_f32()?;
+                    }
+                    DEATH => {
+                        on_death(&mut c, &payload)?;
+                        // Adoption may now cover the dead rank's
+                        // learners for the in-flight generation.
+                        send_owned_grads(
+                            &mut c, &ctxs, &runtime, &splan, epoch,
+                            step as u64, gen, &mut sent,
+                        )?;
+                    }
+                    _ => {}
+                }
+            };
+            ensure!(mean.len() == MODEL_DIM, "bad MEAN dimension");
+            for (p, m) in c.params.iter_mut().zip(&mean) {
+                *p -= c.lr * m;
+            }
+            gen += 1;
+            c.gstep.store(gen, Ordering::Release);
+        }
+
+        // ---- epoch boundary --------------------------------------------
+        if populate {
+            let mut w = Wire::new();
+            w.u32(c.rank as u32).vec_u32(&c.serve_dir.snapshot_raw());
+            c.ctrl.send(CLAIMS, &w.take())?;
+        }
+        let digest = param_digest(c.params);
+        let mut w = Wire::new();
+        w.u32(c.rank as u32)
+            .u64(epoch)
+            .u64(digest)
+            .vec_f32(c.params);
+        c.ctrl.send(EPOCH_END, &w.take())?;
+        loop {
+            let (kind, payload) = next_frame(c.read, c.barrier_budget)
+                .with_context(|| format!("awaiting EPOCH_SYNC {epoch}"))?;
+            match kind {
+                EPOCH_SYNC => {
+                    let mut r = WireReader::new(&payload);
+                    let e = r.u64()?;
+                    if e < epoch {
+                        continue;
+                    }
+                    ensure!(e == epoch, "EPOCH_SYNC {e} at epoch {epoch}");
+                    let _membership_epoch = r.u64()?;
+                    let freeze = r.u8()? != 0;
+                    let words = r.vec_u32()?;
+                    let rejoined = r.vec_u32()?;
+                    if freeze {
+                        // Swap in the merged global image: planning uses
+                        // the immutable frozen copy for the rest of the
+                        // run; serving starts from it and takes future
+                        // evictions.
+                        *c.plan_dir =
+                            Arc::new(CacheDirectory::from_raw(&words));
+                        c.serve_dir.restore_raw(&words);
+                        for &r in c.dead.iter() {
+                            for l in (r * c.g)..(r * c.g + c.g) {
+                                c.serve_dir.evict_owner(l);
+                            }
+                        }
+                    }
+                    for &r in &rejoined {
+                        c.dead.remove(&(r as usize));
+                        c.peers.mark_alive(r as usize);
+                    }
+                    break;
+                }
+                DEATH => on_death(&mut c, &payload)?,
+                MEAN => {} // stale: our grads were already applied
+                _ => {}
+            }
+        }
+        if epoch == 0 {
+            pop_snapshot = counters.snapshot();
+        }
+    }
+
+    // ---- done -----------------------------------------------------------
+    let total = counters.snapshot();
+    let digest = param_digest(c.params);
+    let mut w = Wire::new();
+    w.u32(c.rank as u32)
+        .u64(digest)
+        .u64(total.local_hits)
+        .u64(total.remote_hits)
+        .u64(total.storage_loads)
+        .u64(total.disk_hits)
+        .u64(total.local_hits - pop_snapshot.local_hits)
+        .u64(total.remote_hits - pop_snapshot.remote_hits)
+        .u64(total.storage_loads - pop_snapshot.storage_loads)
+        .u64(total.disk_hits - pop_snapshot.disk_hits);
+    c.ctrl.send(DONE, &w.take())?;
+    Ok(())
+}
+
+/// Which global learners this rank computes right now: its own, plus —
+/// when it is the lowest-ranked survivor — every dead rank's (mirrors
+/// [`Membership`]'s adoption rule, so the local mirror and the
+/// coordinator agree on who recomputes what).
+fn owned_learners(c: &RunCtx<'_>) -> Vec<usize> {
+    let mut owned: Vec<usize> =
+        ((c.rank * c.g)..(c.rank * c.g + c.g)).collect();
+    let lowest_alive =
+        (0..c.procs).find(|r| !c.dead.contains(r)).unwrap_or(c.rank);
+    if c.rank == lowest_alive {
+        for &r in c.dead.iter() {
+            owned.extend((r * c.g)..(r * c.g + c.g));
+        }
+    }
+    owned.sort_unstable();
+    owned
+}
+
+#[allow(clippy::too_many_arguments)]
+fn send_owned_grads(
+    c: &mut RunCtx<'_>,
+    ctxs: &[Arc<FetchContext>],
+    runtime: &LoaderRuntime,
+    splan: &Arc<StepPlan>,
+    epoch: u64,
+    step: u64,
+    gen: u64,
+    sent: &mut BTreeSet<usize>,
+) -> Result<()> {
+    let mut grad = vec![0f32; MODEL_DIM];
+    for l in owned_learners(c) {
+        if !sent.insert(l) {
+            continue;
+        }
+        let batch = load_batch_adhoc(
+            &ctxs[l],
+            runtime.pool(),
+            c.record_bytes,
+            None,
+            c.seed,
+            c.flip_prob,
+            BatchRequest {
+                epoch,
+                step,
+                ids: BatchIds::planned(Arc::clone(splan), l),
+            },
+        )
+        .with_context(|| format!("load step {step} for learner {l}"))?;
+        batch_grad(
+            c.params,
+            c.record_bytes,
+            batch.x_u8.as_slice(),
+            batch.labels.as_slice(),
+            batch.flip.as_slice(),
+            &mut grad,
+        );
+        let mut w = Wire::new();
+        w.u64(gen).u32(l as u32).vec_f32(&grad);
+        c.ctrl.send(GRAD, &w.take())?;
+    }
+    Ok(())
+}
+
+/// Apply a coordinator DEATH broadcast: evict the dead rank's directory
+/// claims, drop its peer connection, and remember it for adoption.
+fn on_death(c: &mut RunCtx<'_>, payload: &[u8]) -> Result<()> {
+    let mut r = WireReader::new(payload);
+    let dead_rank = r.u32()? as usize;
+    let _pending_gen = r.u64()?;
+    let _membership_epoch = r.u64()?;
+    if dead_rank != c.rank && c.dead.insert(dead_rank) {
+        c.peers.mark_dead(dead_rank);
+        for l in (dead_rank * c.g)..(dead_rank * c.g + c.g) {
+            c.serve_dir.evict_owner(l);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_and_digest_are_deterministic() {
+        let a = init_params(42);
+        let b = init_params(42);
+        assert_eq!(a, b);
+        assert_eq!(param_digest(&a), param_digest(&b));
+        assert_ne!(param_digest(&a), param_digest(&init_params(43)));
+        assert_eq!(a.len(), MODEL_DIM);
+    }
+
+    #[test]
+    fn gradient_is_pure_in_its_inputs() {
+        let params = init_params(7);
+        let bytes: Vec<u8> = (0..96u8).collect();
+        let labels = [3i32, 4];
+        let flips = [1.0f32, -1.0];
+        let mut g1 = vec![0f32; MODEL_DIM];
+        let mut g2 = vec![0f32; MODEL_DIM];
+        batch_grad(&params, 48, &bytes, &labels, &flips, &mut g1);
+        batch_grad(&params, 48, &bytes, &labels, &flips, &mut g2);
+        assert_eq!(g1, g2);
+        assert!(g1.iter().any(|x| *x != 0.0));
+    }
+
+    #[test]
+    fn features_respect_flip_sign() {
+        let bytes = vec![200u8; 64];
+        let mut a = [0f32; MODEL_DIM];
+        let mut b = [0f32; MODEL_DIM];
+        features(&bytes, 1.0, &mut a);
+        features(&bytes, -1.0, &mut b);
+        for d in 0..MODEL_DIM {
+            assert_eq!(a[d], -b[d]);
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Process exit-code taxonomy (DESIGN.md §13).
+//!
+//! The multi-process supervisor — and any operator reading a crashed
+//! worker's status — needs to tell a *deadline-stall* death (the fault
+//! layer bounded a wait and gave up) from a *fault-injected* death (a
+//! chaos timeline or `halt_after_gstep` killed the run on purpose) from
+//! an ordinary crash. `main.rs` maps the job's terminal error through
+//! [`classify`] so each class gets a distinct, stable exit code.
+//!
+//! Classification is by the stable `Display` markers of the crate's own
+//! error types (the vendored `anyhow` shim carries a flat string chain,
+//! so there is no downcast): [`StallError`] always renders
+//! `"<kind> wait exceeded its deadline"`, and the simulated-kill bail
+//! renders `"(simulated kill)"`. Those strings are load-bearing — tests
+//! in this module and the supervisor both depend on them.
+
+use super::{StallError, StallKind};
+
+/// Clean completion.
+pub const OK: i32 = 0;
+/// Unclassified failure (I/O error, bad config, panic-adjacent bail).
+pub const CRASH: i32 = 1;
+/// A fabric/transport transfer blew its deadline budget.
+pub const STALL_TRANSFER: i32 = 40;
+/// The gradient rendezvous (barrier) blew its deadline budget.
+pub const STALL_BARRIER: i32 = 41;
+/// A shared-planner plan-get blew its deadline budget.
+pub const STALL_PLAN: i32 = 42;
+/// An executor task latch blew its deadline budget.
+pub const STALL_TASK: i32 = 43;
+/// Deliberate fault injection (chaos timeline / `halt_after_gstep`).
+pub const INJECTED_KILL: i32 = 44;
+
+/// The exit code for a structured stall.
+pub fn for_stall(kind: StallKind) -> i32 {
+    match kind {
+        StallKind::Transfer => STALL_TRANSFER,
+        StallKind::Barrier => STALL_BARRIER,
+        StallKind::Plan => STALL_PLAN,
+        StallKind::Task => STALL_TASK,
+    }
+}
+
+/// Classify a terminal error into an exit code by scanning its context
+/// chain (outermost first — the first recognizable marker wins, so a
+/// stall wrapped in I/O context still classifies as a stall).
+pub fn classify(err: &anyhow::Error) -> i32 {
+    for msg in err.chain() {
+        if msg.contains("(simulated kill)") {
+            return INJECTED_KILL;
+        }
+        if msg.contains("wait exceeded its deadline") {
+            if msg.contains("transfer wait") {
+                return STALL_TRANSFER;
+            }
+            if msg.contains("barrier wait") {
+                return STALL_BARRIER;
+            }
+            if msg.contains("plan wait") {
+                return STALL_PLAN;
+            }
+            if msg.contains("task wait") {
+                return STALL_TASK;
+            }
+        }
+    }
+    CRASH
+}
+
+/// Human-readable name for a worker's exit code (the supervisor prints
+/// this when reporting child deaths).
+pub fn describe(code: i32) -> &'static str {
+    match code {
+        OK => "clean exit",
+        CRASH => "crash",
+        STALL_TRANSFER => "transfer-deadline stall",
+        STALL_BARRIER => "barrier-deadline stall",
+        STALL_PLAN => "plan-deadline stall",
+        STALL_TASK => "task-deadline stall",
+        INJECTED_KILL => "injected kill",
+        _ => "unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn stall(kind: StallKind) -> anyhow::Error {
+        anyhow::Error::msg(
+            StallError {
+                kind,
+                waited: Duration::from_millis(120),
+                deadline: Duration::from_millis(100),
+            }
+            .to_string(),
+        )
+    }
+
+    #[test]
+    fn each_stall_kind_gets_its_own_code() {
+        assert_eq!(classify(&stall(StallKind::Transfer)), STALL_TRANSFER);
+        assert_eq!(classify(&stall(StallKind::Barrier)), STALL_BARRIER);
+        assert_eq!(classify(&stall(StallKind::Plan)), STALL_PLAN);
+        assert_eq!(classify(&stall(StallKind::Task)), STALL_TASK);
+        assert_eq!(for_stall(StallKind::Barrier), STALL_BARRIER);
+    }
+
+    #[test]
+    fn wrapped_stalls_still_classify() {
+        use anyhow::Context;
+        let err: anyhow::Error =
+            Err::<(), _>(stall(StallKind::Transfer))
+                .context("learner 3 failed")
+                .unwrap_err();
+        assert_eq!(classify(&err), STALL_TRANSFER);
+    }
+
+    #[test]
+    fn injected_kill_and_crash_are_distinct() {
+        let kill = anyhow::anyhow!(
+            "halted by config after step 17 (simulated kill)"
+        );
+        assert_eq!(classify(&kill), INJECTED_KILL);
+        let crash = anyhow::anyhow!("No such file or directory");
+        assert_eq!(classify(&crash), CRASH);
+        assert_ne!(describe(INJECTED_KILL), describe(CRASH));
+    }
+}

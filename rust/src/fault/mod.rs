@@ -17,8 +17,21 @@
 //! bit-identical to the unfaulted build; the zero-injection CI guard
 //! (`fault/clean_determinism`) pins that down.
 
+pub mod exitcode;
+
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
+
+/// Process-kill injection for the multi-process harness (DESIGN.md §13):
+/// SIGKILL the child serving `rank` once its heartbeat clock reaches
+/// `at_gstep`. The supervisor drives this off the worker's own reported
+/// progress, so the kill lands at a deterministic point in the schedule
+/// even though the OS delivery itself is asynchronous.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProcKill {
+    pub rank: usize,
+    pub at_gstep: u64,
+}
 
 /// Which blocking wait missed its deadline.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -42,6 +42,7 @@
 
 use crate::cache::{CacheDirectory, CacheStack, Lookup, Tier};
 use crate::metrics::{LoadCounters, Source};
+use crate::net::transport::PeerTransport;
 use crate::net::Fabric;
 use crate::storage::{Sample, StorageSystem};
 use crate::util::{panic_message, Executor};
@@ -323,6 +324,16 @@ impl FetchContext {
     /// Remote-hit accounting happens only AFTER the transfer succeeds,
     /// so a refused transfer never leaves phantom remote hits behind.
     pub fn fetch_owner(&self, group: OwnerGroup) -> OwnerFetch {
+        // Live tier (DESIGN.md §13): when a real transport is installed
+        // on the fabric and this owner's cache lives in another process,
+        // the group rides the socket instead of the virtual links. Owner
+        // groups whose owner is local fall through to the in-process
+        // path unchanged.
+        if let Some(t) = self.fabric.transport() {
+            if !t.serves_local(group.owner) {
+                return self.fetch_owner_transport(&*t, group);
+            }
+        }
         let OwnerGroup { owner, entries } = group;
         let mut out = OwnerFetch {
             resolved: Vec::with_capacity(entries.len()),
@@ -401,6 +412,73 @@ impl FetchContext {
             for (id, pos, _) in held {
                 self.directory.clear_owner_if(id, owner);
                 out.fallback.push((id, pos));
+            }
+        }
+        out
+    }
+
+    /// Cross-process variant of [`fetch_owner`](FetchContext::fetch_owner):
+    /// the whole group is one request frame to the owner's process. The
+    /// same recovery contract holds — per-id misses repair the claim and
+    /// demote to storage; a transport failure (peer death, deadline
+    /// stall) demotes the whole group and clears its claims so the next
+    /// step routes straight to storage. Remote-hit accounting happens
+    /// only after the response bytes are in hand, so an EOF racing a
+    /// completed transfer can never double-count: either the full frame
+    /// arrived (count once) or it did not (count nothing, fall back).
+    fn fetch_owner_transport(
+        &self,
+        transport: &dyn PeerTransport,
+        group: OwnerGroup,
+    ) -> OwnerFetch {
+        let OwnerGroup { owner, entries } = group;
+        let mut out = OwnerFetch {
+            resolved: Vec::with_capacity(entries.len()),
+            fallback: Vec::new(),
+        };
+        if entries.is_empty() {
+            return out;
+        }
+        let ids: Vec<u32> = entries.iter().map(|(id, _)| *id).collect();
+        let deadline = self.fabric.deadlines().transfer;
+        match transport.fetch_from_owner(owner, &ids, deadline) {
+            Ok(samples) => {
+                let mut any = false;
+                for ((id, pos), got) in entries.into_iter().zip(samples) {
+                    match got {
+                        Some((label, bytes)) => {
+                            let sample = Arc::new(Sample {
+                                id,
+                                bytes: bytes.into(),
+                                label,
+                            });
+                            any = true;
+                            self.counters.record_n(
+                                Source::RemoteCache,
+                                sample.size() as u64,
+                                pos.len() as u64,
+                            );
+                            out.resolved.push((pos, sample));
+                        }
+                        None => {
+                            // The owner no longer holds it: repair the
+                            // claim, serve from storage.
+                            self.directory.clear_owner_if(id, owner);
+                            out.fallback.push((id, pos));
+                        }
+                    }
+                }
+                if any {
+                    self.counters.owner_messages.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(_) => {
+                // Peer dead, stalled, or talking garbage: evict every
+                // claim in the group and take the bounded storage path.
+                for (id, pos) in entries {
+                    self.directory.clear_owner_if(id, owner);
+                    out.fallback.push((id, pos));
+                }
             }
         }
         out
@@ -1200,5 +1278,108 @@ mod tests {
         fc.fetch(1).unwrap(); // 3 KiB -> ~6ms decode
         assert!(t0.elapsed().as_secs_f64() > 0.004);
         assert!(fc.counters.snapshot().decode_s > 0.004);
+    }
+
+    /// Satellite (DESIGN.md §13): peer dies *between* the directory
+    /// freeze and the first transfer. The frozen directory still claims
+    /// the sample for the remote owner, but its socket never answers —
+    /// the fetch must repair the claim and serve from storage, with zero
+    /// remote accounting and no panic or hang.
+    #[test]
+    fn transport_peer_dead_between_freeze_and_first_transfer() {
+        use crate::net::transport::UdsPeers;
+        let (fc, _) = ctx_with("tdead", false, 2);
+        // "Freeze": owner 1 claims sample 3 in the directory...
+        fc.directory.set_owner(3, 1);
+        // ...but owner 1's process is gone: its socket path was never
+        // bound (g = 1, so owner 1 is rank 1 — remote to rank 0).
+        let ghost = std::env::temp_dir().join(format!(
+            "dlio-ghost-{}-{:?}.sock",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_file(&ghost);
+        fc.fabric.set_transport(Some(Arc::new(UdsPeers::new(
+            0,
+            1,
+            vec![ghost.clone(), ghost],
+        ))));
+        let got = fc.fetch_batch(&[3]).unwrap();
+        assert_eq!(got.len(), 1);
+        let snap = fc.counters.snapshot();
+        assert_eq!(snap.remote_hits, 0, "a dead peer serves nothing");
+        assert_eq!(snap.storage_loads, 1, "storage is the bounded fallback");
+        assert_eq!(
+            fc.directory.owner(3),
+            None,
+            "dead-peer claims must be evicted"
+        );
+    }
+
+    /// Satellite (DESIGN.md §13): EOF racing a completed transfer. The
+    /// peer serves the full response frame and closes immediately; the
+    /// remote hit must be counted exactly once, and the follow-up fetch
+    /// on the dead connection must fall back to storage without
+    /// re-counting the first transfer.
+    #[test]
+    fn transport_eof_after_completed_transfer_counts_once() {
+        use crate::fault::Deadlines;
+        use crate::net::transport::{
+            read_frame, write_frame, UdsPeers, Wire, WireReader, PFETCH, PSAMP,
+        };
+        use std::os::unix::net::UnixListener;
+        let (fc, _) = ctx_with("teof", false, 2);
+        let real = fc.storage.read_sample(9).unwrap();
+        let (label, payload) = (real.label, real.bytes.as_slice().to_vec());
+        let sock = std::env::temp_dir().join(format!(
+            "dlio-eoffetch-{}-{:?}.sock",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_file(&sock);
+        let listener = UnixListener::bind(&sock).unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            let (kind, req) = read_frame(&mut conn).unwrap();
+            assert_eq!(kind, PFETCH);
+            let mut r = WireReader::new(&req);
+            let _owner = r.u32().unwrap();
+            let ids = r.vec_u32().unwrap();
+            assert_eq!(ids, vec![9]);
+            let mut resp = Wire::new();
+            resp.u32(1).u8(1).u16(label).u32(payload.len() as u32);
+            resp.bytes(&payload);
+            write_frame(&mut conn, PSAMP, &resp.take()).unwrap();
+            // Complete response, then immediate EOF + no more listener.
+        });
+        fc.directory.set_owner(9, 1);
+        fc.fabric.set_transport(Some(Arc::new(UdsPeers::new(
+            0,
+            1,
+            vec![sock.clone(), sock.clone()],
+        ))));
+        fc.fabric.set_deadlines(Deadlines {
+            transfer: Some(Duration::from_secs(5)),
+            ..Deadlines::none()
+        });
+        let got = fc.fetch_batch(&[9]).unwrap();
+        server.join().unwrap();
+        let _ = std::fs::remove_file(&sock);
+        assert_eq!(got[0].bytes, real.bytes);
+        let snap = fc.counters.snapshot();
+        assert_eq!(snap.remote_hits, 1, "the completed transfer counts once");
+        assert_eq!(snap.storage_loads, 0);
+        // Second fetch: cached connection is dead, redial fails, claim
+        // evicts, storage serves — and the earlier hit is NOT recounted.
+        fc.directory.set_owner(12, 1);
+        let got2 = fc.fetch_batch(&[12]).unwrap();
+        assert_eq!(got2.len(), 1);
+        let snap = fc.counters.snapshot();
+        assert_eq!(
+            snap.remote_hits, 1,
+            "EOF after the fact must not double-count the remote hit"
+        );
+        assert_eq!(snap.storage_loads, 1);
+        assert_eq!(fc.directory.owner(12), None);
     }
 }

@@ -3,31 +3,50 @@
 //! Subcommands:
 //!   gen-data   materialize a synthetic shard dataset
 //!   loadtest   run the live loader (Fig. 7-style sweep or single config)
-//!   train      distributed training on a materialized dataset (Reg/Loc)
+//!   train      distributed training on a materialized dataset (Reg/Loc);
+//!              with --procs N, supervised multi-process scale-out
+//!   worker     (internal) one multi-process rank, spawned by the supervisor
 //!   figures    regenerate a paper figure/table (sim- or live-backed)
 //!   analytic   print the §IV model curves
 //!   balance    demo Algorithm 1 on a load vector
 //!
 //! Run `dlio <cmd> --help` semantics: every option has a default; see the
 //! match arms below for the accepted keys.
+//!
+//! Exit codes map the terminal error class (DESIGN.md §13): 0 clean,
+//! 1 crash, 40-43 the four deadline-stall kinds, 44 injected kill.
 
 use anyhow::{bail, Context, Result};
 use dlio::config::Args;
 use dlio::coordinator::{SamplerKind, Trainer, TrainerConfig};
+use dlio::fault::{exitcode, Deadlines, ProcKill};
 use dlio::loader::LoaderConfig;
+use dlio::net::transport::TransportKind;
 use dlio::net::{Fabric, FabricConfig};
 use dlio::runtime::{default_artifacts_dir, Engine};
 use dlio::storage::{generate, Catalog, StorageSystem, SyntheticSpec, TokenBucket};
 use dlio::{analytic, figures};
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Duration;
 
-fn main() -> Result<()> {
+fn main() {
+    match run() {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(exitcode::classify(&e));
+        }
+    }
+}
+
+fn run() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_deref() {
         Some("gen-data") => gen_data(&args),
         Some("loadtest") => loadtest(&args),
         Some("train") => train(&args),
+        Some("worker") => dlio::coordinator::worker_main(&args),
         Some("figures") => run_figures(&args),
         Some("analytic") => run_analytic(&args),
         Some("balance") => balance_demo(&args),
@@ -87,16 +106,21 @@ fn loadtest(args: &Args) -> Result<()> {
 
 fn train(args: &Args) -> Result<()> {
     let dir = data_dir(args);
-    if !dir.join("dataset.json").exists() {
-        println!("materializing default dataset under {}", dir.display());
-        generate(&dir, &SyntheticSpec::default())?;
-    }
     let sampler = match args.str_or("sampler", "loc").as_str() {
         "reg" => SamplerKind::Reg,
         "distcache" | "dc" => SamplerKind::DistCache,
         "loc" => SamplerKind::Loc,
         other => bail!("--sampler must be reg|distcache|loc, got {other:?}"),
     };
+    // --procs N routes to the supervised multi-process tier: one child
+    // process per node over real transports (DESIGN.md §13).
+    if args.usize_or("procs", 0)? > 0 {
+        return train_multiproc(args, dir, sampler);
+    }
+    if !dir.join("dataset.json").exists() {
+        println!("materializing default dataset under {}", dir.display());
+        generate(&dir, &SyntheticSpec::default())?;
+    }
     let throttle = match args.f64_or("storage-bps", 0.0)? {
         bps if bps > 0.0 => Some(Arc::new(TokenBucket::new(bps, 64.0 * 1024.0))),
         _ => None,
@@ -141,6 +165,19 @@ fn train(args: &Args) -> Result<()> {
         fault_dead: args.flag("fault-dead"),
         fault_seed: args.u64_or("fault-seed", 0x5EED)?,
         rebalance_interval_s: args.f64_or("rebalance-interval", 0.0)?,
+        // Failure recovery (DESIGN.md §12): uniform stall deadline,
+        // step-granular checkpoints, resume, and the halt fault.
+        deadlines: match args.u64_or("deadline-ms", 0)? {
+            0 => Deadlines::none(),
+            ms => Deadlines::uniform(Duration::from_millis(ms)),
+        },
+        checkpoint_interval_steps: args.u64_or("checkpoint-interval", 0)?,
+        resume_from: args.str_opt("resume").map(PathBuf::from),
+        halt_after_gstep: match args.u64_or("halt-after", 0)? {
+            0 => None,
+            s => Some(s),
+        },
+        ..TrainerConfig::default()
     };
     println!(
         "training: p={} epochs={} B_local={} sampler={:?} (engine: {})",
@@ -189,6 +226,68 @@ fn train(args: &Args) -> Result<()> {
                 report.tiers.spill_failures
             );
         }
+    }
+    Ok(())
+}
+
+/// `dlio train --procs N [--transport uds] [--kill-rank R --kill-step S
+/// [--restart]]` — supervised multi-process training over real
+/// transports, with optional SIGKILL injection.
+fn train_multiproc(
+    args: &Args,
+    dir: PathBuf,
+    sampler: SamplerKind,
+) -> Result<()> {
+    let transport_str = args.str_or("transport", "uds");
+    let transport = TransportKind::parse(&transport_str)
+        .with_context(|| format!("unknown --transport {transport_str}"))?;
+    let kill = match args.str_opt("kill-rank") {
+        Some(r) => Some(ProcKill {
+            rank: r.parse().context("bad --kill-rank")?,
+            at_gstep: args.u64_or("kill-step", 1)?,
+        }),
+        None => None,
+    };
+    let cfg = dlio::coordinator::MultiProcConfig {
+        procs: args.usize_or("procs", 2)?,
+        learners_per_proc: args.usize_or("learners", 2)?,
+        epochs: args.u64_or("epochs", 2)?,
+        local_batch: args.usize_or("batch", 8)?,
+        data_dir: dir,
+        samples: args.u64_or("samples", 256)?,
+        seed: args.u64_or("seed", 42)?,
+        lr: args.f64_or("lr", 0.05)?,
+        flip_prob: args.f64_or("flip", 0.5)?,
+        sampler,
+        transport,
+        worker_bin: std::env::current_exe()?,
+        kill,
+        restart: args.flag("restart"),
+        bench_out: args.str_opt("bench-out").map(PathBuf::from),
+        ..dlio::coordinator::MultiProcConfig::default()
+    };
+    println!(
+        "multi-process training: {} procs x {} learners, transport {}",
+        cfg.procs,
+        cfg.learners_per_proc,
+        cfg.transport.as_str()
+    );
+    let report = dlio::coordinator::run_multiproc(&cfg)?;
+    println!(
+        "digest {:#018x} | steps {} | wall {:.2}s | membership epoch {} \
+         (deaths {}, revivals {})",
+        report.coord.digest,
+        report.coord.steps,
+        report.coord.wall_s,
+        report.coord.recovery.membership_epoch,
+        report.coord.recovery.deaths,
+        report.coord.recovery.revivals,
+    );
+    for (rank, code, signal) in &report.exits {
+        println!(
+            "  rank {rank}: {}",
+            dlio::coordinator::SupervisorReport::describe_exit(*code, *signal)
+        );
     }
     Ok(())
 }

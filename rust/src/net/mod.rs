@@ -20,6 +20,8 @@
 //! Only relative rates matter for the paper's phenomena (R_c ≫ R), so the
 //! fabric is configured in bytes/sec alongside the storage throttle.
 
+pub mod transport;
+
 use crate::fault::{
     Deadlines, FaultPlan, FaultTimeline, StallError, StallKind,
 };
@@ -160,6 +162,12 @@ pub struct Fabric {
     /// Deadline budgets for waits on this fabric (transfers and fetch
     /// task latches). Installed once per job by the trainer.
     deadlines: RwLock<Deadlines>,
+    /// Optional real-transport backend (DESIGN.md §13): when installed,
+    /// the fetch path routes owner groups whose owner lives in another
+    /// process through it instead of the virtual links. `None` — the
+    /// default — keeps the in-process deterministic tier byte-for-byte
+    /// unchanged.
+    transport: RwLock<Option<Arc<dyn transport::PeerTransport>>>,
 }
 
 /// An in-flight transfer: link time is already reserved; [`wait`] sleeps
@@ -270,6 +278,7 @@ impl Fabric {
             timeline: RwLock::new(None),
             step: AtomicU64::new(0),
             deadlines: RwLock::new(Deadlines::none()),
+            transport: RwLock::new(None),
         }
     }
 
@@ -300,6 +309,18 @@ impl Fabric {
 
     pub fn deadlines(&self) -> Deadlines {
         *self.deadlines.read().unwrap()
+    }
+
+    /// Install (or clear) a live peer transport. Mirrors
+    /// [`set_fault_plan`](Fabric::set_fault_plan): read-mostly, one
+    /// uncontended read per owner group on the fetch path.
+    pub fn set_transport(&self, t: Option<Arc<dyn transport::PeerTransport>>) {
+        *self.transport.write().unwrap() = t;
+    }
+
+    /// The installed peer transport, if any.
+    pub fn transport(&self) -> Option<Arc<dyn transport::PeerTransport>> {
+        self.transport.read().unwrap().clone()
     }
 
     /// Advance the fabric's global step clock (monotonic max — racing

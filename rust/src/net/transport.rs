@@ -1,0 +1,818 @@
+//! Real-transport backends for owner-to-owner sample transfers
+//! (DESIGN.md §13).
+//!
+//! The in-process [`Fabric`](super::Fabric) stays the fast deterministic
+//! tier: virtual-time link clocks, no syscalls, bit-identical accounting.
+//! This module adds the live tier used by the supervised multi-process
+//! mode: each learner-group process serves its cache over a Unix-domain
+//! socket with a length-prefixed frame codec, and the fetch path routes
+//! any owner group whose owner lives in *another* process through a
+//! [`PeerTransport`] installed on the fabric. Deadlines map onto the
+//! existing [`fault::Deadlines`](crate::fault::Deadlines) budgets: a
+//! read/write that exceeds its budget surfaces as a
+//! [`StallError`](crate::fault::StallError) with [`StallKind::Transfer`],
+//! indistinguishable (by design) from an in-process transfer stall, so
+//! the PR 7 recovery path — evict claims, fall back to storage, mark the
+//! peer dead — handles both tiers with one code path.
+//!
+//! ## Frame format
+//!
+//! Every message on every socket (peer and control) is one frame:
+//!
+//! ```text
+//! [len: u32 LE] [kind: u8] [payload: len-1 bytes]
+//! ```
+//!
+//! `len` counts the kind byte plus the payload and is capped at
+//! [`MAX_FRAME`]; a frame that announces more is malformed, not a reason
+//! to allocate. Multi-byte integers inside payloads are little-endian
+//! (see [`Wire`]/[`WireReader`]).
+//!
+//! ## Shared-memory ring (feature `shm-ring`)
+//!
+//! Behind the `shm-ring` feature the server can place sample payloads in
+//! a preallocated mmap-shared segment and answer with (offset, len)
+//! descriptors instead of inline bytes; the client maps the same file
+//! and constructs zero-copy [`SampleBytes`](crate::storage::SampleBytes)
+//! views, reusing the PR 5 spill-segment machinery. When the ring is
+//! full the server transparently falls back to inline frames, so the
+//! ring is an optimization, never a correctness dependency.
+
+use crate::cache::CacheStack;
+use crate::fault::{StallError, StallKind};
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+/// Hard cap on a single frame (header-declared), peer and control alike.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Peer protocol frame kinds (control-plane kinds live in
+/// `coordinator::service`).
+pub const PFETCH: u8 = 20;
+pub const PSAMP: u8 = 21;
+#[cfg(feature = "shm-ring")]
+pub const PSAMP_SHM: u8 = 22;
+
+/// Which transport backs cross-process owner fetches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Threads in one process over the virtual fabric (no transport
+    /// installed) — the deterministic tier.
+    InProc,
+    /// Unix-domain sockets with inline frame payloads.
+    Uds,
+    /// UDS control frames + shared-memory payload ring (`shm-ring`
+    /// feature; falls back to inline frames when the ring is full).
+    #[cfg(feature = "shm-ring")]
+    Shm,
+}
+
+impl TransportKind {
+    /// Parse a `--transport` CLI value.
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s {
+            "inproc" | "threads" => Some(TransportKind::InProc),
+            "uds" => Some(TransportKind::Uds),
+            #[cfg(feature = "shm-ring")]
+            "shm" => Some(TransportKind::Shm),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Uds => "uds",
+            #[cfg(feature = "shm-ring")]
+            TransportKind::Shm => "shm",
+        }
+    }
+}
+
+/// Transport-layer failure, already classified for the recovery path.
+#[derive(Debug)]
+pub enum TransportError {
+    /// A read/write/connect exceeded its deadline budget. Carries the
+    /// same [`StallError`] the in-process fabric raises, so stall
+    /// accounting and exit-code mapping see one taxonomy.
+    Stall(StallError),
+    /// The peer's socket reached EOF (or refused the connection): the
+    /// process died or was killed. Routed into the membership path.
+    PeerClosed { peer: usize },
+    /// Any other socket-level error.
+    Io(io::Error),
+    /// The peer spoke, but not the protocol.
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Stall(s) => write!(f, "{s}"),
+            TransportError::PeerClosed { peer } => {
+                write!(f, "peer process {peer} closed the connection")
+            }
+            TransportError::Io(e) => write!(f, "transport i/o error: {e}"),
+            TransportError::Malformed(what) => write!(f, "malformed frame: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl TransportError {
+    /// Classify an `io::Error` from a deadlined socket operation on the
+    /// link to `peer`: timeouts become transfer stalls charged at the
+    /// full budget, EOF becomes peer death.
+    fn from_io(e: io::Error, peer: usize, deadline: Option<Duration>) -> TransportError {
+        match e.kind() {
+            io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => {
+                let budget = deadline.unwrap_or(Duration::ZERO);
+                TransportError::Stall(StallError {
+                    kind: StallKind::Transfer,
+                    waited: budget,
+                    deadline: budget,
+                })
+            }
+            io::ErrorKind::UnexpectedEof
+            | io::ErrorKind::ConnectionReset
+            | io::ErrorKind::ConnectionRefused
+            | io::ErrorKind::BrokenPipe
+            | io::ErrorKind::NotFound => TransportError::PeerClosed { peer },
+            _ => TransportError::Io(e),
+        }
+    }
+}
+
+/// Write one `[len][kind][payload]` frame.
+pub fn write_frame(w: &mut impl Write, kind: u8, payload: &[u8]) -> io::Result<()> {
+    let len = payload.len() + 1;
+    if len > MAX_FRAME {
+        return Err(io::Error::new(io::ErrorKind::InvalidInput, "frame too large"));
+    }
+    w.write_all(&(len as u32).to_le_bytes())?;
+    w.write_all(&[kind])?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame; EOF at a frame boundary surfaces as
+/// `ErrorKind::UnexpectedEof` (the caller decides whether that boundary
+/// was clean).
+pub fn read_frame(r: &mut impl Read) -> io::Result<(u8, Vec<u8>)> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad frame length"));
+    }
+    let mut kind = [0u8; 1];
+    r.read_exact(&mut kind)?;
+    let mut payload = vec![0u8; len - 1];
+    r.read_exact(&mut payload)?;
+    Ok((kind[0], payload))
+}
+
+/// Little-endian payload writer.
+#[derive(Default)]
+pub struct Wire(Vec<u8>);
+
+impl Wire {
+    pub fn new() -> Wire {
+        Wire(Vec::new())
+    }
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.0.push(v);
+        self
+    }
+    pub fn u16(&mut self, v: u16) -> &mut Self {
+        self.0.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.0.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.0.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn f32(&mut self, v: f32) -> &mut Self {
+        self.0.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn bytes(&mut self, v: &[u8]) -> &mut Self {
+        self.0.extend_from_slice(v);
+        self
+    }
+    /// Length-prefixed `u32` vector.
+    pub fn vec_u32(&mut self, v: &[u32]) -> &mut Self {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.u32(*x);
+        }
+        self
+    }
+    /// Length-prefixed `f32` vector.
+    pub fn vec_f32(&mut self, v: &[f32]) -> &mut Self {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.f32(*x);
+        }
+        self
+    }
+    pub fn take(&mut self) -> Vec<u8> {
+        std::mem::take(&mut self.0)
+    }
+}
+
+/// Bounds-checked little-endian payload reader; every decoder error is a
+/// typed [`TransportError::Malformed`], never a panic.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> WireReader<'a> {
+        WireReader { buf, pos: 0 }
+    }
+
+    fn need(&mut self, n: usize) -> Result<&'a [u8], TransportError> {
+        if self.buf.len() - self.pos < n {
+            return Err(TransportError::Malformed("payload truncated"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, TransportError> {
+        Ok(self.need(1)?[0])
+    }
+    pub fn u16(&mut self) -> Result<u16, TransportError> {
+        Ok(u16::from_le_bytes(self.need(2)?.try_into().unwrap()))
+    }
+    pub fn u32(&mut self) -> Result<u32, TransportError> {
+        Ok(u32::from_le_bytes(self.need(4)?.try_into().unwrap()))
+    }
+    pub fn u64(&mut self) -> Result<u64, TransportError> {
+        Ok(u64::from_le_bytes(self.need(8)?.try_into().unwrap()))
+    }
+    pub fn f32(&mut self) -> Result<f32, TransportError> {
+        Ok(f32::from_le_bytes(self.need(4)?.try_into().unwrap()))
+    }
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], TransportError> {
+        self.need(n)
+    }
+    pub fn vec_u32(&mut self) -> Result<Vec<u32>, TransportError> {
+        let n = self.u32()? as usize;
+        if n > MAX_FRAME / 4 {
+            return Err(TransportError::Malformed("u32 vector over-long"));
+        }
+        (0..n).map(|_| self.u32()).collect()
+    }
+    pub fn vec_f32(&mut self) -> Result<Vec<f32>, TransportError> {
+        let n = self.u32()? as usize;
+        if n > MAX_FRAME / 4 {
+            return Err(TransportError::Malformed("f32 vector over-long"));
+        }
+        (0..n).map(|_| self.f32()).collect()
+    }
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// A live backend for cross-process owner fetches, installed on the
+/// fabric with [`Fabric::set_transport`](super::Fabric::set_transport).
+/// Learner ids are *global* (rank-major: learner `l` lives in process
+/// `l / g`).
+pub trait PeerTransport: Send + Sync {
+    /// True when `learner`'s cache lives in this process (served by the
+    /// ordinary in-process path, no socket round-trip).
+    fn serves_local(&self, learner: usize) -> bool;
+
+    /// Fetch `ids` from `owner`'s process. Per id: `Some((label, bytes))`
+    /// on a hit, `None` when the owner no longer holds it (the caller
+    /// repairs the claim and falls back to storage). An `Err` fails the
+    /// whole group — the caller treats the owner as unreachable.
+    fn fetch_from_owner(
+        &self,
+        owner: usize,
+        ids: &[u32],
+        deadline: Option<Duration>,
+    ) -> Result<Vec<Option<(u16, Vec<u8>)>>, TransportError>;
+
+    /// Membership hook: stop dialing `rank` (its claims are being
+    /// evicted); a queued fetch already in flight may still fail.
+    fn mark_dead(&self, rank: usize);
+
+    /// Membership hook: `rank` rejoined at an epoch boundary.
+    fn mark_alive(&self, rank: usize);
+}
+
+struct PeerSlot {
+    conn: Mutex<Option<UnixStream>>,
+    dead: AtomicBool,
+}
+
+/// UDS client: one lazily-dialed, cached connection per peer rank.
+///
+/// Connections are re-dialed once per fetch if the cached stream fails
+/// *before any response byte is read* (a stale socket from a peer
+/// restart). Once response bytes have been consumed the fetch is never
+/// retried: a short read means the peer died mid-serve, and retrying
+/// could double-count a transfer that the peer already completed.
+pub struct UdsPeers {
+    my_rank: usize,
+    /// Learners per rank (global learner `l` ⇒ rank `l / g`).
+    g: usize,
+    paths: Vec<PathBuf>,
+    slots: Vec<PeerSlot>,
+}
+
+impl UdsPeers {
+    pub fn new(my_rank: usize, learners_per_rank: usize, paths: Vec<PathBuf>) -> UdsPeers {
+        let slots = (0..paths.len())
+            .map(|_| PeerSlot {
+                conn: Mutex::new(None),
+                dead: AtomicBool::new(false),
+            })
+            .collect();
+        UdsPeers {
+            my_rank,
+            g: learners_per_rank.max(1),
+            paths,
+            slots,
+        }
+    }
+
+    /// The socket path a given rank's peer server binds.
+    pub fn peer_path(rendezvous: &Path, rank: usize) -> PathBuf {
+        rendezvous.join(format!("peer-{rank}.sock"))
+    }
+
+    fn exchange(
+        &self,
+        stream: &mut UnixStream,
+        owner: usize,
+        ids: &[u32],
+        deadline: Option<Duration>,
+    ) -> Result<Vec<Option<(u16, Vec<u8>)>>, TransportError> {
+        let rank = owner / self.g;
+        stream
+            .set_read_timeout(deadline)
+            .and_then(|_| stream.set_write_timeout(deadline))
+            .map_err(|e| TransportError::from_io(e, rank, deadline))?;
+        let mut req = Wire::new();
+        req.u32(owner as u32).vec_u32(ids);
+        write_frame(stream, PFETCH, &req.take())
+            .map_err(|e| TransportError::from_io(e, rank, deadline))?;
+        let (kind, payload) =
+            read_frame(stream).map_err(|e| TransportError::from_io(e, rank, deadline))?;
+        decode_samples(kind, &payload, ids.len())
+    }
+}
+
+/// Decode a PSAMP (or PSAMP_SHM) response into per-id hits.
+fn decode_samples(
+    kind: u8,
+    payload: &[u8],
+    expect: usize,
+) -> Result<Vec<Option<(u16, Vec<u8>)>>, TransportError> {
+    if kind != PSAMP {
+        return Err(TransportError::Malformed("unexpected peer frame kind"));
+    }
+    let mut r = WireReader::new(payload);
+    let n = r.u32()? as usize;
+    if n != expect {
+        return Err(TransportError::Malformed("sample count mismatch"));
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        if r.u8()? == 0 {
+            out.push(None);
+            continue;
+        }
+        let label = r.u16()?;
+        let len = r.u32()? as usize;
+        if len > MAX_FRAME {
+            return Err(TransportError::Malformed("sample over-long"));
+        }
+        out.push(Some((label, r.take(len)?.to_vec())));
+    }
+    Ok(out)
+}
+
+impl PeerTransport for UdsPeers {
+    fn serves_local(&self, learner: usize) -> bool {
+        learner / self.g == self.my_rank
+    }
+
+    fn fetch_from_owner(
+        &self,
+        owner: usize,
+        ids: &[u32],
+        deadline: Option<Duration>,
+    ) -> Result<Vec<Option<(u16, Vec<u8>)>>, TransportError> {
+        let rank = owner / self.g;
+        let slot = self
+            .slots
+            .get(rank)
+            .ok_or(TransportError::Malformed("owner rank out of range"))?;
+        if slot.dead.load(Ordering::Acquire) {
+            return Err(TransportError::PeerClosed { peer: rank });
+        }
+        let mut guard = slot.conn.lock().unwrap();
+        let had_cached = guard.is_some();
+        if guard.is_none() {
+            let s = UnixStream::connect(&self.paths[rank])
+                .map_err(|e| TransportError::from_io(e, rank, deadline))?;
+            *guard = Some(s);
+        }
+        let mut stream = guard.take().unwrap();
+        match self.exchange(&mut stream, owner, ids, deadline) {
+            Ok(out) => {
+                *guard = Some(stream);
+                Ok(out)
+            }
+            Err(TransportError::PeerClosed { .. }) if had_cached => {
+                // The cached stream was stale (peer restarted since the
+                // last fetch). Dial fresh and retry exactly once: the
+                // request is idempotent and no response byte was
+                // accepted from the dead stream, so nothing can be
+                // double-counted.
+                let mut fresh = UnixStream::connect(&self.paths[rank])
+                    .map_err(|e| TransportError::from_io(e, rank, deadline))?;
+                let out = self.exchange(&mut fresh, owner, ids, deadline)?;
+                *guard = Some(fresh);
+                Ok(out)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn mark_dead(&self, rank: usize) {
+        if let Some(slot) = self.slots.get(rank) {
+            slot.dead.store(true, Ordering::Release);
+            *slot.conn.lock().unwrap() = None;
+        }
+    }
+
+    fn mark_alive(&self, rank: usize) {
+        if let Some(slot) = self.slots.get(rank) {
+            slot.dead.store(false, Ordering::Release);
+            *slot.conn.lock().unwrap() = None;
+        }
+    }
+}
+
+/// UDS server: serves this process's learner caches to its peers.
+///
+/// One accept thread, one handler thread per peer connection. Requests
+/// are [`PFETCH`] frames (target learner + sample ids); the reply is one
+/// [`PSAMP`] frame with per-id hit flags, so a short read on the client
+/// is always distinguishable from a miss.
+pub struct PeerServer {
+    path: PathBuf,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl PeerServer {
+    /// Bind `path` (unlinking any stale socket first) and serve
+    /// `caches`, a map from *global* learner id to that learner's stack.
+    pub fn start(
+        path: PathBuf,
+        caches: HashMap<usize, Arc<CacheStack>>,
+    ) -> io::Result<PeerServer> {
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path)?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stop = shutdown.clone();
+        let caches = Arc::new(caches);
+        let accept_thread = thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                match listener.accept() {
+                    Ok((conn, _)) => {
+                        let caches = caches.clone();
+                        let stop = stop.clone();
+                        thread::spawn(move || serve_conn(conn, &caches, &stop));
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(PeerServer {
+            path,
+            shutdown,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+impl Drop for PeerServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_conn(mut conn: UnixStream, caches: &HashMap<usize, Arc<CacheStack>>, stop: &AtomicBool) {
+    // Bounded reads so the handler re-checks the shutdown flag instead
+    // of parking forever on an idle client.
+    let _ = conn.set_read_timeout(Some(Duration::from_millis(100)));
+    while !stop.load(Ordering::Acquire) {
+        let (kind, payload) = match read_frame(&mut conn) {
+            Ok(f) => f,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => return, // EOF or protocol error: client is gone.
+        };
+        if kind != PFETCH {
+            return;
+        }
+        let mut r = WireReader::new(&payload);
+        let (learner, ids) = match (|| {
+            let learner = r.u32()? as usize;
+            let ids = r.vec_u32()?;
+            Ok::<_, TransportError>((learner, ids))
+        })() {
+            Ok(v) => v,
+            Err(_) => return,
+        };
+        let mut resp = Wire::new();
+        resp.u32(ids.len() as u32);
+        let stack = caches.get(&learner);
+        for id in &ids {
+            match stack.and_then(|s| s.get(*id)) {
+                Some(sample) => {
+                    let bytes = sample.bytes.as_slice();
+                    resp.u8(1).u16(sample.label).u32(bytes.len() as u32).bytes(bytes);
+                }
+                None => {
+                    resp.u8(0);
+                }
+            }
+        }
+        let _ = conn.set_write_timeout(Some(Duration::from_secs(30)));
+        if write_frame(&mut conn, PSAMP, &resp.take()).is_err() {
+            return;
+        }
+    }
+}
+
+/// Shared-memory payload ring (feature `shm-ring`): the server bump-
+/// allocates payload bytes into an mmap-shared file; clients map the
+/// same file read-only and build zero-copy `SampleBytes` views. Kept
+/// deliberately simple — a full ring would recycle; this segment serves
+/// an epoch's working set and falls back to inline frames when full.
+#[cfg(feature = "shm-ring")]
+pub mod shm {
+    use crate::storage::SampleBytes;
+    use std::fs::{File, OpenOptions};
+    use std::io;
+    use std::path::Path;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    pub struct ShmWriter {
+        file: File,
+        capacity: u64,
+        cursor: AtomicU64,
+    }
+
+    impl ShmWriter {
+        pub fn create(path: &Path, capacity: u64) -> io::Result<ShmWriter> {
+            let file = OpenOptions::new()
+                .read(true)
+                .write(true)
+                .create(true)
+                .truncate(true)
+                .open(path)?;
+            file.set_len(capacity)?;
+            Ok(ShmWriter { file, capacity, cursor: AtomicU64::new(0) })
+        }
+
+        /// Reserve + write; returns the segment offset, or `None` when
+        /// the ring is full (caller falls back to an inline frame).
+        pub fn push(&self, bytes: &[u8]) -> Option<u64> {
+            use std::os::unix::fs::FileExt;
+            let len = bytes.len() as u64;
+            let off = self.cursor.fetch_add(len, Ordering::Relaxed);
+            if off + len > self.capacity {
+                return None;
+            }
+            self.file.write_all_at(bytes, off).ok()?;
+            Some(off)
+        }
+    }
+
+    pub struct ShmReader {
+        map: Arc<crate::storage::bytes::Mmap>,
+    }
+
+    impl ShmReader {
+        pub fn open(path: &Path) -> io::Result<ShmReader> {
+            let file = File::open(path)?;
+            let map = crate::storage::bytes::Mmap::map_shared(&file)?;
+            Ok(ShmReader { map: Arc::new(map) })
+        }
+
+        /// Zero-copy view into the ring.
+        pub fn view(&self, off: u64, len: u32) -> SampleBytes {
+            SampleBytes::from_map(self.map.clone(), off as usize, len as usize)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::Policy;
+    use crate::storage::Sample;
+
+    fn tmp_sock(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "dlio-tsock-{tag}-{}-{:?}.sock",
+            std::process::id(),
+            thread::current().id()
+        ))
+    }
+
+    fn stack_with(ids: &[(u32, u16, Vec<u8>)]) -> Arc<CacheStack> {
+        let stack = Arc::new(CacheStack::mem_only(u64::MAX, Policy::InsertOnly));
+        for (id, label, bytes) in ids {
+            stack.insert(Arc::new(Sample {
+                id: *id,
+                bytes: bytes.clone().into(),
+                label: *label,
+            }));
+        }
+        stack
+    }
+
+    #[test]
+    fn frame_roundtrip_and_wire_codec() {
+        let mut buf = Vec::new();
+        let mut w = Wire::new();
+        w.u8(7).u16(300).u32(1 << 20).u64(1 << 40).f32(0.5).vec_u32(&[1, 2, 3]);
+        write_frame(&mut buf, PFETCH, &w.take()).unwrap();
+        let (kind, payload) = read_frame(&mut &buf[..]).unwrap();
+        assert_eq!(kind, PFETCH);
+        let mut r = WireReader::new(&payload);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 300);
+        assert_eq!(r.u32().unwrap(), 1 << 20);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.f32().unwrap(), 0.5);
+        assert_eq!(r.vec_u32().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn oversized_and_truncated_frames_are_typed_errors() {
+        // Header announcing more than MAX_FRAME must not allocate.
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(read_frame(&mut &huge[..]).is_err());
+        // Truncated payload is UnexpectedEof, not a panic.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, PSAMP, &[1, 2, 3, 4]).unwrap();
+        buf.truncate(buf.len() - 2);
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        // WireReader over-reads are Malformed errors.
+        let mut r = WireReader::new(&[1, 2]);
+        assert!(matches!(r.u32(), Err(TransportError::Malformed(_))));
+    }
+
+    #[test]
+    fn uds_serves_hits_and_misses() {
+        let path = tmp_sock("serve");
+        let mut caches = HashMap::new();
+        caches.insert(3usize, stack_with(&[(10, 4, vec![1, 2, 3]), (11, 5, vec![9])]));
+        let _server = PeerServer::start(path.clone(), caches).unwrap();
+        let peers = UdsPeers::new(0, 2, vec![path.clone(), path.clone()]);
+        // Owner 3 lives on rank 1 (g = 2).
+        assert!(!peers.serves_local(3));
+        assert!(peers.serves_local(1));
+        let out = peers
+            .fetch_from_owner(3, &[10, 99, 11], Some(Duration::from_secs(5)))
+            .unwrap();
+        assert_eq!(out[0], Some((4, vec![1, 2, 3])));
+        assert_eq!(out[1], None);
+        assert_eq!(out[2], Some((5, vec![9])));
+    }
+
+    /// Satellite: EOF racing a completed transfer. The peer writes the
+    /// complete response and *immediately* closes the socket. The first
+    /// fetch must succeed exactly once (the samples were delivered); the
+    /// next fetch on the now-dead cached connection must surface peer
+    /// death — never a duplicated success.
+    #[test]
+    fn eof_after_complete_response_does_not_double_count() {
+        let path = tmp_sock("eofrace");
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path).unwrap();
+        let server = thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            let (kind, payload) = read_frame(&mut conn).unwrap();
+            assert_eq!(kind, PFETCH);
+            let mut r = WireReader::new(&payload);
+            let _learner = r.u32().unwrap();
+            let ids = r.vec_u32().unwrap();
+            let mut resp = Wire::new();
+            resp.u32(ids.len() as u32);
+            for _ in &ids {
+                resp.u8(1).u16(1).u32(2).bytes(&[0xAB, 0xCD]);
+            }
+            write_frame(&mut conn, PSAMP, &resp.take()).unwrap();
+            // Close right behind the response: EOF races the client read.
+            drop(conn);
+            // Listener drops here: no further connection is possible.
+        });
+        let peers = UdsPeers::new(1, 1, vec![path.clone(), path.clone()]);
+        let out = peers
+            .fetch_from_owner(0, &[5, 6], Some(Duration::from_secs(5)))
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|s| s == &Some((1, vec![0xAB, 0xCD]))));
+        server.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+        // The cached connection is dead and the listener is gone: the
+        // retry dial fails too, so this is PeerClosed — the transfer is
+        // not silently re-served or double-counted.
+        let err = peers
+            .fetch_from_owner(0, &[5], Some(Duration::from_secs(1)))
+            .unwrap_err();
+        assert!(matches!(err, TransportError::PeerClosed { peer: 0 }), "{err}");
+    }
+
+    /// Satellite: a peer that died before ever serving (freeze-then-die
+    /// at the transport level) surfaces as PeerClosed, mapped from the
+    /// failed connect.
+    #[test]
+    fn connect_to_dead_peer_is_peer_closed() {
+        let path = tmp_sock("deadpeer");
+        let _ = std::fs::remove_file(&path);
+        let peers = UdsPeers::new(0, 1, vec![tmp_sock("self"), path]);
+        let err = peers
+            .fetch_from_owner(1, &[0], Some(Duration::from_millis(100)))
+            .unwrap_err();
+        assert!(matches!(err, TransportError::PeerClosed { peer: 1 }), "{err}");
+        // And once marked dead, the fetch short-circuits without dialing.
+        peers.mark_dead(1);
+        let err = peers.fetch_from_owner(1, &[0], None).unwrap_err();
+        assert!(matches!(err, TransportError::PeerClosed { peer: 1 }));
+        peers.mark_alive(1);
+    }
+
+    #[test]
+    fn read_deadline_maps_to_transfer_stall() {
+        let path = tmp_sock("stall");
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path).unwrap();
+        // A server that accepts and then never replies.
+        let silent = thread::spawn(move || {
+            let (conn, _) = listener.accept().unwrap();
+            thread::sleep(Duration::from_millis(400));
+            drop(conn);
+        });
+        let peers = UdsPeers::new(1, 1, vec![path.clone(), path.clone()]);
+        let err = peers
+            .fetch_from_owner(0, &[1], Some(Duration::from_millis(50)))
+            .unwrap_err();
+        match err {
+            TransportError::Stall(s) => {
+                assert_eq!(s.kind, StallKind::Transfer);
+                let msg = s.to_string();
+                assert!(msg.contains("transfer wait exceeded its deadline"), "{msg}");
+            }
+            other => panic!("expected transfer stall, got {other}"),
+        }
+        silent.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,219 @@
+//! End-to-end tests for the supervised multi-process mode (DESIGN.md
+//! §13): real child processes, real Unix-domain transports, real
+//! SIGKILLs.
+//!
+//! The acceptance bar from the issue: a live run with one rank
+//! SIGKILLed mid-epoch must finish with a membership-epoch bump and
+//! final parameters **bit-identical** to the fault-free run, and the
+//! live steady-state load mix must agree structurally with the
+//! discrete-event simulator at 2 and 4 processes.
+
+use dlio::coordinator::{run_multiproc, MultiProcConfig, SamplerKind};
+use dlio::fault::ProcKill;
+use dlio::sim::{presets, simulate_epochs, Scheme};
+use dlio::storage::Catalog;
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Per-test scratch dataset dir (unique so parallel tests never race
+/// the generator).
+fn scratch(tag: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("dlio-mp-test-{tag}-{}", std::process::id()))
+}
+
+fn base_cfg(tag: &str) -> MultiProcConfig {
+    MultiProcConfig {
+        procs: 2,
+        learners_per_proc: 2,
+        epochs: 2,
+        local_batch: 8,
+        data_dir: scratch(tag),
+        samples: 256,
+        seed: 42,
+        sampler: SamplerKind::Loc,
+        worker_bin: PathBuf::from(env!("CARGO_BIN_EXE_dlio")),
+        overall_deadline: Duration::from_secs(120),
+        ..MultiProcConfig::default()
+    }
+}
+
+// 256 samples / (2 procs * 2 learners * 8 batch) = 8 steps per epoch:
+// gens 0-7 are epoch 0 (population), 8-15 epoch 1 (steady state).
+const STEPS_PER_EPOCH: u64 = 8;
+
+#[test]
+fn clean_run_is_reproducible_across_supervisors() {
+    let cfg = base_cfg("clean");
+    let a = run_multiproc(&cfg).expect("first run");
+    let b = run_multiproc(&cfg).expect("second run");
+    assert_eq!(
+        a.coord.digest, b.coord.digest,
+        "same config must yield bit-identical parameters"
+    );
+    assert_eq!(a.coord.steps, 2 * STEPS_PER_EPOCH);
+    assert_eq!(a.coord.recovery.deaths, 0);
+    assert_eq!(a.coord.recovery.membership_epoch, 0);
+    for (rank, code, signal) in &a.exits {
+        assert_eq!(
+            (*code, *signal),
+            (Some(0), None),
+            "rank {rank} should exit cleanly"
+        );
+    }
+    // Loc steady state: after the epoch-0 freeze the directory covers
+    // the dataset, so epoch 1 is dominated by local hits.
+    let (mut local, mut storage) = (0u64, 0u64);
+    for s in a.coord.rank_stats.iter().flatten() {
+        local += s.steady_local;
+        storage += s.steady_storage;
+    }
+    assert!(
+        local > storage,
+        "steady state should be cache-dominated: local {local} vs storage {storage}"
+    );
+}
+
+#[test]
+fn sigkill_mid_epoch_recovers_bit_identically() {
+    let mut cfg = base_cfg("kill");
+    let clean = run_multiproc(&cfg).expect("clean run");
+
+    // SIGKILL rank 1 once the run reaches epoch 1 step 2 — after the
+    // directory freeze, mid steady-state epoch.
+    cfg.kill = Some(ProcKill { rank: 1, at_gstep: STEPS_PER_EPOCH + 2 });
+    let faulted = run_multiproc(&cfg).expect("faulted run must complete");
+
+    assert_eq!(faulted.coord.killed, vec![1], "the kill must have fired");
+    assert_eq!(faulted.coord.recovery.deaths, 1);
+    assert!(
+        faulted.coord.recovery.membership_epoch >= 1,
+        "a death must bump the membership epoch"
+    );
+    assert_eq!(
+        clean.coord.digest, faulted.coord.digest,
+        "recovered parameters must be bit-identical to the fault-free run"
+    );
+    // The victim died to SIGKILL: no exit code, signal 9.
+    let victim = faulted.exits.iter().find(|(r, _, _)| *r == 1).unwrap();
+    assert_eq!(victim.1, None);
+    assert_eq!(victim.2, Some(9));
+
+    // Benchmark artifact for CI (written relative to the invoker CWD).
+    let mut bench = dlio::bench::Bench::new();
+    bench.record("multiproc_clean_wall_s", clean.coord.wall_s, "s");
+    bench.record("multiproc_faulted_wall_s", faulted.coord.wall_s, "s");
+    bench.record(
+        "multiproc_membership_epoch",
+        faulted.coord.recovery.membership_epoch as f64,
+        "epochs",
+    );
+    bench
+        .write_json("BENCH_multiproc.json")
+        .expect("write BENCH_multiproc.json");
+}
+
+#[test]
+fn sigkill_with_restart_rejoins_and_agrees() {
+    let mut cfg = base_cfg("rejoin");
+    // Three epochs: the kill lands mid-epoch 1, so the respawned child
+    // has the epoch-1 *and* epoch-2 boundaries to rejoin at — a rejoin
+    // that only just misses the first boundary still parks in
+    // pending_rejoin and is admitted at the final one (running zero
+    // epochs but reporting the boundary digest).
+    cfg.epochs = 3;
+    let clean = run_multiproc(&cfg).expect("clean run");
+
+    cfg.kill = Some(ProcKill { rank: 0, at_gstep: STEPS_PER_EPOCH + 2 });
+    cfg.restart = true;
+    let healed = run_multiproc(&cfg).expect("restarted run must complete");
+
+    assert_eq!(healed.coord.killed, vec![0]);
+    assert_eq!(healed.coord.recovery.deaths, 1);
+    assert!(
+        healed.coord.recovery.revivals >= 1,
+        "the respawned rank must rejoin at a boundary"
+    );
+    assert_eq!(
+        clean.coord.digest, healed.coord.digest,
+        "a rejoined fleet must agree with the fault-free parameters"
+    );
+}
+
+/// Sim-vs-live structural agreement: the DES and the live multi-process
+/// run must put the steady-state load in the same place — local-hit
+/// dominated under Loc, storage dominated under Reg — at both fleet
+/// sizes. (Wall-clock is not comparable: the sim models Lassen-class
+/// hardware, the test runs wherever CI lands.)
+fn live_fractions(procs: usize, sampler: SamplerKind, tag: &str) -> (f64, f64) {
+    let cfg = MultiProcConfig {
+        procs,
+        sampler,
+        data_dir: scratch(tag),
+        ..base_cfg(tag)
+    };
+    let report = run_multiproc(&cfg).expect("live run");
+    let (mut local, mut remote, mut storage, mut disk) = (0u64, 0u64, 0u64, 0u64);
+    for s in report.coord.rank_stats.iter().flatten() {
+        local += s.steady_local;
+        remote += s.steady_remote;
+        storage += s.steady_storage;
+        disk += s.steady_disk;
+    }
+    let total = (local + remote + storage + disk).max(1) as f64;
+    (local as f64 / total, storage as f64 / total)
+}
+
+fn sim_fractions(procs: usize, scheme: Scheme) -> (f64, f64) {
+    let catalog = Catalog::synthetic(256);
+    let avg = catalog.avg_bytes as f64;
+    let mut sim = presets::training(catalog, procs, scheme);
+    sim.learners_per_node = 2;
+    sim.per_learner_batch = 8;
+    let r = simulate_epochs(&sim, 1);
+    let local = r.local_hits as f64;
+    let storage = r.storage_bytes as f64 / avg;
+    let remote = r.remote_bytes as f64 / avg;
+    let total = (local + storage + remote).max(1.0);
+    (local / total, storage / total)
+}
+
+#[test]
+fn sim_and_live_agree_on_the_loc_load_mix() {
+    for procs in [2usize, 4] {
+        let (live_local, live_storage) =
+            live_fractions(procs, SamplerKind::Loc, &format!("agree-loc-{procs}"));
+        let (sim_local, _) = sim_fractions(procs, Scheme::Loc);
+        assert!(
+            live_local > 0.5,
+            "live Loc steady state at p={procs} should be local-dominated, got {live_local:.2}"
+        );
+        assert!(
+            sim_local > 0.5,
+            "sim Loc steady state at p={procs} should be local-dominated, got {sim_local:.2}"
+        );
+        assert!(
+            live_storage < 0.5,
+            "live Loc steady state at p={procs} should not be storage-bound, got {live_storage:.2}"
+        );
+    }
+}
+
+#[test]
+fn sim_and_live_agree_on_the_reg_load_mix() {
+    let (live_local, live_storage) =
+        live_fractions(2, SamplerKind::Reg, "agree-reg");
+    let (_, sim_storage) = sim_fractions(2, Scheme::Reg);
+    assert!(
+        live_storage > 0.9,
+        "live Reg rereads storage every epoch, got storage fraction {live_storage:.2}"
+    );
+    assert!(
+        sim_storage > 0.9,
+        "sim Reg rereads storage every epoch, got storage fraction {sim_storage:.2}"
+    );
+    assert!(
+        live_local < 0.1,
+        "Reg must not accumulate cache locality, got local fraction {live_local:.2}"
+    );
+}
