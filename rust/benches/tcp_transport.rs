@@ -1,0 +1,97 @@
+//! Microbenchmarks for the multi-host transport layer (DESIGN.md §14):
+//! frame codec encode/decode throughput (plain vs CRC-trailered), raw
+//! CRC-32 throughput, and loopback echo round-trips over real TCP and
+//! UDS sockets — the per-frame integrity tax the TCP tier pays, in
+//! numbers. Emits machine-readable `BENCH_tcp_micro.json` so PRs can
+//! track the codec/transport perf trend.
+
+use dlio::bench::{black_box, Bench};
+use dlio::net::transport::{crc32, Codec, Conn};
+use std::net::TcpListener;
+use std::os::unix::net::UnixStream;
+use std::thread;
+
+/// Echo frames back until the client hangs up.
+fn echo_loop(mut conn: Conn) {
+    while let Ok((kind, payload)) = conn.read_frame() {
+        if conn.write_frame(kind, &payload).is_err() {
+            break;
+        }
+    }
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    // --- Codec encode+decode (in-memory, no socket) ----------------------
+    for (tag, size) in [("4k", 4usize << 10), ("64k", 64 << 10), ("1m", 1 << 20)]
+    {
+        let payload = vec![0xA5u8; size];
+        let mut buf: Vec<u8> = Vec::with_capacity(size + 16);
+        for codec in [Codec::Plain, Codec::Crc32] {
+            let cname = match codec {
+                Codec::Plain => "plain",
+                Codec::Crc32 => "crc32",
+            };
+            let name = format!("codec/{cname}_roundtrip_{tag}");
+            let m = b.run(&name, || {
+                buf.clear();
+                codec.write(&mut buf, 7, &payload).unwrap();
+                black_box(codec.read(&mut &buf[..]).unwrap());
+            });
+            b.record(
+                &format!("codec/{cname}_{tag}_mb_per_s"),
+                size as f64 / m.mean_s / 1e6,
+                "MB/s",
+            );
+        }
+    }
+
+    // --- Raw checksum throughput (the integrity tax's upper bound) -------
+    let big = vec![0x5Au8; 8 << 20];
+    let m_crc = b.run("crc32/sum_8m", || {
+        black_box(crc32(black_box(&big)));
+    });
+    b.record(
+        "crc32/throughput_gb_per_s",
+        big.len() as f64 / m_crc.mean_s / 1e9,
+        "GB/s",
+    );
+
+    // --- Loopback echo round-trips over real sockets ---------------------
+    // TCP speaks the CRC codec (what peer fetches pay on the wire); UDS
+    // speaks plain (the single-host tier). Nagle is off on the TCP side
+    // (`Conn::tcp`), so the delta is codec + stack, not delayed-ack
+    // artifacts.
+    let payload = vec![0xC3u8; 16 << 10];
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let tcp_echo = thread::spawn(move || {
+        let (s, _) = listener.accept().unwrap();
+        echo_loop(Conn::tcp(s));
+    });
+    let mut tcp = Conn::connect_tcp(&addr.to_string()).unwrap();
+    let m_tcp = b.run("rtt/tcp_crc32_16k", || {
+        tcp.write_frame(9, &payload).unwrap();
+        black_box(tcp.read_frame().unwrap());
+    });
+    b.record("rtt/tcp_frames_per_s", 1.0 / m_tcp.mean_s, "frames/s");
+    drop(tcp);
+    tcp_echo.join().unwrap();
+
+    let (a, peer) = UnixStream::pair().unwrap();
+    let uds_echo = thread::spawn(move || echo_loop(Conn::uds(peer)));
+    let mut uds = Conn::uds(a);
+    let m_uds = b.run("rtt/uds_plain_16k", || {
+        uds.write_frame(9, &payload).unwrap();
+        black_box(uds.read_frame().unwrap());
+    });
+    b.record("rtt/uds_frames_per_s", 1.0 / m_uds.mean_s, "frames/s");
+    b.record("rtt/tcp_over_uds_x", m_tcp.mean_s / m_uds.mean_s, "x");
+    drop(uds);
+    uds_echo.join().unwrap();
+
+    b.report("tcp transport microbenchmarks");
+    b.write_json("BENCH_tcp_micro.json").unwrap();
+}

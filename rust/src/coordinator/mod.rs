@@ -157,6 +157,12 @@ pub struct TrainerConfig {
     /// kill/resume acceptance tests. Like a real kill it does not shut
     /// the loader pools down. `None` (the default) disables.
     pub halt_after_gstep: Option<u64>,
+    /// Network tuning knobs (DESIGN.md §14): heartbeat cadence, transfer
+    /// deadline, reconnect-backoff caps. `None` (the default) keeps the
+    /// legacy behavior exactly; `Some` is validated in [`Trainer::new`]
+    /// and its transfer deadline seeds `deadlines.transfer` when that
+    /// budget is otherwise unset.
+    pub net: Option<crate::net::transport::NetTuning>,
 }
 
 impl Default for TrainerConfig {
@@ -188,6 +194,7 @@ impl Default for TrainerConfig {
             checkpoint_interval_steps: 0,
             resume_from: None,
             halt_after_gstep: None,
+            net: None,
         }
     }
 }
@@ -342,6 +349,16 @@ impl Trainer {
             storage.n_samples(),
             cfg.global_batch()
         );
+        // Network tuning (DESIGN.md §14): validate once; the transfer
+        // deadline seeds `deadlines.transfer` unless the caller already
+        // budgeted that wait. `None` changes nothing.
+        if let Some(net) = cfg.net.take() {
+            let net = net.validated().context("trainer network tuning")?;
+            if cfg.deadlines.transfer.is_none() {
+                cfg.deadlines.transfer = Some(net.transfer_deadline);
+            }
+            cfg.net = Some(net);
+        }
         Ok(Trainer { engine, storage, fabric, cfg })
     }
 

@@ -4,10 +4,14 @@
 //! The supervisor process runs one **coordinator**: a single-threaded
 //! event loop owning the authoritative [`Membership`], the merged
 //! cache-directory image, and the gradient rendezvous. Workers connect
-//! over a Unix-domain control socket and speak the length-prefixed frame
-//! codec from [`crate::net::transport`]; per-connection reader threads
-//! forward decoded frames into the loop over a channel, so all protocol
-//! state lives on one thread and needs no locks.
+//! over a control socket — Unix-domain on one host, TCP (with
+//! CRC-trailered frames) for multi-host — and speak the length-prefixed
+//! frame codec from [`crate::net::transport`] behind the transport-
+//! agnostic [`Conn`]/[`CtrlListener`] pair; per-connection reader
+//! threads forward decoded frames into the loop over a channel, so all
+//! protocol state lives on one thread and needs no locks. Heartbeats
+//! ride the same channel, so TCP death detection feeds the identical
+//! membership path as UDS.
 //!
 //! ## Control protocol (frame kinds 1–12)
 //!
@@ -46,10 +50,9 @@ use super::membership::Membership;
 use crate::metrics::RecoverySnapshot;
 use crate::fault::ProcKill;
 use crate::cache::CacheDirectory;
-use crate::net::transport::{read_frame, write_frame, Wire, WireReader};
+use crate::net::transport::{Conn, CtrlListener, Wire, WireReader};
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
-use std::os::unix::net::{UnixListener, UnixStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError};
 use std::sync::Arc;
@@ -139,13 +142,13 @@ impl CoordHooks for NoHooks {
 }
 
 enum Event {
-    Hello { rank: usize, rejoin: bool, write: UnixStream },
+    Hello { rank: usize, rejoin: bool, write: Conn },
     Frame { rank: usize, kind: u8, payload: Vec<u8> },
     Eof { rank: usize },
 }
 
 struct RankState {
-    write: Option<UnixStream>,
+    write: Option<Conn>,
     welcomed: bool,
     done: bool,
     last_hb: Instant,
@@ -182,7 +185,7 @@ struct GradGen {
 fn send(rank: &mut RankState, kind: u8, payload: &[u8]) {
     if let Some(w) = rank.write.as_mut() {
         let _ = w.set_write_timeout(Some(Duration::from_secs(30)));
-        if write_frame(w, kind, payload).is_err() {
+        if w.write_frame(kind, payload).is_err() {
             rank.write = None;
         }
     }
@@ -192,7 +195,7 @@ fn send(rank: &mut RankState, kind: u8, payload: &[u8]) {
 /// forwarded as an [`Event`]; the first frame on a connection must be
 /// HELLO (it names the rank all later frames are attributed to).
 fn spawn_acceptor(
-    listener: UnixListener,
+    listener: CtrlListener,
     tx: mpsc::Sender<Event>,
     stop: Arc<AtomicBool>,
 ) {
@@ -200,7 +203,7 @@ fn spawn_acceptor(
         let _ = listener.set_nonblocking(true);
         while !stop.load(Ordering::Acquire) {
             match listener.accept() {
-                Ok((conn, _)) => {
+                Ok(conn) => {
                     let tx = tx.clone();
                     std::thread::spawn(move || reader_thread(conn, tx));
                 }
@@ -213,8 +216,8 @@ fn spawn_acceptor(
     });
 }
 
-fn reader_thread(mut conn: UnixStream, tx: mpsc::Sender<Event>) {
-    let Ok((kind, payload)) = read_frame(&mut conn) else { return };
+fn reader_thread(mut conn: Conn, tx: mpsc::Sender<Event>) {
+    let Ok((kind, payload)) = conn.read_frame() else { return };
     if kind != HELLO {
         return;
     }
@@ -228,7 +231,7 @@ fn reader_thread(mut conn: UnixStream, tx: mpsc::Sender<Event>) {
         return;
     }
     loop {
-        match read_frame(&mut conn) {
+        match conn.read_frame() {
             Ok((kind, payload)) => {
                 if tx.send(Event::Frame { rank, kind, payload }).is_err() {
                     return;
@@ -246,7 +249,7 @@ fn reader_thread(mut conn: UnixStream, tx: mpsc::Sender<Event>) {
 /// DONE (or a deadline/abort fails the run). Single-threaded: all state
 /// mutation happens here.
 pub fn run_coordinator(
-    listener: UnixListener,
+    listener: CtrlListener,
     cfg: &CoordConfig,
     hooks: &mut dyn CoordHooks,
 ) -> Result<CoordReport> {
@@ -721,6 +724,7 @@ pub fn run_coordinator(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::net::transport::{read_frame, write_frame};
 
     #[test]
     fn control_frames_roundtrip() {

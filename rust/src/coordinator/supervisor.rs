@@ -13,10 +13,12 @@ use super::service::{
 };
 use super::SamplerKind;
 use crate::cache::sweep_orphaned_spills;
+use crate::fault::netchaos::NetChaosSpec;
 use crate::fault::{exitcode, ProcKill};
-use crate::net::transport::TransportKind;
+use crate::net::transport::{CtrlListener, NetTuning, TransportKind};
 use crate::storage::{generate, DatasetMeta, SyntheticSpec};
 use anyhow::{ensure, Context, Result};
+use std::net::TcpListener;
 use std::os::unix::net::UnixListener;
 use std::os::unix::process::ExitStatusExt;
 use std::path::PathBuf;
@@ -39,11 +41,19 @@ pub struct MultiProcConfig {
     pub transport: TransportKind,
     /// Worker executable (normally the running `dlio` binary itself).
     pub worker_bin: PathBuf,
-    pub hb_interval: Duration,
-    pub hb_timeout: Duration,
+    /// Validated network tuning (heartbeat cadence, transfer deadline,
+    /// reconnect backoff window) shared by the control and peer planes.
+    pub net: NetTuning,
     pub grad_deadline: Duration,
-    pub transfer_deadline: Duration,
     pub overall_deadline: Duration,
+    /// TCP control-plane bind address (`--listen`); `None` binds an
+    /// ephemeral loopback port. Ignored on UDS.
+    pub listen: Option<String>,
+    /// Static peer address list forwarded to every worker (`--peers`,
+    /// multi-host). `None` uses per-rank rendezvous address files.
+    pub peers: Option<Vec<String>>,
+    /// Seeded wire-level chaos forwarded to every worker (TCP only).
+    pub chaos: Option<NetChaosSpec>,
     /// SIGKILL this rank once its heartbeat reaches the given step.
     pub kill: Option<ProcKill>,
     /// Respawn killed ranks with `--rejoin` at the next epoch boundary.
@@ -68,11 +78,12 @@ impl Default for MultiProcConfig {
             transport: TransportKind::Uds,
             worker_bin: std::env::current_exe()
                 .unwrap_or_else(|_| PathBuf::from("dlio")),
-            hb_interval: Duration::from_millis(50),
-            hb_timeout: Duration::from_secs(5),
+            net: NetTuning::default(),
             grad_deadline: Duration::from_secs(10),
-            transfer_deadline: Duration::from_secs(5),
             overall_deadline: Duration::from_secs(120),
+            listen: None,
+            peers: None,
+            chaos: None,
             kill: None,
             restart: false,
             bench_out: None,
@@ -169,8 +180,16 @@ pub fn run_multiproc(cfg: &MultiProcConfig) -> Result<SupervisorReport> {
     );
     ensure!(
         cfg.transport != TransportKind::InProc,
-        "multi-process mode needs a real transport (uds or shm)"
+        "multi-process mode needs a real transport (uds, tcp, or shm)"
     );
+    // Reject zero/absurd network knobs before any socket exists.
+    let net = cfg.net.validated().context("multi-process network tuning")?;
+    if let Some(chaos) = &cfg.chaos {
+        ensure!(
+            chaos.is_inert() || cfg.transport == TransportKind::Tcp,
+            "wire-level chaos injection requires the tcp transport"
+        );
+    }
     ensure_dataset(cfg)?;
     // Crash hygiene: reclaim spill segments leaked by SIGKILLed
     // processes of earlier runs before forking new ones.
@@ -186,12 +205,24 @@ pub fn run_multiproc(cfg: &MultiProcConfig) -> Result<SupervisorReport> {
         .join(format!("dlio-mp-{}-{seq}", std::process::id()));
     let _ = std::fs::remove_dir_all(&rendezvous);
     std::fs::create_dir_all(&rendezvous)?;
-    // Bind before spawning so no worker can race the listener.
-    let listener = UnixListener::bind(rendezvous.join("ctrl.sock"))?;
+    // Bind before spawning so no worker can race the listener. TCP runs
+    // carry the control plane over TCP too (heartbeat-over-TCP death
+    // detection feeds the same membership path as UDS).
+    let (listener, ctrl_addr): (CtrlListener, Option<String>) =
+        if cfg.transport == TransportKind::Tcp {
+            let bind = cfg.listen.as_deref().unwrap_or("127.0.0.1:0");
+            let l = TcpListener::bind(bind)
+                .with_context(|| format!("bind control listener at {bind}"))?;
+            let addr = l.local_addr()?.to_string();
+            (CtrlListener::Tcp(l), Some(addr))
+        } else {
+            let l = UnixListener::bind(rendezvous.join("ctrl.sock"))?;
+            (CtrlListener::Uds(l), None)
+        };
 
     let base_args: Vec<Vec<String>> = (0..cfg.procs)
         .map(|rank| {
-            vec![
+            let mut args: Vec<String> = vec![
                 "worker".into(),
                 "--rank".into(),
                 rank.to_string(),
@@ -221,10 +252,28 @@ pub fn run_multiproc(cfg: &MultiProcConfig) -> Result<SupervisorReport> {
                 "--transport".into(),
                 cfg.transport.as_str().into(),
                 "--hb-interval-ms".into(),
-                cfg.hb_interval.as_millis().to_string(),
+                net.hb_interval.as_millis().to_string(),
+                "--hb-timeout-ms".into(),
+                net.hb_timeout.as_millis().to_string(),
                 "--transfer-deadline-ms".into(),
-                cfg.transfer_deadline.as_millis().to_string(),
-            ]
+                net.transfer_deadline.as_millis().to_string(),
+                "--reconnect-base-ms".into(),
+                net.reconnect_base.as_millis().to_string(),
+                "--reconnect-cap-ms".into(),
+                net.reconnect_cap.as_millis().to_string(),
+            ];
+            if let Some(addr) = &ctrl_addr {
+                args.push("--ctrl-addr".into());
+                args.push(addr.clone());
+            }
+            if let Some(peers) = &cfg.peers {
+                args.push("--peers".into());
+                args.push(peers.join(","));
+            }
+            if let Some(chaos) = &cfg.chaos {
+                args.extend(chaos.to_args());
+            }
+            args
         })
         .collect();
     let mut children = Children {
@@ -241,7 +290,7 @@ pub fn run_multiproc(cfg: &MultiProcConfig) -> Result<SupervisorReport> {
         learners_per_proc: cfg.learners_per_proc,
         epochs: cfg.epochs,
         n_samples: cfg.samples,
-        hb_timeout: cfg.hb_timeout,
+        hb_timeout: net.hb_timeout,
         grad_deadline: cfg.grad_deadline,
         overall_deadline: cfg.overall_deadline,
         kill: cfg.kill,
@@ -296,8 +345,10 @@ mod tests {
     fn default_config_is_sane() {
         let cfg = MultiProcConfig::default();
         assert_eq!(cfg.procs * cfg.learners_per_proc, 4);
-        assert!(cfg.hb_timeout > cfg.hb_interval * 10);
+        assert!(cfg.net.hb_timeout > cfg.net.hb_interval * 10);
         assert!(cfg.overall_deadline > cfg.grad_deadline);
+        assert!(cfg.net.validated().is_ok());
+        assert!(cfg.chaos.is_none() && cfg.peers.is_none());
     }
 
     #[test]

@@ -4,8 +4,12 @@
 //! One worker process hosts one node's learner group (`g` learners). It
 //! speaks the control protocol of [`super::service`] to the coordinator
 //! (HELLO/WELCOME, per-step GRAD/MEAN, boundary EPOCH_END/EPOCH_SYNC,
-//! heartbeats) and serves its learners' cache stacks to peer processes
-//! over the [`crate::net::transport`] UDS peer plane.
+//! heartbeats) over UDS or TCP, and serves its learners' cache stacks
+//! to peer processes over the matching [`crate::net::transport`] /
+//! [`crate::net::tcp`] peer plane. Under `--transport tcp` the worker
+//! binds an ephemeral peer port, publishes it through the rendezvous
+//! address file, and optionally runs a seeded [`NetChaos`] injector on
+//! both sides of the wire.
 //!
 //! ## Determinism
 //!
@@ -37,18 +41,19 @@ use crate::loader::{
     load_batch_adhoc, BatchIds, BatchRequest, FetchContext, LoaderConfig,
     LoaderRuntime,
 };
+use crate::fault::netchaos::{NetChaos, NetChaosSpec};
 use crate::metrics::LoadCounters;
+use crate::net::tcp::{PeerAddr, TcpPeerServer, TcpPeers};
 use crate::net::transport::{
-    read_frame, write_frame, PeerServer, PeerTransport, TransportKind,
-    UdsPeers, Wire, WireReader,
+    Conn, NetTuning, PeerServer, PeerTransport, TransportError,
+    TransportKind, UdsPeers, Wire, WireReader,
 };
 use crate::net::{Fabric, FabricConfig};
 use crate::sampler::{EpochPlan, GlobalShuffler, StepPlan};
 use crate::storage::StorageSystem;
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeSet;
-use std::os::unix::net::UnixStream;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -128,15 +133,12 @@ fn batch_grad(
 /// Read one control frame with a hard deadline. A timeout is terminal (a
 /// partially read frame cannot be resumed), surfaced as a barrier-class
 /// [`StallError`] so the process exits with the barrier stall code.
-fn next_frame(
-    conn: &mut UnixStream,
-    budget: Duration,
-) -> Result<(u8, Vec<u8>)> {
+fn next_frame(conn: &mut Conn, budget: Duration) -> Result<(u8, Vec<u8>)> {
     conn.set_read_timeout(Some(budget))?;
     let start = Instant::now();
-    match read_frame(conn) {
+    match conn.read_frame() {
         Ok(f) => Ok(f),
-        Err(e)
+        Err(TransportError::Io(e))
             if matches!(
                 e.kind(),
                 std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
@@ -149,30 +151,50 @@ fn next_frame(
             }
             .into())
         }
-        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+        Err(TransportError::ShortRead { timed_out: true, .. }) => {
+            Err(StallError {
+                kind: StallKind::Barrier,
+                waited: start.elapsed(),
+                deadline: budget,
+            }
+            .into())
+        }
+        Err(TransportError::Io(e))
+            if e.kind() == std::io::ErrorKind::UnexpectedEof =>
+        {
             bail!("coordinator connection closed")
         }
+        Err(
+            TransportError::ShortRead { .. } | TransportError::PeerClosed { .. },
+        ) => bail!("coordinator connection closed"),
         Err(e) => Err(e.into()),
     }
 }
 
 struct Ctrl {
-    read: UnixStream,
-    write: Arc<Mutex<UnixStream>>,
+    read: Conn,
+    write: Arc<Mutex<Conn>>,
 }
 
 impl Ctrl {
-    fn connect(path: &Path, budget: Duration) -> Result<Ctrl> {
+    /// Dial the coordinator, retrying until `budget` lapses (the
+    /// supervisor binds the listener before spawning, but a slow host
+    /// may still race the accept loop).
+    fn connect_with(
+        mut dial: impl FnMut() -> std::io::Result<Conn>,
+        budget: Duration,
+        what: &str,
+    ) -> Result<Ctrl> {
         let start = Instant::now();
         let conn = loop {
-            match UnixStream::connect(path) {
+            match dial() {
                 Ok(c) => break c,
                 Err(_) if start.elapsed() < budget => {
                     std::thread::sleep(Duration::from_millis(20));
                 }
                 Err(e) => {
                     return Err(e).with_context(|| {
-                        format!("connect coordinator at {}", path.display())
+                        format!("connect coordinator at {what}")
                     })
                 }
             }
@@ -184,10 +206,41 @@ impl Ctrl {
     fn send(&self, kind: u8, payload: &[u8]) -> Result<()> {
         let mut w = self.write.lock().unwrap();
         w.set_write_timeout(Some(Duration::from_secs(30)))?;
-        write_frame(&mut *w, kind, payload)
-            .context("write to coordinator")?;
+        w.write_frame(kind, payload).context("write to coordinator")?;
         Ok(())
     }
+}
+
+/// Parse the seeded wire-chaos spec from worker flags (inert when no
+/// chaos flag is present).
+fn parse_chaos(args: &Args) -> Result<NetChaosSpec> {
+    let mut spec = NetChaosSpec {
+        seed: args.u64_or("chaos-seed", 0)?,
+        tear_every: args.u64_or("chaos-tear-every", 0)?,
+        flip_every: args.u64_or("chaos-flip-every", 0)?,
+        connect_drop_every: args.u64_or("chaos-drop-connect-every", 0)?,
+        accept_refuse_every: args.u64_or("chaos-refuse-accept-every", 0)?,
+        delay_every: args.u64_or("chaos-delay-every", 0)?,
+        delay_ms: args.u64_or("chaos-delay-ms", 0)?,
+        partitions: Vec::new(),
+    };
+    if let Some(list) = args.str_opt("chaos-partitions") {
+        for part in list.split(',').filter(|s| !s.is_empty()) {
+            spec.partitions.push(
+                NetChaosSpec::parse_partition(part).with_context(|| {
+                    format!("bad --chaos-partitions entry {part:?} (want a:b:from:to)")
+                })?,
+            );
+        }
+    }
+    Ok(spec)
+}
+
+/// Keeps whichever peer server this worker runs alive for the duration
+/// of the run.
+enum PeerPlane {
+    Uds(#[allow(dead_code)] PeerServer),
+    Tcp(#[allow(dead_code)] TcpPeerServer),
 }
 
 struct WelcomeMsg {
@@ -243,15 +296,48 @@ pub fn worker_main(args: &Args) -> Result<()> {
         .with_context(|| format!("unknown --transport {transport_str}"))?;
     ensure!(
         transport_kind != TransportKind::InProc,
-        "a spawned worker needs a real transport (uds or shm), not inproc"
+        "a spawned worker needs a real transport (uds, tcp, or shm), not inproc"
     );
     let rejoin = args.flag("rejoin");
-    let hb_interval =
-        Duration::from_millis(args.u64_or("hb-interval-ms", 50)?);
     let barrier_budget =
         Duration::from_millis(args.u64_or("barrier-deadline-ms", 30_000)?);
-    let transfer_budget =
-        Duration::from_millis(args.u64_or("transfer-deadline-ms", 5_000)?);
+    // Network tuning is validated at this boundary (the
+    // `LoaderConfig::normalized()` idiom): a zero heartbeat or an
+    // inverted backoff window is a config error, not a mid-run mystery.
+    let tuning = NetTuning {
+        hb_interval: Duration::from_millis(args.u64_or("hb-interval-ms", 50)?),
+        hb_timeout: Duration::from_millis(args.u64_or("hb-timeout-ms", 5_000)?),
+        transfer_deadline: Duration::from_millis(
+            args.u64_or("transfer-deadline-ms", 5_000)?,
+        ),
+        reconnect_base: Duration::from_millis(
+            args.u64_or("reconnect-base-ms", 50)?,
+        ),
+        reconnect_cap: Duration::from_millis(
+            args.u64_or("reconnect-cap-ms", 2_000)?,
+        ),
+    }
+    .validated()
+    .context("worker network tuning")?;
+    let hb_interval = tuning.hb_interval;
+    let transfer_budget = tuning.transfer_deadline;
+    let listen = args.str_or("listen", "127.0.0.1:0");
+    let static_peers: Option<Vec<String>> = args.str_opt("peers").map(|s| {
+        s.split(',')
+            .filter(|p| !p.is_empty())
+            .map(|p| p.trim().to_string())
+            .collect()
+    });
+    let chaos_spec = parse_chaos(args)?;
+    let chaos: Option<Arc<NetChaos>> = if chaos_spec.is_inert() {
+        None
+    } else {
+        ensure!(
+            transport_kind == TransportKind::Tcp,
+            "--chaos-* flags require --transport tcp (wire-level injection)"
+        );
+        Some(Arc::new(NetChaos::new(chaos_spec)))
+    };
 
     let p_global = procs * g;
     ensure!(rank < procs, "rank {rank} out of range for {procs} procs");
@@ -277,22 +363,70 @@ pub fn worker_main(args: &Args) -> Result<()> {
         barrier: Some(barrier_budget),
         ..crate::fault::Deadlines::none()
     });
-    let peer_paths: Vec<PathBuf> = (0..procs)
-        .map(|r| UdsPeers::peer_path(&rendezvous, r))
-        .collect();
-    let peers = Arc::new(UdsPeers::new(rank, g, peer_paths));
-    fabric.set_transport(Some(peers.clone() as Arc<dyn PeerTransport>));
     let served: std::collections::HashMap<usize, Arc<CacheStack>> = (0..g)
         .map(|j| (rank * g + j, Arc::clone(&caches[rank * g + j])))
         .collect();
-    let _server =
-        PeerServer::start(UdsPeers::peer_path(&rendezvous, rank), served)?;
+    let (peers, _server): (Arc<dyn PeerTransport>, PeerPlane) =
+        match transport_kind {
+            TransportKind::Tcp => {
+                // Bind first, then publish the bound address through the
+                // rendezvous file (or rely on a static --peers list
+                // across hosts, where every address is operator-known).
+                let server =
+                    TcpPeerServer::start(&listen, served, chaos.clone())?;
+                let addr_file = TcpPeers::addr_file(&rendezvous, rank);
+                std::fs::write(&addr_file, server.local_addr().to_string())
+                    .with_context(|| {
+                        format!("publish peer address {}", addr_file.display())
+                    })?;
+                let addrs: Vec<PeerAddr> = match &static_peers {
+                    Some(list) => {
+                        list.iter().map(|s| PeerAddr::Static(s.clone())).collect()
+                    }
+                    None => (0..procs)
+                        .map(|r| PeerAddr::File(TcpPeers::addr_file(&rendezvous, r)))
+                        .collect(),
+                };
+                ensure!(
+                    addrs.len() == procs,
+                    "--peers must list {procs} addresses, got {}",
+                    addrs.len()
+                );
+                let mut tp = TcpPeers::new(rank, g, addrs, tuning);
+                tp.set_chaos(chaos.clone());
+                (Arc::new(tp) as Arc<dyn PeerTransport>, PeerPlane::Tcp(server))
+            }
+            _ => {
+                let peer_paths: Vec<PathBuf> = (0..procs)
+                    .map(|r| UdsPeers::peer_path(&rendezvous, r))
+                    .collect();
+                let up = UdsPeers::new(rank, g, peer_paths)
+                    .with_backoff(tuning.reconnect_base, tuning.reconnect_cap);
+                let server = PeerServer::start(
+                    UdsPeers::peer_path(&rendezvous, rank),
+                    served,
+                )?;
+                (Arc::new(up) as Arc<dyn PeerTransport>, PeerPlane::Uds(server))
+            }
+        };
+    fabric.set_transport(Some(peers.clone()));
 
     // ---- control plane --------------------------------------------------
-    let ctrl = Ctrl::connect(
-        &rendezvous.join("ctrl.sock"),
-        Duration::from_secs(10),
-    )?;
+    let ctrl = match args.str_opt("ctrl-addr") {
+        Some(addr) => Ctrl::connect_with(
+            || Conn::connect_tcp(&addr),
+            Duration::from_secs(10),
+            &addr,
+        )?,
+        None => {
+            let path = rendezvous.join("ctrl.sock");
+            Ctrl::connect_with(
+                || Conn::connect_uds(&path),
+                Duration::from_secs(10),
+                &path.display().to_string(),
+            )?
+        }
+    };
     let mut hello = Wire::new();
     hello.u32(rank as u32).u32(std::process::id()).u8(rejoin as u8);
     ctrl.send(HELLO, &hello.take())?;
@@ -345,7 +479,7 @@ pub fn worker_main(args: &Args) -> Result<()> {
                 let payload = w.take();
                 {
                     let mut c = write.lock().unwrap();
-                    if write_frame(&mut *c, HB, &payload).is_err() {
+                    if c.write_frame(HB, &payload).is_err() {
                         return;
                     }
                 }
@@ -373,6 +507,7 @@ pub fn worker_main(args: &Args) -> Result<()> {
         plan_dir: &mut plan_dir,
         fabric,
         peers,
+        chaos: chaos.clone(),
         ctrl: &ctrl,
         read: &mut read,
         barrier_budget,
@@ -408,9 +543,10 @@ struct RunCtx<'a> {
     serve_dir: Arc<CacheDirectory>,
     plan_dir: &'a mut Arc<CacheDirectory>,
     fabric: Arc<Fabric>,
-    peers: Arc<UdsPeers>,
+    peers: Arc<dyn PeerTransport>,
+    chaos: Option<Arc<NetChaos>>,
     ctrl: &'a Ctrl,
-    read: &'a mut UnixStream,
+    read: &'a mut Conn,
     barrier_budget: Duration,
     gstep: &'a AtomicU64,
     dead: &'a mut BTreeSet<usize>,
@@ -454,6 +590,10 @@ fn run_epochs(mut c: RunCtx<'_>) -> Result<()> {
 
         for step in 0..plan.steps() {
             c.fabric.observe_step(gen);
+            if let Some(chaos) = &c.chaos {
+                // Publish the step the partition windows gate on.
+                chaos.observe_step(gen);
+            }
             let batch = plan.batch(step);
             let splan = Arc::new(match c.sampler {
                 SamplerKind::Loc => StepPlan::plan_loc(

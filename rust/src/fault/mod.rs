@@ -18,6 +18,7 @@
 //! (`fault/clean_determinism`) pins that down.
 
 pub mod exitcode;
+pub mod netchaos;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -193,11 +194,34 @@ pub struct FaultPlan {
 
 /// splitmix64 finalizer: a full-avalanche hash, so consecutive event
 /// indices map to independent-looking draws.
-fn mix(mut x: u64) -> u64 {
+pub(crate) fn mix(mut x: u64) -> u64 {
     x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
     x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
     x ^ (x >> 31)
+}
+
+/// Jittered exponential backoff (the PR 7 retry policy, shared by the
+/// in-process fetch retries and the transport reconnect gates): attempt
+/// `k ≥ 1` waits `base_us·2^min(k,10)` µs ± 25% deterministic jitter
+/// keyed on `salt`, capped at `cap`. Attempt 0 never waits. The jitter
+/// stream is bit-compatible with the original fetch-path
+/// implementation, so existing determinism pins still hold.
+pub fn backoff_with(attempt: usize, salt: u64, base_us: u64, cap: Duration) -> Duration {
+    if attempt == 0 {
+        return Duration::ZERO;
+    }
+    let base = base_us << attempt.min(10);
+    let mut z = salt
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(attempt as u64)
+        .wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    let span = (base / 2).max(1);
+    let jitter = (z % span) as i64 - (base / 4) as i64;
+    Duration::from_micros(base.saturating_add_signed(jitter)).min(cap)
 }
 
 impl FaultPlan {

@@ -1,0 +1,408 @@
+//! Wire-level chaos injection for the real transports (DESIGN.md §14).
+//!
+//! [`NetChaos`] is the network sibling of [`FaultTimeline`]: a seeded,
+//! inert-by-default injector that the TCP transport consults at each
+//! wire decision point. The default spec injects nothing and touches no
+//! counters, so a zero-injection run is bit-identical (and
+//! branch-identical in the hot path) to a build without the injector.
+//!
+//! Everything it can do maps to a *recoverable* failure the transport
+//! must already survive on a real network:
+//!
+//! - **tear**: close the connection halfway through writing a response
+//!   frame — the client must see a typed `ShortRead`, never a
+//!   half-parsed success;
+//! - **flip**: flip one bit of an encoded frame past the length header —
+//!   the CRC trailer must reject it as `Corrupt`;
+//! - **connect drop**: fail an outbound dial — the client backs off;
+//! - **accept refuse**: drop an inbound connection at the listener —
+//!   the dialer sees a reset;
+//! - **delay**: sleep before a response — exercises deadline → stall
+//!   mapping;
+//! - **partition**: make a rank *pair* mutually unreachable for a
+//!   window of global steps — fetches between them refuse fail-fast and
+//!   the loader degrades to CAS-repair + storage fallback, which must
+//!   leave the final parameters bit-identical.
+//!
+//! [`FaultTimeline`]: super::FaultTimeline
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One rank pair made mutually unreachable for `[from_gstep, to_gstep)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Partition {
+    pub a: usize,
+    pub b: usize,
+    pub from_gstep: u64,
+    pub to_gstep: u64,
+}
+
+/// Declarative chaos spec. `Default` is fully inert. Each `*_every`
+/// knob fires on average once per `every` draws of its category's
+/// seeded hash stream (deterministic for a given seed; `0` disables).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NetChaosSpec {
+    pub seed: u64,
+    /// Tear (half-write then close) one in `every` response frames.
+    pub tear_every: u64,
+    /// Bit-flip one in `every` response frames.
+    pub flip_every: u64,
+    /// Fail one in `every` outbound dials.
+    pub connect_drop_every: u64,
+    /// Refuse one in `every` accepted connections.
+    pub accept_refuse_every: u64,
+    /// Delay one in `every` responses by `delay_ms`.
+    pub delay_every: u64,
+    pub delay_ms: u64,
+    /// Step-windowed rank-pair partitions.
+    pub partitions: Vec<Partition>,
+}
+
+impl NetChaosSpec {
+    /// True when this spec can never inject anything.
+    pub fn is_inert(&self) -> bool {
+        self.tear_every == 0
+            && self.flip_every == 0
+            && self.connect_drop_every == 0
+            && self.accept_refuse_every == 0
+            && (self.delay_every == 0 || self.delay_ms == 0)
+            && self.partitions.is_empty()
+    }
+
+    /// Render the spec as worker CLI flags (empty when inert), the
+    /// supervisor → worker hand-off format parsed back by
+    /// `coordinator::worker`.
+    pub fn to_args(&self) -> Vec<String> {
+        if self.is_inert() {
+            return Vec::new();
+        }
+        let mut args = vec!["--chaos-seed".into(), self.seed.to_string()];
+        let every = [
+            ("--chaos-tear-every", self.tear_every),
+            ("--chaos-flip-every", self.flip_every),
+            ("--chaos-drop-connect-every", self.connect_drop_every),
+            ("--chaos-refuse-accept-every", self.accept_refuse_every),
+            ("--chaos-delay-every", self.delay_every),
+            ("--chaos-delay-ms", self.delay_ms),
+        ];
+        for (flag, v) in every {
+            if v != 0 {
+                args.push(flag.into());
+                args.push(v.to_string());
+            }
+        }
+        if !self.partitions.is_empty() {
+            let spec: Vec<String> = self
+                .partitions
+                .iter()
+                .map(|p| format!("{}:{}:{}:{}", p.a, p.b, p.from_gstep, p.to_gstep))
+                .collect();
+            args.push("--chaos-partitions".into());
+            args.push(spec.join(","));
+        }
+        args
+    }
+
+    /// Parse one `a:b:from:to` partition entry (the `--chaos-partitions`
+    /// list element format).
+    pub fn parse_partition(s: &str) -> Option<Partition> {
+        let mut it = s.split(':');
+        let a = it.next()?.parse().ok()?;
+        let b = it.next()?.parse().ok()?;
+        let from_gstep = it.next()?.parse().ok()?;
+        let to_gstep = it.next()?.parse().ok()?;
+        if it.next().is_some() {
+            return None;
+        }
+        Some(Partition { a, b, from_gstep, to_gstep })
+    }
+}
+
+/// Counters of what actually fired (observability + test assertions).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetChaosCounters {
+    pub tears: u64,
+    pub flips: u64,
+    pub dropped_connects: u64,
+    pub refused_accepts: u64,
+    pub delays: u64,
+    pub partitioned_fetches: u64,
+}
+
+/// The live injector: seeded decisions, monotone per-category draw
+/// counters, step-gated partitions. Shared (`Arc`) between the peer
+/// client, peer server, and training loop (which publishes the current
+/// global step via [`NetChaos::observe_step`]).
+pub struct NetChaos {
+    spec: NetChaosSpec,
+    step: AtomicU64,
+    tear_draws: AtomicU64,
+    flip_draws: AtomicU64,
+    connect_draws: AtomicU64,
+    accept_draws: AtomicU64,
+    delay_draws: AtomicU64,
+    flip_bit_draws: AtomicU64,
+    tears: AtomicU64,
+    flips: AtomicU64,
+    dropped_connects: AtomicU64,
+    refused_accepts: AtomicU64,
+    delays: AtomicU64,
+    partitioned_fetches: AtomicU64,
+}
+
+impl NetChaos {
+    pub fn new(spec: NetChaosSpec) -> NetChaos {
+        NetChaos {
+            spec,
+            step: AtomicU64::new(0),
+            tear_draws: AtomicU64::new(0),
+            flip_draws: AtomicU64::new(0),
+            connect_draws: AtomicU64::new(0),
+            accept_draws: AtomicU64::new(0),
+            delay_draws: AtomicU64::new(0),
+            flip_bit_draws: AtomicU64::new(0),
+            tears: AtomicU64::new(0),
+            flips: AtomicU64::new(0),
+            dropped_connects: AtomicU64::new(0),
+            refused_accepts: AtomicU64::new(0),
+            delays: AtomicU64::new(0),
+            partitioned_fetches: AtomicU64::new(0),
+        }
+    }
+
+    pub fn spec(&self) -> &NetChaosSpec {
+        &self.spec
+    }
+
+    pub fn is_inert(&self) -> bool {
+        self.spec.is_inert()
+    }
+
+    /// Publish the current global step (gates partitions). Called by
+    /// the training loop alongside `Fabric::observe_step`.
+    pub fn observe_step(&self, gstep: u64) {
+        self.step.store(gstep, Ordering::Release);
+    }
+
+    pub fn step(&self) -> u64 {
+        self.step.load(Ordering::Acquire)
+    }
+
+    /// One seeded draw for category `cat`: fires once per `every` on
+    /// average. Inert categories never touch their counters, keeping
+    /// zero-injection runs branch-cheap and counter-silent (the
+    /// `FaultPlan` idiom).
+    fn fire(&self, every: u64, cat: u64, draws: &AtomicU64, hits: &AtomicU64) -> bool {
+        if every == 0 {
+            return false;
+        }
+        let k = draws.fetch_add(1, Ordering::Relaxed);
+        let hit = every == 1 || super::mix(self.spec.seed ^ (cat << 56) ^ k) % every == 0;
+        if hit {
+            hits.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Should the server tear (half-write then close) this response?
+    pub fn next_tear(&self) -> bool {
+        self.fire(self.spec.tear_every, 1, &self.tear_draws, &self.tears)
+    }
+
+    /// Should the server flip one bit of this response?
+    pub fn next_flip(&self) -> bool {
+        self.fire(self.spec.flip_every, 2, &self.flip_draws, &self.flips)
+    }
+
+    /// Should this outbound dial fail?
+    pub fn next_connect_drop(&self) -> bool {
+        self.fire(
+            self.spec.connect_drop_every,
+            3,
+            &self.connect_draws,
+            &self.dropped_connects,
+        )
+    }
+
+    /// Should the listener drop this accepted connection?
+    pub fn next_accept_refuse(&self) -> bool {
+        self.fire(
+            self.spec.accept_refuse_every,
+            4,
+            &self.accept_draws,
+            &self.refused_accepts,
+        )
+    }
+
+    /// Should the server delay this response by [`NetChaos::delay_ms`]?
+    pub fn next_delay(&self) -> bool {
+        if self.spec.delay_ms == 0 {
+            return false;
+        }
+        self.fire(self.spec.delay_every, 5, &self.delay_draws, &self.delays)
+    }
+
+    pub fn delay_ms(&self) -> u64 {
+        self.spec.delay_ms
+    }
+
+    /// Pick the bit to flip in an encoded frame of `frame_len` bytes —
+    /// always past the 4-byte length header, so the flip corrupts bytes
+    /// the CRC covers (a flipped *length* would test the cap/short-read
+    /// paths instead, which the fuzz tests own). `None` when the frame
+    /// is too small to flip safely.
+    pub fn flip_bit(&self, frame_len: usize) -> Option<usize> {
+        if frame_len <= 5 {
+            return None;
+        }
+        let span = ((frame_len - 4) * 8) as u64;
+        let k = self.flip_bit_draws.fetch_add(1, Ordering::Relaxed);
+        Some(32 + (super::mix(self.spec.seed ^ (6 << 56) ^ k) % span) as usize)
+    }
+
+    /// Is the (unordered) rank pair `{a, b}` partitioned at the current
+    /// step?
+    pub fn partitioned(&self, a: usize, b: usize) -> bool {
+        if self.spec.partitions.is_empty() {
+            return false;
+        }
+        let step = self.step();
+        let hit = self.spec.partitions.iter().any(|p| {
+            ((p.a == a && p.b == b) || (p.a == b && p.b == a))
+                && p.from_gstep <= step
+                && step < p.to_gstep
+        });
+        if hit {
+            self.partitioned_fetches.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    pub fn counters(&self) -> NetChaosCounters {
+        NetChaosCounters {
+            tears: self.tears.load(Ordering::Relaxed),
+            flips: self.flips.load(Ordering::Relaxed),
+            dropped_connects: self.dropped_connects.load(Ordering::Relaxed),
+            refused_accepts: self.refused_accepts.load(Ordering::Relaxed),
+            delays: self.delays.load(Ordering::Relaxed),
+            partitioned_fetches: self.partitioned_fetches.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_inert_and_counter_silent() {
+        let chaos = NetChaos::new(NetChaosSpec::default());
+        assert!(chaos.is_inert());
+        for _ in 0..100 {
+            assert!(!chaos.next_tear());
+            assert!(!chaos.next_flip());
+            assert!(!chaos.next_connect_drop());
+            assert!(!chaos.next_accept_refuse());
+            assert!(!chaos.next_delay());
+            assert!(!chaos.partitioned(0, 1));
+        }
+        // Inert draws must not even move the counters.
+        assert_eq!(chaos.counters(), NetChaosCounters::default());
+    }
+
+    #[test]
+    fn every_one_always_fires_and_counts() {
+        let spec = NetChaosSpec {
+            seed: 9,
+            tear_every: 1,
+            flip_every: 1,
+            delay_every: 1,
+            delay_ms: 5,
+            ..NetChaosSpec::default()
+        };
+        let chaos = NetChaos::new(spec);
+        for _ in 0..10 {
+            assert!(chaos.next_tear());
+            assert!(chaos.next_flip());
+            assert!(chaos.next_delay());
+        }
+        let c = chaos.counters();
+        assert_eq!((c.tears, c.flips, c.delays), (10, 10, 10));
+        assert_eq!(c.dropped_connects, 0);
+    }
+
+    #[test]
+    fn seeded_draws_are_deterministic_and_roughly_paced() {
+        let spec = NetChaosSpec { seed: 1234, connect_drop_every: 4, ..NetChaosSpec::default() };
+        let a: Vec<bool> =
+            (0..256).map(|_| NetChaos::new(spec.clone()).next_connect_drop()).collect();
+        let chaos = NetChaos::new(spec.clone());
+        let b: Vec<bool> = (0..256).map(|_| chaos.next_connect_drop()).collect();
+        // First-draw decision is a pure function of (seed, k=0).
+        assert!(a.iter().all(|&x| x == a[0]));
+        // A fresh stream over 256 draws fires near 1-in-4.
+        let hits = b.iter().filter(|&&x| x).count();
+        assert!((32..=96).contains(&hits), "expected ~64 hits in 256 draws, got {hits}");
+        assert_eq!(chaos.counters().dropped_connects, hits as u64);
+    }
+
+    #[test]
+    fn partitions_gate_by_step_window_and_unordered_pair() {
+        let spec = NetChaosSpec {
+            partitions: vec![Partition { a: 1, b: 2, from_gstep: 5, to_gstep: 10 }],
+            ..NetChaosSpec::default()
+        };
+        assert!(!spec.is_inert());
+        let chaos = NetChaos::new(spec);
+        chaos.observe_step(4);
+        assert!(!chaos.partitioned(1, 2));
+        chaos.observe_step(5);
+        assert!(chaos.partitioned(1, 2));
+        assert!(chaos.partitioned(2, 1), "partitions are unordered pairs");
+        assert!(!chaos.partitioned(0, 2), "other pairs stay connected");
+        chaos.observe_step(9);
+        assert!(chaos.partitioned(1, 2));
+        chaos.observe_step(10);
+        assert!(!chaos.partitioned(1, 2), "window end is exclusive");
+        assert_eq!(chaos.counters().partitioned_fetches, 3);
+    }
+
+    #[test]
+    fn spec_round_trips_through_cli_args() {
+        assert!(NetChaosSpec::default().to_args().is_empty());
+        let spec = NetChaosSpec {
+            seed: 7,
+            tear_every: 3,
+            delay_every: 2,
+            delay_ms: 15,
+            partitions: vec![
+                Partition { a: 0, b: 1, from_gstep: 2, to_gstep: 4 },
+                Partition { a: 1, b: 2, from_gstep: 8, to_gstep: 12 },
+            ],
+            ..NetChaosSpec::default()
+        };
+        let args = spec.to_args();
+        assert!(args.contains(&"--chaos-tear-every".to_string()));
+        assert!(args.contains(&"--chaos-partitions".to_string()));
+        let joined = args.join(" ");
+        assert!(joined.contains("0:1:2:4,1:2:8:12"), "{joined}");
+        assert_eq!(
+            NetChaosSpec::parse_partition("1:2:8:12"),
+            Some(Partition { a: 1, b: 2, from_gstep: 8, to_gstep: 12 })
+        );
+        assert_eq!(NetChaosSpec::parse_partition("1:2:8"), None);
+        assert_eq!(NetChaosSpec::parse_partition("1:2:8:12:9"), None);
+        assert_eq!(NetChaosSpec::parse_partition("x:2:8:12"), None);
+    }
+
+    #[test]
+    fn flip_bit_lands_past_the_length_header() {
+        let spec = NetChaosSpec { seed: 3, flip_every: 1, ..NetChaosSpec::default() };
+        let chaos = NetChaos::new(spec);
+        assert_eq!(chaos.flip_bit(5), None, "too small to flip safely");
+        for _ in 0..200 {
+            let bit = chaos.flip_bit(64).unwrap();
+            assert!((32..64 * 8).contains(&bit), "bit {bit} must be past the header");
+        }
+    }
+}

@@ -71,22 +71,10 @@ const RETRY_BASE_US: u64 = 50;
 /// `backoff_total_is_bounded` test), so a doomed group demotes to storage
 /// fallback on a known budget instead of an unbounded spin.
 fn retry_backoff(attempt: usize, salt: u64) -> Duration {
-    if attempt == 0 {
-        return Duration::ZERO;
-    }
-    let base = RETRY_BASE_US << attempt.min(10);
-    // splitmix64-style avalanche of (salt, attempt) for the jitter draw.
-    let mut z = salt
-        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-        .wrapping_add(attempt as u64)
-        .wrapping_add(0x9E37_79B9_7F4A_7C15);
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    z ^= z >> 31;
-    // ±25%: jitter in [-base/4, +base/4).
-    let span = (base / 2).max(1);
-    let jitter = (z % span) as i64 - (base / 4) as i64;
-    Duration::from_micros(base.saturating_add_signed(jitter))
+    // Shared with the transport reconnect gates; uncapped here (the
+    // attempt clamp already bounds the wait), so the jitter stream is
+    // bit-identical to the original inline implementation.
+    crate::fault::backoff_with(attempt, salt, RETRY_BASE_US, Duration::MAX)
 }
 
 /// Everything a loader worker needs to materialize sample bytes.

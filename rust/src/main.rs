@@ -19,9 +19,10 @@
 use anyhow::{bail, Context, Result};
 use dlio::config::Args;
 use dlio::coordinator::{SamplerKind, Trainer, TrainerConfig};
+use dlio::fault::netchaos::NetChaosSpec;
 use dlio::fault::{exitcode, Deadlines, ProcKill};
 use dlio::loader::LoaderConfig;
-use dlio::net::transport::TransportKind;
+use dlio::net::transport::{NetTuning, TransportKind};
 use dlio::net::{Fabric, FabricConfig};
 use dlio::runtime::{default_artifacts_dir, Engine};
 use dlio::storage::{generate, Catalog, StorageSystem, SyntheticSpec, TokenBucket};
@@ -104,6 +105,68 @@ fn loadtest(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Network tuning from CLI flags (DESIGN.md §14). Returns `None` when no
+/// tuning flag is present, so the zero-flag path keeps the legacy
+/// defaults exactly; any flag pulls in `NetTuning::default()` for the
+/// rest. Validation happens at the consumer (`Trainer::new` /
+/// `run_multiproc`).
+fn net_tuning(args: &Args) -> Result<Option<NetTuning>> {
+    const KEYS: [&str; 5] = [
+        "hb-interval-ms",
+        "hb-timeout-ms",
+        "transfer-deadline-ms",
+        "reconnect-base-ms",
+        "reconnect-cap-ms",
+    ];
+    if KEYS.iter().all(|k| args.str_opt(k).is_none()) {
+        return Ok(None);
+    }
+    let d = NetTuning::default();
+    let ms = |key: &str, dflt: Duration| -> Result<Duration> {
+        Ok(Duration::from_millis(
+            args.u64_or(key, dflt.as_millis() as u64)?,
+        ))
+    };
+    Ok(Some(NetTuning {
+        hb_interval: ms("hb-interval-ms", d.hb_interval)?,
+        hb_timeout: ms("hb-timeout-ms", d.hb_timeout)?,
+        transfer_deadline: ms("transfer-deadline-ms", d.transfer_deadline)?,
+        reconnect_base: ms("reconnect-base-ms", d.reconnect_base)?,
+        reconnect_cap: ms("reconnect-cap-ms", d.reconnect_cap)?,
+    }))
+}
+
+/// Wire-level chaos spec from `--chaos-*` flags (DESIGN.md §14).
+/// Returns `None` when the resulting spec is inert — the common case —
+/// so the supervisor's "chaos requires TCP" guard only fires when
+/// injection could actually happen.
+fn net_chaos(args: &Args) -> Result<Option<NetChaosSpec>> {
+    let spec = NetChaosSpec {
+        seed: args.u64_or("chaos-seed", 0xC4A05)?,
+        tear_every: args.u64_or("chaos-tear-every", 0)?,
+        flip_every: args.u64_or("chaos-flip-every", 0)?,
+        connect_drop_every: args.u64_or("chaos-drop-connect-every", 0)?,
+        accept_refuse_every: args.u64_or("chaos-refuse-accept-every", 0)?,
+        delay_every: args.u64_or("chaos-delay-every", 0)?,
+        delay_ms: args.u64_or("chaos-delay-ms", 0)?,
+        partitions: match args.str_opt("chaos-partitions") {
+            None => Vec::new(),
+            Some(s) => s
+                .split(',')
+                .map(|t| {
+                    NetChaosSpec::parse_partition(t.trim()).with_context(|| {
+                        format!(
+                            "bad --chaos-partitions entry {t:?} \
+                             (want a:b:from:to)"
+                        )
+                    })
+                })
+                .collect::<Result<_>>()?,
+        },
+    };
+    Ok((!spec.is_inert()).then_some(spec))
+}
+
 fn train(args: &Args) -> Result<()> {
     let dir = data_dir(args);
     let sampler = match args.str_or("sampler", "loc").as_str() {
@@ -177,6 +240,9 @@ fn train(args: &Args) -> Result<()> {
             0 => None,
             s => Some(s),
         },
+        // Network tuning (DESIGN.md §14): only installed when a flag is
+        // present, so default runs stay bit-identical.
+        net: net_tuning(args)?,
         ..TrainerConfig::default()
     };
     println!(
@@ -264,6 +330,15 @@ fn train_multiproc(
         kill,
         restart: args.flag("restart"),
         bench_out: args.str_opt("bench-out").map(PathBuf::from),
+        // Multi-host TCP knobs (DESIGN.md §14): bind address, static
+        // peer table, network tuning, and the wire-chaos spec. All
+        // default to off; `run_multiproc` rejects chaos over UDS.
+        net: net_tuning(args)?.unwrap_or_default(),
+        listen: args.str_opt("listen"),
+        peers: args.str_opt("peers").map(|s| {
+            s.split(',').map(|t| t.trim().to_string()).collect()
+        }),
+        chaos: net_chaos(args)?,
         ..dlio::coordinator::MultiProcConfig::default()
     };
     println!(

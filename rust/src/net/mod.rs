@@ -20,6 +20,7 @@
 //! Only relative rates matter for the paper's phenomena (R_c ≫ R), so the
 //! fabric is configured in bytes/sec alongside the storage throttle.
 
+pub mod tcp;
 pub mod transport;
 
 use crate::fault::{

@@ -1,0 +1,592 @@
+//! Multi-host TCP peer transport (DESIGN.md §14).
+//!
+//! [`TcpPeers`]/[`TcpPeerServer`] are the cross-host siblings of the
+//! UDS pair in [`super::transport`]: the same [`PFETCH`]/[`PSAMP`]
+//! protocol, the same [`PeerState`] health machine, the same serve
+//! loop — but framed with the CRC-trailered [`Codec::Crc32`] (bytes
+//! cross real networks) and addressed by `host:port` instead of socket
+//! paths. On one host the workers rendezvous through per-rank address
+//! files (each server binds an ephemeral loopback port and publishes
+//! `peer-{rank}.addr`); across hosts the same code takes a static
+//! `--peers` list, unchanged.
+//!
+//! Every wire decision point consults an optional [`NetChaos`]
+//! injector, so torn frames, corrupted bytes, refused accepts, dropped
+//! dials, and step-windowed rank partitions are all exercised by the
+//! same build that ships. A partitioned or refused owner surfaces as a
+//! typed [`TransportError`] that the fetch path's CAS-repair →
+//! storage-fallback ladder absorbs: throughput degrades, parameters
+//! stay bit-identical.
+
+use super::transport::{
+    decode_samples, serve_stream, Codec, NetTuning, PeerHealth, PeerState, PeerTransport,
+    TransportError, Wire, PFETCH,
+};
+use crate::cache::CacheStack;
+use crate::fault::netchaos::NetChaos;
+use std::collections::HashMap;
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+/// How a peer rank is addressed.
+#[derive(Clone, Debug)]
+pub enum PeerAddr {
+    /// A fixed `host:port` (multi-host deployment: the `--peers` list).
+    Static(String),
+    /// A rendezvous file that the peer's server writes its bound
+    /// address into (same-host ephemeral ports: loopback CI and the
+    /// supervised multi-process mode).
+    File(PathBuf),
+}
+
+struct TcpSlot {
+    conn: Mutex<Option<TcpStream>>,
+    state: PeerState,
+}
+
+/// TCP client: one lazily-dialed, cached connection per peer rank,
+/// health-gated exactly like [`super::transport::UdsPeers`], plus a
+/// partition check against the chaos injector before any dial.
+pub struct TcpPeers {
+    my_rank: usize,
+    /// Learners per rank (global learner `l` ⇒ rank `l / g`).
+    g: usize,
+    addrs: Vec<PeerAddr>,
+    slots: Vec<TcpSlot>,
+    tuning: NetTuning,
+    chaos: Option<Arc<NetChaos>>,
+}
+
+impl TcpPeers {
+    pub fn new(
+        my_rank: usize,
+        learners_per_rank: usize,
+        addrs: Vec<PeerAddr>,
+        tuning: NetTuning,
+    ) -> TcpPeers {
+        let slots = (0..addrs.len())
+            .map(|_| TcpSlot { conn: Mutex::new(None), state: PeerState::new() })
+            .collect();
+        TcpPeers {
+            my_rank,
+            g: learners_per_rank.max(1),
+            addrs,
+            slots,
+            tuning,
+            chaos: None,
+        }
+    }
+
+    /// Install a chaos injector (shared with the server and the
+    /// training loop, which publishes the step that gates partitions).
+    pub fn set_chaos(&mut self, chaos: Option<Arc<NetChaos>>) {
+        self.chaos = chaos;
+    }
+
+    /// The rendezvous file a given rank's server publishes its bound
+    /// address into.
+    pub fn addr_file(rendezvous: &Path, rank: usize) -> PathBuf {
+        rendezvous.join(format!("peer-{rank}.addr"))
+    }
+
+    /// Health of the link to `rank` (observability + tests).
+    pub fn peer_health(&self, rank: usize) -> Option<PeerHealth> {
+        self.slots.get(rank).map(|s| s.state.health())
+    }
+
+    fn resolve(&self, rank: usize) -> Result<SocketAddr, TransportError> {
+        let parse = |s: &str| {
+            s.trim()
+                .to_socket_addrs()
+                .ok()
+                .and_then(|mut it| it.next())
+        };
+        let addr = match &self.addrs[rank] {
+            PeerAddr::Static(s) => parse(s),
+            // An unreadable/unwritten rendezvous file means the peer
+            // has not come up (or died before binding): peer-closed,
+            // same as a refused dial.
+            PeerAddr::File(p) => std::fs::read_to_string(p).ok().and_then(|s| parse(&s)),
+        };
+        addr.ok_or(TransportError::PeerClosed { peer: rank })
+    }
+
+    fn dial(
+        &self,
+        rank: usize,
+        deadline: Option<Duration>,
+    ) -> Result<TcpStream, TransportError> {
+        if let Some(c) = &self.chaos {
+            if c.next_connect_drop() {
+                return Err(TransportError::PeerClosed { peer: rank });
+            }
+        }
+        let addr = self.resolve(rank)?;
+        let budget = deadline.unwrap_or(self.tuning.transfer_deadline);
+        let stream = TcpStream::connect_timeout(&addr, budget)
+            .map_err(|e| TransportError::from_io(e, rank, deadline))?;
+        let _ = stream.set_nodelay(true);
+        Ok(stream)
+    }
+
+    fn exchange(
+        &self,
+        stream: &mut TcpStream,
+        owner: usize,
+        ids: &[u32],
+        deadline: Option<Duration>,
+    ) -> Result<Vec<Option<(u16, Vec<u8>)>>, TransportError> {
+        let rank = owner / self.g;
+        stream
+            .set_read_timeout(deadline)
+            .and_then(|_| stream.set_write_timeout(deadline))
+            .map_err(|e| TransportError::from_io(e, rank, deadline))?;
+        let mut req = Wire::new();
+        req.u32(owner as u32).vec_u32(ids);
+        Codec::Crc32
+            .write(stream, PFETCH, &req.take())
+            .map_err(|e| TransportError::from_io(e, rank, deadline))?;
+        let (kind, payload) = Codec::Crc32
+            .read(stream)
+            .map_err(|e| e.classify(rank, deadline))?;
+        decode_samples(kind, &payload, ids.len())
+    }
+
+    fn note_failure(&self, rank: usize, err: &TransportError) {
+        let Some(slot) = self.slots.get(rank) else { return };
+        match err {
+            TransportError::Stall(_) => slot.state.note_stall(),
+            _ => {
+                let salt = ((self.my_rank as u64) << 32) | rank as u64;
+                slot.state.note_disconnect(
+                    salt,
+                    self.tuning.reconnect_base,
+                    self.tuning.reconnect_cap,
+                );
+            }
+        }
+    }
+}
+
+impl PeerTransport for TcpPeers {
+    fn serves_local(&self, learner: usize) -> bool {
+        learner / self.g == self.my_rank
+    }
+
+    fn fetch_from_owner(
+        &self,
+        owner: usize,
+        ids: &[u32],
+        deadline: Option<Duration>,
+    ) -> Result<Vec<Option<(u16, Vec<u8>)>>, TransportError> {
+        let rank = owner / self.g;
+        let slot = self
+            .slots
+            .get(rank)
+            .ok_or(TransportError::Malformed("owner rank out of range"))?;
+        if let Some(c) = &self.chaos {
+            // A partition refuses fail-fast WITHOUT touching the health
+            // machine: the peer is alive and healthy, the *path* is
+            // down. The moment the window closes, fetches resume
+            // immediately — no residual backoff, and membership never
+            // sees a partitioned-but-alive rank as dead.
+            if c.partitioned(self.my_rank, rank) {
+                return Err(TransportError::PeerClosed { peer: rank });
+            }
+        }
+        if slot.state.is_dead() || slot.state.in_backoff() {
+            return Err(TransportError::PeerClosed { peer: rank });
+        }
+        let mut guard = slot.conn.lock().unwrap();
+        let had_cached = guard.is_some();
+        if guard.is_none() {
+            match self.dial(rank, deadline) {
+                Ok(s) => *guard = Some(s),
+                Err(e) => {
+                    self.note_failure(rank, &e);
+                    return Err(e);
+                }
+            }
+        }
+        let mut stream = guard.take().unwrap();
+        match self.exchange(&mut stream, owner, ids, deadline) {
+            Ok(out) => {
+                slot.state.note_success();
+                *guard = Some(stream);
+                Ok(out)
+            }
+            Err(TransportError::PeerClosed { .. }) if had_cached => {
+                // Stale cached stream (peer restarted): redial once.
+                // The request is idempotent and no response byte was
+                // accepted, so nothing can be double-counted.
+                let out = self.dial(rank, deadline).and_then(|mut fresh| {
+                    self.exchange(&mut fresh, owner, ids, deadline)
+                        .map(|out| (out, fresh))
+                });
+                match out {
+                    Ok((out, fresh)) => {
+                        slot.state.note_success();
+                        *guard = Some(fresh);
+                        Ok(out)
+                    }
+                    Err(e) => {
+                        self.note_failure(rank, &e);
+                        Err(e)
+                    }
+                }
+            }
+            Err(e) => {
+                self.note_failure(rank, &e);
+                Err(e)
+            }
+        }
+    }
+
+    fn mark_dead(&self, rank: usize) {
+        if let Some(slot) = self.slots.get(rank) {
+            slot.state.mark_dead();
+            *slot.conn.lock().unwrap() = None;
+        }
+    }
+
+    fn mark_alive(&self, rank: usize) {
+        if let Some(slot) = self.slots.get(rank) {
+            slot.state.mark_alive();
+            *slot.conn.lock().unwrap() = None;
+        }
+    }
+}
+
+/// TCP server: serves this process's learner caches over a loopback or
+/// routable port, reusing the shared serve loop with the CRC codec and
+/// optional chaos injection (tears/flips/delays on responses, refused
+/// accepts at the listener).
+pub struct TcpPeerServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl TcpPeerServer {
+    /// Bind `listen` (e.g. `127.0.0.1:0` for an ephemeral loopback
+    /// port, `0.0.0.0:5555` for a routable one) and serve `caches`, a
+    /// map from *global* learner id to that learner's stack.
+    pub fn start(
+        listen: &str,
+        caches: HashMap<usize, Arc<CacheStack>>,
+        chaos: Option<Arc<NetChaos>>,
+    ) -> io::Result<TcpPeerServer> {
+        let listener = TcpListener::bind(listen)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stop = shutdown.clone();
+        let caches = Arc::new(caches);
+        let accept_thread = thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                match listener.accept() {
+                    Ok((mut conn, _)) => {
+                        if let Some(c) = &chaos {
+                            if c.next_accept_refuse() {
+                                // Hang up immediately: the dialer sees
+                                // a reset/EOF and enters its backoff.
+                                drop(conn);
+                                continue;
+                            }
+                        }
+                        let _ = conn.set_nodelay(true);
+                        let caches = caches.clone();
+                        let stop = stop.clone();
+                        let chaos = chaos.clone();
+                        thread::spawn(move || {
+                            serve_stream(
+                                &mut conn,
+                                &caches,
+                                &stop,
+                                Codec::Crc32,
+                                chaos.as_deref(),
+                            )
+                        });
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(TcpPeerServer {
+            addr,
+            shutdown,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// The bound address (publish this to peers — via the rendezvous
+    /// address file on one host, or operator config across hosts).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for TcpPeerServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::Policy;
+    use crate::fault::netchaos::{NetChaosSpec, Partition};
+    use crate::storage::Sample;
+
+    fn stack_with(ids: &[(u32, u16, Vec<u8>)]) -> Arc<CacheStack> {
+        let stack = Arc::new(CacheStack::mem_only(u64::MAX, Policy::InsertOnly));
+        for (id, label, bytes) in ids {
+            stack.insert(Arc::new(Sample {
+                id: *id,
+                bytes: bytes.clone().into(),
+                label: *label,
+            }));
+        }
+        stack
+    }
+
+    fn fast_tuning() -> NetTuning {
+        NetTuning {
+            reconnect_base: Duration::from_micros(100),
+            reconnect_cap: Duration::from_millis(2),
+            ..NetTuning::default()
+        }
+    }
+
+    fn serve_one(learner: usize, samples: &[(u32, u16, Vec<u8>)]) -> (TcpPeerServer, String) {
+        let mut caches = HashMap::new();
+        caches.insert(learner, stack_with(samples));
+        let server = TcpPeerServer::start("127.0.0.1:0", caches, None).unwrap();
+        let addr = server.local_addr().to_string();
+        (server, addr)
+    }
+
+    #[test]
+    fn tcp_serves_hits_and_misses_over_loopback() {
+        let (_server, addr) = serve_one(3, &[(10, 4, vec![1, 2, 3]), (11, 5, vec![9])]);
+        let peers = TcpPeers::new(
+            0,
+            2,
+            vec![PeerAddr::Static("127.0.0.1:1".into()), PeerAddr::Static(addr)],
+            fast_tuning(),
+        );
+        assert!(!peers.serves_local(3));
+        assert!(peers.serves_local(1));
+        let out = peers
+            .fetch_from_owner(3, &[10, 99, 11], Some(Duration::from_secs(5)))
+            .unwrap();
+        assert_eq!(out[0], Some((4, vec![1, 2, 3])));
+        assert_eq!(out[1], None);
+        assert_eq!(out[2], Some((5, vec![9])));
+        assert_eq!(peers.peer_health(1), Some(PeerHealth::Connected));
+        // And the cached connection is reused for a second exchange.
+        let out = peers
+            .fetch_from_owner(3, &[11], Some(Duration::from_secs(5)))
+            .unwrap();
+        assert_eq!(out[0], Some((5, vec![9])));
+    }
+
+    #[test]
+    fn address_file_rendezvous_resolves_the_bound_port() {
+        let (_server, addr) = serve_one(1, &[(7, 2, vec![0xAA])]);
+        let dir = std::env::temp_dir().join(format!(
+            "dlio-tcp-rdv-{}-{:?}",
+            std::process::id(),
+            thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let file = TcpPeers::addr_file(&dir, 1);
+        std::fs::write(&file, format!("{addr}\n")).unwrap();
+        let peers = TcpPeers::new(
+            0,
+            1,
+            vec![PeerAddr::File(TcpPeers::addr_file(&dir, 0)), PeerAddr::File(file)],
+            fast_tuning(),
+        );
+        let out = peers
+            .fetch_from_owner(1, &[7], Some(Duration::from_secs(5)))
+            .unwrap();
+        assert_eq!(out[0], Some((2, vec![0xAA])));
+        // Rank 0's file was never written: peer-closed, not a panic.
+        let err = peers.fetch_from_owner(0, &[7], None).unwrap_err();
+        assert!(matches!(err, TransportError::PeerClosed { peer: 0 }), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_frames_surface_typed_errors_then_recover() {
+        let mut caches = HashMap::new();
+        caches.insert(1usize, stack_with(&[(5, 9, vec![0xEE; 64])]));
+        // Tear every second response: fetches alternate between typed
+        // failures and clean recoveries through the backoff window.
+        let chaos = Arc::new(NetChaos::new(NetChaosSpec {
+            seed: 11,
+            tear_every: 2,
+            ..NetChaosSpec::default()
+        }));
+        let server =
+            TcpPeerServer::start("127.0.0.1:0", caches, Some(chaos.clone())).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut peers = TcpPeers::new(
+            0,
+            1,
+            vec![PeerAddr::Static("127.0.0.1:1".into()), PeerAddr::Static(addr)],
+            fast_tuning(),
+        );
+        peers.set_chaos(Some(chaos.clone()));
+        let (mut oks, mut fails) = (0u32, 0u32);
+        for _ in 0..24 {
+            match peers.fetch_from_owner(1, &[5], Some(Duration::from_secs(2))) {
+                Ok(out) => {
+                    // A success is always the true bytes — a torn frame
+                    // can fail the fetch but never corrupt a result.
+                    assert_eq!(out[0], Some((9, vec![0xEE; 64])));
+                    oks += 1;
+                }
+                Err(e) => {
+                    assert!(
+                        matches!(
+                            e,
+                            TransportError::PeerClosed { .. }
+                                | TransportError::ShortRead { .. }
+                                | TransportError::Stall(_)
+                        ),
+                        "unexpected error class: {e}"
+                    );
+                    fails += 1;
+                }
+            }
+            // Let the (millisecond-scale) backoff window lapse.
+            thread::sleep(Duration::from_millis(3));
+        }
+        assert!(oks > 0, "some fetches must survive");
+        assert!(fails > 0, "some fetches must hit the tear");
+        assert!(chaos.counters().tears > 0);
+    }
+
+    #[test]
+    fn bit_flips_are_rejected_by_the_crc_never_accepted() {
+        let mut caches = HashMap::new();
+        caches.insert(1usize, stack_with(&[(5, 9, vec![0xAB; 128])]));
+        let chaos = Arc::new(NetChaos::new(NetChaosSpec {
+            seed: 3,
+            flip_every: 1,
+            ..NetChaosSpec::default()
+        }));
+        let server =
+            TcpPeerServer::start("127.0.0.1:0", caches, Some(chaos.clone())).unwrap();
+        let addr = server.local_addr().to_string();
+        let peers = TcpPeers::new(
+            0,
+            1,
+            vec![PeerAddr::Static("127.0.0.1:1".into()), PeerAddr::Static(addr)],
+            fast_tuning(),
+        );
+        let err = peers
+            .fetch_from_owner(1, &[5], Some(Duration::from_secs(2)))
+            .unwrap_err();
+        assert!(matches!(err, TransportError::Corrupt { .. }), "{err}");
+        assert!(chaos.counters().flips >= 1);
+    }
+
+    #[test]
+    fn refused_accepts_are_peer_closed_and_backoff_gated() {
+        let mut caches = HashMap::new();
+        caches.insert(1usize, stack_with(&[(5, 9, vec![1])]));
+        let chaos = Arc::new(NetChaos::new(NetChaosSpec {
+            seed: 1,
+            accept_refuse_every: 1,
+            ..NetChaosSpec::default()
+        }));
+        let server =
+            TcpPeerServer::start("127.0.0.1:0", caches, Some(chaos.clone())).unwrap();
+        let addr = server.local_addr().to_string();
+        let peers = TcpPeers::new(
+            0,
+            1,
+            vec![PeerAddr::Static("127.0.0.1:1".into()), PeerAddr::Static(addr)],
+            NetTuning {
+                reconnect_base: Duration::from_secs(5),
+                reconnect_cap: Duration::from_secs(5),
+                ..NetTuning::default()
+            },
+        );
+        let err = peers
+            .fetch_from_owner(1, &[5], Some(Duration::from_secs(2)))
+            .unwrap_err();
+        assert!(matches!(err, TransportError::PeerClosed { peer: 1 }), "{err}");
+        assert!(chaos.counters().refused_accepts >= 1);
+        // The failure opened a backoff window: the next call refuses
+        // fail-fast (storage fallback) instead of dialing again.
+        assert_eq!(peers.peer_health(1), Some(PeerHealth::Reconnecting));
+        let before = chaos.counters().refused_accepts;
+        let err = peers.fetch_from_owner(1, &[5], None).unwrap_err();
+        assert!(matches!(err, TransportError::PeerClosed { peer: 1 }));
+        assert_eq!(
+            chaos.counters().refused_accepts,
+            before,
+            "a backoff-gated fetch must not touch the network"
+        );
+    }
+
+    #[test]
+    fn partitions_refuse_without_poisoning_health() {
+        let (_server, addr) = serve_one(1, &[(5, 9, vec![0x42])]);
+        let chaos = Arc::new(NetChaos::new(NetChaosSpec {
+            partitions: vec![Partition { a: 0, b: 1, from_gstep: 5, to_gstep: 10 }],
+            ..NetChaosSpec::default()
+        }));
+        let mut peers = TcpPeers::new(
+            0,
+            1,
+            vec![PeerAddr::Static("127.0.0.1:1".into()), PeerAddr::Static(addr)],
+            NetTuning {
+                // A huge backoff base: if the partition wrongly entered
+                // the health machine, recovery below would hang.
+                reconnect_base: Duration::from_secs(30),
+                reconnect_cap: Duration::from_secs(30),
+                ..NetTuning::default()
+            },
+        );
+        peers.set_chaos(Some(chaos.clone()));
+        chaos.observe_step(6);
+        let err = peers
+            .fetch_from_owner(1, &[5], Some(Duration::from_secs(2)))
+            .unwrap_err();
+        assert!(matches!(err, TransportError::PeerClosed { peer: 1 }), "{err}");
+        assert_eq!(
+            peers.peer_health(1),
+            Some(PeerHealth::Connected),
+            "a partition is a path failure, not a peer-health event"
+        );
+        // Window closes: the very next fetch succeeds with no residual
+        // backoff and membership never saw the rank as dead.
+        chaos.observe_step(10);
+        let out = peers
+            .fetch_from_owner(1, &[5], Some(Duration::from_secs(5)))
+            .unwrap();
+        assert_eq!(out[0], Some((9, vec![0x42])));
+        assert!(chaos.counters().partitioned_fetches >= 1);
+    }
+}

@@ -1,12 +1,13 @@
 //! Real-transport backends for owner-to-owner sample transfers
-//! (DESIGN.md §13).
+//! (DESIGN.md §13/§14).
 //!
 //! The in-process [`Fabric`](super::Fabric) stays the fast deterministic
 //! tier: virtual-time link clocks, no syscalls, bit-identical accounting.
 //! This module adds the live tier used by the supervised multi-process
 //! mode: each learner-group process serves its cache over a Unix-domain
-//! socket with a length-prefixed frame codec, and the fetch path routes
-//! any owner group whose owner lives in *another* process through a
+//! socket (same host) or TCP ([`crate::net::tcp`], multi-host) with a
+//! length-prefixed frame codec, and the fetch path routes any owner
+//! group whose owner lives in *another* process through a
 //! [`PeerTransport`] installed on the fabric. Deadlines map onto the
 //! existing [`fault::Deadlines`](crate::fault::Deadlines) budgets: a
 //! read/write that exceeds its budget surfaces as a
@@ -15,18 +16,50 @@
 //! the PR 7 recovery path — evict claims, fall back to storage, mark the
 //! peer dead — handles both tiers with one code path.
 //!
-//! ## Frame format
+//! ## Frame formats
 //!
-//! Every message on every socket (peer and control) is one frame:
+//! Every message on every socket (peer and control) is one frame. The
+//! plain codec (UDS — the kernel guarantees stream integrity):
 //!
 //! ```text
 //! [len: u32 LE] [kind: u8] [payload: len-1 bytes]
 //! ```
 //!
-//! `len` counts the kind byte plus the payload and is capped at
-//! [`MAX_FRAME`]; a frame that announces more is malformed, not a reason
-//! to allocate. Multi-byte integers inside payloads are little-endian
-//! (see [`Wire`]/[`WireReader`]).
+//! The CRC codec (TCP — bytes cross real, lossy networks) appends a
+//! CRC-32 (ISO-HDLC) trailer over the kind byte plus payload:
+//!
+//! ```text
+//! [len: u32 LE] [kind: u8] [payload: len-1 bytes] [crc32: u32 LE]
+//! ```
+//!
+//! `len` counts the kind byte plus the payload (never the trailer) and
+//! is capped at [`MAX_FRAME`]; a frame that announces more is a typed
+//! [`TransportError::FrameTooLarge`], not a reason to allocate. A frame
+//! that ends early is a typed [`TransportError::ShortRead`]; a frame
+//! whose trailer disagrees with its bytes is a typed
+//! [`TransportError::Corrupt`]. None of them is ever a panic or a
+//! silently-accepted corruption. Multi-byte integers inside payloads are
+//! little-endian (see [`Wire`]/[`WireReader`]).
+//!
+//! ## Peer health (DESIGN.md §14)
+//!
+//! Every live transport tracks one [`PeerState`] per peer rank:
+//!
+//! ```text
+//! Connected ──stall──▶ Degraded ──disconnect──▶ Reconnecting ──┐
+//!     ▲  ▲                                          │ backoff  │
+//!     │  └────────────── success ◀──────────────────┘          │
+//!     └── mark_alive (epoch-boundary rejoin)    mark_dead ──▶ Dead
+//! ```
+//!
+//! Only the membership layer moves a peer to `Dead` (and only
+//! `mark_alive` revives it — clearing the failure counter, the backoff
+//! deadline, *and* the stale cached connection, so a revived peer is
+//! redialed fresh instead of refused forever). `Reconnecting` peers are
+//! refused fail-fast while their jittered-exponential backoff window
+//! (the PR 7 retry policy, [`crate::fault::backoff_with`]) is open; the
+//! caller's CAS-repair → storage-fallback path turns that refusal into
+//! degraded throughput, never an error.
 //!
 //! ## Shared-memory ring (feature `shm-ring`)
 //!
@@ -39,15 +72,17 @@
 //! ring is an optimization, never a correctness dependency.
 
 use crate::cache::CacheStack;
-use crate::fault::{StallError, StallKind};
+use crate::fault::netchaos::NetChaos;
+use crate::fault::{backoff_with, StallError, StallKind};
 use std::collections::HashMap;
 use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Hard cap on a single frame (header-declared), peer and control alike.
 pub const MAX_FRAME: usize = 64 << 20;
@@ -67,6 +102,9 @@ pub enum TransportKind {
     InProc,
     /// Unix-domain sockets with inline frame payloads.
     Uds,
+    /// TCP sockets with CRC-trailered frames — same host (loopback) or
+    /// multi-host, unchanged.
+    Tcp,
     /// UDS control frames + shared-memory payload ring (`shm-ring`
     /// feature; falls back to inline frames when the ring is full).
     #[cfg(feature = "shm-ring")]
@@ -79,6 +117,7 @@ impl TransportKind {
         match s {
             "inproc" | "threads" => Some(TransportKind::InProc),
             "uds" => Some(TransportKind::Uds),
+            "tcp" => Some(TransportKind::Tcp),
             #[cfg(feature = "shm-ring")]
             "shm" => Some(TransportKind::Shm),
             _ => None,
@@ -89,6 +128,7 @@ impl TransportKind {
         match self {
             TransportKind::InProc => "inproc",
             TransportKind::Uds => "uds",
+            TransportKind::Tcp => "tcp",
             #[cfg(feature = "shm-ring")]
             TransportKind::Shm => "shm",
         }
@@ -105,6 +145,18 @@ pub enum TransportError {
     /// The peer's socket reached EOF (or refused the connection): the
     /// process died or was killed. Routed into the membership path.
     PeerClosed { peer: usize },
+    /// A frame header declared more than [`MAX_FRAME`] bytes — either a
+    /// corrupted length word or a peer speaking another protocol. Never
+    /// a reason to allocate.
+    FrameTooLarge { declared: u64 },
+    /// A frame ended early: the stream died (or timed out) mid-frame
+    /// after `got` of `needed` body bytes. A torn frame is always
+    /// distinguishable from a clean close at a frame boundary.
+    ShortRead { needed: usize, got: usize, timed_out: bool },
+    /// The CRC trailer disagrees with the frame bytes: corruption on the
+    /// wire (or a torn write spliced with a later frame). `expected` is
+    /// the locally computed checksum, `got` the trailer.
+    Corrupt { expected: u32, got: u32 },
     /// Any other socket-level error.
     Io(io::Error),
     /// The peer spoke, but not the protocol.
@@ -118,6 +170,16 @@ impl std::fmt::Display for TransportError {
             TransportError::PeerClosed { peer } => {
                 write!(f, "peer process {peer} closed the connection")
             }
+            TransportError::FrameTooLarge { declared } => {
+                write!(f, "frame header declares {declared} bytes (cap {MAX_FRAME})")
+            }
+            TransportError::ShortRead { needed, got, timed_out } => {
+                let how = if *timed_out { "timed out" } else { "hit eof" };
+                write!(f, "short read: {how} after {got} of {needed} frame bytes")
+            }
+            TransportError::Corrupt { expected, got } => {
+                write!(f, "frame crc mismatch: computed {expected:#010x}, trailer {got:#010x}")
+            }
             TransportError::Io(e) => write!(f, "transport i/o error: {e}"),
             TransportError::Malformed(what) => write!(f, "malformed frame: {what}"),
         }
@@ -130,15 +192,10 @@ impl TransportError {
     /// Classify an `io::Error` from a deadlined socket operation on the
     /// link to `peer`: timeouts become transfer stalls charged at the
     /// full budget, EOF becomes peer death.
-    fn from_io(e: io::Error, peer: usize, deadline: Option<Duration>) -> TransportError {
+    pub(crate) fn from_io(e: io::Error, peer: usize, deadline: Option<Duration>) -> TransportError {
         match e.kind() {
             io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => {
-                let budget = deadline.unwrap_or(Duration::ZERO);
-                TransportError::Stall(StallError {
-                    kind: StallKind::Transfer,
-                    waited: budget,
-                    deadline: budget,
-                })
+                TransportError::Stall(transfer_stall(deadline))
             }
             io::ErrorKind::UnexpectedEof
             | io::ErrorKind::ConnectionReset
@@ -148,9 +205,89 @@ impl TransportError {
             _ => TransportError::Io(e),
         }
     }
+
+    /// Classify a raw codec error for the recovery path on the link to
+    /// `peer`: timeouts (idle or mid-frame) become transfer stalls, EOF
+    /// and torn frames become peer death, everything else passes
+    /// through already typed.
+    pub fn classify(self, peer: usize, deadline: Option<Duration>) -> TransportError {
+        match self {
+            TransportError::Io(e) => TransportError::from_io(e, peer, deadline),
+            TransportError::ShortRead { timed_out: true, .. } => {
+                TransportError::Stall(transfer_stall(deadline))
+            }
+            TransportError::ShortRead { .. } => TransportError::PeerClosed { peer },
+            other => other,
+        }
+    }
 }
 
-/// Write one `[len][kind][payload]` frame.
+fn transfer_stall(deadline: Option<Duration>) -> StallError {
+    let budget = deadline.unwrap_or(Duration::ZERO);
+    StallError { kind: StallKind::Transfer, waited: budget, deadline: budget }
+}
+
+// ---------------------------------------------------------------------------
+// Frame codecs
+// ---------------------------------------------------------------------------
+
+/// Fill `buf`, retrying `EINTR` and accumulating partial reads. At a
+/// frame boundary (`at_boundary`, i.e. the first header byte), zero
+/// bytes followed by EOF is a *clean* close (`Io(UnexpectedEof)`) and
+/// zero bytes followed by a timeout is an *idle* poll (`Io(WouldBlock)`
+/// / `Io(TimedOut)`, the caller may keep polling). Anywhere else, both
+/// are a torn frame: a typed [`TransportError::ShortRead`].
+fn read_full(r: &mut impl Read, buf: &mut [u8], at_boundary: bool) -> Result<(), TransportError> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 && at_boundary {
+                    return Err(TransportError::Io(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "eof at frame boundary",
+                    )));
+                }
+                return Err(TransportError::ShortRead {
+                    needed: buf.len(),
+                    got,
+                    timed_out: false,
+                });
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                if got == 0 && at_boundary {
+                    return Err(TransportError::Io(e));
+                }
+                return Err(TransportError::ShortRead {
+                    needed: buf.len(),
+                    got,
+                    timed_out: true,
+                });
+            }
+            Err(e) => return Err(TransportError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Validate a frame header's declared length.
+fn frame_len(len4: [u8; 4]) -> Result<usize, TransportError> {
+    let len = u32::from_le_bytes(len4) as u64;
+    if len == 0 {
+        return Err(TransportError::Malformed("bad frame length"));
+    }
+    if len > MAX_FRAME as u64 {
+        return Err(TransportError::FrameTooLarge { declared: len });
+    }
+    Ok(len as usize)
+}
+
+/// Write one plain `[len][kind][payload]` frame.
 pub fn write_frame(w: &mut impl Write, kind: u8, payload: &[u8]) -> io::Result<()> {
     let len = payload.len() + 1;
     if len > MAX_FRAME {
@@ -162,21 +299,107 @@ pub fn write_frame(w: &mut impl Write, kind: u8, payload: &[u8]) -> io::Result<(
     w.flush()
 }
 
-/// Read one frame; EOF at a frame boundary surfaces as
-/// `ErrorKind::UnexpectedEof` (the caller decides whether that boundary
-/// was clean).
-pub fn read_frame(r: &mut impl Read) -> io::Result<(u8, Vec<u8>)> {
+/// Read one plain frame. EOF at a frame boundary surfaces as
+/// `Io(UnexpectedEof)` (the caller decides whether that boundary was
+/// clean); every other failure is a typed [`TransportError`].
+pub fn read_frame(r: &mut impl Read) -> Result<(u8, Vec<u8>), TransportError> {
     let mut len4 = [0u8; 4];
-    r.read_exact(&mut len4)?;
-    let len = u32::from_le_bytes(len4) as usize;
-    if len == 0 || len > MAX_FRAME {
-        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad frame length"));
+    read_full(r, &mut len4, true)?;
+    let len = frame_len(len4)?;
+    let mut body = vec![0u8; len];
+    read_full(r, &mut body, false)?;
+    let payload = body.split_off(1);
+    Ok((body[0], payload))
+}
+
+/// CRC-32 (ISO-HDLC, reflected polynomial `0xEDB88320`) lookup table,
+/// built at compile time — the variant every zlib/ethernet stack uses,
+/// so the check value for `b"123456789"` is the canonical `0xCBF43926`.
+const CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
     }
-    let mut kind = [0u8; 1];
-    r.read_exact(&mut kind)?;
-    let mut payload = vec![0u8; len - 1];
-    r.read_exact(&mut payload)?;
-    Ok((kind[0], payload))
+    table
+}
+
+fn crc32_feed(mut c: u32, data: &[u8]) -> u32 {
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c
+}
+
+/// CRC-32/ISO-HDLC of `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    !crc32_feed(!0u32, data)
+}
+
+/// Write one CRC-trailered `[len][kind][payload][crc32]` frame; the
+/// trailer covers the kind byte plus the payload.
+pub fn write_frame_crc(w: &mut impl Write, kind: u8, payload: &[u8]) -> io::Result<()> {
+    let len = payload.len() + 1;
+    if len > MAX_FRAME {
+        return Err(io::Error::new(io::ErrorKind::InvalidInput, "frame too large"));
+    }
+    let crc = !crc32_feed(crc32_feed(!0u32, &[kind]), payload);
+    w.write_all(&(len as u32).to_le_bytes())?;
+    w.write_all(&[kind])?;
+    w.write_all(payload)?;
+    w.write_all(&crc.to_le_bytes())?;
+    w.flush()
+}
+
+/// Read one CRC-trailered frame; a trailer mismatch is a typed
+/// [`TransportError::Corrupt`], never silently-accepted corruption.
+pub fn read_frame_crc(r: &mut impl Read) -> Result<(u8, Vec<u8>), TransportError> {
+    let mut len4 = [0u8; 4];
+    read_full(r, &mut len4, true)?;
+    let len = frame_len(len4)?;
+    let mut body = vec![0u8; len + 4];
+    read_full(r, &mut body, false)?;
+    let trailer = u32::from_le_bytes(body[len..].try_into().unwrap());
+    let computed = crc32(&body[..len]);
+    if computed != trailer {
+        return Err(TransportError::Corrupt { expected: computed, got: trailer });
+    }
+    body.truncate(len);
+    let payload = body.split_off(1);
+    Ok((body[0], payload))
+}
+
+/// Which frame codec a stream speaks: plain for kernel-checked local
+/// streams (UDS), CRC-trailered for bytes that cross real networks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    Plain,
+    Crc32,
+}
+
+impl Codec {
+    pub fn write(self, w: &mut impl Write, kind: u8, payload: &[u8]) -> io::Result<()> {
+        match self {
+            Codec::Plain => write_frame(w, kind, payload),
+            Codec::Crc32 => write_frame_crc(w, kind, payload),
+        }
+    }
+
+    pub fn read(self, r: &mut impl Read) -> Result<(u8, Vec<u8>), TransportError> {
+        match self {
+            Codec::Plain => read_frame(r),
+            Codec::Crc32 => read_frame_crc(r),
+        }
+    }
 }
 
 /// Little-endian payload writer.
@@ -290,6 +513,360 @@ impl<'a> WireReader<'a> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Peer health state machine (DESIGN.md §14)
+// ---------------------------------------------------------------------------
+
+/// Connection-pool health of one peer rank. See the module docs for the
+/// transition diagram.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeerHealth {
+    /// Last exchange succeeded (or the peer has never been dialed).
+    Connected,
+    /// The peer answers but blew a deadline: served, but slow.
+    Degraded,
+    /// The connection dropped; redials are gated by jittered
+    /// exponential backoff and refused fail-fast while it is open.
+    Reconnecting,
+    /// Excised by the membership layer. Only [`PeerState::mark_alive`]
+    /// (an epoch-boundary rejoin) leaves this state.
+    Dead,
+}
+
+const H_CONNECTED: u8 = 0;
+const H_DEGRADED: u8 = 1;
+const H_RECONNECTING: u8 = 2;
+const H_DEAD: u8 = 3;
+
+/// Shared per-peer connection health: the one state machine behind both
+/// [`UdsPeers`] and [`crate::net::tcp::TcpPeers`]. Failure observations
+/// never promote a peer to `Dead` on their own — only the membership
+/// path does that — so a flaky-but-alive peer degrades to backoff-gated
+/// reconnects (and storage fallback in between), while a truly dead one
+/// is excised exactly once, by the coordinator.
+pub struct PeerState {
+    health: AtomicU8,
+    failures: AtomicU32,
+    retry_at: Mutex<Option<Instant>>,
+}
+
+impl Default for PeerState {
+    fn default() -> Self {
+        PeerState::new()
+    }
+}
+
+impl PeerState {
+    pub fn new() -> PeerState {
+        PeerState {
+            health: AtomicU8::new(H_CONNECTED),
+            failures: AtomicU32::new(0),
+            retry_at: Mutex::new(None),
+        }
+    }
+
+    pub fn health(&self) -> PeerHealth {
+        match self.health.load(Ordering::Acquire) {
+            H_DEGRADED => PeerHealth::Degraded,
+            H_RECONNECTING => PeerHealth::Reconnecting,
+            H_DEAD => PeerHealth::Dead,
+            _ => PeerHealth::Connected,
+        }
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.health.load(Ordering::Acquire) == H_DEAD
+    }
+
+    /// Consecutive failures since the last success (drives the backoff
+    /// exponent).
+    pub fn failures(&self) -> u32 {
+        self.failures.load(Ordering::Relaxed)
+    }
+
+    /// True while a `Reconnecting` peer's backoff window is still open:
+    /// the caller should refuse fail-fast instead of dialing.
+    pub fn in_backoff(&self) -> bool {
+        if self.health.load(Ordering::Acquire) != H_RECONNECTING {
+            return false;
+        }
+        matches!(*self.retry_at.lock().unwrap(), Some(t) if Instant::now() < t)
+    }
+
+    fn set_unless_dead(&self, h: u8) {
+        // A racing mark_dead wins: membership is authoritative.
+        let mut cur = self.health.load(Ordering::Acquire);
+        while cur != H_DEAD && cur != h {
+            match self.health.compare_exchange_weak(
+                cur,
+                h,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// An exchange completed: back to `Connected`, counter and backoff
+    /// cleared (unless membership declared the peer dead meanwhile).
+    pub fn note_success(&self) {
+        self.failures.store(0, Ordering::Relaxed);
+        *self.retry_at.lock().unwrap() = None;
+        self.set_unless_dead(H_CONNECTED);
+    }
+
+    /// An exchange blew its deadline but the connection may be fine:
+    /// `Degraded`, no backoff (the per-call deadline already bounds the
+    /// damage).
+    pub fn note_stall(&self) {
+        self.set_unless_dead(H_DEGRADED);
+    }
+
+    /// The connection dropped (EOF, refused dial, torn frame):
+    /// `Reconnecting`, with the next dial gated by jittered exponential
+    /// backoff — attempt k waits `base·2^k` ± 25%, capped at `cap`
+    /// (the PR 7 retry policy, [`backoff_with`]).
+    pub fn note_disconnect(&self, salt: u64, base: Duration, cap: Duration) {
+        let n = self.failures.fetch_add(1, Ordering::Relaxed).saturating_add(1);
+        let wait = backoff_with(n as usize, salt, base.as_micros() as u64, cap);
+        *self.retry_at.lock().unwrap() = Some(Instant::now() + wait.min(cap));
+        self.set_unless_dead(H_RECONNECTING);
+    }
+
+    /// Membership hook: the peer was excised. Terminal until
+    /// [`PeerState::mark_alive`].
+    pub fn mark_dead(&self) {
+        self.health.store(H_DEAD, Ordering::Release);
+    }
+
+    /// Membership hook: the peer rejoined at an epoch boundary. Clears
+    /// the dead mark, the failure counter, *and* the backoff deadline —
+    /// a revived peer starts from a clean slate instead of inheriting
+    /// the backoff (or refusal) earned by its previous incarnation.
+    pub fn mark_alive(&self) {
+        self.failures.store(0, Ordering::Relaxed);
+        *self.retry_at.lock().unwrap() = None;
+        self.health.store(H_CONNECTED, Ordering::Release);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Validated network tuning (satellite: TrainerConfig surface)
+// ---------------------------------------------------------------------------
+
+/// Network-layer tuning knobs, validated at the configuration boundary
+/// (like `LoaderConfig::normalized()`): zero or absurd values are
+/// rejected before any socket is opened, not discovered mid-run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NetTuning {
+    /// Worker heartbeat send period.
+    pub hb_interval: Duration,
+    /// Coordinator silence budget before a rank is declared dead.
+    pub hb_timeout: Duration,
+    /// Per-call budget for one peer fetch exchange.
+    pub transfer_deadline: Duration,
+    /// Base of the jittered-exponential reconnect backoff.
+    pub reconnect_base: Duration,
+    /// Cap on a single reconnect backoff window.
+    pub reconnect_cap: Duration,
+}
+
+impl Default for NetTuning {
+    fn default() -> NetTuning {
+        NetTuning {
+            hb_interval: Duration::from_millis(50),
+            hb_timeout: Duration::from_secs(5),
+            transfer_deadline: Duration::from_secs(5),
+            reconnect_base: Duration::from_millis(50),
+            reconnect_cap: Duration::from_secs(2),
+        }
+    }
+}
+
+impl NetTuning {
+    /// Reject zero/absurd values at the boundary. Returns `self` so
+    /// call sites can write `cfg.net.validated()?`.
+    pub fn validated(self) -> anyhow::Result<NetTuning> {
+        anyhow::ensure!(
+            self.hb_interval > Duration::ZERO && self.hb_interval <= Duration::from_secs(60),
+            "heartbeat interval must be in (0s, 60s], got {:?}",
+            self.hb_interval
+        );
+        anyhow::ensure!(
+            self.hb_timeout >= self.hb_interval.saturating_mul(2),
+            "heartbeat timeout {:?} must be at least twice the interval {:?}",
+            self.hb_timeout,
+            self.hb_interval
+        );
+        anyhow::ensure!(
+            self.hb_timeout <= Duration::from_secs(600),
+            "heartbeat timeout must be at most 600s, got {:?}",
+            self.hb_timeout
+        );
+        anyhow::ensure!(
+            self.transfer_deadline > Duration::ZERO
+                && self.transfer_deadline <= Duration::from_secs(600),
+            "transfer deadline must be in (0s, 600s], got {:?}",
+            self.transfer_deadline
+        );
+        anyhow::ensure!(
+            self.reconnect_base > Duration::ZERO,
+            "reconnect backoff base must be positive"
+        );
+        anyhow::ensure!(
+            self.reconnect_base <= self.reconnect_cap
+                && self.reconnect_cap <= Duration::from_secs(60),
+            "reconnect backoff cap must be in [base, 60s], got base {:?} cap {:?}",
+            self.reconnect_base,
+            self.reconnect_cap
+        );
+        Ok(self)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Control-plane connection abstraction (UDS or TCP)
+// ---------------------------------------------------------------------------
+
+enum CtrlStream {
+    Uds(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Read for CtrlStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            CtrlStream::Uds(s) => s.read(buf),
+            CtrlStream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for CtrlStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            CtrlStream::Uds(s) => s.write(buf),
+            CtrlStream::Tcp(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            CtrlStream::Uds(s) => s.flush(),
+            CtrlStream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// One control-plane connection: a UDS or TCP stream plus the frame
+/// codec it speaks (plain on UDS, CRC-trailered on TCP). The
+/// coordinator and the workers exchange the same frames either way; the
+/// transport choice never leaks into the protocol.
+pub struct Conn {
+    stream: CtrlStream,
+    codec: Codec,
+}
+
+impl Conn {
+    pub fn uds(s: UnixStream) -> Conn {
+        Conn { stream: CtrlStream::Uds(s), codec: Codec::Plain }
+    }
+
+    pub fn tcp(s: TcpStream) -> Conn {
+        let _ = s.set_nodelay(true);
+        Conn { stream: CtrlStream::Tcp(s), codec: Codec::Crc32 }
+    }
+
+    /// One dial attempt to a UDS control socket.
+    pub fn connect_uds(path: &Path) -> io::Result<Conn> {
+        Ok(Conn::uds(UnixStream::connect(path)?))
+    }
+
+    /// One dial attempt to a TCP control address (`host:port`).
+    pub fn connect_tcp(addr: &str) -> io::Result<Conn> {
+        Ok(Conn::tcp(TcpStream::connect(addr)?))
+    }
+
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    pub fn try_clone(&self) -> io::Result<Conn> {
+        let stream = match &self.stream {
+            CtrlStream::Uds(s) => CtrlStream::Uds(s.try_clone()?),
+            CtrlStream::Tcp(s) => CtrlStream::Tcp(s.try_clone()?),
+        };
+        Ok(Conn { stream, codec: self.codec })
+    }
+
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match &self.stream {
+            CtrlStream::Uds(s) => s.set_read_timeout(d),
+            CtrlStream::Tcp(s) => s.set_read_timeout(d),
+        }
+    }
+
+    pub fn set_write_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match &self.stream {
+            CtrlStream::Uds(s) => s.set_write_timeout(d),
+            CtrlStream::Tcp(s) => s.set_write_timeout(d),
+        }
+    }
+
+    pub fn read_frame(&mut self) -> Result<(u8, Vec<u8>), TransportError> {
+        self.codec.read(&mut self.stream)
+    }
+
+    pub fn write_frame(&mut self, kind: u8, payload: &[u8]) -> io::Result<()> {
+        self.codec.write(&mut self.stream, kind, payload)
+    }
+}
+
+/// The coordinator's control-plane listener: UDS on one host, TCP for
+/// multi-host (bound before any worker spawns, so the first dial never
+/// races the bind).
+pub enum CtrlListener {
+    Uds(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl CtrlListener {
+    pub fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            CtrlListener::Uds(l) => l.set_nonblocking(nb),
+            CtrlListener::Tcp(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    /// Accept one control connection with the listener's codec applied.
+    pub fn accept(&self) -> io::Result<Conn> {
+        match self {
+            CtrlListener::Uds(l) => {
+                let (s, _) = l.accept()?;
+                Ok(Conn::uds(s))
+            }
+            CtrlListener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                Ok(Conn::tcp(s))
+            }
+        }
+    }
+
+    /// The bound TCP address (for `--ctrl-addr` hand-off); `None` on
+    /// UDS.
+    pub fn tcp_addr(&self) -> Option<SocketAddr> {
+        match self {
+            CtrlListener::Uds(_) => None,
+            CtrlListener::Tcp(l) => l.local_addr().ok(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Peer transport trait + UDS implementation
+// ---------------------------------------------------------------------------
+
 /// A live backend for cross-process owner fetches, installed on the
 /// fabric with [`Fabric::set_transport`](super::Fabric::set_transport).
 /// Learner ids are *global* (rank-major: learner `l` lives in process
@@ -320,10 +897,11 @@ pub trait PeerTransport: Send + Sync {
 
 struct PeerSlot {
     conn: Mutex<Option<UnixStream>>,
-    dead: AtomicBool,
+    state: PeerState,
 }
 
-/// UDS client: one lazily-dialed, cached connection per peer rank.
+/// UDS client: one lazily-dialed, cached connection per peer rank, with
+/// a [`PeerState`] health machine gating the dials.
 ///
 /// Connections are re-dialed once per fetch if the cached stream fails
 /// *before any response byte is read* (a stale socket from a peer
@@ -336,27 +914,41 @@ pub struct UdsPeers {
     g: usize,
     paths: Vec<PathBuf>,
     slots: Vec<PeerSlot>,
+    backoff_base: Duration,
+    backoff_cap: Duration,
 }
 
 impl UdsPeers {
     pub fn new(my_rank: usize, learners_per_rank: usize, paths: Vec<PathBuf>) -> UdsPeers {
+        let tuning = NetTuning::default();
         let slots = (0..paths.len())
-            .map(|_| PeerSlot {
-                conn: Mutex::new(None),
-                dead: AtomicBool::new(false),
-            })
+            .map(|_| PeerSlot { conn: Mutex::new(None), state: PeerState::new() })
             .collect();
         UdsPeers {
             my_rank,
             g: learners_per_rank.max(1),
             paths,
             slots,
+            backoff_base: tuning.reconnect_base,
+            backoff_cap: tuning.reconnect_cap,
         }
+    }
+
+    /// Override the reconnect backoff window (from [`NetTuning`]).
+    pub fn with_backoff(mut self, base: Duration, cap: Duration) -> UdsPeers {
+        self.backoff_base = base;
+        self.backoff_cap = cap.max(base);
+        self
     }
 
     /// The socket path a given rank's peer server binds.
     pub fn peer_path(rendezvous: &Path, rank: usize) -> PathBuf {
         rendezvous.join(format!("peer-{rank}.sock"))
+    }
+
+    /// Health of the link to `rank` (observability + tests).
+    pub fn peer_health(&self, rank: usize) -> Option<PeerHealth> {
+        self.slots.get(rank).map(|s| s.state.health())
     }
 
     fn exchange(
@@ -376,13 +968,27 @@ impl UdsPeers {
         write_frame(stream, PFETCH, &req.take())
             .map_err(|e| TransportError::from_io(e, rank, deadline))?;
         let (kind, payload) =
-            read_frame(stream).map_err(|e| TransportError::from_io(e, rank, deadline))?;
+            read_frame(stream).map_err(|e| e.classify(rank, deadline))?;
         decode_samples(kind, &payload, ids.len())
+    }
+
+    /// Record `err`'s health consequence for `rank`.
+    fn note_failure(&self, rank: usize, err: &TransportError) {
+        let Some(slot) = self.slots.get(rank) else { return };
+        match err {
+            TransportError::Stall(_) => slot.state.note_stall(),
+            _ => {
+                let salt = ((self.my_rank as u64) << 32) | rank as u64;
+                slot.state
+                    .note_disconnect(salt, self.backoff_base, self.backoff_cap);
+            }
+        }
     }
 }
 
-/// Decode a PSAMP (or PSAMP_SHM) response into per-id hits.
-fn decode_samples(
+/// Decode a PSAMP (or PSAMP_SHM) response into per-id hits. Shared by
+/// the UDS and TCP clients.
+pub(crate) fn decode_samples(
     kind: u8,
     payload: &[u8],
     expect: usize,
@@ -427,19 +1033,28 @@ impl PeerTransport for UdsPeers {
             .slots
             .get(rank)
             .ok_or(TransportError::Malformed("owner rank out of range"))?;
-        if slot.dead.load(Ordering::Acquire) {
+        if slot.state.is_dead() || slot.state.in_backoff() {
+            // Dead (membership) or inside the reconnect backoff window:
+            // refuse fail-fast so the caller demotes to storage fallback
+            // instead of hammering a gone/recovering peer.
             return Err(TransportError::PeerClosed { peer: rank });
         }
         let mut guard = slot.conn.lock().unwrap();
         let had_cached = guard.is_some();
         if guard.is_none() {
-            let s = UnixStream::connect(&self.paths[rank])
-                .map_err(|e| TransportError::from_io(e, rank, deadline))?;
-            *guard = Some(s);
+            match UnixStream::connect(&self.paths[rank]) {
+                Ok(s) => *guard = Some(s),
+                Err(e) => {
+                    let err = TransportError::from_io(e, rank, deadline);
+                    self.note_failure(rank, &err);
+                    return Err(err);
+                }
+            }
         }
         let mut stream = guard.take().unwrap();
         match self.exchange(&mut stream, owner, ids, deadline) {
             Ok(out) => {
+                slot.state.note_success();
                 *guard = Some(stream);
                 Ok(out)
             }
@@ -449,27 +1064,167 @@ impl PeerTransport for UdsPeers {
                 // request is idempotent and no response byte was
                 // accepted from the dead stream, so nothing can be
                 // double-counted.
-                let mut fresh = UnixStream::connect(&self.paths[rank])
-                    .map_err(|e| TransportError::from_io(e, rank, deadline))?;
-                let out = self.exchange(&mut fresh, owner, ids, deadline)?;
-                *guard = Some(fresh);
-                Ok(out)
+                let fresh = UnixStream::connect(&self.paths[rank])
+                    .map_err(|e| TransportError::from_io(e, rank, deadline));
+                let out = fresh.and_then(|mut fresh| {
+                    self.exchange(&mut fresh, owner, ids, deadline)
+                        .map(|out| (out, fresh))
+                });
+                match out {
+                    Ok((out, fresh)) => {
+                        slot.state.note_success();
+                        *guard = Some(fresh);
+                        Ok(out)
+                    }
+                    Err(e) => {
+                        self.note_failure(rank, &e);
+                        Err(e)
+                    }
+                }
             }
-            Err(e) => Err(e),
+            Err(e) => {
+                self.note_failure(rank, &e);
+                Err(e)
+            }
         }
     }
 
     fn mark_dead(&self, rank: usize) {
         if let Some(slot) = self.slots.get(rank) {
-            slot.dead.store(true, Ordering::Release);
+            slot.state.mark_dead();
             *slot.conn.lock().unwrap() = None;
         }
     }
 
     fn mark_alive(&self, rank: usize) {
         if let Some(slot) = self.slots.get(rank) {
-            slot.dead.store(false, Ordering::Release);
+            // Revival must clear the health state *and* drop the stale
+            // cached connection: the rejoined peer is a new process, and
+            // a leftover stream (or leftover backoff) would refuse it
+            // forever.
+            slot.state.mark_alive();
             *slot.conn.lock().unwrap() = None;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serve loop (shared by the UDS and TCP servers)
+// ---------------------------------------------------------------------------
+
+/// A stream the serve loop can read/write with kernel-level timeouts —
+/// the least common denominator of [`UnixStream`] and [`TcpStream`].
+pub(crate) trait NetStream: Read + Write {
+    fn set_read_deadline(&self, d: Option<Duration>) -> io::Result<()>;
+    fn set_write_deadline(&self, d: Option<Duration>) -> io::Result<()>;
+}
+
+impl NetStream for UnixStream {
+    fn set_read_deadline(&self, d: Option<Duration>) -> io::Result<()> {
+        self.set_read_timeout(d)
+    }
+    fn set_write_deadline(&self, d: Option<Duration>) -> io::Result<()> {
+        self.set_write_timeout(d)
+    }
+}
+
+impl NetStream for TcpStream {
+    fn set_read_deadline(&self, d: Option<Duration>) -> io::Result<()> {
+        self.set_read_timeout(d)
+    }
+    fn set_write_deadline(&self, d: Option<Duration>) -> io::Result<()> {
+        self.set_write_timeout(d)
+    }
+}
+
+/// Serve [`PFETCH`] requests on one connection until EOF, protocol
+/// error, or shutdown. `chaos` (TCP only) may tear, corrupt, or delay
+/// the reply — the client's typed-error handling is exactly what the
+/// injector exercises.
+pub(crate) fn serve_stream<S: NetStream>(
+    conn: &mut S,
+    caches: &HashMap<usize, Arc<CacheStack>>,
+    stop: &AtomicBool,
+    codec: Codec,
+    chaos: Option<&NetChaos>,
+) {
+    // Bounded reads so the handler re-checks the shutdown flag instead
+    // of parking forever on an idle client.
+    let _ = conn.set_read_deadline(Some(Duration::from_millis(100)));
+    while !stop.load(Ordering::Acquire) {
+        let (kind, payload) = match codec.read(conn) {
+            Ok(f) => f,
+            Err(TransportError::Io(e))
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                // Idle poll tick (no frame started): keep waiting. A
+                // timeout *mid-frame* is a ShortRead and falls through
+                // to the disconnect arm — continuing there would desync
+                // the stream.
+                continue;
+            }
+            Err(_) => return, // EOF, torn frame, or protocol error.
+        };
+        if kind != PFETCH {
+            return;
+        }
+        let mut r = WireReader::new(&payload);
+        let (learner, ids) = match (|| {
+            let learner = r.u32()? as usize;
+            let ids = r.vec_u32()?;
+            Ok::<_, TransportError>((learner, ids))
+        })() {
+            Ok(v) => v,
+            Err(_) => return,
+        };
+        let mut resp = Wire::new();
+        resp.u32(ids.len() as u32);
+        let stack = caches.get(&learner);
+        for id in &ids {
+            match stack.and_then(|s| s.get(*id)) {
+                Some(sample) => {
+                    let bytes = sample.bytes.as_slice();
+                    resp.u8(1).u16(sample.label).u32(bytes.len() as u32).bytes(bytes);
+                }
+                None => {
+                    resp.u8(0);
+                }
+            }
+        }
+        let _ = conn.set_write_deadline(Some(Duration::from_secs(30)));
+        let payload = resp.take();
+        if let Some(c) = chaos {
+            if c.next_delay() {
+                thread::sleep(Duration::from_millis(c.delay_ms()));
+            }
+            if c.next_tear() {
+                // Encode the full frame but write only a prefix, then
+                // hang up: the client must see a typed ShortRead (or
+                // Corrupt), never a half-parsed success.
+                let mut buf = Vec::new();
+                let _ = codec.write(&mut buf, PSAMP, &payload);
+                let cut = (buf.len() / 2).max(1);
+                let _ = conn.write_all(&buf[..cut]);
+                let _ = conn.flush();
+                return;
+            }
+            if c.next_flip() {
+                // Flip one bit past the length header: the frame still
+                // parses to the CRC check, which must reject it.
+                let mut buf = Vec::new();
+                let _ = codec.write(&mut buf, PSAMP, &payload);
+                if let Some(bit) = c.flip_bit(buf.len()) {
+                    buf[bit / 8] ^= 1 << (bit % 8);
+                }
+                if conn.write_all(&buf).is_err() || conn.flush().is_err() {
+                    return;
+                }
+                continue;
+            }
+        }
+        if codec.write(conn, PSAMP, &payload).is_err() {
+            return;
         }
     }
 }
@@ -502,10 +1257,12 @@ impl PeerServer {
         let accept_thread = thread::spawn(move || {
             while !stop.load(Ordering::Acquire) {
                 match listener.accept() {
-                    Ok((conn, _)) => {
+                    Ok((mut conn, _)) => {
                         let caches = caches.clone();
                         let stop = stop.clone();
-                        thread::spawn(move || serve_conn(conn, &caches, &stop));
+                        thread::spawn(move || {
+                            serve_stream(&mut conn, &caches, &stop, Codec::Plain, None)
+                        });
                     }
                     Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
                         thread::sleep(Duration::from_millis(5));
@@ -533,53 +1290,6 @@ impl PeerServer {
 impl Drop for PeerServer {
     fn drop(&mut self) {
         self.stop();
-    }
-}
-
-fn serve_conn(mut conn: UnixStream, caches: &HashMap<usize, Arc<CacheStack>>, stop: &AtomicBool) {
-    // Bounded reads so the handler re-checks the shutdown flag instead
-    // of parking forever on an idle client.
-    let _ = conn.set_read_timeout(Some(Duration::from_millis(100)));
-    while !stop.load(Ordering::Acquire) {
-        let (kind, payload) = match read_frame(&mut conn) {
-            Ok(f) => f,
-            Err(e)
-                if e.kind() == io::ErrorKind::WouldBlock || e.kind() == io::ErrorKind::TimedOut =>
-            {
-                continue;
-            }
-            Err(_) => return, // EOF or protocol error: client is gone.
-        };
-        if kind != PFETCH {
-            return;
-        }
-        let mut r = WireReader::new(&payload);
-        let (learner, ids) = match (|| {
-            let learner = r.u32()? as usize;
-            let ids = r.vec_u32()?;
-            Ok::<_, TransportError>((learner, ids))
-        })() {
-            Ok(v) => v,
-            Err(_) => return,
-        };
-        let mut resp = Wire::new();
-        resp.u32(ids.len() as u32);
-        let stack = caches.get(&learner);
-        for id in &ids {
-            match stack.and_then(|s| s.get(*id)) {
-                Some(sample) => {
-                    let bytes = sample.bytes.as_slice();
-                    resp.u8(1).u16(sample.label).u32(bytes.len() as u32).bytes(bytes);
-                }
-                None => {
-                    resp.u8(0);
-                }
-            }
-        }
-        let _ = conn.set_write_timeout(Some(Duration::from_secs(30)));
-        if write_frame(&mut conn, PSAMP, &resp.take()).is_err() {
-            return;
-        }
     }
 }
 
@@ -696,16 +1406,171 @@ mod tests {
         // Header announcing more than MAX_FRAME must not allocate.
         let mut huge = Vec::new();
         huge.extend_from_slice(&(u32::MAX).to_le_bytes());
-        assert!(read_frame(&mut &huge[..]).is_err());
-        // Truncated payload is UnexpectedEof, not a panic.
+        let err = read_frame(&mut &huge[..]).unwrap_err();
+        assert!(
+            matches!(err, TransportError::FrameTooLarge { declared } if declared == u32::MAX as u64),
+            "{err}"
+        );
+        // A zero length is malformed, not a zero-byte allocation.
+        let zero = 0u32.to_le_bytes();
+        let err = read_frame(&mut &zero[..]).unwrap_err();
+        assert!(matches!(err, TransportError::Malformed(_)), "{err}");
+        // Truncated payload is a typed ShortRead, not a panic.
         let mut buf = Vec::new();
         write_frame(&mut buf, PSAMP, &[1, 2, 3, 4]).unwrap();
         buf.truncate(buf.len() - 2);
         let err = read_frame(&mut &buf[..]).unwrap_err();
-        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        assert!(
+            matches!(
+                err,
+                TransportError::ShortRead { needed: 5, got: 3, timed_out: false }
+            ),
+            "{err}"
+        );
+        // EOF at a clean frame boundary stays distinguishable.
+        let err = read_frame(&mut &[][..]).unwrap_err();
+        assert!(
+            matches!(&err, TransportError::Io(e) if e.kind() == io::ErrorKind::UnexpectedEof),
+            "{err}"
+        );
         // WireReader over-reads are Malformed errors.
         let mut r = WireReader::new(&[1, 2]);
         assert!(matches!(r.u32(), Err(TransportError::Malformed(_))));
+    }
+
+    #[test]
+    fn crc32_matches_the_iso_hdlc_check_value() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn crc_frames_roundtrip_and_reject_corruption() {
+        let payload: Vec<u8> = (0..=255u8).collect();
+        let mut buf = Vec::new();
+        write_frame_crc(&mut buf, PSAMP, &payload).unwrap();
+        assert_eq!(buf.len(), 4 + 1 + payload.len() + 4);
+        let (kind, got) = read_frame_crc(&mut &buf[..]).unwrap();
+        assert_eq!((kind, got.as_slice()), (PSAMP, payload.as_slice()));
+        // Any single corrupted body byte must surface as Corrupt.
+        for at in [4usize, 5, 100, buf.len() - 5] {
+            let mut bad = buf.clone();
+            bad[at] ^= 0x40;
+            let err = read_frame_crc(&mut &bad[..]).unwrap_err();
+            assert!(matches!(err, TransportError::Corrupt { .. }), "byte {at}: {err}");
+        }
+        // A corrupted trailer too.
+        let mut bad = buf.clone();
+        let n = bad.len();
+        bad[n - 1] ^= 0x01;
+        let err = read_frame_crc(&mut &bad[..]).unwrap_err();
+        assert!(matches!(err, TransportError::Corrupt { .. }), "{err}");
+        // Truncation mid-trailer is a ShortRead, not a bogus CRC pass.
+        let mut short = buf.clone();
+        short.truncate(buf.len() - 2);
+        let err = read_frame_crc(&mut &short[..]).unwrap_err();
+        assert!(matches!(err, TransportError::ShortRead { .. }), "{err}");
+    }
+
+    /// A reader that delivers one byte at a time and injects EINTR
+    /// before every byte — the satellite's partial-read/EINTR loop.
+    struct DribbleReader<'a> {
+        data: &'a [u8],
+        pos: usize,
+        interrupt_next: bool,
+    }
+
+    impl Read for DribbleReader<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if self.interrupt_next {
+                self.interrupt_next = false;
+                return Err(io::Error::new(io::ErrorKind::Interrupted, "eintr"));
+            }
+            self.interrupt_next = true;
+            if self.pos >= self.data.len() || buf.is_empty() {
+                return Ok(0);
+            }
+            buf[0] = self.data[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn partial_reads_and_eintr_are_retried_to_completion() {
+        let mut buf = Vec::new();
+        write_frame_crc(&mut buf, PFETCH, b"dribble").unwrap();
+        let mut r = DribbleReader { data: &buf, pos: 0, interrupt_next: true };
+        let (kind, payload) = read_frame_crc(&mut r).unwrap();
+        assert_eq!((kind, payload.as_slice()), (PFETCH, b"dribble".as_slice()));
+        // Same for the plain codec.
+        let mut plain = Vec::new();
+        write_frame(&mut plain, PSAMP, b"xy").unwrap();
+        let mut r = DribbleReader { data: &plain, pos: 0, interrupt_next: true };
+        assert_eq!(read_frame(&mut r).unwrap(), (PSAMP, b"xy".to_vec()));
+    }
+
+    #[test]
+    fn peer_state_machine_transitions() {
+        let s = PeerState::new();
+        assert_eq!(s.health(), PeerHealth::Connected);
+        assert!(!s.in_backoff());
+        s.note_stall();
+        assert_eq!(s.health(), PeerHealth::Degraded);
+        s.note_success();
+        assert_eq!(s.health(), PeerHealth::Connected);
+        // A disconnect opens a backoff window.
+        s.note_disconnect(7, Duration::from_secs(1), Duration::from_secs(2));
+        assert_eq!(s.health(), PeerHealth::Reconnecting);
+        assert_eq!(s.failures(), 1);
+        assert!(s.in_backoff());
+        // Membership death is terminal against further observations...
+        s.mark_dead();
+        s.note_success();
+        s.note_stall();
+        assert_eq!(s.health(), PeerHealth::Dead);
+        assert!(s.is_dead());
+        // ...until an epoch-boundary revival clears everything.
+        s.mark_alive();
+        assert_eq!(s.health(), PeerHealth::Connected);
+        assert_eq!(s.failures(), 0);
+        assert!(!s.in_backoff());
+    }
+
+    #[test]
+    fn backoff_window_expires() {
+        let s = PeerState::new();
+        s.note_disconnect(1, Duration::from_micros(50), Duration::from_millis(1));
+        assert_eq!(s.health(), PeerHealth::Reconnecting);
+        thread::sleep(Duration::from_millis(5));
+        assert!(!s.in_backoff(), "a 1ms-capped window must expire");
+    }
+
+    #[test]
+    fn net_tuning_rejects_absurd_values() {
+        assert!(NetTuning::default().validated().is_ok());
+        let zero_hb = NetTuning { hb_interval: Duration::ZERO, ..NetTuning::default() };
+        assert!(zero_hb.validated().is_err());
+        let tight_timeout = NetTuning {
+            hb_interval: Duration::from_secs(3),
+            hb_timeout: Duration::from_secs(4),
+            ..NetTuning::default()
+        };
+        assert!(tight_timeout.validated().is_err());
+        let zero_deadline =
+            NetTuning { transfer_deadline: Duration::ZERO, ..NetTuning::default() };
+        assert!(zero_deadline.validated().is_err());
+        let inverted = NetTuning {
+            reconnect_base: Duration::from_secs(5),
+            reconnect_cap: Duration::from_secs(1),
+            ..NetTuning::default()
+        };
+        assert!(inverted.validated().is_err());
+        let absurd_cap = NetTuning {
+            reconnect_cap: Duration::from_secs(3600),
+            ..NetTuning::default()
+        };
+        assert!(absurd_cap.validated().is_err());
     }
 
     #[test]
@@ -724,6 +1589,7 @@ mod tests {
         assert_eq!(out[0], Some((4, vec![1, 2, 3])));
         assert_eq!(out[1], None);
         assert_eq!(out[2], Some((5, vec![9])));
+        assert_eq!(peers.peer_health(1), Some(PeerHealth::Connected));
     }
 
     /// Satellite: EOF racing a completed transfer. The peer writes the
@@ -768,6 +1634,7 @@ mod tests {
             .fetch_from_owner(0, &[5], Some(Duration::from_secs(1)))
             .unwrap_err();
         assert!(matches!(err, TransportError::PeerClosed { peer: 0 }), "{err}");
+        assert_eq!(peers.peer_health(0), Some(PeerHealth::Reconnecting));
     }
 
     /// Satellite: a peer that died before ever serving (freeze-then-die
@@ -787,6 +1654,48 @@ mod tests {
         let err = peers.fetch_from_owner(1, &[0], None).unwrap_err();
         assert!(matches!(err, TransportError::PeerClosed { peer: 1 }));
         peers.mark_alive(1);
+    }
+
+    /// Satellite (revival path): a peer that died, accumulated failures,
+    /// and was marked dead must — after the PR 7 epoch-boundary rejoin
+    /// calls `mark_alive` — be served by a *fresh* dial, not refused
+    /// because of its previous incarnation's dead mark, backoff window,
+    /// or stale cached connection.
+    #[test]
+    fn revived_peer_is_redialed_fresh_after_mark_alive() {
+        let path = tmp_sock("revive");
+        let mut caches = HashMap::new();
+        caches.insert(1usize, stack_with(&[(7, 2, vec![0x11])]));
+        let mut server = PeerServer::start(path.clone(), caches).unwrap();
+        let peers = UdsPeers::new(0, 1, vec![tmp_sock("self2"), path.clone()])
+            .with_backoff(Duration::from_secs(10), Duration::from_secs(10));
+        // Healthy fetch caches a connection.
+        let out = peers
+            .fetch_from_owner(1, &[7], Some(Duration::from_secs(5)))
+            .unwrap();
+        assert_eq!(out[0], Some((2, vec![0x11])));
+        // Peer dies: the next fetch fails and opens a (huge) backoff
+        // window, then membership marks it dead.
+        server.stop();
+        let _ = peers.fetch_from_owner(1, &[7], Some(Duration::from_millis(200)));
+        peers.mark_dead(1);
+        assert_eq!(peers.peer_health(1), Some(PeerHealth::Dead));
+        let err = peers.fetch_from_owner(1, &[7], None).unwrap_err();
+        assert!(matches!(err, TransportError::PeerClosed { peer: 1 }));
+        // Peer restarts (new process, same path) with different bytes
+        // and rejoins at the epoch boundary.
+        let mut caches = HashMap::new();
+        caches.insert(1usize, stack_with(&[(7, 3, vec![0x22, 0x33])]));
+        let _server2 = PeerServer::start(path.clone(), caches).unwrap();
+        peers.mark_alive(1);
+        assert_eq!(peers.peer_health(1), Some(PeerHealth::Connected));
+        // The fetch must succeed immediately — no leftover dead mark, no
+        // leftover 10s backoff, no stale socket — and must return the
+        // *new* incarnation's bytes.
+        let out = peers
+            .fetch_from_owner(1, &[7], Some(Duration::from_secs(5)))
+            .unwrap();
+        assert_eq!(out[0], Some((3, vec![0x22, 0x33])));
     }
 
     #[test]
@@ -812,7 +1721,47 @@ mod tests {
             }
             other => panic!("expected transfer stall, got {other}"),
         }
+        // A deadline miss degrades the link but does not open a backoff
+        // window: the peer is slow, not gone.
+        assert_eq!(peers.peer_health(0), Some(PeerHealth::Degraded));
         silent.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn ctrl_conn_speaks_both_transports() {
+        // TCP loopback with the CRC codec.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let ctrl = CtrlListener::Tcp(listener);
+        assert_eq!(ctrl.tcp_addr(), Some(addr));
+        let client = thread::spawn(move || {
+            let mut conn = Conn::connect_tcp(&addr.to_string()).unwrap();
+            conn.write_frame(9, b"hb").unwrap();
+            let (kind, payload) = conn.read_frame().unwrap();
+            assert_eq!((kind, payload.as_slice()), (2u8, b"welcome".as_slice()));
+        });
+        let mut server_conn = ctrl.accept().unwrap();
+        assert_eq!(server_conn.codec(), Codec::Crc32);
+        let (kind, payload) = server_conn.read_frame().unwrap();
+        assert_eq!((kind, payload.as_slice()), (9u8, b"hb".as_slice()));
+        server_conn.write_frame(2, b"welcome").unwrap();
+        client.join().unwrap();
+        // UDS with the plain codec.
+        let path = tmp_sock("ctrl");
+        let _ = std::fs::remove_file(&path);
+        let ctrl = CtrlListener::Uds(UnixListener::bind(&path).unwrap());
+        assert!(ctrl.tcp_addr().is_none());
+        let cpath = path.clone();
+        let client = thread::spawn(move || {
+            let mut conn = Conn::connect_uds(&cpath).unwrap();
+            conn.write_frame(1, b"hello").unwrap();
+        });
+        let mut server_conn = ctrl.accept().unwrap();
+        assert_eq!(server_conn.codec(), Codec::Plain);
+        let (kind, payload) = server_conn.read_frame().unwrap();
+        assert_eq!((kind, payload.as_slice()), (1u8, b"hello".as_slice()));
+        client.join().unwrap();
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -9,7 +9,9 @@
 //! discrete-event simulator at 2 and 4 processes.
 
 use dlio::coordinator::{run_multiproc, MultiProcConfig, SamplerKind};
+use dlio::fault::netchaos::{NetChaosSpec, Partition};
 use dlio::fault::ProcKill;
+use dlio::net::transport::TransportKind;
 use dlio::sim::{presets, simulate_epochs, Scheme};
 use dlio::storage::Catalog;
 use std::path::PathBuf;
@@ -216,4 +218,77 @@ fn sim_and_live_agree_on_the_reg_load_mix() {
         live_local < 0.1,
         "Reg must not accumulate cache locality, got local fraction {live_local:.2}"
     );
+}
+
+// ---------------------------------------------------------------------
+// Multi-host TCP transport (DESIGN.md §14). Three ranks so the peer
+// fabric has real fan-out; 288 samples / (3 procs * 2 learners * 8
+// batch) = 6 steps per epoch: gens 0-5 are epoch 0, 6-11 epoch 1.
+
+fn tcp_cfg(tag: &str) -> MultiProcConfig {
+    MultiProcConfig {
+        procs: 3,
+        samples: 288,
+        transport: TransportKind::Tcp,
+        ..base_cfg(tag)
+    }
+}
+
+#[test]
+fn tcp_clean_run_matches_uds_bit_identically() {
+    let mut cfg = tcp_cfg("tcp-clean");
+    cfg.transport = TransportKind::Uds;
+    let uds = run_multiproc(&cfg).expect("uds run");
+    cfg.transport = TransportKind::Tcp;
+    let tcp = run_multiproc(&cfg).expect("tcp run");
+
+    assert_eq!(uds.coord.steps, 12, "3x2x8 over 288 samples is 6 steps/epoch");
+    assert_eq!(tcp.coord.steps, uds.coord.steps);
+    assert_eq!(tcp.coord.recovery.deaths, 0);
+    assert_eq!(
+        uds.coord.digest, tcp.coord.digest,
+        "the transport must not leak into training math: TCP and UDS \
+         runs of the same config must be bit-identical"
+    );
+    for (rank, code, signal) in &tcp.exits {
+        assert_eq!(
+            (*code, *signal),
+            (Some(0), None),
+            "rank {rank} should exit cleanly over TCP"
+        );
+    }
+}
+
+#[test]
+fn tcp_partition_mid_epoch_recovers_bit_identically() {
+    let mut cfg = tcp_cfg("tcp-part");
+    let clean = run_multiproc(&cfg).expect("clean tcp run");
+
+    // Partition ranks 1<->2 for gsteps [7, 10) — mid steady-state epoch,
+    // after the directory freeze, so partitioned fetches are forced
+    // through CAS-repair -> storage fallback while both ranks stay in
+    // the membership.
+    cfg.chaos = Some(NetChaosSpec {
+        seed: 0xC4A05,
+        partitions: vec![Partition { a: 1, b: 2, from_gstep: 7, to_gstep: 10 }],
+        ..NetChaosSpec::default()
+    });
+    let parted = run_multiproc(&cfg).expect("partitioned run must complete");
+
+    assert_eq!(
+        parted.coord.recovery.deaths, 0,
+        "a partitioned-but-alive rank must not be excised from membership"
+    );
+    assert_eq!(parted.coord.steps, clean.coord.steps);
+    assert_eq!(
+        clean.coord.digest, parted.coord.digest,
+        "storage fallback under partition must leave parameters \
+         bit-identical to the fault-free run"
+    );
+
+    // Benchmark artifact for CI (written relative to the invoker CWD).
+    let mut bench = dlio::bench::Bench::new();
+    bench.record("tcp_clean_wall_s", clean.coord.wall_s, "s");
+    bench.record("tcp_partitioned_wall_s", parted.coord.wall_s, "s");
+    bench.write_json("BENCH_tcp.json").expect("write BENCH_tcp.json");
 }

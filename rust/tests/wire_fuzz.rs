@@ -1,0 +1,328 @@
+//! Property/fuzz round-trip tests for the frame codecs and the typed
+//! payload wire format (DESIGN.md §14).
+//!
+//! The contract under test: a decoder fed *any* byte string — truncated
+//! at every possible boundary, bit-flipped anywhere, or carrying an
+//! adversarial length header — returns a typed [`TransportError`] or a
+//! correct frame. It never panics, never allocates the declared size of
+//! an oversized header, and (for the CRC codec) never silently accepts
+//! corrupted bytes as the original frame.
+
+use dlio::net::transport::{
+    crc32, read_frame, read_frame_crc, write_frame, write_frame_crc, Codec,
+    TransportError, Wire, WireReader, MAX_FRAME,
+};
+
+/// splitmix64 — deterministic fuzz driver, no external crates.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n.max(1)
+    }
+
+    fn bytes(&mut self, n: usize) -> Vec<u8> {
+        (0..n).map(|_| self.next() as u8).collect()
+    }
+}
+
+fn encode(codec: Codec, kind: u8, payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    codec.write(&mut buf, kind, payload).expect("encode into Vec");
+    buf
+}
+
+fn decode(codec: Codec, bytes: &[u8]) -> Result<(u8, Vec<u8>), TransportError> {
+    codec.read(&mut &bytes[..])
+}
+
+#[test]
+fn both_codecs_roundtrip_random_frames() {
+    let mut rng = Rng(0xF0A7);
+    for codec in [Codec::Plain, Codec::Crc32] {
+        for _ in 0..64 {
+            let kind = rng.next() as u8;
+            let payload = rng.bytes(rng.below(2048) as usize);
+            let (k, p) = decode(codec, &encode(codec, kind, &payload))
+                .expect("a clean frame must decode");
+            assert_eq!((k, p), (kind, payload));
+        }
+    }
+}
+
+#[test]
+fn truncation_at_every_byte_boundary_is_a_typed_error() {
+    let mut rng = Rng(0x7BCA7E);
+    for codec in [Codec::Plain, Codec::Crc32] {
+        for _ in 0..8 {
+            let kind = rng.next() as u8;
+            let payload = rng.bytes(rng.below(96) as usize);
+            let full = encode(codec, kind, &payload);
+            for cut in 0..full.len() {
+                let err = decode(codec, &full[..cut])
+                    .expect_err("every proper prefix is incomplete");
+                // A cut inside the 4-byte header is a boundary EOF (the
+                // caller's idle-close signal); a cut inside the body is
+                // a torn frame.
+                match (cut, err) {
+                    (0, TransportError::Io(e)) => {
+                        assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof)
+                    }
+                    (_, TransportError::ShortRead { needed, got, timed_out }) => {
+                        assert!(got < needed, "short read must be short");
+                        assert!(!timed_out, "eof, not a timeout");
+                    }
+                    (cut, other) => {
+                        panic!("cut at {cut}: unexpected error {other:?}")
+                    }
+                }
+            }
+            assert!(decode(codec, &full).is_ok());
+        }
+    }
+}
+
+#[test]
+fn crc_codec_rejects_every_single_bit_flip_past_the_header() {
+    let mut rng = Rng(0xF11B);
+    for _ in 0..8 {
+        let kind = rng.next() as u8;
+        let payload = rng.bytes(1 + rng.below(64) as usize);
+        let full = encode(Codec::Crc32, kind, &payload);
+        // Bytes 4.. are kind + payload + crc trailer: CRC-32 detects
+        // every single-bit error, so each flip must be a hard error.
+        for byte in 4..full.len() {
+            for bit in 0..8 {
+                let mut mutated = full.clone();
+                mutated[byte] ^= 1 << bit;
+                let err = decode(Codec::Crc32, &mutated)
+                    .expect_err("flipped frame must not decode");
+                assert!(
+                    matches!(err, TransportError::Corrupt { .. }),
+                    "flip at {byte}.{bit}: want Corrupt, got {err:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn length_header_flips_never_panic_and_never_yield_the_original() {
+    let mut rng = Rng(0x4EAD);
+    for _ in 0..8 {
+        let kind = rng.next() as u8;
+        let payload = rng.bytes(1 + rng.below(64) as usize);
+        let full = encode(Codec::Crc32, kind, &payload);
+        // A flipped length word re-frames the stream arbitrarily: the
+        // decode may tear (ShortRead), overflow the cap (FrameTooLarge),
+        // zero out (Malformed), or mis-splice and fail the CRC. All are
+        // acceptable; returning the original frame bytes as Ok is not.
+        for byte in 0..4 {
+            for bit in 0..8 {
+                let mut mutated = full.clone();
+                mutated[byte] ^= 1 << bit;
+                if let Ok((k, p)) = decode(Codec::Crc32, &mutated) {
+                    assert_ne!(
+                        (k, p.as_slice()),
+                        (kind, &payload[..]),
+                        "flip at {byte}.{bit} silently decoded the original"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn plain_codec_cannot_catch_payload_corruption() {
+    // The reason TCP links speak Crc32: a kernel-checked local stream
+    // (UDS) never corrupts bytes, but once frames cross a real network
+    // the plain codec would accept a flipped payload as a valid frame.
+    let payload = vec![0xABu8; 32];
+    let mut full = encode(Codec::Plain, 7, &payload);
+    full[10] ^= 0x40;
+    let (k, p) = decode(Codec::Plain, &full).expect("plain decode succeeds");
+    assert_eq!(k, 7);
+    assert_ne!(p, payload, "the corruption went through undetected");
+}
+
+#[test]
+fn adversarial_length_headers_are_typed_errors_before_any_body_read() {
+    for codec in [Codec::Plain, Codec::Crc32] {
+        // Zero length: structurally impossible (every frame has a kind
+        // byte), must be Malformed even with no body bytes available.
+        let zero = 0u32.to_le_bytes();
+        assert!(matches!(
+            decode(codec, &zero),
+            Err(TransportError::Malformed(_))
+        ));
+        // Oversized declarations must be rejected from the header alone
+        // (no allocation, no body read) — feed ONLY the 4 header bytes;
+        // a decoder that tried to read the body would report ShortRead.
+        for declared in [MAX_FRAME as u32 + 1, u32::MAX] {
+            let hdr = declared.to_le_bytes();
+            match decode(codec, &hdr) {
+                Err(TransportError::FrameTooLarge { declared: d }) => {
+                    assert_eq!(d, declared as u64)
+                }
+                other => panic!("declared {declared}: got {other:?}"),
+            }
+        }
+        // The cap itself is legal: header parses, then tears on the
+        // (absent) body rather than being rejected.
+        let hdr = (MAX_FRAME as u32).to_le_bytes();
+        assert!(matches!(
+            decode(codec, &hdr),
+            Err(TransportError::ShortRead { .. })
+        ));
+    }
+}
+
+#[test]
+fn crc_check_value_is_canonical() {
+    // ISO-HDLC check value — guards the table generator against
+    // polynomial/reflection regressions.
+    assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+}
+
+#[test]
+fn free_function_and_codec_forms_agree() {
+    let payload = b"frame bytes".to_vec();
+    let mut a = Vec::new();
+    let mut b = Vec::new();
+    write_frame(&mut a, 3, &payload).unwrap();
+    write_frame_crc(&mut b, 3, &payload).unwrap();
+    assert_eq!(a, encode(Codec::Plain, 3, &payload));
+    assert_eq!(b, encode(Codec::Crc32, 3, &payload));
+    assert_eq!(read_frame(&mut &a[..]).unwrap(), (3, payload.clone()));
+    assert_eq!(read_frame_crc(&mut &b[..]).unwrap(), (3, payload));
+}
+
+// ---------------------------------------------------------------------
+// Wire / WireReader payload-layer properties.
+
+/// One random typed value, written and expected back.
+#[derive(Debug, PartialEq)]
+enum Val {
+    U8(u8),
+    U16(u16),
+    U32(u32),
+    U64(u64),
+    F32(f32),
+    Bytes(Vec<u8>),
+    VecU32(Vec<u32>),
+    VecF32(Vec<f32>),
+}
+
+fn random_vals(rng: &mut Rng) -> Vec<Val> {
+    (0..1 + rng.below(12))
+        .map(|_| match rng.below(8) {
+            0 => Val::U8(rng.next() as u8),
+            1 => Val::U16(rng.next() as u16),
+            2 => Val::U32(rng.next() as u32),
+            3 => Val::U64(rng.next()),
+            // Bit 30 cleared: the exponent can never be all-ones, so no
+            // NaN/Inf — PartialEq stays a bitwise roundtrip check.
+            4 => Val::F32(f32::from_bits(rng.next() as u32 & 0x3FFF_FFFF)),
+            5 => Val::Bytes(rng.bytes(rng.below(32) as usize)),
+            6 => Val::VecU32(
+                (0..rng.below(16)).map(|_| rng.next() as u32).collect(),
+            ),
+            _ => Val::VecF32(
+                (0..rng.below(16))
+                    .map(|_| f32::from_bits(rng.next() as u32 & 0x3FFF_FFFF))
+                    .collect(),
+            ),
+        })
+        .collect()
+}
+
+fn write_vals(vals: &[Val]) -> Vec<u8> {
+    let mut w = Wire::new();
+    for v in vals {
+        match v {
+            Val::U8(x) => w.u8(*x),
+            Val::U16(x) => w.u16(*x),
+            Val::U32(x) => w.u32(*x),
+            Val::U64(x) => w.u64(*x),
+            Val::F32(x) => w.f32(*x),
+            Val::Bytes(x) => w.bytes(x),
+            Val::VecU32(x) => w.vec_u32(x),
+            Val::VecF32(x) => w.vec_f32(x),
+        };
+    }
+    w.take()
+}
+
+/// Read the same shape back; errors propagate for the truncation test.
+fn read_vals(
+    buf: &[u8],
+    shape: &[Val],
+) -> Result<Vec<Val>, TransportError> {
+    let mut r = WireReader::new(buf);
+    shape
+        .iter()
+        .map(|v| {
+            Ok(match v {
+                Val::U8(_) => Val::U8(r.u8()?),
+                Val::U16(_) => Val::U16(r.u16()?),
+                Val::U32(_) => Val::U32(r.u32()?),
+                Val::U64(_) => Val::U64(r.u64()?),
+                Val::F32(_) => Val::F32(r.f32()?),
+                Val::Bytes(x) => Val::Bytes(r.take(x.len())?.to_vec()),
+                Val::VecU32(_) => Val::VecU32(r.vec_u32()?),
+                Val::VecF32(_) => Val::VecF32(r.vec_f32()?),
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn wire_roundtrips_random_value_sequences() {
+    let mut rng = Rng(0x817E);
+    for _ in 0..128 {
+        let vals = random_vals(&mut rng);
+        let buf = write_vals(&vals);
+        let back = read_vals(&buf, &vals).expect("full buffer roundtrips");
+        assert_eq!(back, vals, "NaN-free floats must roundtrip bitwise");
+    }
+}
+
+#[test]
+fn wire_reader_truncation_is_typed_never_panics() {
+    let mut rng = Rng(0x7277);
+    for _ in 0..32 {
+        let vals = random_vals(&mut rng);
+        let buf = write_vals(&vals);
+        for cut in 0..buf.len() {
+            // Any prefix either errors (the common case) or yields a
+            // shorter valid decode when the cut lands between values —
+            // but it must never panic and never read past the cut.
+            if let Ok(back) = read_vals(&buf[..cut], &vals) {
+                assert_eq!(back, vals);
+                assert_eq!(cut, buf.len(), "short buffer decoded fully");
+            }
+        }
+    }
+}
+
+#[test]
+fn wire_reader_rejects_absurd_vector_counts() {
+    // A corrupted count word must fail on the bounds check, not allocate
+    // count * 4 bytes.
+    let mut w = Wire::new();
+    w.u32(u32::MAX);
+    let buf = w.take();
+    let mut r = WireReader::new(&buf);
+    assert!(r.vec_u32().is_err());
+    let mut r = WireReader::new(&buf);
+    assert!(r.vec_f32().is_err());
+}
