@@ -230,6 +230,20 @@ fn main() {
             prefetch_batches: 8,
         };
         let tier_runtime = LoaderRuntime::new(&lcfg);
+        // The DRAM-only (m1d0) scenario is the storage-bound regime: its
+        // overflow re-reads storage every epoch through the loader's
+        // submission waves. Give it its own StorageSystem with the §15
+        // device-latency model (0.5 ms per coalesced run) so the reported
+        // wave overlap ratio measures real submission overlap; the tiered
+        // scenarios stay storage-silent and keep the unmodeled substrate.
+        let scen_storage = if disk_x == 0 {
+            let s =
+                Arc::new(StorageSystem::open(&cfg.data_dir, None).unwrap());
+            s.set_storage_latency_s(5e-4);
+            s
+        } else {
+            Arc::clone(&tier_storage)
+        };
         let mem_cap = (1024 * rb) as u64;
         let stack = if disk_x == 0 {
             CacheStack::mem_only(mem_cap, Policy::InsertOnly)
@@ -253,7 +267,7 @@ fn main() {
         let counters = Arc::new(LoadCounters::new());
         let tctx = Arc::new(FetchContext {
             learner: 0,
-            storage: Arc::clone(&tier_storage),
+            storage: Arc::clone(&scen_storage),
             caches: vec![Arc::clone(&stack)],
             directory: Arc::new(CacheDirectory::new(
                 tier_storage.n_samples(),
@@ -308,15 +322,44 @@ fn main() {
         run_tier_epoch(); // population (+ write-behind spills)
         stack.drain_spills();
         let snap0 = counters.snapshot();
+        let ssnap0 = scen_storage.storage_snapshot();
         let t0 = Instant::now();
         run_tier_epoch(); // steady epoch
         let dt = t0.elapsed().as_secs_f64();
         let delta = counters.snapshot().delta(&snap0);
+        let sdelta = scen_storage.storage_snapshot().delta(&ssnap0);
         b.record(
             &format!("l3/tiered_samples_per_s_{tag}"),
             working_set as f64 / dt,
             "samples/s",
         );
+        if disk_x == 0 {
+            // Storage-bound vs cache-hit throughput, reported separately:
+            // the blended number above hides the miss path's regressions
+            // behind the DRAM hits (the satellite this fixes).
+            b.record(
+                &format!("l3/storage_bound_samples_per_s_{tag}"),
+                delta.storage_loads as f64 / dt,
+                "samples/s",
+            );
+            b.record(
+                &format!("l3/cache_hit_samples_per_s_{tag}"),
+                (working_set as u64).saturating_sub(delta.storage_loads)
+                    as f64
+                    / dt,
+                "samples/s",
+            );
+            b.record(
+                &format!("l3/wave_overlap_ratio_{tag}"),
+                sdelta.overlap_ratio(),
+                "x",
+            );
+            b.record(
+                &format!("l3/storage_waves_{tag}"),
+                sdelta.waves as f64,
+                "waves",
+            );
+        }
         b.record(
             &format!("l3/tiered_disk_hit_ratio_{tag}"),
             stack.tier_snapshot().disk_hit_ratio(),

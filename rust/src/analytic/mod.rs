@@ -38,6 +38,16 @@ pub struct ModelParams {
     pub r_disk: f64,
     /// Balance traffic ratio β (Fig. 6: ~0.03–0.07).
     pub beta: f64,
+    /// Async-supply extension (DESIGN.md §15): per-request storage device
+    /// latency, seconds. 0 keeps the bandwidth-only Eqs. 2/7/8 exactly.
+    pub l_storage: f64,
+    /// Samples coalesced per storage request (run coalescing); the latency
+    /// term divides by it. Values < 1 are treated as 1.
+    pub g_storage: f64,
+    /// Storage requests in flight per submission wave (queue depth); the
+    /// latency term divides by it. Values < 1 are treated as 1 (blocking
+    /// pread, one request at a time).
+    pub q_storage: f64,
 }
 
 impl ModelParams {
@@ -51,9 +61,23 @@ impl ModelParams {
         self.d_samples / (p as f64 * self.v)
     }
 
-    /// Eq. (2): sample I/O time, plain loading (all from storage).
+    /// Async-supply latency term: reading `frac` of the dataset issues
+    /// `frac·D/g` coalesced requests at `l` seconds each, overlapped `q`
+    /// deep by the submission waves — so the front-end serves it in
+    /// `frac·D·l/(g·q)` seconds on top of the bandwidth bound. 0 when
+    /// `l_storage` is 0 (the paper's original bandwidth-only model).
+    pub fn supply_latency_time(&self, frac: f64) -> f64 {
+        if self.l_storage <= 0.0 || frac <= 0.0 {
+            return 0.0;
+        }
+        frac * self.d_samples * self.l_storage
+            / (self.g_storage.max(1.0) * self.q_storage.max(1.0))
+    }
+
+    /// Eq. (2): sample I/O time, plain loading (all from storage), plus
+    /// the async-supply latency term.
     pub fn io_time_plain(&self) -> f64 {
-        self.d_samples * self.avg_bytes / self.r
+        self.d_samples * self.avg_bytes / self.r + self.supply_latency_time(1.0)
     }
 
     /// Eq. (3): preprocessing time on p nodes.
@@ -93,7 +117,8 @@ impl ModelParams {
     /// the hierarchical disk-tier read term.
     pub fn io_time_distcache(&self, p: usize) -> f64 {
         let d_bytes = self.d_samples * self.avg_bytes;
-        let storage = (1.0 - self.alpha) * d_bytes / self.r;
+        let storage = (1.0 - self.alpha) * d_bytes / self.r
+            + self.supply_latency_time(1.0 - self.alpha);
         let remote = self.alpha * d_bytes / self.rc
             * ((p as f64 - 1.0) / p as f64);
         storage + remote + self.disk_read_time(p)
@@ -104,7 +129,8 @@ impl ModelParams {
     /// takes p: the SSD reads parallelize across nodes).
     pub fn io_time_loc(&self, p: usize) -> f64 {
         let d_bytes = self.d_samples * self.avg_bytes;
-        let storage = (1.0 - self.alpha) * d_bytes / self.r;
+        let storage = (1.0 - self.alpha) * d_bytes / self.r
+            + self.supply_latency_time(1.0 - self.alpha);
         let balance = self.alpha * d_bytes / self.rb * self.beta;
         storage + balance + self.disk_read_time(p)
     }
@@ -148,6 +174,9 @@ pub fn lassen_imagenet() -> ModelParams {
         alpha_disk: 0.0,
         r_disk: 2.4e9,
         beta: 0.035,
+        l_storage: 0.0,
+        g_storage: 1.0,
+        q_storage: 1.0,
     }
 }
 
@@ -295,5 +324,45 @@ mod tests {
                 .abs()
                 < 1e-6
         );
+    }
+
+    #[test]
+    fn supply_latency_degenerates_when_zero() {
+        // l_storage = 0 must reproduce the bandwidth-only equations
+        // bit-for-bit — the async-supply term is a strict extension.
+        let m = p();
+        assert_eq!(m.l_storage, 0.0);
+        assert_eq!(m.supply_latency_time(1.0), 0.0);
+        assert_eq!(m.io_time_plain(), m.d_samples * m.avg_bytes / m.r);
+        let mut t = m;
+        t.l_storage = 1e-3;
+        t.alpha = 1.0; // fully cached: no storage requests remain
+        assert_eq!(t.supply_latency_time(1.0 - t.alpha), 0.0);
+        assert_eq!(t.io_time_loc(16), m.io_time_loc(16));
+    }
+
+    #[test]
+    fn coalescing_and_queue_depth_amortize_request_latency() {
+        let mut m = p();
+        m.l_storage = 1e-3;
+        let blocking = m.supply_latency_time(1.0);
+        assert!((blocking - m.d_samples * 1e-3).abs() < 1e-6);
+        assert!(m.io_time_plain() > p().io_time_plain());
+        // Coalescing g samples per request and q-deep waves each divide
+        // the term; together they compose multiplicatively.
+        m.g_storage = 8.0;
+        m.q_storage = 4.0;
+        let waved = m.supply_latency_time(1.0);
+        assert!((blocking / waved - 32.0).abs() < 1e-6);
+        // Sub-1 values clamp to 1 rather than inflating the term.
+        m.g_storage = 0.0;
+        m.q_storage = 0.5;
+        assert!((m.supply_latency_time(1.0) - blocking).abs() < 1e-6);
+        // The uncached fraction scales the request count (Eqs. 7/8).
+        m.g_storage = 1.0;
+        m.q_storage = 1.0;
+        m.alpha = 0.75;
+        let partial = m.supply_latency_time(1.0 - m.alpha);
+        assert!((partial / blocking - 0.25).abs() < 1e-6);
     }
 }

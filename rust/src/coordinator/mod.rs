@@ -45,7 +45,7 @@ use crate::loader::{
 };
 use crate::metrics::{
     EpochReport, FabricSnapshot, LoadCounters, LoadSnapshot, PlannerSnapshot,
-    RecoverySnapshot, StallSnapshot, TierSnapshot,
+    RecoverySnapshot, StallSnapshot, StorageSnapshot, TierSnapshot,
 };
 use crate::net::Fabric;
 use crate::runtime::{Engine, HostTensor, Program};
@@ -53,7 +53,7 @@ use crate::sampler::{
     EpochScheme, GlobalShuffler, PartitionPlanner, PlannerConfig, StepPlan,
 };
 use crate::storage::StorageSystem;
-use crate::util::Executor;
+use crate::util::{Executor, NumaTopology};
 use anyhow::{ensure, Context, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -163,6 +163,17 @@ pub struct TrainerConfig {
     /// and its transfer deadline seeds `deadlines.transfer` when that
     /// budget is otherwise unset.
     pub net: Option<crate::net::transport::NetTuning>,
+    /// Modeled per-request storage service latency, seconds (GPFS RPC
+    /// time). The blocking read path pays it per coalesced run; the
+    /// async submission-wave path pays it once per wave (DESIGN.md §15).
+    /// 0 (the default) disables the model — bit-identical to before.
+    pub storage_latency_s: f64,
+    /// NUMA-aware placement (DESIGN.md §15): probe the sysfs topology and
+    /// pin each learner's decode-executor shard (and the spill executor)
+    /// to the node `numa::node_for_learner` assigns it; the storage
+    /// system then meters local vs cross-node landed wave pages. On
+    /// single-node hosts (or when sysfs is unreadable) this is a no-op.
+    pub numa_pin: bool,
 }
 
 impl Default for TrainerConfig {
@@ -195,6 +206,8 @@ impl Default for TrainerConfig {
             resume_from: None,
             halt_after_gstep: None,
             net: None,
+            storage_latency_s: 0.0,
+            numa_pin: false,
         }
     }
 }
@@ -238,6 +251,10 @@ pub struct TrainingReport {
     /// deadline misses, worst-case steps-to-recover (DESIGN.md §12).
     /// All-zero on healthy runs.
     pub recovery: RecoverySnapshot,
+    /// Async storage-engine accounting: submission waves, sqe/cqe counts,
+    /// in-flight peaks, serialized-vs-overlapped service time, and the
+    /// NUMA local/cross-node landed-page split (DESIGN.md §15).
+    pub storage: StorageSnapshot,
 }
 
 impl TrainingReport {
@@ -414,6 +431,22 @@ impl Trainer {
             self.fabric.set_fault_timeline(Some(Arc::clone(tl)));
         }
         self.fabric.set_deadlines(cfg.deadlines);
+        // The storage system carries its own budget (deadlines.storage
+        // bounds every token-bucket admission) and the modeled service
+        // latency (DESIGN.md §15).
+        self.storage.set_deadlines(cfg.deadlines);
+        self.storage.set_storage_latency_s(cfg.storage_latency_s);
+
+        // NUMA placement: probe once; pin each learner's decode executor
+        // (below, via the loader runtime) and meter landed wave pages
+        // against the placement. No-op on single-node hosts.
+        let numa_topo: Option<Arc<NumaTopology>> = if cfg.numa_pin {
+            let topo = Arc::new(NumaTopology::probe());
+            self.storage.set_numa_placement(Arc::clone(&topo), p);
+            Some(topo)
+        } else {
+            None
+        };
 
         // Step-granular resume (DESIGN.md §12): restore parameters, the
         // membership epoch, and the directory image; skip every global
@@ -438,8 +471,14 @@ impl Trainer {
         // handle: the DRAM tier plus, when configured, an SSD spill tier
         // whose write-behind runs on a job-wide spill executor (so SSD
         // writes never ride a batch's critical path).
-        let spill_executor = (cfg.disk_cache_capacity_bytes > 0)
-            .then(|| Arc::new(Executor::new(2)));
+        let spill_executor = (cfg.disk_cache_capacity_bytes > 0).then(|| {
+            // Spill write-behind pins with the first node's shard: the
+            // segments' first-touch pages then stay on-socket.
+            Arc::new(Executor::new_pinned(
+                2,
+                numa_topo.clone().map(|t| (t, 0)),
+            ))
+        });
         // Job-unique segment names: two tiered trainers in one process
         // (test harness) must never truncate each other's segments.
         static SPILL_SEQ: std::sync::atomic::AtomicU64 =
@@ -640,9 +679,11 @@ impl Trainer {
                     let params = init_params.clone();
                     let membership = Arc::clone(&membership);
                     let beacon = Arc::clone(&beacon);
+                    let numa = numa_topo.clone();
                     handles.push(scope.spawn(move || {
                         learner_loop(LearnerEnv {
                             j,
+                            numa,
                             cfg: self.cfg.clone(),
                             storage,
                             caches,
@@ -683,6 +724,8 @@ impl Trainer {
             self.fabric.set_fault_timeline(None);
         }
         self.fabric.set_deadlines(Deadlines::none());
+        self.storage.set_deadlines(Deadlines::none());
+        self.storage.set_storage_latency_s(0.0);
 
         let mut params0 = None;
         let mut checksums = Vec::with_capacity(p);
@@ -767,6 +810,7 @@ impl Trainer {
             tiers,
             stalls: Arc::try_unwrap(stalls).ok().unwrap().into_inner().unwrap(),
             recovery: membership.snapshot(),
+            storage: self.storage.storage_snapshot(),
         })
     }
 
@@ -810,6 +854,9 @@ impl Trainer {
 
 struct LearnerEnv {
     j: usize,
+    /// NUMA topology when `cfg.numa_pin` probed one; the learner pins its
+    /// decode-executor shard to `node_for_learner(j, p)`.
+    numa: Option<Arc<NumaTopology>>,
     cfg: TrainerConfig,
     storage: Arc<StorageSystem>,
     caches: Vec<Arc<CacheStack>>,
@@ -965,6 +1012,7 @@ fn save_resume_point(
 fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
     let LearnerEnv {
         j,
+        numa,
         cfg,
         storage,
         caches,
@@ -996,7 +1044,13 @@ fn learner_loop(env: LearnerEnv) -> Result<(Vec<HostTensor>, f64)> {
     // executor threads and the batch buffer pool survive the per-epoch
     // loader respawns, so epochs after the first spawn zero threads and
     // allocate zero batch buffers.
-    let loader_runtime = LoaderRuntime::new(&cfg.loader);
+    let loader_runtime = LoaderRuntime::new_pinned(
+        &cfg.loader,
+        numa.map(|t| {
+            let node = t.node_for_learner(j, cfg.p);
+            (t, node)
+        }),
+    );
     let timeline = cfg.fault_timeline.clone();
     let spe = steps_per_epoch.max(1);
     // Whether this learner currently sits out as a ghost.

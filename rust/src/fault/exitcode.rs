@@ -30,6 +30,8 @@ pub const STALL_PLAN: i32 = 42;
 pub const STALL_TASK: i32 = 43;
 /// Deliberate fault injection (chaos timeline / `halt_after_gstep`).
 pub const INJECTED_KILL: i32 = 44;
+/// A storage-throttle admission blew its deadline budget.
+pub const STALL_STORAGE: i32 = 45;
 
 /// The exit code for a structured stall.
 pub fn for_stall(kind: StallKind) -> i32 {
@@ -38,6 +40,7 @@ pub fn for_stall(kind: StallKind) -> i32 {
         StallKind::Barrier => STALL_BARRIER,
         StallKind::Plan => STALL_PLAN,
         StallKind::Task => STALL_TASK,
+        StallKind::Storage => STALL_STORAGE,
     }
 }
 
@@ -62,6 +65,9 @@ pub fn classify(err: &anyhow::Error) -> i32 {
             if msg.contains("task wait") {
                 return STALL_TASK;
             }
+            if msg.contains("storage wait") {
+                return STALL_STORAGE;
+            }
         }
     }
     CRASH
@@ -77,6 +83,7 @@ pub fn describe(code: i32) -> &'static str {
         STALL_BARRIER => "barrier-deadline stall",
         STALL_PLAN => "plan-deadline stall",
         STALL_TASK => "task-deadline stall",
+        STALL_STORAGE => "storage-deadline stall",
         INJECTED_KILL => "injected kill",
         _ => "unknown",
     }
@@ -104,7 +111,9 @@ mod tests {
         assert_eq!(classify(&stall(StallKind::Barrier)), STALL_BARRIER);
         assert_eq!(classify(&stall(StallKind::Plan)), STALL_PLAN);
         assert_eq!(classify(&stall(StallKind::Task)), STALL_TASK);
+        assert_eq!(classify(&stall(StallKind::Storage)), STALL_STORAGE);
         assert_eq!(for_stall(StallKind::Barrier), STALL_BARRIER);
+        assert_eq!(for_stall(StallKind::Storage), STALL_STORAGE);
     }
 
     #[test]

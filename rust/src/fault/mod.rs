@@ -48,6 +48,9 @@ pub enum StallKind {
     /// An executor completion latch
     /// ([`crate::util::Executor::run_batch_deadline`]).
     Task,
+    /// A storage-bandwidth admission wait
+    /// ([`crate::storage::TokenBucket::acquire_deadline`]).
+    Storage,
 }
 
 impl std::fmt::Display for StallKind {
@@ -57,6 +60,7 @@ impl std::fmt::Display for StallKind {
             StallKind::Barrier => "barrier",
             StallKind::Plan => "plan",
             StallKind::Task => "task",
+            StallKind::Storage => "storage",
         };
         f.write_str(s)
     }
@@ -104,6 +108,10 @@ pub struct Deadlines {
     /// Budget for the gradient rendezvous — the wait that turns a dead
     /// peer into a detection event.
     pub barrier: Option<Duration>,
+    /// Budget for one storage-throttle admission (token-bucket debt
+    /// sleep) — the last blocking wait to gain a deadline (DESIGN.md
+    /// §15).
+    pub storage: Option<Duration>,
 }
 
 impl Deadlines {
@@ -120,6 +128,7 @@ impl Deadlines {
             task: Some(d),
             plan: Some(d),
             barrier: Some(d),
+            storage: Some(d),
         }
     }
 }

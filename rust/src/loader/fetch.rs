@@ -44,12 +44,12 @@ use crate::cache::{CacheDirectory, CacheStack, Lookup, Tier};
 use crate::metrics::{LoadCounters, Source};
 use crate::net::transport::PeerTransport;
 use crate::net::Fabric;
-use crate::storage::{Sample, StorageSystem};
+use crate::storage::{Sample, StorageSystem, StorageWave};
 use crate::util::{panic_message, Executor};
 use anyhow::Result;
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Attempts at reserving an owner transfer before the group demotes to
@@ -189,6 +189,29 @@ impl DeferredBatch {
 fn fill_slots(slots: &mut [Option<Arc<Sample>>], pos: &[usize], s: &Arc<Sample>) {
     for &i in pos {
         slots[i] = Some(Arc::clone(s));
+    }
+}
+
+/// Shares one in-flight [`StorageWave`] among the batch's storage chunk
+/// tasks (DESIGN.md §15): the first task to arrive reaps the wave —
+/// charging `storage_runs` exactly once — and publishes the id → sample
+/// map; every task (including the reaper) then decodes/populates its own
+/// chunk from that map, concurrently. Errors are published too, so every
+/// chunk of a failed wave reports the same failure instead of hanging.
+struct WaveGate {
+    state: Mutex<WaveGateState>,
+}
+
+struct WaveGateState {
+    wave: Option<StorageWave>,
+    result: Option<std::result::Result<Arc<BTreeMap<u32, Arc<Sample>>>, String>>,
+}
+
+impl WaveGate {
+    fn new(wave: StorageWave) -> WaveGate {
+        WaveGate {
+            state: Mutex::new(WaveGateState { wave: Some(wave), result: None }),
+        }
     }
 }
 
@@ -668,6 +691,18 @@ impl FetchContext {
             }
         }
         if !pending.is_empty() {
+            // The batch's coalesced storage runs go out as ONE submission
+            // wave, queued BEFORE the task wave dispatches — the async
+            // engine services them while owner transfers are in flight
+            // and decode tasks occupy the executor (DESIGN.md §15). The
+            // chunk tasks share the wave through the gate: the first to
+            // need bytes reaps it, then every chunk decodes/populates its
+            // own entries concurrently.
+            let want: Vec<u32> =
+                pending.iter().map(|(id, _)| *id).collect();
+            let gate = Arc::new(WaveGate::new(
+                ctx.storage.read_batch_begin_for(ctx.learner, &want)?,
+            ));
             let per = pending.len().div_ceil(parallelism.max(1));
             let mut it = pending.into_iter();
             loop {
@@ -677,11 +712,12 @@ impl FetchContext {
                     break;
                 }
                 let ctx = Arc::clone(ctx);
+                let gate = Arc::clone(&gate);
                 tasks.push(Box::new(move || {
                     // Untimed fill: the whole wave is inside the caller's
                     // single fetch_ns charge — the timed `fetch_storage`
                     // here would double-count every storage second.
-                    let got = ctx.storage_fill(&chunk);
+                    let got = ctx.wave_chunk(&gate, &chunk);
                     Done::Storage(chunk, got)
                 }));
             }
@@ -748,6 +784,66 @@ impl FetchContext {
                 pos.len() as u64,
             );
             let s = Arc::new(s);
+            self.decode(&s);
+            self.populate(&s);
+            out.push(s);
+        }
+        Ok(out)
+    }
+
+    /// Collect a shared wave's samples: the first caller reaps it (ONE
+    /// `storage_runs` charge for the whole wave, matching the blocking
+    /// path's one charge per `read_batch`); later callers get the
+    /// published map — or the published failure.
+    fn wave_collect(
+        &self,
+        gate: &WaveGate,
+    ) -> Result<Arc<BTreeMap<u32, Arc<Sample>>>> {
+        let mut st = gate.state.lock().unwrap();
+        if let Some(wave) = st.wave.take() {
+            let res = (|| {
+                let (samples, runs) = wave.wait()?;
+                self.counters
+                    .storage_runs
+                    .fetch_add(runs as u64, Ordering::Relaxed);
+                Ok(Arc::new(
+                    samples
+                        .into_iter()
+                        .map(|s| (s.id, Arc::new(s)))
+                        .collect::<BTreeMap<u32, Arc<Sample>>>(),
+                ))
+            })();
+            st.result = Some(match &res {
+                Ok(map) => Ok(Arc::clone(map)),
+                Err(e) => Err(format!("{e:#}")),
+            });
+            return res;
+        }
+        match st.result.as_ref().expect("gate armed or resolved") {
+            Ok(map) => Ok(Arc::clone(map)),
+            Err(e) => Err(anyhow::anyhow!("{e}")),
+        }
+    }
+
+    /// One storage chunk of a shared wave: wait the bytes (first taker
+    /// reaps), then decode/populate/account THIS chunk's entries — the
+    /// per-entry work `storage_fill` does, minus the read.
+    fn wave_chunk(
+        &self,
+        gate: &WaveGate,
+        chunk: &[(u32, Vec<usize>)],
+    ) -> Result<Vec<Arc<Sample>>> {
+        let map = self.wave_collect(gate)?;
+        let mut out = Vec::with_capacity(chunk.len());
+        for (id, pos) in chunk {
+            let s = Arc::clone(map.get(id).ok_or_else(|| {
+                anyhow::anyhow!("wave dropped sample {id}")
+            })?);
+            self.counters.record_n(
+                Source::Storage,
+                s.size() as u64,
+                pos.len() as u64,
+            );
             self.decode(&s);
             self.populate(&s);
             out.push(s);

@@ -89,10 +89,23 @@ pub struct LoaderRuntime {
 
 impl LoaderRuntime {
     pub fn new(cfg: &LoaderConfig) -> LoaderRuntime {
+        Self::new_pinned(cfg, None)
+    }
+
+    /// [`new`], with the decode executor's workers pinned to one NUMA node
+    /// (DESIGN.md §15): decode output and first-touch cache pages then
+    /// land on the socket serving this learner. `None` is exactly [`new`].
+    ///
+    /// [`new`]: LoaderRuntime::new
+    pub fn new_pinned(
+        cfg: &LoaderConfig,
+        numa: Option<(Arc<crate::util::NumaTopology>, usize)>,
+    ) -> LoaderRuntime {
         let cfg = cfg.normalized();
         let executor = if cfg.threads_per_worker > 1 {
-            Some(Arc::new(Executor::new(
+            Some(Arc::new(Executor::new_pinned(
                 cfg.threads_per_worker * cfg.workers.max(1),
+                numa,
             )))
         } else {
             None

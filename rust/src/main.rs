@@ -25,7 +25,9 @@ use dlio::loader::LoaderConfig;
 use dlio::net::transport::{NetTuning, TransportKind};
 use dlio::net::{Fabric, FabricConfig};
 use dlio::runtime::{default_artifacts_dir, Engine};
-use dlio::storage::{generate, Catalog, StorageSystem, SyntheticSpec, TokenBucket};
+use dlio::storage::{
+    generate, Catalog, StorageEngine, StorageSystem, SyntheticSpec, TokenBucket,
+};
 use dlio::{analytic, figures};
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -189,7 +191,13 @@ fn train(args: &Args) -> Result<()> {
         _ => None,
     };
     let engine = Arc::new(Engine::load(&default_artifacts_dir())?);
-    let storage = Arc::new(StorageSystem::open(&dir, throttle)?);
+    // --storage-engine auto|pread|uring selects the batched submission
+    // backend (DESIGN.md §15); `auto` uses io_uring only when the crate
+    // was built with the `uring` feature AND the kernel admits it.
+    let storage_engine =
+        StorageEngine::parse(&args.str_or("storage-engine", "auto"))?;
+    let storage =
+        Arc::new(StorageSystem::open_engine(&dir, throttle, storage_engine)?);
     let fabric = Arc::new(Fabric::new(FabricConfig {
         real_time: args.flag("real-fabric"),
         ..Default::default()
@@ -240,6 +248,14 @@ fn train(args: &Args) -> Result<()> {
             0 => None,
             s => Some(s),
         },
+        // Storage wave model + NUMA placement (DESIGN.md §15):
+        //   --storage-latency 0.002   per-request device latency; blocking
+        //                             reads pay it per coalesced run, waves
+        //                             once per submission wave
+        //   --numa-pin                probe sysfs topology and pin decode/
+        //                             spill executor shards per learner
+        storage_latency_s: args.f64_or("storage-latency", 0.0)?,
+        numa_pin: args.flag("numa-pin"),
         // Network tuning (DESIGN.md §14): only installed when a flag is
         // present, so default runs stay bit-identical.
         net: net_tuning(args)?,

@@ -442,6 +442,91 @@ impl FabricSnapshot {
     }
 }
 
+/// Storage-engine snapshot ([`crate::storage::StorageSystem::storage_snapshot`]):
+/// meters the batched async submission path (DESIGN.md §15) — how deep the
+/// waves run, whether the modeled per-request storage latency actually
+/// overlapped, and where the landed pages sat relative to the consuming
+/// NUMA node.
+///
+/// * `serialized_storage_s` — modeled per-request service latency summed
+///   as if every run in every wave paid it back-to-back (the blocking
+///   baseline). Zero when `storage_latency_s` is unset.
+/// * `overlapped_storage_s` — the same latency as actually charged: once
+///   per submission wave on the async path, once per run on the blocking
+///   path. `serialized / overlapped` — [`overlap_ratio`] — is therefore
+///   ≈1 for blocking reads and →(runs per wave) at full submission-wave
+///   overlap.
+///
+/// [`overlap_ratio`]: StorageSnapshot::overlap_ratio
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StorageSnapshot {
+    /// Submission waves begun (`read_batch_begin` calls).
+    pub waves: u64,
+    /// SQEs pushed to the uring backend (0 on the pread fallback).
+    pub sqes: u64,
+    /// CQEs reaped from the uring backend.
+    pub cqes: u64,
+    /// Peak runs submitted in a single wave (lifetime gauge; `delta`
+    /// keeps the later value, it cannot be windowed).
+    pub wave_depth_peak: u64,
+    /// Peak concurrently in-flight uring reads across all waves.
+    pub inflight_peak: u64,
+    pub serialized_storage_s: f64,
+    pub overlapped_storage_s: f64,
+    /// Whether the uring backend is live (false: mmap/pread fallback).
+    pub engine_uring: bool,
+    /// 4 KiB pages landed on the consuming learner's NUMA node (or
+    /// unattributable — single-node hosts count everything here).
+    pub local_pages: u64,
+    /// Pages landed on a *different* node than the learner they serve.
+    pub cross_node_pages: u64,
+    /// NUMA nodes the placement policy saw (1 = no topology / no pinning).
+    pub numa_nodes: u64,
+}
+
+impl StorageSnapshot {
+    /// Measured submission-wave overlap factor: modeled serialized storage
+    /// seconds per charged second. 0 when no latency model is configured
+    /// (`storage_latency_s = 0`), so "not modeled" is distinguishable
+    /// from "no overlap" (≈1).
+    pub fn overlap_ratio(&self) -> f64 {
+        if self.overlapped_storage_s <= 0.0 {
+            0.0
+        } else {
+            self.serialized_storage_s / self.overlapped_storage_s
+        }
+    }
+
+    /// Fraction of landed pages that crossed a NUMA boundary.
+    pub fn cross_node_page_ratio(&self) -> f64 {
+        let total = self.local_pages + self.cross_node_pages;
+        if total == 0 {
+            0.0
+        } else {
+            self.cross_node_pages as f64 / total as f64
+        }
+    }
+
+    pub fn delta(&self, earlier: &StorageSnapshot) -> StorageSnapshot {
+        StorageSnapshot {
+            waves: self.waves - earlier.waves,
+            sqes: self.sqes - earlier.sqes,
+            cqes: self.cqes - earlier.cqes,
+            wave_depth_peak: self.wave_depth_peak,
+            inflight_peak: self.inflight_peak,
+            serialized_storage_s: self.serialized_storage_s
+                - earlier.serialized_storage_s,
+            overlapped_storage_s: self.overlapped_storage_s
+                - earlier.overlapped_storage_s,
+            engine_uring: self.engine_uring,
+            local_pages: self.local_pages - earlier.local_pages,
+            cross_node_pages: self.cross_node_pages
+                - earlier.cross_node_pages,
+            numa_nodes: self.numa_nodes,
+        }
+    }
+}
+
 /// Counters for the shared epoch-partition planner
 /// ([`crate::sampler::PartitionPlanner`]): one planner per process computes
 /// each step's partition once on a background thread; these meter that the
@@ -888,6 +973,53 @@ mod tests {
         // Peaks are lifetime gauges: the delta keeps the later value.
         assert_eq!(d.inflight_peak, 4);
         assert_eq!(d.max_transfer_s, 0.25);
+    }
+
+    #[test]
+    fn storage_snapshot_ratios_and_delta() {
+        let a = StorageSnapshot {
+            waves: 2,
+            sqes: 10,
+            cqes: 10,
+            wave_depth_peak: 6,
+            inflight_peak: 8,
+            serialized_storage_s: 0.6,
+            overlapped_storage_s: 0.2,
+            engine_uring: true,
+            local_pages: 90,
+            cross_node_pages: 10,
+            numa_nodes: 2,
+        };
+        assert!((a.overlap_ratio() - 3.0).abs() < 1e-12);
+        assert!((a.cross_node_page_ratio() - 0.1).abs() < 1e-12);
+        // No latency model configured => "not modeled", not "no overlap".
+        assert_eq!(StorageSnapshot::default().overlap_ratio(), 0.0);
+        assert_eq!(StorageSnapshot::default().cross_node_page_ratio(), 0.0);
+        let b = StorageSnapshot {
+            waves: 5,
+            sqes: 22,
+            cqes: 22,
+            wave_depth_peak: 7,
+            inflight_peak: 9,
+            serialized_storage_s: 1.2,
+            overlapped_storage_s: 0.3,
+            engine_uring: true,
+            local_pages: 150,
+            cross_node_pages: 30,
+            numa_nodes: 2,
+        };
+        let d = b.delta(&a);
+        assert_eq!(d.waves, 3);
+        assert_eq!(d.sqes, 12);
+        assert_eq!(d.cqes, 12);
+        assert!((d.serialized_storage_s - 0.6).abs() < 1e-12);
+        assert!((d.overlapped_storage_s - 0.1).abs() < 1e-12);
+        assert!((d.overlap_ratio() - 6.0).abs() < 1e-12);
+        assert_eq!(d.local_pages, 60);
+        assert_eq!(d.cross_node_pages, 20);
+        // Peaks are lifetime gauges: the delta keeps the later value.
+        assert_eq!(d.wave_depth_peak, 7);
+        assert_eq!(d.inflight_peak, 9);
     }
 
     #[test]

@@ -64,6 +64,16 @@ pub struct SimConfig {
     pub per_learner_batch: usize,
     /// Aggregate storage bandwidth R, bytes/s.
     pub r_storage_bps: f64,
+    /// Per-request storage device latency, seconds (async-supply term,
+    /// DESIGN.md §15). Each storage-served sample's coalesced request
+    /// costs this much on the device; 0 keeps the bandwidth-only model
+    /// bit-identical.
+    pub storage_req_latency_s: f64,
+    /// Storage queue depth: requests a submission wave keeps in flight.
+    /// 1 models the blocking pread loader (latency fully serialized);
+    /// larger depths overlap request latency across the wave. Values < 1
+    /// are treated as 1.
+    pub storage_qd: usize,
     /// Per-link interconnect bandwidth R_c, bytes/s.
     pub rc_link_bps: f64,
     /// Ingress fan-in width of a node's NIC complex (how many full-rate
@@ -419,7 +429,16 @@ pub fn simulate_epoch(cfg: &SimConfig) -> SimResult {
         // parallel per-link exchange, then parallel per-node preprocess.
         let step_storage_bytes =
             tr.storage_bytes + if dead { dead_reroute_bytes } else { 0.0 };
-        let t_storage = step_storage_bytes / cfg.r_storage_bps;
+        // Async-supply term (Eqs. 7/8 extension): the step's storage
+        // requests each pay the device latency, amortized by the wave's
+        // queue depth; bandwidth and latency add because the shared
+        // front-end pipelines transfers behind the seek/submit path.
+        let storage_reqs =
+            step_storage_bytes / cfg.catalog.avg_bytes.max(1) as f64;
+        let t_storage_lat = storage_reqs * cfg.storage_req_latency_s
+            / cfg.storage_qd.max(1) as f64;
+        let t_storage =
+            step_storage_bytes / cfg.r_storage_bps + t_storage_lat;
         let t_remote = tr.max_link_bytes / cfg.rc_link_bps;
         let t_pre = if u_node.is_finite() {
             tr.max_node_batch * share_gate / u_node * straggler_m
@@ -553,6 +572,40 @@ mod tests {
             (10.0..120.0).contains(&ratio),
             "256-node speedup {ratio} out of the paper's regime (~34x)"
         );
+    }
+
+    #[test]
+    fn async_supply_term_degenerates_and_amortizes() {
+        // storage_req_latency_s = 0 is the preset default: the
+        // bandwidth-only model must be reproduced bit-for-bit.
+        let base = presets::loading_only(
+            Catalog::imagenet_1k(),
+            16,
+            Scheme::Reg,
+            true,
+        );
+        assert_eq!(base.storage_req_latency_s, 0.0);
+        let t_base = simulate_epoch(&base).epoch_time_s;
+        let mut qd1 = base.clone();
+        qd1.storage_req_latency_s = 2e-4;
+        let t_qd1 = simulate_epoch(&qd1).epoch_time_s;
+        assert!(
+            t_qd1 > t_base,
+            "blocking request latency must cost time: {t_qd1} vs {t_base}"
+        );
+        // A 32-deep submission wave overlaps most of that latency.
+        let mut qd32 = qd1.clone();
+        qd32.storage_qd = 32;
+        let t_qd32 = simulate_epoch(&qd32).epoch_time_s;
+        assert!(
+            t_qd1 > t_qd32 && t_qd32 >= t_base,
+            "queue depth must amortize latency: qd1={t_qd1} qd32={t_qd32} \
+             base={t_base}"
+        );
+        // qd = 0 clamps to 1 rather than dividing by zero.
+        let mut qd0 = qd1.clone();
+        qd0.storage_qd = 0;
+        assert_eq!(simulate_epoch(&qd0).epoch_time_s, t_qd1);
     }
 
     #[test]

@@ -48,6 +48,11 @@ pub fn loading_only(
         learners_per_node: 4,
         per_learner_batch: 128,
         r_storage_bps: R_STORAGE_BPS,
+        // GPFS-class front-end: request latency is hidden by the deep
+        // server-side queues at Lassen scale; sweeps override these to
+        // study the blocking-vs-wave supply ablation (DESIGN.md §15).
+        storage_req_latency_s: 0.0,
+        storage_qd: 1,
         rc_link_bps: RC_LINK_BPS,
         rc_ingress_rails: RC_INGRESS_RAILS,
         u_thread_sps: U_THREAD_SPS,

@@ -252,6 +252,12 @@ impl ShardReader {
         self.index[i].len as usize
     }
 
+    /// Full index entry for record `i` (offset/len/label) — the async
+    /// storage engine plans O_DIRECT-aligned range reads from these.
+    pub(crate) fn entry(&self, i: usize) -> IndexEntry {
+        self.index[i]
+    }
+
     /// Read record `i` into a fresh buffer.
     pub fn read(&self, i: usize) -> Result<Vec<u8>> {
         let e = self.index[i];

@@ -8,10 +8,14 @@ pub mod format;
 pub mod generator;
 pub mod system;
 pub mod throttle;
+/// Raw-syscall io_uring wrapper (64-bit Linux only; other targets use
+/// the blocking backend unconditionally).
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+pub mod uring;
 
 pub use bytes::SampleBytes;
 pub use catalog::Catalog;
 pub use format::{ShardReader, ShardWriter};
 pub use generator::{generate, DatasetMeta, SyntheticSpec};
-pub use system::{Sample, StorageSystem};
+pub use system::{Sample, StorageEngine, StorageSystem, StorageWave};
 pub use throttle::TokenBucket;

@@ -6,19 +6,83 @@
 //! [`TokenBucket`]. Thread-safe; loader workers call [`read_sample`]
 //! concurrently.
 //!
+//! Two read paths serve batches (DESIGN.md §15):
+//!
+//! * **Blocking** — [`read_batch`]/[`read_batch_for`]: coalesced runs
+//!   served one after another from the mmap/`pread` shard readers. This
+//!   is the portable baseline and the behavior every pre-existing caller
+//!   keeps.
+//! * **Submission waves** — [`read_batch_begin`] queues a batch's
+//!   coalesced runs as ONE async submission (io_uring `READ_FIXED` into
+//!   registered aligned buffers against O_DIRECT shard fds, when the
+//!   [`StorageEngine`] resolves to uring) and returns a [`StorageWave`];
+//!   [`StorageWave::wait`] reaps completions later, so decode work and
+//!   in-flight remote transfers overlap the storage service time. The
+//!   wave API works on every engine — without uring the runs are served
+//!   by the blocking readers at `wait`, so callers never branch.
+//!
+//! Both paths return bit-identical bytes and identical run/byte
+//! accounting; `tests/storage_engine.rs` property-tests that parity.
+//!
 //! [`read_sample`]: StorageSystem::read_sample
+//! [`read_batch`]: StorageSystem::read_batch
+//! [`read_batch_for`]: StorageSystem::read_batch_for
+//! [`read_batch_begin`]: StorageSystem::read_batch_begin
 
 use super::bytes::SampleBytes;
 use super::format::ShardReader;
 use super::generator::DatasetMeta;
 use super::throttle::TokenBucket;
-use crate::fault::FaultPlan;
+use crate::fault::{Deadlines, FaultPlan};
+use crate::metrics::StorageSnapshot;
+use crate::util::numa;
+use crate::util::NumaTopology;
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::Duration;
+
+/// O_DIRECT/page alignment for the async engine's range reads.
+const DIRECT_ALIGN: u64 = 4096;
+
+/// Which backend serves submission waves.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StorageEngine {
+    /// io_uring when the crate was built with the `uring` feature AND the
+    /// running kernel allows it; the mmap/`pread` path otherwise.
+    #[default]
+    Auto,
+    /// Always the portable mmap/`pread` path.
+    Pread,
+    /// Ask for io_uring regardless of the feature flag; still degrades to
+    /// the pread path when the kernel (or a seccomp sandbox) refuses.
+    Uring,
+}
+
+impl StorageEngine {
+    pub fn parse(s: &str) -> Result<StorageEngine> {
+        match s {
+            "auto" => Ok(StorageEngine::Auto),
+            "pread" | "mmap" => Ok(StorageEngine::Pread),
+            "uring" | "io_uring" => Ok(StorageEngine::Uring),
+            other => bail!(
+                "unknown storage engine {other:?} (auto|pread|uring)"
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for StorageEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            StorageEngine::Auto => "auto",
+            StorageEngine::Pread => "pread",
+            StorageEngine::Uring => "uring",
+        })
+    }
+}
 
 /// A read sample: an `Arc`-backed payload handle plus its label. Cloning
 /// is cheap (no payload copy); a cache hit hands the same handle to every
@@ -36,6 +100,49 @@ impl Sample {
     }
 }
 
+/// NUMA placement policy the trainer installs: which topology the
+/// learners were pinned against, so landed wave pages can be attributed
+/// local/cross-node.
+#[derive(Clone)]
+struct NumaPlacement {
+    topo: Arc<NumaTopology>,
+    learners: usize,
+}
+
+/// Wave/engine counters behind [`StorageSystem::storage_snapshot`].
+#[derive(Default)]
+struct WaveStats {
+    waves: AtomicU64,
+    sqes: AtomicU64,
+    cqes: AtomicU64,
+    wave_depth_peak: AtomicU64,
+    inflight: AtomicU64,
+    inflight_peak: AtomicU64,
+    serialized_ns: AtomicU64,
+    overlapped_ns: AtomicU64,
+    local_pages: AtomicU64,
+    cross_node_pages: AtomicU64,
+}
+
+/// One coalesced contiguous record run of a batch.
+#[derive(Clone, Copy, Debug)]
+struct WaveRun {
+    shard: usize,
+    lo: usize,
+    hi: usize,
+    /// Payload bytes spanned by the run.
+    span: u64,
+    /// File offset of the first record.
+    base: u64,
+}
+
+/// A run that went out on the uring submission wave.
+struct SubmittedRun {
+    token: u64,
+    buf: usize,
+    aligned_lo: u64,
+}
+
 /// Shared, bandwidth-limited storage backend.
 pub struct StorageSystem {
     meta: DatasetMeta,
@@ -48,15 +155,44 @@ pub struct StorageSystem {
     ///
     /// [`read_batch_for`]: StorageSystem::read_batch_for
     fault: RwLock<Option<Arc<FaultPlan>>>,
+    /// Deadline budgets; only `storage` is consulted here — it bounds
+    /// every token-bucket admission (DESIGN.md §15).
+    deadlines: RwLock<Deadlines>,
+    /// Modeled per-request storage service latency (GPFS RPC time), f64
+    /// seconds as bits. 0 (the default) disables the model entirely —
+    /// the blocking path then behaves bit-identically to before.
+    latency_bits: AtomicU64,
+    numa: RwLock<Option<NumaPlacement>>,
+    stats: WaveStats,
+    uring: Option<backend::UringBackend>,
 }
 
 impl StorageSystem {
     /// Open a materialized dataset directory (see [`generator::generate`]).
     /// Shards open in mmap mode (with transparent `pread` fallback), so
     /// `read_sample`/`read_batch` hand out zero-copy payload views.
+    /// Submission waves use the portable blocking backend; use
+    /// [`open_engine`] to opt into io_uring.
     ///
     /// [`generator::generate`]: super::generator::generate
+    /// [`open_engine`]: StorageSystem::open_engine
     pub fn open(dir: &Path, throttle: Option<Arc<TokenBucket>>) -> Result<Self> {
+        Self::open_engine(dir, throttle, StorageEngine::Pread)
+    }
+
+    /// [`open`], plus engine selection for the submission-wave path.
+    /// `Auto` resolves to uring only when the crate was built with the
+    /// `uring` feature; `Uring` asks unconditionally. Either way the
+    /// engine silently degrades to the blocking backend when the kernel
+    /// probe, ring setup, or O_DIRECT shard opens fail — waves then run
+    /// on mmap/`pread` with identical results.
+    ///
+    /// [`open`]: StorageSystem::open
+    pub fn open_engine(
+        dir: &Path,
+        throttle: Option<Arc<TokenBucket>>,
+        engine: StorageEngine,
+    ) -> Result<Self> {
         let meta = DatasetMeta::load(dir)?;
         let mut shards = Vec::with_capacity(meta.shards.len());
         let mut total = 0u64;
@@ -72,6 +208,16 @@ impl StorageSystem {
             meta.n_samples,
             total
         );
+        let want_uring = match engine {
+            StorageEngine::Pread => false,
+            StorageEngine::Uring => true,
+            StorageEngine::Auto => cfg!(feature = "uring"),
+        };
+        let uring = if want_uring {
+            backend::UringBackend::new(&shards)
+        } else {
+            None
+        };
         Ok(StorageSystem {
             meta,
             shards,
@@ -79,6 +225,11 @@ impl StorageSystem {
             bytes_read: AtomicU64::new(0),
             samples_read: AtomicU64::new(0),
             fault: RwLock::new(None),
+            deadlines: RwLock::new(Deadlines::none()),
+            latency_bits: AtomicU64::new(0f64.to_bits()),
+            numa: RwLock::new(None),
+            stats: WaveStats::default(),
+            uring,
         })
     }
 
@@ -87,6 +238,71 @@ impl StorageSystem {
     /// degradations.
     pub fn set_fault_plan(&self, plan: Option<Arc<FaultPlan>>) {
         *self.fault.write().unwrap() = plan;
+    }
+
+    /// Install deadline budgets; `deadlines.storage` bounds every
+    /// token-bucket admission from here on (a miss surfaces as a typed
+    /// storage stall, exit code `STALL_STORAGE`).
+    pub fn set_deadlines(&self, deadlines: Deadlines) {
+        *self.deadlines.write().unwrap() = deadlines;
+    }
+
+    /// Configure the modeled per-request storage service latency
+    /// (seconds). The blocking path charges it once per coalesced run;
+    /// a submission wave charges it once per *wave* — that difference is
+    /// exactly the async engine's win and is metered by
+    /// [`StorageSnapshot::overlap_ratio`].
+    pub fn set_storage_latency_s(&self, latency_s: f64) {
+        self.latency_bits
+            .store(latency_s.max(0.0).to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn storage_latency_s(&self) -> f64 {
+        f64::from_bits(self.latency_bits.load(Ordering::Relaxed))
+    }
+
+    /// Install the NUMA placement policy (the topology learners were
+    /// pinned against) so wave completions can meter local vs cross-node
+    /// landed pages.
+    pub fn set_numa_placement(
+        &self,
+        topo: Arc<NumaTopology>,
+        learners: usize,
+    ) {
+        *self.numa.write().unwrap() =
+            Some(NumaPlacement { topo, learners: learners.max(1) });
+    }
+
+    /// Whether submission waves currently go through io_uring.
+    pub fn uring_active(&self) -> bool {
+        self.uring.as_ref().is_some_and(|u| u.alive())
+    }
+
+    /// Engine/wave counters (DESIGN.md §15).
+    pub fn storage_snapshot(&self) -> StorageSnapshot {
+        let st = &self.stats;
+        StorageSnapshot {
+            waves: st.waves.load(Ordering::Relaxed),
+            sqes: st.sqes.load(Ordering::Relaxed),
+            cqes: st.cqes.load(Ordering::Relaxed),
+            wave_depth_peak: st.wave_depth_peak.load(Ordering::Relaxed),
+            inflight_peak: st.inflight_peak.load(Ordering::Relaxed),
+            serialized_storage_s: st.serialized_ns.load(Ordering::Relaxed)
+                as f64
+                / 1e9,
+            overlapped_storage_s: st.overlapped_ns.load(Ordering::Relaxed)
+                as f64
+                / 1e9,
+            engine_uring: self.uring_active(),
+            local_pages: st.local_pages.load(Ordering::Relaxed),
+            cross_node_pages: st.cross_node_pages.load(Ordering::Relaxed),
+            numa_nodes: self
+                .numa
+                .read()
+                .unwrap()
+                .as_ref()
+                .map_or(1, |p| p.topo.node_count() as u64),
+        }
     }
 
     pub fn meta(&self) -> &DatasetMeta {
@@ -120,25 +336,55 @@ impl StorageSystem {
         Ok(self.shards[s].record_len(i))
     }
 
+    /// One deadline-aware throttle admission ([`TokenBucket::acquire_deadline`]).
+    fn admit(&self, span: u64) -> Result<()> {
+        if let Some(tb) = &self.throttle {
+            let budget = self.deadlines.read().unwrap().storage;
+            tb.acquire_deadline(span, budget)
+                .map_err(|e| anyhow::Error::msg(e.to_string()))?;
+        }
+        Ok(())
+    }
+
+    /// Charge the modeled per-request latency for `requests` back-to-back
+    /// storage requests (the blocking path's cost shape): sleep it
+    /// per-request and account serialized == overlapped.
+    fn charge_latency_serial(&self, requests: u64) {
+        let lat = self.storage_latency_s();
+        if lat <= 0.0 || requests == 0 {
+            return;
+        }
+        let ns = (lat * 1e9) as u64;
+        for _ in 0..requests {
+            std::thread::sleep(Duration::from_secs_f64(lat));
+        }
+        self.stats
+            .serialized_ns
+            .fetch_add(ns * requests, Ordering::Relaxed);
+        self.stats
+            .overlapped_ns
+            .fetch_add(ns * requests, Ordering::Relaxed);
+    }
+
     /// Read one sample through the bandwidth throttle.
     pub fn read_sample(&self, id: u32) -> Result<Sample> {
         let (s, i) = self.locate(id)?;
         let len = self.shards[s].record_len(i);
-        if let Some(tb) = &self.throttle {
-            tb.acquire(len as u64);
-        }
+        self.admit(len as u64)?;
         let bytes = self.shards[s].read_bytes(i)?;
+        self.charge_latency_serial(1);
         self.bytes_read.fetch_add(len as u64, Ordering::Relaxed);
         self.samples_read.fetch_add(1, Ordering::Relaxed);
         Ok(Sample { id, bytes, label: self.shards[s].label(i) })
     }
 
-    /// Read a batch of samples, coalescing contiguous per-shard id runs:
-    /// one [`TokenBucket::acquire`] and one contiguous range read per run
-    /// (zero reads in mmap mode). Duplicated ids are read once. Returns
-    /// the samples in input order plus the number of runs performed.
-    pub fn read_batch(&self, ids: &[u32]) -> Result<(Vec<Sample>, usize)> {
-        // Validate and locate everything before touching the throttle.
+    /// Locate every id and coalesce into contiguous per-shard runs —
+    /// duplicated ids collapse; ids straddling a shard boundary split
+    /// into one run per shard.
+    fn plan_runs(
+        &self,
+        ids: &[u32],
+    ) -> Result<(Vec<(usize, usize)>, Vec<WaveRun>)> {
         let mut located = Vec::with_capacity(ids.len());
         for &id in ids {
             located.push(self.locate(id)?);
@@ -148,8 +394,7 @@ impl StorageSystem {
         for &(s, i) in &located {
             by_shard.entry(s).or_default().push(i);
         }
-        let mut fetched: BTreeMap<(usize, usize), SampleBytes> = BTreeMap::new();
-        let mut runs = 0usize;
+        let mut runs = Vec::new();
         for (s, mut idxs) in by_shard {
             idxs.sort_unstable();
             idxs.dedup();
@@ -161,31 +406,58 @@ impl StorageSystem {
                     j += 1;
                 }
                 let (lo, hi) = (idxs[k], idxs[j - 1] + 1);
-                let span = shard.run_bytes(lo, hi);
-                if let Some(tb) = &self.throttle {
-                    tb.acquire(span);
-                }
-                let recs = shard.read_run(lo, hi)?;
-                self.bytes_read.fetch_add(span, Ordering::Relaxed);
-                self.samples_read
-                    .fetch_add((hi - lo) as u64, Ordering::Relaxed);
-                for (off, rec) in recs.into_iter().enumerate() {
-                    fetched.insert((s, lo + off), rec);
-                }
-                runs += 1;
+                runs.push(WaveRun {
+                    shard: s,
+                    lo,
+                    hi,
+                    span: shard.run_bytes(lo, hi),
+                    base: shard.entry(lo).offset,
+                });
                 k = j;
             }
         }
-        let out = ids
-            .iter()
-            .zip(&located)
+        Ok((located, runs))
+    }
+
+    /// Assemble the output batch (input order, duplicates resolved) from
+    /// per-record fetched bytes.
+    fn assemble(
+        &self,
+        ids: &[u32],
+        located: &[(usize, usize)],
+        fetched: &BTreeMap<(usize, usize), SampleBytes>,
+    ) -> Vec<Sample> {
+        ids.iter()
+            .zip(located)
             .map(|(&id, &(s, i))| Sample {
                 id,
                 bytes: fetched[&(s, i)].clone(),
                 label: self.shards[s].label(i),
             })
-            .collect();
-        Ok((out, runs))
+            .collect()
+    }
+
+    /// Read a batch of samples, coalescing contiguous per-shard id runs:
+    /// one throttle admission and one contiguous range read per run
+    /// (zero reads in mmap mode). Duplicated ids are read once. Returns
+    /// the samples in input order plus the number of runs performed.
+    pub fn read_batch(&self, ids: &[u32]) -> Result<(Vec<Sample>, usize)> {
+        let (located, runs) = self.plan_runs(ids)?;
+        let mut fetched: BTreeMap<(usize, usize), SampleBytes> =
+            BTreeMap::new();
+        for run in &runs {
+            let shard = &self.shards[run.shard];
+            self.admit(run.span)?;
+            let recs = shard.read_run(run.lo, run.hi)?;
+            self.charge_latency_serial(1);
+            self.bytes_read.fetch_add(run.span, Ordering::Relaxed);
+            self.samples_read
+                .fetch_add((run.hi - run.lo) as u64, Ordering::Relaxed);
+            for (off, rec) in recs.into_iter().enumerate() {
+                fetched.insert((run.shard, run.lo + off), rec);
+            }
+        }
+        Ok((self.assemble(ids, &located, &fetched), runs.len()))
     }
 
     /// Node-aware batched read: [`StorageSystem::read_batch`] plus the
@@ -236,6 +508,114 @@ impl StorageSystem {
         Ok(out)
     }
 
+    /// Begin a submission wave for a batch: coalesce runs, admit them
+    /// through the throttle (once per run), and — on the uring engine —
+    /// queue every run as one async submission. Returns immediately; the
+    /// caller overlaps other work and collects via [`StorageWave::wait`].
+    pub fn read_batch_begin(
+        self: &Arc<Self>,
+        ids: &[u32],
+    ) -> Result<StorageWave> {
+        self.wave_begin(None, ids)
+    }
+
+    /// Node-attributed [`read_batch_begin`]: the wave consumes the fault
+    /// plan's degradations for `node` at [`StorageWave::wait`] (one
+    /// injected-failure draw per *wave*, not per run), and landed pages
+    /// are metered against the node's NUMA placement.
+    ///
+    /// [`read_batch_begin`]: StorageSystem::read_batch_begin
+    pub fn read_batch_begin_for(
+        self: &Arc<Self>,
+        node: usize,
+        ids: &[u32],
+    ) -> Result<StorageWave> {
+        self.wave_begin(Some(node), ids)
+    }
+
+    fn wave_begin(
+        self: &Arc<Self>,
+        node: Option<usize>,
+        ids: &[u32],
+    ) -> Result<StorageWave> {
+        let (located, runs) = self.plan_runs(ids)?;
+        for run in &runs {
+            self.admit(run.span)?;
+        }
+        self.stats.waves.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .wave_depth_peak
+            .fetch_max(runs.len() as u64, Ordering::Relaxed);
+        let submitted = match &self.uring {
+            Some(backend) if backend.alive() => {
+                let reads: Vec<Option<backend::RunRead>> = runs
+                    .iter()
+                    .map(|r| {
+                        let aligned_lo =
+                            r.base / DIRECT_ALIGN * DIRECT_ALIGN;
+                        let end = r.base + r.span;
+                        let read_len =
+                            end.div_ceil(DIRECT_ALIGN) * DIRECT_ALIGN
+                                - aligned_lo;
+                        (read_len <= backend.max_read()).then_some(
+                            backend::RunRead {
+                                shard: r.shard,
+                                aligned_lo,
+                                read_len,
+                            },
+                        )
+                    })
+                    .collect();
+                let subs = backend.submit_wave(&reads);
+                let n = subs.iter().filter(|s| s.is_some()).count() as u64;
+                if n > 0 {
+                    self.stats.sqes.fetch_add(n, Ordering::Relaxed);
+                    let now = self
+                        .stats
+                        .inflight
+                        .fetch_add(n, Ordering::Relaxed)
+                        + n;
+                    self.stats
+                        .inflight_peak
+                        .fetch_max(now, Ordering::Relaxed);
+                }
+                subs
+            }
+            _ => runs.iter().map(|_| None).collect(),
+        };
+        Ok(StorageWave {
+            sys: Arc::clone(self),
+            ids: ids.to_vec(),
+            located,
+            runs,
+            submitted,
+            node,
+        })
+    }
+
+    /// Attribute `span` landed bytes (as 4 KiB pages) local/cross-node
+    /// relative to the placement policy and the reaping thread's pin.
+    fn meter_pages(&self, node: Option<usize>, span: u64) {
+        if span == 0 {
+            return;
+        }
+        let pages = span.div_ceil(DIRECT_ALIGN);
+        let cross = match (node, self.numa.read().unwrap().as_ref()) {
+            (Some(learner), Some(p)) if p.topo.node_count() > 1 => {
+                let target = p.topo.node_for_learner(learner, p.learners);
+                numa::current_node().is_some_and(|me| me != target)
+            }
+            _ => false,
+        };
+        if cross {
+            self.stats
+                .cross_node_pages
+                .fetch_add(pages, Ordering::Relaxed);
+        } else {
+            self.stats.local_pages.fetch_add(pages, Ordering::Relaxed);
+        }
+    }
+
     /// Total bytes served (metrics).
     pub fn bytes_read(&self) -> u64 {
         self.bytes_read.load(Ordering::Relaxed)
@@ -252,6 +632,474 @@ impl StorageSystem {
     }
 }
 
+/// An in-flight submission wave (see [`StorageSystem::read_batch_begin`]).
+/// Dropping an unwaited wave reaps its completions and returns the
+/// registered buffers — nothing leaks if a batch is abandoned mid-flight.
+pub struct StorageWave {
+    sys: Arc<StorageSystem>,
+    ids: Vec<u32>,
+    located: Vec<(usize, usize)>,
+    runs: Vec<WaveRun>,
+    /// Parallel to `runs`; `None` entries are served by the blocking
+    /// readers at `wait`. Entries are `take`n as they are reaped so the
+    /// `Drop` sweep only touches leftovers.
+    submitted: Vec<Option<SubmittedRun>>,
+    node: Option<usize>,
+}
+
+impl StorageWave {
+    /// Number of coalesced runs in this wave (== the blocking path's run
+    /// count for the same ids).
+    pub fn runs(&self) -> usize {
+        self.runs.len()
+    }
+
+    /// Runs that actually went out on the async submission.
+    pub fn submitted_runs(&self) -> usize {
+        self.submitted.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Collect the wave: reap async completions (copying each record out
+    /// of its registered buffer into an exact-size allocation), serve any
+    /// fallback runs via the blocking readers, charge the modeled
+    /// per-request latency ONCE for the whole wave, and apply the fault
+    /// plan's node degradations. Returns exactly what
+    /// [`StorageSystem::read_batch`] returns for the same ids.
+    pub fn wait(mut self) -> Result<(Vec<Sample>, usize)> {
+        let sys = Arc::clone(&self.sys);
+        // Node degradations (one draw per wave, not per run).
+        let nf = match self.node {
+            Some(node) => {
+                let guard = sys.fault.read().unwrap();
+                match guard.as_ref() {
+                    Some(plan) if !plan.node(node).is_inert() => {
+                        if plan.next_read_fails(node) {
+                            // Drop reaps the in-flight runs.
+                            bail!(
+                                "injected storage read failure (node {node})"
+                            );
+                        }
+                        Some(plan.node(node))
+                    }
+                    _ => None,
+                }
+            }
+            None => None,
+        };
+        if let Some(nf) = &nf {
+            if nf.read_latency_s > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(
+                    nf.read_latency_s,
+                ));
+            }
+        }
+        let mut fetched: BTreeMap<(usize, usize), SampleBytes> =
+            BTreeMap::new();
+        let n_runs = self.runs.len();
+        let runs = self.runs.clone();
+        for (k, run) in runs.iter().enumerate() {
+            match self.submitted[k].take() {
+                Some(sub) => {
+                    sys.stats.inflight.fetch_sub(1, Ordering::Relaxed);
+                    self.reap_run(run, sub, &mut fetched)?;
+                }
+                None => {
+                    let recs = sys.shards[run.shard]
+                        .read_run(run.lo, run.hi)?;
+                    for (off, rec) in recs.into_iter().enumerate() {
+                        fetched.insert((run.shard, run.lo + off), rec);
+                    }
+                }
+            }
+            sys.bytes_read.fetch_add(run.span, Ordering::Relaxed);
+            sys.samples_read
+                .fetch_add((run.hi - run.lo) as u64, Ordering::Relaxed);
+        }
+        // The async engine's modeled win: one wave pays the per-request
+        // service latency once (completion time ≈ max over runs), while
+        // the blocking path pays it per run.
+        let lat = sys.storage_latency_s();
+        if lat > 0.0 && n_runs > 0 {
+            std::thread::sleep(Duration::from_secs_f64(lat));
+            let ns = (lat * 1e9) as u64;
+            sys.stats
+                .serialized_ns
+                .fetch_add(ns * n_runs as u64, Ordering::Relaxed);
+            sys.stats.overlapped_ns.fetch_add(ns, Ordering::Relaxed);
+        }
+        let total_span: u64 = runs.iter().map(|r| r.span).sum();
+        sys.meter_pages(self.node, total_span);
+        if let (Some(nf), Some(tb)) = (&nf, &sys.throttle) {
+            if nf.disk_rate_scale < 1.0 {
+                let extra = total_span as f64 / tb.rate_bps()
+                    * (1.0 / nf.disk_rate_scale.max(1e-9) - 1.0);
+                std::thread::sleep(Duration::from_secs_f64(extra));
+            }
+        }
+        Ok((sys.assemble(&self.ids, &self.located, &fetched), n_runs))
+    }
+
+    /// Reap one submitted run: wait its completion, validate the read,
+    /// copy each record into its own exact-size allocation (so nothing
+    /// downstream pins the padded buffer) and release the buffer lease.
+    /// Short or failed reads fall back to the blocking reader — a real
+    /// I/O error then surfaces from there.
+    fn reap_run(
+        &self,
+        run: &WaveRun,
+        sub: SubmittedRun,
+        fetched: &mut BTreeMap<(usize, usize), SampleBytes>,
+    ) -> Result<()> {
+        let sys = &self.sys;
+        let backend = sys.uring.as_ref().expect("submitted without backend");
+        let needed = run.base + run.span - sub.aligned_lo;
+        let mut ok = false;
+        match backend.wait_token(sub.token) {
+            Ok(res) => {
+                sys.stats.cqes.fetch_add(1, Ordering::Relaxed);
+                if res >= 0 && res as u64 >= needed {
+                    let shard = &sys.shards[run.shard];
+                    for i in run.lo..run.hi {
+                        let e = shard.entry(i);
+                        let rec = backend.copy_out(
+                            sub.buf,
+                            (e.offset - sub.aligned_lo) as usize,
+                            e.len as usize,
+                        );
+                        fetched.insert(
+                            (run.shard, i),
+                            SampleBytes::from_vec(rec),
+                        );
+                    }
+                    ok = true;
+                } else if res < 0 {
+                    backend.disable_if_unsupported(-res);
+                }
+                backend.release(sub.buf);
+            }
+            Err(_) => {
+                // The completion never arrived; the kernel may still
+                // write the buffer, so its lease deliberately leaks (the
+                // pool keeps the memory alive) and the backend retires.
+                backend.retire();
+            }
+        }
+        if !ok {
+            let recs = sys.shards[run.shard].read_run(run.lo, run.hi)?;
+            for (off, rec) in recs.into_iter().enumerate() {
+                fetched.insert((run.shard, run.lo + off), rec);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for StorageWave {
+    fn drop(&mut self) {
+        let Some(backend) = self.sys.uring.as_ref() else { return };
+        for sub in self.submitted.iter_mut() {
+            if let Some(s) = sub.take() {
+                self.sys.stats.inflight.fetch_sub(1, Ordering::Relaxed);
+                if backend.wait_token(s.token).is_ok() {
+                    self.sys.stats.cqes.fetch_add(1, Ordering::Relaxed);
+                    backend.release(s.buf);
+                } else {
+                    backend.retire();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+mod backend {
+    //! The io_uring wave backend: one shared ring (a broker under a
+    //! mutex), registered aligned buffers from an [`AlignedPool`], and
+    //! per-shard O_DIRECT fds (buffered fallback per shard — tmpfs and
+    //! friends refuse O_DIRECT).
+
+    use super::super::format::ShardReader;
+    use super::super::uring;
+    use crate::util::AlignedPool;
+    use std::collections::HashMap;
+    use std::fs::{File, OpenOptions};
+    use std::os::unix::fs::OpenOptionsExt;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Mutex;
+
+    #[cfg(target_arch = "aarch64")]
+    const O_DIRECT: i32 = 0x10000;
+    #[cfg(not(target_arch = "aarch64"))]
+    const O_DIRECT: i32 = 0x4000;
+
+    const RING_ENTRIES: u32 = 256;
+    const POOL_BUFS: usize = 16;
+    const POOL_BUF_BYTES: usize = 2 << 20; // 2 MiB per registered buffer
+    const EINVAL: i32 = 22;
+    const EOPNOTSUPP: i32 = 95;
+
+    /// One planned aligned range read (`None` in the wave's plan = too
+    /// large for a registered buffer, serve blocking).
+    pub(super) struct RunRead {
+        pub(super) shard: usize,
+        pub(super) aligned_lo: u64,
+        pub(super) read_len: u64,
+    }
+
+    struct DirectFile {
+        file: File,
+        /// Whether this fd actually carries O_DIRECT (informational; the
+        /// aligned read protocol is identical either way).
+        #[allow(dead_code)]
+        direct: bool,
+    }
+
+    struct RingShared {
+        ring: uring::Ring,
+        /// Completions reaped on behalf of other waiters.
+        done: HashMap<u64, i32>,
+        next_token: u64,
+    }
+
+    pub(super) struct UringBackend {
+        shared: Mutex<RingShared>,
+        pool: AlignedPool,
+        files: Vec<DirectFile>,
+        /// Whether the pool buffers are registered (READ_FIXED); plain
+        /// READ otherwise (tight RLIMIT_MEMLOCK).
+        fixed: bool,
+        /// Set when the kernel refused an operation mid-flight; all
+        /// future waves fall back to the blocking path.
+        dead: AtomicBool,
+    }
+
+    impl UringBackend {
+        /// Build the backend, or decline (`None`) — kernel probe, ring
+        /// setup or shard opens failing all mean "use the blocking path".
+        pub(super) fn new(shards: &[ShardReader]) -> Option<UringBackend> {
+            if !uring::available() {
+                return None;
+            }
+            let mut ring = uring::Ring::new(RING_ENTRIES).ok()?;
+            let pool = AlignedPool::new(
+                POOL_BUFS,
+                POOL_BUF_BYTES,
+                super::DIRECT_ALIGN as usize,
+            );
+            let iovecs: Vec<uring::IoVec> = (0..pool.count())
+                .map(|i| uring::IoVec {
+                    base: pool.buf(i).as_ptr(),
+                    len: pool.buf_size(),
+                })
+                .collect();
+            let fixed = ring.register_buffers(&iovecs).is_ok();
+            let mut files = Vec::with_capacity(shards.len());
+            for s in shards {
+                let (file, direct) = match OpenOptions::new()
+                    .read(true)
+                    .custom_flags(O_DIRECT)
+                    .open(s.path())
+                {
+                    Ok(f) => (f, true),
+                    // tmpfs/overlayfs refuse O_DIRECT; buffered reads
+                    // through the same aligned protocol are still valid.
+                    Err(_) => (File::open(s.path()).ok()?, false),
+                };
+                files.push(DirectFile { file, direct });
+            }
+            Some(UringBackend {
+                shared: Mutex::new(RingShared {
+                    ring,
+                    done: HashMap::new(),
+                    next_token: 1,
+                }),
+                pool,
+                files,
+                fixed,
+                dead: AtomicBool::new(false),
+            })
+        }
+
+        pub(super) fn alive(&self) -> bool {
+            !self.dead.load(Ordering::Relaxed)
+        }
+
+        pub(super) fn retire(&self) {
+            self.dead.store(true, Ordering::Relaxed);
+        }
+
+        /// Permanent-looking completion errors (unsupported opcode on an
+        /// old kernel, O_DIRECT misalignment rejection) retire the
+        /// backend; transient errors don't.
+        pub(super) fn disable_if_unsupported(&self, errno: i32) {
+            if errno == EINVAL || errno == EOPNOTSUPP {
+                self.retire();
+            }
+        }
+
+        /// Largest aligned range a single registered buffer can take.
+        pub(super) fn max_read(&self) -> u64 {
+            self.pool.buf_size() as u64
+        }
+
+        pub(super) fn copy_out(
+            &self,
+            buf: usize,
+            off: usize,
+            len: usize,
+        ) -> Vec<u8> {
+            self.pool.buf(buf).copy_out(off, len)
+        }
+
+        pub(super) fn release(&self, buf: usize) {
+            self.pool.put(buf);
+        }
+
+        /// Queue every planned read and kick the kernel ONCE — the wave's
+        /// single `io_uring_enter`. Per-run `None` results (pool
+        /// exhausted, queue full after one flush, backend retired) mean
+        /// "serve that run blocking".
+        pub(super) fn submit_wave(
+            &self,
+            reads: &[Option<RunRead>],
+        ) -> Vec<Option<super::SubmittedRun>> {
+            let mut out: Vec<Option<super::SubmittedRun>> =
+                Vec::with_capacity(reads.len());
+            let mut sh = self.shared.lock().unwrap();
+            for read in reads {
+                let Some(r) = read else {
+                    out.push(None);
+                    continue;
+                };
+                if !self.alive() {
+                    out.push(None);
+                    continue;
+                }
+                let Some(buf) = self.pool.take() else {
+                    out.push(None);
+                    continue;
+                };
+                let token = sh.next_token;
+                sh.next_token += 1;
+                let addr = self.pool.buf(buf).as_ptr();
+                let index = self.fixed.then_some(buf as u16);
+                let mut pushed = sh.ring.push_read(
+                    &self.files[r.shard].file,
+                    addr,
+                    r.read_len as u32,
+                    r.aligned_lo,
+                    token,
+                    index,
+                );
+                if !pushed {
+                    // Queue full: flush what's there, then retry once.
+                    if sh.ring.submit().is_err() {
+                        self.retire();
+                    } else {
+                        pushed = sh.ring.push_read(
+                            &self.files[r.shard].file,
+                            addr,
+                            r.read_len as u32,
+                            r.aligned_lo,
+                            token,
+                            index,
+                        );
+                    }
+                }
+                if pushed {
+                    out.push(Some(super::SubmittedRun {
+                        token,
+                        buf,
+                        aligned_lo: r.aligned_lo,
+                    }));
+                } else {
+                    self.pool.put(buf);
+                    out.push(None);
+                }
+            }
+            if sh.ring.submit().is_err() {
+                // The queued SQEs are in limbo: retire the backend and
+                // let the submitted leases leak (late completions may
+                // still land in those buffers, which the pool keeps
+                // alive). Waiters time out into the blocking fallback
+                // via `wait_token`'s error path.
+                self.retire();
+            }
+            out
+        }
+
+        /// Broker-reap until `token`'s completion arrives: whoever holds
+        /// the lock drains the CQ into the shared map, parks in
+        /// `io_uring_enter(GETEVENTS)` when its token hasn't landed yet.
+        pub(super) fn wait_token(&self, token: u64) -> std::io::Result<i32> {
+            let mut sh = self.shared.lock().unwrap();
+            loop {
+                if let Some(res) = sh.done.remove(&token) {
+                    return Ok(res);
+                }
+                let mut fresh = Vec::new();
+                sh.ring.reap(&mut fresh);
+                if fresh.is_empty() {
+                    sh.ring.wait(1)?;
+                    sh.ring.reap(&mut fresh);
+                }
+                for (t, r) in fresh {
+                    sh.done.insert(t, r);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
+mod backend {
+    //! Stub backend for targets without io_uring: `new` always declines,
+    //! so the submission-wave path degrades to the blocking readers and
+    //! none of these bodies are ever reached.
+
+    use super::super::format::ShardReader;
+
+    pub(super) struct RunRead {
+        pub(super) shard: usize,
+        pub(super) aligned_lo: u64,
+        pub(super) read_len: u64,
+    }
+
+    pub(super) struct UringBackend;
+
+    impl UringBackend {
+        pub(super) fn new(_shards: &[ShardReader]) -> Option<UringBackend> {
+            None
+        }
+        pub(super) fn alive(&self) -> bool {
+            false
+        }
+        pub(super) fn retire(&self) {}
+        pub(super) fn disable_if_unsupported(&self, _errno: i32) {}
+        pub(super) fn max_read(&self) -> u64 {
+            0
+        }
+        pub(super) fn copy_out(
+            &self,
+            _buf: usize,
+            _off: usize,
+            _len: usize,
+        ) -> Vec<u8> {
+            unreachable!("stub backend never submits")
+        }
+        pub(super) fn release(&self, _buf: usize) {}
+        pub(super) fn submit_wave(
+            &self,
+            reads: &[Option<RunRead>],
+        ) -> Vec<Option<super::SubmittedRun>> {
+            reads.iter().map(|_| None).collect()
+        }
+        pub(super) fn wait_token(&self, _token: u64) -> std::io::Result<i32> {
+            unreachable!("stub backend never submits")
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -262,6 +1110,15 @@ mod tests {
         n: u64,
         throttle: Option<Arc<TokenBucket>>,
     ) -> StorageSystem {
+        open_test_system_engine(tag, n, throttle, StorageEngine::Pread)
+    }
+
+    fn open_test_system_engine(
+        tag: &str,
+        n: u64,
+        throttle: Option<Arc<TokenBucket>>,
+        engine: StorageEngine,
+    ) -> StorageSystem {
         let dir = std::env::temp_dir()
             .join(format!("dlio-sys-{tag}-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
@@ -271,7 +1128,7 @@ mod tests {
             ..Default::default()
         };
         generate(&dir, &spec).unwrap();
-        StorageSystem::open(&dir, throttle).unwrap()
+        StorageSystem::open_engine(&dir, throttle, engine).unwrap()
     }
 
     #[test]
@@ -436,5 +1293,226 @@ mod tests {
         // 8 records = 24 KiB at 64 KiB/s ≈ 0.37s minus initial burst of 4 KiB.
         assert!(elapsed > 0.2, "throttle ineffective: {elapsed}s");
         assert_eq!(tb.total_bytes(), 8 * 3072);
+    }
+
+    // ---- submission waves -------------------------------------------------
+
+    #[test]
+    fn shard_straddling_ids_split_into_per_shard_runs_charged_per_run() {
+        // Regression: ids 62..66 straddle the 64-per-shard boundary. Both
+        // paths must split them into exactly two runs (one per shard) and
+        // charge the throttle once per RUN — not once per id.
+        let tb = Arc::new(TokenBucket::new(1.0e12, 1.0e12));
+        let sys = Arc::new(open_test_system_engine(
+            "straddle",
+            128,
+            Some(tb.clone()),
+            StorageEngine::Pread,
+        ));
+        let ids: Vec<u32> = vec![62, 63, 64, 65];
+        let (blocking, runs) = sys.read_batch(&ids).unwrap();
+        assert_eq!(runs, 2, "one run per shard");
+        assert_eq!(tb.acquires(), 2, "throttle charged once per run");
+        assert_eq!(tb.total_bytes(), 4 * 3072);
+        let wave = sys.read_batch_begin(&ids).unwrap();
+        assert_eq!(wave.runs(), 2);
+        let (waved, wruns) = wave.wait().unwrap();
+        assert_eq!(wruns, 2);
+        assert_eq!(tb.acquires(), 4, "wave also charges once per run");
+        assert_eq!(waved, blocking);
+    }
+
+    #[test]
+    fn wave_matches_blocking_read_batch() {
+        let sys = Arc::new(open_test_system("wave", 200, None));
+        let ids: Vec<u32> =
+            vec![70, 5, 6, 7, 8, 150, 151, 9, 5, 199, 0, 64, 65];
+        let (blocking, runs) = sys.read_batch(&ids).unwrap();
+        sys.reset_counters();
+        let wave = sys.read_batch_begin(&ids).unwrap();
+        let (waved, wruns) = wave.wait().unwrap();
+        assert_eq!(runs, wruns);
+        assert_eq!(waved, blocking);
+        assert_eq!(sys.samples_read(), 12);
+        assert_eq!(sys.bytes_read(), 12 * 3072);
+        let snap = sys.storage_snapshot();
+        assert_eq!(snap.waves, 1);
+        assert_eq!(snap.wave_depth_peak, 6);
+        // Pread engine: nothing went through a ring.
+        assert_eq!(snap.sqes, 0);
+        assert!(!snap.engine_uring);
+        // Invalid ids fail at begin, before anything is admitted.
+        assert!(sys.read_batch_begin(&[0, 9999]).is_err());
+    }
+
+    #[test]
+    fn uring_engine_waves_match_blocking_reads() {
+        // Works whether or not the kernel grants io_uring: the engine
+        // probe decides, results must be identical either way.
+        let sys = Arc::new(open_test_system_engine(
+            "wuring",
+            200,
+            None,
+            StorageEngine::Uring,
+        ));
+        if !sys.uring_active() {
+            eprintln!("note: io_uring unavailable, exercising fallback");
+        }
+        let ids: Vec<u32> =
+            vec![70, 5, 6, 7, 8, 150, 151, 9, 5, 199, 0, 64, 65];
+        let (blocking, runs) = sys.read_batch(&ids).unwrap();
+        let wave = sys.read_batch_begin(&ids).unwrap();
+        let (waved, wruns) = wave.wait().unwrap();
+        assert_eq!(runs, wruns);
+        assert_eq!(waved.len(), blocking.len());
+        for (w, b) in waved.iter().zip(&blocking) {
+            assert_eq!(w, b, "wave bytes must be bit-identical");
+        }
+        let snap = sys.storage_snapshot();
+        if sys.uring_active() {
+            assert_eq!(snap.sqes, snap.cqes, "every SQE reaped");
+            assert_eq!(snap.sqes, wruns as u64);
+        }
+    }
+
+    #[test]
+    fn dropped_wave_releases_its_buffers() {
+        let sys = Arc::new(open_test_system_engine(
+            "wdrop",
+            128,
+            None,
+            StorageEngine::Uring,
+        ));
+        let ids: Vec<u32> = (0..32).collect();
+        for _ in 0..8 {
+            let wave = sys.read_batch_begin(&ids).unwrap();
+            drop(wave);
+        }
+        // Pool leases must all be back: a full wave still submits.
+        let wave = sys.read_batch_begin(&ids).unwrap();
+        let (got, _) = wave.wait().unwrap();
+        assert_eq!(got.len(), 32);
+        let snap = sys.storage_snapshot();
+        assert_eq!(snap.sqes, snap.cqes, "dropped waves reap their cqes");
+    }
+
+    #[test]
+    fn latency_model_serializes_blocking_and_overlaps_waves() {
+        use std::time::Instant;
+        let sys = Arc::new(open_test_system("lat", 200, None));
+        sys.set_storage_latency_s(0.05);
+        // 4 disjoint runs.
+        let ids: Vec<u32> = vec![0, 10, 20, 30];
+        let t0 = Instant::now();
+        let (_, runs) = sys.read_batch(&ids).unwrap();
+        assert_eq!(runs, 4);
+        let blocking_s = t0.elapsed().as_secs_f64();
+        assert!(blocking_s > 0.18, "4 runs × 50ms: got {blocking_s}s");
+        let t1 = Instant::now();
+        let wave = sys.read_batch_begin(&ids).unwrap();
+        let (_, wruns) = wave.wait().unwrap();
+        assert_eq!(wruns, 4);
+        let wave_s = t1.elapsed().as_secs_f64();
+        assert!(wave_s < blocking_s, "wave must beat serial latency");
+        let snap = sys.storage_snapshot();
+        // Blocking: 4×50ms both ways; wave: 200ms serialized, 50ms charged.
+        assert!((snap.serialized_storage_s - 0.4).abs() < 1e-6);
+        assert!((snap.overlapped_storage_s - 0.25).abs() < 1e-6);
+        assert!(snap.overlap_ratio() > 1.5);
+        sys.set_storage_latency_s(0.0);
+        assert_eq!(sys.storage_latency_s(), 0.0);
+    }
+
+    #[test]
+    fn storage_deadline_turns_debt_into_a_typed_stall() {
+        use crate::fault::exitcode;
+        // 1 KiB/s: a 48 KiB batch implies a ~48s debt sleep.
+        let tb = Arc::new(TokenBucket::new(1024.0, 1024.0));
+        let sys = open_test_system("ddl", 64, Some(tb));
+        sys.set_deadlines(Deadlines::uniform(Duration::from_millis(20)));
+        let ids: Vec<u32> = (0..16).collect();
+        let t0 = std::time::Instant::now();
+        let err = sys.read_batch(&ids).unwrap_err();
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "refusal must not sleep the debt"
+        );
+        assert_eq!(exitcode::classify(&err), exitcode::STALL_STORAGE);
+        // Clearing the budget restores the legacy unbounded wait....
+        sys.set_deadlines(Deadlines::none());
+        // ....but we don't wait out 48s here; a single small read admits
+        // after the refund (tokens were restored, burst covers it).
+        sys.read_sample(0).unwrap();
+    }
+
+    #[test]
+    fn wave_applies_fault_plan_once_per_wave() {
+        use crate::fault::{FaultPlan, NodeFault};
+        let sys = Arc::new(open_test_system("wfault", 128, None));
+        let ids: Vec<u32> = vec![0, 10, 20, 30]; // 4 runs
+        sys.set_fault_plan(Some(Arc::new(FaultPlan::single(
+            0,
+            4,
+            1,
+            NodeFault { read_fail_every: 2, ..NodeFault::healthy() },
+        ))));
+        // One failure draw per WAVE: a 4-run wave consumes one draw, so
+        // alternate waves fail exactly like alternate blocking batches.
+        let w1 = sys.read_batch_begin_for(1, &ids).unwrap();
+        assert!(w1.wait().is_ok());
+        let w2 = sys.read_batch_begin_for(1, &ids).unwrap();
+        assert!(w2.wait().is_err());
+        let w3 = sys.read_batch_begin_for(1, &ids).unwrap();
+        assert!(w3.wait().is_ok());
+        // Other nodes are unaffected.
+        let w = sys.read_batch_begin_for(0, &ids).unwrap();
+        assert!(w.wait().is_ok());
+        // Injected latency lands at wait().
+        sys.set_fault_plan(Some(Arc::new(FaultPlan::single(
+            0,
+            4,
+            2,
+            NodeFault { read_latency_s: 0.05, ..NodeFault::healthy() },
+        ))));
+        let w = sys.read_batch_begin_for(2, &ids).unwrap();
+        let t0 = std::time::Instant::now();
+        w.wait().unwrap();
+        assert!(t0.elapsed().as_secs_f64() > 0.04);
+        sys.set_fault_plan(None);
+    }
+
+    #[test]
+    fn numa_placement_meters_wave_pages() {
+        let sys = Arc::new(open_test_system("wnuma", 128, None));
+        sys.set_numa_placement(
+            Arc::new(NumaTopology::single_node()),
+            2,
+        );
+        let ids: Vec<u32> = (0..16).collect();
+        let wave = sys.read_batch_begin_for(0, &ids).unwrap();
+        wave.wait().unwrap();
+        let snap = sys.storage_snapshot();
+        assert_eq!(snap.numa_nodes, 1);
+        // Single node: everything is local by definition.
+        assert_eq!(snap.cross_node_pages, 0);
+        assert_eq!(snap.local_pages, (16 * 3072u64).div_ceil(4096));
+        assert_eq!(snap.cross_node_page_ratio(), 0.0);
+    }
+
+    #[test]
+    fn engine_parse_and_display_roundtrip() {
+        for (s, e) in [
+            ("auto", StorageEngine::Auto),
+            ("pread", StorageEngine::Pread),
+            ("mmap", StorageEngine::Pread),
+            ("uring", StorageEngine::Uring),
+            ("io_uring", StorageEngine::Uring),
+        ] {
+            assert_eq!(StorageEngine::parse(s).unwrap(), e);
+        }
+        assert!(StorageEngine::parse("dma").is_err());
+        assert_eq!(StorageEngine::Auto.to_string(), "auto");
+        assert_eq!(StorageEngine::Uring.to_string(), "uring");
+        assert_eq!(StorageEngine::default(), StorageEngine::Auto);
     }
 }

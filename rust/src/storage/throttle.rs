@@ -11,6 +11,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::fault::{StallError, StallKind};
+
 /// Shared token bucket. `acquire(bytes)` blocks until the caller may read
 /// that many bytes without exceeding the configured aggregate rate.
 pub struct TokenBucket {
@@ -22,6 +24,9 @@ pub struct TokenBucket {
     burst_bytes: f64,
     /// Total bytes admitted (metrics).
     total_bytes: AtomicU64,
+    /// Successful admissions (metrics) — coalescing makes this "runs",
+    /// not "samples", which the shard-straddle regression test pins.
+    acquires: AtomicU64,
     /// Total nanoseconds spent blocked across all callers (metrics).
     total_wait_ns: AtomicU64,
 }
@@ -45,6 +50,7 @@ impl TokenBucket {
             rate_bits: AtomicU64::new(rate_bps.to_bits()),
             burst_bytes: burst_bytes.max(1.0),
             total_bytes: AtomicU64::new(0),
+            acquires: AtomicU64::new(0),
             total_wait_ns: AtomicU64::new(0),
         }
     }
@@ -65,6 +71,24 @@ impl TokenBucket {
     /// Block until `bytes` may pass. Fair enough for our purposes: callers
     /// race on the mutex, each deducting its debt before sleeping.
     pub fn acquire(&self, bytes: u64) {
+        self.acquire_deadline(bytes, None)
+            .expect("acquire without a budget never stalls");
+    }
+
+    /// Deadline-aware admission (DESIGN.md §15). Like
+    /// [`TokenBucket::acquire`], but when the debt sleep the request would
+    /// incur exceeds `budget`, the request is *refused*: the debited tokens
+    /// are refunded under the same lock acquisition (so a refused caller
+    /// does not starve the readers behind it), no bytes are counted, and a
+    /// typed [`StallError`] with [`StallKind::Storage`] is returned so the
+    /// supervisor can classify the death (`exitcode::STALL_STORAGE`).
+    ///
+    /// `budget = None` is the unbounded legacy behavior and never fails.
+    pub fn acquire_deadline(
+        &self,
+        bytes: u64,
+        budget: Option<Duration>,
+    ) -> Result<(), StallError> {
         let need = bytes as f64;
         let start = Instant::now();
         // One rate load per request: refill and debt sleep agree on the
@@ -81,7 +105,18 @@ impl TokenBucket {
             // *aggregate* admitted rate still converges to rate_bps.
             st.tokens -= need;
             if st.tokens < 0.0 {
-                Some(Duration::from_secs_f64(-st.tokens / rate))
+                let debt = Duration::from_secs_f64(-st.tokens / rate);
+                if let Some(limit) = budget {
+                    if debt > limit {
+                        st.tokens += need;
+                        return Err(StallError {
+                            kind: StallKind::Storage,
+                            waited: debt,
+                            deadline: limit,
+                        });
+                    }
+                }
+                Some(debt)
             } else {
                 None
             }
@@ -90,14 +125,21 @@ impl TokenBucket {
             std::thread::sleep(d);
         }
         self.total_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.acquires.fetch_add(1, Ordering::Relaxed);
         self.total_wait_ns.fetch_add(
             start.elapsed().as_nanos() as u64,
             Ordering::Relaxed,
         );
+        Ok(())
     }
 
     pub fn total_bytes(&self) -> u64 {
         self.total_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Number of successful admissions (refused requests don't count).
+    pub fn acquires(&self) -> u64 {
+        self.acquires.load(Ordering::Relaxed)
     }
 
     pub fn total_wait(&self) -> Duration {
@@ -172,5 +214,49 @@ mod tests {
         let t0 = Instant::now();
         tb.acquire(512 * 1024); // within burst
         assert!(t0.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn deadline_refusal_is_typed_and_refunds_the_debt() {
+        // 1 KiB/s, 1 KiB burst: a 1 MiB request implies a ~1000s debt
+        // sleep, far past any sane budget.
+        let tb = TokenBucket::new(1024.0, 1024.0);
+        let t0 = Instant::now();
+        let err = tb
+            .acquire_deadline(1024 * 1024, Some(Duration::from_millis(20)))
+            .unwrap_err();
+        assert_eq!(err.kind, StallKind::Storage);
+        assert!(err.waited > err.deadline);
+        assert!(err.to_string().contains("storage wait"));
+        // Refusal is immediate (no sleep) and counts no bytes.
+        assert!(t0.elapsed() < Duration::from_millis(250));
+        assert_eq!(tb.total_bytes(), 0);
+        // The refund restored the burst: an in-budget request still
+        // admits instantly instead of inheriting the refused debt.
+        let t1 = Instant::now();
+        tb.acquire_deadline(512, Some(Duration::from_millis(20)))
+            .unwrap();
+        assert!(t1.elapsed() < Duration::from_millis(250));
+        assert_eq!(tb.total_bytes(), 512);
+    }
+
+    #[test]
+    fn unbounded_budget_matches_acquire() {
+        let tb = TokenBucket::new(1024.0 * 1024.0, 4.0 * 1024.0);
+        // 128 KiB at 1 MiB/s => ~0.12s debt sleep, served (not refused).
+        let t0 = Instant::now();
+        tb.acquire_deadline(128 * 1024, None).unwrap();
+        assert!(t0.elapsed().as_secs_f64() > 0.05);
+        assert_eq!(tb.total_bytes(), 128 * 1024);
+    }
+
+    #[test]
+    fn generous_deadline_sleeps_and_admits() {
+        let tb = TokenBucket::new(1024.0 * 1024.0, 4.0 * 1024.0);
+        let t0 = Instant::now();
+        tb.acquire_deadline(128 * 1024, Some(Duration::from_secs(5)))
+            .unwrap();
+        assert!(t0.elapsed().as_secs_f64() > 0.05);
+        assert_eq!(tb.total_bytes(), 128 * 1024);
     }
 }

@@ -1,0 +1,549 @@
+//! Minimal raw-syscall `io_uring` wrapper (DESIGN.md §15).
+//!
+//! The offline build environment ships no `io-uring`/`liburing` crates, so
+//! — same vendoring discipline as the `anyhow` shim — this module talks to
+//! the kernel directly: `io_uring_setup`/`io_uring_enter`/`io_uring_register`
+//! via the libc variadic `syscall` symbol, and the three ring mappings via
+//! `mmap`. Only what the batched storage engine needs is implemented:
+//! plain `READ` and `READ_FIXED` submissions against registered aligned
+//! buffers, single-shot submission waves, and completion reaping.
+//!
+//! Availability is a *runtime* property (confined CI runners commonly
+//! seccomp-block `io_uring_setup`), so callers must consult [`available`]
+//! and be prepared for [`Ring::new`] to fail even when it returns `true` —
+//! the storage engine degrades to the mmap/`pread` path in both cases.
+//!
+//! Everything here is 64-bit-Linux only; `storage/mod.rs` gates the module
+//! accordingly, and the `uring` cargo feature merely steers engine
+//! *selection* (`StorageEngine::Auto`), not compilation.
+
+use std::fs::File;
+use std::io;
+use std::os::raw::{c_int, c_long};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::OnceLock;
+
+mod ffi {
+    use std::os::raw::{c_int, c_long, c_void};
+    extern "C" {
+        pub fn syscall(num: c_long, ...) -> c_long;
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn close(fd: c_int) -> c_int;
+    }
+}
+
+// io_uring syscall numbers are unified across x86_64 and aarch64.
+const SYS_IO_URING_SETUP: c_long = 425;
+const SYS_IO_URING_ENTER: c_long = 426;
+const SYS_IO_URING_REGISTER: c_long = 427;
+
+const IORING_OFF_SQ_RING: i64 = 0;
+const IORING_OFF_CQ_RING: i64 = 0x800_0000;
+const IORING_OFF_SQES: i64 = 0x1000_0000;
+
+const IORING_FEAT_SINGLE_MMAP: u32 = 1;
+const IORING_ENTER_GETEVENTS: u32 = 1;
+const IORING_REGISTER_BUFFERS: u32 = 0;
+
+/// Submission opcodes (the two the storage engine uses).
+pub const IORING_OP_READ_FIXED: u8 = 4;
+pub const IORING_OP_READ: u8 = 22;
+
+const PROT_READ: c_int = 1;
+const PROT_WRITE: c_int = 2;
+const MAP_SHARED: c_int = 1;
+const MAP_POPULATE: c_int = 0x8000;
+const EINTR: i32 = 4;
+
+/// `struct io_sqring_offsets` (kernel ABI).
+#[repr(C)]
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SqOffsets {
+    pub head: u32,
+    pub tail: u32,
+    pub ring_mask: u32,
+    pub ring_entries: u32,
+    pub flags: u32,
+    pub dropped: u32,
+    pub array: u32,
+    pub resv1: u32,
+    pub user_addr: u64,
+}
+
+/// `struct io_cqring_offsets` (kernel ABI).
+#[repr(C)]
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CqOffsets {
+    pub head: u32,
+    pub tail: u32,
+    pub ring_mask: u32,
+    pub ring_entries: u32,
+    pub overflow: u32,
+    pub cqes: u32,
+    pub flags: u32,
+    pub resv1: u32,
+    pub user_addr: u64,
+}
+
+/// `struct io_uring_params` (kernel ABI).
+#[repr(C)]
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Params {
+    pub sq_entries: u32,
+    pub cq_entries: u32,
+    pub flags: u32,
+    pub sq_thread_cpu: u32,
+    pub sq_thread_idle: u32,
+    pub features: u32,
+    pub wq_fd: u32,
+    pub resv: [u32; 3],
+    pub sq_off: SqOffsets,
+    pub cq_off: CqOffsets,
+}
+
+/// `struct io_uring_sqe` (kernel ABI, 64 bytes). Only the fields the read
+/// opcodes use are ever set; the rest stay zeroed.
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct Sqe {
+    pub opcode: u8,
+    pub flags: u8,
+    pub ioprio: u16,
+    pub fd: i32,
+    pub off: u64,
+    pub addr: u64,
+    pub len: u32,
+    pub rw_flags: u32,
+    pub user_data: u64,
+    pub buf_index: u16,
+    pub personality: u16,
+    pub splice_fd_in: i32,
+    pub pad2: [u64; 2],
+}
+
+/// `struct io_uring_cqe` (kernel ABI, 16 bytes).
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct Cqe {
+    pub user_data: u64,
+    pub res: i32,
+    pub flags: u32,
+}
+
+/// `struct iovec`, for buffer registration.
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct IoVec {
+    pub base: *mut u8,
+    pub len: usize,
+}
+
+fn setup(entries: u32, params: &mut Params) -> io::Result<c_int> {
+    let r = unsafe {
+        ffi::syscall(
+            SYS_IO_URING_SETUP,
+            entries as c_long,
+            params as *mut Params as c_long,
+        )
+    };
+    if r < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(r as c_int)
+}
+
+fn enter(
+    fd: c_int,
+    to_submit: u32,
+    min_complete: u32,
+    flags: u32,
+) -> io::Result<u32> {
+    loop {
+        let r = unsafe {
+            ffi::syscall(
+                SYS_IO_URING_ENTER,
+                fd as c_long,
+                to_submit as c_long,
+                min_complete as c_long,
+                flags as c_long,
+                0 as c_long, // sigset
+                0 as c_long, // sigset size
+            )
+        };
+        if r >= 0 {
+            return Ok(r as u32);
+        }
+        let err = io::Error::last_os_error();
+        if err.raw_os_error() != Some(EINTR) {
+            return Err(err);
+        }
+    }
+}
+
+/// Is `io_uring` usable here at all? One cached `io_uring_setup` probe —
+/// confined runners (seccomp, gVisor) fail it with `EPERM`/`ENOSYS`, and
+/// callers then never touch the rest of this module.
+pub fn available() -> bool {
+    static PROBE: OnceLock<bool> = OnceLock::new();
+    *PROBE.get_or_init(|| {
+        let mut p = Params::default();
+        match setup(4, &mut p) {
+            Ok(fd) => {
+                unsafe { ffi::close(fd) };
+                true
+            }
+            Err(_) => false,
+        }
+    })
+}
+
+/// One anonymous shared mapping over the ring fd.
+struct Region {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// The region is only ever touched through `Ring`, whose access discipline
+// (sole owner, `&mut` for producers) makes cross-thread moves sound.
+unsafe impl Send for Region {}
+
+impl Region {
+    fn map(fd: c_int, len: usize, offset: i64) -> io::Result<Region> {
+        let ptr = unsafe {
+            ffi::mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ | PROT_WRITE,
+                MAP_SHARED | MAP_POPULATE,
+                fd,
+                offset,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Region { ptr: ptr as *mut u8, len })
+    }
+}
+
+impl Drop for Region {
+    fn drop(&mut self) {
+        unsafe {
+            ffi::munmap(self.ptr as *mut _, self.len);
+        }
+    }
+}
+
+/// A single-issuer submission/completion ring.
+///
+/// Concurrency contract: one `Ring` is owned by one broker (the storage
+/// engine wraps it in a `Mutex`); `push_read`/`submit`/`reap` require
+/// `&mut self`, and the kernel-shared head/tail words are accessed with
+/// the acquire/release ordering the io_uring ABI specifies.
+pub struct Ring {
+    fd: c_int,
+    sq_region: Region,
+    cq_region: Option<Region>,
+    sqes_region: Region,
+    sq_head: *const AtomicU32,
+    sq_tail: *const AtomicU32,
+    sq_mask: u32,
+    sq_entries: u32,
+    sq_array: *mut u32,
+    cq_head: *const AtomicU32,
+    cq_tail: *const AtomicU32,
+    cq_mask: u32,
+    cqes: *const Cqe,
+    /// SQEs pushed since the last `submit`.
+    pending: u32,
+}
+
+// Raw pointers into the (Send) regions; see the struct-level contract.
+unsafe impl Send for Ring {}
+
+impl Ring {
+    /// Create a ring with (at least) `entries` submission slots.
+    pub fn new(entries: u32) -> io::Result<Ring> {
+        let mut p = Params::default();
+        let fd = setup(entries.max(1), &mut p)?;
+        match Self::map_rings(fd, &p) {
+            Ok(ring) => Ok(ring),
+            Err(e) => {
+                unsafe { ffi::close(fd) };
+                Err(e)
+            }
+        }
+    }
+
+    fn map_rings(fd: c_int, p: &Params) -> io::Result<Ring> {
+        let sq_len = p.sq_off.array as usize + p.sq_entries as usize * 4;
+        let cq_len = p.cq_off.cqes as usize
+            + p.cq_entries as usize * std::mem::size_of::<Cqe>();
+        let single = p.features & IORING_FEAT_SINGLE_MMAP != 0;
+        let sq_map_len = if single { sq_len.max(cq_len) } else { sq_len };
+        let sq_region = Region::map(fd, sq_map_len, IORING_OFF_SQ_RING)?;
+        let cq_region = if single {
+            None
+        } else {
+            Some(Region::map(fd, cq_len, IORING_OFF_CQ_RING)?)
+        };
+        let sqes_region = Region::map(
+            fd,
+            p.sq_entries as usize * std::mem::size_of::<Sqe>(),
+            IORING_OFF_SQES,
+        )?;
+        let sq = sq_region.ptr;
+        let cq = cq_region.as_ref().map_or(sq, |r| r.ptr);
+        let ring = unsafe {
+            Ring {
+                fd,
+                sq_head: sq.add(p.sq_off.head as usize) as *const AtomicU32,
+                sq_tail: sq.add(p.sq_off.tail as usize) as *const AtomicU32,
+                sq_mask: *(sq.add(p.sq_off.ring_mask as usize) as *const u32),
+                sq_entries: p.sq_entries,
+                sq_array: sq.add(p.sq_off.array as usize) as *mut u32,
+                cq_head: cq.add(p.cq_off.head as usize) as *const AtomicU32,
+                cq_tail: cq.add(p.cq_off.tail as usize) as *const AtomicU32,
+                cq_mask: *(cq.add(p.cq_off.ring_mask as usize) as *const u32),
+                cqes: cq.add(p.cq_off.cqes as usize) as *const Cqe,
+                sq_region,
+                cq_region,
+                sqes_region,
+                pending: 0,
+            }
+        };
+        Ok(ring)
+    }
+
+    /// Submission slots in the ring.
+    pub fn entries(&self) -> u32 {
+        self.sq_entries
+    }
+
+    /// Register `bufs` as fixed read targets; afterwards `push_read` may
+    /// pass `buf_index` to use `READ_FIXED`. Fails under a tight
+    /// `RLIMIT_MEMLOCK` — callers fall back to plain `READ`.
+    pub fn register_buffers(&mut self, bufs: &[IoVec]) -> io::Result<()> {
+        let r = unsafe {
+            ffi::syscall(
+                SYS_IO_URING_REGISTER,
+                self.fd as c_long,
+                IORING_REGISTER_BUFFERS as c_long,
+                bufs.as_ptr() as c_long,
+                bufs.len() as c_long,
+            )
+        };
+        if r < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Queue one read of `len` bytes at file `offset` into `addr`.
+    /// `buf_index = Some(i)` uses `READ_FIXED` against registered buffer
+    /// `i` (whose memory must contain `addr..addr+len`). Returns `false`
+    /// if the submission queue is full (caller should `submit` and retry).
+    ///
+    /// The buffer must stay valid (and un-aliased) until the completion
+    /// for `user_data` is reaped — the storage engine guarantees this via
+    /// the aligned-pool lease protocol.
+    pub fn push_read(
+        &mut self,
+        file: &File,
+        addr: *mut u8,
+        len: u32,
+        offset: u64,
+        user_data: u64,
+        buf_index: Option<u16>,
+    ) -> bool {
+        unsafe {
+            let head = (*self.sq_head).load(Ordering::Acquire);
+            let tail = (*self.sq_tail).load(Ordering::Relaxed);
+            if tail.wrapping_sub(head) >= self.sq_entries {
+                return false;
+            }
+            let idx = tail & self.sq_mask;
+            let sqe = (self.sqes_region.ptr as *mut Sqe).add(idx as usize);
+            let mut e: Sqe = std::mem::zeroed();
+            e.opcode = if buf_index.is_some() {
+                IORING_OP_READ_FIXED
+            } else {
+                IORING_OP_READ
+            };
+            e.fd = file.as_raw_fd();
+            e.off = offset;
+            e.addr = addr as u64;
+            e.len = len;
+            e.user_data = user_data;
+            e.buf_index = buf_index.unwrap_or(0);
+            sqe.write(e);
+            self.sq_array.add(idx as usize).write_volatile(idx);
+            (*self.sq_tail).store(tail.wrapping_add(1), Ordering::Release);
+        }
+        self.pending += 1;
+        true
+    }
+
+    /// Submit everything pushed since the last submit — ONE
+    /// `io_uring_enter` for the whole wave. Returns the number of SQEs
+    /// the kernel consumed.
+    pub fn submit(&mut self) -> io::Result<u32> {
+        if self.pending == 0 {
+            return Ok(0);
+        }
+        let n = enter(self.fd, self.pending, 0, 0)?;
+        self.pending = 0;
+        Ok(n)
+    }
+
+    /// Block until at least `min_complete` completions are available.
+    pub fn wait(&mut self, min_complete: u32) -> io::Result<()> {
+        enter(self.fd, 0, min_complete, IORING_ENTER_GETEVENTS)?;
+        Ok(())
+    }
+
+    /// Drain every available completion into `out` as
+    /// `(user_data, result)` pairs; returns how many were reaped.
+    pub fn reap(&mut self, out: &mut Vec<(u64, i32)>) -> usize {
+        let mut n = 0;
+        unsafe {
+            let mut head = (*self.cq_head).load(Ordering::Relaxed);
+            let tail = (*self.cq_tail).load(Ordering::Acquire);
+            while head != tail {
+                let cqe = &*self.cqes.add((head & self.cq_mask) as usize);
+                out.push((cqe.user_data, cqe.res));
+                head = head.wrapping_add(1);
+                n += 1;
+            }
+            (*self.cq_head).store(head, Ordering::Release);
+        }
+        n
+    }
+}
+
+impl Drop for Ring {
+    fn drop(&mut self) {
+        // Regions unmap via their own Drops; order does not matter.
+        unsafe {
+            ffi::close(self.fd);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::AlignedBuf;
+    use std::io::Write;
+
+    fn tmpfile(tag: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("dlio-uring-{tag}-{}", std::process::id()));
+        let mut f = File::create(&p).unwrap();
+        f.write_all(bytes).unwrap();
+        f.sync_all().unwrap();
+        p
+    }
+
+    #[test]
+    fn probe_is_cached_and_safe() {
+        let a = available();
+        let b = available();
+        assert_eq!(a, b);
+        if !a {
+            eprintln!("io_uring unavailable here; uring tests will skip");
+        }
+    }
+
+    #[test]
+    fn ring_reads_a_file() {
+        if !available() {
+            eprintln!("skip: io_uring unavailable");
+            return;
+        }
+        let payload: Vec<u8> =
+            (0..8192u32).map(|i| (i % 251) as u8).collect();
+        let p = tmpfile("read", &payload);
+        let f = File::open(&p).unwrap();
+        let mut ring = Ring::new(8).unwrap();
+        let buf = AlignedBuf::new(8192, 4096);
+        assert!(ring.push_read(&f, buf.as_ptr(), 4096, 4096, 7, None));
+        assert_eq!(ring.submit().unwrap(), 1);
+        ring.wait(1).unwrap();
+        let mut done = Vec::new();
+        assert_eq!(ring.reap(&mut done), 1);
+        let (token, res) = done[0];
+        assert_eq!(token, 7);
+        assert_eq!(res, 4096, "read failed: {res}");
+        assert_eq!(buf.copy_out(0, 4096), &payload[4096..8192]);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn registered_fixed_read_roundtrips() {
+        if !available() {
+            eprintln!("skip: io_uring unavailable");
+            return;
+        }
+        let payload = vec![0xabu8; 4096];
+        let p = tmpfile("fixed", &payload);
+        let f = File::open(&p).unwrap();
+        let mut ring = Ring::new(8).unwrap();
+        let buf = AlignedBuf::new(4096, 4096);
+        let iov = [IoVec { base: buf.as_ptr(), len: buf.len() }];
+        if let Err(e) = ring.register_buffers(&iov) {
+            eprintln!("skip: buffer registration refused ({e})");
+            return;
+        }
+        assert!(ring.push_read(&f, buf.as_ptr(), 4096, 0, 1, Some(0)));
+        ring.submit().unwrap();
+        ring.wait(1).unwrap();
+        let mut done = Vec::new();
+        ring.reap(&mut done);
+        assert_eq!(done, vec![(1u64, 4096i32)]);
+        assert_eq!(buf.copy_out(0, 4096), payload);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn full_submission_queue_applies_backpressure() {
+        if !available() {
+            eprintln!("skip: io_uring unavailable");
+            return;
+        }
+        let p = tmpfile("full", &[0u8; 4096]);
+        let f = File::open(&p).unwrap();
+        let mut ring = Ring::new(4).unwrap();
+        let entries = ring.entries();
+        let buf = AlignedBuf::new(4096, 4096);
+        let mut pushed = 0u32;
+        loop {
+            // Distinct 16-byte landing zones: concurrent completions must
+            // not write the same bytes.
+            let addr = unsafe { buf.as_ptr().add(16 * pushed as usize) };
+            if !ring.push_read(&f, addr, 16, 0, pushed as u64, None) {
+                break;
+            }
+            pushed += 1;
+            assert!(pushed <= entries, "ring never filled");
+        }
+        assert_eq!(pushed, entries);
+        ring.submit().unwrap();
+        ring.wait(entries).unwrap();
+        let mut done = Vec::new();
+        assert_eq!(ring.reap(&mut done) as u32, entries);
+        // Slots recycle after reaping.
+        assert!(ring.push_read(&f, buf.as_ptr(), 16, 0, 99, None));
+        ring.submit().unwrap();
+        std::fs::remove_file(&p).unwrap();
+    }
+}

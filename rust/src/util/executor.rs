@@ -81,6 +81,20 @@ impl Executor {
     /// Spawn `threads` pool threads (the only spawns for this executor's
     /// whole lifetime).
     pub fn new(threads: usize) -> Executor {
+        Self::new_pinned(threads, None)
+    }
+
+    /// As [`new`], but each worker pins itself to a NUMA node before
+    /// entering its loop (DESIGN.md §15): `(topology, node)` binds the
+    /// whole pool to one socket, so decode output and first-touch cache
+    /// pages land local to the learner the pool serves. `None` is exactly
+    /// [`new`].
+    ///
+    /// [`new`]: Executor::new
+    pub fn new_pinned(
+        threads: usize,
+        numa: Option<(std::sync::Arc<crate::util::NumaTopology>, usize)>,
+    ) -> Executor {
         assert!(threads > 0, "executor needs at least one thread");
         let inner = Arc::new(Inner {
             state: Mutex::new(ExecState {
@@ -98,9 +112,15 @@ impl Executor {
         let handles = (0..threads)
             .map(|k| {
                 let inner = Arc::clone(&inner);
+                let numa = numa.clone();
                 std::thread::Builder::new()
                     .name(format!("dlio-exec-{k}"))
-                    .spawn(move || worker_loop(&inner))
+                    .spawn(move || {
+                        if let Some((topo, node)) = numa {
+                            topo.pin_current_thread(node);
+                        }
+                        worker_loop(&inner)
+                    })
                     .expect("spawn executor thread")
             })
             .collect();
@@ -378,6 +398,21 @@ mod tests {
             )
             .unwrap();
         assert_eq!(*out[0].as_ref().unwrap(), 7);
+    }
+
+    #[test]
+    fn pinned_pool_records_its_node_on_every_worker() {
+        use crate::util::NumaTopology;
+        let topo = Arc::new(NumaTopology::single_node());
+        let ex = Executor::new_pinned(3, Some((topo, 0)));
+        let out = ex.run_batch(
+            (0..6)
+                .map(|_| || crate::util::numa::current_node())
+                .collect::<Vec<_>>(),
+        );
+        for r in out {
+            assert_eq!(r.unwrap(), Some(0), "worker must record its node");
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 pub mod executor;
 pub mod json;
+pub mod numa;
 pub mod pool;
 pub mod prop;
 pub mod queue;
@@ -16,6 +17,7 @@ pub mod units;
 
 pub use executor::{panic_message, Executor, ExecutorStats};
 pub use json::Json;
-pub use pool::{BatchPool, PoolStats, PooledVec, SharedBuf};
+pub use numa::NumaTopology;
+pub use pool::{AlignedBuf, AlignedPool, BatchPool, PoolStats, PooledVec, SharedBuf};
 pub use queue::Queue;
 pub use rng::Rng;

@@ -1,0 +1,324 @@
+//! NUMA topology probe and thread placement (DESIGN.md §15).
+//!
+//! On a multi-socket learner node, a storage wave that completes on one
+//! socket and decodes into a cache shard resident on the other pays a
+//! cross-node memory round-trip per page. This module gives the loader
+//! the two primitives it needs to avoid that:
+//!
+//! * [`NumaTopology::probe`] — read the node → cpu map from sysfs
+//!   (`/sys/devices/system/node/node*/cpulist`), degrading gracefully to
+//!   a single synthetic node when the hierarchy is absent (VMs, CI
+//!   sandboxes, non-Linux).
+//! * [`NumaTopology::pin_current_thread`] — bind the calling thread to
+//!   one node's cpu set via a raw `sched_setaffinity` syscall (no libc
+//!   crate; same vendoring discipline as the mmap FFI in
+//!   `storage/bytes.rs`), recording the placement in a thread-local so
+//!   the storage engine can meter local vs cross-node wave pages without
+//!   a per-read syscall.
+//!
+//! Placement policy: learner `l` of `p` maps to node `l * nodes / p`
+//! ([`node_for_learner`]) — contiguous learner ranges share a socket, so
+//! a learner's executor shards, its `SampleCache` shards (first-touch
+//! from pinned threads) and its `DiskTier` spill segment all land on the
+//! socket that serves it. Pinning is strictly opt-in
+//! (`TrainerConfig::numa_pin`): the default is the kernel's own
+//! placement, and every call is a safe no-op on unsupported targets.
+//!
+//! [`node_for_learner`]: NumaTopology::node_for_learner
+
+use std::cell::Cell;
+use std::path::Path;
+
+/// One NUMA node: its sysfs id and the cpus it owns.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NumaNode {
+    pub id: usize,
+    pub cpus: Vec<usize>,
+}
+
+/// The machine's node → cpu map (or a single-node fallback).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NumaTopology {
+    nodes: Vec<NumaNode>,
+    /// Whether the map came from a real sysfs hierarchy (false for the
+    /// single-node fallback — pinning is then a no-op by construction).
+    probed: bool,
+}
+
+thread_local! {
+    /// The node this thread was last pinned to, if any — read by the
+    /// storage engine's cross-node page meter.
+    static PINNED_NODE: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// The NUMA node the calling thread is pinned to (`None` when unpinned).
+pub fn current_node() -> Option<usize> {
+    PINNED_NODE.with(|c| c.get())
+}
+
+impl NumaTopology {
+    /// Probe `/sys/devices/system/node`. Never fails: anything short of a
+    /// well-formed multi-node hierarchy degrades to [`single_node`].
+    ///
+    /// [`single_node`]: NumaTopology::single_node
+    pub fn probe() -> NumaTopology {
+        Self::probe_at(Path::new("/sys/devices/system/node"))
+    }
+
+    /// Probe an explicit sysfs root (tests point this at a fixture tree).
+    pub fn probe_at(root: &Path) -> NumaTopology {
+        let mut nodes = Vec::new();
+        let entries = match std::fs::read_dir(root) {
+            Ok(e) => e,
+            Err(_) => return Self::single_node(),
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let Some(idx) = name.strip_prefix("node") else {
+                continue;
+            };
+            let Ok(id) = idx.parse::<usize>() else {
+                continue;
+            };
+            let cpulist = entry.path().join("cpulist");
+            let Ok(raw) = std::fs::read_to_string(&cpulist) else {
+                continue;
+            };
+            let Some(cpus) = parse_cpulist(&raw) else {
+                continue;
+            };
+            if !cpus.is_empty() {
+                nodes.push(NumaNode { id, cpus });
+            }
+        }
+        nodes.sort_by_key(|n| n.id);
+        if nodes.is_empty() {
+            return Self::single_node();
+        }
+        NumaTopology { nodes, probed: true }
+    }
+
+    /// The graceful fallback: one node owning every cpu the process can
+    /// see. Pinning to it never narrows the affinity mask.
+    pub fn single_node() -> NumaTopology {
+        let cpus: Vec<usize> = (0..std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1))
+            .collect();
+        NumaTopology {
+            nodes: vec![NumaNode { id: 0, cpus }],
+            probed: false,
+        }
+    }
+
+    pub fn nodes(&self) -> &[NumaNode] {
+        &self.nodes
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Whether the map came from a real sysfs probe (vs the fallback).
+    pub fn is_probed(&self) -> bool {
+        self.probed
+    }
+
+    /// The node that serves learner `learner` of `total`: contiguous
+    /// learner ranges map to the same socket.
+    pub fn node_for_learner(&self, learner: usize, total: usize) -> usize {
+        if total == 0 || self.nodes.len() <= 1 {
+            return 0;
+        }
+        (learner * self.nodes.len() / total).min(self.nodes.len() - 1)
+    }
+
+    /// Pin the calling thread to `node`'s cpu set and record the
+    /// placement for the cross-node page meter. Returns whether a real
+    /// affinity change was applied (false on the single-node fallback,
+    /// unsupported targets, or a refused syscall — all safe no-ops).
+    pub fn pin_current_thread(&self, node: usize) -> bool {
+        let Some(n) = self.nodes.get(node) else {
+            return false;
+        };
+        // Record intent even when the affinity syscall is unavailable:
+        // the placement meter tracks where work was *assigned*, and the
+        // single-node fallback trivially satisfies any assignment.
+        PINNED_NODE.with(|c| c.set(Some(node)));
+        if !self.probed {
+            return false;
+        }
+        set_affinity(&n.cpus)
+    }
+}
+
+/// Parse a sysfs cpulist ("0-3,8,10-11"). `None` on malformed input.
+pub fn parse_cpulist(raw: &str) -> Option<Vec<usize>> {
+    let mut cpus = Vec::new();
+    let t = raw.trim();
+    if t.is_empty() {
+        return Some(cpus);
+    }
+    for part in t.split(',') {
+        let part = part.trim();
+        match part.split_once('-') {
+            Some((lo, hi)) => {
+                let lo: usize = lo.trim().parse().ok()?;
+                let hi: usize = hi.trim().parse().ok()?;
+                if hi < lo || hi - lo > 4096 {
+                    return None;
+                }
+                cpus.extend(lo..=hi);
+            }
+            None => cpus.push(part.trim().parse().ok()?),
+        }
+    }
+    cpus.sort_unstable();
+    cpus.dedup();
+    Some(cpus)
+}
+
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+mod affinity {
+    //! Raw `sched_setaffinity` — the offline image has no libc crate, so
+    //! the call goes through the variadic `syscall(2)` symbol the C
+    //! library always exports (same discipline as the io_uring wrapper).
+    use std::os::raw::{c_long, c_uint};
+
+    extern "C" {
+        fn syscall(num: c_long, ...) -> c_long;
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    const SYS_SCHED_SETAFFINITY: c_long = 203;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_SCHED_SETAFFINITY: c_long = 122;
+
+    /// 1024-cpu mask, the kernel's default `cpu_set_t` width.
+    const MASK_WORDS: usize = 16;
+
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    pub fn set(cpus: &[usize]) -> bool {
+        let mut mask = [0u64; MASK_WORDS];
+        let mut any = false;
+        for &c in cpus {
+            if c < MASK_WORDS * 64 {
+                mask[c / 64] |= 1u64 << (c % 64);
+                any = true;
+            }
+        }
+        if !any {
+            return false;
+        }
+        // pid 0 = calling thread.
+        let rc = unsafe {
+            syscall(
+                SYS_SCHED_SETAFFINITY,
+                0 as c_uint,
+                std::mem::size_of_val(&mask),
+                mask.as_ptr(),
+            )
+        };
+        rc == 0
+    }
+
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    pub fn set(_cpus: &[usize]) -> bool {
+        false
+    }
+}
+
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+fn set_affinity(cpus: &[usize]) -> bool {
+    affinity::set(cpus)
+}
+
+#[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
+fn set_affinity(_cpus: &[usize]) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_grammar() {
+        assert_eq!(parse_cpulist("0-3"), Some(vec![0, 1, 2, 3]));
+        assert_eq!(parse_cpulist("0,2,4"), Some(vec![0, 2, 4]));
+        assert_eq!(
+            parse_cpulist(" 0-1 , 8 , 10-11 \n"),
+            Some(vec![0, 1, 8, 10, 11])
+        );
+        assert_eq!(parse_cpulist(""), Some(vec![]));
+        assert_eq!(parse_cpulist("3-1"), None);
+        assert_eq!(parse_cpulist("x"), None);
+        // Duplicates collapse.
+        assert_eq!(parse_cpulist("1,1,0-1"), Some(vec![0, 1]));
+    }
+
+    #[test]
+    fn fixture_tree_probes_two_nodes() {
+        let root = std::env::temp_dir()
+            .join(format!("dlio-numa-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        for (node, list) in [(0, "0-1"), (1, "2-3")] {
+            let d = root.join(format!("node{node}"));
+            std::fs::create_dir_all(&d).unwrap();
+            std::fs::write(d.join("cpulist"), list).unwrap();
+        }
+        // Non-node entries are ignored.
+        std::fs::create_dir_all(root.join("online")).unwrap();
+        let topo = NumaTopology::probe_at(&root);
+        assert!(topo.is_probed());
+        assert_eq!(topo.node_count(), 2);
+        assert_eq!(topo.nodes()[0].cpus, vec![0, 1]);
+        assert_eq!(topo.nodes()[1].cpus, vec![2, 3]);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn missing_root_degrades_to_single_node() {
+        let topo = NumaTopology::probe_at(Path::new(
+            "/definitely/not/a/sysfs/root",
+        ));
+        assert!(!topo.is_probed());
+        assert_eq!(topo.node_count(), 1);
+        assert!(!topo.nodes()[0].cpus.is_empty());
+    }
+
+    #[test]
+    fn learner_to_node_map_is_contiguous_and_total() {
+        let topo = NumaTopology {
+            nodes: vec![
+                NumaNode { id: 0, cpus: vec![0] },
+                NumaNode { id: 1, cpus: vec![1] },
+            ],
+            probed: true,
+        };
+        let nodes: Vec<usize> =
+            (0..4).map(|l| topo.node_for_learner(l, 4)).collect();
+        assert_eq!(nodes, vec![0, 0, 1, 1]);
+        // Degenerate inputs stay in range.
+        assert_eq!(topo.node_for_learner(7, 4), 1);
+        assert_eq!(NumaTopology::single_node().node_for_learner(3, 4), 0);
+    }
+
+    #[test]
+    fn single_node_pin_is_a_recorded_noop() {
+        let topo = NumaTopology::single_node();
+        assert!(!topo.pin_current_thread(0), "fallback must not syscall");
+        assert_eq!(current_node(), Some(0));
+        assert!(!topo.pin_current_thread(9), "bad node refused");
+    }
+
+    #[test]
+    fn real_probe_never_panics_and_pin_is_safe() {
+        let topo = NumaTopology::probe();
+        assert!(topo.node_count() >= 1);
+        // Pinning to node 0 must be safe whatever the host looks like.
+        topo.pin_current_thread(0);
+        assert_eq!(current_node(), Some(0));
+    }
+}

@@ -271,6 +271,165 @@ impl<T: Poolable + PartialEq> PartialEq for SharedBuf<T> {
     }
 }
 
+/// A page-aligned, fixed-capacity byte buffer for O_DIRECT reads. The
+/// allocation never moves or resizes, which is exactly what io_uring's
+/// `IORING_REGISTER_BUFFERS` requires of a registered buffer (DESIGN.md
+/// §15): the kernel holds the address for the ring's lifetime, so the
+/// pool below owns these for *its* lifetime and hands out indices, never
+/// ownership.
+pub struct AlignedBuf {
+    ptr: std::ptr::NonNull<u8>,
+    len: usize,
+    layout: std::alloc::Layout,
+}
+
+// SAFETY: the buffer is a plain byte allocation; all mutation goes
+// through raw pointers with completion-ordered handoff (a buffer is
+// either leased to one in-flight read or idle — never both).
+unsafe impl Send for AlignedBuf {}
+unsafe impl Sync for AlignedBuf {}
+
+impl AlignedBuf {
+    /// Allocate `len` zeroed bytes aligned to `align` (a power of two).
+    pub fn new(len: usize, align: usize) -> AlignedBuf {
+        assert!(align.is_power_of_two(), "alignment must be a power of two");
+        let len = len.max(align);
+        let layout = std::alloc::Layout::from_size_align(len, align)
+            .expect("aligned buffer layout");
+        // SAFETY: layout has non-zero size (len >= align >= 1).
+        let raw = unsafe { std::alloc::alloc_zeroed(layout) };
+        let ptr = std::ptr::NonNull::new(raw)
+            .unwrap_or_else(|| std::alloc::handle_alloc_error(layout));
+        AlignedBuf { ptr, len, layout }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn align(&self) -> usize {
+        self.layout.align()
+    }
+
+    /// The raw base pointer — what the kernel DMA-writes through. The
+    /// `&self` receiver is deliberate: the pool keeps every buffer behind
+    /// a shared slice while reads are in flight, and exclusivity is
+    /// enforced by the lease protocol, not the borrow checker.
+    pub fn as_ptr(&self) -> *mut u8 {
+        self.ptr.as_ptr()
+    }
+
+    /// Copy `len` bytes starting at `off` out of the buffer. Only valid
+    /// after the read that filled the range has completed (the caller
+    /// orders this after the cqe).
+    pub fn copy_out(&self, off: usize, len: usize) -> Vec<u8> {
+        assert!(
+            off.checked_add(len).is_some_and(|end| end <= self.len),
+            "copy_out {off}+{len} out of bounds ({})",
+            self.len
+        );
+        let mut out = vec![0u8; len];
+        // SAFETY: bounds checked above; the range holds completed-read
+        // bytes (no concurrent writer — see the lease protocol).
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.ptr.as_ptr().add(off),
+                out.as_mut_ptr(),
+                len,
+            );
+        }
+        out
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        // SAFETY: ptr/layout are exactly what `new` allocated.
+        unsafe { std::alloc::dealloc(self.ptr.as_ptr(), self.layout) };
+    }
+}
+
+/// A fixed set of [`AlignedBuf`]s with an index free-list: the storage
+/// engine's registered-buffer arena. Buffers have stable addresses for
+/// the pool's whole lifetime (io_uring registration requirement); leases
+/// are plain indices, returned with [`put`] once the wave has copied the
+/// payload out.
+///
+/// [`put`]: AlignedPool::put
+pub struct AlignedPool {
+    bufs: Box<[AlignedBuf]>,
+    free: Mutex<Vec<usize>>,
+    takes: AtomicU64,
+    exhausted: AtomicU64,
+}
+
+impl AlignedPool {
+    /// `count` buffers of `size` bytes each, aligned to `align`.
+    pub fn new(count: usize, size: usize, align: usize) -> AlignedPool {
+        let bufs: Vec<AlignedBuf> =
+            (0..count).map(|_| AlignedBuf::new(size, align)).collect();
+        AlignedPool {
+            bufs: bufs.into_boxed_slice(),
+            free: Mutex::new((0..count).rev().collect()),
+            takes: AtomicU64::new(0),
+            exhausted: AtomicU64::new(0),
+        }
+    }
+
+    pub fn buf_size(&self) -> usize {
+        self.bufs.first().map(|b| b.len()).unwrap_or(0)
+    }
+
+    pub fn count(&self) -> usize {
+        self.bufs.len()
+    }
+
+    /// Borrow buffer `index` (valid whether leased or idle — the lease
+    /// protocol decides who may touch the bytes).
+    pub fn buf(&self, index: usize) -> &AlignedBuf {
+        &self.bufs[index]
+    }
+
+    /// Lease one buffer; `None` when every buffer is in flight (the
+    /// caller falls back to a one-off aligned allocation).
+    pub fn take(&self) -> Option<usize> {
+        let got = self.free.lock().unwrap().pop();
+        match got {
+            Some(i) => {
+                self.takes.fetch_add(1, Ordering::Relaxed);
+                Some(i)
+            }
+            None => {
+                self.exhausted.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Return a leased buffer. Double-returns are a protocol bug and
+    /// panic (silently duplicating a free index would hand one buffer to
+    /// two concurrent reads).
+    pub fn put(&self, index: usize) {
+        assert!(index < self.bufs.len(), "foreign buffer index {index}");
+        let mut free = self.free.lock().unwrap();
+        assert!(!free.contains(&index), "double-returned buffer {index}");
+        free.push(index);
+    }
+
+    /// (successful leases, exhausted takes) — the wave-depth pressure
+    /// gauge for `BENCH_storage.json`.
+    pub fn lease_stats(&self) -> (u64, u64) {
+        (
+            self.takes.load(Ordering::Relaxed),
+            self.exhausted.load(Ordering::Relaxed),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -348,6 +507,62 @@ mod tests {
         assert!(!a.ptr_eq(&b));
         assert_eq!(a.to_vec(), vec![1, 2, 3]);
         assert_eq!(&a[1..], &[2, 3]);
+    }
+
+    #[test]
+    fn aligned_buffers_have_the_requested_alignment() {
+        let b = AlignedBuf::new(1 << 20, 4096);
+        assert_eq!(b.as_ptr() as usize % 4096, 0);
+        assert_eq!(b.len(), 1 << 20);
+        assert_eq!(b.align(), 4096);
+        // Sub-align requests round up to one aligned unit.
+        let small = AlignedBuf::new(100, 4096);
+        assert_eq!(small.len(), 4096);
+        assert_eq!(small.copy_out(0, 8), vec![0u8; 8], "zeroed at birth");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn aligned_copy_out_is_bounds_checked() {
+        AlignedBuf::new(4096, 4096).copy_out(4000, 200);
+    }
+
+    #[test]
+    fn aligned_pool_leases_and_returns() {
+        let pool = AlignedPool::new(2, 8192, 4096);
+        assert_eq!(pool.count(), 2);
+        assert_eq!(pool.buf_size(), 8192);
+        let a = pool.take().unwrap();
+        let b = pool.take().unwrap();
+        assert_ne!(a, b);
+        assert!(pool.take().is_none(), "exhausted pool must refuse");
+        pool.put(a);
+        assert_eq!(pool.take(), Some(a), "returned buffer leases again");
+        let (takes, exhausted) = pool.lease_stats();
+        assert_eq!(takes, 3);
+        assert_eq!(exhausted, 1);
+        pool.put(a);
+        pool.put(b);
+    }
+
+    #[test]
+    #[should_panic(expected = "double-returned")]
+    fn aligned_pool_rejects_double_returns() {
+        let pool = AlignedPool::new(1, 4096, 4096);
+        let i = pool.take().unwrap();
+        pool.put(i);
+        pool.put(i);
+    }
+
+    #[test]
+    fn aligned_pool_addresses_are_stable() {
+        // Registration requirement: the address observed before a lease
+        // cycle must survive it.
+        let pool = AlignedPool::new(1, 4096, 4096);
+        let before = pool.buf(0).as_ptr();
+        let i = pool.take().unwrap();
+        pool.put(i);
+        assert_eq!(pool.buf(0).as_ptr(), before);
     }
 
     #[test]
